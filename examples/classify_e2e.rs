@@ -1,0 +1,119 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): load the
+//! python-trained artifact, classify the full synthetic test set through
+//! all three execution paths, and report accuracy + latency — proving the
+//! layers compose:
+//!
+//!   events → histogram → [rust functional f32]  (oracle)
+//!                      → [PJRT dense engine]    (AOT HLO with Pallas inside)
+//!                      → [int8 cycle simulator] (the paper's hardware)
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example classify_e2e [-- --dataset n_mnist]
+
+use esda::arch::{simulate_inference, HwConfig};
+use esda::events::io::read_dataset;
+use esda::events::repr::histogram2_norm;
+use esda::hwopt::{allocate, power::CLOCK_HZ, Budget};
+use esda::model::exec::{argmax, forward_f32};
+use esda::model::quant::quantize_network;
+use esda::model::weights::load_float_weights;
+use esda::model::NetworkSpec;
+use esda::runtime::{artifact_available, artifacts_dir, Engine};
+use esda::sparse::SparseMap;
+use esda::util::cli::Args;
+use esda::util::stats::{bench, fmt_secs};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &[]).unwrap();
+    let ds = args.get_or("dataset", "n_mnist").to_string();
+    let stem = format!("compact_{ds}");
+    if !artifact_available(&stem) {
+        eprintln!("artifacts/{stem}.hlo.txt missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let dir = artifacts_dir();
+
+    // Trained weights + spec.
+    let meta = esda::util::json::parse(
+        &std::fs::read_to_string(dir.join(format!("{stem}.meta.json"))).unwrap(),
+    )
+    .unwrap();
+    let (w, h) = (
+        meta.get("w").unwrap().as_usize().unwrap(),
+        meta.get("h").unwrap().as_usize().unwrap(),
+    );
+    let n_classes = meta.get("n_classes").unwrap().as_usize().unwrap();
+    let spec = NetworkSpec::compact("compact", w, h, n_classes);
+    let fw = load_float_weights(&dir.join(format!("{stem}_weights.esdw")), &spec).unwrap();
+    println!(
+        "model: {} ({} params), python-reported test acc {:.3}",
+        stem,
+        spec.param_count(),
+        meta.get("test_acc").and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+    );
+
+    // Test set (rust-generated, identical to what python trained on).
+    let (dw, dh, samples) = read_dataset(&dir.join(format!("data/{ds}_test.esda"))).unwrap();
+    assert_eq!((dw, dh), (w, h));
+    let inputs: Vec<(usize, SparseMap<f32>)> = samples
+        .iter()
+        .map(|s| (s.label as usize, histogram2_norm(&s.events, w, h, 8.0)))
+        .collect();
+    println!("test set: {} samples", inputs.len());
+
+    // Quantize + allocate hardware.
+    let calib: Vec<_> = inputs.iter().take(8).map(|(_, m)| m.clone()).collect();
+    let qnet = quantize_network(&spec, &fw, &calib);
+    let bitmaps: Vec<_> = calib.iter().map(|m| m.bitmap()).collect();
+    let stats = esda::hwopt::collect_stats(&spec, &bitmaps);
+    let alloc = allocate(&spec, &stats, &Budget::zcu102()).expect("fits ZCU102");
+    let cfg = HwConfig { pf: alloc.pf.clone(), fifo_depth: 8 };
+
+    // PJRT engine.
+    let engine = Engine::load(&dir.join(format!("{stem}.hlo.txt"))).unwrap();
+
+    // Classify through all three paths.
+    let (mut acc_f32, mut acc_pjrt, mut acc_sim) = (0usize, 0usize, 0usize);
+    let mut sim_cycles: Vec<f64> = Vec::new();
+    let mut disagreements = 0usize;
+    for (label, input) in &inputs {
+        let p_f32 = argmax(&forward_f32(&spec, &fw, input));
+        let p_pjrt = argmax(&engine.infer_sparse(input).unwrap());
+        let (logits_i8, report) = simulate_inference(&qnet, &cfg, input, 5_000_000_000).unwrap();
+        let p_sim = argmax(&logits_i8);
+        acc_f32 += (p_f32 == *label) as usize;
+        acc_pjrt += (p_pjrt == *label) as usize;
+        acc_sim += (p_sim == *label) as usize;
+        sim_cycles.push(report.cycles as f64);
+        if p_f32 != p_pjrt {
+            disagreements += 1;
+        }
+    }
+    let n = inputs.len() as f64;
+    println!(
+        "accuracy: f32 oracle {:.3} | PJRT artifact {:.3} | int8 simulator {:.3}",
+        acc_f32 as f64 / n,
+        acc_pjrt as f64 / n,
+        acc_sim as f64 / n
+    );
+    println!("f32-vs-PJRT argmax disagreements: {disagreements} (must be 0)");
+    assert_eq!(disagreements, 0, "AOT artifact drifted from the oracle");
+
+    // Latency: simulated hardware vs measured PJRT wall time (batch 1).
+    let mean_cycles = sim_cycles.iter().sum::<f64>() / sim_cycles.len() as f64;
+    println!(
+        "simulated ESDA latency: {:.3} ms/inf @187 MHz ({:.0} cycles avg) → {:.0} fps",
+        mean_cycles / CLOCK_HZ * 1e3,
+        mean_cycles,
+        CLOCK_HZ / mean_cycles
+    );
+    let sample = inputs[0].1.clone();
+    let s = bench(3, 10, || {
+        let _ = engine.infer_sparse(&sample).unwrap();
+    });
+    println!(
+        "PJRT dense-engine wall latency (this host): median {} / inf",
+        fmt_secs(s.median())
+    );
+    println!("E2E OK");
+}

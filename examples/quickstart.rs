@@ -1,0 +1,74 @@
+//! Quickstart: build a tiny submanifold network, co-optimize it for the
+//! ZCU102 with the Eqn. 5/6 flow, and cycle-simulate one event-camera
+//! inference — the whole ESDA stack in ~60 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use esda::arch::{simulate_inference, HwConfig};
+use esda::events::{repr::histogram2_norm, DatasetProfile};
+use esda::hwopt::{allocate, power::PowerModel, power::CLOCK_HZ, stats::collect_stats_for_profile, Budget};
+use esda::model::exec::argmax;
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::NetworkSpec;
+use esda::util::Rng;
+
+fn main() {
+    // 1. A dataset profile (synthetic stand-in for DvsGesture et al.).
+    let profile = DatasetProfile::n_mnist();
+    println!("dataset: {} ({}×{}, {} classes)", profile.name, profile.w, profile.h, profile.n_classes);
+
+    // 2. A network: stem → MBConv blocks → pool+FC (paper Fig. 10).
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    println!("network: {} ops, {} params", spec.ops().len(), spec.param_count());
+
+    // 3. Sparsity statistics → Eqn. 6 hardware allocation.
+    let stats = collect_stats_for_profile(&spec, &profile, 8, 1);
+    let alloc = allocate(&spec, &stats, &Budget::zcu102()).expect("fits ZCU102");
+    println!(
+        "allocation: bottleneck {:.0} cycles ({:.3} ms @187 MHz), {} DSP, {} BRAM",
+        alloc.latency,
+        alloc.latency / CLOCK_HZ * 1e3,
+        alloc.resources.dsp,
+        alloc.resources.bram
+    );
+
+    // 4. Quantize (HAWQ-style int8) and simulate one inference cycle-by-cycle.
+    let weights = FloatWeights::random(&spec, 42);
+    let mut rng = Rng::new(7);
+    let calib: Vec<_> = (0..4)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &weights, &calib);
+
+    let events = profile.sample(3, &mut rng);
+    let input = histogram2_norm(&events, profile.w, profile.h, 8.0);
+    println!(
+        "input: {} events → {} tokens ({:.1}% NZ)",
+        events.len(),
+        input.nnz(),
+        input.nz_ratio() * 100.0
+    );
+
+    let cfg = HwConfig { pf: alloc.pf.clone(), fifo_depth: 8 };
+    let (logits, report) = simulate_inference(&qnet, &cfg, &input, 1_000_000_000).unwrap();
+    println!(
+        "simulated: {} cycles = {:.3} ms @187 MHz → class {}",
+        report.cycles,
+        report.cycles as f64 / CLOCK_HZ * 1e3,
+        argmax(&logits)
+    );
+    let (name, st, _) = report.bottleneck().unwrap();
+    println!("bottleneck module: {name} (busy {} cycles)", st.busy);
+
+    // 5. Energy from the Table-1-calibrated power model.
+    let pm = PowerModel::calibrated();
+    println!(
+        "estimated power {:.2} W, energy {:.3} mJ/inference",
+        pm.watts(&alloc.resources),
+        pm.energy_mj(&alloc.resources, report.cycles as f64, CLOCK_HZ)
+    );
+}

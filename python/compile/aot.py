@@ -1,0 +1,86 @@
+"""AOT lowering: jit the Pallas-kernel inference function, lower to HLO
+**text**, and write ``artifacts/<stem>.hlo.txt`` for the rust PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the published xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage (driven by `make artifacts`):
+    python -m compile.aot --out ../artifacts --stems compact_n_mnist,...
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tensorio
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default HLO printer
+    # elides big literals as `constant({...})`, which the xla_extension
+    # 0.5.1 text parser silently zero-fills — the baked-in weights would
+    # all become zeros on the rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(spec, params, use_pallas=True):
+    """Lower `forward` (with weights baked in as constants — the all-on-chip
+    deployment: weights live in the artifact like they live in BRAM)."""
+
+    def infer(x):
+        return (M.forward(spec, params, x, use_pallas=use_pallas),)
+
+    example = jax.ShapeDtypeStruct((spec["h"], spec["w"], spec["cin"]), jnp.float32)
+    return jax.jit(infer).lower(example)
+
+
+def export_stem(out_dir, stem, use_pallas=True):
+    """Read <stem>_weights.esdw + <stem>.meta.json (written by train.py),
+    lower, and write <stem>.hlo.txt."""
+    meta_path = os.path.join(out_dir, f"{stem}.meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    tensors = tensorio.read_tensors(os.path.join(out_dir, f"{stem}_weights.esdw"))
+    params = {k: jnp.asarray(v) for k, v in tensors.items() if k.startswith("op")}
+    spec = M.BUILDERS[meta["model"]](meta["w"], meta["h"], meta["n_classes"])
+    lowered = lower_model(spec, params, use_pallas=use_pallas)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{stem}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    print(f"wrote {hlo_path} ({len(text)} chars, pallas={use_pallas})")
+    return hlo_path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--stems", default=None,
+                    help="comma-separated; default: every stem in train_summary.json")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference instead of the Pallas kernels")
+    args = ap.parse_args()
+
+    stems = []
+    if args.stems:
+        stems = [s.strip() for s in args.stems.split(",")]
+    else:
+        with open(os.path.join(args.out, "train_summary.json")) as f:
+            stems = [v["stem"] for v in json.load(f).values()]
+    for stem in stems:
+        export_stem(args.out, stem, use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

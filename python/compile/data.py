@@ -1,0 +1,50 @@
+"""Reader for the rust-generated event datasets plus the histogram
+representation (mirror of ``rust/src/events/repr.rs::histogram2_norm``).
+
+The datasets are produced by ``esda gen-data`` (see ``rust/src/events``) so
+training and hardware simulation consume byte-identical inputs. Container
+layout documented in ``rust/src/events/io.rs``.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x4553_4441
+VERSION = 1
+
+
+def read_dataset(path):
+    """Returns (w, h, samples) with samples = list of (label, events);
+    events is a structured numpy array (t, x, y, p)."""
+    with open(path, "rb") as f:
+        magic, version, w, h, n = struct.unpack("<IIIII", f.read(20))
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic:#x} in {path}")
+        if version != VERSION:
+            raise ValueError(f"unsupported version {version}")
+        ev_dtype = np.dtype([("t", "<u4"), ("x", "<u2"), ("y", "<u2"), ("p", "u1"), ("_pad", "u1")])
+        samples = []
+        for _ in range(n):
+            label, ne = struct.unpack("<II", f.read(8))
+            events = np.frombuffer(f.read(ne * ev_dtype.itemsize), dtype=ev_dtype)
+            samples.append((label, events))
+    return w, h, samples
+
+
+def histogram2_norm(events, w, h, clip=8.0):
+    """2-channel event histogram, clipped and scaled to [0, 1] — mirror of
+    the rust representation builder (channel 0 = ON, 1 = OFF)."""
+    out = np.zeros((h, w, 2), dtype=np.float32)
+    if len(events):
+        pol = events["p"].astype(np.int64)
+        np.add.at(out, (events["y"].astype(np.int64), events["x"].astype(np.int64), 1 - pol), 1.0)
+    return np.minimum(out, clip) / clip
+
+
+def load_split(path, clip=8.0):
+    """Dataset file → (X: (N, H, W, 2) f32, y: (N,) i32)."""
+    w, h, samples = read_dataset(path)
+    xs = np.stack([histogram2_norm(ev, w, h, clip) for _, ev in samples])
+    ys = np.array([label for label, _ in samples], dtype=np.int32)
+    return xs, ys

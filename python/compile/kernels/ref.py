@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for the ESDA layer algebra (the L1 correctness
+reference).
+
+Dense bitmap-masked formulation of submanifold sparse convolution (see
+DESIGN.md §3 "Hardware adaptation"): activations live in an (H, W, C)
+array, the nonzero set in an (H, W) mask. Stride-1 submanifold conv is
+``conv(x) * mask``; stride-2 sparse conv is ``conv_s2(x) * maxpool2(mask)``
+(the paper's 2×2-grid token rule, Fig. 3b). This matches the rust
+functional references in ``rust/src/sparse/conv.rs`` coordinate-for-
+coordinate (weights laid out as w[dy, dx, cin, cout] == rust's
+``w[(off*cin+ci)*cout+co]``).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def apply_act(x, act: str):
+    if act == "relu6":
+        return relu6(x)
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    return x
+
+
+def downsample_mask(mask):
+    """Stride-2 token rule: output cell nonzero iff its 2x2 grid has any
+    nonzero (pads odd edges with zeros, matching ceil(w/2) geometry)."""
+    h, w = mask.shape
+    ph, pw = (h + 1) // 2 * 2, (w + 1) // 2 * 2
+    m = jnp.pad(mask.astype(jnp.float32), ((0, ph - h), (0, pw - w)))
+    m = m.reshape(ph // 2, 2, pw // 2, 2).max(axis=(1, 3))
+    return m > 0
+
+
+def conv2d(x, w, stride: int):
+    """Plain dense conv, pad (k-1)/2, stride s. x: (H, W, Cin),
+    w: (k, k, Cin, Cout)."""
+    k = w.shape[0]
+    pad = (k - 1) // 2
+    extra_h = x.shape[0] % 2 if stride == 2 else 0
+    extra_w = x.shape[1] % 2 if stride == 2 else 0
+    out = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad + extra_h), (pad, pad + extra_w)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if stride == 2:
+        out = out[: (x.shape[0] + 1) // 2, : (x.shape[1] + 1) // 2]
+    return out
+
+
+def conv1x1(x, mask, w, b, act="none"):
+    """Pointwise conv: tokens (mask) unchanged."""
+    out = x @ w + b
+    return apply_act(out, act) * mask[..., None], mask
+
+
+def submanifold_conv(x, mask, w, b, stride=1, act="none"):
+    """k×k submanifold (stride 1) / sparse (stride 2) convolution.
+
+    w: (k, k, Cin, Cout); returns (out, out_mask).
+    """
+    out = conv2d(x, w, stride) + b
+    out_mask = mask if stride == 1 else downsample_mask(mask)
+    return apply_act(out, act) * out_mask[..., None], out_mask
+
+
+def submanifold_dwconv(x, mask, w, b, stride=1, act="none"):
+    """Depthwise variant. w: (k, k, C)."""
+    k, _, c = w.shape
+    wd = w.reshape(k, k, 1, c)
+    pad = (k - 1) // 2
+    extra_h = x.shape[0] % 2 if stride == 2 else 0
+    extra_w = x.shape[1] % 2 if stride == 2 else 0
+    out = lax.conv_general_dilated(
+        x[None],
+        wd,
+        window_strides=(stride, stride),
+        padding=[(pad, pad + extra_h), (pad, pad + extra_w)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )[0]
+    if stride == 2:
+        out = out[: (x.shape[0] + 1) // 2, : (x.shape[1] + 1) // 2]
+    out = out + b
+    out_mask = mask if stride == 1 else downsample_mask(mask)
+    return apply_act(out, act) * out_mask[..., None], out_mask
+
+
+def global_pool_fc(x, mask, wfc, bfc):
+    """Average over nonzero tokens (MinkowskiEngine semantics), then FC."""
+    n = jnp.maximum(mask.sum(), 1.0)
+    pooled = (x * mask[..., None]).sum(axis=(0, 1)) / n
+    return pooled @ wfc + bfc
+
+
+def residual_add(a, b, mask):
+    return (a + b) * mask[..., None]
+
+
+def standard_conv(x, mask, w, b, stride=1, act="none"):
+    """Standard (non-submanifold) conv twin for the Fig. 12 comparison:
+    the output mask is wherever the conv output is nonzero (dilation)."""
+    out = apply_act(conv2d(x, w, stride) + b, act)
+    out_mask = jnp.any(jnp.abs(out) > 0, axis=-1)
+    return out, out_mask

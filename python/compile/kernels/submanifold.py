@@ -1,0 +1,165 @@
+"""L1 Pallas kernels: submanifold sparse convolution in the TPU-native
+shift-and-MAC formulation.
+
+HARDWARE ADAPTATION (DESIGN.md §3): the paper's FPGA line-buffer +
+token-FIFO microarchitecture is re-thought for the TPU memory hierarchy —
+activations as an (H, W, C) VMEM block, the nonzero set as an (H, W) mask
+block, and the k×k weighted sum as nine shifted mask-gated partial
+products. This keeps loads regular (no data-dependent control flow, which
+the TPU vector unit cannot do) and lets the MXU handle the channel
+contraction; the *dynamic* token skipping lives in the L3 cycle model.
+
+All kernels run under ``interpret=True`` — real-TPU lowering emits Mosaic
+custom calls the CPU PJRT plugin cannot execute (see /opt/xla-example).
+
+Tiling: spatial dims are padded to TILE (8) multiples and the grid walks
+row-tiles with a one-row halo held in VMEM; at these feature-map sizes
+(≤240×180) a (TILE+2)·(W+2)·C f32 slab is ≤ ~0.7 MB, far under VMEM.
+For interpret-mode simplicity each kernel instance sees the whole padded
+array and the BlockSpec documents the intended HBM→VMEM schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _shifted(x, dy, dx):
+    """x shifted so that out[h, w] = x[h + dy, w + dx], zero-padded."""
+    h, w = x.shape[0], x.shape[1]
+    pad = [(max(0, -dy), max(0, dy)), (max(0, -dx), max(0, dx))] + [(0, 0)] * (x.ndim - 2)
+    xp = jnp.pad(x, pad)
+    return jax.lax.dynamic_slice_in_dim(
+        jax.lax.dynamic_slice_in_dim(xp, max(0, dy), h, axis=0), max(0, dx), w, axis=1
+    )
+
+
+def _pointwise_kernel(x_ref, m_ref, w_ref, b_ref, o_ref, *, act):
+    """1×1 conv: channel contraction on the MXU, gated by the mask."""
+    x = x_ref[...]
+    m = m_ref[...]
+    out = jnp.dot(x.reshape(-1, x.shape[-1]), w_ref[...]).reshape(x.shape[:2] + (w_ref.shape[-1],))
+    out = out + b_ref[...]
+    out = ref.apply_act(out, act)
+    o_ref[...] = out * m[..., None]
+
+
+def pointwise(x, mask, w, b, act="none"):
+    """Pallas 1×1 convolution. x: (H, W, Cin), w: (Cin, Cout)."""
+    h, wd, _ = x.shape
+    cout = w.shape[-1]
+    kernel = functools.partial(_pointwise_kernel, act=act)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, wd, cout), x.dtype),
+        interpret=True,
+    )(x, mask.astype(x.dtype), w, b)
+    return out, mask
+
+
+def _dw3x3_kernel(x_ref, m_ref, w_ref, b_ref, o_ref, *, act, stride):
+    """Depthwise 3×3 via 9 shifted mask-gated partial products."""
+    x = x_ref[...]
+    m = m_ref[...]
+    xm = x * m[..., None]  # gate inputs: absent tokens contribute zero
+    acc = jnp.zeros_like(x)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + _shifted(xm, dy - 1, dx - 1) * w_ref[dy, dx, :]
+    acc = acc + b_ref[...]
+    if stride == 2:
+        acc = acc[::2, ::2, :]
+        om = ref.downsample_mask(m > 0).astype(x.dtype)[: acc.shape[0], : acc.shape[1]]
+    else:
+        om = m
+    acc = ref.apply_act(acc, act)
+    o_ref[...] = acc * om[..., None]
+
+
+def dwconv3x3(x, mask, w, b, stride=1, act="none"):
+    """Pallas depthwise 3×3 submanifold conv. w: (3, 3, C)."""
+    h, wd, c = x.shape
+    oh, ow = ((h + 1) // 2, (wd + 1) // 2) if stride == 2 else (h, wd)
+    kernel = functools.partial(_dw3x3_kernel, act=act, stride=stride)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), x.dtype),
+        interpret=True,
+    )(x, mask.astype(x.dtype), w, b)
+    out_mask = mask if stride == 1 else ref.downsample_mask(mask)
+    return out, out_mask
+
+
+def _full3x3_kernel(x_ref, m_ref, w_ref, b_ref, o_ref, *, act, stride):
+    """Full 3×3: nine shifted inputs, each contracted on the MXU."""
+    x = x_ref[...]
+    m = m_ref[...]
+    xm = x * m[..., None]
+    h, wd, cin = x.shape
+    cout = w_ref.shape[-1]
+    acc = jnp.zeros((h, wd, cout), x.dtype)
+    for dy in range(3):
+        for dx in range(3):
+            sh = _shifted(xm, dy - 1, dx - 1)
+            acc = acc + jnp.dot(sh.reshape(-1, cin), w_ref[dy, dx]).reshape(h, wd, cout)
+    acc = acc + b_ref[...]
+    if stride == 2:
+        acc = acc[::2, ::2, :]
+        om = ref.downsample_mask(m > 0).astype(x.dtype)[: acc.shape[0], : acc.shape[1]]
+    else:
+        om = m
+    acc = ref.apply_act(acc, act)
+    o_ref[...] = acc * om[..., None]
+
+
+def conv3x3(x, mask, w, b, stride=1, act="none"):
+    """Pallas full 3×3 submanifold/sparse conv. w: (3, 3, Cin, Cout)."""
+    h, wd, _ = x.shape
+    cout = w.shape[-1]
+    oh, ow = ((h + 1) // 2, (wd + 1) // 2) if stride == 2 else (h, wd)
+    kernel = functools.partial(_full3x3_kernel, act=act, stride=stride)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((oh, ow, cout), x.dtype),
+        interpret=True,
+    )(x, mask.astype(x.dtype), w, b)
+    out_mask = mask if stride == 1 else ref.downsample_mask(mask)
+    return out, out_mask
+
+
+def _pool_fc_kernel(x_ref, m_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]
+    m = m_ref[...]
+    n = jnp.maximum(m.sum(), 1.0)
+    pooled = (x * m[..., None]).sum(axis=(0, 1)) / n
+    o_ref[...] = jnp.dot(pooled, w_ref[...]) + b_ref[...]
+
+
+def pool_fc(x, mask, wfc, bfc):
+    """Pallas global-average-pool (over tokens) + classifier."""
+    n_classes = wfc.shape[-1]
+    return pl.pallas_call(
+        _pool_fc_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_classes,), x.dtype),
+        interpret=True,
+    )(x, mask.astype(x.dtype), wfc, bfc)
+
+
+def vmem_footprint_bytes(h, w, c, cout, k=3, dtype_bytes=4, tile_h=None):
+    """Estimated VMEM bytes for one kernel instance.
+
+    ``tile_h=None`` models the whole-slab BlockSpec (what interpret mode
+    runs); a row-tiled schedule holds ``tile_h + (k-1)`` halo rows of input
+    and ``tile_h`` rows of output resident — the schedule the §Perf section
+    sizes for real VMEM (≈16 MB/core)."""
+    th_in = h if tile_h is None else tile_h + (k - 1)
+    th_out = h if tile_h is None else tile_h
+    act_in = th_in * w * c * dtype_bytes
+    act_out = th_out * w * cout * dtype_bytes
+    mask = th_in * w * dtype_bytes
+    weights = k * k * c * cout * dtype_bytes
+    return act_in + act_out + mask + weights

@@ -1,0 +1,214 @@
+"""L2: the JAX network, mirroring ``rust/src/model/graph.rs`` exactly.
+
+The block → primitive-op expansion must match the rust side op-for-op:
+weight tensors are exchanged as ``op{i}.w`` / ``op{i}.b`` keyed by the op
+index, and the rust loader validates shapes against its own expansion —
+any drift fails loudly at load time.
+
+``forward`` runs the op program with either the Pallas kernels
+(``use_pallas=True`` — the configuration that gets AOT-lowered, so the L1
+kernels end up inside the HLO artifact) or the pure-jnp reference
+(training, where speed matters and equality is covered by pytest).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import submanifold as pk
+
+# ---------------------------------------------------------------------------
+# Block / op expansion (mirror of graph.rs)
+# ---------------------------------------------------------------------------
+
+
+def stem(k, cout, stride):
+    return {"kind": "stem", "k": k, "cout": cout, "stride": stride}
+
+
+def mbconv(cout, expand, k, stride):
+    return {"kind": "mbconv", "cout": cout, "expand": expand, "k": k, "stride": stride}
+
+
+def conv1x1_block(cout, act="relu6"):
+    return {"kind": "conv1x1", "cout": cout, "act": act}
+
+
+def pool_fc_block():
+    return {"kind": "pool_fc"}
+
+
+def expand_ops(spec):
+    """Blocks → primitive op list (mirror of NetworkSpec::ops)."""
+    ops = []
+    c = spec["cin"]
+    for b in spec["blocks"]:
+        kind = b["kind"]
+        if kind == "stem":
+            ops.append({"op": "conv_kxk", "k": b["k"], "cin": c, "cout": b["cout"],
+                        "stride": b["stride"], "act": "relu6"})
+            c = b["cout"]
+        elif kind == "mbconv":
+            residual = b["stride"] == 1 and c == b["cout"]
+            ce = c * b["expand"]
+            if residual:
+                ops.append({"op": "res_fork"})
+            if b["expand"] != 1:
+                ops.append({"op": "conv1x1", "cin": c, "cout": ce, "act": "relu6"})
+            ops.append({"op": "dwconv", "k": b["k"], "c": ce, "stride": b["stride"],
+                        "act": "relu6"})
+            ops.append({"op": "conv1x1", "cin": ce, "cout": b["cout"], "act": "none"})
+            if residual:
+                ops.append({"op": "res_add"})
+            c = b["cout"]
+        elif kind == "conv1x1":
+            ops.append({"op": "conv1x1", "cin": c, "cout": b["cout"], "act": b["act"]})
+            c = b["cout"]
+        elif kind == "pool_fc":
+            ops.append({"op": "global_pool", "c": c})
+            ops.append({"op": "fc", "cin": c, "cout": spec["n_classes"]})
+        else:
+            raise ValueError(kind)
+    return ops
+
+
+def tiny(w, h, n_classes):
+    return {
+        "name": "tiny", "w": w, "h": h, "cin": 2, "n_classes": n_classes,
+        "blocks": [
+            stem(3, 4, 1),
+            mbconv(4, 2, 3, 1),
+            mbconv(8, 2, 3, 2),
+            pool_fc_block(),
+        ],
+    }
+
+
+def compact(w, h, n_classes):
+    return {
+        "name": "compact", "w": w, "h": h, "cin": 2, "n_classes": n_classes,
+        "blocks": [
+            stem(3, 8, 1),
+            mbconv(12, 2, 3, 2),
+            mbconv(12, 2, 3, 1),
+            mbconv(24, 2, 3, 2),
+            mbconv(24, 2, 3, 1),
+            mbconv(48, 2, 3, 2),
+            conv1x1_block(96, "relu6"),
+            pool_fc_block(),
+        ],
+    }
+
+
+def mobilenet_v2_05(w, h, n_classes):
+    stages = [(8, 1, 1, 1), (12, 6, 2, 2), (16, 6, 2, 3), (32, 6, 2, 4),
+              (48, 6, 1, 3), (80, 6, 2, 3), (160, 6, 1, 1)]
+    blocks = [stem(3, 16, 2)]
+    for cout, expand, stride, repeats in stages:
+        for r in range(repeats):
+            blocks.append(mbconv(cout, expand, 3, stride if r == 0 else 1))
+    blocks.append(conv1x1_block(640, "relu6"))
+    blocks.append(pool_fc_block())
+    return {"name": "mbv2", "w": w, "h": h, "cin": 2, "n_classes": n_classes,
+            "blocks": blocks}
+
+
+BUILDERS = {"tiny": tiny, "compact": compact, "mbv2": mobilenet_v2_05}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def op_param_shapes(op):
+    """Weight/bias shapes for one op (None for weightless ops)."""
+    o = op["op"]
+    if o == "conv1x1":
+        return (op["cin"], op["cout"]), (op["cout"],)
+    if o == "conv_kxk":
+        return (op["k"], op["k"], op["cin"], op["cout"]), (op["cout"],)
+    if o == "dwconv":
+        return (op["k"], op["k"], op["c"]), (op["c"],)
+    if o == "fc":
+        return (op["cin"], op["cout"]), (op["cout"],)
+    return None, None
+
+
+def init_params(spec, key):
+    """He-init parameters as {op{i}.w / op{i}.b: array}."""
+    import jax
+
+    params = {}
+    for i, op in enumerate(expand_ops(spec)):
+        wshape, bshape = op_param_shapes(op)
+        if wshape is None:
+            continue
+        key, sub = jax.random.split(key)
+        fan_in = {
+            "conv1x1": lambda: op["cin"],
+            "conv_kxk": lambda: op["k"] * op["k"] * op["cin"],
+            "dwconv": lambda: op["k"] * op["k"],
+            "fc": lambda: op["cin"],
+        }[op["op"]]()
+        std = (2.0 / fan_in) ** 0.5
+        params[f"op{i}.w"] = jax.random.normal(sub, wshape, jnp.float32) * std
+        params[f"op{i}.b"] = jnp.zeros(bshape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(spec, params, x, use_pallas=False):
+    """Run the network on one dense sample x: (H, W, cin) f32.
+
+    The mask (token set) is derived from the input — a pixel is a token iff
+    any channel is nonzero, exactly as the rust `SparseMap::from_dense`.
+    Returns logits (n_classes,).
+    """
+    mask = jnp.any(jnp.abs(x) > 0, axis=-1)
+    cur, m = x, mask
+    stack = []
+    pooled = None
+    for i, op in enumerate(expand_ops(spec)):
+        o = op["op"]
+        w = params.get(f"op{i}.w")
+        b = params.get(f"op{i}.b")
+        if o == "conv1x1":
+            fn = pk.pointwise if use_pallas else ref.conv1x1
+            cur, m = fn(cur, m, w, b, act=op["act"])
+        elif o == "conv_kxk":
+            fn = pk.conv3x3 if use_pallas else ref.submanifold_conv
+            cur, m = fn(cur, m, w, b, stride=op["stride"], act=op["act"])
+        elif o == "dwconv":
+            fn = pk.dwconv3x3 if use_pallas else ref.submanifold_dwconv
+            cur, m = fn(cur, m, w, b, stride=op["stride"], act=op["act"])
+        elif o == "res_fork":
+            stack.append((cur, m))
+        elif o == "res_add":
+            sc, _ = stack.pop()
+            cur = ref.residual_add(cur, sc, m)
+        elif o == "global_pool":
+            if use_pallas:
+                pooled_input = (cur, m)
+            else:
+                pooled_input = (cur, m)
+            # pool happens inside fc below for the pallas head
+            pooled = pooled_input
+        elif o == "fc":
+            cur_x, cur_m = pooled
+            if use_pallas:
+                return pk.pool_fc(cur_x, cur_m, w, b)
+            return ref.global_pool_fc(cur_x, cur_m, w, b)
+        else:
+            raise ValueError(o)
+    raise RuntimeError("network must end in pool_fc")
+
+
+def forward_batch(spec, params, xs, use_pallas=False):
+    """vmapped batched forward (training path)."""
+    import jax
+
+    return jax.vmap(lambda x: forward(spec, params, x, use_pallas))(xs)

@@ -1,0 +1,49 @@
+"""Writer/reader for the ESDW tensor container (mirror of
+``rust/src/model/weights.rs``)."""
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x4553_4457
+VERSION = 1
+
+_DTYPES = {0: np.float32, 1: np.int8, 2: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2}
+
+
+def write_tensors(path, tensors):
+    """tensors: dict name → np.ndarray (f32/i8/i32)."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC, VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            code = _CODES[arr.dtype]
+            f.write(struct.pack("<I", len(name.encode())))
+            f.write(name.encode())
+            f.write(struct.pack("<B", code))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path):
+    out = {}
+    with open(path, "rb") as f:
+        magic, version, n = struct.unpack("<III", f.read(12))
+        if magic != MAGIC or version != VERSION:
+            raise ValueError(f"bad header in {path}")
+        for _ in range(n):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode()
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(_DTYPES[code])
+            count = int(np.prod(dims)) if dims else 1
+            if ndim == 0:
+                count = 1
+            data = np.frombuffer(f.read(count * dt.itemsize), dtype=dt).reshape(dims)
+            out[name] = data
+    return out

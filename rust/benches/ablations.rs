@@ -1,0 +1,181 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! A. **Dense-input overhead** (§4.3's caveat): at ≥70% NZ some blocks are
+//!    slower than the dense baseline — quantify the dynamic-control
+//!    overhead the token machinery costs.
+//! B. **Co-optimized vs uniform PF** (the value of Eqn. 6): bottleneck
+//!    latency of the sparsity-aware allocation vs the best uniform PF at
+//!    equal resources.
+//! C. **All-on-chip pipelining vs layer-sequential** (the NullHop
+//!    architecture ablation) across input densities.
+//! D. **FIFO depth sensitivity**: simulated latency vs inter-module queue
+//!    depth (the paper's templates expose buffer sizes as parameters).
+
+use esda::arch::builder::{build_pipeline, HwConfig};
+use esda::arch::dense::dense_chain_latency;
+use esda::arch::nullhop::{esda_latency_matched, nullhop_latency, NullHopConfig};
+use esda::arch::simulate_inference;
+use esda::hwopt::cost::{op_costs, total_resources};
+use esda::hwopt::{allocate, stats::collect_stats, Budget};
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::{Block, NetworkSpec};
+use esda::report::Table;
+use esda::sparse::{Bitmap, SparseMap, Token};
+use esda::util::Rng;
+
+fn random_input(rng: &mut Rng, w: usize, h: usize, c: usize, p: f64) -> SparseMap<f32> {
+    let mut m = SparseMap::empty(w, h, c);
+    for y in 0..h {
+        for x in 0..w {
+            if rng.chance(p) {
+                let f: Vec<f32> = (0..c).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                m.push(Token::new(x as u16, y as u16), &f);
+            }
+        }
+    }
+    m
+}
+
+fn random_bitmaps(rng: &mut Rng, w: usize, h: usize, p: f64, n: usize) -> Vec<Bitmap> {
+    (0..n)
+        .map(|_| {
+            let mut b = Bitmap::new(w, h);
+            for y in 0..h {
+                for x in 0..w {
+                    if rng.chance(p) {
+                        b.set(x, y);
+                    }
+                }
+            }
+            b
+        })
+        .collect()
+}
+
+fn ablation_a_dense_overhead() {
+    println!("## A. dynamic-sparse control overhead at high density\n");
+    let mut rng = Rng::new(0xAB1A);
+    // An early-network-like block: large resolution, small channels — the
+    // configuration §4.3 flags as overhead-prone.
+    let spec = NetworkSpec {
+        name: "blk0".into(),
+        w: 64,
+        h: 64,
+        cin: 8,
+        n_classes: 2,
+        blocks: vec![Block::MBConv { cout: 8, expand: 1, k: 3, stride: 1 }],
+    };
+    let ops = spec.ops();
+    let pfs = vec![8usize; ops.len()];
+    let weights = FloatWeights::random(&spec, 1);
+    let mut t = Table::new(
+        "early block (64×64, C=8): sparse vs dense cycles",
+        &["NZ ratio", "sparse", "dense", "speedup"],
+    );
+    for &p in &[0.1, 0.3, 0.5, 0.7, 0.9, 1.0] {
+        let calib = vec![random_input(&mut rng, 64, 64, 8, p)];
+        let qnet = quantize_network(&spec, &weights, &calib);
+        let input = random_input(&mut rng, 64, 64, 8, p);
+        let qin = esda::model::exec::quantize_input(&qnet, &input);
+        let cfg = HwConfig { pf: pfs.clone(), fifo_depth: 8 };
+        let mut pipe = build_pipeline(&qnet, &cfg, &qin);
+        let sparse = pipe.run(10_000_000_000).unwrap().cycles as f64;
+        let dense = dense_chain_latency(&ops, &pfs, 64, 64) as f64;
+        t.row(vec![
+            format!("{p:.1}"),
+            format!("{sparse:.0}"),
+            format!("{dense:.0}"),
+            format!("{:.2}×", dense / sparse),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(speedup < 1× near-dense reproduces the paper's §4.3 caveat)\n");
+}
+
+fn ablation_b_allocation() {
+    println!("## B. Eqn.6 co-optimized allocation vs best uniform PF\n");
+    let mut rng = Rng::new(0xAB1B);
+    let spec = NetworkSpec::compact("compact", 64, 64, 3);
+    let stats = collect_stats(&spec, &random_bitmaps(&mut rng, 64, 64, 0.12, 4));
+    let budget = Budget { dsp: 512, bram: 512 };
+    let opt = allocate(&spec, &stats, &budget).unwrap();
+    // Best uniform PF that fits the same budget.
+    let ops = spec.ops();
+    let mut best_uniform: Option<(usize, f64)> = None;
+    for pf in [1, 2, 4, 8, 16, 32, 64, 128] {
+        let pfs: Vec<usize> = ops.iter().map(|o| if o.has_weights() { pf } else { 1 }).collect();
+        let costs = op_costs(&spec, &stats, &pfs);
+        let r = total_resources(&costs);
+        if r.dsp > budget.dsp || r.bram > budget.bram {
+            continue;
+        }
+        let lat = costs.iter().map(|c| c.latency).fold(0.0, f64::max);
+        if best_uniform.map_or(true, |(_, l)| lat < l) {
+            best_uniform = Some((pf, lat));
+        }
+    }
+    let (upf, ulat) = best_uniform.unwrap();
+    println!(
+        "co-optimized: {:.0} cycles ({} DSP, {} BRAM) | best uniform PF={}: {:.0} cycles → {:.2}× worse\n",
+        opt.latency,
+        opt.resources.dsp,
+        opt.resources.bram,
+        upf,
+        ulat,
+        ulat / opt.latency
+    );
+}
+
+fn ablation_c_pipelining() {
+    println!("## C. all-on-chip pipeline vs layer-sequential (NullHop-style) across density\n");
+    let spec = NetworkSpec::compact("compact", 64, 64, 3);
+    let mut t = Table::new(
+        "cycles per inference (matched 1282-PE budget)",
+        &["NZ ratio", "layer-sequential", "ESDA pipeline", "speedup"],
+    );
+    let mut rng = Rng::new(0xAB1C);
+    for &p in &[0.02, 0.05, 0.12, 0.3, 0.6] {
+        let stats = collect_stats(&spec, &random_bitmaps(&mut rng, 64, 64, p, 4));
+        let nh = nullhop_latency(&spec, &stats, &NullHopConfig::default());
+        let esda = esda_latency_matched(&spec, &stats, 1282);
+        t.row(vec![
+            format!("{p:.2}"),
+            format!("{nh:.0}"),
+            format!("{esda:.0}"),
+            format!("{:.1}×", nh / esda),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn ablation_d_fifo_depth() {
+    println!("## D. FIFO depth sensitivity\n");
+    let profile = esda::events::DatasetProfile::n_mnist();
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 3);
+    let mut rng = Rng::new(0xAB1D);
+    let mk = |rng: &mut Rng, i: usize| {
+        let es = profile.sample(i % profile.n_classes, rng);
+        esda::events::repr::histogram2_norm(&es, profile.w, profile.h, 8.0)
+    };
+    let calib: Vec<_> = (0..3).map(|i| mk(&mut rng, i)).collect();
+    let qnet = quantize_network(&spec, &weights, &calib);
+    let input = mk(&mut rng, 7);
+    let mut t = Table::new("simulated cycles vs inter-module FIFO depth", &["depth", "cycles"]);
+    for depth in [1, 2, 4, 8, 16, 64] {
+        let cfg = HwConfig { pf: vec![8; spec.ops().len()], fifo_depth: depth };
+        let (_, report) = simulate_inference(&qnet, &cfg, &input, 10_000_000_000).unwrap();
+        t.row(vec![depth.to_string(), report.cycles.to_string()]);
+    }
+    println!("{}", t.render());
+    println!("(shallow FIFOs serialize the pipeline; returns diminish past ~8 — the template default)\n");
+}
+
+fn main() {
+    println!("# Ablations\n");
+    ablation_a_dense_overhead();
+    ablation_b_allocation();
+    ablation_c_pipelining();
+    ablation_d_fifo_depth();
+}

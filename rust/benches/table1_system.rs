@@ -1,0 +1,172 @@
+//! Table 1: end-to-end system performance — accuracy, latency, throughput,
+//! power, energy efficiency, and resources for every dataset, our measured
+//! ESDA rows next to the paper's published rows and the quoted comparator
+//! systems (NullHop, PPF, TrueNorth, Loihi, Asynet).
+
+use esda::arch::nullhop::{nullhop_latency, NullHopConfig};
+use esda::arch::{simulate_inference, HwConfig};
+use esda::events::{repr::histogram2_norm, DatasetProfile};
+use esda::hwopt::power::{PowerModel, CLOCK_HZ};
+use esda::hwopt::{allocate, stats::collect_stats, Budget};
+use esda::model::quant::quantize_network;
+use esda::model::weights::{load_float_weights, FloatWeights};
+use esda::model::NetworkSpec;
+use esda::report::Table;
+use esda::util::Rng;
+
+/// Paper's published ESDA rows for side-by-side comparison:
+/// (dataset, model, acc%, lat ms, fps, W, mJ/inf, dsp, bram).
+const PAPER_ROWS: &[(&str, &str, f64, f64, f64, f64, f64, usize, usize)] = &[
+    ("n_caltech101", "ESDA-Net", 72.4, 3.09, 323.0, 1.81, 5.61, 1792, 1278),
+    ("n_caltech101", "MobileNetV2", 71.6, 7.12, 140.0, 2.10, 14.96, 1992, 1600),
+    ("dvs_gesture", "ESDA-Net", 92.5, 0.66, 1526.0, 1.58, 1.03, 1532, 848),
+    ("dvs_gesture", "MobileNetV2", 93.9, 1.19, 839.0, 1.73, 2.06, 1636, 1134),
+    ("asl_dvs", "ESDA-Net", 99.5, 0.71, 1406.0, 1.60, 1.14, 1494, 917),
+    ("asl_dvs", "MobileNetV2", 99.3, 1.08, 927.0, 1.75, 1.88, 1416, 1069),
+    ("n_mnist", "ESDA-Net", 98.9, 0.15, 6657.0, 1.55, 0.23, 1525, 978),
+    ("roshambo17", "ESDA-Net", 99.6, 0.98, 1016.0, 1.40, 1.38, 1282, 765),
+];
+
+fn trained_accuracy(ds: &str) -> Option<f64> {
+    let src = std::fs::read_to_string("artifacts/train_summary.json").ok()?;
+    let j = esda::util::json::parse(&src).ok()?;
+    j.get(ds)?.get("test_acc")?.as_f64().map(|a| a * 100.0)
+}
+
+fn main() {
+    println!("# Table 1 — system performance (measured on the cycle-level model @187 MHz)\n");
+    let pm = PowerModel::calibrated();
+    println!(
+        "power model fit vs paper rows: RMS residual {:.3} W\n",
+        pm.rms_residual
+    );
+    let mut t = Table::new(
+        "ESDA rows (ours)",
+        &[
+            "dataset", "model", "acc %", "lat (ms)", "fps", "power (W)", "mJ/inf",
+            "DSP", "BRAM", "FF", "LUT",
+        ],
+    );
+    let n_eval = 4usize;
+    let mut measured: Vec<(String, String, f64, f64)> = Vec::new(); // ds, model, lat_ms, mj
+    for profile in DatasetProfile::all() {
+        let models: Vec<(&str, NetworkSpec)> = if profile.w.min(profile.h) >= 128 {
+            vec![
+                ("ESDA-Net", NetworkSpec::compact("esda_net", profile.w, profile.h, profile.n_classes)),
+                ("MobileNetV2", NetworkSpec::mobilenet_v2_05("mbv2", profile.w, profile.h, profile.n_classes)),
+            ]
+        } else {
+            vec![("ESDA-Net", NetworkSpec::compact("esda_net", profile.w, profile.h, profile.n_classes))]
+        };
+        for (mname, spec) in models {
+            let mut rng = Rng::new(0x7AB1E1);
+            let mk = |rng: &mut Rng, i: usize| {
+                let es = profile.sample(i % profile.n_classes, rng);
+                histogram2_norm(&es, profile.w, profile.h, 8.0)
+            };
+            // Trained weights when the artifact exists (ESDA-Net/compact),
+            // random otherwise — accuracy column marks which.
+            let stem = format!("compact_{}", profile.name);
+            let weights_path = esda::runtime::artifacts_dir().join(format!("{stem}_weights.esdw"));
+            let (weights, acc_str) = if mname == "ESDA-Net" && weights_path.exists() {
+                let w = load_float_weights(&weights_path, &spec).expect("artifact weights align");
+                let acc = trained_accuracy(profile.name)
+                    .map(|a| format!("{a:.1}"))
+                    .unwrap_or_else(|| "n/a".into());
+                (w, acc)
+            } else {
+                (FloatWeights::random(&spec, 1), "rand-w".to_string())
+            };
+            let calib: Vec<_> = (0..3).map(|i| mk(&mut rng, i)).collect();
+            let qnet = quantize_network(&spec, &weights, &calib);
+            let bms: Vec<_> = calib.iter().map(|m| m.bitmap()).collect();
+            let stats = collect_stats(&spec, &bms);
+            let Some(alloc) = allocate(&spec, &stats, &Budget::zcu102()) else {
+                println!("  ({}/{}: does not fit — skipped)", profile.name, mname);
+                continue;
+            };
+            let cfg = HwConfig { pf: alloc.pf.clone(), fifo_depth: 8 };
+            let mut cycles = 0f64;
+            for i in 0..n_eval {
+                let input = mk(&mut rng, 10 + i);
+                let (_, report) =
+                    simulate_inference(&qnet, &cfg, &input, 50_000_000_000).unwrap();
+                cycles += report.cycles as f64;
+            }
+            cycles /= n_eval as f64;
+            let lat_ms = cycles / CLOCK_HZ * 1e3;
+            let fps = CLOCK_HZ / cycles;
+            let watts = pm.watts(&alloc.resources);
+            let mj = pm.energy_mj(&alloc.resources, cycles, CLOCK_HZ);
+            measured.push((profile.name.to_string(), mname.to_string(), lat_ms, mj));
+            t.row(vec![
+                profile.name.to_string(),
+                mname.to_string(),
+                acc_str,
+                format!("{lat_ms:.2}"),
+                format!("{fps:.0}"),
+                format!("{watts:.2}"),
+                format!("{mj:.2}"),
+                alloc.resources.dsp.to_string(),
+                alloc.resources.bram.to_string(),
+                format!("{}K", alloc.resources.ff / 1000),
+                format!("{}K", alloc.resources.lut / 1000),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    let mut tp = Table::new(
+        "paper's published ESDA rows (ZCU102, for shape comparison)",
+        &["dataset", "model", "acc %", "lat (ms)", "fps", "W", "mJ/inf", "DSP", "BRAM"],
+    );
+    for &(ds, m, acc, lat, fps, w, mj, dsp, bram) in PAPER_ROWS {
+        tp.row(vec![
+            ds.into(),
+            m.into(),
+            format!("{acc:.1}"),
+            format!("{lat:.2}"),
+            format!("{fps:.0}"),
+            format!("{w:.2}"),
+            format!("{mj:.2}"),
+            dsp.to_string(),
+            bram.to_string(),
+        ]);
+    }
+    println!("{}", tp.render());
+
+    // Comparator systems (quoted from the paper; our executable NullHop
+    // model provides the measured ratio).
+    println!("== comparators ==");
+    let ro = DatasetProfile::roshambo17();
+    let spec = NetworkSpec::compact("esda_net", ro.w, ro.h, ro.n_classes);
+    let mut rng = Rng::new(5);
+    let bms: Vec<_> = (0..4)
+        .map(|i| {
+            let es = ro.sample(i % ro.n_classes, &mut rng);
+            histogram2_norm(&es, ro.w, ro.h, 8.0).bitmap()
+        })
+        .collect();
+    let stats = collect_stats(&spec, &bms);
+    let nh_cycles = nullhop_latency(&spec, &stats, &NullHopConfig::default());
+    let esda_alloc = allocate(&spec, &stats, &Budget::zcu102()).unwrap();
+    let nh_ms = nh_cycles / 60e6 * 1e3; // NullHop ran at 60 MHz (paper §4.5)
+    let esda_ms = esda_alloc.latency / CLOCK_HZ * 1e3;
+    println!(
+        "NullHop model (RoShamBo17): {nh_ms:.2} ms @60 MHz vs ESDA {esda_ms:.2} ms @187 MHz → {:.1}× (paper: 10.2×; published NullHop 10 ms vs ESDA 0.98 ms)",
+        nh_ms / esda_ms
+    );
+    if let Some((_, _, lat, mj)) = measured
+        .iter()
+        .find(|(d, m, _, _)| d == "dvs_gesture" && m == "ESDA-Net")
+        .map(|(a, b, c, d)| (a.clone(), b.clone(), *c, *d))
+    {
+        println!(
+            "TrueNorth (DvsGesture): 105 ms, 18.7 mJ/inf → our ESDA row {lat:.2} ms ({:.0}× faster), {mj:.2} mJ ({:.1}× better)",
+            105.0 / lat,
+            18.7 / mj
+        );
+        println!("Loihi (DvsGesture): 11.43 ms → {:.1}× ; Asynet CPU (N-Caltech101): 80.4 ms", 11.43 / lat);
+    }
+    println!("PPF (BNN, 60×40): 7.71 ms — quoted; no dataset released (paper §4.5).");
+}

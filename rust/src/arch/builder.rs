@@ -1,0 +1,249 @@
+//! Compose a network's op program into a hardware pipeline — the paper's
+//! "straightforward cascading of dataflow modules corresponding with the
+//! model definition" (§3.1, Fig. 2/10).
+
+use super::conv1x1::Conv1x1Mod;
+use super::convkxk::{KxkComputeMod, PeKind};
+use super::module::Module;
+use super::pool_fc::{PoolFcMod, SinkMod, SourceMod};
+use super::residual::{AddMod, ForkMod};
+use super::sim::Pipeline;
+use super::slb::{SlbS1, SlbS2};
+use super::stream::Fabric;
+use crate::model::graph::Op;
+use crate::model::quant::QuantizedNet;
+use crate::sparse::SparseMap;
+
+/// Hardware configuration for one accelerator instance.
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    /// Parallel factor per op index (Eqn. 5's PF; entries for weightless
+    /// ops are ignored).
+    pub pf: Vec<usize>,
+    /// Default inter-module FIFO depth.
+    pub fifo_depth: usize,
+}
+
+impl HwConfig {
+    /// Uniform PF for every op.
+    pub fn uniform(n_ops: usize, pf: usize) -> HwConfig {
+        HwConfig { pf: vec![pf; n_ops], fifo_depth: 8 }
+    }
+}
+
+/// Build a full-network pipeline for one quantized input sample.
+pub fn build_pipeline(qnet: &QuantizedNet, cfg: &HwConfig, input: &SparseMap<i8>) -> Pipeline {
+    let spec = &qnet.spec;
+    let ops = spec.ops();
+    let res = spec.op_resolutions();
+    assert_eq!(cfg.pf.len(), ops.len(), "PF config must cover every op");
+    let mut fab = Fabric::default();
+    let mut modules: Vec<Box<dyn Module>> = Vec::new();
+
+    let src_ch = fab.add_chan(cfg.fifo_depth);
+    modules.push(Box::new(SourceMod::new("source", src_ch, input)));
+    let mut cur_ch = src_ch;
+    // Stack of shortcut channels for fork/add pairs.
+    let mut shortcut: Vec<usize> = Vec::new();
+    let mut pool_seen = false;
+
+    for (i, op) in ops.iter().enumerate() {
+        let (w, h) = res[i];
+        match *op {
+            Op::Conv1x1 { cin, cout, .. } => {
+                let q = qnet.per_op[i].as_ref().unwrap();
+                let out_ch = fab.add_chan(cfg.fifo_depth);
+                modules.push(Box::new(Conv1x1Mod::new(
+                    format!("op{i}_conv1x1_{cin}x{cout}"),
+                    cur_ch,
+                    out_ch,
+                    cin,
+                    cout,
+                    cfg.pf[i],
+                    q.w.clone(),
+                    q.b.clone(),
+                    q.rq,
+                )));
+                cur_ch = out_ch;
+            }
+            Op::ConvKxK { k, stride, .. } | Op::DwConv { k, stride, .. } => {
+                // SLB + k×k compute module pair.
+                let q = qnet.per_op[i].as_ref().unwrap();
+                let win_ch = fab.add_chan(cfg.fifo_depth);
+                let out_ch = fab.add_chan(cfg.fifo_depth);
+                if stride == 1 {
+                    modules.push(Box::new(SlbS1::new(
+                        format!("op{i}_slb_s1"),
+                        cur_ch,
+                        win_ch,
+                        k,
+                        w,
+                        h,
+                    )));
+                } else {
+                    modules.push(Box::new(SlbS2::new(
+                        format!("op{i}_slb_s2"),
+                        cur_ch,
+                        win_ch,
+                        k,
+                        w,
+                        h,
+                    )));
+                }
+                let (kind, label) = match *op {
+                    Op::DwConv { c, .. } => {
+                        (PeKind::Depthwise { c }, format!("op{i}_dwconv{k}x{k}_s{stride}"))
+                    }
+                    Op::ConvKxK { cin, cout, .. } => {
+                        (PeKind::Full { cin, cout }, format!("op{i}_conv{k}x{k}_s{stride}"))
+                    }
+                    _ => unreachable!(),
+                };
+                modules.push(Box::new(KxkComputeMod::new(
+                    label,
+                    win_ch,
+                    out_ch,
+                    k,
+                    kind,
+                    cfg.pf[i],
+                    q.w.clone(),
+                    q.b.clone(),
+                    q.rq,
+                )));
+                cur_ch = out_ch;
+            }
+            Op::ResFork => {
+                let main_ch = fab.add_chan(cfg.fifo_depth);
+                // Shortcut FIFO must absorb every token buffered inside the
+                // branch (SLB holds up to k rows): size generously.
+                let depth = 4 * 3 * w + 64;
+                let sc_ch = fab.add_chan(depth);
+                modules.push(Box::new(ForkMod::new(format!("op{i}_fork"), cur_ch, main_ch, sc_ch)));
+                shortcut.push(sc_ch);
+                cur_ch = main_ch;
+            }
+            Op::ResAdd => {
+                let sc_ch = shortcut.pop().expect("ResAdd without ResFork");
+                let out_ch = fab.add_chan(cfg.fifo_depth);
+                modules.push(Box::new(AddMod::new(format!("op{i}_add"), cur_ch, sc_ch, out_ch)));
+                cur_ch = out_ch;
+            }
+            Op::GlobalPool { .. } => {
+                pool_seen = true; // merged into the Fc op below (Fig. 9)
+            }
+            Op::Fc { cin, cout } => {
+                assert!(pool_seen, "Fc without preceding GlobalPool");
+                let q = qnet.per_op[i].as_ref().unwrap();
+                let out_ch = fab.add_chan(2);
+                modules.push(Box::new(PoolFcMod::new(
+                    format!("op{i}_poolfc"),
+                    cur_ch,
+                    out_ch,
+                    cin,
+                    cout,
+                    cfg.pf[i],
+                    q.w.clone(),
+                    q.b.clone(),
+                )));
+                cur_ch = out_ch;
+            }
+        }
+    }
+    let (ow, oh) = *res.last().unwrap();
+    modules.push(Box::new(SinkMod::new("sink", cur_ch, ow, oh, 1)));
+    Pipeline { fabric: fab, modules }
+}
+
+/// Convenience: simulate one inference; returns (logits, report).
+pub fn simulate_inference(
+    qnet: &QuantizedNet,
+    cfg: &HwConfig,
+    input_f32: &SparseMap<f32>,
+    max_cycles: u64,
+) -> Result<(Vec<i32>, super::sim::SimReport), super::sim::SimError> {
+    let qin = crate::model::exec::quantize_input(qnet, input_f32);
+    let mut pipe = build_pipeline(qnet, cfg, &qin);
+    let report = pipe.run(max_cycles)?;
+    // The sink is always the last module the builder appends.
+    let sink = pipe.modules.last().unwrap();
+    let sink = sink
+        .as_any()
+        .downcast_ref::<SinkMod>()
+        .expect("last module must be the sink");
+    let logits = sink.logits.clone().expect("pipeline finished without logits");
+    Ok((logits, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{repr::histogram2_norm, DatasetProfile};
+    use crate::model::exec::forward_i8;
+    use crate::model::quant::quantize_network;
+    use crate::model::weights::FloatWeights;
+    use crate::model::NetworkSpec;
+    use crate::util::Rng;
+
+    fn input_for(p: &DatasetProfile, seed: u64) -> SparseMap<f32> {
+        let mut rng = Rng::new(seed);
+        let es = p.sample(seed as usize % p.n_classes, &mut rng);
+        histogram2_norm(&es, p.w, p.h, 8.0)
+    }
+
+    /// The headline correctness result: the cycle-level pipeline produces
+    /// bit-identical logits to the functional int8 reference, end to end.
+    #[test]
+    fn full_pipeline_matches_functional_i8() {
+        let p = DatasetProfile::n_mnist();
+        let spec = NetworkSpec::tiny(p.w, p.h, p.n_classes);
+        let w = FloatWeights::random(&spec, 11);
+        let calib: Vec<SparseMap<f32>> = (0..3).map(|s| input_for(&p, s)).collect();
+        let qnet = quantize_network(&spec, &w, &calib);
+        let cfg = HwConfig::uniform(spec.ops().len(), 8);
+        for seed in 20..24u64 {
+            let input = input_for(&p, seed);
+            let want = forward_i8(&qnet, &input);
+            let (got, report) = simulate_inference(&qnet, &cfg, &input, 50_000_000).unwrap();
+            assert_eq!(got, want, "seed {seed}");
+            assert!(report.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn compact_net_simulates_and_matches() {
+        let p = DatasetProfile::roshambo17();
+        let spec = NetworkSpec::compact("compact", p.w, p.h, p.n_classes);
+        let w = FloatWeights::random(&spec, 13);
+        let calib: Vec<SparseMap<f32>> = (0..2).map(|s| input_for(&p, s)).collect();
+        let qnet = quantize_network(&spec, &w, &calib);
+        let cfg = HwConfig::uniform(spec.ops().len(), 16);
+        let input = input_for(&p, 31);
+        let want = forward_i8(&qnet, &input);
+        let (got, report) = simulate_inference(&qnet, &cfg, &input, 200_000_000).unwrap();
+        assert_eq!(got, want);
+        // Pipeline parallelism sanity: busy-cycle max should be well below
+        // total cycles × module count.
+        let bn = report.bottleneck().unwrap();
+        assert!(bn.1.busy <= report.cycles);
+    }
+
+    #[test]
+    fn higher_pf_is_faster() {
+        let p = DatasetProfile::n_mnist();
+        let spec = NetworkSpec::tiny(p.w, p.h, p.n_classes);
+        let w = FloatWeights::random(&spec, 17);
+        let calib: Vec<SparseMap<f32>> = vec![input_for(&p, 1)];
+        let qnet = quantize_network(&spec, &w, &calib);
+        let input = input_for(&p, 40);
+        let slow_cfg = HwConfig::uniform(spec.ops().len(), 1);
+        let fast_cfg = HwConfig::uniform(spec.ops().len(), 16);
+        let (_, slow) = simulate_inference(&qnet, &slow_cfg, &input, 500_000_000).unwrap();
+        let (_, fast) = simulate_inference(&qnet, &fast_cfg, &input, 500_000_000).unwrap();
+        assert!(
+            slow.cycles > fast.cycles * 2,
+            "PF1 {} vs PF16 {}",
+            slow.cycles,
+            fast.cycles
+        );
+    }
+}

@@ -1,0 +1,219 @@
+//! 1×1 (pointwise) convolution module — paper §3.3.1, Fig. 4.
+//!
+//! Tokens are relayed unchanged (submanifold by construction); the feature
+//! vector is multiplied by the weight matrix held in on-chip ROM. The PE
+//! array processes `pf` MACs per cycle, so one token occupies the module
+//! for `ceil(cin·cout / pf)` cycles — the initiation interval the Eqn. 5
+//! cost model assigns this layer.
+
+use super::module::{pe_cycles, Countdown, Module};
+use super::stream::{ChanId, Fabric, Item, ModStats};
+use crate::sparse::quant::Requant;
+use crate::sparse::Token;
+
+pub struct Conv1x1Mod {
+    name: String,
+    in_ch: ChanId,
+    out_ch: ChanId,
+    cin: usize,
+    cout: usize,
+    pf: usize,
+    w: Vec<i8>,
+    b: Vec<i32>,
+    rq: Requant,
+    cd: Countdown,
+    cur: Option<(Token, Vec<i8>)>,
+    pending: Option<Item>,
+    stats: ModStats,
+    done: bool,
+}
+
+impl Conv1x1Mod {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        in_ch: ChanId,
+        out_ch: ChanId,
+        cin: usize,
+        cout: usize,
+        pf: usize,
+        w: Vec<i8>,
+        b: Vec<i32>,
+        rq: Requant,
+    ) -> Self {
+        assert_eq!(w.len(), cin * cout);
+        assert_eq!(b.len(), cout);
+        Conv1x1Mod {
+            name: name.into(),
+            in_ch,
+            out_ch,
+            cin,
+            cout,
+            pf: pf.max(1),
+            w,
+            b,
+            rq,
+            cd: Countdown::default(),
+            cur: None,
+            pending: None,
+            stats: ModStats::default(),
+            done: false,
+        }
+    }
+
+    fn compute(&self, f: &[i8]) -> Vec<i8> {
+        let mut out = Vec::with_capacity(self.cout);
+        for co in 0..self.cout {
+            let mut acc = self.b[co];
+            for ci in 0..self.cin {
+                acc += f[ci] as i32 * self.w[ci * self.cout + co] as i32;
+            }
+            out.push(self.rq.apply(acc));
+        }
+        out
+    }
+}
+
+impl Module for Conv1x1Mod {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        // 1. Drain pending output.
+        if let Some(item) = self.pending.take() {
+            if fab.can_push(self.out_ch) {
+                if item.is_end() {
+                    self.done = true;
+                }
+                fab.chan(self.out_ch).push(item);
+                self.stats.produced += 1;
+            } else {
+                self.pending = Some(item);
+                self.stats.stall_out += 1;
+                return;
+            }
+        }
+        // 2. Advance compute.
+        if self.cd.busy() {
+            self.stats.busy += 1;
+            if self.cd.tick() {
+                let (t, f) = self.cur.take().unwrap();
+                self.pending = Some(Item::Feat { t, f: self.compute(&f) });
+            }
+            return;
+        }
+        // 3. Intake.
+        if self.pending.is_none() {
+            match fab.chan(self.in_ch).pop() {
+                Some(Item::Feat { t, f }) => {
+                    self.stats.consumed += 1;
+                    self.cur = Some((t, f));
+                    self.cd.start(pe_cycles(self.cin * self.cout, self.pf).max(1));
+                }
+                Some(Item::End) => {
+                    self.stats.consumed += 1;
+                    self.pending = Some(Item::End);
+                }
+                Some(other) => panic!("{}: unexpected item {other:?}", self.name),
+                None => self.stats.stall_in += 1,
+            }
+        }
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn next_event(&self) -> Option<u64> {
+        if self.pending.is_some() {
+            // Will attempt the push on the very next step — blocks skipping.
+            Some(1)
+        } else if self.cd.busy() {
+            Some(self.cd.0)
+        } else {
+            None
+        }
+    }
+
+    fn fast_forward(&mut self, k: u64) {
+        debug_assert!(self.cd.0 > k);
+        self.cd.0 -= k;
+        self.stats.busy += k;
+    }
+
+    fn dsp(&self) -> usize {
+        self.pf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::conv::conv1x1_i8;
+    use crate::sparse::SparseMap;
+
+    /// Drive a single module manually: feed a sparse map, collect output,
+    /// compare against the functional reference bit-for-bit.
+    #[test]
+    fn matches_functional_reference() {
+        let mut rng = crate::util::Rng::new(3);
+        let (w, h, cin, cout) = (10, 8, 4, 6);
+        let mut input: SparseMap<i8> = SparseMap::empty(w, h, cin);
+        for y in 0..h {
+            for x in 0..w {
+                if rng.chance(0.3) {
+                    let f: Vec<i8> = (0..cin).map(|_| rng.range_i64(-100, 100) as i8).collect();
+                    input.push(Token::new(x as u16, y as u16), &f);
+                }
+            }
+        }
+        let wt: Vec<i8> = (0..cin * cout).map(|_| rng.range_i64(-30, 30) as i8).collect();
+        let b: Vec<i32> = (0..cout).map(|_| rng.range_i64(-500, 500) as i32).collect();
+        let rq = Requant::from_scale(0.01, 0, 127);
+
+        let mut fab = Fabric::default();
+        let cin_ch = fab.add_chan(4);
+        let cout_ch = fab.add_chan(4);
+        let mut m = Conv1x1Mod::new("c1", cin_ch, cout_ch, cin, cout, 4, wt.clone(), b.clone(), rq);
+
+        let mut out: SparseMap<i8> = SparseMap::empty(w, h, cout);
+        let mut feed = input.tokens.iter().enumerate();
+        let mut next = feed.next();
+        let mut sent_end = false;
+        let mut cycles = 0u64;
+        while !m.done() && cycles < 1_000_000 {
+            // Feed input.
+            if fab.can_push(cin_ch) {
+                if let Some((i, t)) = next {
+                    fab.chan(cin_ch).push(Item::Feat { t: *t, f: input.feat(i).to_vec() });
+                    next = feed.next();
+                } else if !sent_end {
+                    fab.chan(cin_ch).push(Item::End);
+                    sent_end = true;
+                }
+            }
+            m.step(&mut fab);
+            // Drain output.
+            while let Some(item) = fab.chan(cout_ch).pop() {
+                if let Item::Feat { t, f } = item {
+                    out.push(t, &f);
+                }
+            }
+            cycles += 1;
+        }
+        assert!(m.done(), "module did not finish");
+        let expect = conv1x1_i8(&input, &wt, &b, cout, &rq);
+        assert_eq!(out, expect);
+        // II model: each token occupies ceil(cin*cout/pf) = 6 cycles.
+        assert!(cycles as usize >= input.nnz() * 6, "cycles {cycles}");
+    }
+}

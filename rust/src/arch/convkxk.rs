@@ -1,0 +1,352 @@
+//! k×k convolution *computation* module — paper §3.3.3, Fig. 6.
+//!
+//! Consumes the SLB's kernel-offset stream ([`Item::Window`]): for each
+//! output token it performs the weighted sum over only the **nonzero**
+//! kernel offsets (the kernel-sparsity the Eqn. 5 `9·S_k` term models),
+//! then requantizes and emits the output feature. Supports the depthwise
+//! organization (per-channel weights, `ceil(C/PF)` cycles per offset) and
+//! the full organization (`ceil(Cin·Cout/PF)` cycles per offset).
+
+use super::module::{pe_cycles, Countdown, Module};
+use super::stream::{ChanId, Fabric, Item, ModStats};
+use crate::sparse::quant::Requant;
+use crate::sparse::Token;
+
+/// PE organization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeKind {
+    /// Depthwise: weights `w[off * c + ch]`.
+    Depthwise { c: usize },
+    /// Full conv: weights `w[(off * cin + ci) * cout + co]`.
+    Full { cin: usize, cout: usize },
+}
+
+impl PeKind {
+    fn macs_per_offset(&self) -> usize {
+        match *self {
+            PeKind::Depthwise { c } => c,
+            PeKind::Full { cin, cout } => cin * cout,
+        }
+    }
+    fn cout(&self) -> usize {
+        match *self {
+            PeKind::Depthwise { c } => c,
+            PeKind::Full { cout, .. } => cout,
+        }
+    }
+}
+
+pub struct KxkComputeMod {
+    name: String,
+    in_ch: ChanId,
+    out_ch: ChanId,
+    /// Kernel size (retained for reports/debugging).
+    #[allow(dead_code)]
+    k: usize,
+    kind: PeKind,
+    pf: usize,
+    w: Vec<i8>,
+    b: Vec<i32>,
+    rq: Requant,
+    cd: Countdown,
+    cur: Option<(Token, Vec<(u8, Vec<i8>)>)>,
+    pending: Option<Item>,
+    stats: ModStats,
+    done: bool,
+}
+
+impl KxkComputeMod {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        in_ch: ChanId,
+        out_ch: ChanId,
+        k: usize,
+        kind: PeKind,
+        pf: usize,
+        w: Vec<i8>,
+        b: Vec<i32>,
+        rq: Requant,
+    ) -> Self {
+        let expect_w = match kind {
+            PeKind::Depthwise { c } => k * k * c,
+            PeKind::Full { cin, cout } => k * k * cin * cout,
+        };
+        assert_eq!(w.len(), expect_w);
+        assert_eq!(b.len(), kind.cout());
+        KxkComputeMod {
+            name: name.into(),
+            in_ch,
+            out_ch,
+            k,
+            kind,
+            pf: pf.max(1),
+            w,
+            b,
+            rq,
+            cd: Countdown::default(),
+            cur: None,
+            pending: None,
+            stats: ModStats::default(),
+            done: false,
+        }
+    }
+
+    fn compute(&self, offs: &[(u8, Vec<i8>)]) -> Vec<i8> {
+        let _cout = self.kind.cout();
+        let mut acc: Vec<i32> = self.b.clone();
+        for (off, f) in offs {
+            let off = *off as usize;
+            match self.kind {
+                PeKind::Depthwise { c } => {
+                    for ch in 0..c {
+                        acc[ch] += f[ch] as i32 * self.w[off * c + ch] as i32;
+                    }
+                }
+                PeKind::Full { cin, cout } => {
+                    let wbase = off * cin * cout;
+                    for ci in 0..cin {
+                        let a = f[ci] as i32;
+                        let wrow = wbase + ci * cout;
+                        for co in 0..cout {
+                            acc[co] += a * self.w[wrow + co] as i32;
+                        }
+                    }
+                }
+            }
+        }
+        acc.iter().map(|&a| self.rq.apply(a)).collect()
+    }
+}
+
+impl Module for KxkComputeMod {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        if let Some(item) = self.pending.take() {
+            if fab.can_push(self.out_ch) {
+                if item.is_end() {
+                    self.done = true;
+                }
+                fab.chan(self.out_ch).push(item);
+                self.stats.produced += 1;
+            } else {
+                self.pending = Some(item);
+                self.stats.stall_out += 1;
+                return;
+            }
+        }
+        if self.cd.busy() {
+            self.stats.busy += 1;
+            if self.cd.tick() {
+                let (t, offs) = self.cur.take().unwrap();
+                self.pending = Some(Item::Feat { t, f: self.compute(&offs) });
+            }
+            return;
+        }
+        if self.pending.is_none() {
+            match fab.chan(self.in_ch).pop() {
+                Some(Item::Window { t, offs }) => {
+                    self.stats.consumed += 1;
+                    // One `ceil(macs/PF)` pass per nonzero offset — the
+                    // kernel-sparsity-proportional latency of Eqn. 5.
+                    let cycles: u64 = offs.len() as u64
+                        * pe_cycles(self.kind.macs_per_offset(), self.pf).max(1);
+                    self.cur = Some((t, offs));
+                    self.cd.start(cycles.max(1));
+                }
+                Some(Item::End) => {
+                    self.stats.consumed += 1;
+                    self.pending = Some(Item::End);
+                }
+                Some(other) => panic!("{}: unexpected item {other:?}", self.name),
+                None => self.stats.stall_in += 1,
+            }
+        }
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn next_event(&self) -> Option<u64> {
+        if self.pending.is_some() {
+            // Will attempt the push on the very next step — blocks skipping.
+            Some(1)
+        } else if self.cd.busy() {
+            Some(self.cd.0)
+        } else {
+            None
+        }
+    }
+
+    fn fast_forward(&mut self, k: u64) {
+        debug_assert!(self.cd.0 > k);
+        self.cd.0 -= k;
+        self.stats.busy += k;
+    }
+
+    fn dsp(&self) -> usize {
+        self.pf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::slb::{SlbS1, SlbS2};
+    use crate::sparse::conv::{dwconv_kxk_s1_i8, dwconv_kxk_s2_i8};
+    use crate::sparse::SparseMap;
+    use crate::util::propcheck::check;
+
+    /// SLB + compute chained must equal the functional conv bit-for-bit.
+    fn run_chain(input: &SparseMap<i8>, stride: usize, w: &[i8], b: &[i32], rq: Requant) -> SparseMap<i8> {
+        let c = input.c;
+        let mut fab = Fabric::default();
+        let ch_in = fab.add_chan(2);
+        let ch_win = fab.add_chan(2);
+        let ch_out = fab.add_chan(2);
+        let mut slb: Box<dyn Module> = if stride == 1 {
+            Box::new(SlbS1::new("slb", ch_in, ch_win, 3, input.w, input.h))
+        } else {
+            Box::new(SlbS2::new("slb", ch_in, ch_win, 3, input.w, input.h))
+        };
+        let mut pe = KxkComputeMod::new(
+            "dw",
+            ch_win,
+            ch_out,
+            3,
+            PeKind::Depthwise { c },
+            2,
+            w.to_vec(),
+            b.to_vec(),
+            rq,
+        );
+        let (ow, oh) = if stride == 1 {
+            (input.w, input.h)
+        } else {
+            ((input.w + 1) / 2, (input.h + 1) / 2)
+        };
+        let mut out: SparseMap<i8> = SparseMap::empty(ow, oh, c);
+        let mut feed = input.tokens.iter().enumerate();
+        let mut next = feed.next();
+        let mut sent_end = false;
+        let mut cycles = 0u64;
+        while !pe.done() && cycles < 5_000_000 {
+            if fab.can_push(ch_in) {
+                if let Some((i, t)) = next {
+                    fab.chan(ch_in).push(Item::Feat { t: *t, f: input.feat(i).to_vec() });
+                    next = feed.next();
+                } else if !sent_end {
+                    fab.chan(ch_in).push(Item::End);
+                    sent_end = true;
+                }
+            }
+            pe.step(&mut fab);
+            slb.step(&mut fab);
+            while let Some(item) = fab.chan(ch_out).pop() {
+                if let Item::Feat { t, f } = item {
+                    out.push(t, &f);
+                }
+            }
+            cycles += 1;
+        }
+        assert!(pe.done(), "chain deadlocked");
+        out
+    }
+
+    #[test]
+    fn dw_s1_chain_matches_functional() {
+        check("SLB s1 + DW PE == functional dwconv", 32, |g| {
+            let w = g.usize(3, 14);
+            let h = g.usize(3, 14);
+            let c = g.usize(1, 4);
+            let mut m: SparseMap<i8> = SparseMap::empty(w, h, c);
+            for y in 0..h {
+                for x in 0..w {
+                    if g.chance(0.35) {
+                        let f: Vec<i8> = (0..c).map(|_| g.i64(-90, 90) as i8).collect();
+                        m.push(Token::new(x as u16, y as u16), &f);
+                    }
+                }
+            }
+            let wt: Vec<i8> = (0..9 * c).map(|_| g.i64(-40, 40) as i8).collect();
+            let b: Vec<i32> = (0..c).map(|_| g.i64(-200, 200) as i32).collect();
+            let rq = Requant::from_scale(0.02, 0, 110);
+            let got = run_chain(&m, 1, &wt, &b, rq);
+            let want = dwconv_kxk_s1_i8(&m, 3, &wt, &b, &rq);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn dw_s2_chain_matches_functional() {
+        check("SLB s2 + DW PE == functional dwconv s2", 32, |g| {
+            let w = g.usize(4, 14);
+            let h = g.usize(4, 14);
+            let c = g.usize(1, 4);
+            let mut m: SparseMap<i8> = SparseMap::empty(w, h, c);
+            for y in 0..h {
+                for x in 0..w {
+                    if g.chance(0.3) {
+                        let f: Vec<i8> = (0..c).map(|_| g.i64(-90, 90) as i8).collect();
+                        m.push(Token::new(x as u16, y as u16), &f);
+                    }
+                }
+            }
+            let wt: Vec<i8> = (0..9 * c).map(|_| g.i64(-40, 40) as i8).collect();
+            let b: Vec<i32> = (0..c).map(|_| g.i64(-200, 200) as i32).collect();
+            let rq = Requant::from_scale(0.02, -128, 127);
+            let got = run_chain(&m, 2, &wt, &b, rq);
+            let want = dwconv_kxk_s2_i8(&m, 3, &wt, &b, &rq);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn latency_scales_with_kernel_sparsity() {
+        // A window with 2 offsets must take fewer cycles than one with 9.
+        let c = 8usize;
+        let pf = 4usize;
+        let rq = Requant::unit();
+        let mk = |n_offs: usize| {
+            let mut fab = Fabric::default();
+            let ch_in = fab.add_chan(2);
+            let ch_out = fab.add_chan(2);
+            let mut pe = KxkComputeMod::new(
+                "dw",
+                ch_in,
+                ch_out,
+                3,
+                PeKind::Depthwise { c },
+                pf,
+                vec![1i8; 9 * c],
+                vec![0i32; c],
+                rq,
+            );
+            let offs: Vec<(u8, Vec<i8>)> = (0..n_offs).map(|o| (o as u8, vec![1i8; c])).collect();
+            fab.chan(ch_in).push(Item::Window { t: Token::new(0, 0), offs });
+            fab.chan(ch_in).push(Item::End);
+            let mut cycles = 0u64;
+            while !pe.done() && cycles < 10_000 {
+                pe.step(&mut fab);
+                while fab.chan(ch_out).pop().is_some() {}
+                cycles += 1;
+            }
+            pe.stats().busy
+        };
+        // Busy cycles = n_offs × ceil(C/PF) = n_offs × 2.
+        assert_eq!(mk(2), 4);
+        assert_eq!(mk(9), 18);
+    }
+}

@@ -1,0 +1,114 @@
+//! Dense sliding-window dataflow baseline — the comparator of Fig. 13.
+//!
+//! The paper's dense baseline "eliminates all token stream interfaces and
+//! dynamic logic components, maintaining identical parallel factors,
+//! bitwidths, and other design parameters". A dense line-buffer pipeline
+//! is *deterministic*: every spatial position is processed, every kernel
+//! offset is multiplied, so its latency has a closed form — which is what
+//! this module provides (cycle-exact for a deterministic pipeline; no
+//! discrete-event simulation needed).
+//!
+//! Per-module initiation intervals (cycles per output position), mirroring
+//! the sparse modules' PE models with S_s = S_k = 1:
+//! - 1×1 conv: `ceil(cin·cout / pf)`
+//! - k×k depthwise: `k² · ceil(c / pf)`
+//! - k×k full: `k² · ceil(cin·cout / pf)`
+//! - fork/add: 1
+//!
+//! A pipelined dataflow block processes `H·W` positions at the II of its
+//! slowest module, plus a fill latency of the sum of the others.
+
+use super::module::pe_cycles;
+use crate::model::graph::Op;
+
+/// Cycles per *output position* for a dense implementation of `op` at
+/// parallel factor `pf`.
+pub fn dense_ii(op: &Op, pf: usize) -> u64 {
+    match *op {
+        Op::Conv1x1 { cin, cout, .. } => pe_cycles(cin * cout, pf).max(1),
+        Op::ConvKxK { k, cin, cout, .. } => (k * k) as u64 * pe_cycles(cin * cout, pf).max(1),
+        Op::DwConv { k, c, .. } => (k * k) as u64 * pe_cycles(c, pf).max(1),
+        Op::ResFork | Op::ResAdd => 1,
+        Op::GlobalPool { .. } => 1,
+        Op::Fc { cin, cout } => pe_cycles(cin * cout, pf).max(1),
+    }
+}
+
+/// Dense-pipeline latency for a chain of ops over an input of `w × h`
+/// (each op sees the resolution after upstream strides):
+/// `positions(bottleneck) · II(bottleneck) + Σ_other II` (fill).
+pub fn dense_chain_latency(ops: &[Op], pfs: &[usize], w: usize, h: usize) -> u64 {
+    assert_eq!(ops.len(), pfs.len());
+    let (mut cw, mut ch) = (w, h);
+    let mut stage: Vec<u64> = Vec::new(); // total cycles per module
+    let mut fill: u64 = 0;
+    for (op, &pf) in ops.iter().zip(pfs) {
+        let ii = dense_ii(op, pf);
+        fill += ii;
+        // A strided line buffer consumes every input position (1 beat/cycle)
+        // but *computes* only at output positions — the module is bound by
+        // the slower of ingest and compute.
+        let (ow, oh) = if op.stride() == 2 { ((cw + 1) / 2, (ch + 1) / 2) } else { (cw, ch) };
+        let compute = match op {
+            Op::Fc { .. } => ii,
+            _ => (ow * oh) as u64 * ii,
+        };
+        let ingest = (cw * ch) as u64;
+        stage.push(compute.max(ingest));
+        if op.stride() == 2 {
+            cw = ow;
+            ch = oh;
+        }
+    }
+    let total_max = stage.iter().copied().max().unwrap_or(0);
+    total_max + fill
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::Act;
+
+    #[test]
+    fn ii_matches_hand_calc() {
+        let dw = Op::DwConv { k: 3, c: 16, stride: 1, act: Act::Relu6 };
+        assert_eq!(dense_ii(&dw, 4), 9 * 4); // 9 offsets × ceil(16/4)
+        assert_eq!(dense_ii(&dw, 16), 9);
+        let pw = Op::Conv1x1 { cin: 16, cout: 32, act: Act::Relu6 };
+        assert_eq!(dense_ii(&pw, 16), 32);
+    }
+
+    #[test]
+    fn chain_latency_bottleneck_dominated() {
+        let ops = vec![
+            Op::Conv1x1 { cin: 8, cout: 16, act: Act::Relu6 }, // II 8 @pf16
+            Op::DwConv { k: 3, c: 16, stride: 1, act: Act::Relu6 }, // II 9 @pf16
+            Op::Conv1x1 { cin: 16, cout: 8, act: Act::None },  // II 8 @pf16
+        ];
+        let pfs = vec![16, 16, 16];
+        let lat = dense_chain_latency(&ops, &pfs, 10, 10);
+        // bottleneck: dw 100 pos × 9 = 900; fill 8+9+8 = 25
+        assert_eq!(lat, 925);
+    }
+
+    #[test]
+    fn stride_halves_downstream_positions() {
+        let ops = vec![
+            Op::DwConv { k: 3, c: 8, stride: 2, act: Act::Relu6 }, // 25 compute pos
+            Op::Conv1x1 { cin: 8, cout: 8, act: Act::None },       // 25 pos
+        ];
+        let pfs = vec![8, 1];
+        let lat = dense_chain_latency(&ops, &pfs, 10, 10);
+        // dw: max(25·9, 100 ingest)=225 ; 1x1: 25·64=1600 → 1600 + fill (9+64)
+        assert_eq!(lat, 1600 + 73);
+    }
+
+    #[test]
+    fn ingest_bound_when_compute_cheap() {
+        // Stride-2 with huge PF: compute per output is 9 cycles over 25
+        // outputs (225) but the line buffer still ingests 400 inputs.
+        let ops = vec![Op::DwConv { k: 3, c: 8, stride: 2, act: Act::Relu6 }];
+        let lat = dense_chain_latency(&ops, &[8], 20, 20);
+        assert_eq!(lat, 400.max(100 * 9) + 9);
+    }
+}

@@ -1,0 +1,32 @@
+//! ESDA's composable dynamic sparse dataflow architecture as a cycle-level
+//! model (the paper's §3, with the FPGA fabric replaced by a clocked
+//! discrete simulator — see DESIGN.md §2 for why this preserves the
+//! paper's claims).
+//!
+//! - [`stream`]: token-feature channels with ready/valid handshakes (Eqn. 1)
+//! - [`module`]: the steppable-module abstraction
+//! - [`conv1x1`]: pointwise conv module (§3.3.1)
+//! - [`slb`]: sparse line buffers, stride 1 and 2 (§3.3.4–5, Eqns. 3–4)
+//! - [`convkxk`]: k×k weighted-sum PE module with kernel-offset stream
+//!   (§3.3.2–3)
+//! - [`residual`]: fork / shortcut / merge chaining (§3.3.7)
+//! - [`pool_fc`]: global pooling + classifier, stream endpoints (§3.3.6)
+//! - [`builder`]: network spec → pipeline composition (Fig. 2)
+//! - [`sim`]: the clocked scheduler, deadlock watchdog, reports
+//! - [`dense`]: the dense sliding-window baseline of Fig. 13
+//! - [`nullhop`]: a NullHop-style layer-sequential bitmap-skipping
+//!   accelerator model (Table 1 comparator / ablation)
+pub mod stream;
+pub mod module;
+pub mod conv1x1;
+pub mod slb;
+pub mod convkxk;
+pub mod residual;
+pub mod pool_fc;
+pub mod builder;
+pub mod sim;
+pub mod dense;
+pub mod nullhop;
+
+pub use builder::{build_pipeline, simulate_inference, HwConfig};
+pub use sim::{Pipeline, SimError, SimReport};

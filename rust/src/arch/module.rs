@@ -1,0 +1,99 @@
+//! The dataflow-module abstraction (paper Eqn. 1): every hardware module
+//! consumes token-feature items from input channels and produces them on
+//! output channels, maintaining strict ravel order, one step per clock.
+
+use super::stream::{Fabric, ModStats};
+
+/// A cycle-steppable hardware module.
+pub trait Module {
+    /// Display name (for reports and deadlock dumps).
+    fn name(&self) -> &str;
+
+    /// Advance one clock edge. A module may pop at most one item per input
+    /// channel and push at most one item per output channel per call
+    /// (multi-cycle work is modelled with internal busy countdowns).
+    fn step(&mut self, fab: &mut Fabric);
+
+    /// Activity counters.
+    fn stats(&self) -> &ModStats;
+
+    /// True once the module has propagated end-of-stream (used by the
+    /// simulator to detect completion).
+    fn done(&self) -> bool;
+
+    /// DSP cost of this module under its configuration (Eqn. 5 family) —
+    /// used by reports; the authoritative cost model lives in `hwopt`.
+    fn dsp(&self) -> usize {
+        0
+    }
+
+    /// Downcast support (the builder recovers the sink's collected output).
+    fn as_any(&self) -> &dyn std::any::Any;
+
+    /// Event-skip support (§Perf): `Some(k)` when the module is in a pure
+    /// compute countdown and will neither touch a channel nor change state
+    /// for the next `k` calls to `step`. `None` when the module's behaviour
+    /// depends on channel state (or it is idle/done).
+    fn next_event(&self) -> Option<u64> {
+        None
+    }
+
+    /// Advance a pure countdown by `k` cycles (`k < next_event()`),
+    /// accounting the skipped cycles as busy. Only called by the scheduler
+    /// fast path.
+    fn fast_forward(&mut self, _k: u64) {}
+}
+
+/// Common helper: a compute countdown.
+#[derive(Debug, Default, Clone)]
+pub struct Countdown(pub u64);
+
+impl Countdown {
+    #[inline]
+    pub fn busy(&self) -> bool {
+        self.0 > 0
+    }
+    #[inline]
+    pub fn tick(&mut self) -> bool {
+        if self.0 > 0 {
+            self.0 -= 1;
+        }
+        self.0 == 0
+    }
+    #[inline]
+    pub fn start(&mut self, cycles: u64) {
+        debug_assert_eq!(self.0, 0);
+        self.0 = cycles;
+    }
+}
+
+/// `ceil(macs / pf)` — cycles for a PE array of `pf` MACs/cycle to chew
+/// through `macs` multiply-accumulates (the paper's `C/PF` terms).
+#[inline]
+pub fn pe_cycles(macs: usize, pf: usize) -> u64 {
+    ((macs + pf - 1) / pf.max(1)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn countdown_ticks_to_zero() {
+        let mut c = Countdown::default();
+        c.start(3);
+        assert!(c.busy());
+        assert!(!c.tick());
+        assert!(!c.tick());
+        assert!(c.tick());
+        assert!(!c.busy());
+    }
+
+    #[test]
+    fn pe_cycles_rounds_up() {
+        assert_eq!(pe_cycles(9, 4), 3);
+        assert_eq!(pe_cycles(8, 4), 2);
+        assert_eq!(pe_cycles(1, 16), 1);
+        assert_eq!(pe_cycles(0, 8), 0);
+    }
+}

@@ -1,0 +1,354 @@
+//! Global pooling + fully-connected classifier module — paper §3.3.6,
+//! Fig. 9, plus stream endpoints (source, sink).
+
+use super::module::{pe_cycles, Countdown, Module};
+use super::stream::{ChanId, Fabric, Item, ModStats};
+use crate::sparse::{SparseMap, Token};
+
+/// Global average pool over tokens, then linear classifier; emits
+/// [`Item::Logits`] when the `.end` flag arrives.
+pub struct PoolFcMod {
+    name: String,
+    in_ch: ChanId,
+    out_ch: ChanId,
+    c: usize,
+    n_classes: usize,
+    pf: usize,
+    wfc: Vec<i8>,
+    bfc: Vec<i32>,
+    acc: Vec<i64>,
+    count: u64,
+    cd: Countdown,
+    pending: Option<Item>,
+    stats: ModStats,
+    done: bool,
+}
+
+impl PoolFcMod {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        in_ch: ChanId,
+        out_ch: ChanId,
+        c: usize,
+        n_classes: usize,
+        pf: usize,
+        wfc: Vec<i8>,
+        bfc: Vec<i32>,
+    ) -> Self {
+        assert_eq!(wfc.len(), c * n_classes);
+        assert_eq!(bfc.len(), n_classes);
+        PoolFcMod {
+            name: name.into(),
+            in_ch,
+            out_ch,
+            c,
+            n_classes,
+            pf: pf.max(1),
+            wfc,
+            bfc,
+            acc: vec![0; c],
+            count: 0,
+            cd: Countdown::default(),
+            pending: None,
+            stats: ModStats::default(),
+            done: false,
+        }
+    }
+
+    fn finalize(&self) -> Vec<i32> {
+        // Integer average with round-half-up (matches
+        // `sparse::conv::global_avg_pool_i8`), then int8-weight classifier.
+        let n = self.count.max(1) as i64;
+        let pooled: Vec<i32> = self
+            .acc
+            .iter()
+            .map(|&s| {
+                let half = if s >= 0 { n / 2 } else { -(n / 2) };
+                ((s + half) / n) as i32
+            })
+            .collect();
+        (0..self.n_classes)
+            .map(|co| {
+                let mut a = self.bfc[co];
+                for ci in 0..self.c {
+                    a += pooled[ci] * self.wfc[ci * self.n_classes + co] as i32;
+                }
+                a
+            })
+            .collect()
+    }
+}
+
+impl Module for PoolFcMod {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        if let Some(item) = self.pending.take() {
+            if fab.can_push(self.out_ch) {
+                fab.chan(self.out_ch).push(item);
+                self.stats.produced += 1;
+                self.done = true;
+            } else {
+                self.pending = Some(item);
+                self.stats.stall_out += 1;
+            }
+            return;
+        }
+        if self.cd.busy() {
+            self.stats.busy += 1;
+            if self.cd.tick() {
+                self.pending = Some(Item::Logits(self.finalize()));
+            }
+            return;
+        }
+        if self.done {
+            return;
+        }
+        match fab.chan(self.in_ch).pop() {
+            Some(Item::Feat { f, .. }) => {
+                self.stats.consumed += 1;
+                self.stats.busy += 1;
+                for (a, &v) in self.acc.iter_mut().zip(&f) {
+                    *a += v as i64;
+                }
+                self.count += 1;
+            }
+            Some(Item::End) => {
+                self.stats.consumed += 1;
+                // Division (~C cycles serial) + classifier matvec.
+                let cycles = self.c as u64 + pe_cycles(self.c * self.n_classes, self.pf);
+                self.cd.start(cycles.max(1));
+            }
+            Some(other) => panic!("{}: unexpected {other:?}", self.name),
+            None => self.stats.stall_in += 1,
+        }
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn next_event(&self) -> Option<u64> {
+        if self.pending.is_some() {
+            // Will attempt the push on the very next step — blocks skipping.
+            Some(1)
+        } else if self.cd.busy() {
+            Some(self.cd.0)
+        } else {
+            None
+        }
+    }
+
+    fn fast_forward(&mut self, k: u64) {
+        debug_assert!(self.cd.0 > k);
+        self.cd.0 -= k;
+        self.stats.busy += k;
+    }
+
+    fn dsp(&self) -> usize {
+        self.pf
+    }
+}
+
+/// Stream source: feeds a quantized sparse map at one beat per cycle (the
+/// PS→PL input DMA of Fig. 2), then the end flag.
+pub struct SourceMod {
+    name: String,
+    out_ch: ChanId,
+    items: std::vec::IntoIter<(Token, Vec<i8>)>,
+    sent_end: bool,
+    stats: ModStats,
+}
+
+impl SourceMod {
+    pub fn new(name: impl Into<String>, out_ch: ChanId, input: &SparseMap<i8>) -> Self {
+        let items: Vec<(Token, Vec<i8>)> = input
+            .tokens
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (*t, input.feat(i).to_vec()))
+            .collect();
+        SourceMod {
+            name: name.into(),
+            out_ch,
+            items: items.into_iter(),
+            sent_end: false,
+            stats: ModStats::default(),
+        }
+    }
+}
+
+impl Module for SourceMod {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        if self.sent_end {
+            return;
+        }
+        if !fab.can_push(self.out_ch) {
+            self.stats.stall_out += 1;
+            return;
+        }
+        match self.items.next() {
+            Some((t, f)) => {
+                fab.chan(self.out_ch).push(Item::Feat { t, f });
+                self.stats.produced += 1;
+                self.stats.busy += 1;
+            }
+            None => {
+                fab.chan(self.out_ch).push(Item::End);
+                self.sent_end = true;
+                self.stats.produced += 1;
+            }
+        }
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.sent_end
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Stream sink: collects the pipeline output — either classifier logits or
+/// a token-feature stream (single-block simulations).
+pub struct SinkMod {
+    name: String,
+    in_ch: ChanId,
+    pub logits: Option<Vec<i32>>,
+    pub map: SparseMap<i8>,
+    stats: ModStats,
+    done: bool,
+}
+
+impl SinkMod {
+    pub fn new(name: impl Into<String>, in_ch: ChanId, w: usize, h: usize, c: usize) -> Self {
+        SinkMod {
+            name: name.into(),
+            in_ch,
+            logits: None,
+            map: SparseMap::empty(w, h, c),
+            stats: ModStats::default(),
+            done: false,
+        }
+    }
+}
+
+impl Module for SinkMod {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        match fab.chan(self.in_ch).pop() {
+            Some(Item::Feat { t, f }) => {
+                self.stats.consumed += 1;
+                self.map.push(t, &f);
+            }
+            Some(Item::Logits(l)) => {
+                self.stats.consumed += 1;
+                self.logits = Some(l);
+                self.done = true;
+            }
+            Some(Item::End) => {
+                self.stats.consumed += 1;
+                self.done = true;
+            }
+            Some(other) => panic!("{}: unexpected {other:?}", self.name),
+            None => self.stats.stall_in += 1,
+        }
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::conv::{fc_i8, global_avg_pool_i8};
+
+    #[test]
+    fn pool_fc_matches_functional() {
+        let mut rng = crate::util::Rng::new(5);
+        let (c, n_classes) = (6, 4);
+        let mut input: SparseMap<i8> = SparseMap::empty(8, 8, c);
+        for y in 0..8u16 {
+            for x in 0..8u16 {
+                if rng.chance(0.4) {
+                    let f: Vec<i8> = (0..c).map(|_| rng.range_i64(-100, 100) as i8).collect();
+                    input.push(Token::new(x, y), &f);
+                }
+            }
+        }
+        let wfc: Vec<i8> = (0..c * n_classes).map(|_| rng.range_i64(-50, 50) as i8).collect();
+        let bfc: Vec<i32> = (0..n_classes).map(|_| rng.range_i64(-99, 99) as i32).collect();
+
+        let mut fab = Fabric::default();
+        let ch_in = fab.add_chan(4);
+        let ch_out = fab.add_chan(2);
+        let mut src = SourceMod::new("src", ch_in, &input);
+        let mut pool = PoolFcMod::new("poolfc", ch_in, ch_out, c, n_classes, 4, wfc.clone(), bfc.clone());
+        let mut sink = SinkMod::new("sink", ch_out, 1, 1, 1);
+        for _ in 0..10_000 {
+            sink.step(&mut fab);
+            pool.step(&mut fab);
+            src.step(&mut fab);
+            if sink.done() {
+                break;
+            }
+        }
+        assert!(sink.done());
+        let pooled = global_avg_pool_i8(&input);
+        let want = fc_i8(&pooled, &wfc, &bfc, n_classes);
+        assert_eq!(sink.logits.as_ref().unwrap(), &want);
+    }
+
+    #[test]
+    fn empty_stream_still_classifies() {
+        let input: SparseMap<i8> = SparseMap::empty(4, 4, 2);
+        let mut fab = Fabric::default();
+        let ch_in = fab.add_chan(2);
+        let ch_out = fab.add_chan(2);
+        let mut src = SourceMod::new("src", ch_in, &input);
+        let mut pool = PoolFcMod::new("poolfc", ch_in, ch_out, 2, 3, 1, vec![1i8; 6], vec![7, 8, 9]);
+        let mut sink = SinkMod::new("sink", ch_out, 1, 1, 1);
+        for _ in 0..1000 {
+            sink.step(&mut fab);
+            pool.step(&mut fab);
+            src.step(&mut fab);
+            if sink.done() {
+                break;
+            }
+        }
+        assert_eq!(sink.logits.as_ref().unwrap(), &vec![7, 8, 9]); // bias only
+    }
+}

@@ -1,0 +1,201 @@
+//! Residual chaining modules — paper §3.3.7, Fig. 10.
+//!
+//! [`ForkMod`] duplicates the token-feature stream (identity shortcut);
+//! the shortcut side is a plain deep FIFO channel; [`AddMod`] merges the
+//! two branches with a saturating int8 add. Submanifold convolution
+//! guarantees both branches carry identical token sequences, which AddMod
+//! asserts.
+
+use super::module::Module;
+use super::stream::{ChanId, Fabric, Item, ModStats};
+
+/// Stream fork: one input, two outputs, both must be ready.
+pub struct ForkMod {
+    name: String,
+    in_ch: ChanId,
+    out_a: ChanId,
+    out_b: ChanId,
+    stats: ModStats,
+    done: bool,
+}
+
+impl ForkMod {
+    pub fn new(name: impl Into<String>, in_ch: ChanId, out_a: ChanId, out_b: ChanId) -> Self {
+        ForkMod { name: name.into(), in_ch, out_a, out_b, stats: ModStats::default(), done: false }
+    }
+}
+
+impl Module for ForkMod {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        if fab.peek(self.in_ch).is_none() {
+            self.stats.stall_in += 1;
+            return;
+        }
+        if !(fab.can_push(self.out_a) && fab.can_push(self.out_b)) {
+            self.stats.stall_out += 1;
+            return;
+        }
+        let item = fab.chan(self.in_ch).pop().unwrap();
+        self.stats.consumed += 1;
+        if item.is_end() {
+            self.done = true;
+        }
+        fab.chan(self.out_a).push(item.clone());
+        fab.chan(self.out_b).push(item);
+        self.stats.produced += 2;
+        self.stats.busy += 1;
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Residual merge: element-wise saturating add of two synchronized streams.
+pub struct AddMod {
+    name: String,
+    in_a: ChanId,
+    in_b: ChanId,
+    out_ch: ChanId,
+    stats: ModStats,
+    done: bool,
+}
+
+impl AddMod {
+    pub fn new(name: impl Into<String>, in_a: ChanId, in_b: ChanId, out_ch: ChanId) -> Self {
+        AddMod { name: name.into(), in_a, in_b, out_ch, stats: ModStats::default(), done: false }
+    }
+}
+
+impl Module for AddMod {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        if fab.peek(self.in_a).is_none() || fab.peek(self.in_b).is_none() {
+            self.stats.stall_in += 1;
+            return;
+        }
+        if !fab.can_push(self.out_ch) {
+            self.stats.stall_out += 1;
+            return;
+        }
+        let a = fab.chan(self.in_a).pop().unwrap();
+        let b = fab.chan(self.in_b).pop().unwrap();
+        self.stats.consumed += 2;
+        let out = match (a, b) {
+            (Item::End, Item::End) => {
+                self.done = true;
+                Item::End
+            }
+            (Item::Feat { t: ta, f: fa }, Item::Feat { t: tb, f: fb }) => {
+                assert_eq!(ta, tb, "{}: residual branches desynchronized", self.name);
+                let f = fa
+                    .iter()
+                    .zip(&fb)
+                    .map(|(&x, &y)| (x as i32 + y as i32).clamp(-128, 127) as i8)
+                    .collect();
+                Item::Feat { t: ta, f }
+            }
+            (a, b) => panic!("{}: mismatched branch items {a:?} / {b:?}", self.name),
+        };
+        fab.chan(self.out_ch).push(out);
+        self.stats.produced += 1;
+        self.stats.busy += 1;
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Token;
+
+    #[test]
+    fn fork_then_add_is_doubling() {
+        let mut fab = Fabric::default();
+        let ch_in = fab.add_chan(4);
+        let ch_a = fab.add_chan(4);
+        let ch_b = fab.add_chan(16);
+        let ch_out = fab.add_chan(4);
+        let mut fork = ForkMod::new("fork", ch_in, ch_a, ch_b);
+        let mut add = AddMod::new("add", ch_a, ch_b, ch_out);
+
+        fab.chan(ch_in).push(Item::Feat { t: Token::new(1, 0), f: vec![5, -3, 100] });
+        fab.chan(ch_in).push(Item::Feat { t: Token::new(2, 0), f: vec![-100, 0, 1] });
+        fab.chan(ch_in).push(Item::End);
+
+        let mut outs = Vec::new();
+        for _ in 0..32 {
+            add.step(&mut fab);
+            fork.step(&mut fab);
+            while let Some(i) = fab.chan(ch_out).pop() {
+                outs.push(i);
+            }
+        }
+        assert!(add.done() && fork.done());
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0], Item::Feat { t: Token::new(1, 0), f: vec![10, -6, 127] }); // saturates
+        assert_eq!(outs[1], Item::Feat { t: Token::new(2, 0), f: vec![-128, 0, 2] });
+        assert!(outs[2].is_end());
+    }
+
+    #[test]
+    fn fork_blocks_until_both_ready() {
+        let mut fab = Fabric::default();
+        let ch_in = fab.add_chan(4);
+        let ch_a = fab.add_chan(1);
+        let ch_b = fab.add_chan(1);
+        let mut fork = ForkMod::new("fork", ch_in, ch_a, ch_b);
+        fab.chan(ch_in).push(Item::Feat { t: Token::new(0, 0), f: vec![1] });
+        fab.chan(ch_in).push(Item::End);
+        fork.step(&mut fab); // moves first item
+        fork.step(&mut fab); // blocked: ch_a/ch_b full
+        assert_eq!(fork.stats().stall_out, 1);
+        assert_eq!(fab.chan(ch_a).len(), 1);
+        // Drain one side only — still blocked.
+        fab.chan(ch_a).pop();
+        fork.step(&mut fab);
+        assert_eq!(fork.stats().stall_out, 2);
+        fab.chan(ch_b).pop();
+        fork.step(&mut fab);
+        assert!(fork.done());
+    }
+
+    #[test]
+    #[should_panic(expected = "desynchronized")]
+    fn add_panics_on_token_mismatch() {
+        let mut fab = Fabric::default();
+        let a = fab.add_chan(2);
+        let b = fab.add_chan(2);
+        let o = fab.add_chan(2);
+        let mut add = AddMod::new("add", a, b, o);
+        fab.chan(a).push(Item::Feat { t: Token::new(0, 0), f: vec![1] });
+        fab.chan(b).push(Item::Feat { t: Token::new(1, 0), f: vec![1] });
+        add.step(&mut fab);
+    }
+}

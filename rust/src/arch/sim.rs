@@ -1,0 +1,299 @@
+//! Clocked pipeline simulator: steps all modules until the sink completes,
+//! with a deadlock watchdog and per-module/per-FIFO reporting.
+
+use super::module::Module;
+use super::stream::Fabric;
+use std::fmt;
+
+/// A built pipeline ready to simulate.
+pub struct Pipeline {
+    pub fabric: Fabric,
+    /// Modules in pipeline (topological) order, source first, sink last.
+    pub modules: Vec<Box<dyn Module>>,
+}
+
+/// Result of a simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total cycles until the sink finished.
+    pub cycles: u64,
+    /// Per-module (name, stats, dsp).
+    pub modules: Vec<(String, super::stream::ModStats, usize)>,
+    /// Per-FIFO (pushes, max occupancy, capacity).
+    pub fifos: Vec<(u64, usize, usize)>,
+}
+
+impl SimReport {
+    /// The module with the most busy cycles — the pipeline bottleneck.
+    pub fn bottleneck(&self) -> Option<&(String, super::stream::ModStats, usize)> {
+        self.modules.iter().max_by_key(|(_, s, _)| s.busy)
+    }
+
+    /// Latency in seconds at a given clock (paper: 187 MHz on ZCU102).
+    pub fn latency_s(&self, clock_hz: f64) -> f64 {
+        self.cycles as f64 / clock_hz
+    }
+}
+
+impl fmt::Display for SimReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "cycles: {}", self.cycles)?;
+        writeln!(
+            f,
+            "{:<22} {:>10} {:>10} {:>10} {:>9} {:>9}",
+            "module", "busy", "stall_in", "stall_out", "consumed", "produced"
+        )?;
+        for (name, s, _) in &self.modules {
+            writeln!(
+                f,
+                "{:<22} {:>10} {:>10} {:>10} {:>9} {:>9}",
+                name, s.busy, s.stall_in, s.stall_out, s.consumed, s.produced
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Simulation failure.
+#[derive(Debug)]
+pub enum SimError {
+    /// No module made progress for the watchdog window.
+    Deadlock { cycle: u64, state: String },
+    /// Exceeded the cycle budget.
+    Timeout { budget: u64 },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::Deadlock { cycle, state } => {
+                write!(f, "pipeline deadlock at cycle {cycle}:\n{state}")
+            }
+            SimError::Timeout { budget } => write!(f, "simulation exceeded {budget} cycles"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+impl Pipeline {
+    /// Run until the last module (sink) reports done, or error out.
+    pub fn run(&mut self, max_cycles: u64) -> Result<SimReport, SimError> {
+        let n = self.modules.len();
+        assert!(n >= 2, "pipeline needs at least source and sink");
+        let mut cycle: u64 = 0;
+        let no_skip = std::env::var_os("ESDA_NO_SKIP").is_some();
+        let watchdog_window: u64 = 65_536;
+        let mut last_progress_cycle: u64 = 0;
+        let mut last_activity: u64 = 0;
+        while !self.modules[n - 1].done() {
+            if cycle >= max_cycles {
+                return Err(SimError::Timeout { budget: max_cycles });
+            }
+            // Step consumers before producers (reverse pipeline order): an
+            // item pushed this cycle is visible to its consumer next cycle,
+            // matching registered RTL handshakes.
+            let transfers_before = self.fabric.total_transfers();
+            for m in self.modules.iter_mut().rev() {
+                m.step(&mut self.fabric);
+            }
+            cycle += 1;
+            // Event-skip fast path (§Perf): when a cycle moved nothing on
+            // any channel, the pipeline state can only change when some
+            // compute countdown expires — jump straight to the earliest one.
+            // Exact: stalled modules stay stalled until a channel changes,
+            // and channels only change when a countdown completes.
+            if self.fabric.total_transfers() == transfers_before && !no_skip {
+                if let Some(k) = self
+                    .modules
+                    .iter()
+                    .filter_map(|m| m.next_event())
+                    .min()
+                {
+                    if k > 1 {
+                        for m in self.modules.iter_mut() {
+                            if m.next_event().is_some() {
+                                m.fast_forward(k - 1);
+                            }
+                        }
+                        cycle += k - 1;
+                    }
+                }
+            }
+            // Watchdog: total consumed+produced must advance.
+            if cycle - last_progress_cycle >= watchdog_window {
+                let activity: u64 = self
+                    .modules
+                    .iter()
+                    .map(|m| m.stats().consumed + m.stats().produced)
+                    .sum();
+                if activity == last_activity {
+                    return Err(SimError::Deadlock { cycle, state: self.dump_state() });
+                }
+                last_activity = activity;
+                last_progress_cycle = cycle;
+            }
+        }
+        Ok(SimReport {
+            cycles: cycle,
+            modules: self
+                .modules
+                .iter()
+                .map(|m| (m.name().to_string(), m.stats().clone(), m.dsp()))
+                .collect(),
+            fifos: self
+                .fabric
+                .chans
+                .iter()
+                .map(|c| (c.pushes, c.max_occupancy, c.cap))
+                .collect(),
+        })
+    }
+
+    fn dump_state(&self) -> String {
+        let mut s = String::new();
+        for m in &self.modules {
+            let st = m.stats();
+            s.push_str(&format!(
+                "  {}: done={} consumed={} produced={} stall_in={} stall_out={}\n",
+                m.name(),
+                m.done(),
+                st.consumed,
+                st.produced,
+                st.stall_in,
+                st.stall_out
+            ));
+        }
+        for (i, c) in self.fabric.chans.iter().enumerate() {
+            s.push_str(&format!("  chan{}: len={}/{}\n", i, c.len(), c.cap));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::pool_fc::{SinkMod, SourceMod};
+    use crate::sparse::{SparseMap, Token};
+
+    #[test]
+    fn source_to_sink_passthrough() {
+        let mut input: SparseMap<i8> = SparseMap::empty(4, 4, 2);
+        input.push(Token::new(1, 0), &[3, 4]);
+        input.push(Token::new(2, 3), &[5, 6]);
+        let mut fab = Fabric::default();
+        let ch = fab.add_chan(2);
+        let src = SourceMod::new("src", ch, &input);
+        let sink = SinkMod::new("sink", ch, 4, 4, 2);
+        let mut p = Pipeline { fabric: fab, modules: vec![Box::new(src), Box::new(sink)] };
+        let report = p.run(1000).unwrap();
+        assert!(report.cycles >= 3); // 2 beats + end
+        // Sink holds the map (downcast via report is not possible; re-check
+        // through counters).
+        assert_eq!(report.modules[1].1.consumed, 3);
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        // A sink that never consumes against a source with data ⇒ watchdog.
+        struct StuckSink {
+            stats: crate::arch::stream::ModStats,
+        }
+        impl crate::arch::module::Module for StuckSink {
+            fn name(&self) -> &str {
+                "stuck"
+            }
+            fn step(&mut self, _f: &mut Fabric) {}
+            fn stats(&self) -> &crate::arch::stream::ModStats {
+                &self.stats
+            }
+            fn done(&self) -> bool {
+                false
+            }
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+        }
+        let mut input: SparseMap<i8> = SparseMap::empty(4, 4, 1);
+        for x in 0..4u16 {
+            input.push(Token::new(x, 0), &[1]);
+        }
+        let mut fab = Fabric::default();
+        let ch = fab.add_chan(1);
+        let src = SourceMod::new("src", ch, &input);
+        let sink = StuckSink { stats: Default::default() };
+        let mut p = Pipeline { fabric: fab, modules: vec![Box::new(src), Box::new(sink)] };
+        match p.run(10_000_000) {
+            Err(SimError::Deadlock { state, .. }) => {
+                assert!(state.contains("stuck"));
+            }
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    /// The event-skip fast path must be cycle-exact: simulating with and
+    /// without it yields identical cycle counts and logits.
+    #[test]
+    fn event_skip_is_cycle_exact() {
+        use crate::arch::{simulate_inference, HwConfig};
+        use crate::events::{repr::histogram2_norm, DatasetProfile};
+        use crate::model::quant::quantize_network;
+        use crate::model::weights::FloatWeights;
+        use crate::model::NetworkSpec;
+        let p = DatasetProfile::n_mnist();
+        let spec = NetworkSpec::tiny(p.w, p.h, p.n_classes);
+        let w = FloatWeights::random(&spec, 21);
+        let mut rng = crate::util::Rng::new(4);
+        let mk = |rng: &mut crate::util::Rng, i: usize| {
+            let es = p.sample(i % p.n_classes, rng);
+            histogram2_norm(&es, p.w, p.h, 8.0)
+        };
+        let calib = vec![mk(&mut rng, 0), mk(&mut rng, 1)];
+        let qnet = quantize_network(&spec, &w, &calib);
+        // Mixed PFs exercise long countdowns (where skipping matters).
+        let mut cfg = HwConfig::uniform(spec.ops().len(), 1);
+        cfg.pf[0] = 16;
+        for s in 0..3u64 {
+            let input = mk(&mut rng, 5 + s as usize);
+            std::env::remove_var("ESDA_NO_SKIP");
+            let (l1, r1) = simulate_inference(&qnet, &cfg, &input, 1_000_000_000).unwrap();
+            std::env::set_var("ESDA_NO_SKIP", "1");
+            let (l2, r2) = simulate_inference(&qnet, &cfg, &input, 1_000_000_000).unwrap();
+            std::env::remove_var("ESDA_NO_SKIP");
+            assert_eq!(l1, l2);
+            assert_eq!(r1.cycles, r2.cycles, "skip changed cycle count");
+        }
+    }
+
+    #[test]
+    fn timeout_respected() {
+        let input: SparseMap<i8> = SparseMap::empty(4, 4, 1);
+        let mut fab = Fabric::default();
+        let ch = fab.add_chan(1);
+        let src = SourceMod::new("src", ch, &input);
+        struct NeverDone {
+            stats: crate::arch::stream::ModStats,
+        }
+        impl crate::arch::module::Module for NeverDone {
+            fn name(&self) -> &str {
+                "nd"
+            }
+            fn step(&mut self, f: &mut Fabric) {
+                f.chan(0).pop(); // consumes, so no deadlock — just never done
+            }
+            fn stats(&self) -> &crate::arch::stream::ModStats {
+                &self.stats
+            }
+            fn done(&self) -> bool {
+                false
+            }
+            fn as_any(&self) -> &dyn std::any::Any {
+                self
+            }
+        }
+        let sink = NeverDone { stats: Default::default() };
+        let mut p = Pipeline { fabric: fab, modules: vec![Box::new(src), Box::new(sink)] };
+        assert!(matches!(p.run(500), Err(SimError::Timeout { .. })));
+    }
+}

@@ -1,0 +1,577 @@
+//! Sparse Line Buffer modules — paper §3.3.4 (stride 1, Fig. 7) and
+//! §3.3.5 (stride 2, Fig. 8).
+//!
+//! The SLB buffers `k` rows of sparse features plus a token FIFO and a
+//! small occupancy bitmap. The head token denotes the next output window
+//! center; the *tail* (most recently seen input, including one waiting at
+//! the input — the paper's deadlock-freedom argument relies on the arrival
+//! of a later token proving earlier rows complete) decides when the window
+//! has all its data:
+//!
+//! - stride 1 (Eqn. 3): output tokens = input tokens; the head is valid
+//!   when the tail's ravel order passes the window's bottom-right corner
+//!   `(h.x+u, h.y+u)` (clipped), or the stream has ended.
+//! - stride 2 (Eqn. 4): candidate output tokens are kept in two FIFOs fed
+//!   by even/odd input rows; a token-merge unit emits the smaller of the
+//!   two downsampled heads once the tail passes the corresponding 2×2
+//!   grid's corner.
+//!
+//! Output is the [`Item::Window`] stream: the output token plus the
+//! (kernel-offset, feature) pairs of the nonzero neighbours — the "kernel
+//! offset stream" consumed by the k×k compute module.
+
+use super::module::Module;
+use super::stream::{ChanId, Fabric, Item, ModStats};
+use crate::sparse::Token;
+use std::collections::{HashMap, VecDeque};
+
+/// Shared buffer state for both strides.
+struct RowBuf {
+    /// (x, y) → feature (only rows within the live window are retained).
+    feats: HashMap<(u16, u16), Vec<i8>>,
+}
+
+impl RowBuf {
+    fn new() -> Self {
+        RowBuf { feats: HashMap::new() }
+    }
+    fn insert(&mut self, t: Token, f: Vec<i8>) {
+        self.feats.insert((t.x, t.y), f);
+    }
+    /// Drop all rows strictly below `min_y`.
+    fn evict_below(&mut self, min_y: isize) {
+        if min_y <= 0 {
+            return;
+        }
+        self.feats.retain(|&(_, y), _| (y as isize) >= min_y);
+    }
+    /// Gather the k×k window centered per `origin` (top-left input coord of
+    /// the window): returns (offset, feature) pairs in offset order.
+    fn gather(&self, ox: isize, oy: isize, k: usize, w: usize, h: usize) -> Vec<(u8, Vec<i8>)> {
+        let mut out = Vec::new();
+        for dy in 0..k as isize {
+            for dx in 0..k as isize {
+                let x = ox + dx;
+                let y = oy + dy;
+                if x < 0 || y < 0 || x as usize >= w || y as usize >= h {
+                    continue;
+                }
+                if let Some(f) = self.feats.get(&(x as u16, y as u16)) {
+                    out.push(((dy as usize * k + dx as usize) as u8, f.clone()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Effective tail: the later of the last-accepted token and the token
+/// currently presented at the input (not yet consumed). `None` means no
+/// information; `end_seen` short-circuits validity.
+fn effective_tail(last: Option<Token>, input_peek: Option<&Item>) -> (Option<Token>, bool) {
+    match input_peek {
+        Some(Item::End) => (last, true),
+        Some(Item::Feat { t, .. }) => {
+            let t = *t;
+            (Some(match last {
+                Some(l) if l > t => l,
+                _ => t,
+            }), false)
+        }
+        _ => (last, false),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stride 1
+// ---------------------------------------------------------------------------
+
+pub struct SlbS1 {
+    name: String,
+    in_ch: ChanId,
+    out_ch: ChanId,
+    k: usize,
+    u: usize,
+    w: usize,
+    h: usize,
+    buf: RowBuf,
+    toks: VecDeque<Token>,
+    last_in: Option<Token>,
+    in_end: bool,
+    stats: ModStats,
+    done: bool,
+}
+
+impl SlbS1 {
+    pub fn new(name: impl Into<String>, in_ch: ChanId, out_ch: ChanId, k: usize, w: usize, h: usize) -> Self {
+        assert!(k % 2 == 1 && k >= 3);
+        SlbS1 {
+            name: name.into(),
+            in_ch,
+            out_ch,
+            k,
+            u: (k - 1) / 2,
+            w,
+            h,
+            buf: RowBuf::new(),
+            toks: VecDeque::new(),
+            last_in: None,
+            in_end: false,
+            stats: ModStats::default(),
+            done: false,
+        }
+    }
+
+    /// Window corner (bottom-right, clipped) whose arrival proves the
+    /// head's window complete.
+    fn corner_ravel(&self, head: Token) -> usize {
+        let cx = (head.x as usize + self.u).min(self.w - 1);
+        let cy = (head.y as usize + self.u).min(self.h - 1);
+        cy * self.w + cx
+    }
+
+    fn head_valid(&self, fab: &Fabric) -> bool {
+        let head = match self.toks.front() {
+            Some(h) => *h,
+            None => return false,
+        };
+        if self.in_end {
+            return true;
+        }
+        let (tail, end_at_input) = effective_tail(self.last_in, fab.peek(self.in_ch));
+        if end_at_input {
+            return true;
+        }
+        match tail {
+            Some(t) => t.ravel(self.w) > self.corner_ravel(head),
+            None => false,
+        }
+    }
+}
+
+impl Module for SlbS1 {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        // Emit phase: one window (or End) per cycle.
+        let mut emitted = false;
+        if fab.can_push(self.out_ch) {
+            if self.head_valid(fab) {
+                let head = *self.toks.front().unwrap();
+                let offs = self.buf.gather(
+                    head.x as isize - self.u as isize,
+                    head.y as isize - self.u as isize,
+                    self.k,
+                    self.w,
+                    self.h,
+                );
+                debug_assert!(!offs.is_empty(), "window must contain its own center");
+                fab.chan(self.out_ch).push(Item::Window { t: head, offs });
+                self.toks.pop_front();
+                self.buf.evict_below(head.y as isize - self.u as isize);
+                self.stats.produced += 1;
+                self.stats.busy += 1;
+                emitted = true;
+            } else if self.in_end && self.toks.is_empty() && !self.done {
+                fab.chan(self.out_ch).push(Item::End);
+                self.done = true;
+                self.stats.produced += 1;
+                emitted = true;
+            }
+        } else {
+            self.stats.stall_out += 1;
+        }
+
+        // Intake phase: the paper's ready condition — accept only while the
+        // new token still lies within the buffered rows of the current head
+        // (r = t.y − h.y ≤ u); unconditionally when no head is pending.
+        if !self.in_end {
+            let accept = match (fab.peek(self.in_ch), self.toks.front()) {
+                (Some(Item::Feat { t, .. }), Some(h)) => t.y as isize - h.y as isize <= self.u as isize,
+                (Some(Item::Feat { .. }), None) => true,
+                (Some(Item::End), _) => true,
+                _ => false,
+            };
+            if accept {
+                match fab.chan(self.in_ch).pop() {
+                    Some(Item::Feat { t, f }) => {
+                        self.buf.insert(t, f);
+                        self.toks.push_back(t);
+                        self.last_in = Some(t);
+                        self.stats.consumed += 1;
+                    }
+                    Some(Item::End) => {
+                        self.in_end = true;
+                        self.stats.consumed += 1;
+                    }
+                    _ => unreachable!(),
+                }
+            } else if !emitted {
+                self.stats.stall_in += 1;
+            }
+        }
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stride 2
+// ---------------------------------------------------------------------------
+
+pub struct SlbS2 {
+    name: String,
+    in_ch: ChanId,
+    out_ch: ChanId,
+    k: usize,
+    pad: usize,
+    w: usize,
+    h: usize,
+    ow: usize,
+    buf: RowBuf,
+    /// Downsampled candidate tokens from even / odd input rows (paper's two
+    /// token FIFOs), consecutive duplicates merged at insert.
+    even_q: VecDeque<Token>,
+    odd_q: VecDeque<Token>,
+    last_in: Option<Token>,
+    in_end: bool,
+    stats: ModStats,
+    done: bool,
+}
+
+impl SlbS2 {
+    pub fn new(name: impl Into<String>, in_ch: ChanId, out_ch: ChanId, k: usize, w: usize, h: usize) -> Self {
+        assert!(k % 2 == 1 && k >= 3);
+        SlbS2 {
+            name: name.into(),
+            in_ch,
+            out_ch,
+            k,
+            pad: (k - 1) / 2,
+            w,
+            h,
+            ow: (w + 1) / 2,
+            buf: RowBuf::new(),
+            even_q: VecDeque::new(),
+            odd_q: VecDeque::new(),
+            last_in: None,
+            in_end: false,
+            stats: ModStats::default(),
+            done: false,
+        }
+    }
+
+    /// Token-merge unit (Eqn. 4): the next output token is the smaller of
+    /// the two downsampled heads.
+    fn merged_head(&self) -> Option<Token> {
+        match (self.even_q.front(), self.odd_q.front()) {
+            (Some(&e), Some(&o)) => Some(if o.ravel(self.ow) < e.ravel(self.ow) { o } else { e }),
+            (Some(&e), None) => Some(e),
+            (None, Some(&o)) => Some(o),
+            (None, None) => None,
+        }
+    }
+
+    /// Bottom-right input corner of the candidate's window: covers both the
+    /// 2×2 grid (token rule) and the k×k window (feature rule); for k=3,
+    /// pad=1 they coincide at (2gx+1, 2gy+1).
+    fn corner_ravel(&self, g: Token) -> usize {
+        let cx = (2 * g.x as usize + self.k - 1 - self.pad).min(self.w - 1);
+        let cy = (2 * g.y as usize + self.k - 1 - self.pad).min(self.h - 1);
+        cy * self.w + cx
+    }
+
+    fn head_valid(&self, fab: &Fabric) -> bool {
+        let g = match self.merged_head() {
+            Some(g) => g,
+            None => return false,
+        };
+        if self.in_end {
+            return true;
+        }
+        let (tail, end_at_input) = effective_tail(self.last_in, fab.peek(self.in_ch));
+        if end_at_input {
+            return true;
+        }
+        match tail {
+            Some(t) => t.ravel(self.w) > self.corner_ravel(g),
+            None => false,
+        }
+    }
+
+    fn pop_head(&mut self, g: Token) {
+        if self.even_q.front() == Some(&g) {
+            self.even_q.pop_front();
+        }
+        if self.odd_q.front() == Some(&g) {
+            self.odd_q.pop_front();
+        }
+    }
+}
+
+impl Module for SlbS2 {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, fab: &mut Fabric) {
+        let mut emitted = false;
+        if fab.can_push(self.out_ch) {
+            if self.head_valid(fab) {
+                let g = self.merged_head().unwrap();
+                let offs = self.buf.gather(
+                    2 * g.x as isize - self.pad as isize,
+                    2 * g.y as isize - self.pad as isize,
+                    self.k,
+                    self.w,
+                    self.h,
+                );
+                debug_assert!(!offs.is_empty(), "stride-2 window must contain a nonzero");
+                fab.chan(self.out_ch).push(Item::Window { t: g, offs });
+                self.pop_head(g);
+                self.buf.evict_below(2 * g.y as isize - self.pad as isize);
+                self.stats.produced += 1;
+                self.stats.busy += 1;
+                emitted = true;
+            } else if self.in_end && self.even_q.is_empty() && self.odd_q.is_empty() && !self.done {
+                fab.chan(self.out_ch).push(Item::End);
+                self.done = true;
+                self.stats.produced += 1;
+                emitted = true;
+            }
+        } else {
+            self.stats.stall_out += 1;
+        }
+
+        if !self.in_end {
+            // Ready: new input must stay within k input rows of the pending
+            // head's grid (bounds the row buffer as in the stride-1 case).
+            let accept = match (fab.peek(self.in_ch), self.merged_head()) {
+                (Some(Item::Feat { t, .. }), Some(g)) => {
+                    t.y as isize - (2 * g.y as isize) <= (self.k - 1) as isize
+                }
+                (Some(Item::Feat { .. }), None) => true,
+                (Some(Item::End), _) => true,
+                _ => false,
+            };
+            if accept {
+                match fab.chan(self.in_ch).pop() {
+                    Some(Item::Feat { t, f }) => {
+                        self.buf.insert(t, f);
+                        let cand = Token::new(t.x / 2, t.y / 2);
+                        let q = if t.y % 2 == 0 { &mut self.even_q } else { &mut self.odd_q };
+                        if q.back() != Some(&cand) {
+                            q.push_back(cand);
+                        }
+                        self.last_in = Some(t);
+                        self.stats.consumed += 1;
+                    }
+                    Some(Item::End) => {
+                        self.in_end = true;
+                        self.stats.consumed += 1;
+                    }
+                    _ => unreachable!(),
+                }
+            } else if !emitted {
+                self.stats.stall_in += 1;
+            }
+        }
+    }
+
+    fn stats(&self) -> &ModStats {
+        &self.stats
+    }
+
+    fn done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseMap;
+    use crate::util::propcheck::check;
+
+    /// Drive an SLB standalone: feed a sparse map, collect windows, check
+    /// tokens and gathered neighbourhoods against a direct computation.
+    fn run_slb(input: &SparseMap<i8>, k: usize, stride: usize) -> Vec<(Token, Vec<(u8, Vec<i8>)>)> {
+        let mut fab = Fabric::default();
+        let in_ch = fab.add_chan(2);
+        let out_ch = fab.add_chan(2);
+        let mut slb: Box<dyn Module> = if stride == 1 {
+            Box::new(SlbS1::new("slb", in_ch, out_ch, k, input.w, input.h))
+        } else {
+            Box::new(SlbS2::new("slb", in_ch, out_ch, k, input.w, input.h))
+        };
+        let mut feed = input.tokens.iter().enumerate();
+        let mut next = feed.next();
+        let mut sent_end = false;
+        let mut out = Vec::new();
+        let mut cycles = 0u64;
+        let mut finished = false;
+        while !finished && cycles < 2_000_000 {
+            if fab.can_push(in_ch) {
+                if let Some((i, t)) = next {
+                    fab.chan(in_ch).push(Item::Feat { t: *t, f: input.feat(i).to_vec() });
+                    next = feed.next();
+                } else if !sent_end {
+                    fab.chan(in_ch).push(Item::End);
+                    sent_end = true;
+                }
+            }
+            slb.step(&mut fab);
+            while let Some(item) = fab.chan(out_ch).pop() {
+                match item {
+                    Item::Window { t, offs } => out.push((t, offs)),
+                    Item::End => finished = true,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+            cycles += 1;
+        }
+        assert!(finished, "SLB deadlocked or overran (stride {stride})");
+        out
+    }
+
+    fn random_i8_map(g: &mut crate::util::propcheck::Gen, w: usize, h: usize, c: usize, p: f64) -> SparseMap<i8> {
+        let mut m = SparseMap::empty(w, h, c);
+        for y in 0..h {
+            for x in 0..w {
+                if g.chance(p) {
+                    let f: Vec<i8> = (0..c).map(|_| g.i64(-100, 100) as i8).collect();
+                    m.push(Token::new(x as u16, y as u16), &f);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn s1_emits_every_token_in_order_with_correct_windows() {
+        check("SLB s1 token identity + window contents", 48, |g| {
+            let w = g.usize(3, 16);
+            let h = g.usize(3, 16);
+            let c = g.usize(1, 3);
+            let m = random_i8_map(g, w, h, c, 0.35);
+            let out = run_slb(&m, 3, 1);
+            // Submanifold: output tokens == input tokens, in order.
+            let toks: Vec<Token> = out.iter().map(|(t, _)| *t).collect();
+            assert_eq!(toks, m.tokens);
+            let bm = m.bitmap();
+            for (t, offs) in &out {
+                // Expected offsets: every in-bounds nonzero neighbour.
+                let mut want = Vec::new();
+                for dy in 0..3isize {
+                    for dx in 0..3isize {
+                        let x = t.x as isize + dx - 1;
+                        let y = t.y as isize + dy - 1;
+                        if x >= 0 && y >= 0 && (x as usize) < w && (y as usize) < h && bm.get(x as usize, y as usize) {
+                            want.push((dy * 3 + dx) as u8);
+                        }
+                    }
+                }
+                let got: Vec<u8> = offs.iter().map(|(o, _)| *o).collect();
+                assert_eq!(got, want, "token ({},{})", t.x, t.y);
+                // Features must match the map.
+                for (o, f) in offs {
+                    let dy = (*o as usize / 3) as isize - 1;
+                    let dx = (*o as usize % 3) as isize - 1;
+                    let idx = m.find((t.x as isize + dx) as u16, (t.y as isize + dy) as u16).unwrap();
+                    assert_eq!(f.as_slice(), m.feat(idx));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn s2_tokens_match_downsample_rule_in_order() {
+        check("SLB s2 token merge = grid rule", 48, |g| {
+            let w = g.usize(4, 16);
+            let h = g.usize(4, 16);
+            let m = random_i8_map(g, w, h, 2, 0.3);
+            let out = run_slb(&m, 3, 2);
+            let toks: Vec<Token> = out.iter().map(|(t, _)| *t).collect();
+            let want: Vec<Token> = crate::sparse::conv::downsample_tokens(&m.bitmap());
+            assert_eq!(toks, want);
+            // Windows gather the k×k neighbourhood around (2gx, 2gy).
+            let bm = m.bitmap();
+            for (t, offs) in &out {
+                let mut want_offs = Vec::new();
+                for dy in 0..3isize {
+                    for dx in 0..3isize {
+                        let x = 2 * t.x as isize + dx - 1;
+                        let y = 2 * t.y as isize + dy - 1;
+                        if x >= 0 && y >= 0 && (x as usize) < w && (y as usize) < h && bm.get(x as usize, y as usize) {
+                            want_offs.push((dy * 3 + dx) as u8);
+                        }
+                    }
+                }
+                let got: Vec<u8> = offs.iter().map(|(o, _)| *o).collect();
+                assert_eq!(got, want_offs, "grid token ({},{})", t.x, t.y);
+            }
+        });
+    }
+
+    #[test]
+    fn s1_handles_k5() {
+        check("SLB s1 k=5 windows", 24, |g| {
+            let w = g.usize(5, 14);
+            let h = g.usize(5, 14);
+            let m = random_i8_map(g, w, h, 1, 0.3);
+            let out = run_slb(&m, 5, 1);
+            assert_eq!(out.len(), m.nnz());
+            let bm = m.bitmap();
+            for (t, offs) in &out {
+                let n_want = (0..25)
+                    .filter(|&o| {
+                        let dy = o as isize / 5 - 2;
+                        let dx = o as isize % 5 - 2;
+                        let x = t.x as isize + dx;
+                        let y = t.y as isize + dy;
+                        x >= 0 && y >= 0 && (x as usize) < w && (y as usize) < h && bm.get(x as usize, y as usize)
+                    })
+                    .count();
+                assert_eq!(offs.len(), n_want);
+            }
+        });
+    }
+
+    #[test]
+    fn empty_input_just_ends() {
+        let m: SparseMap<i8> = SparseMap::empty(8, 8, 1);
+        assert_eq!(run_slb(&m, 3, 1).len(), 0);
+        assert_eq!(run_slb(&m, 3, 2).len(), 0);
+    }
+
+    #[test]
+    fn dense_input_no_deadlock() {
+        let mut m: SparseMap<i8> = SparseMap::empty(9, 7, 1);
+        for y in 0..7 {
+            for x in 0..9 {
+                m.push(Token::new(x, y), &[1]);
+            }
+        }
+        let out = run_slb(&m, 3, 1);
+        assert_eq!(out.len(), 63);
+        // Interior windows must have all 9 offsets.
+        let center = out.iter().find(|(t, _)| t.x == 4 && t.y == 3).unwrap();
+        assert_eq!(center.1.len(), 9);
+    }
+}

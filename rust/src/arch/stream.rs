@@ -1,0 +1,169 @@
+//! Hardware stream fabric: items, bounded FIFOs, and the shared fabric the
+//! modules communicate through.
+//!
+//! A FIFO models an AXI-stream-like channel with a compile-time depth.
+//! One item transfer per clock edge per endpoint; `ready` = not full,
+//! `valid` = not empty — the handshake of Eqn. 1's token-feature interface.
+
+use crate::sparse::Token;
+use std::collections::VecDeque;
+
+/// One beat on a channel.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    /// Token + int8 feature vector (the unified sparse token-feature
+    /// interface).
+    Feat { t: Token, f: Vec<i8> },
+    /// A gathered k×k window: output token + (kernel-offset, feature)
+    /// pairs in offset order — the SLB → compute-module stream (§3.3.3).
+    Window { t: Token, offs: Vec<(u8, Vec<i8>)> },
+    /// End-of-stream marker (the `.end` flag of Eqn. 1).
+    End,
+    /// Classifier output (PoolFc → sink).
+    Logits(Vec<i32>),
+}
+
+impl Item {
+    pub fn is_end(&self) -> bool {
+        matches!(self, Item::End)
+    }
+}
+
+/// Bounded FIFO channel.
+#[derive(Debug)]
+pub struct Fifo {
+    pub cap: usize,
+    q: VecDeque<Item>,
+    /// Cumulative counters for occupancy statistics.
+    pub pushes: u64,
+    pub max_occupancy: usize,
+    /// Pushes + successful pops (event-skip activity signal).
+    pub transfers: u64,
+}
+
+impl Fifo {
+    pub fn new(cap: usize) -> Fifo {
+        assert!(cap >= 1);
+        Fifo { cap, q: VecDeque::with_capacity(cap), pushes: 0, max_occupancy: 0, transfers: 0 }
+    }
+
+    #[inline]
+    pub fn can_push(&self) -> bool {
+        self.q.len() < self.cap
+    }
+
+    #[inline]
+    pub fn push(&mut self, item: Item) {
+        debug_assert!(self.can_push(), "push on full FIFO");
+        self.q.push_back(item);
+        self.pushes += 1;
+        self.transfers += 1;
+        self.max_occupancy = self.max_occupancy.max(self.q.len());
+    }
+
+    #[inline]
+    pub fn peek(&self) -> Option<&Item> {
+        self.q.front()
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<Item> {
+        let item = self.q.pop_front();
+        if item.is_some() {
+            self.transfers += 1;
+        }
+        item
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+/// Channel id into the fabric.
+pub type ChanId = usize;
+
+/// The set of channels a pipeline's modules communicate through.
+#[derive(Debug, Default)]
+pub struct Fabric {
+    pub chans: Vec<Fifo>,
+    /// Monotone counter of channel transfers (pushes + pops) — the
+    /// scheduler's cheap "did anything move this cycle" signal for the
+    /// event-skip fast path (§Perf).
+    pub activity: u64,
+}
+
+impl Fabric {
+    pub fn add_chan(&mut self, cap: usize) -> ChanId {
+        self.chans.push(Fifo::new(cap));
+        self.chans.len() - 1
+    }
+    #[inline]
+    pub fn chan(&mut self, id: ChanId) -> &mut Fifo {
+        &mut self.chans[id]
+    }
+
+    /// Total transfers across all channels (pushes + successful pops).
+    pub fn total_transfers(&self) -> u64 {
+        self.chans.iter().map(|c| c.transfers).sum()
+    }
+    #[inline]
+    pub fn can_push(&self, id: ChanId) -> bool {
+        self.chans[id].can_push()
+    }
+    #[inline]
+    pub fn peek(&self, id: ChanId) -> Option<&Item> {
+        self.chans[id].peek()
+    }
+}
+
+/// Per-module activity counters (bottleneck analysis, Fig. 13 / §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct ModStats {
+    /// Cycles doing useful work (compute countdown active).
+    pub busy: u64,
+    /// Cycles stalled waiting for input (starved).
+    pub stall_in: u64,
+    /// Cycles stalled on output backpressure.
+    pub stall_out: u64,
+    /// Items consumed / produced.
+    pub consumed: u64,
+    pub produced: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_bounded_fifo_order() {
+        let mut f = Fifo::new(2);
+        assert!(f.can_push());
+        f.push(Item::End);
+        f.push(Item::Logits(vec![1]));
+        assert!(!f.can_push());
+        assert!(f.peek().unwrap().is_end());
+        assert!(f.pop().unwrap().is_end());
+        assert_eq!(f.pop(), Some(Item::Logits(vec![1])));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.pushes, 2);
+        assert_eq!(f.max_occupancy, 2);
+    }
+
+    #[test]
+    fn fabric_allocates_channels() {
+        let mut fab = Fabric::default();
+        let a = fab.add_chan(4);
+        let b = fab.add_chan(8);
+        assert_ne!(a, b);
+        fab.chan(a).push(Item::End);
+        assert!(fab.peek(a).unwrap().is_end());
+        assert!(fab.peek(b).is_none());
+    }
+}

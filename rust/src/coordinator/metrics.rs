@@ -1,0 +1,94 @@
+//! Latency/throughput metrics for the serving pipeline.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Per-request timing record.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTiming {
+    /// End-to-end latency (enqueue → classified), seconds.
+    pub e2e_s: f64,
+    /// Accelerator-stage service time, seconds.
+    pub service_s: f64,
+    /// Simulated hardware cycles (simulator backend only).
+    pub sim_cycles: Option<u64>,
+}
+
+/// Aggregated pipeline metrics.
+#[derive(Debug)]
+pub struct Metrics {
+    pub started: Instant,
+    pub timings: Vec<RequestTiming>,
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics { started: Instant::now(), timings: Vec::new(), correct: 0, total: 0 }
+    }
+}
+
+impl Metrics {
+    pub fn record(&mut self, t: RequestTiming, correct: bool) {
+        self.timings.push(t);
+        self.total += 1;
+        if correct {
+            self.correct += 1;
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        self.correct as f64 / self.total as f64
+    }
+
+    pub fn e2e_summary(&self) -> Summary {
+        Summary::from(&self.timings.iter().map(|t| t.e2e_s).collect::<Vec<_>>())
+    }
+
+    pub fn service_summary(&self) -> Summary {
+        Summary::from(&self.timings.iter().map(|t| t.service_s).collect::<Vec<_>>())
+    }
+
+    /// Wall-clock throughput (requests/s).
+    pub fn throughput(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            return f64::NAN;
+        }
+        self.total as f64 / dt
+    }
+
+    /// Mean simulated hardware latency in ms at `clock_hz`, when available.
+    pub fn mean_sim_latency_ms(&self, clock_hz: f64) -> Option<f64> {
+        let cycles: Vec<f64> = self
+            .timings
+            .iter()
+            .filter_map(|t| t.sim_cycles.map(|c| c as f64))
+            .collect();
+        if cycles.is_empty() {
+            return None;
+        }
+        Some(cycles.iter().sum::<f64>() / cycles.len() as f64 / clock_hz * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates() {
+        let mut m = Metrics::default();
+        m.record(RequestTiming { e2e_s: 0.010, service_s: 0.002, sim_cycles: Some(1000) }, true);
+        m.record(RequestTiming { e2e_s: 0.020, service_s: 0.004, sim_cycles: Some(3000) }, false);
+        assert_eq!(m.total, 2);
+        assert!((m.accuracy() - 0.5).abs() < 1e-12);
+        assert!((m.e2e_summary().mean() - 0.015).abs() < 1e-9);
+        let lat = m.mean_sim_latency_ms(1e6).unwrap();
+        assert!((lat - 2.0).abs() < 1e-9); // 2000 cycles avg @1MHz = 2ms
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 serving coordinator: a threaded event-vision pipeline that composes
+//! the substrates into the deployable system of Fig. 2 —
+//!
+//! ```text
+//! event source → representation builder → accelerator → classifications
+//!   (camera/        (histogram2, on the     (cycle-sim or
+//!    synthetic)      "PS" thread)            PJRT engine)
+//! ```
+//!
+//! Stages run on std threads connected by bounded channels (backpressure),
+//! since the offline build vendors no async runtime. Throughput/latency
+//! metrics are collected per stage.
+pub mod pipeline;
+pub mod metrics;
+
+pub use pipeline::{run_pipeline, Backend, PipelineConfig, PipelineResult};

@@ -1,0 +1,92 @@
+//! Address-Event Representation (AER) primitives.
+//!
+//! Each event is `[x, y, p, t]` (paper §2.1): pixel coordinate, polarity of
+//! the intensity change, and a microsecond timestamp.
+
+/// One DVS event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Timestamp in microseconds from recording start.
+    pub t_us: u32,
+    pub x: u16,
+    pub y: u16,
+    /// `true` = ON (intensity increase), `false` = OFF.
+    pub polarity: bool,
+}
+
+/// Borrowed view over a time-ordered event slice with window helpers.
+pub struct EventSlice<'a>(pub &'a [Event]);
+
+impl<'a> EventSlice<'a> {
+    /// Events with `t ∈ [t0, t1)`, via binary search (slice must be
+    /// time-sorted).
+    pub fn window(&self, t0: u32, t1: u32) -> &'a [Event] {
+        let lo = self.0.partition_point(|e| e.t_us < t0);
+        let hi = self.0.partition_point(|e| e.t_us < t1);
+        &self.0[lo..hi]
+    }
+
+    /// Split into fixed-interval windows covering the whole recording
+    /// (paper §4.1: "clips event recordings with a fixed time interval").
+    pub fn fixed_windows(&self, interval_us: u32) -> Vec<&'a [Event]> {
+        if self.0.is_empty() {
+            return Vec::new();
+        }
+        let t_end = self.0.last().unwrap().t_us;
+        let mut out = Vec::new();
+        let mut t0 = 0u32;
+        while t0 <= t_end {
+            let w = self.window(t0, t0.saturating_add(interval_us));
+            if !w.is_empty() {
+                out.push(w);
+            }
+            t0 = t0.saturating_add(interval_us);
+        }
+        out
+    }
+}
+
+/// Check events are time-sorted (non-strict: DVS readout can emit several
+/// events in the same microsecond).
+pub fn is_time_sorted(events: &[Event]) -> bool {
+    events.windows(2).all(|w| w[0].t_us <= w[1].t_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u32) -> Event {
+        Event { t_us: t, x: 0, y: 0, polarity: true }
+    }
+
+    #[test]
+    fn window_selects_half_open_range() {
+        let es = vec![ev(0), ev(10), ev(20), ev(30)];
+        let s = EventSlice(&es);
+        let w = s.window(10, 30);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].t_us, 10);
+        assert_eq!(w[1].t_us, 20);
+    }
+
+    #[test]
+    fn fixed_windows_cover_all_events() {
+        let es: Vec<Event> = (0..100).map(|i| ev(i * 7)).collect();
+        let s = EventSlice(&es);
+        let ws = s.fixed_windows(100);
+        let total: usize = ws.iter().map(|w| w.len()).sum();
+        assert_eq!(total, es.len());
+        for w in &ws {
+            assert!(!w.is_empty());
+            let span = w.last().unwrap().t_us - w.first().unwrap().t_us;
+            assert!(span < 100);
+        }
+    }
+
+    #[test]
+    fn sorted_check() {
+        assert!(is_time_sorted(&[ev(1), ev(1), ev(2)]));
+        assert!(!is_time_sorted(&[ev(2), ev(1)]));
+    }
+}

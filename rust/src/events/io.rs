@@ -1,0 +1,193 @@
+//! Binary container for generated event datasets — the bridge from the
+//! rust generator to the python training path (`esda gen-data` writes,
+//! `python/compile/data.py` reads with `numpy.fromfile`).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   u32 = 0x45534441 ("ESDA")
+//! version u32 = 1
+//! w, h    u32, u32
+//! n       u32                     number of samples
+//! then per sample:
+//!   label    u32
+//!   n_events u32
+//!   events   n_events × { t_us u32, x u16, y u16, polarity u8, pad u8 }
+//! ```
+
+use super::aer::Event;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+pub const MAGIC: u32 = 0x4553_4441;
+pub const VERSION: u32 = 1;
+
+/// One labelled recording.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub label: u32,
+    pub events: Vec<Event>,
+}
+
+fn put_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+fn put_u16(w: &mut impl Write, v: u16) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+fn get_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn get_u16(r: &mut impl Read) -> std::io::Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+/// Write a dataset file.
+pub fn write_dataset(path: &Path, w: usize, h: usize, samples: &[Sample]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = BufWriter::new(File::create(path)?);
+    put_u32(&mut f, MAGIC)?;
+    put_u32(&mut f, VERSION)?;
+    put_u32(&mut f, w as u32)?;
+    put_u32(&mut f, h as u32)?;
+    put_u32(&mut f, samples.len() as u32)?;
+    for s in samples {
+        put_u32(&mut f, s.label)?;
+        put_u32(&mut f, s.events.len() as u32)?;
+        for e in &s.events {
+            put_u32(&mut f, e.t_us)?;
+            put_u16(&mut f, e.x)?;
+            put_u16(&mut f, e.y)?;
+            f.write_all(&[e.polarity as u8, 0u8])?;
+        }
+    }
+    f.flush()
+}
+
+/// Read a dataset file. Returns (w, h, samples).
+pub fn read_dataset(path: &Path) -> std::io::Result<(usize, usize, Vec<Sample>)> {
+    let mut f = BufReader::new(File::open(path)?);
+    let magic = get_u32(&mut f)?;
+    if magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad magic {magic:#x}"),
+        ));
+    }
+    let version = get_u32(&mut f)?;
+    if version != VERSION {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unsupported version {version}"),
+        ));
+    }
+    let w = get_u32(&mut f)? as usize;
+    let h = get_u32(&mut f)? as usize;
+    let n = get_u32(&mut f)? as usize;
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = get_u32(&mut f)?;
+        let ne = get_u32(&mut f)? as usize;
+        let mut events = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            let t_us = get_u32(&mut f)?;
+            let x = get_u16(&mut f)?;
+            let y = get_u16(&mut f)?;
+            let mut pb = [0u8; 2];
+            f.read_exact(&mut pb)?;
+            events.push(Event { t_us, x, y, polarity: pb[0] != 0 });
+        }
+        samples.push(Sample { label, events });
+    }
+    Ok((w, h, samples))
+}
+
+/// Generate and write a full train/test dataset for a profile:
+/// `n_per_class` train + `n_per_class_test` test samples per class.
+/// Returns the two file paths.
+pub fn generate_dataset_files(
+    profile: &super::DatasetProfile,
+    out_dir: &Path,
+    n_per_class: usize,
+    n_per_class_test: usize,
+    seed: u64,
+) -> std::io::Result<(std::path::PathBuf, std::path::PathBuf)> {
+    let mut rng = crate::util::Rng::new(seed);
+    let make = |n: usize, rng: &mut crate::util::Rng| -> Vec<Sample> {
+        let mut out = Vec::new();
+        for class in 0..profile.n_classes {
+            for _ in 0..n {
+                out.push(Sample {
+                    label: class as u32,
+                    events: profile.sample(class, rng),
+                });
+            }
+        }
+        out
+    };
+    let train = make(n_per_class, &mut rng);
+    let test = make(n_per_class_test, &mut rng);
+    let train_path = out_dir.join(format!("{}_train.esda", profile.name));
+    let test_path = out_dir.join(format!("{}_test.esda", profile.name));
+    write_dataset(&train_path, profile.w, profile.h, &train)?;
+    write_dataset(&test_path, profile.w, profile.h, &test)?;
+    Ok((train_path, test_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::DatasetProfile;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("esda_io_test");
+        let path = dir.join("t.esda");
+        let samples = vec![
+            Sample {
+                label: 3,
+                events: vec![
+                    Event { t_us: 10, x: 1, y: 2, polarity: true },
+                    Event { t_us: 20, x: 3, y: 4, polarity: false },
+                ],
+            },
+            Sample { label: 0, events: vec![] },
+        ];
+        write_dataset(&path, 64, 48, &samples).unwrap();
+        let (w, h, back) = read_dataset(&path).unwrap();
+        assert_eq!((w, h), (64, 48));
+        assert_eq!(back, samples);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("esda_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.esda");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(read_dataset(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn generate_files_balanced_labels() {
+        let dir = std::env::temp_dir().join(format!("esda_io_gen_{}", std::process::id()));
+        let p = DatasetProfile::n_mnist();
+        let (train, test) = generate_dataset_files(&p, &dir, 2, 1, 7).unwrap();
+        let (_, _, ts) = read_dataset(&train).unwrap();
+        let (_, _, vs) = read_dataset(&test).unwrap();
+        assert_eq!(ts.len(), p.n_classes * 2);
+        assert_eq!(vs.len(), p.n_classes);
+        for c in 0..p.n_classes as u32 {
+            assert_eq!(ts.iter().filter(|s| s.label == c).count(), 2);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

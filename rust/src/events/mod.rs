@@ -1,0 +1,23 @@
+//! Event-camera substrate: AER events, synthetic dataset generation, and
+//! 2D representation construction.
+//!
+//! The paper evaluates on five event datasets (DvsGesture, RoShamBo17,
+//! ASL-DVS, N-MNIST, N-Caltech101) that are not redistributable here, so
+//! this module provides a **synthetic event generator** whose per-dataset
+//! profiles match the published spatial resolutions and input nonzero
+//! ratios (Fig. 12: 1.1%–23.1%). Scene models emit AER events from moving
+//! shapes exactly the way a DVS does — intensity edges in motion produce
+//! polarity-signed events — so the *spatial sparsity structure* that every
+//! downstream result depends on is preserved (see DESIGN.md §2).
+//!
+//! The same generated datasets are consumed by the python training path via
+//! the binary container in [`io`] (`esda gen-data` → `artifacts/data/`), so
+//! training and hardware simulation see identical inputs.
+pub mod aer;
+pub mod synth;
+pub mod profile;
+pub mod repr;
+pub mod io;
+
+pub use aer::{Event, EventSlice};
+pub use profile::DatasetProfile;

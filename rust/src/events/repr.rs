@@ -1,0 +1,133 @@
+//! 2D representations constructed from event windows (paper §2.1/§4.1):
+//! the 2-channel **event histogram** (positive/negative counts — the
+//! representation used in all the paper's experiments) and a **time
+//! surface** alternative (exponential decay of most-recent timestamps) to
+//! demonstrate the interface is representation-agnostic.
+
+use super::aer::Event;
+use crate::sparse::{SparseMap, Token};
+
+/// 2-channel event histogram: `feat = [#ON, #OFF]` per pixel, over the
+/// given events. Produces a [`SparseMap<f32>`] with tokens at every pixel
+/// that received at least one event.
+pub fn histogram2(events: &[Event], w: usize, h: usize) -> SparseMap<f32> {
+    let mut counts = vec![[0f32; 2]; w * h];
+    let mut touched: Vec<u32> = Vec::with_capacity(events.len());
+    for e in events {
+        let idx = e.y as usize * w + e.x as usize;
+        if counts[idx][0] == 0.0 && counts[idx][1] == 0.0 {
+            touched.push(idx as u32);
+        }
+        counts[idx][if e.polarity { 0 } else { 1 }] += 1.0;
+    }
+    touched.sort_unstable();
+    let mut m = SparseMap::empty(w, h, 2);
+    for &idx in &touched {
+        let (x, y) = ((idx as usize % w) as u16, (idx as usize / w) as u16);
+        m.push(Token::new(x, y), &counts[idx as usize]);
+    }
+    m
+}
+
+/// Histogram clipped at `clip` counts and scaled to [0, 1] — the
+/// normalization used before quantization in the training path.
+pub fn histogram2_norm(events: &[Event], w: usize, h: usize, clip: f32) -> SparseMap<f32> {
+    let mut m = histogram2(events, w, h);
+    for f in m.feats.iter_mut() {
+        *f = (*f).min(clip) / clip;
+    }
+    m
+}
+
+/// 2-channel exponential time surface: `feat[p] = exp(-(t_end - t_last,p)/τ)`
+/// at each pixel's most recent event of polarity `p`.
+pub fn time_surface(events: &[Event], w: usize, h: usize, tau_us: f32) -> SparseMap<f32> {
+    if events.is_empty() {
+        return SparseMap::empty(w, h, 2);
+    }
+    let t_end = events.last().unwrap().t_us as f32;
+    let mut last = vec![[f32::NEG_INFINITY; 2]; w * h];
+    let mut touched: Vec<u32> = Vec::new();
+    for e in events {
+        let idx = e.y as usize * w + e.x as usize;
+        if last[idx][0] == f32::NEG_INFINITY && last[idx][1] == f32::NEG_INFINITY {
+            touched.push(idx as u32);
+        }
+        last[idx][if e.polarity { 0 } else { 1 }] = e.t_us as f32;
+    }
+    touched.sort_unstable();
+    let mut m = SparseMap::empty(w, h, 2);
+    for &idx in &touched {
+        let (x, y) = ((idx as usize % w) as u16, (idx as usize / w) as u16);
+        let f = |t: f32| {
+            if t == f32::NEG_INFINITY {
+                0.0
+            } else {
+                (-(t_end - t) / tau_us).exp()
+            }
+        };
+        m.push(
+            Token::new(x, y),
+            &[f(last[idx as usize][0]), f(last[idx as usize][1])],
+        );
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(x: u16, y: u16, p: bool, t: u32) -> Event {
+        Event { t_us: t, x, y, polarity: p }
+    }
+
+    #[test]
+    fn histogram_counts_polarities() {
+        let es = vec![ev(1, 1, true, 0), ev(1, 1, true, 5), ev(1, 1, false, 7), ev(3, 2, false, 9)];
+        let m = histogram2(&es, 8, 8);
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 2);
+        let i = m.find(1, 1).unwrap();
+        assert_eq!(m.feat(i), &[2.0, 1.0]);
+        let j = m.find(3, 2).unwrap();
+        assert_eq!(m.feat(j), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn histogram_tokens_in_ravel_order() {
+        // Events arrive in time order, not spatial order.
+        let es = vec![ev(7, 7, true, 0), ev(0, 0, true, 1), ev(3, 4, false, 2)];
+        let m = histogram2(&es, 8, 8);
+        m.validate().unwrap();
+        assert_eq!(m.tokens[0], Token::new(0, 0));
+        assert_eq!(m.tokens[2], Token::new(7, 7));
+    }
+
+    #[test]
+    fn norm_clips_and_scales() {
+        let es: Vec<Event> = (0..10).map(|i| ev(2, 2, true, i)).collect();
+        let m = histogram2_norm(&es, 4, 4, 4.0);
+        let i = m.find(2, 2).unwrap();
+        assert_eq!(m.feat(i), &[1.0, 0.0]); // 10 clipped to 4, /4
+    }
+
+    #[test]
+    fn time_surface_decays() {
+        let es = vec![ev(0, 0, true, 0), ev(1, 0, true, 1000)];
+        let m = time_surface(&es, 4, 4, 500.0);
+        let early = m.feat(m.find(0, 0).unwrap())[0];
+        let late = m.feat(m.find(1, 0).unwrap())[0];
+        assert!(late > early);
+        assert!((late - 1.0).abs() < 1e-6);
+        assert!((early - (-2.0f32).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_events_empty_map() {
+        let m = histogram2(&[], 4, 4);
+        assert_eq!(m.nnz(), 0);
+        let ts = time_surface(&[], 4, 4, 100.0);
+        assert_eq!(ts.nnz(), 0);
+    }
+}

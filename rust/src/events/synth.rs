@@ -1,0 +1,319 @@
+//! Synthetic DVS scene models.
+//!
+//! A DVS pixel fires when the log-intensity crosses a threshold; in
+//! practice events trace the *moving edges* of objects. We model scenes as
+//! sets of line segments ("strokes") under rigid motion: at every
+//! micro-step, each pixel newly covered by a stroke emits an ON event and
+//! each pixel newly uncovered emits an OFF event (plus shot noise). This
+//! reproduces the edge-locality and polarity structure of real recordings,
+//! which is what determines the spatial sparsity the paper exploits.
+//!
+//! Classes differ by shape (stroke set) and motion (rotation/translation/
+//! oscillation parameters), mimicking gesture/letter datasets.
+
+use super::aer::Event;
+use crate::util::Rng;
+
+/// A stroke: line segment in object coordinates (pixels, origin at object
+/// center).
+#[derive(Clone, Copy, Debug)]
+pub struct Stroke {
+    pub x0: f64,
+    pub y0: f64,
+    pub x1: f64,
+    pub y1: f64,
+}
+
+/// Rigid motion applied to the stroke set over time.
+#[derive(Clone, Copy, Debug)]
+pub enum Motion {
+    /// Rotation about the object center: radians/second (signed).
+    Rotate { omega: f64 },
+    /// Linear oscillation along (dx, dy) with period `period_s`.
+    Oscillate { dx: f64, dy: f64, period_s: f64 },
+    /// Circular translation of the center: radius px, radians/second.
+    Orbit { radius: f64, omega: f64 },
+}
+
+/// A class-defining scene: strokes + motion + center placement.
+#[derive(Clone, Debug)]
+pub struct Scene {
+    pub strokes: Vec<Stroke>,
+    pub motion: Motion,
+    /// Object center as a fraction of the frame (0..1).
+    pub cx_frac: f64,
+    pub cy_frac: f64,
+}
+
+impl Scene {
+    /// Pixels covered by the scene at time `t` (seconds), as a sorted,
+    /// deduplicated list of raveled coordinates.
+    fn cover(&self, t: f64, w: usize, h: usize, jx: f64, jy: f64) -> Vec<u32> {
+        let (cx, cy) = (self.cx_frac * w as f64 + jx, self.cy_frac * h as f64 + jy);
+        let (rot, tx, ty) = match self.motion {
+            Motion::Rotate { omega } => (omega * t, 0.0, 0.0),
+            Motion::Oscillate { dx, dy, period_s } => {
+                let ph = (2.0 * std::f64::consts::PI * t / period_s).sin();
+                (0.0, dx * ph, dy * ph)
+            }
+            Motion::Orbit { radius, omega } => {
+                let a = omega * t;
+                (0.0, radius * a.cos(), radius * a.sin())
+            }
+        };
+        let (s, c) = rot.sin_cos();
+        let mut pix: Vec<u32> = Vec::new();
+        for st in &self.strokes {
+            let p0 = (
+                cx + tx + st.x0 * c - st.y0 * s,
+                cy + ty + st.x0 * s + st.y0 * c,
+            );
+            let p1 = (
+                cx + tx + st.x1 * c - st.y1 * s,
+                cy + ty + st.x1 * s + st.y1 * c,
+            );
+            raster_line(p0, p1, w, h, &mut pix);
+        }
+        pix.sort_unstable();
+        pix.dedup();
+        pix
+    }
+}
+
+/// Bresenham-style rasterization of a segment into raveled pixel indices
+/// (integer DDA on the major axis; clips to the frame).
+fn raster_line(p0: (f64, f64), p1: (f64, f64), w: usize, h: usize, out: &mut Vec<u32>) {
+    let steps = (p1.0 - p0.0).abs().max((p1.1 - p0.1).abs()).ceil() as usize + 1;
+    for i in 0..steps {
+        let f = i as f64 / steps.max(1) as f64;
+        let x = (p0.0 + (p1.0 - p0.0) * f).round() as isize;
+        let y = (p0.1 + (p1.1 - p0.1) * f).round() as isize;
+        if x >= 0 && y >= 0 && (x as usize) < w && (y as usize) < h {
+            out.push((y as usize * w + x as usize) as u32);
+        }
+    }
+}
+
+/// Event-generation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthParams {
+    pub w: usize,
+    pub h: usize,
+    /// Recording length (µs).
+    pub duration_us: u32,
+    /// Scene sampling step (µs) — DVS-like high temporal resolution.
+    pub step_us: u32,
+    /// Probability an edge pixel that changed actually fires (sensor
+    /// efficiency; controls event density).
+    pub fire_p: f64,
+    /// Background noise events per step (shot noise).
+    pub noise_per_step: f64,
+    /// Center-placement jitter amplitude in pixels.
+    pub jitter_px: f64,
+}
+
+/// Generate one recording of `scene` under `params`. Events are
+/// time-sorted. The per-sample RNG controls jitter, firing, and noise so
+/// every sample of a class differs.
+pub fn generate(scene: &Scene, params: &SynthParams, rng: &mut Rng) -> Vec<Event> {
+    let (w, h) = (params.w, params.h);
+    let jx = (rng.f64() * 2.0 - 1.0) * params.jitter_px;
+    let jy = (rng.f64() * 2.0 - 1.0) * params.jitter_px;
+    let mut events: Vec<Event> = Vec::new();
+    let mut prev = scene.cover(0.0, w, h, jx, jy);
+    let mut t = params.step_us;
+    while t <= params.duration_us {
+        let ts = t as f64 * 1e-6;
+        let cur = scene.cover(ts, w, h, jx, jy);
+        // Newly covered pixels -> ON; newly uncovered -> OFF (sorted-merge diff).
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < cur.len() || j < prev.len() {
+            let a = cur.get(i).copied();
+            let b = prev.get(j).copied();
+            match (a, b) {
+                (Some(x), Some(y)) if x == y => {
+                    i += 1;
+                    j += 1;
+                }
+                (Some(x), None) | (Some(x), Some(_)) if b.map_or(true, |y| x < y) => {
+                    if rng.chance(params.fire_p) {
+                        events.push(Event {
+                            t_us: t,
+                            x: (x as usize % w) as u16,
+                            y: (x as usize / w) as u16,
+                            polarity: true,
+                        });
+                    }
+                    i += 1;
+                }
+                (_, Some(y)) => {
+                    if rng.chance(params.fire_p) {
+                        events.push(Event {
+                            t_us: t,
+                            x: (y as usize % w) as u16,
+                            y: (y as usize / w) as u16,
+                            polarity: false,
+                        });
+                    }
+                    j += 1;
+                }
+                (None, None) => break,
+                _ => unreachable!(),
+            }
+        }
+        // Shot noise.
+        let n_noise = poisson_draw(rng, params.noise_per_step);
+        for _ in 0..n_noise {
+            events.push(Event {
+                t_us: t,
+                x: rng.index(w) as u16,
+                y: rng.index(h) as u16,
+                polarity: rng.chance(0.5),
+            });
+        }
+        prev = cur;
+        t = t.saturating_add(params.step_us);
+    }
+    events
+}
+
+/// Small-λ Poisson draw via inversion (λ < ~30 in all profiles).
+fn poisson_draw(rng: &mut Rng, lambda: f64) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0;
+    loop {
+        p *= rng.f64();
+        if p <= l || k > 1000 {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Build the stroke set for a class id: deterministic, class-distinctive
+/// shapes — `n_arms` radial arms plus a chord whose angle encodes the class,
+/// under a class-dependent motion.
+pub fn class_scene(class: usize, n_classes: usize, extent_px: f64) -> Scene {
+    let golden = 0.6180339887498949;
+    let frac = class as f64 / n_classes.max(1) as f64;
+    let n_arms = 1 + class % 4;
+    let base_angle = 2.0 * std::f64::consts::PI * ((class as f64 * golden) % 1.0);
+    let mut strokes = Vec::new();
+    for a in 0..n_arms {
+        let ang = base_angle + a as f64 * 2.0 * std::f64::consts::PI / n_arms as f64;
+        strokes.push(Stroke {
+            x0: 0.0,
+            y0: 0.0,
+            x1: extent_px * ang.cos(),
+            y1: extent_px * ang.sin(),
+        });
+    }
+    // Class-encoding chord.
+    let ca = base_angle + std::f64::consts::FRAC_PI_3;
+    strokes.push(Stroke {
+        x0: 0.5 * extent_px * ca.cos(),
+        y0: 0.5 * extent_px * ca.sin(),
+        x1: 0.5 * extent_px * (ca + 1.0).cos(),
+        y1: 0.5 * extent_px * (ca + 1.0).sin(),
+    });
+    let motion = match class % 3 {
+        0 => Motion::Rotate { omega: 4.0 + 6.0 * frac },
+        1 => Motion::Oscillate {
+            dx: extent_px * (0.5 + frac),
+            dy: extent_px * 0.3,
+            period_s: 0.15 + 0.1 * frac,
+        },
+        _ => Motion::Orbit { radius: extent_px * 0.5, omega: 6.0 + 4.0 * frac },
+    };
+    Scene {
+        strokes,
+        motion,
+        cx_frac: 0.5,
+        cy_frac: 0.5,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::aer::is_time_sorted;
+
+    fn params() -> SynthParams {
+        SynthParams {
+            w: 64,
+            h: 64,
+            duration_us: 50_000,
+            step_us: 1_000,
+            fire_p: 0.8,
+            noise_per_step: 0.5,
+            jitter_px: 2.0,
+        }
+    }
+
+    #[test]
+    fn generates_sorted_in_bounds_events() {
+        let mut rng = Rng::new(1);
+        let scene = class_scene(0, 10, 20.0);
+        let es = generate(&scene, &params(), &mut rng);
+        assert!(es.len() > 100, "got only {} events", es.len());
+        assert!(is_time_sorted(&es));
+        for e in &es {
+            assert!((e.x as usize) < 64 && (e.y as usize) < 64);
+        }
+    }
+
+    #[test]
+    fn both_polarities_present() {
+        let mut rng = Rng::new(2);
+        let scene = class_scene(1, 10, 20.0);
+        let es = generate(&scene, &params(), &mut rng);
+        let on = es.iter().filter(|e| e.polarity).count();
+        let off = es.len() - on;
+        assert!(on > 10 && off > 10, "on {on} off {off}");
+    }
+
+    #[test]
+    fn classes_produce_distinct_signatures() {
+        let mut rng = Rng::new(3);
+        let p = params();
+        // Compare per-class active-pixel sets over the recording.
+        let mut sigs: Vec<std::collections::BTreeSet<(u16, u16)>> = Vec::new();
+        for c in 0..4 {
+            let scene = class_scene(c, 10, 20.0);
+            let es = generate(&scene, &p, &mut rng);
+            sigs.push(es.iter().map(|e| (e.x, e.y)).collect());
+        }
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                let inter = sigs[a].intersection(&sigs[b]).count();
+                let union = sigs[a].union(&sigs[b]).count();
+                let iou = inter as f64 / union.max(1) as f64;
+                assert!(iou < 0.9, "classes {a},{b} overlap too much: IoU {iou}");
+            }
+        }
+    }
+
+    #[test]
+    fn samples_of_same_class_differ_but_overlap() {
+        let p = params();
+        let scene = class_scene(2, 10, 20.0);
+        let mut r1 = Rng::new(10);
+        let mut r2 = Rng::new(11);
+        let e1 = generate(&scene, &p, &mut r1);
+        let e2 = generate(&scene, &p, &mut r2);
+        assert_ne!(e1, e2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = params();
+        let scene = class_scene(5, 10, 20.0);
+        let a = generate(&scene, &p, &mut Rng::new(42));
+        let b = generate(&scene, &p, &mut Rng::new(42));
+        assert_eq!(a, b);
+    }
+}

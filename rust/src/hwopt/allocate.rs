@@ -1,0 +1,264 @@
+//! The Eqn. 6 resource-allocation solver.
+//!
+//! ```text
+//! min  lat           s.t.  lat_i ≤ lat   ∀ layers i
+//!                          Σ_i r_ij ≤ R_j  for j ∈ {DSP, BRAM}
+//! ```
+//!
+//! Latency is monotone non-increasing and resources monotone non-decreasing
+//! in each layer's PF, so the optimum has a clean structure: for a target
+//! bottleneck `T`, each layer independently needs its *minimum* PF with
+//! `lat_i(PF) ≤ T`; feasibility is then a simple budget check. The optimal
+//! `T` is found by binary search over the finite set of achievable layer
+//! latencies (exact — no continuous tolerance). An exhaustive reference
+//! solver cross-checks small instances in tests.
+
+use super::cost::{op_cost, total_resources, OpCost, Resources};
+use super::stats::LayerStats;
+use crate::model::graph::NetworkSpec;
+
+/// Resource budget (defaults: ZCU102 / XCZU9EG as in the paper).
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub dsp: usize,
+    pub bram: usize,
+}
+
+impl Budget {
+    /// ZCU102: 2520 DSP48, 1824 BRAM18 (912 BRAM36).
+    pub fn zcu102() -> Budget {
+        Budget { dsp: 2520, bram: 1824 }
+    }
+}
+
+/// Candidate parallel factors (powers of two — the weight-partitioning
+/// granularity of the paper's templates).
+pub const PF_CHOICES: &[usize] = &[1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Allocation outcome.
+#[derive(Debug, Clone)]
+pub struct AllocResult {
+    /// PF per op (1 for weightless ops).
+    pub pf: Vec<usize>,
+    /// Bottleneck latency (cycles/inference) under the Eqn. 5 model.
+    pub latency: f64,
+    pub costs: Vec<OpCost>,
+    pub resources: Resources,
+}
+
+/// Minimal PF (from `PF_CHOICES`) achieving `lat ≤ target`; None if even
+/// the largest PF misses the target.
+fn min_pf_for(
+    op: &crate::model::graph::Op,
+    st: &LayerStats,
+    target: f64,
+    w: usize,
+    h: usize,
+) -> Option<usize> {
+    for &pf in PF_CHOICES {
+        if op_cost(op, st, pf, w, h).latency <= target {
+            return Some(pf);
+        }
+    }
+    None
+}
+
+/// Try target `t`: per-layer minimal PFs + budget check.
+fn try_target(
+    spec: &NetworkSpec,
+    stats: &[LayerStats],
+    budget: &Budget,
+    t: f64,
+) -> Option<AllocResult> {
+    let ops = spec.ops();
+    let res = spec.op_resolutions();
+    let mut pfs = Vec::with_capacity(ops.len());
+    for (i, op) in ops.iter().enumerate() {
+        let pf = min_pf_for(op, &stats[i], t, res[i].0, res[i].1)?;
+        pfs.push(pf);
+    }
+    let costs: Vec<OpCost> = ops
+        .iter()
+        .enumerate()
+        .map(|(i, op)| op_cost(op, &stats[i], pfs[i], res[i].0, res[i].1))
+        .collect();
+    let total = total_resources(&costs);
+    if total.dsp > budget.dsp || total.bram > budget.bram {
+        return None;
+    }
+    let latency = costs.iter().map(|c| c.latency).fold(0.0, f64::max);
+    Some(AllocResult { pf: pfs, latency, costs, resources: total })
+}
+
+/// Solve Eqn. 6: returns None when even PF=max everywhere cannot fit the
+/// budget (model too large for the device).
+pub fn allocate(spec: &NetworkSpec, stats: &[LayerStats], budget: &Budget) -> Option<AllocResult> {
+    let ops = spec.ops();
+    let res = spec.op_resolutions();
+    assert_eq!(ops.len(), stats.len());
+    // Candidate bottleneck values: every achievable per-layer latency.
+    let mut candidates: Vec<f64> = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        for &pf in PF_CHOICES {
+            candidates.push(op_cost(op, &stats[i], pf, res[i].0, res[i].1).latency);
+        }
+    }
+    candidates.retain(|l| l.is_finite());
+    candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    candidates.dedup();
+    // Binary search the smallest feasible candidate target.
+    let mut lo = 0usize;
+    let mut hi = candidates.len();
+    let mut best: Option<AllocResult> = None;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        match try_target(spec, stats, budget, candidates[mid]) {
+            Some(r) => {
+                best = Some(r);
+                hi = mid;
+            }
+            None => lo = mid + 1,
+        }
+    }
+    best
+}
+
+/// Exhaustive reference solver for tests: enumerate all PF combinations of
+/// the *weighted* ops (weightless ops fixed at PF=1). Exponential — only
+/// for tiny programs.
+pub fn allocate_exhaustive(
+    spec: &NetworkSpec,
+    stats: &[LayerStats],
+    budget: &Budget,
+    pf_choices: &[usize],
+) -> Option<AllocResult> {
+    let ops = spec.ops();
+    let res = spec.op_resolutions();
+    let weighted: Vec<usize> = (0..ops.len()).filter(|&i| ops[i].has_weights()).collect();
+    assert!(weighted.len() <= 8, "exhaustive solver is for tiny programs");
+    let mut best: Option<AllocResult> = None;
+    let n_comb = pf_choices.len().pow(weighted.len() as u32);
+    for comb in 0..n_comb {
+        let mut pfs = vec![1usize; ops.len()];
+        let mut c = comb;
+        for &wi in &weighted {
+            pfs[wi] = pf_choices[c % pf_choices.len()];
+            c /= pf_choices.len();
+        }
+        let costs: Vec<OpCost> = ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| op_cost(op, &stats[i], pfs[i], res[i].0, res[i].1))
+            .collect();
+        let total = total_resources(&costs);
+        if total.dsp > budget.dsp || total.bram > budget.bram {
+            continue;
+        }
+        let latency = costs.iter().map(|k| k.latency).fold(0.0, f64::max);
+        if best.as_ref().map_or(true, |b| latency < b.latency) {
+            best = Some(AllocResult { pf: pfs, latency, costs, resources: total });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwopt::stats::collect_stats;
+    use crate::model::NetworkSpec;
+    use crate::sparse::Bitmap;
+    use crate::util::propcheck::check;
+    use crate::util::Rng;
+
+    fn tiny_setup(seed: u64, p: f64) -> (NetworkSpec, Vec<LayerStats>) {
+        let spec = NetworkSpec::tiny(16, 16, 4);
+        let mut rng = Rng::new(seed);
+        let mut bms = Vec::new();
+        for _ in 0..3 {
+            let mut b = Bitmap::new(16, 16);
+            for y in 0..16 {
+                for x in 0..16 {
+                    if rng.chance(p) {
+                        b.set(x, y);
+                    }
+                }
+            }
+            bms.push(b);
+        }
+        let stats = collect_stats(&spec, &bms);
+        (spec, stats)
+    }
+
+    #[test]
+    fn allocation_respects_budget_and_improves_with_budget() {
+        let (spec, stats) = tiny_setup(1, 0.25);
+        let small = Budget { dsp: 16, bram: 64 };
+        let large = Budget { dsp: 512, bram: 1024 };
+        let rs = allocate(&spec, &stats, &small).expect("small-budget allocation");
+        let rl = allocate(&spec, &stats, &large).expect("large-budget allocation");
+        assert!(rs.resources.dsp <= small.dsp && rs.resources.bram <= small.bram);
+        assert!(rl.resources.dsp <= large.dsp && rl.resources.bram <= large.bram);
+        assert!(rl.latency <= rs.latency);
+    }
+
+    #[test]
+    fn matches_exhaustive_reference_bottleneck() {
+        check("Eqn6 solver == exhaustive min-bottleneck", 24, |g| {
+            let (spec, stats) = tiny_setup(g.u64(0..=1 << 30), 0.1 + g.f64() * 0.4);
+            let budget = Budget { dsp: g.usize(8, 64), bram: g.usize(32, 256) };
+            let choices: &[usize] = &[1, 4, 16];
+            // Restrict the fast solver to the same PF choices via a local
+            // exhaustive reference on weighted ops.
+            let want = allocate_exhaustive(&spec, &stats, &budget, choices);
+            // The production solver searches the full PF set; emulate the
+            // restricted set by calling the reference twice — instead check
+            // the production solver achieves ≤ the reference bottleneck
+            // under the full choice set (superset ⇒ at least as good).
+            let got = allocate(&spec, &stats, &budget);
+            match (got, want) {
+                (Some(g_), Some(w)) => {
+                    assert!(
+                        g_.latency <= w.latency + 1e-9,
+                        "solver {} worse than exhaustive {}",
+                        g_.latency,
+                        w.latency
+                    );
+                }
+                (Some(_), None) => {} // full PF set found something the
+                                       // restricted set couldn't — fine
+                (None, Some(w)) => panic!("solver failed where exhaustive found {}", w.latency),
+                (None, None) => {}
+            }
+        });
+    }
+
+    #[test]
+    fn infeasible_when_budget_tiny() {
+        let (spec, stats) = tiny_setup(5, 0.3);
+        // One BRAM cannot hold the weights of every layer.
+        assert!(allocate(&spec, &stats, &Budget { dsp: 1, bram: 1 }).is_none());
+    }
+
+    #[test]
+    fn weightless_ops_get_pf1() {
+        let (spec, stats) = tiny_setup(7, 0.2);
+        let r = allocate(&spec, &stats, &Budget::zcu102()).unwrap();
+        let ops = spec.ops();
+        for (i, op) in ops.iter().enumerate() {
+            if !op.has_weights() {
+                assert_eq!(r.pf[i], 1, "op {i} {:?}", op);
+            }
+        }
+    }
+
+    #[test]
+    fn sparser_data_lower_latency() {
+        let (spec, s_sparse) = tiny_setup(9, 0.05);
+        let (_, s_dense) = tiny_setup(9, 0.5);
+        let b = Budget { dsp: 64, bram: 128 };
+        let rs = allocate(&spec, &s_sparse, &b).unwrap();
+        let rd = allocate(&spec, &s_dense, &b).unwrap();
+        assert!(rs.latency < rd.latency);
+    }
+}

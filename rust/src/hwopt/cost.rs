@@ -1,0 +1,200 @@
+//! The Eqn. 5 cost model: per-module average latency (cycles), BRAM, and
+//! DSP as a function of the layer shape, the dataset sparsity statistics,
+//! and the parallel factor, plus FF/LUT regressions.
+//!
+//! Depthwise 3×3 example from the paper:
+//! ```text
+//! lat  = (H·W·S_s) · (9·S_k) · (C/PF)
+//! bram = ceil((B·9·C)/16K/PF) · PF
+//! dsp  = PF
+//! ```
+//! Generalized per module below; `B` = 8-bit weights; one BRAM = 16 Kb, as
+//! in the paper. FF/LUT use per-module base + per-PF slopes chosen to land
+//! in the Table 1 range (regression constants, documented in DESIGN.md §8).
+
+use super::stats::LayerStats;
+use crate::model::graph::{NetworkSpec, Op};
+
+/// Weight bitwidth (the paper deploys 8-bit models).
+pub const WEIGHT_BITS: usize = 8;
+/// BRAM capacity used by the paper's model (16 Kb).
+pub const BRAM_BITS: usize = 16 * 1024;
+
+/// Cost of one op at one PF.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    /// Average cycles to process one input sample (Eqn. 5 lat).
+    pub latency: f64,
+    pub dsp: usize,
+    pub bram: usize,
+    pub ff: usize,
+    pub lut: usize,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Weight-buffer BRAM: the constant buffer is partitioned `PF` ways to feed
+/// the MAC array (paper: `ceil(B·9·C/16K/PF)·PF`).
+fn weight_bram(n_weights: usize, pf: usize) -> usize {
+    if n_weights == 0 {
+        return 0;
+    }
+    ceil_div(n_weights * WEIGHT_BITS, BRAM_BITS * pf) * pf
+}
+
+/// SLB row-buffer BRAM: k rows of W positions × C channels × 8 b (dual
+/// buffered), plus the token FIFO (negligible next to the rows).
+fn slb_bram(k: usize, w: usize, c: usize) -> usize {
+    ceil_div(k * w * c * 8 * 2, BRAM_BITS).max(1)
+}
+
+/// Cost of `op` with stats `st` at parallel factor `pf`.
+/// `(w, h)` is the op's input resolution.
+pub fn op_cost(op: &Op, st: &LayerStats, pf: usize, w: usize, _h: usize) -> OpCost {
+    let pf = pf.max(1);
+    match *op {
+        Op::Conv1x1 { cin, cout, .. } => OpCost {
+            latency: st.tokens * (ceil_div(cin * cout, pf) as f64),
+            dsp: pf,
+            bram: weight_bram(cin * cout, pf),
+            ff: 600 + 18 * pf,
+            lut: 900 + 26 * pf,
+        },
+        Op::DwConv { k, c, .. } => OpCost {
+            // (H·W·S_s) · (k²·S_k) · ceil(C/PF)  [+ SLB]
+            latency: st.tokens * ((k * k) as f64 * st.s_k) * (ceil_div(c, pf) as f64),
+            dsp: pf,
+            bram: weight_bram(k * k * c, pf) + slb_bram(k, w, c),
+            ff: 1100 + 22 * pf,
+            lut: 1600 + 30 * pf,
+        },
+        Op::ConvKxK { k, cin, cout, .. } => OpCost {
+            latency: st.tokens * ((k * k) as f64 * st.s_k) * (ceil_div(cin * cout, pf) as f64),
+            dsp: pf,
+            bram: weight_bram(k * k * cin * cout, pf) + slb_bram(k, w, cin),
+            ff: 1100 + 22 * pf,
+            lut: 1600 + 30 * pf,
+        },
+        Op::ResFork => OpCost { latency: st.tokens, dsp: 0, bram: 0, ff: 150, lut: 220 },
+        Op::ResAdd => OpCost {
+            // Shortcut FIFO BRAM: buffers tokens+features while the branch
+            // computes; sized at ~4k rows of C bytes in the builder.
+            latency: st.tokens,
+            dsp: 0,
+            bram: 2,
+            ff: 250,
+            lut: 380,
+        },
+        Op::GlobalPool { c } => OpCost {
+            latency: st.tokens + c as f64,
+            dsp: 0,
+            bram: 1,
+            ff: 300,
+            lut: 420,
+        },
+        Op::Fc { cin, cout } => OpCost {
+            latency: ceil_div(cin * cout, pf) as f64,
+            dsp: pf,
+            bram: weight_bram(cin * cout, pf),
+            ff: 500 + 18 * pf,
+            lut: 700 + 24 * pf,
+        },
+    }
+}
+
+/// Cost every op of `spec` at the given PFs with the given stats.
+pub fn op_costs(spec: &NetworkSpec, stats: &[LayerStats], pfs: &[usize]) -> Vec<OpCost> {
+    let ops = spec.ops();
+    let res = spec.op_resolutions();
+    assert_eq!(ops.len(), stats.len());
+    assert_eq!(ops.len(), pfs.len());
+    ops.iter()
+        .enumerate()
+        .map(|(i, op)| op_cost(op, &stats[i], pfs[i], res[i].0, res[i].1))
+        .collect()
+}
+
+/// Aggregate resources.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Resources {
+    pub dsp: usize,
+    pub bram: usize,
+    pub ff: usize,
+    pub lut: usize,
+}
+
+pub fn total_resources(costs: &[OpCost]) -> Resources {
+    costs.iter().fold(Resources::default(), |a, c| Resources {
+        dsp: a.dsp + c.dsp,
+        bram: a.bram + c.bram,
+        ff: a.ff + c.ff,
+        lut: a.lut + c.lut,
+    })
+}
+
+/// Pipeline latency estimate: the bottleneck module's latency (all modules
+/// run concurrently — Eqn. 6's `max lat_i`), plus a fill term.
+pub fn pipeline_latency(costs: &[OpCost]) -> f64 {
+    let bottleneck = costs.iter().map(|c| c.latency).fold(0.0, f64::max);
+    let fill: f64 = costs.iter().map(|c| (c.latency * 0.001).min(50.0)).sum();
+    bottleneck + fill
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::Act;
+
+    fn st(tokens: f64, s_k: f64) -> LayerStats {
+        LayerStats { s_s: 0.1, s_k, tokens, n: 1 }
+    }
+
+    #[test]
+    fn matches_paper_dw_formula() {
+        // H=W=32, S_s=0.1 → tokens = 102.4 ; k=3, S_k=0.5, C=16, PF=4
+        let op = Op::DwConv { k: 3, c: 16, stride: 1, act: Act::Relu6 };
+        let c = op_cost(&op, &st(102.4, 0.5), 4, 32, 32);
+        let want = 102.4 * (9.0 * 0.5) * (16f64 / 4.0);
+        assert!((c.latency - want).abs() < 1e-9);
+        assert_eq!(c.dsp, 4);
+        // bram: weights 9·16·8 = 1152 bits → ceil(1152/16384/4)·4 = 4, plus SLB.
+        assert_eq!(c.bram, 4 + slb_bram(3, 32, 16));
+    }
+
+    #[test]
+    fn pf_monotonicity() {
+        let op = Op::Conv1x1 { cin: 32, cout: 64, act: Act::Relu6 };
+        let s = st(500.0, 1.0);
+        let mut last = f64::INFINITY;
+        for pf in [1, 2, 4, 8, 16, 32] {
+            let c = op_cost(&op, &s, pf, 16, 16);
+            assert!(c.latency <= last);
+            last = c.latency;
+            assert_eq!(c.dsp, pf);
+        }
+    }
+
+    #[test]
+    fn bram_partitioning_grows_with_pf() {
+        // Large weights: partitioning into PF banks rounds each bank up.
+        let n = 3 * 3 * 64 * 64; // 36864 weights → 294912 bits → 18 BRAM
+        let b1 = weight_bram(n, 1);
+        let b32 = weight_bram(n, 32);
+        assert_eq!(b1, 18);
+        assert_eq!(b32, 32); // ceil(18/32)·32
+        assert!(b32 >= b1);
+    }
+
+    #[test]
+    fn pipeline_latency_is_bottleneck_dominated() {
+        let costs = vec![
+            OpCost { latency: 100.0, dsp: 1, bram: 1, ff: 0, lut: 0 },
+            OpCost { latency: 5000.0, dsp: 1, bram: 1, ff: 0, lut: 0 },
+            OpCost { latency: 200.0, dsp: 1, bram: 1, ff: 0, lut: 0 },
+        ];
+        let lat = pipeline_latency(&costs);
+        assert!(lat >= 5000.0 && lat < 5100.0);
+    }
+}

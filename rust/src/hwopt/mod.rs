@@ -1,0 +1,21 @@
+//! Sparsity-aware algorithm/hardware co-optimization — paper §3.4.
+//!
+//! - [`stats`]: per-layer spatial (S_s) and kernel (S_k) sparsity
+//!   statistics collected from dataset samples (the paper collects these
+//!   "from all the samples in the dataset").
+//! - [`cost`]: the Eqn. 5 latency / BRAM / DSP model per dataflow module,
+//!   extended with FF/LUT regressions and SLB buffer costs.
+//! - [`allocate`]: the Eqn. 6 solver — minimize the pipeline bottleneck
+//!   latency subject to DSP and BRAM budgets, over per-layer parallel
+//!   factors (exact min-bottleneck via candidate-latency search; checked
+//!   against an exhaustive reference on small programs).
+//! - [`power`]: power/energy model calibrated by least squares against the
+//!   paper's Table 1 rows.
+pub mod stats;
+pub mod cost;
+pub mod allocate;
+pub mod power;
+
+pub use allocate::{allocate, AllocResult, Budget};
+pub use cost::{op_costs, OpCost};
+pub use stats::{collect_stats, LayerStats};

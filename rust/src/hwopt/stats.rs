@@ -1,0 +1,239 @@
+//! Per-layer sparsity statistics (paper §3.4.1).
+//!
+//! Submanifold networks have a weight-independent sparsity *pattern*: the
+//! token set of every intermediate layer is a pure function of the input
+//! bitmap (stride-1 ops preserve it, stride-2 ops downsample it by the 2×2
+//! grid rule). Statistics therefore propagate bitmaps only — no weights,
+//! no feature arithmetic — which is what makes collecting them over whole
+//! datasets cheap.
+
+use crate::model::graph::{NetworkSpec, Op};
+use crate::sparse::Bitmap;
+
+/// Sparsity statistics for one op.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStats {
+    /// Mean spatial NZ ratio of the op's *output* tokens (S_s).
+    pub s_s: f64,
+    /// Mean fraction of the k×k kernel offsets that are nonzero per output
+    /// window (S_k); 1.0 for non-windowed ops.
+    pub s_k: f64,
+    /// Mean number of output tokens the op iterates (H·W·S_s of Eqn. 5).
+    pub tokens: f64,
+    /// Number of samples aggregated.
+    pub n: usize,
+}
+
+impl LayerStats {
+    fn add(&mut self, s_s: f64, s_k: f64, tokens: f64) {
+        let n = self.n as f64;
+        self.s_s = (self.s_s * n + s_s) / (n + 1.0);
+        self.s_k = (self.s_k * n + s_k) / (n + 1.0);
+        self.tokens = (self.tokens * n + tokens) / (n + 1.0);
+        self.n += 1;
+    }
+}
+
+/// Mean fraction of nonzero offsets in the k×k window around each set cell
+/// (stride 1) — the S_k of Eqn. 5.
+fn kernel_occupancy_s1(bm: &Bitmap, k: usize) -> f64 {
+    let u = (k as isize - 1) / 2;
+    let mut total = 0usize;
+    let mut windows = 0usize;
+    for (x, y) in bm.iter_set() {
+        windows += 1;
+        for dy in -u..=u {
+            for dx in -u..=u {
+                let ix = x as isize + dx;
+                let iy = y as isize + dy;
+                if ix >= 0
+                    && iy >= 0
+                    && (ix as usize) < bm.w
+                    && (iy as usize) < bm.h
+                    && bm.get(ix as usize, iy as usize)
+                {
+                    total += 1;
+                }
+            }
+        }
+    }
+    if windows == 0 {
+        0.0
+    } else {
+        total as f64 / (windows * k * k) as f64
+    }
+}
+
+/// S_k for stride-2 windows: occupancy of the k×k input window around each
+/// *output* token's anchor (2gx, 2gy).
+fn kernel_occupancy_s2(input: &Bitmap, out: &Bitmap, k: usize) -> f64 {
+    let pad = (k as isize - 1) / 2;
+    let mut total = 0usize;
+    let mut windows = 0usize;
+    for (gx, gy) in out.iter_set() {
+        windows += 1;
+        for dy in 0..k as isize {
+            for dx in 0..k as isize {
+                let ix = 2 * gx as isize + dx - pad;
+                let iy = 2 * gy as isize + dy - pad;
+                if ix >= 0
+                    && iy >= 0
+                    && (ix as usize) < input.w
+                    && (iy as usize) < input.h
+                    && input.get(ix as usize, iy as usize)
+                {
+                    total += 1;
+                }
+            }
+        }
+    }
+    if windows == 0 {
+        0.0
+    } else {
+        total as f64 / (windows * k * k) as f64
+    }
+}
+
+/// Propagate one input bitmap through the op program, updating `acc`.
+pub fn accumulate_stats(spec: &NetworkSpec, input: &Bitmap, acc: &mut [LayerStats]) {
+    let ops = spec.ops();
+    assert_eq!(acc.len(), ops.len());
+    let mut bm = input.clone();
+    let mut fork_stack: Vec<Bitmap> = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Conv1x1 { .. } => {
+                acc[i].add(bm.nz_ratio(), 1.0, bm.count() as f64);
+            }
+            Op::ConvKxK { k, stride, .. } | Op::DwConv { k, stride, .. } => {
+                if stride == 1 {
+                    let s_k = kernel_occupancy_s1(&bm, k);
+                    acc[i].add(bm.nz_ratio(), s_k, bm.count() as f64);
+                } else {
+                    let out = bm.downsample_sparse(2);
+                    let s_k = kernel_occupancy_s2(&bm, &out, k);
+                    acc[i].add(out.nz_ratio(), s_k, out.count() as f64);
+                    bm = out;
+                }
+            }
+            Op::ResFork => {
+                fork_stack.push(bm.clone());
+                acc[i].add(bm.nz_ratio(), 1.0, bm.count() as f64);
+            }
+            Op::ResAdd => {
+                let other = fork_stack.pop().expect("unbalanced fork");
+                debug_assert_eq!(other, bm, "submanifold branches must share patterns");
+                acc[i].add(bm.nz_ratio(), 1.0, bm.count() as f64);
+            }
+            Op::GlobalPool { .. } => {
+                acc[i].add(bm.nz_ratio(), 1.0, bm.count() as f64);
+            }
+            Op::Fc { .. } => {
+                acc[i].add(1.0, 1.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Collect statistics for a network over dataset samples (bitmaps of the
+/// 2-channel histogram representation).
+pub fn collect_stats(spec: &NetworkSpec, inputs: &[Bitmap]) -> Vec<LayerStats> {
+    let mut acc = vec![LayerStats::default(); spec.ops().len()];
+    for bm in inputs {
+        assert_eq!((bm.w, bm.h), (spec.w, spec.h));
+        accumulate_stats(spec, bm, &mut acc);
+    }
+    acc
+}
+
+/// Convenience: sample `n_samples` synthetic recordings from a profile and
+/// collect stats for `spec`.
+pub fn collect_stats_for_profile(
+    spec: &NetworkSpec,
+    profile: &crate::events::DatasetProfile,
+    n_samples: usize,
+    seed: u64,
+) -> Vec<LayerStats> {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut bitmaps = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        let es = profile.sample(i % profile.n_classes, &mut rng);
+        let m = crate::events::repr::histogram2(&es, profile.w, profile.h);
+        bitmaps.push(m.bitmap());
+    }
+    collect_stats(spec, &bitmaps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::NetworkSpec;
+    use crate::util::Rng;
+
+    fn random_bitmap(rng: &mut Rng, w: usize, h: usize, p: f64) -> Bitmap {
+        let mut b = Bitmap::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                if rng.chance(p) {
+                    b.set(x, y);
+                }
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn stride1_ops_share_input_sparsity() {
+        let spec = NetworkSpec::tiny(16, 16, 3);
+        let mut rng = Rng::new(1);
+        let inputs: Vec<Bitmap> = (0..4).map(|_| random_bitmap(&mut rng, 16, 16, 0.2)).collect();
+        let stats = collect_stats(&spec, &inputs);
+        let ops = spec.ops();
+        let mean_in: f64 = inputs.iter().map(|b| b.nz_ratio()).sum::<f64>() / 4.0;
+        // All ops before the stride-2 dw see the input sparsity.
+        let first_s2 = ops.iter().position(|o| o.stride() == 2).unwrap();
+        for i in 0..first_s2 {
+            if !matches!(ops[i], Op::Fc { .. }) {
+                assert!((stats[i].s_s - mean_in).abs() < 1e-9, "op {i}");
+            }
+        }
+        // After downsampling sparsity can only grow (denser) per area.
+        assert!(stats[first_s2].s_s >= mean_in * 0.9);
+    }
+
+    #[test]
+    fn kernel_occupancy_bounds() {
+        let mut rng = Rng::new(2);
+        for &p in &[0.05, 0.3, 0.9] {
+            let bm = random_bitmap(&mut rng, 20, 20, p);
+            if bm.count() == 0 {
+                continue;
+            }
+            let sk = kernel_occupancy_s1(&bm, 3);
+            // Window always contains its own center.
+            assert!(sk >= 1.0 / 9.0 - 1e-9, "p={p} sk={sk}");
+            assert!(sk <= 1.0);
+        }
+    }
+
+    #[test]
+    fn full_bitmap_has_full_occupancy_interior() {
+        let mut bm = Bitmap::new(10, 10);
+        for y in 0..10 {
+            for x in 0..10 {
+                bm.set(x, y);
+            }
+        }
+        let sk = kernel_occupancy_s1(&bm, 3);
+        // Border windows are clipped, so slightly below 1.
+        assert!(sk > 0.8 && sk <= 1.0, "{sk}");
+    }
+
+    #[test]
+    fn denser_input_higher_sk() {
+        let mut rng = Rng::new(3);
+        let sparse = random_bitmap(&mut rng, 24, 24, 0.05);
+        let dense = random_bitmap(&mut rng, 24, 24, 0.6);
+        assert!(kernel_occupancy_s1(&dense, 3) > kernel_occupancy_s1(&sparse, 3));
+    }
+}

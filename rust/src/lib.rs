@@ -1,0 +1,24 @@
+//! # ESDA — Composable Dynamic Sparse Dataflow Architecture
+//!
+//! A full reproduction of "A Composable Dynamic Sparse Dataflow Architecture
+//! for Efficient Event-based Vision Processing on FPGA" (Gao, Zhang, Ding, So;
+//! FPGA '24) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layers:
+//! - **L3 (this crate)**: the paper's architecture as a cycle-level dataflow
+//!   simulator ([`arch`]), the sparsity-aware hardware optimizer ([`hwopt`]),
+//!   the model search ([`nas`]), the event-data substrate ([`events`]), and a
+//!   PJRT runtime ([`runtime`]) that executes the AOT-compiled JAX model.
+//! - **L2**: JAX model (`python/compile/model.py`), lowered once to HLO text.
+//! - **L1**: Pallas submanifold-convolution kernel
+//!   (`python/compile/kernels/submanifold.py`), interpret-mode on CPU.
+pub mod util;
+pub mod events;
+pub mod sparse;
+pub mod model;
+pub mod arch;
+pub mod hwopt;
+pub mod nas;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;

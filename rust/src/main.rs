@@ -1,0 +1,256 @@
+//! `esda` — leader binary for the ESDA reproduction.
+//!
+//! Subcommands:
+//! - `gen-data   [--out artifacts/data] [--train N] [--test N] [--seed S]`
+//!   generate the synthetic event datasets consumed by the python training
+//!   path and the benches.
+//! - `optimize   --dataset <name> [--model mbv2|compact|tiny]`
+//!   run the Eqn. 6 sparsity-aware allocator and print the configuration.
+//! - `simulate   --dataset <name> [--model ...] [--samples N]`
+//!   cycle-simulate inferences and print latency/bottleneck reports.
+//! - `search     --dataset <name> [--samples N] [--top-k K]`
+//!   run the two-step NAS and print the candidate table.
+//! - `serve      --dataset <name> [--requests N] [--backend sim|func|dense]`
+//!   run the threaded serving pipeline and print metrics.
+//! - `infer      --hlo artifacts/<stem>.hlo.txt`
+//!   load an AOT artifact and run a smoke inference via PJRT.
+
+use esda::coordinator::{run_pipeline, Backend, PipelineConfig};
+use esda::events::{io::generate_dataset_files, repr::histogram2_norm, DatasetProfile};
+use esda::hwopt::{allocate, power::PowerModel, power::CLOCK_HZ, stats::collect_stats_for_profile, Budget};
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::NetworkSpec;
+use esda::nas::{search, SearchConfig, SearchSpace};
+use esda::report::Table;
+use esda::util::cli::Args;
+use esda::util::Rng;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(raw, &["verbose"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "gen-data" => cmd_gen_data(&args),
+        "optimize" => cmd_optimize(&args),
+        "simulate" => cmd_simulate(&args),
+        "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "infer" => cmd_infer(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "esda — composable dynamic sparse dataflow architecture (FPGA'24 reproduction)\n\
+         usage: esda <gen-data|optimize|simulate|search|serve|infer> [flags]\n\
+         see `rust/src/main.rs` docs for per-command flags"
+    );
+}
+
+fn profile_from(args: &Args) -> Result<DatasetProfile, String> {
+    let name = args.get_or("dataset", "n_mnist");
+    DatasetProfile::by_name(name).ok_or_else(|| {
+        format!(
+            "unknown dataset '{name}' (choose from: {})",
+            DatasetProfile::all().iter().map(|p| p.name).collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+fn model_from(args: &Args, p: &DatasetProfile) -> NetworkSpec {
+    match args.get_or("model", "compact") {
+        "mbv2" => NetworkSpec::mobilenet_v2_05("mbv2", p.w, p.h, p.n_classes),
+        "tiny" => NetworkSpec::tiny(p.w, p.h, p.n_classes),
+        _ => NetworkSpec::compact("compact", p.w, p.h, p.n_classes),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> Result<(), String> {
+    let out = std::path::PathBuf::from(args.get_or("out", "artifacts/data"));
+    let n_train = args.get_usize("train", 24)?;
+    let n_test = args.get_usize("test", 8)?;
+    let seed = args.get_u64("seed", 0xE5DA)?;
+    for p in DatasetProfile::all() {
+        let (tr, te) = generate_dataset_files(&p, &out, n_train, n_test, seed)
+            .map_err(|e| format!("{}: {e}", p.name))?;
+        println!("{}: wrote {} and {}", p.name, tr.display(), te.display());
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<(), String> {
+    let p = profile_from(args)?;
+    let spec = model_from(args, &p);
+    let n_stat = args.get_usize("stat-samples", 8)?;
+    let stats = collect_stats_for_profile(&spec, &p, n_stat, 1);
+    let alloc = allocate(&spec, &stats, &Budget::zcu102())
+        .ok_or("model does not fit the ZCU102 budget")?;
+    let pm = PowerModel::calibrated();
+    let mut t = Table::new(
+        &format!("Eqn.6 allocation — {} on {}", spec.name, p.name),
+        &["op", "S_s", "S_k", "PF", "lat(cyc)", "DSP", "BRAM"],
+    );
+    for (i, op) in spec.ops().iter().enumerate() {
+        t.row(vec![
+            format!("{op:?}"),
+            format!("{:.3}", stats[i].s_s),
+            format!("{:.3}", stats[i].s_k),
+            alloc.pf[i].to_string(),
+            format!("{:.0}", alloc.costs[i].latency),
+            alloc.costs[i].dsp.to_string(),
+            alloc.costs[i].bram.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "bottleneck {:.0} cycles = {:.3} ms @187MHz | total DSP {} BRAM {} | est. power {:.2} W | energy {:.2} mJ/inf",
+        alloc.latency,
+        alloc.latency / CLOCK_HZ * 1e3,
+        alloc.resources.dsp,
+        alloc.resources.bram,
+        pm.watts(&alloc.resources),
+        pm.energy_mj(&alloc.resources, alloc.latency, CLOCK_HZ),
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let p = profile_from(args)?;
+    let spec = model_from(args, &p);
+    let n_samples = args.get_usize("samples", 3)?;
+    let seed = args.get_u64("seed", 7)?;
+    let mut rng = Rng::new(seed);
+    let w = FloatWeights::random(&spec, seed);
+    let calib: Vec<_> = (0..3)
+        .map(|i| {
+            let es = p.sample(i % p.n_classes, &mut rng);
+            histogram2_norm(&es, p.w, p.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &w, &calib);
+    let stats = collect_stats_for_profile(&spec, &p, 4, seed);
+    let alloc = allocate(&spec, &stats, &Budget::zcu102()).ok_or("does not fit")?;
+    let cfg = esda::arch::HwConfig { pf: alloc.pf.clone(), fifo_depth: 8 };
+    for s in 0..n_samples {
+        let es = p.sample(s % p.n_classes, &mut rng);
+        let input = histogram2_norm(&es, p.w, p.h, 8.0);
+        let (logits, report) = esda::arch::simulate_inference(&qnet, &cfg, &input, 20_000_000_000)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "sample {s}: nnz {} ({:.1}%), {} cycles = {:.3} ms @187MHz, argmax {}",
+            input.nnz(),
+            input.nz_ratio() * 100.0,
+            report.cycles,
+            report.cycles as f64 / CLOCK_HZ * 1e3,
+            esda::model::exec::argmax(&logits),
+        );
+        if args.has("verbose") {
+            println!("{report}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<(), String> {
+    let p = profile_from(args)?;
+    let space = SearchSpace::for_dataset(p.w, p.h, p.n_classes);
+    let cfg = SearchConfig {
+        n_samples: args.get_usize("samples", 24)?,
+        top_k: args.get_usize("top-k", 4)?,
+        ..Default::default()
+    };
+    let out = search(&p, &space, &cfg);
+    let mut t = Table::new(
+        &format!("NAS candidates — {}", p.name),
+        &["name", "params", "blocks", "thr (inf/s)", "lat (ms)", "DSP", "BRAM", "probe acc"],
+    );
+    for c in &out {
+        t.row(vec![
+            c.spec.name.clone(),
+            c.spec.param_count().to_string(),
+            c.spec.blocks.len().to_string(),
+            format!("{:.0}", c.throughput),
+            format!("{:.3}", c.alloc.latency / CLOCK_HZ * 1e3),
+            c.alloc.resources.dsp.to_string(),
+            c.alloc.resources.bram.to_string(),
+            format!("{:.2}", c.accuracy.unwrap_or(f64::NAN)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let p = profile_from(args)?;
+    let spec = model_from(args, &p);
+    let seed = args.get_u64("seed", 3)?;
+    let mut rng = Rng::new(seed);
+    let w = FloatWeights::random(&spec, seed);
+    let calib: Vec<_> = (0..3)
+        .map(|i| {
+            let es = p.sample(i % p.n_classes, &mut rng);
+            histogram2_norm(&es, p.w, p.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &w, &calib);
+    let n_ops = spec.ops().len();
+    let backend = match args.get_or("backend", "func") {
+        "sim" => Backend::Simulator { qnet, cfg: esda::arch::HwConfig::uniform(n_ops, 16) },
+        "dense" => {
+            let stem = args.get_or("hlo", "artifacts/compact_n_mnist.hlo.txt").to_string();
+            let engine = esda::runtime::Engine::load(std::path::Path::new(&stem))
+                .map_err(|e| e.to_string())?;
+            Backend::Dense { engine }
+        }
+        _ => Backend::Functional { qnet },
+    };
+    let cfg = PipelineConfig {
+        n_requests: args.get_usize("requests", 32)?,
+        seed,
+        queue_depth: args.get_usize("queue", 4)?,
+        clip: 8.0,
+    };
+    let r = run_pipeline(&p, &backend, &cfg);
+    let m = &r.metrics;
+    println!(
+        "{} requests | accuracy {:.2} | e2e p50 {} p99 {} | service mean {} | throughput {:.0} req/s",
+        m.total,
+        m.accuracy(),
+        esda::util::stats::fmt_secs(m.e2e_summary().percentile(50.0)),
+        esda::util::stats::fmt_secs(m.e2e_summary().percentile(99.0)),
+        esda::util::stats::fmt_secs(m.service_summary().mean()),
+        m.throughput(),
+    );
+    if let Some(ms) = m.mean_sim_latency_ms(CLOCK_HZ) {
+        println!("simulated hardware latency: {ms:.3} ms/inference @187MHz");
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<(), String> {
+    let hlo = args.get("hlo").ok_or("--hlo <path> required")?;
+    let engine = esda::runtime::Engine::load(std::path::Path::new(hlo)).map_err(|e| e.to_string())?;
+    println!(
+        "loaded {} ({}x{}x{} -> {} classes) on {} device(s)",
+        hlo, engine.h, engine.w, engine.c, engine.n_classes, engine.device_count()
+    );
+    let dense = vec![0.5f32; engine.h * engine.w * engine.c];
+    let logits = engine.infer_dense(&dense).map_err(|e| e.to_string())?;
+    println!("logits: {logits:?}");
+    Ok(())
+}

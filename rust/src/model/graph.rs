@@ -1,0 +1,308 @@
+//! Network architecture description: blocks → primitive op program.
+
+pub use crate::sparse::conv::Act;
+
+/// High-level building blocks (what the NAS samples and the paper's Fig. 10
+/// chains together).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Block {
+    /// Stem: full k×k convolution on the 2-channel input representation.
+    Stem { k: usize, cout: usize, stride: usize },
+    /// Inverted residual (MobileNetV2 MBConv): 1×1 expand (ReLU6) →
+    /// k×k depthwise (ReLU6, stride s) → 1×1 project (linear);
+    /// identity shortcut iff `stride == 1 && cin == cout`.
+    MBConv { cout: usize, expand: usize, k: usize, stride: usize },
+    /// Plain 1×1 conv (channel mixer, e.g. before the head).
+    Conv1x1 { cout: usize, act: Act },
+    /// Global average pool over tokens + fully-connected classifier.
+    PoolFc,
+}
+
+/// Primitive ops — the flat program the executor / simulator / optimizer
+/// all consume. Channel sizes are resolved (no "expand ratios" here).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Conv1x1 { cin: usize, cout: usize, act: Act },
+    /// Full k×k conv (stride 1 = submanifold; stride 2 = sparse downsample).
+    ConvKxK { k: usize, cin: usize, cout: usize, stride: usize, act: Act },
+    /// Depthwise k×k conv.
+    DwConv { k: usize, c: usize, stride: usize, act: Act },
+    /// Fork the stream for an identity shortcut (pushes a copy).
+    ResFork,
+    /// Join: add the top two streams (tokens identical by submanifold
+    /// construction).
+    ResAdd,
+    GlobalPool { c: usize },
+    Fc { cin: usize, cout: usize },
+}
+
+impl Op {
+    /// Does this op carry weights?
+    pub fn has_weights(&self) -> bool {
+        matches!(self, Op::Conv1x1 { .. } | Op::ConvKxK { .. } | Op::DwConv { .. } | Op::Fc { .. })
+    }
+
+    /// Output channels given input channels (for shape checking).
+    pub fn cout(&self) -> Option<usize> {
+        match self {
+            Op::Conv1x1 { cout, .. } | Op::ConvKxK { cout, .. } | Op::Fc { cout, .. } => Some(*cout),
+            Op::DwConv { c, .. } | Op::GlobalPool { c } => Some(*c),
+            Op::ResFork | Op::ResAdd => None,
+        }
+    }
+
+    /// Spatial stride of the op (1 for non-spatial ops).
+    pub fn stride(&self) -> usize {
+        match self {
+            Op::ConvKxK { stride, .. } | Op::DwConv { stride, .. } => *stride,
+            _ => 1,
+        }
+    }
+
+    /// Weight element count (int8 path; bias excluded).
+    pub fn weight_count(&self) -> usize {
+        match self {
+            Op::Conv1x1 { cin, cout, .. } => cin * cout,
+            Op::ConvKxK { k, cin, cout, .. } => k * k * cin * cout,
+            Op::DwConv { k, c, .. } => k * k * c,
+            Op::Fc { cin, cout } => cin * cout,
+            _ => 0,
+        }
+    }
+}
+
+/// A complete network: input geometry + blocks + classifier width.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub w: usize,
+    pub h: usize,
+    pub cin: usize,
+    pub n_classes: usize,
+    pub blocks: Vec<Block>,
+}
+
+impl NetworkSpec {
+    /// Expand blocks into the primitive op program, checking shapes.
+    pub fn ops(&self) -> Vec<Op> {
+        let mut ops = Vec::new();
+        let mut c = self.cin;
+        for b in &self.blocks {
+            match *b {
+                Block::Stem { k, cout, stride } => {
+                    ops.push(Op::ConvKxK { k, cin: c, cout, stride, act: Act::Relu6 });
+                    c = cout;
+                }
+                Block::MBConv { cout, expand, k, stride } => {
+                    let residual = stride == 1 && c == cout;
+                    let ce = c * expand;
+                    if residual {
+                        ops.push(Op::ResFork);
+                    }
+                    if expand != 1 {
+                        ops.push(Op::Conv1x1 { cin: c, cout: ce, act: Act::Relu6 });
+                    }
+                    ops.push(Op::DwConv { k, c: ce, stride, act: Act::Relu6 });
+                    ops.push(Op::Conv1x1 { cin: ce, cout, act: Act::None });
+                    if residual {
+                        ops.push(Op::ResAdd);
+                    }
+                    c = cout;
+                }
+                Block::Conv1x1 { cout, act } => {
+                    ops.push(Op::Conv1x1 { cin: c, cout, act });
+                    c = cout;
+                }
+                Block::PoolFc => {
+                    ops.push(Op::GlobalPool { c });
+                    ops.push(Op::Fc { cin: c, cout: self.n_classes });
+                }
+            }
+        }
+        ops
+    }
+
+    /// Per-op input spatial size (w, h), following stride-2 downsamples.
+    pub fn op_resolutions(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let (mut w, mut h) = (self.w, self.h);
+        for op in self.ops() {
+            out.push((w, h));
+            if op.stride() == 2 {
+                w = (w + 1) / 2;
+                h = (h + 1) / 2;
+            }
+        }
+        out
+    }
+
+    /// Total downsampling factor (product of strides).
+    pub fn total_downsample(&self) -> usize {
+        self.ops().iter().map(|o| o.stride()).product()
+    }
+
+    /// Total weight parameters (conv + fc).
+    pub fn param_count(&self) -> usize {
+        let ops = self.ops();
+        let mut n = 0;
+        for op in &ops {
+            n += op.weight_count();
+            if let Some(co) = op.cout() {
+                if op.has_weights() {
+                    n += co; // bias
+                }
+            }
+        }
+        n
+    }
+
+    /// MobileNetV2 with width multiplier 0.5 — the paper's fixed baseline
+    /// model (§4.4, Table 1). Channel ladder follows the MobileNetV2 paper
+    /// scaled by 0.5 (min 8, multiples of 8 where possible); the 34×34-class
+    /// datasets use [`NetworkSpec::compact`] instead, as the paper does.
+    pub fn mobilenet_v2_05(name: &str, w: usize, h: usize, n_classes: usize) -> NetworkSpec {
+        // (cout, expand, stride, repeats) per MobileNetV2 stage, width ×0.5.
+        let stages: &[(usize, usize, usize, usize)] = &[
+            (8, 1, 1, 1),   // 16→8
+            (12, 6, 2, 2),  // 24→12
+            (16, 6, 2, 3),  // 32→16
+            (32, 6, 2, 4),  // 64→32
+            (48, 6, 1, 3),  // 96→48
+            (80, 6, 2, 3),  // 160→80
+            (160, 6, 1, 1), // 320→160
+        ];
+        let mut blocks = vec![Block::Stem { k: 3, cout: 16, stride: 2 }];
+        for &(cout, expand, stride, repeats) in stages {
+            for r in 0..repeats {
+                blocks.push(Block::MBConv {
+                    cout,
+                    expand,
+                    k: 3,
+                    stride: if r == 0 { stride } else { 1 },
+                });
+            }
+        }
+        blocks.push(Block::Conv1x1 { cout: 640, act: Act::Relu6 });
+        blocks.push(Block::PoolFc);
+        NetworkSpec {
+            name: name.to_string(),
+            w,
+            h,
+            cin: 2,
+            n_classes,
+            blocks,
+        }
+    }
+
+    /// Compact net for small-resolution datasets (N-MNIST 34×34,
+    /// RoShamBo17 64×64) — the "customized network architecture" of §4.2.
+    pub fn compact(name: &str, w: usize, h: usize, n_classes: usize) -> NetworkSpec {
+        NetworkSpec {
+            name: name.to_string(),
+            w,
+            h,
+            cin: 2,
+            n_classes,
+            blocks: vec![
+                Block::Stem { k: 3, cout: 8, stride: 1 },
+                Block::MBConv { cout: 12, expand: 2, k: 3, stride: 2 },
+                Block::MBConv { cout: 12, expand: 2, k: 3, stride: 1 },
+                Block::MBConv { cout: 24, expand: 2, k: 3, stride: 2 },
+                Block::MBConv { cout: 24, expand: 2, k: 3, stride: 1 },
+                Block::MBConv { cout: 48, expand: 2, k: 3, stride: 2 },
+                Block::Conv1x1 { cout: 96, act: Act::Relu6 },
+                Block::PoolFc,
+            ],
+        }
+    }
+
+    /// Tiny net for unit tests and the quickstart example.
+    pub fn tiny(w: usize, h: usize, n_classes: usize) -> NetworkSpec {
+        NetworkSpec {
+            name: "tiny".to_string(),
+            w,
+            h,
+            cin: 2,
+            n_classes,
+            blocks: vec![
+                Block::Stem { k: 3, cout: 4, stride: 1 },
+                Block::MBConv { cout: 4, expand: 2, k: 3, stride: 1 }, // residual
+                Block::MBConv { cout: 8, expand: 2, k: 3, stride: 2 },
+                Block::PoolFc,
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mbconv_expansion_shapes() {
+        let net = NetworkSpec::tiny(16, 16, 3);
+        let ops = net.ops();
+        // Stem, [fork, 1x1, dw, 1x1, add], [1x1, dw s2, 1x1], pool, fc
+        assert!(matches!(ops[0], Op::ConvKxK { k: 3, cin: 2, cout: 4, stride: 1, .. }));
+        assert!(matches!(ops[1], Op::ResFork));
+        assert!(matches!(ops[2], Op::Conv1x1 { cin: 4, cout: 8, .. }));
+        assert!(matches!(ops[3], Op::DwConv { c: 8, stride: 1, .. }));
+        assert!(matches!(ops[4], Op::Conv1x1 { cin: 8, cout: 4, act: Act::None }));
+        assert!(matches!(ops[5], Op::ResAdd));
+        assert!(matches!(ops[6], Op::Conv1x1 { cin: 4, cout: 8, .. }));
+        assert!(matches!(ops[7], Op::DwConv { c: 8, stride: 2, .. }));
+        assert!(matches!(ops[8], Op::Conv1x1 { cin: 8, cout: 8, act: Act::None }));
+        assert!(matches!(ops[9], Op::GlobalPool { c: 8 }));
+        assert!(matches!(ops[10], Op::Fc { cin: 8, cout: 3 }));
+    }
+
+    #[test]
+    fn no_residual_when_channels_change_or_stride2() {
+        let net = NetworkSpec {
+            name: "t".into(),
+            w: 8,
+            h: 8,
+            cin: 2,
+            n_classes: 2,
+            blocks: vec![
+                Block::Stem { k: 3, cout: 4, stride: 1 },
+                Block::MBConv { cout: 6, expand: 2, k: 3, stride: 1 }, // cin!=cout
+                Block::MBConv { cout: 6, expand: 2, k: 3, stride: 2 }, // stride 2
+                Block::PoolFc,
+            ],
+        };
+        let ops = net.ops();
+        assert!(!ops.iter().any(|o| matches!(o, Op::ResFork | Op::ResAdd)));
+    }
+
+    #[test]
+    fn resolutions_follow_strides() {
+        let net = NetworkSpec::tiny(16, 16, 3);
+        let res = net.op_resolutions();
+        let ops = net.ops();
+        assert_eq!(res.len(), ops.len());
+        assert_eq!(res[0], (16, 16));
+        // After the stride-2 dw (op index 7), resolution halves for op 8.
+        assert_eq!(res[7], (16, 16));
+        assert_eq!(res[8], (8, 8));
+        assert_eq!(net.total_downsample(), 2);
+    }
+
+    #[test]
+    fn mobilenet_has_expected_structure() {
+        let net = NetworkSpec::mobilenet_v2_05("mbv2", 128, 128, 10);
+        let ops = net.ops();
+        assert_eq!(net.total_downsample(), 32);
+        let n_dw = ops.iter().filter(|o| matches!(o, Op::DwConv { .. })).count();
+        assert_eq!(n_dw, 17); // 17 MBConv blocks
+        let n_res = ops.iter().filter(|o| matches!(o, Op::ResAdd)).count();
+        assert_eq!(n_res, 10); // repeats with stride 1 and equal channels
+        assert!(net.param_count() > 100_000 && net.param_count() < 2_000_000);
+    }
+
+    #[test]
+    fn param_count_small_for_tiny() {
+        let net = NetworkSpec::tiny(8, 8, 2);
+        assert!(net.param_count() < 1000, "{}", net.param_count());
+    }
+}

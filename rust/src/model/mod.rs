@@ -1,0 +1,23 @@
+//! Network description, weights, quantization, and functional execution.
+//!
+//! A [`graph::NetworkSpec`] is a list of [`graph::Block`]s (stem conv,
+//! MBConv inverted-residual blocks, pooling + FC head — the model family
+//! the paper builds on, §3.3.7). Blocks expand to a flat [`graph::Op`]
+//! program which:
+//!
+//! - [`exec`] runs functionally in f32 (training parity) or int8
+//!   (hardware-exact) — the oracle for the cycle-level simulator,
+//! - `crate::arch::builder` maps 1:1 onto dataflow hardware modules,
+//! - `crate::hwopt` costs per-op under the Eqn. 5 model.
+//!
+//! [`weights`] holds the tensors (loadable from the python-exported binary
+//! container), and [`quant`] converts calibrated float weights into the
+//! dyadic int8 form both the functional int8 path and the simulator
+//! consume.
+pub mod graph;
+pub mod weights;
+pub mod quant;
+pub mod exec;
+
+pub use graph::{Act, Block, NetworkSpec, Op};
+pub use weights::{OpWeights, QuantOpWeights};

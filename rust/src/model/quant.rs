@@ -1,0 +1,248 @@
+//! Post-training quantization: calibrated float weights → dyadic int8
+//! network (HAWQ-V3-style, matching the paper's 8-bit deployment, §4.1).
+//!
+//! Procedure:
+//! 1. Run the f32 network over calibration inputs, recording the max
+//!    absolute activation at every op output (symmetric per-tensor scales).
+//! 2. For residual blocks, pin the project-conv output scale to the block
+//!    input scale so the int8 identity add is scale-consistent (shared-
+//!    scale residuals, as integer-only inference frameworks do).
+//! 3. Quantize weights per-tensor symmetric; fold biases into the
+//!    accumulator domain; derive each op's dyadic requantizer
+//!    `s_in · s_w / s_out` with the activation clamp folded in.
+
+use super::exec::{forward_f32_observed, Observed};
+use super::graph::{Act, NetworkSpec, Op};
+use super::weights::{FloatWeights, QuantOpWeights};
+use crate::sparse::quant::{quantize_symmetric, Requant, QMAX, QMIN};
+use crate::sparse::SparseMap;
+
+/// Fully quantized network, aligned to `spec.ops()`.
+#[derive(Clone, Debug)]
+pub struct QuantizedNet {
+    pub spec: NetworkSpec,
+    /// Scale mapping f32 input → int8.
+    pub input_scale: f32,
+    /// Per-op quantized weights (None for weightless ops).
+    pub per_op: Vec<Option<QuantOpWeights>>,
+    /// Per-op output activation scale (for debugging / staging).
+    pub out_scales: Vec<f32>,
+}
+
+/// Calibrate and quantize. `calib` should be a handful of representative
+/// inputs (the paper's flow calibrates on the training set).
+pub fn quantize_network(
+    spec: &NetworkSpec,
+    weights: &FloatWeights,
+    calib: &[SparseMap<f32>],
+) -> QuantizedNet {
+    assert!(!calib.is_empty(), "need at least one calibration sample");
+    let ops = spec.ops();
+    // 1. Collect amax per op output and for the input.
+    let mut amax_out = vec![0f32; ops.len()];
+    let mut amax_in = 0f32;
+    for input in calib {
+        amax_in = input.feats.iter().fold(amax_in, |m, &v| m.max(v.abs()));
+        forward_f32_observed(spec, weights, input, &mut |i, obs| {
+            let a = match obs {
+                Observed::MapF32(m) => m.feats.iter().fold(0f32, |mm, &v| mm.max(v.abs())),
+                Observed::VecF32(v) => v.iter().fold(0f32, |mm, &x| mm.max(x.abs())),
+                _ => 0.0,
+            };
+            amax_out[i] = amax_out[i].max(a);
+        });
+    }
+    let input_scale = (amax_in.max(1e-6)) / 127.0;
+
+    // 2. Output scale per op, with input-scale propagation for weightless ops.
+    let mut s_out = vec![0f32; ops.len()];
+    let mut s_in = vec![0f32; ops.len()];
+    let mut cur_scale = input_scale;
+    let mut fork_stack: Vec<f32> = Vec::new();
+    // Map from ResAdd index to the index of the conv op feeding it (the
+    // project conv right before), so we can pin scales.
+    for (i, op) in ops.iter().enumerate() {
+        s_in[i] = cur_scale;
+        match op {
+            Op::ResFork => {
+                fork_stack.push(cur_scale);
+                s_out[i] = cur_scale;
+            }
+            Op::ResAdd => {
+                let fork_scale = fork_stack.pop().expect("unbalanced fork/add");
+                // Pin the producing conv's output scale (handled below via
+                // `pinned`), add output keeps the shared scale.
+                s_out[i] = fork_scale;
+                // Rewrite the previous op's output scale.
+                s_out[i - 1] = fork_scale;
+                s_in[i] = fork_scale;
+            }
+            Op::GlobalPool { .. } => {
+                // Average preserves scale.
+                s_out[i] = cur_scale;
+            }
+            Op::Fc { .. } => {
+                // Logits stay int32; nominal scale for bookkeeping.
+                s_out[i] = cur_scale;
+            }
+            _ => {
+                s_out[i] = (amax_out[i].max(1e-6)) / 127.0;
+            }
+        }
+        cur_scale = s_out[i];
+    }
+    // Recompute s_in after the ResAdd rewrites (a second forward pass over
+    // the scale chain keeps everything consistent).
+    let mut cur_scale = input_scale;
+    let mut fork_stack: Vec<f32> = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        s_in[i] = cur_scale;
+        match op {
+            Op::ResFork => fork_stack.push(cur_scale),
+            Op::ResAdd => {
+                fork_stack.pop();
+            }
+            _ => {}
+        }
+        cur_scale = s_out[i];
+    }
+
+    // 3. Quantize weights, fold biases, build requantizers.
+    let mut per_op = Vec::with_capacity(ops.len());
+    for (i, op) in ops.iter().enumerate() {
+        if !op.has_weights() {
+            per_op.push(None);
+            continue;
+        }
+        let ow = &weights.per_op[i];
+        let (sw, qw) = quantize_symmetric(&ow.w);
+        let acc_scale = s_in[i] * sw;
+        let b: Vec<i32> = ow
+            .b
+            .iter()
+            .map(|&v| (v / acc_scale).round().clamp(i32::MIN as f32, i32::MAX as f32) as i32)
+            .collect();
+        let act = match *op {
+            Op::Conv1x1 { act, .. } | Op::ConvKxK { act, .. } | Op::DwConv { act, .. } => act,
+            _ => Act::None,
+        };
+        let (lo, hi) = match act {
+            Act::None => (QMIN, QMAX),
+            Act::Relu => (0, QMAX),
+            Act::Relu6 => (0, ((6.0 / s_out[i]).round() as i32).clamp(1, QMAX)),
+        };
+        let rq = if matches!(op, Op::Fc { .. }) {
+            // Logits stay in the accumulator domain; unit requant unused.
+            Requant::unit()
+        } else {
+            Requant::from_scale((acc_scale / s_out[i]) as f64, lo, hi)
+        };
+        per_op.push(Some(QuantOpWeights {
+            w: qw,
+            b,
+            rq,
+            s_in: s_in[i],
+            s_out: s_out[i],
+        }));
+    }
+
+    QuantizedNet {
+        spec: spec.clone(),
+        input_scale,
+        per_op,
+        out_scales: s_out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{repr::histogram2_norm, DatasetProfile};
+    use crate::model::exec::{forward_f32, forward_i8};
+    use crate::util::Rng;
+
+    fn inputs(n: usize) -> Vec<SparseMap<f32>> {
+        let p = DatasetProfile::n_mnist();
+        let mut rng = Rng::new(99);
+        (0..n)
+            .map(|i| {
+                let es = p.sample(i % p.n_classes, &mut rng);
+                histogram2_norm(&es, p.w, p.h, 8.0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quantized_net_shape_aligned() {
+        let spec = NetworkSpec::tiny(34, 34, 4);
+        let w = FloatWeights::random(&spec, 5);
+        let qnet = quantize_network(&spec, &w, &inputs(2));
+        let ops = spec.ops();
+        assert_eq!(qnet.per_op.len(), ops.len());
+        for (q, op) in qnet.per_op.iter().zip(&ops) {
+            assert_eq!(q.is_some(), op.has_weights());
+            if let Some(q) = q {
+                assert_eq!(q.w.len(), op.weight_count());
+            }
+        }
+    }
+
+    #[test]
+    fn residual_scales_are_shared() {
+        let spec = NetworkSpec::tiny(34, 34, 4);
+        let w = FloatWeights::random(&spec, 5);
+        let qnet = quantize_network(&spec, &w, &inputs(2));
+        let ops = spec.ops();
+        // Find fork/add pair in the tiny net.
+        let fork = ops.iter().position(|o| matches!(o, Op::ResFork)).unwrap();
+        let add = ops.iter().position(|o| matches!(o, Op::ResAdd)).unwrap();
+        let fork_in_scale = qnet.out_scales[fork];
+        assert_eq!(qnet.out_scales[add - 1], fork_in_scale);
+        assert_eq!(qnet.out_scales[add], fork_in_scale);
+    }
+
+    #[test]
+    fn relu6_clamp_in_quantized_domain() {
+        let spec = NetworkSpec::tiny(34, 34, 4);
+        let w = FloatWeights::random(&spec, 6);
+        let qnet = quantize_network(&spec, &w, &inputs(2));
+        for (q, op) in qnet.per_op.iter().zip(&spec.ops()) {
+            if let (Some(q), true) = (q, op.has_weights()) {
+                let act = match *op {
+                    Op::Conv1x1 { act, .. } | Op::ConvKxK { act, .. } | Op::DwConv { act, .. } => act,
+                    _ => Act::None,
+                };
+                if matches!(act, Act::Relu6) {
+                    assert_eq!(q.rq.lo, 0);
+                    let q6 = (6.0 / q.s_out).round() as i32;
+                    assert_eq!(q.rq.hi, q6.clamp(1, 127));
+                }
+            }
+        }
+    }
+
+    /// int8 logits must correlate strongly with f32 logits (rank-level
+    /// agreement tested in exec; here check magnitude tracking).
+    #[test]
+    fn logit_scale_tracks_f32() {
+        let spec = NetworkSpec::tiny(34, 34, 4);
+        let w = FloatWeights::random(&spec, 8);
+        let calib = inputs(4);
+        let qnet = quantize_network(&spec, &w, &calib);
+        let input = &calib[0];
+        let lf = forward_f32(&spec, &w, input);
+        let li = forward_i8(&qnet, input);
+        // Dequantize logits: li · (s_pool · s_wfc)
+        let fc_idx = spec.ops().len() - 1;
+        let q = qnet.per_op[fc_idx].as_ref().unwrap();
+        let (sw, _) = crate::sparse::quant::quantize_symmetric(&w.per_op[fc_idx].w);
+        let s_logit = q.s_in * sw;
+        for (a, &b) in lf.iter().zip(&li) {
+            let deq = b as f32 * s_logit;
+            assert!(
+                (a - deq).abs() < 0.25 * lf.iter().fold(0f32, |m, &v| m.max(v.abs())).max(0.5),
+                "f32 {a} vs dequantized {deq}"
+            );
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Weight containers and the binary tensor file exchanged with python.
+//!
+//! Float weights come either from the python training path
+//! (`artifacts/<net>_weights.bin`, written by `python/compile/train.py`) or
+//! from the seeded random initializer (tests, benches that don't need
+//! trained accuracy).
+//!
+//! Tensor container layout (little-endian):
+//! ```text
+//! magic "ESDW" (u32 0x45534457), version u32 = 1, n_tensors u32
+//! per tensor: name_len u32, name bytes, dtype u8 (0=f32,1=i8,2=i32),
+//!             ndim u32, dims u32×ndim, raw data
+//! ```
+
+use super::graph::{NetworkSpec, Op};
+use crate::sparse::quant::Requant;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Float weights for one primitive op (empty vecs for no-weight ops).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OpWeights {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Quantized weights + requantization for one op.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantOpWeights {
+    pub w: Vec<i8>,
+    /// Bias in the accumulator domain (s_in · s_w).
+    pub b: Vec<i32>,
+    pub rq: Requant,
+    /// Input/output activation scales (for staging & debugging).
+    pub s_in: f32,
+    pub s_out: f32,
+}
+
+/// All float weights of a network, aligned to `spec.ops()` indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FloatWeights {
+    pub per_op: Vec<OpWeights>,
+}
+
+impl FloatWeights {
+    /// He-style random init, deterministic in `seed`.
+    pub fn random(spec: &NetworkSpec, seed: u64) -> FloatWeights {
+        let mut rng = Rng::new(seed);
+        let per_op = spec
+            .ops()
+            .iter()
+            .map(|op| {
+                if !op.has_weights() {
+                    return OpWeights::default();
+                }
+                let n = op.weight_count();
+                let fan_in = match op {
+                    Op::Conv1x1 { cin, .. } => *cin,
+                    Op::ConvKxK { k, cin, .. } => k * k * cin,
+                    Op::DwConv { k, .. } => k * k,
+                    Op::Fc { cin, .. } => *cin,
+                    _ => 1,
+                };
+                let std = (2.0 / fan_in as f64).sqrt();
+                let w = (0..n).map(|_| (rng.normal() * std) as f32).collect();
+                let b = vec![0.0f32; op.cout().unwrap()];
+                OpWeights { w, b }
+            })
+            .collect();
+        FloatWeights { per_op }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor container I/O
+// ---------------------------------------------------------------------------
+
+pub const MAGIC: u32 = 0x4553_4457; // "ESDW"
+pub const VERSION: u32 = 1;
+
+/// A named tensor from the container.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I8 { dims: Vec<usize>, data: Vec<i8> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I8 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+}
+
+/// Named tensor store.
+pub type TensorMap = BTreeMap<String, Tensor>;
+
+/// Write a tensor container.
+pub fn write_tensors(path: &Path, tensors: &TensorMap) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&MAGIC.to_le_bytes())?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let (dtype, dims): (u8, &[usize]) = match t {
+            Tensor::F32 { dims, .. } => (0, dims),
+            Tensor::I8 { dims, .. } => (1, dims),
+            Tensor::I32 { dims, .. } => (2, dims),
+        };
+        f.write_all(&[dtype])?;
+        f.write_all(&(dims.len() as u32).to_le_bytes())?;
+        for &d in dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            Tensor::F32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::I8 { data, .. } => {
+                let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+                f.write_all(&bytes)?;
+            }
+            Tensor::I32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    f.flush()
+}
+
+fn rd_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read a tensor container.
+pub fn read_tensors(path: &Path) -> std::io::Result<TensorMap> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let err = |m: String| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
+    if rd_u32(&mut f)? != MAGIC {
+        return Err(err("bad magic".into()));
+    }
+    let v = rd_u32(&mut f)?;
+    if v != VERSION {
+        return Err(err(format!("unsupported version {v}")));
+    }
+    let n = rd_u32(&mut f)? as usize;
+    let mut out = TensorMap::new();
+    for _ in 0..n {
+        let name_len = rd_u32(&mut f)? as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        f.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).map_err(|e| err(e.to_string()))?;
+        let mut dtype = [0u8; 1];
+        f.read_exact(&mut dtype)?;
+        let ndim = rd_u32(&mut f)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(rd_u32(&mut f)? as usize);
+        }
+        let count: usize = dims.iter().product();
+        let t = match dtype[0] {
+            0 => {
+                let mut data = Vec::with_capacity(count);
+                let mut b = [0u8; 4];
+                for _ in 0..count {
+                    f.read_exact(&mut b)?;
+                    data.push(f32::from_le_bytes(b));
+                }
+                Tensor::F32 { dims, data }
+            }
+            1 => {
+                let mut bytes = vec![0u8; count];
+                f.read_exact(&mut bytes)?;
+                Tensor::I8 { dims, data: bytes.iter().map(|&b| b as i8).collect() }
+            }
+            2 => {
+                let mut data = Vec::with_capacity(count);
+                let mut b = [0u8; 4];
+                for _ in 0..count {
+                    f.read_exact(&mut b)?;
+                    data.push(i32::from_le_bytes(b));
+                }
+                Tensor::I32 { dims, data }
+            }
+            d => return Err(err(format!("unknown dtype {d}"))),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Load [`FloatWeights`] for `spec` from a tensor container: weighted op
+/// `i` reads tensors `op{i}.w` and `op{i}.b` (the naming contract with
+/// `python/compile/train.py`).
+pub fn load_float_weights(path: &Path, spec: &NetworkSpec) -> std::io::Result<FloatWeights> {
+    let tensors = read_tensors(path)?;
+    let err = |m: String| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
+    let ops = spec.ops();
+    let mut per_op = Vec::with_capacity(ops.len());
+    for (i, op) in ops.iter().enumerate() {
+        if !op.has_weights() {
+            per_op.push(OpWeights::default());
+            continue;
+        }
+        let wt = tensors
+            .get(&format!("op{i}.w"))
+            .and_then(|t| t.as_f32())
+            .ok_or_else(|| err(format!("missing f32 tensor op{i}.w")))?;
+        let bt = tensors
+            .get(&format!("op{i}.b"))
+            .and_then(|t| t.as_f32())
+            .ok_or_else(|| err(format!("missing f32 tensor op{i}.b")))?;
+        if wt.len() != op.weight_count() || bt.len() != op.cout().unwrap() {
+            return Err(err(format!(
+                "op{i} shape mismatch: got w={} b={}, want w={} b={}",
+                wt.len(),
+                bt.len(),
+                op.weight_count(),
+                op.cout().unwrap()
+            )));
+        }
+        per_op.push(OpWeights { w: wt.to_vec(), b: bt.to_vec() });
+    }
+    Ok(FloatWeights { per_op })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_align_with_ops() {
+        let spec = NetworkSpec::tiny(16, 16, 3);
+        let w = FloatWeights::random(&spec, 1);
+        let ops = spec.ops();
+        assert_eq!(w.per_op.len(), ops.len());
+        for (ow, op) in w.per_op.iter().zip(&ops) {
+            assert_eq!(ow.w.len(), op.weight_count());
+            if op.has_weights() {
+                assert_eq!(ow.b.len(), op.cout().unwrap());
+            }
+        }
+        // Deterministic.
+        assert_eq!(FloatWeights::random(&spec, 1), w);
+        assert_ne!(FloatWeights::random(&spec, 2), w);
+    }
+
+    #[test]
+    fn tensor_container_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("esda_w_{}", std::process::id()));
+        let path = dir.join("t.esdw");
+        let mut m = TensorMap::new();
+        m.insert("a".into(), Tensor::F32 { dims: vec![2, 3], data: vec![1.0, 2.0, 3.0, -4.0, 0.5, 6.0] });
+        m.insert("b".into(), Tensor::I8 { dims: vec![4], data: vec![-128, 0, 1, 127] });
+        m.insert("c".into(), Tensor::I32 { dims: vec![2], data: vec![i32::MIN, i32::MAX] });
+        write_tensors(&path, &m).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_float_weights_checks_shapes() {
+        let dir = std::env::temp_dir().join(format!("esda_w2_{}", std::process::id()));
+        let path = dir.join("net.esdw");
+        let spec = NetworkSpec::tiny(8, 8, 2);
+        let fw = FloatWeights::random(&spec, 3);
+        let mut m = TensorMap::new();
+        for (i, ow) in fw.per_op.iter().enumerate() {
+            if ow.w.is_empty() {
+                continue;
+            }
+            m.insert(format!("op{i}.w"), Tensor::F32 { dims: vec![ow.w.len()], data: ow.w.clone() });
+            m.insert(format!("op{i}.b"), Tensor::F32 { dims: vec![ow.b.len()], data: ow.b.clone() });
+        }
+        write_tensors(&path, &m).unwrap();
+        let loaded = load_float_weights(&path, &spec).unwrap();
+        assert_eq!(loaded, fw);
+        // Corrupt: drop one tensor.
+        m.remove("op0.w");
+        write_tensors(&path, &m).unwrap();
+        assert!(load_float_weights(&path, &spec).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

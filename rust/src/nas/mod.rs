@@ -1,0 +1,18 @@
+//! Model search — the paper's two-step greedy co-optimization (§3.4.2).
+//!
+//! 1. Randomly sample MBConv architectures within a parameter budget, with
+//!    the total downsampling ratio fixed per dataset ([`space`]).
+//! 2. Push every sample through the Eqn. 6 hardware optimizer; keep the
+//!    top-k by estimated throughput; score those for accuracy and pick the
+//!    best ([`search`]).
+//!
+//! The paper trains the top-k candidates with MinkowskiEngine; here the
+//! accuracy scoring is a **linear-probe proxy** (random-feature network +
+//! trained softmax head on the synthetic dataset — documented substitution,
+//! DESIGN.md §2). The full float training lives in the python path; the
+//! exported accuracies of the final models come from there.
+pub mod space;
+pub mod search;
+
+pub use search::{search, Candidate, SearchConfig};
+pub use space::{sample_network, SearchSpace};

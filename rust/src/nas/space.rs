@@ -1,0 +1,138 @@
+//! The MBConv search space (§3.4.2): number of blocks, per-block stride,
+//! and per-layer channel widths, under a parameter budget and a fixed total
+//! downsampling ratio.
+
+use crate::model::graph::{Act, Block, NetworkSpec};
+use crate::util::Rng;
+
+/// Search-space description.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub w: usize,
+    pub h: usize,
+    pub n_classes: usize,
+    /// Total stride the sampled net must realize (product of block strides
+    /// including the stem) — fixed per dataset as in the paper.
+    pub total_downsample: usize,
+    /// Number of MBConv blocks to sample between.
+    pub min_blocks: usize,
+    pub max_blocks: usize,
+    /// Channel choices.
+    pub channels: Vec<usize>,
+    /// Expansion choices.
+    pub expands: Vec<usize>,
+    /// Parameter budget (on-chip weight capacity).
+    pub max_params: usize,
+}
+
+impl SearchSpace {
+    /// Default space for a dataset resolution (mirrors the paper's setup:
+    /// MBConv models sized for the ZCU102 on-chip buffer).
+    pub fn for_dataset(w: usize, h: usize, n_classes: usize) -> SearchSpace {
+        let total_downsample = if w.min(h) >= 128 {
+            32
+        } else if w.min(h) >= 64 {
+            16
+        } else {
+            8
+        };
+        SearchSpace {
+            w,
+            h,
+            n_classes,
+            total_downsample,
+            min_blocks: 3,
+            max_blocks: 8,
+            channels: vec![8, 12, 16, 24, 32, 48, 64, 96],
+            expands: vec![1, 2, 4, 6],
+            max_params: 400_000,
+        }
+    }
+}
+
+/// Sample one architecture. Strides: the stem always takes one 2× step;
+/// the remaining log2(total/2) 2× steps are placed at random block
+/// positions (monotone resolution schedule). Channels are sampled
+/// non-decreasing, as mobile nets do.
+pub fn sample_network(space: &SearchSpace, rng: &mut Rng, name: &str) -> NetworkSpec {
+    loop {
+        let n_blocks = space.min_blocks + rng.index(space.max_blocks - space.min_blocks + 1);
+        let n_down_left = (space.total_downsample as f64).log2() as usize - 1;
+        // Choose which blocks downsample.
+        let mut strides = vec![1usize; n_blocks];
+        let idx = rng.sample_indices(n_blocks, n_down_left.min(n_blocks));
+        for i in idx {
+            strides[i] = 2;
+        }
+        // Non-decreasing channel ladder.
+        let mut ch_idx = rng.index(3); // start small
+        let stem_c = space.channels[rng.index(2)];
+        let mut blocks = vec![Block::Stem { k: 3, cout: stem_c, stride: 2 }];
+        for &s in &strides {
+            if rng.chance(0.5) && ch_idx + 1 < space.channels.len() {
+                ch_idx += 1;
+            }
+            blocks.push(Block::MBConv {
+                cout: space.channels[ch_idx],
+                expand: *rng.choose(&space.expands),
+                k: 3,
+                stride: s,
+            });
+        }
+        let head = space.channels[(ch_idx + 2).min(space.channels.len() - 1)] * 2;
+        blocks.push(Block::Conv1x1 { cout: head, act: Act::Relu6 });
+        blocks.push(Block::PoolFc);
+        let spec = NetworkSpec {
+            name: name.to_string(),
+            w: space.w,
+            h: space.h,
+            cin: 2,
+            n_classes: space.n_classes,
+            blocks,
+        };
+        if spec.param_count() <= space.max_params
+            && spec.total_downsample() == space.total_downsample
+        {
+            return spec;
+        }
+        // Resample on budget/stride miss (bounded by construction: strides
+        // always multiply to the target; only the budget can reject).
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_respect_constraints() {
+        let space = SearchSpace::for_dataset(128, 128, 10);
+        let mut rng = Rng::new(1);
+        for i in 0..20 {
+            let net = sample_network(&space, &mut rng, &format!("s{i}"));
+            assert_eq!(net.total_downsample(), space.total_downsample, "sample {i}");
+            assert!(net.param_count() <= space.max_params, "sample {i}");
+            assert!(net.blocks.len() >= space.min_blocks + 2);
+            // Must end with PoolFc.
+            assert!(matches!(net.blocks.last(), Some(Block::PoolFc)));
+        }
+    }
+
+    #[test]
+    fn samples_are_diverse() {
+        let space = SearchSpace::for_dataset(64, 64, 3);
+        let mut rng = Rng::new(2);
+        let nets: Vec<NetworkSpec> = (0..10).map(|i| sample_network(&space, &mut rng, &format!("s{i}"))).collect();
+        let distinct: std::collections::BTreeSet<String> =
+            nets.iter().map(|n| format!("{:?}", n.blocks)).collect();
+        assert!(distinct.len() >= 5, "only {} distinct architectures", distinct.len());
+    }
+
+    #[test]
+    fn small_resolution_uses_smaller_downsample() {
+        let s34 = SearchSpace::for_dataset(34, 34, 10);
+        assert_eq!(s34.total_downsample, 8);
+        let s240 = SearchSpace::for_dataset(240, 180, 24);
+        assert_eq!(s240.total_downsample, 32);
+    }
+}

@@ -1,0 +1,122 @@
+//! Paper-style table/figure rendering used by the benches and the CLI.
+
+use std::fmt::Write as _;
+
+/// A simple aligned text table.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{:<width$}", c, width = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &widths));
+        }
+        out
+    }
+}
+
+/// Format a float with fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Format a ratio as "N.N×".
+pub fn speedup(v: f64) -> String {
+    format!("{v:.1}×")
+}
+
+/// A named (x, y) series — the text rendering of a figure.
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render figure series as aligned columns (x then one column per series).
+pub fn render_series(title: &str, xlabel: &str, series: &[Series]) -> String {
+    let mut t = Table::new(
+        title,
+        &std::iter::once(xlabel)
+            .chain(series.iter().map(|s| s.name.as_str()))
+            .collect::<Vec<_>>(),
+    );
+    if let Some(first) = series.first() {
+        for (i, &(x, _)) in first.points.iter().enumerate() {
+            let mut row = vec![f(x, 2)];
+            for s in series {
+                row.push(f(s.points.get(i).map(|p| p.1).unwrap_or(f64::NAN), 3));
+            }
+            t.row(row);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("longer"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn series_render() {
+        let s = render_series(
+            "Fig",
+            "nz",
+            &[Series { name: "sparse".into(), points: vec![(0.1, 4.5), (0.5, 1.9)] }],
+        );
+        assert!(s.contains("4.500"));
+        assert!(s.contains("0.10"));
+    }
+}

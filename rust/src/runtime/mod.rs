@@ -1,0 +1,129 @@
+//! PJRT runtime: load the AOT-compiled JAX model (HLO text emitted by
+//! `python/compile/aot.py`) and execute it from Rust — the dense-inference
+//! engine that (a) validates the L2/L1 artifacts against the rust oracle
+//! and (b) serves as the "GPU dense" platform stand-in in Fig. 14.
+//!
+//! Python never runs on this path: the HLO text is compiled once by the
+//! PJRT CPU client at load time and executed with concrete buffers
+//! thereafter (see /opt/xla-example/load_hlo for the pattern, and
+//! DESIGN.md for why HLO *text* is the interchange format).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A loaded, compiled model artifact.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input geometry of the dense representation (h, w, c).
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub n_classes: usize,
+}
+
+impl Engine {
+    /// Load an HLO-text artifact plus its metadata JSON
+    /// (`<stem>.meta.json` next to it).
+    pub fn load(hlo_path: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse HLO {hlo_path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        // Metadata: <stem>.meta.json next to <stem>.hlo.txt.
+        let stem = hlo_path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(|n| n.strip_suffix(".hlo.txt"))
+            .ok_or_else(|| anyhow!("artifact path must end in .hlo.txt: {hlo_path:?}"))?;
+        let meta_path = hlo_path.with_file_name(format!("{stem}.meta.json"));
+        let meta_src = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {meta_path:?}"))?;
+        let meta = crate::util::json::parse(&meta_src).map_err(|e| anyhow!("meta json: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("meta missing '{k}'"))
+        };
+        Ok(Engine {
+            client,
+            exe,
+            h: get("h")?,
+            w: get("w")?,
+            c: get("c")?,
+            n_classes: get("n_classes")?,
+        })
+    }
+
+    /// Run one dense inference: input is a dense `h × w × c` f32 buffer
+    /// (channel-minor); returns the logits.
+    pub fn infer_dense(&self, dense: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(dense.len() == self.h * self.w * self.c, "bad input size");
+        let input = xla::Literal::vec1(dense)
+            .reshape(&[self.h as i64, self.w as i64, self.c as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True ⇒ 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let logits = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(logits.len() == self.n_classes, "logit arity");
+        Ok(logits)
+    }
+
+    /// Run one inference on a sparse map (densifies at the boundary — this
+    /// engine is the *dense* platform model).
+    pub fn infer_sparse(&self, m: &crate::sparse::SparseMap<f32>) -> Result<Vec<f32>> {
+        self.infer_dense(&m.to_dense())
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}
+
+/// Default artifact directory (next to the workspace root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("ESDA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when the AOT artifacts for `stem` exist (tests skip gracefully
+/// otherwise, so `cargo test` passes before `make artifacts`).
+pub fn artifact_available(stem: &str) -> bool {
+    artifacts_dir().join(format!("{stem}.hlo.txt")).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smoke: client construction works in this environment.
+    #[test]
+    fn pjrt_cpu_client_constructs() {
+        let c = xla::PjRtClient::cpu().expect("PJRT CPU client");
+        assert!(c.device_count() >= 1);
+    }
+
+    /// Full artifact round-trip — only once `make artifacts` has run.
+    #[test]
+    fn engine_loads_and_infers_if_artifacts_present() {
+        let stem = "tiny_nmnist";
+        if !artifact_available(stem) {
+            eprintln!("skipping: artifacts/{stem}.hlo.txt not built yet");
+            return;
+        }
+        let eng = Engine::load(&artifacts_dir().join(format!("{stem}.hlo.txt"))).unwrap();
+        let dense = vec![0f32; eng.h * eng.w * eng.c];
+        let logits = eng.infer_dense(&dense).unwrap();
+        assert_eq!(logits.len(), eng.n_classes);
+    }
+}

@@ -1,0 +1,246 @@
+//! 2D occupancy bitmap over an H×W grid, plus the *pattern* transforms the
+//! paper's Fig. 3 / Fig. 12 analysis needs:
+//!
+//! - [`Bitmap::dilate`] — nonzero pattern after a **standard** k×k conv
+//!   (every output the kernel can reach becomes nonzero: the dilation
+//!   effect).
+//! - [`Bitmap::submanifold`] — pattern after a submanifold stride-1 conv
+//!   (identical, by construction).
+//! - [`Bitmap::downsample_sparse`] — pattern after a sparse stride-s conv
+//!   (output set iff the s×s input grid contains any nonzero).
+//! - [`Bitmap::downsample_standard`] — pattern after a standard stride-s
+//!   k×k conv (output set iff the k×k window contains any nonzero).
+
+/// Dense bitset over an `h × w` grid, row-major, 64 cells per word.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitmap {
+    pub h: usize,
+    pub w: usize,
+    words: Vec<u64>,
+}
+
+impl Bitmap {
+    pub fn new(w: usize, h: usize) -> Self {
+        Bitmap {
+            h,
+            w,
+            words: vec![0; (h * w + 63) / 64],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, x: usize, y: usize) -> (usize, u64) {
+        let bit = y * self.w + x;
+        (bit >> 6, 1u64 << (bit & 63))
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> bool {
+        debug_assert!(x < self.w && y < self.h);
+        let (wd, mask) = self.idx(x, y);
+        self.words[wd] & mask != 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize) {
+        debug_assert!(x < self.w && y < self.h);
+        let (wd, mask) = self.idx(x, y);
+        self.words[wd] |= mask;
+    }
+
+    #[inline]
+    pub fn clear(&mut self, x: usize, y: usize) {
+        let (wd, mask) = self.idx(x, y);
+        self.words[wd] &= !mask;
+    }
+
+    /// Number of set cells.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction of set cells (the paper's NZ ratio / spatial sparsity S_s).
+    pub fn nz_ratio(&self) -> f64 {
+        self.count() as f64 / (self.h * self.w) as f64
+    }
+
+    /// Iterate set coordinates in ravel order.
+    pub fn iter_set(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.h).flat_map(move |y| (0..self.w).filter_map(move |x| self.get(x, y).then_some((x, y))))
+    }
+
+    /// Pattern after a standard k×k stride-1 conv with `pad = (k-1)/2`:
+    /// every output whose window touches a nonzero becomes nonzero.
+    pub fn dilate(&self, k: usize) -> Bitmap {
+        assert!(k % 2 == 1, "odd kernels only");
+        let u = (k - 1) / 2;
+        let mut out = Bitmap::new(self.w, self.h);
+        for (x, y) in self.iter_set() {
+            let y0 = y.saturating_sub(u);
+            let y1 = (y + u).min(self.h - 1);
+            let x0 = x.saturating_sub(u);
+            let x1 = (x + u).min(self.w - 1);
+            for oy in y0..=y1 {
+                for ox in x0..=x1 {
+                    out.set(ox, oy);
+                }
+            }
+        }
+        out
+    }
+
+    /// Pattern after a submanifold stride-1 conv: unchanged.
+    pub fn submanifold(&self) -> Bitmap {
+        self.clone()
+    }
+
+    /// Pattern after a sparse (submanifold-style) stride-`s` conv:
+    /// output `(ox, oy)` is nonzero iff any input in the `s×s` grid
+    /// `(ox*s .. ox*s+s, oy*s .. oy*s+s)` is nonzero. Output is
+    /// `ceil(w/s) × ceil(h/s)`.
+    pub fn downsample_sparse(&self, s: usize) -> Bitmap {
+        let ow = (self.w + s - 1) / s;
+        let oh = (self.h + s - 1) / s;
+        let mut out = Bitmap::new(ow, oh);
+        for (x, y) in self.iter_set() {
+            out.set(x / s, y / s);
+        }
+        out
+    }
+
+    /// Pattern after a standard k×k stride-`s` conv with `pad = (k-1)/2`:
+    /// output nonzero iff its k×k input window contains any nonzero.
+    pub fn downsample_standard(&self, k: usize, s: usize) -> Bitmap {
+        assert!(k % 2 == 1);
+        let pad = (k - 1) / 2;
+        let ow = (self.w + s - 1) / s;
+        let oh = (self.h + s - 1) / s;
+        let mut out = Bitmap::new(ow, oh);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                'win: for dy in 0..k {
+                    for dx in 0..k {
+                        let ix = ox as isize * s as isize + dx as isize - pad as isize;
+                        let iy = oy as isize * s as isize + dy as isize - pad as isize;
+                        if ix >= 0
+                            && iy >= 0
+                            && (ix as usize) < self.w
+                            && (iy as usize) < self.h
+                            && self.get(ix as usize, iy as usize)
+                        {
+                            out.set(ox, oy);
+                            break 'win;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    fn random_bitmap(g: &mut Gen, w: usize, h: usize, p: f64) -> Bitmap {
+        let mut b = Bitmap::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                if g.chance(p) {
+                    b.set(x, y);
+                }
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn set_get_count() {
+        let mut b = Bitmap::new(10, 7);
+        assert_eq!(b.count(), 0);
+        b.set(0, 0);
+        b.set(9, 6);
+        b.set(3, 2);
+        assert!(b.get(0, 0) && b.get(9, 6) && b.get(3, 2));
+        assert!(!b.get(1, 1));
+        assert_eq!(b.count(), 3);
+        b.clear(3, 2);
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn dilate_single_pixel_makes_kxk() {
+        let mut b = Bitmap::new(9, 9);
+        b.set(4, 4);
+        let d = b.dilate(3);
+        assert_eq!(d.count(), 9);
+        for y in 3..=5 {
+            for x in 3..=5 {
+                assert!(d.get(x, y));
+            }
+        }
+    }
+
+    #[test]
+    fn dilate_clips_at_border() {
+        let mut b = Bitmap::new(5, 5);
+        b.set(0, 0);
+        let d = b.dilate(3);
+        assert_eq!(d.count(), 4); // 2×2 corner
+    }
+
+    #[test]
+    fn downsample_sparse_grid_rule() {
+        let mut b = Bitmap::new(6, 6);
+        b.set(1, 1); // grid (0,0)
+        b.set(4, 5); // grid (2,2)
+        let d = b.downsample_sparse(2);
+        assert_eq!(d.w, 3);
+        assert_eq!(d.count(), 2);
+        assert!(d.get(0, 0) && d.get(2, 2));
+        assert!(!d.get(1, 1));
+    }
+
+    #[test]
+    fn standard_downsample_denser_than_sparse() {
+        check("standard stride-2 ⊇ sparse stride-2", 64, |g| {
+            let w = g.usize(4, 24);
+            let h = g.usize(4, 24);
+            let b = random_bitmap(g, w, h, 0.15);
+            let sp = b.downsample_sparse(2);
+            let st = b.downsample_standard(3, 2);
+            // Every sparse-conv output location is also a standard-conv
+            // output location (the k×k window contains the s×s grid since
+            // k ≥ s when k=3, s=2 and pad=1).
+            for (x, y) in sp.iter_set() {
+                assert!(st.get(x, y), "sparse set at ({x},{y}) but standard not");
+            }
+            assert!(st.count() >= sp.count());
+        });
+    }
+
+    #[test]
+    fn dilation_monotone_and_submanifold_identity() {
+        check("dilate ⊇ identity; submanifold = identity", 64, |g| {
+            let w = g.usize(3, 20);
+            let h = g.usize(3, 20);
+            let b = random_bitmap(g, w, h, 0.2);
+            let d = b.dilate(3);
+            for (x, y) in b.iter_set() {
+                assert!(d.get(x, y));
+            }
+            assert_eq!(b.submanifold(), b);
+            assert!(d.count() >= b.count());
+        });
+    }
+
+    #[test]
+    fn nz_ratio() {
+        let mut b = Bitmap::new(4, 4);
+        b.set(0, 0);
+        b.set(1, 1);
+        assert!((b.nz_ratio() - 2.0 / 16.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,776 @@
+//! Functional (non-cycle-level) reference implementations of the paper's
+//! layer algebra, in both f32 (training-parity) and int8 (hardware-exact)
+//! arithmetic:
+//!
+//! - 1×1 (pointwise) convolution — submanifold by construction,
+//! - k×k submanifold convolution, stride 1 (full and depthwise),
+//! - k×k sparse convolution, stride 2 (full and depthwise),
+//! - global average pooling over nonzero tokens + fully connected head,
+//! - standard dense convolution on the materialized map (oracle for the
+//!   submanifold implementations and for Fig. 12's standard-conv twin).
+//!
+//! The cycle-level `arch` modules must reproduce the int8 results here
+//! *exactly*; the python JAX model reproduces the f32 results (golden
+//! vectors), and int8 vs f32 agree to quantization tolerance.
+
+use super::map::SparseMap;
+use super::quant::Requant;
+use super::token::Token;
+
+/// Activation applied inside the float layers (int8 layers fold activation
+/// clamps into their [`Requant`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Relu6,
+}
+
+impl Act {
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Act::None => x,
+            Act::Relu => x.max(0.0),
+            Act::Relu6 => x.clamp(0.0, 6.0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 reference path
+// ---------------------------------------------------------------------------
+
+/// 1×1 convolution: tokens relayed unchanged, features mapped through a
+/// `cin × cout` matrix (row-major `w[ci * cout + co]`) plus bias.
+pub fn conv1x1_f32(
+    input: &SparseMap<f32>,
+    w: &[f32],
+    bias: &[f32],
+    cout: usize,
+    act: Act,
+) -> SparseMap<f32> {
+    let cin = input.c;
+    assert_eq!(w.len(), cin * cout);
+    assert_eq!(bias.len(), cout);
+    let mut out = SparseMap::empty(input.w, input.h, cout);
+    out.tokens = input.tokens.clone();
+    out.feats.reserve(out.tokens.len() * cout);
+    for i in 0..input.nnz() {
+        let f = input.feat(i);
+        for co in 0..cout {
+            let mut acc = bias[co];
+            for ci in 0..cin {
+                acc += f[ci] * w[ci * cout + co];
+            }
+            out.feats.push(act.apply(acc));
+        }
+    }
+    out
+}
+
+/// k×k **submanifold** convolution, stride 1, pad (k−1)/2.
+/// Full conv weights: `w[off][ci][co]` flattened as `w[(off*cin + ci)*cout + co]`.
+pub fn conv_kxk_s1_f32(
+    input: &SparseMap<f32>,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    cout: usize,
+    act: Act,
+) -> SparseMap<f32> {
+    let cin = input.c;
+    assert_eq!(w.len(), k * k * cin * cout);
+    let u = (k - 1) / 2;
+    let bm = input.bitmap();
+    let mut out = SparseMap::empty(input.w, input.h, cout);
+    out.tokens = input.tokens.clone();
+    out.feats.reserve(out.tokens.len() * cout);
+    let mut acc = vec![0f32; cout];
+    for t in &input.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize + dx as isize - u as isize;
+                let iy = t.y as isize + dy as isize - u as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let (ix, iy) = (ix as usize, iy as usize);
+                if !bm.get(ix, iy) {
+                    continue;
+                }
+                let ni = input.find(ix as u16, iy as u16).expect("bitmap/token mismatch");
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                let wbase = off * cin * cout;
+                for ci in 0..cin {
+                    let a = nf[ci];
+                    let wrow = wbase + ci * cout;
+                    for co in 0..cout {
+                        acc[co] += a * w[wrow + co];
+                    }
+                }
+            }
+        }
+        for co in 0..cout {
+            out.feats.push(act.apply(acc[co]));
+        }
+    }
+    out
+}
+
+/// k×k **depthwise submanifold** convolution, stride 1.
+/// Weights `w[off][c]` flattened as `w[off * c + ch]`.
+pub fn dwconv_kxk_s1_f32(
+    input: &SparseMap<f32>,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    act: Act,
+) -> SparseMap<f32> {
+    let c = input.c;
+    assert_eq!(w.len(), k * k * c);
+    let u = (k - 1) / 2;
+    let bm = input.bitmap();
+    let mut out = SparseMap::empty(input.w, input.h, c);
+    out.tokens = input.tokens.clone();
+    out.feats.reserve(out.tokens.len() * c);
+    let mut acc = vec![0f32; c];
+    for t in &input.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize + dx as isize - u as isize;
+                let iy = t.y as isize + dy as isize - u as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let (ix, iy) = (ix as usize, iy as usize);
+                if !bm.get(ix, iy) {
+                    continue;
+                }
+                let ni = input.find(ix as u16, iy as u16).unwrap();
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                for ch in 0..c {
+                    acc[ch] += nf[ch] * w[off * c + ch];
+                }
+            }
+        }
+        for ch in 0..c {
+            out.feats.push(act.apply(acc[ch]));
+        }
+    }
+    out
+}
+
+/// Output tokens of a stride-2 sparse conv (paper Fig. 3b / Eqn. 4): an
+/// output coordinate exists iff its 2×2 input grid contains any nonzero.
+pub fn downsample_tokens(input_bitmap: &super::Bitmap) -> Vec<Token> {
+    let ds = input_bitmap.downsample_sparse(2);
+    ds.iter_set()
+        .map(|(x, y)| Token::new(x as u16, y as u16))
+        .collect()
+}
+
+/// k×k sparse convolution, stride 2, pad (k−1)/2 (full weights as in
+/// [`conv_kxk_s1_f32`]). Output is `ceil(w/2) × ceil(h/2)`.
+pub fn conv_kxk_s2_f32(
+    input: &SparseMap<f32>,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    cout: usize,
+    act: Act,
+) -> SparseMap<f32> {
+    let cin = input.c;
+    assert_eq!(w.len(), k * k * cin * cout);
+    let pad = (k - 1) / 2;
+    let bm = input.bitmap();
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    let mut out = SparseMap::empty(ow, oh, cout);
+    out.tokens = downsample_tokens(&bm);
+    out.feats.reserve(out.tokens.len() * cout);
+    let mut acc = vec![0f32; cout];
+    for t in &out.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize * 2 + dx as isize - pad as isize;
+                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let (ix, iy) = (ix as usize, iy as usize);
+                if !bm.get(ix, iy) {
+                    continue;
+                }
+                let ni = input.find(ix as u16, iy as u16).unwrap();
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                let wbase = off * cin * cout;
+                for ci in 0..cin {
+                    let a = nf[ci];
+                    let wrow = wbase + ci * cout;
+                    for co in 0..cout {
+                        acc[co] += a * w[wrow + co];
+                    }
+                }
+            }
+        }
+        for co in 0..cout {
+            out.feats.push(act.apply(acc[co]));
+        }
+    }
+    out
+}
+
+/// Depthwise variant of [`conv_kxk_s2_f32`].
+pub fn dwconv_kxk_s2_f32(
+    input: &SparseMap<f32>,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    act: Act,
+) -> SparseMap<f32> {
+    let c = input.c;
+    assert_eq!(w.len(), k * k * c);
+    let pad = (k - 1) / 2;
+    let bm = input.bitmap();
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    let mut out = SparseMap::empty(ow, oh, c);
+    out.tokens = downsample_tokens(&bm);
+    out.feats.reserve(out.tokens.len() * c);
+    let mut acc = vec![0f32; c];
+    for t in &out.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize * 2 + dx as isize - pad as isize;
+                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let (ix, iy) = (ix as usize, iy as usize);
+                if !bm.get(ix, iy) {
+                    continue;
+                }
+                let ni = input.find(ix as u16, iy as u16).unwrap();
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                for ch in 0..c {
+                    acc[ch] += nf[ch] * w[off * c + ch];
+                }
+            }
+        }
+        for ch in 0..c {
+            out.feats.push(act.apply(acc[ch]));
+        }
+    }
+    out
+}
+
+/// Residual add: tokens must be identical (submanifold block, Fig. 10).
+pub fn residual_add_f32(a: &SparseMap<f32>, b: &SparseMap<f32>) -> SparseMap<f32> {
+    assert_eq!(a.tokens, b.tokens, "residual branches must share tokens");
+    assert_eq!(a.c, b.c);
+    let mut out = a.clone();
+    for (o, r) in out.feats.iter_mut().zip(&b.feats) {
+        *o += r;
+    }
+    out
+}
+
+/// Global average pooling over nonzero tokens (MinkowskiEngine semantics:
+/// divide by the number of nonzero coordinates, not H·W).
+pub fn global_avg_pool_f32(input: &SparseMap<f32>) -> Vec<f32> {
+    let n = input.nnz().max(1);
+    let mut acc = vec![0f32; input.c];
+    for i in 0..input.nnz() {
+        for (a, &v) in acc.iter_mut().zip(input.feat(i)) {
+            *a += v;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= n as f32;
+    }
+    acc
+}
+
+/// Fully connected head: `out[co] = Σ_ci in[ci]·w[ci*cout+co] + bias[co]`.
+pub fn fc_f32(input: &[f32], w: &[f32], bias: &[f32], cout: usize) -> Vec<f32> {
+    let cin = input.len();
+    assert_eq!(w.len(), cin * cout);
+    (0..cout)
+        .map(|co| {
+            let mut acc = bias[co];
+            for ci in 0..cin {
+                acc += input[ci] * w[ci * cout + co];
+            }
+            acc
+        })
+        .collect()
+}
+
+/// **Standard** dense convolution on the materialized dense tensor — the
+/// oracle for submanifold implementations and the Fig. 12 standard twin.
+/// Returns a dense `oh × ow × cout` array; `stride ∈ {1, 2}`, pad (k−1)/2.
+pub fn standard_conv_dense_f32(
+    dense: &[f32],
+    w_in: usize,
+    h_in: usize,
+    cin: usize,
+    k: usize,
+    stride: usize,
+    w: &[f32],
+    bias: &[f32],
+    cout: usize,
+) -> (Vec<f32>, usize, usize) {
+    assert_eq!(dense.len(), h_in * w_in * cin);
+    let pad = (k - 1) / 2;
+    let ow = (w_in + stride - 1) / stride;
+    let oh = (h_in + stride - 1) / stride;
+    let mut out = vec![0f32; oh * ow * cout];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for co in 0..cout {
+                let mut acc = bias[co];
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let ix = ox as isize * stride as isize + dx as isize - pad as isize;
+                        let iy = oy as isize * stride as isize + dy as isize - pad as isize;
+                        if ix < 0 || iy < 0 || ix as usize >= w_in || iy as usize >= h_in {
+                            continue;
+                        }
+                        let base = (iy as usize * w_in + ix as usize) * cin;
+                        let wbase = (dy * k + dx) * cin * cout;
+                        for ci in 0..cin {
+                            acc += dense[base + ci] * w[wbase + ci * cout + co];
+                        }
+                    }
+                }
+                out[(oy * ow + ox) * cout + co] = acc;
+            }
+        }
+    }
+    (out, ow, oh)
+}
+
+// ---------------------------------------------------------------------------
+// int8 hardware-exact path
+// ---------------------------------------------------------------------------
+
+/// 1×1 convolution, int8 in / int8 out, int32 accumulate, dyadic requant.
+/// Weights `w[ci * cout + co]` int8, `bias[co]` int32 (input-scale · w-scale).
+pub fn conv1x1_i8(
+    input: &SparseMap<i8>,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let cin = input.c;
+    assert_eq!(w.len(), cin * cout);
+    let mut out = SparseMap::empty(input.w, input.h, cout);
+    out.tokens = input.tokens.clone();
+    out.feats.reserve(out.tokens.len() * cout);
+    for i in 0..input.nnz() {
+        let f = input.feat(i);
+        for co in 0..cout {
+            let mut acc: i32 = bias[co];
+            for ci in 0..cin {
+                acc += f[ci] as i32 * w[ci * cout + co] as i32;
+            }
+            out.feats.push(rq.apply(acc));
+        }
+    }
+    out
+}
+
+/// k×k depthwise submanifold convolution, stride 1, int8.
+pub fn dwconv_kxk_s1_i8(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let c = input.c;
+    assert_eq!(w.len(), k * k * c);
+    let u = (k - 1) / 2;
+    let bm = input.bitmap();
+    let mut out = SparseMap::empty(input.w, input.h, c);
+    out.tokens = input.tokens.clone();
+    out.feats.reserve(out.tokens.len() * c);
+    let mut acc = vec![0i32; c];
+    for t in &input.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize + dx as isize - u as isize;
+                let iy = t.y as isize + dy as isize - u as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let (ix, iy) = (ix as usize, iy as usize);
+                if !bm.get(ix, iy) {
+                    continue;
+                }
+                let ni = input.find(ix as u16, iy as u16).unwrap();
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                for ch in 0..c {
+                    acc[ch] += nf[ch] as i32 * w[off * c + ch] as i32;
+                }
+            }
+        }
+        for ch in 0..c {
+            out.feats.push(rq.apply(acc[ch]));
+        }
+    }
+    out
+}
+
+/// k×k full sparse convolution, stride 2, int8.
+pub fn conv_kxk_s2_i8(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let cin = input.c;
+    assert_eq!(w.len(), k * k * cin * cout);
+    let pad = (k - 1) / 2;
+    let bm = input.bitmap();
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    let mut out = SparseMap::empty(ow, oh, cout);
+    out.tokens = downsample_tokens(&bm);
+    out.feats.reserve(out.tokens.len() * cout);
+    let mut acc = vec![0i32; cout];
+    for t in &out.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize * 2 + dx as isize - pad as isize;
+                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let (ix, iy) = (ix as usize, iy as usize);
+                if !bm.get(ix, iy) {
+                    continue;
+                }
+                let ni = input.find(ix as u16, iy as u16).unwrap();
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                let wbase = off * cin * cout;
+                for ci in 0..cin {
+                    let a = nf[ci] as i32;
+                    let wrow = wbase + ci * cout;
+                    for co in 0..cout {
+                        acc[co] += a * w[wrow + co] as i32;
+                    }
+                }
+            }
+        }
+        for co in 0..cout {
+            out.feats.push(rq.apply(acc[co]));
+        }
+    }
+    out
+}
+
+/// k×k depthwise sparse convolution, stride 2, int8.
+pub fn dwconv_kxk_s2_i8(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let c = input.c;
+    assert_eq!(w.len(), k * k * c);
+    let pad = (k - 1) / 2;
+    let bm = input.bitmap();
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    let mut out = SparseMap::empty(ow, oh, c);
+    out.tokens = downsample_tokens(&bm);
+    out.feats.reserve(out.tokens.len() * c);
+    let mut acc = vec![0i32; c];
+    for t in &out.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize * 2 + dx as isize - pad as isize;
+                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let (ix, iy) = (ix as usize, iy as usize);
+                if !bm.get(ix, iy) {
+                    continue;
+                }
+                let ni = input.find(ix as u16, iy as u16).unwrap();
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                for ch in 0..c {
+                    acc[ch] += nf[ch] as i32 * w[off * c + ch] as i32;
+                }
+            }
+        }
+        for ch in 0..c {
+            out.feats.push(rq.apply(acc[ch]));
+        }
+    }
+    out
+}
+
+/// Residual add in int8: saturating add of requantized branches (both
+/// branches must already be at the same output scale — the quantizer
+/// arranges this, matching HAWQ-V3's shared-scale residual handling).
+pub fn residual_add_i8(a: &SparseMap<i8>, b: &SparseMap<i8>) -> SparseMap<i8> {
+    assert_eq!(a.tokens, b.tokens, "residual branches must share tokens");
+    assert_eq!(a.c, b.c);
+    let mut out = a.clone();
+    for (o, r) in out.feats.iter_mut().zip(&b.feats) {
+        *o = (*o as i32 + *r as i32).clamp(-128, 127) as i8;
+    }
+    out
+}
+
+/// Global average pooling, int8 → int32 sum with hardware-style division:
+/// multiply by the reciprocal in fixed point (the pooling module divides by
+/// the *token count*, known only at `.end`; hardware uses one int divide —
+/// we model exact integer division with round-half-up).
+pub fn global_avg_pool_i8(input: &SparseMap<i8>) -> Vec<i32> {
+    let n = input.nnz().max(1) as i64;
+    let mut acc = vec![0i64; input.c];
+    for i in 0..input.nnz() {
+        for (a, &v) in acc.iter_mut().zip(input.feat(i)) {
+            *a += v as i64;
+        }
+    }
+    acc.iter()
+        .map(|&s| {
+            let half = if s >= 0 { n / 2 } else { -(n / 2) };
+            ((s + half) / n) as i32
+        })
+        .collect()
+}
+
+/// Fully connected head, int8 weights on int32 pooled input; returns raw
+/// int32 logits (the classifier output needs no requantization).
+pub fn fc_i8(input: &[i32], w: &[i8], bias: &[i32], cout: usize) -> Vec<i32> {
+    let cin = input.len();
+    assert_eq!(w.len(), cin * cout);
+    (0..cout)
+        .map(|co| {
+            let mut acc = bias[co];
+            for ci in 0..cin {
+                acc += input[ci] * w[ci * cout + co] as i32;
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::map::random_map;
+    use crate::util::propcheck::{check, Gen};
+
+    fn rand_vec(g: &mut Gen, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (g.f64() as f32 - 0.5) * 2.0).collect()
+    }
+
+    /// Submanifold s1 conv must equal standard conv *at the nonzero input
+    /// locations* (that is its definition).
+    #[test]
+    fn submanifold_s1_matches_dense_at_tokens() {
+        check("kxk s1 submanifold == dense conv at tokens", 48, |g| {
+            let w = g.usize(3, 12);
+            let h = g.usize(3, 12);
+            let cin = g.usize(1, 3);
+            let cout = g.usize(1, 3);
+            let k = 3;
+            let m = random_map(g.rng(), w, h, cin, 0.3);
+            let wt = rand_vec(g, k * k * cin * cout);
+            let b = rand_vec(g, cout);
+            let sub = conv_kxk_s1_f32(&m, k, &wt, &b, cout, Act::None);
+            let (dense_out, ow, _oh) =
+                standard_conv_dense_f32(&m.to_dense(), w, h, cin, k, 1, &wt, &b, cout);
+            assert_eq!(sub.tokens, m.tokens);
+            for (i, t) in sub.tokens.iter().enumerate() {
+                let base = (t.y as usize * ow + t.x as usize) * cout;
+                for co in 0..cout {
+                    let d = dense_out[base + co];
+                    let s = sub.feat(i)[co];
+                    assert!((d - s).abs() < 1e-4, "({},{})[{co}]: dense {d} sub {s}", t.x, t.y);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dwconv_s1_matches_full_with_diagonal_weights() {
+        check("depthwise == full conv with diagonal kernel", 48, |g| {
+            let w = g.usize(3, 10);
+            let h = g.usize(3, 10);
+            let c = g.usize(1, 4);
+            let k = 3;
+            let m = random_map(g.rng(), w, h, c, 0.35);
+            let dwt = rand_vec(g, k * k * c);
+            let b = rand_vec(g, c);
+            // Embed depthwise weights into a full conv kernel with zeros
+            // off-diagonal.
+            let mut full = vec![0f32; k * k * c * c];
+            for off in 0..k * k {
+                for ch in 0..c {
+                    full[(off * c + ch) * c + ch] = dwt[off * c + ch];
+                }
+            }
+            let a = dwconv_kxk_s1_f32(&m, k, &dwt, &b, Act::None);
+            let e = conv_kxk_s1_f32(&m, k, &full, &b, c, Act::None);
+            assert_eq!(a.tokens, e.tokens);
+            for (x, y) in a.feats.iter().zip(&e.feats) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn conv1x1_is_kxk_with_k1() {
+        check("1x1 module == k=1 conv", 48, |g| {
+            let w = g.usize(2, 10);
+            let h = g.usize(2, 10);
+            let cin = g.usize(1, 4);
+            let cout = g.usize(1, 4);
+            let m = random_map(g.rng(), w, h, cin, 0.4);
+            let wt = rand_vec(g, cin * cout);
+            let b = rand_vec(g, cout);
+            let a = conv1x1_f32(&m, &wt, &b, cout, Act::Relu);
+            let e = conv_kxk_s1_f32(&m, 1, &wt, &b, cout, Act::Relu);
+            assert_eq!(a, e);
+        });
+    }
+
+    #[test]
+    fn s2_tokens_follow_grid_rule_and_order() {
+        check("stride-2 token rule + ravel order", 64, |g| {
+            let w = g.usize(2, 16);
+            let h = g.usize(2, 16);
+            let m = random_map(g.rng(), w, h, 1, 0.25);
+            let wt = rand_vec(g, 9);
+            let b = rand_vec(g, 1);
+            let out = dwconv_kxk_s2_f32(&m, 3, &wt, &b, Act::None);
+            out.validate().unwrap();
+            let expect = m.bitmap().downsample_sparse(2);
+            assert_eq!(out.bitmap(), expect);
+        });
+    }
+
+    #[test]
+    fn s2_features_match_dense_at_output_tokens() {
+        check("kxk s2 sparse == dense strided conv at tokens", 48, |g| {
+            let w = g.usize(4, 12);
+            let h = g.usize(4, 12);
+            let cin = g.usize(1, 3);
+            let cout = g.usize(1, 3);
+            let k = 3;
+            let m = random_map(g.rng(), w, h, cin, 0.3);
+            let wt = rand_vec(g, k * k * cin * cout);
+            let b = rand_vec(g, cout);
+            let sp = conv_kxk_s2_f32(&m, k, &wt, &b, cout, Act::None);
+            let (dense_out, ow, _) =
+                standard_conv_dense_f32(&m.to_dense(), w, h, cin, k, 2, &wt, &b, cout);
+            for (i, t) in sp.tokens.iter().enumerate() {
+                let base = (t.y as usize * ow + t.x as usize) * cout;
+                for co in 0..cout {
+                    let d = dense_out[base + co];
+                    let s = sp.feat(i)[co];
+                    assert!((d - s).abs() < 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn residual_requires_matching_tokens() {
+        let mut r = crate::util::Rng::new(4);
+        let a = random_map(&mut r, 8, 8, 2, 0.3);
+        let sum = residual_add_f32(&a, &a);
+        for (s, x) in sum.feats.iter().zip(&a.feats) {
+            assert_eq!(*s, x * 2.0);
+        }
+    }
+
+    #[test]
+    fn pool_averages_over_tokens_only() {
+        let mut m: SparseMap<f32> = SparseMap::empty(4, 4, 2);
+        m.push(Token::new(0, 0), &[1.0, 10.0]);
+        m.push(Token::new(3, 3), &[3.0, 30.0]);
+        let p = global_avg_pool_f32(&m);
+        assert_eq!(p, vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn fc_basic() {
+        let out = fc_f32(&[1.0, 2.0], &[1.0, 0.0, 0.0, 1.0], &[0.5, -0.5], 2);
+        assert_eq!(out, vec![1.5, 1.5]);
+    }
+
+    /// int8 layers approximate their f32 twins after symmetric quantization.
+    #[test]
+    fn i8_conv1x1_tracks_f32() {
+        check("int8 1x1 ≈ f32 1x1", 32, |g| {
+            let w = g.usize(2, 8);
+            let h = g.usize(2, 8);
+            let cin = g.usize(1, 4);
+            let cout = g.usize(1, 4);
+            let mf = random_map(g.rng(), w, h, cin, 0.4);
+            let wt = rand_vec(g, cin * cout);
+            // Quantize activations and weights.
+            let (sa, qa) = super::super::quant::quantize_symmetric(&mf.feats);
+            let (sw, qw) = super::super::quant::quantize_symmetric(&wt);
+            let mut mi: SparseMap<i8> = SparseMap::empty(w, h, cin);
+            mi.tokens = mf.tokens.clone();
+            mi.feats = qa;
+            let so = 0.05f32; // output scale
+            let rq = Requant::from_scale((sa * sw / so) as f64, -128, 127);
+            let bias = vec![0i32; cout];
+            let qi = conv1x1_i8(&mi, &qw, &bias, cout, &rq);
+            let bf = vec![0f32; cout];
+            let qf = conv1x1_f32(&mf, &wt, &bf, cout, Act::None);
+            for i in 0..qf.nnz() {
+                for co in 0..cout {
+                    let f = qf.feat(i)[co];
+                    let fx = qi.feat(i)[co] as f32 * so;
+                    // Error budget: activation quant + weight quant + requant.
+                    let tol = (cin as f32).sqrt() * (sa + sw) * 2.0 + so;
+                    assert!(
+                        (f - fx).abs() <= tol.max(0.2),
+                        "i={i} co={co}: f32 {f} vs int8 {fx} (tol {tol})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn i8_pool_rounds_half_up() {
+        let mut m: SparseMap<i8> = SparseMap::empty(4, 1, 1);
+        m.push(Token::new(0, 0), &[1]);
+        m.push(Token::new(1, 0), &[2]);
+        m.push(Token::new(2, 0), &[2]);
+        // sum 5, n 3 → 5/3 = 1.67 → rounds to 2
+        assert_eq!(global_avg_pool_i8(&m), vec![2]);
+    }
+}

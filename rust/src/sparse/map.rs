@@ -1,0 +1,203 @@
+//! `SparseMap<T>`: a spatially sparse feature map — the in-memory form of
+//! the paper's token-feature stream. Tokens are stored in strictly
+//! increasing ravel order; features are a flat `tokens.len() × c` array.
+
+use super::token::{is_strictly_ordered, Token};
+use super::Bitmap;
+
+/// Sparse H×W×C feature map. `T` is `f32` for the float path and `i8` for
+/// the quantized hardware path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMap<T> {
+    pub w: usize,
+    pub h: usize,
+    pub c: usize,
+    /// Nonzero coordinates, strictly increasing ravel order.
+    pub tokens: Vec<Token>,
+    /// Row-major per token: `feats[i*c .. (i+1)*c]` is the vector at `tokens[i]`.
+    pub feats: Vec<T>,
+}
+
+impl<T: Copy + Default + PartialEq> SparseMap<T> {
+    pub fn empty(w: usize, h: usize, c: usize) -> Self {
+        SparseMap { w, h, c, tokens: Vec::new(), feats: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn nz_ratio(&self) -> f64 {
+        self.nnz() as f64 / (self.w * self.h) as f64
+    }
+
+    /// Feature vector at token index `i`.
+    #[inline]
+    pub fn feat(&self, i: usize) -> &[T] {
+        &self.feats[i * self.c..(i + 1) * self.c]
+    }
+
+    /// Append a token + feature vector; enforces stream order in debug.
+    pub fn push(&mut self, t: Token, feat: &[T]) {
+        debug_assert_eq!(feat.len(), self.c);
+        debug_assert!(
+            self.tokens.last().map_or(true, |last| last.ravel(self.w) < t.ravel(self.w)),
+            "token pushed out of ravel order"
+        );
+        self.tokens.push(t);
+        self.feats.extend_from_slice(feat);
+    }
+
+    /// Occupancy bitmap.
+    pub fn bitmap(&self) -> Bitmap {
+        let mut b = Bitmap::new(self.w, self.h);
+        for t in &self.tokens {
+            b.set(t.x as usize, t.y as usize);
+        }
+        b
+    }
+
+    /// Validate the Eqn. 1 ordering invariant + shape consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.feats.len() != self.tokens.len() * self.c {
+            return Err(format!(
+                "feature storage {} != tokens {} × c {}",
+                self.feats.len(),
+                self.tokens.len(),
+                self.c
+            ));
+        }
+        if !is_strictly_ordered(&self.tokens, self.w) {
+            return Err("tokens not in strictly increasing ravel order".into());
+        }
+        if let Some(t) = self
+            .tokens
+            .iter()
+            .find(|t| t.x as usize >= self.w || t.y as usize >= self.h)
+        {
+            return Err(format!("token ({}, {}) out of {}×{} bounds", t.x, t.y, self.w, self.h));
+        }
+        Ok(())
+    }
+
+    /// Dense `h × w × c` materialization (channel-minor), zeros elsewhere.
+    pub fn to_dense(&self) -> Vec<T> {
+        let mut out = vec![T::default(); self.h * self.w * self.c];
+        for (i, t) in self.tokens.iter().enumerate() {
+            let base = (t.y as usize * self.w + t.x as usize) * self.c;
+            out[base..base + self.c].copy_from_slice(self.feat(i));
+        }
+        out
+    }
+
+    /// Build from a dense `h × w × c` array, keeping locations where any
+    /// channel is non-default (nonzero).
+    pub fn from_dense(dense: &[T], w: usize, h: usize, c: usize) -> Self {
+        assert_eq!(dense.len(), h * w * c);
+        let mut m = SparseMap::empty(w, h, c);
+        for y in 0..h {
+            for x in 0..w {
+                let base = (y * w + x) * c;
+                let v = &dense[base..base + c];
+                if v.iter().any(|e| *e != T::default()) {
+                    m.push(Token::new(x as u16, y as u16), v);
+                }
+            }
+        }
+        m
+    }
+
+    /// Token index of coordinate `(x, y)` via binary search on ravel order.
+    pub fn find(&self, x: u16, y: u16) -> Option<usize> {
+        let target = Token::new(x, y).ravel(self.w);
+        self.tokens
+            .binary_search_by_key(&target, |t| t.ravel(self.w))
+            .ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+    use crate::util::Rng;
+
+    /// Random sparse map generator shared by many test modules.
+    pub fn random_map(rng: &mut Rng, w: usize, h: usize, c: usize, p: f64) -> SparseMap<f32> {
+        let mut m = SparseMap::empty(w, h, c);
+        for y in 0..h {
+            for x in 0..w {
+                if rng.chance(p) {
+                    let f: Vec<f32> = (0..c).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+                    // Avoid accidental all-zero vectors (would break
+                    // from_dense/to_dense roundtrips).
+                    let mut f = f;
+                    if f.iter().all(|&v| v == 0.0) {
+                        f[0] = 1.0;
+                    }
+                    m.push(Token::new(x as u16, y as u16), &f);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn push_and_find() {
+        let mut m: SparseMap<f32> = SparseMap::empty(8, 8, 2);
+        m.push(Token::new(3, 0), &[1.0, 2.0]);
+        m.push(Token::new(1, 2), &[3.0, 4.0]);
+        assert_eq!(m.find(3, 0), Some(0));
+        assert_eq!(m.find(1, 2), Some(1));
+        assert_eq!(m.find(0, 0), None);
+        assert_eq!(m.feat(1), &[3.0, 4.0]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "ravel order")]
+    fn out_of_order_push_panics_in_debug() {
+        let mut m: SparseMap<f32> = SparseMap::empty(8, 8, 1);
+        m.push(Token::new(5, 5), &[1.0]);
+        m.push(Token::new(1, 1), &[1.0]);
+    }
+
+    #[test]
+    fn dense_roundtrip_property() {
+        check("sparse→dense→sparse roundtrip", 128, |g: &mut Gen| {
+            let w = g.usize(1, 16);
+            let h = g.usize(1, 16);
+            let c = g.usize(1, 4);
+            let m = random_map(g.rng(), w, h, c, 0.3);
+            let d = m.to_dense();
+            let back = SparseMap::from_dense(&d, w, h, c);
+            assert_eq!(m, back);
+        });
+    }
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        let mut m: SparseMap<f32> = SparseMap::empty(4, 4, 2);
+        m.tokens.push(Token::new(1, 1));
+        assert!(m.validate().is_err()); // missing features
+        m.feats.extend_from_slice(&[1.0, 2.0]);
+        m.validate().unwrap();
+        m.tokens.push(Token::new(9, 0)); // out of bounds AND out of order
+        m.feats.extend_from_slice(&[1.0, 2.0]);
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn bitmap_matches_tokens() {
+        let mut rng = Rng::new(77);
+        let m = random_map(&mut rng, 12, 9, 3, 0.25);
+        let b = m.bitmap();
+        assert_eq!(b.count(), m.nnz());
+        for t in &m.tokens {
+            assert!(b.get(t.x as usize, t.y as usize));
+        }
+    }
+}
+
+#[cfg(test)]
+pub use tests::random_map;

@@ -1,0 +1,29 @@
+//! Sparse-tensor substrate: coordinate tokens, bitmaps, sparse feature maps,
+//! and *functional* (non-cycle-level) reference implementations of the
+//! convolutions the paper uses.
+//!
+//! Everything in `arch` (the cycle-level hardware model) is checked against
+//! the functional references here, and the references themselves are checked
+//! against dense convolution and against the python/JAX oracles via golden
+//! vectors.
+//!
+//! Conventions (shared with the hardware model and the python side):
+//! - Coordinates are `(x, y)` with `x` the column and `y` the row.
+//! - Streaming/storage order is **ravel order** `y * W + x` (left-to-right,
+//!   top-to-bottom), strictly increasing — Eqn. 1 of the paper.
+//! - k×k kernels use offset index `off = dy * k + dx`, `dy, dx ∈ [0, k)`,
+//!   measured from the window's top-left; the window of output `(ox, oy)`
+//!   at stride `s` covers inputs `(ox*s + dx - pad, oy*s + dy - pad)`.
+//! - Stride-1 convs are **submanifold**: output tokens = input tokens.
+//! - Stride-2 convs emit an output token iff the corresponding `s×s` input
+//!   grid contains any nonzero (paper §3.2, Fig. 3b).
+pub mod token;
+pub mod bitmap;
+pub mod map;
+pub mod conv;
+pub mod rulebook;
+pub mod quant;
+
+pub use bitmap::Bitmap;
+pub use map::SparseMap;
+pub use token::{ravel, Token};

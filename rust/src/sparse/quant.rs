@@ -1,0 +1,160 @@
+//! Fixed-point (int8) arithmetic primitives for the hardware path.
+//!
+//! Mirrors HAWQ-V3-style *dyadic* quantization (the paper's training flow,
+//! §4.1): symmetric int8 weights/activations, int32 accumulators, and a
+//! per-layer requantization `out = clamp(round(acc · m / 2^s))` with integer
+//! multiplier `m` and shift `s` — exactly representable in hardware and
+//! mirrored bit-for-bit by `python/compile/quantize.py`.
+
+/// Saturating int8 range.
+pub const QMIN: i32 = -128;
+pub const QMAX: i32 = 127;
+
+/// Per-layer requantization + activation parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Requant {
+    /// Dyadic multiplier (15-bit, positive).
+    pub mult: i32,
+    /// Right shift.
+    pub shift: u32,
+    /// Lower clamp after requant: 0 for ReLU/ReLU6 layers, QMIN otherwise.
+    pub lo: i32,
+    /// Upper clamp: quantized 6 for ReLU6 layers, QMAX otherwise.
+    pub hi: i32,
+}
+
+impl Requant {
+    /// Identity-ish requant for tests (scale 1, no activation).
+    pub fn unit() -> Requant {
+        Requant { mult: 1 << 14, shift: 14, lo: QMIN, hi: QMAX }
+    }
+
+    /// Build from an effective float rescale `scale = s_in · s_w / s_out`
+    /// and activation clamps. The multiplier is normalized into
+    /// `[2^14, 2^15)` so every layer carries the same precision; this exact
+    /// procedure is mirrored in python.
+    pub fn from_scale(scale: f64, lo: i32, hi: i32) -> Requant {
+        assert!(scale > 0.0 && scale.is_finite(), "bad requant scale {scale}");
+        // Normalize mantissa into [0.5, 1.0), then take 15 bits.
+        let mut m = scale;
+        let mut e = 0i32;
+        while m >= 1.0 {
+            m /= 2.0;
+            e += 1;
+        }
+        while m < 0.5 {
+            m *= 2.0;
+            e -= 1;
+        }
+        // scale = m · 2^e with m ∈ [0.5, 1): mult = round(m·2^15), shift = 15 − e.
+        let mut mult = (m * (1 << 15) as f64).round() as i32;
+        let mut shift = 15 - e;
+        if mult == (1 << 15) {
+            mult >>= 1;
+            shift -= 1;
+        }
+        assert!((1..=62).contains(&shift), "requant shift {shift} out of range (scale {scale})");
+        Requant { mult, shift: shift as u32, lo, hi }
+    }
+
+    /// Apply to an int32 accumulator.
+    #[inline]
+    pub fn apply(&self, acc: i32) -> i8 {
+        requant(acc as i64, self)
+    }
+}
+
+/// Round-half-up dyadic requantization with clamping.
+#[inline]
+pub fn requant(acc: i64, rq: &Requant) -> i8 {
+    let prod = acc * rq.mult as i64;
+    let rounded = (prod + (1i64 << (rq.shift - 1))) >> rq.shift;
+    rounded.clamp(rq.lo as i64, rq.hi as i64) as i8
+}
+
+/// Symmetric per-tensor quantization scale for a float tensor: maps
+/// `max(|x|)` to 127. Returns (scale, quantized values).
+pub fn quantize_symmetric(xs: &[f32]) -> (f32, Vec<i8>) {
+    let amax = xs.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    let scale = amax / 127.0;
+    let q = xs
+        .iter()
+        .map(|&x| ((x / scale).round() as i32).clamp(QMIN, QMAX) as i8)
+        .collect();
+    (scale, q)
+}
+
+/// Dequantize.
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn unit_requant_is_identity_in_range() {
+        let rq = Requant::unit();
+        for v in -128..=127i32 {
+            assert_eq!(rq.apply(v), v as i8);
+        }
+    }
+
+    #[test]
+    fn requant_saturates() {
+        let rq = Requant::unit();
+        assert_eq!(rq.apply(100000), 127);
+        assert_eq!(rq.apply(-100000), -128);
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        let rq = Requant { lo: 0, ..Requant::unit() };
+        assert_eq!(rq.apply(-5), 0);
+        assert_eq!(rq.apply(5), 5);
+    }
+
+    #[test]
+    fn from_scale_approximates() {
+        check("dyadic requant ≈ float rescale", 256, |g| {
+            // scales spanning the realistic range for conv layers
+            let scale = 2.0f64.powf(g.f64() * 16.0 - 12.0); // 2^-12 .. 2^4
+            let rq = Requant::from_scale(scale, QMIN, QMAX);
+            let eff = rq.mult as f64 / 2.0f64.powi(rq.shift as i32);
+            let rel = (eff - scale).abs() / scale;
+            assert!(rel < 1e-4, "scale {scale} -> mult {} shift {} rel {rel}", rq.mult, rq.shift);
+            // Multiplier normalized to 15 bits.
+            assert!(rq.mult >= (1 << 14) && rq.mult < (1 << 15));
+        });
+    }
+
+    #[test]
+    fn from_scale_matches_float_on_accs() {
+        check("requant(acc) ≈ round(acc·scale)", 256, |g| {
+            let scale = 2.0f64.powf(g.f64() * 10.0 - 8.0);
+            let rq = Requant::from_scale(scale, QMIN, QMAX);
+            let acc = g.i64(-(1 << 20), 1 << 20);
+            let float = (acc as f64 * scale).round().clamp(-128.0, 127.0) as i8;
+            let fixed = requant(acc, &rq);
+            assert!(
+                (float as i32 - fixed as i32).abs() <= 1,
+                "acc {acc} scale {scale}: float {float} fixed {fixed}"
+            );
+        });
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        check("symmetric quant error ≤ scale/2", 128, |g| {
+            let n = g.usize(1, 64);
+            let xs: Vec<f32> = (0..n).map(|_| (g.f64() as f32 - 0.5) * 8.0).collect();
+            let (scale, q) = quantize_symmetric(&xs);
+            let back = dequantize(&q, scale);
+            for (a, b) in xs.iter().zip(&back) {
+                assert!((a - b).abs() <= scale * 0.5 + 1e-6);
+            }
+        });
+    }
+}

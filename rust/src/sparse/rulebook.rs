@@ -1,0 +1,248 @@
+//! MinkowskiEngine-style gather–scatter execution of submanifold
+//! convolution — the stand-in for the paper's "GPU sparse" baseline
+//! (Fig. 14).
+//!
+//! The library builds a *rulebook*: for every kernel offset it collects the
+//! (input index, output index) pairs whose coordinates are related by that
+//! offset, then performs one gathered GEMM per offset ("k0–k8 launches" in
+//! the paper's Fig. 3 discussion). At batch size 1 the per-offset launch
+//! and hash-map overhead dominates — the effect the paper observes on the
+//! Jetson (§4.4: "the latency performance of sparse GPU implementation lags
+//! behind the dense GPU baseline").
+//!
+//! Numerics are identical to [`super::conv::conv_kxk_s1_f32`] (checked by
+//! property test); the difference is the execution schedule, which the
+//! returned [`RulebookStats`] quantifies for the platform model.
+
+use super::map::SparseMap;
+use super::token::Token;
+use std::collections::HashMap;
+
+/// Execution statistics used by the Fig. 14 platform model.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RulebookStats {
+    /// Coordinate hash-map insertions (one per input token).
+    pub hash_inserts: usize,
+    /// Coordinate hash-map probes (one per (token, offset) pair).
+    pub hash_probes: usize,
+    /// Kernel "launches" (one gathered GEMM per nonempty offset).
+    pub launches: usize,
+    /// Total gathered rows across launches (Σ rulebook pair counts).
+    pub gathered_rows: usize,
+    /// MACs actually performed.
+    pub macs: usize,
+}
+
+/// Rulebook for one layer: per kernel offset, the (in, out) index pairs.
+pub struct Rulebook {
+    pub k: usize,
+    pub pairs: Vec<Vec<(u32, u32)>>,
+    pub stats: RulebookStats,
+}
+
+/// Build the stride-1 submanifold rulebook (output tokens = input tokens).
+pub fn build_rulebook_s1(input: &SparseMap<f32>, k: usize) -> Rulebook {
+    let u = (k - 1) as isize / 2;
+    let mut stats = RulebookStats::default();
+    let mut coord_to_idx: HashMap<(u16, u16), u32> = HashMap::with_capacity(input.nnz() * 2);
+    for (i, t) in input.tokens.iter().enumerate() {
+        coord_to_idx.insert((t.x, t.y), i as u32);
+        stats.hash_inserts += 1;
+    }
+    let mut pairs = vec![Vec::new(); k * k];
+    for (oi, t) in input.tokens.iter().enumerate() {
+        for dy in 0..k as isize {
+            for dx in 0..k as isize {
+                let ix = t.x as isize + dx - u;
+                let iy = t.y as isize + dy - u;
+                stats.hash_probes += 1;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                if let Some(&ii) = coord_to_idx.get(&(ix as u16, iy as u16)) {
+                    pairs[(dy * k as isize + dx) as usize].push((ii, oi as u32));
+                }
+            }
+        }
+    }
+    Rulebook { k, pairs, stats }
+}
+
+/// Execute a full k×k submanifold conv via the rulebook: one gathered GEMM
+/// per nonempty offset, scattered into the output. Weights laid out as in
+/// `conv::conv_kxk_s1_f32`.
+pub fn execute_s1(
+    input: &SparseMap<f32>,
+    rb: &mut Rulebook,
+    w: &[f32],
+    bias: &[f32],
+    cout: usize,
+) -> SparseMap<f32> {
+    let cin = input.c;
+    let k = rb.k;
+    assert_eq!(w.len(), k * k * cin * cout);
+    let mut out = SparseMap::empty(input.w, input.h, cout);
+    out.tokens = input.tokens.clone();
+    out.feats = vec![0f32; out.tokens.len() * cout];
+    // Initialize with bias.
+    for i in 0..out.tokens.len() {
+        out.feats[i * cout..(i + 1) * cout].copy_from_slice(bias);
+    }
+    for (off, pairs) in rb.pairs.iter().enumerate() {
+        if pairs.is_empty() {
+            continue;
+        }
+        rb.stats.launches += 1;
+        rb.stats.gathered_rows += pairs.len();
+        let wbase = off * cin * cout;
+        // Gather → GEMM → scatter (modelled in one pass; the schedule, not
+        // the fusion, is what the stats capture).
+        for &(ii, oi) in pairs {
+            let f = input.feat(ii as usize);
+            let ob = oi as usize * cout;
+            for ci in 0..cin {
+                let a = f[ci];
+                let wrow = wbase + ci * cout;
+                for co in 0..cout {
+                    out.feats[ob + co] += a * w[wrow + co];
+                }
+            }
+            rb.stats.macs += cin * cout;
+        }
+    }
+    out
+}
+
+/// Build + execute a stride-2 sparse conv via rulebook (coordinates
+/// re-derived with the s×s grid rule, as MinkowskiEngine's generative
+/// stride does for even kernels — matching `conv::conv_kxk_s2_f32`).
+pub fn conv_s2_rulebook(
+    input: &SparseMap<f32>,
+    k: usize,
+    w: &[f32],
+    bias: &[f32],
+    cout: usize,
+    stats: &mut RulebookStats,
+) -> SparseMap<f32> {
+    let cin = input.c;
+    let pad = (k - 1) as isize / 2;
+    let mut coord_to_idx: HashMap<(u16, u16), u32> = HashMap::with_capacity(input.nnz() * 2);
+    for (i, t) in input.tokens.iter().enumerate() {
+        coord_to_idx.insert((t.x, t.y), i as u32);
+        stats.hash_inserts += 1;
+    }
+    let out_tokens: Vec<Token> = super::conv::downsample_tokens(&input.bitmap());
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    let mut pairs = vec![Vec::new(); k * k];
+    for (oi, t) in out_tokens.iter().enumerate() {
+        for dy in 0..k as isize {
+            for dx in 0..k as isize {
+                let ix = t.x as isize * 2 + dx - pad;
+                let iy = t.y as isize * 2 + dy - pad;
+                stats.hash_probes += 1;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                if let Some(&ii) = coord_to_idx.get(&(ix as u16, iy as u16)) {
+                    pairs[(dy * k as isize + dx) as usize].push((ii, oi as u32));
+                }
+            }
+        }
+    }
+    let mut out = SparseMap::empty(ow, oh, cout);
+    out.tokens = out_tokens;
+    out.feats = vec![0f32; out.tokens.len() * cout];
+    for i in 0..out.tokens.len() {
+        out.feats[i * cout..(i + 1) * cout].copy_from_slice(bias);
+    }
+    for (off, ps) in pairs.iter().enumerate() {
+        if ps.is_empty() {
+            continue;
+        }
+        stats.launches += 1;
+        stats.gathered_rows += ps.len();
+        let wbase = off * cin * cout;
+        for &(ii, oi) in ps {
+            let f = input.feat(ii as usize);
+            let ob = oi as usize * cout;
+            for ci in 0..cin {
+                let a = f[ci];
+                let wrow = wbase + ci * cout;
+                for co in 0..cout {
+                    out.feats[ob + co] += a * w[wrow + co];
+                }
+            }
+            stats.macs += cin * cout;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::conv::{conv_kxk_s1_f32, conv_kxk_s2_f32, Act};
+    use crate::sparse::map::random_map;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn rulebook_s1_matches_reference() {
+        check("rulebook s1 == functional conv", 48, |g| {
+            let w = g.usize(3, 12);
+            let h = g.usize(3, 12);
+            let cin = g.usize(1, 3);
+            let cout = g.usize(1, 3);
+            let k = 3;
+            let m = random_map(g.rng(), w, h, cin, 0.3);
+            let wt: Vec<f32> = (0..k * k * cin * cout).map(|_| g.f64() as f32 - 0.5).collect();
+            let b: Vec<f32> = (0..cout).map(|_| g.f64() as f32).collect();
+            let mut rb = build_rulebook_s1(&m, k);
+            let got = execute_s1(&m, &mut rb, &wt, &b, cout);
+            let want = conv_kxk_s1_f32(&m, k, &wt, &b, cout, Act::None);
+            assert_eq!(got.tokens, want.tokens);
+            for (a, e) in got.feats.iter().zip(&want.feats) {
+                assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+            }
+        });
+    }
+
+    #[test]
+    fn rulebook_s2_matches_reference() {
+        check("rulebook s2 == functional conv", 48, |g| {
+            let w = g.usize(4, 12);
+            let h = g.usize(4, 12);
+            let cin = g.usize(1, 3);
+            let cout = g.usize(1, 3);
+            let k = 3;
+            let m = random_map(g.rng(), w, h, cin, 0.3);
+            let wt: Vec<f32> = (0..k * k * cin * cout).map(|_| g.f64() as f32 - 0.5).collect();
+            let b: Vec<f32> = (0..cout).map(|_| g.f64() as f32).collect();
+            let mut stats = RulebookStats::default();
+            let got = conv_s2_rulebook(&m, k, &wt, &b, cout, &mut stats);
+            let want = conv_kxk_s2_f32(&m, k, &wt, &b, cout, Act::None);
+            assert_eq!(got.tokens, want.tokens);
+            for (a, e) in got.feats.iter().zip(&want.feats) {
+                assert!((a - e).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn stats_counts_are_consistent() {
+        let mut r = crate::util::Rng::new(9);
+        let m = random_map(&mut r, 16, 16, 4, 0.25);
+        let mut rb = build_rulebook_s1(&m, 3);
+        assert_eq!(rb.stats.hash_inserts, m.nnz());
+        assert_eq!(rb.stats.hash_probes, m.nnz() * 9);
+        let w = vec![0.1f32; 9 * 4 * 4];
+        let b = vec![0f32; 4];
+        let _ = execute_s1(&m, &mut rb, &w, &b, 4);
+        assert!(rb.stats.launches <= 9);
+        let total_pairs: usize = rb.pairs.iter().map(|p| p.len()).sum();
+        assert_eq!(rb.stats.gathered_rows, total_pairs);
+        assert_eq!(rb.stats.macs, total_pairs * 4 * 4);
+        // Center offset always pairs every token with itself.
+        assert_eq!(rb.pairs[4].len(), m.nnz());
+    }
+}

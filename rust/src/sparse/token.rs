@@ -1,0 +1,69 @@
+//! Coordinate tokens (paper Eqn. 1): `[.x, .y, .end]`.
+//!
+//! The `.end` flag only exists on the wire (hardware streams, `arch::stream`);
+//! in-memory sparse maps store plain `(x, y)` pairs in strictly increasing
+//! ravel order.
+
+/// Spatial coordinate of a nonzero feature vector. `u16` bounds the spatial
+/// resolution at 65k per side — far beyond any event camera (paper max is
+/// 180×240 feature maps, commercial sensors 720×1280).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash, PartialOrd, Ord)]
+pub struct Token {
+    /// Row (y first so derived `Ord` equals ravel order).
+    pub y: u16,
+    /// Column.
+    pub x: u16,
+}
+
+impl Token {
+    pub fn new(x: u16, y: u16) -> Self {
+        Token { x, y }
+    }
+
+    /// Ravel (stream) order: `y * width + x`.
+    #[inline]
+    pub fn ravel(&self, width: usize) -> usize {
+        self.y as usize * width + self.x as usize
+    }
+}
+
+/// Free-function ravel for raw coordinates.
+#[inline]
+pub fn ravel(x: usize, y: usize, width: usize) -> usize {
+    y * width + x
+}
+
+/// Check the strict-ordering invariant of Eqn. 1.
+pub fn is_strictly_ordered(tokens: &[Token], width: usize) -> bool {
+    tokens
+        .windows(2)
+        .all(|w| w[0].ravel(width) < w[1].ravel(width))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ord_matches_ravel() {
+        let w = 17;
+        let a = Token::new(16, 0);
+        let b = Token::new(0, 1);
+        assert!(a < b);
+        assert!(a.ravel(w) < b.ravel(w));
+        let c = Token::new(3, 5);
+        let d = Token::new(4, 5);
+        assert!(c < d);
+    }
+
+    #[test]
+    fn strict_order_detects_dup_and_swap() {
+        let w = 10;
+        let ok = vec![Token::new(1, 0), Token::new(5, 0), Token::new(0, 1)];
+        assert!(is_strictly_ordered(&ok, w));
+        let dup = vec![Token::new(1, 0), Token::new(1, 0)];
+        assert!(!is_strictly_ordered(&dup, w));
+        let swap = vec![Token::new(5, 0), Token::new(1, 0)];
+        assert!(!is_strictly_ordered(&swap, w));
+    }
+}

@@ -1,0 +1,127 @@
+//! Tiny CLI flag parser (clap is not vendored).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (usually `std::env::args().skip(1)`).
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.flags
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if bool_flags.contains(&stripped) {
+                    out.bools.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("flag --{stripped} expects a value"))?;
+                    out.flags.insert(stripped.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], bools: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), bools).unwrap()
+    }
+
+    #[test]
+    fn parses_flag_styles() {
+        let a = parse(
+            &["simulate", "--model=mbv2", "--steps", "100", "--verbose", "extra"],
+            &["verbose"],
+        );
+        assert_eq!(a.positional(), &["simulate".to_string(), "extra".to_string()]);
+        assert_eq!(a.get("model"), Some("mbv2"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(vec!["--steps".to_string()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("x", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_or("name", "d"), "d");
+    }
+
+    #[test]
+    fn bad_int_reports_flag() {
+        let a = parse(&["--steps", "abc"], &[]);
+        let e = a.get_usize("steps", 0).unwrap_err();
+        assert!(e.contains("steps"));
+    }
+}

@@ -1,0 +1,23 @@
+//! Small in-tree utilities.
+//!
+//! The build environment is offline and only vendors the `xla` crate
+//! closure, so the usual ecosystem crates (rand, serde, proptest, clap,
+//! criterion) are unavailable. This module provides the minimal, tested
+//! replacements the rest of the crate needs:
+//!
+//! - [`rng`]: a splitmix64/xoshiro256** PRNG (deterministic, seedable, and
+//!   implemented identically in `python/compile/data.py` so the two halves
+//!   of the build generate the same synthetic datasets).
+//! - [`propcheck`]: a tiny property-based testing harness with case
+//!   generation and failure reporting.
+//! - [`json`]: a minimal JSON value model + parser + writer, used for the
+//!   artifact metadata exchanged with the python compile path.
+//! - [`cli`]: flag parsing for the `esda` binary and the examples.
+//! - [`stats`]: summary statistics and timing helpers shared by the benches.
+pub mod rng;
+pub mod propcheck;
+pub mod json;
+pub mod cli;
+pub mod stats;
+
+pub use rng::Rng;

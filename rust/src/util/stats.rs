@@ -1,0 +1,185 @@
+//! Summary statistics and wall-clock timing helpers for the bench harness
+//! (criterion is not vendored; `rust/benches/*` use `harness = false` and
+//! these utilities).
+
+use std::time::Instant;
+
+/// Streaming summary of a sample set.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    xs: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { xs: Vec::new() }
+    }
+    pub fn from(xs: &[f64]) -> Self {
+        let mut s = Summary { xs: xs.to_vec() };
+        s.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+    pub fn push(&mut self, x: f64) {
+        let pos = self.xs.partition_point(|&v| v < x);
+        self.xs.insert(pos, x);
+    }
+    pub fn n(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.xs.first().copied().unwrap_or(f64::NAN)
+    }
+    pub fn max(&self) -> f64 {
+        self.xs.last().copied().unwrap_or(f64::NAN)
+    }
+    /// Interpolated percentile, q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let rank = (q / 100.0) * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = rank - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Time a closure over `warmup + iters` runs; returns per-iteration seconds
+/// as a [`Summary`] over the measured iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".to_string();
+    }
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Ordinary least squares fit `y ≈ X·beta` via normal equations with
+/// Gaussian elimination. Used by the power-model calibration
+/// (`hwopt::power`). Returns beta of length `X[0].len()`.
+pub fn ols(x_rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let n = x_rows.len();
+    if n == 0 || n != y.len() {
+        return None;
+    }
+    let k = x_rows[0].len();
+    // Normal equations: (XᵀX) beta = Xᵀy
+    let mut a = vec![vec![0.0f64; k + 1]; k]; // augmented
+    for r in 0..k {
+        for c in 0..k {
+            a[r][c] = x_rows.iter().map(|row| row[r] * row[c]).sum();
+        }
+        a[r][k] = x_rows.iter().zip(y).map(|(row, &yy)| row[r] * yy).sum();
+    }
+    // Gaussian elimination with partial pivoting.
+    for col in 0..k {
+        let piv = (col..k).max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())?;
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        let d = a[col][col];
+        for c in col..=k {
+            a[col][c] /= d;
+        }
+        for r in 0..k {
+            if r != col {
+                let factor = a[r][col];
+                for c in col..=k {
+                    a[r][c] -= factor * a[col][c];
+                }
+            }
+        }
+    }
+    Some((0..k).map(|r| a[r][k]).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(&[3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.mean(), 2.5);
+        assert!((s.median() - 2.5).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_keeps_sorted() {
+        let mut s = Summary::new();
+        for x in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.median(), 3.0);
+    }
+
+    #[test]
+    fn ols_recovers_plane() {
+        // y = 2*a + 3*b + 1 (intercept as constant column)
+        let xs: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![1.0, i as f64, (i * i % 7) as f64])
+            .collect();
+        let y: Vec<f64> = xs.iter().map(|r| 1.0 + 2.0 * r[1] + 3.0 * r[2]).collect();
+        let beta = ols(&xs, &y).unwrap();
+        assert!((beta[0] - 1.0).abs() < 1e-8);
+        assert!((beta[1] - 2.0).abs() < 1e-8);
+        assert!((beta[2] - 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(2e-9).contains("ns"));
+        assert!(fmt_secs(2e-6).contains("µs"));
+        assert!(fmt_secs(2e-3).contains("ms"));
+        assert!(fmt_secs(2.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Cross-module integration tests that don't need `make artifacts`:
+//! the serving pipeline, the NAS→optimizer→simulator chain, and the
+//! cost-model-vs-simulator consistency contract.
+
+use esda::arch::{simulate_inference, HwConfig};
+use esda::coordinator::{run_pipeline, Backend, PipelineConfig};
+use esda::events::{repr::histogram2_norm, DatasetProfile};
+use esda::hwopt::{allocate, stats::collect_stats_for_profile, Budget};
+use esda::model::exec::forward_i8;
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::NetworkSpec;
+use esda::sparse::SparseMap;
+use esda::util::Rng;
+
+fn inputs_for(p: &DatasetProfile, n: usize, seed: u64) -> Vec<SparseMap<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let es = p.sample(i % p.n_classes, &mut rng);
+            histogram2_norm(&es, p.w, p.h, 8.0)
+        })
+        .collect()
+}
+
+/// Optimizer → simulator contract: the Eqn. 5 bottleneck prediction and
+/// the measured cycle count must agree to a small factor across datasets
+/// and models (the model is an average; samples vary).
+#[test]
+fn cost_model_tracks_simulator() {
+    for (profile, spec) in [
+        (DatasetProfile::n_mnist(), NetworkSpec::tiny(34, 34, 10)),
+        (DatasetProfile::roshambo17(), NetworkSpec::compact("c", 64, 64, 3)),
+    ] {
+        let w = FloatWeights::random(&spec, 2);
+        let calib = inputs_for(&profile, 3, 1);
+        let qnet = quantize_network(&spec, &w, &calib);
+        let stats = collect_stats_for_profile(&spec, &profile, 6, 3);
+        let alloc = allocate(&spec, &stats, &Budget::zcu102()).unwrap();
+        let cfg = HwConfig { pf: alloc.pf.clone(), fifo_depth: 8 };
+        let mut total_ratio = 0.0;
+        let samples = inputs_for(&profile, 4, 9);
+        for input in &samples {
+            let (_, report) = simulate_inference(&qnet, &cfg, input, 5_000_000_000).unwrap();
+            total_ratio += report.cycles as f64 / alloc.latency;
+        }
+        let mean_ratio = total_ratio / samples.len() as f64;
+        assert!(
+            (0.3..3.0).contains(&mean_ratio),
+            "{}: sim/model ratio {mean_ratio}",
+            profile.name
+        );
+    }
+}
+
+/// The full serving pipeline with the simulator backend classifies exactly
+/// like the functional reference, under concurrent staged execution.
+#[test]
+fn pipeline_backends_consistent_end_to_end() {
+    let profile = DatasetProfile::n_mnist();
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let w = FloatWeights::random(&spec, 4);
+    let calib = inputs_for(&profile, 3, 2);
+    let qnet = quantize_network(&spec, &w, &calib);
+    let n_ops = spec.ops().len();
+    let run = |backend: Backend| {
+        let cfg = PipelineConfig { n_requests: 10, seed: 77, queue_depth: 3, clip: 8.0 };
+        run_pipeline(&profile, &backend, &cfg)
+    };
+    let f = run(Backend::Functional { qnet: qnet.clone() });
+    let s = run(Backend::Simulator { qnet: qnet.clone(), cfg: HwConfig::uniform(n_ops, 8) });
+    assert_eq!(f.metrics.total, 10);
+    assert_eq!(s.metrics.total, 10);
+    // Deterministic sources (same seed) ⇒ identical correctness counts.
+    assert_eq!(f.metrics.correct, s.metrics.correct);
+}
+
+/// NAS output is executable: the best candidate quantizes, allocates, and
+/// simulates to the same logits as the functional int8 path.
+#[test]
+fn nas_winner_is_simulatable() {
+    let profile = DatasetProfile::n_mnist();
+    let space = esda::nas::SearchSpace::for_dataset(profile.w, profile.h, profile.n_classes);
+    let cfg = esda::nas::SearchConfig {
+        n_samples: 5,
+        top_k: 1,
+        n_stat_samples: 2,
+        probe_per_class: 3,
+        seed: 3,
+        budget: Budget::zcu102(),
+    };
+    let out = esda::nas::search(&profile, &space, &cfg);
+    let best = out.first().expect("search found a feasible model");
+    let w = FloatWeights::random(&best.spec, 5);
+    let calib = inputs_for(&profile, 2, 6);
+    let qnet = quantize_network(&best.spec, &w, &calib);
+    let hw = HwConfig { pf: best.alloc.pf.clone(), fifo_depth: 8 };
+    let input = &calib[0];
+    let want = forward_i8(&qnet, input);
+    let (got, _) = simulate_inference(&qnet, &hw, input, 10_000_000_000).unwrap();
+    assert_eq!(got, want);
+}
+
+/// Representation choice is orthogonal to the architecture: a time-surface
+/// input flows through the same pipeline (the paper's claim that ESDA
+/// "can seamlessly integrate with different 2D representation algorithms").
+#[test]
+fn time_surface_representation_works_too() {
+    let profile = DatasetProfile::n_mnist();
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let w = FloatWeights::random(&spec, 6);
+    let mut rng = Rng::new(8);
+    let es = profile.sample(0, &mut rng);
+    let ts = esda::events::repr::time_surface(&es, profile.w, profile.h, 10_000.0);
+    let calib = vec![ts.clone()];
+    let qnet = quantize_network(&spec, &w, &calib);
+    let cfg = HwConfig::uniform(spec.ops().len(), 8);
+    let want = forward_i8(&qnet, &ts);
+    let (got, _) = simulate_inference(&qnet, &cfg, &ts, 5_000_000_000).unwrap();
+    assert_eq!(got, want);
+}
