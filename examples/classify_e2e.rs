@@ -31,6 +31,13 @@ fn main() {
         eprintln!("artifacts/{stem}.hlo.txt missing — run `make artifacts` first");
         std::process::exit(1);
     }
+    if !esda::runtime::pjrt_enabled() {
+        eprintln!(
+            "built without the `pjrt` feature — add the vendored `xla` dependency in \
+             rust/Cargo.toml (see its comment) and rebuild with --features pjrt"
+        );
+        std::process::exit(1);
+    }
     let dir = artifacts_dir();
 
     // Trained weights + spec.

@@ -1,20 +1,66 @@
-//! Serving demo: the threaded coordinator pipeline (event source →
-//! representation builder → accelerator) under sustained load, comparing
-//! the cycle-simulator backend against the functional int8 backend, with
-//! backpressure through bounded queues.
+//! Serving demo: the sharded serving runtime (event source →
+//! representation builder → admission-controlled ingress queue → a pool of
+//! accelerator worker replicas) under sustained load.
+//!
+//! Three runs show the scaling/admission axes:
+//! 1. single replica, lossless (the paper's batch-1 deployment),
+//! 2. four replicas, lossless — same predictions, higher throughput,
+//! 3. one *slow* replica behind a depth-1 queue with the ESST-style
+//!    drop-oldest policy — load shedding with drop accounting.
 //!
 //! Run: `cargo run --release --example serve_events -- --dataset n_mnist --requests 64`
 
 use esda::arch::HwConfig;
-use esda::coordinator::{run_pipeline, Backend, PipelineConfig};
+use esda::coordinator::{
+    run_server, Backend, BackendError, Classification, DropPolicy, Functional, ServerConfig,
+    Simulator,
+};
 use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::hwopt::power::CLOCK_HZ;
 use esda::model::quant::quantize_network;
 use esda::model::weights::FloatWeights;
 use esda::model::NetworkSpec;
+use esda::sparse::SparseMap;
 use esda::util::cli::Args;
 use esda::util::stats::fmt_secs;
 use esda::util::Rng;
+
+/// A deliberately slow backend to demonstrate saturation + load shedding.
+struct Throttled {
+    inner: Functional,
+    delay: std::time::Duration,
+}
+
+impl Backend for Throttled {
+    fn name(&self) -> &str {
+        "throttled-functional"
+    }
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        std::thread::sleep(self.delay);
+        self.inner.classify(map)
+    }
+}
+
+fn report(label: &str, r: &esda::coordinator::ServerResult) {
+    let m = &r.metrics;
+    let e2e = m.e2e_percentiles();
+    println!("== {label} ==");
+    println!(
+        "  {} served / {} offered ({} dropped, {:.1}%) | e2e p50 {} p95 {} p99 {} | {:.0} req/s",
+        m.total,
+        m.offered(),
+        m.dropped,
+        m.drop_rate() * 100.0,
+        fmt_secs(e2e.p50),
+        fmt_secs(e2e.p95),
+        fmt_secs(e2e.p99),
+        m.throughput(),
+    );
+    println!("{}", esda::report::serving_table(m).render());
+    if let Some(ms) = m.mean_sim_latency_ms(CLOCK_HZ) {
+        println!("  simulated hardware latency: {ms:.3} ms/inf @187 MHz");
+    }
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1), &[]).unwrap();
@@ -33,27 +79,45 @@ fn main() {
     let qnet = quantize_network(&spec, &weights, &calib);
     let n_ops = spec.ops().len();
 
-    for (label, backend) in [
-        ("functional int8", Backend::Functional { qnet: qnet.clone() }),
-        (
-            "cycle simulator",
-            Backend::Simulator { qnet: qnet.clone(), cfg: HwConfig::uniform(n_ops, 16) },
-        ),
-    ] {
-        let cfg = PipelineConfig { n_requests, seed: 3, queue_depth: 4, clip: 8.0 };
-        let r = run_pipeline(&profile, &backend, &cfg);
-        let m = &r.metrics;
-        println!("== backend: {label} ==");
-        println!(
-            "  {} requests | e2e p50 {} p99 {} | service mean {} | {:.0} req/s",
-            m.total,
-            fmt_secs(m.e2e_summary().percentile(50.0)),
-            fmt_secs(m.e2e_summary().percentile(99.0)),
-            fmt_secs(m.service_summary().mean()),
-            m.throughput(),
-        );
-        if let Some(ms) = m.mean_sim_latency_ms(CLOCK_HZ) {
-            println!("  simulated hardware latency: {ms:.3} ms/inf @187 MHz");
-        }
-    }
+    // 1+2: lossless, 1 vs 4 replicas — same prediction multiset.
+    let lossless = |workers| ServerConfig {
+        n_requests,
+        seed: 3,
+        clip: 8.0,
+        workers,
+        queue_depth: 4,
+        drop_policy: DropPolicy::Block,
+    };
+    let sim = Simulator::new(qnet.clone(), HwConfig::uniform(n_ops, 16));
+    let one = run_server(&profile, &sim, &lossless(1)).expect("serve x1");
+    report("cycle simulator, 1 replica (paper's batch-1 deployment)", &one);
+    let four = run_server(&profile, &sim, &lossless(4)).expect("serve x4");
+    report("cycle simulator, 4 replicas", &four);
+    let sorted = |r: &esda::coordinator::ServerResult| {
+        let mut v: Vec<(usize, usize)> = r.predictions.iter().map(|p| (p.label, p.pred)).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(sorted(&one), sorted(&four), "replication must not change predictions");
+    println!(
+        "replication check: 1-replica and 4-replica prediction multisets identical \
+         ({} requests)\n",
+        n_requests
+    );
+
+    // 3: saturate a depth-1 queue with a slow replica + drop-oldest.
+    let throttled = Throttled {
+        inner: Functional::new(qnet),
+        delay: std::time::Duration::from_millis(2),
+    };
+    let shed = ServerConfig {
+        n_requests,
+        seed: 3,
+        clip: 8.0,
+        workers: 1,
+        queue_depth: 1,
+        drop_policy: DropPolicy::DropOldest,
+    };
+    let r = run_server(&profile, &throttled, &shed).expect("serve shedding");
+    report("throttled replica, depth-1 queue, drop-oldest admission", &r);
 }

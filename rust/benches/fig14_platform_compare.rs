@@ -140,7 +140,7 @@ fn main() {
     let mut any = false;
     for ds in datasets.iter().chain(["n_mnist", "roshambo17"].iter()) {
         let stem = format!("compact_{ds}");
-        if !artifact_available(&stem) {
+        if !esda::runtime::pjrt_enabled() || !artifact_available(&stem) {
             continue;
         }
         any = true;
@@ -169,6 +169,9 @@ fn main() {
         );
     }
     if !any {
-        println!("  (no AOT artifacts — run `make artifacts`)");
+        println!(
+            "  (needs AOT artifacts and the `pjrt` feature — run `make artifacts`, add \
+             the vendored `xla` dependency in rust/Cargo.toml, build with --features pjrt)"
+        );
     }
 }

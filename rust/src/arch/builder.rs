@@ -38,7 +38,7 @@ pub fn build_pipeline(qnet: &QuantizedNet, cfg: &HwConfig, input: &SparseMap<i8>
     let res = spec.op_resolutions();
     assert_eq!(cfg.pf.len(), ops.len(), "PF config must cover every op");
     let mut fab = Fabric::default();
-    let mut modules: Vec<Box<dyn Module>> = Vec::new();
+    let mut modules: Vec<Box<dyn Module + Send>> = Vec::new();
 
     let src_ch = fab.add_chan(cfg.fifo_depth);
     modules.push(Box::new(SourceMod::new("source", src_ch, input)));

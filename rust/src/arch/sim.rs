@@ -6,10 +6,13 @@ use super::stream::Fabric;
 use std::fmt;
 
 /// A built pipeline ready to simulate.
+///
+/// Modules are `Send` so a whole pipeline can move to (or be built on) an
+/// accelerator worker-replica thread in the serving runtime.
 pub struct Pipeline {
     pub fabric: Fabric,
     /// Modules in pipeline (topological) order, source first, sink last.
-    pub modules: Vec<Box<dyn Module>>,
+    pub modules: Vec<Box<dyn Module + Send>>,
 }
 
 /// Result of a simulation run.
@@ -264,6 +267,15 @@ mod tests {
             assert_eq!(l1, l2);
             assert_eq!(r1.cycles, r2.cycles, "skip changed cycle count");
         }
+    }
+
+    /// Worker replicas in the serving runtime may own pipelines, so the
+    /// whole simulator state must be `Send`.
+    #[test]
+    fn pipeline_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Pipeline>();
+        assert_send::<SimReport>();
     }
 
     #[test]

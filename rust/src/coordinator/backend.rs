@@ -1,0 +1,180 @@
+//! Classification backends behind a shared object-safe trait.
+//!
+//! The serving runtime replicates accelerators across worker threads, so a
+//! backend must be usable from many threads at once: `Backend: Send + Sync`
+//! and `classify` takes `&self`. The three implementations mirror the
+//! paper's platforms:
+//!
+//! - [`Simulator`] — the cycle-level ESDA dataflow simulator (batch-1, the
+//!   paper's FPGA deployment; also reports hardware cycles),
+//! - [`Functional`] — the int8 functional reference (fast, no cycle model),
+//! - [`Dense`] — the PJRT dense engine (the GPU-platform stand-in; real
+//!   only with the `pjrt` feature).
+
+use crate::arch::{simulate_inference, HwConfig};
+use crate::model::exec::{argmax, classify_i8};
+use crate::model::quant::QuantizedNet;
+use crate::sparse::SparseMap;
+use std::fmt;
+
+/// Default simulator cycle budget per inference (generous: deadlock and
+/// runaway detection live inside the simulator itself).
+pub const DEFAULT_CYCLE_BUDGET: u64 = 10_000_000_000;
+
+/// One classification outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Classification {
+    /// Predicted class index.
+    pub pred: usize,
+    /// Simulated hardware cycles (simulator backend only).
+    pub sim_cycles: Option<u64>,
+}
+
+/// Backend failure (simulator deadlock/timeout, PJRT error, …).
+#[derive(Debug, Clone)]
+pub struct BackendError(pub String);
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// A classification backend that worker replicas can share.
+///
+/// Implementations must be stateless across calls (or internally
+/// synchronized): the pool calls `classify` concurrently from N threads.
+pub trait Backend: Send + Sync {
+    /// Short display name for reports.
+    fn name(&self) -> &str;
+
+    /// Classify one sparse input map.
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError>;
+}
+
+/// Functional int8 reference (fast; no cycle model).
+pub struct Functional {
+    pub qnet: QuantizedNet,
+}
+
+impl Functional {
+    pub fn new(qnet: QuantizedNet) -> Functional {
+        Functional { qnet }
+    }
+}
+
+impl Backend for Functional {
+    fn name(&self) -> &str {
+        "functional-int8"
+    }
+
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        Ok(Classification { pred: classify_i8(&self.qnet, map), sim_cycles: None })
+    }
+}
+
+/// Cycle-level ESDA simulator (reports hardware cycles too).
+pub struct Simulator {
+    pub qnet: QuantizedNet,
+    pub cfg: HwConfig,
+    pub cycle_budget: u64,
+}
+
+impl Simulator {
+    pub fn new(qnet: QuantizedNet, cfg: HwConfig) -> Simulator {
+        Simulator { qnet, cfg, cycle_budget: DEFAULT_CYCLE_BUDGET }
+    }
+}
+
+impl Backend for Simulator {
+    fn name(&self) -> &str {
+        "cycle-simulator"
+    }
+
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        let (logits, report) = simulate_inference(&self.qnet, &self.cfg, map, self.cycle_budget)
+            .map_err(|e| BackendError(format!("simulation: {e}")))?;
+        Ok(Classification { pred: argmax(&logits), sim_cycles: Some(report.cycles) })
+    }
+}
+
+/// PJRT dense engine (AOT artifact). The engine handle is `Send` but not
+/// `Sync`, so one shared instance serializes inferences behind a mutex —
+/// worker replicas queue on it. A truly parallel dense pool needs one
+/// engine per replica (future work: per-worker backend factories).
+pub struct Dense {
+    pub engine: std::sync::Mutex<crate::runtime::Engine>,
+}
+
+impl Dense {
+    pub fn new(engine: crate::runtime::Engine) -> Dense {
+        Dense { engine: std::sync::Mutex::new(engine) }
+    }
+}
+
+impl Backend for Dense {
+    fn name(&self) -> &str {
+        "pjrt-dense"
+    }
+
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        // A previous panic while holding the lock cannot corrupt the
+        // engine (inference takes `&self`), so poisoning is ignorable.
+        let engine = self.engine.lock().unwrap_or_else(|p| p.into_inner());
+        let logits = engine
+            .infer_sparse(map)
+            .map_err(|e| BackendError(format!("dense inference: {e}")))?;
+        Ok(Classification { pred: argmax(&logits), sim_cycles: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::qnet_for;
+    use crate::events::{repr::histogram2_norm, DatasetProfile};
+    use crate::util::Rng;
+
+    /// Simulator and functional backends must classify identically.
+    #[test]
+    fn backends_agree_on_predictions() {
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let n_ops = qnet.spec.ops().len();
+        let func = Functional::new(qnet.clone());
+        let sim = Simulator::new(qnet, HwConfig::uniform(n_ops, 8));
+        let mut rng = Rng::new(77);
+        for i in 0..3 {
+            let es = profile.sample(i, &mut rng);
+            let map = histogram2_norm(&es, profile.w, profile.h, 8.0);
+            let f = func.classify(&map).unwrap();
+            let s = sim.classify(&map).unwrap();
+            assert_eq!(f.pred, s.pred);
+            assert!(f.sim_cycles.is_none());
+            assert!(s.sim_cycles.unwrap() > 0);
+        }
+    }
+
+    /// Backends are shareable across threads (the pool's core contract).
+    #[test]
+    fn backend_trait_objects_are_sync() {
+        fn assert_sync<T: Sync + ?Sized>() {}
+        assert_sync::<dyn Backend>();
+        assert_sync::<Functional>();
+        assert_sync::<Simulator>();
+        assert_sync::<Dense>();
+    }
+
+    /// A stub Dense backend surfaces engine errors instead of panicking.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn dense_stub_errors_cleanly() {
+        let eng = crate::runtime::Engine { h: 4, w: 4, c: 2, n_classes: 3 };
+        let dense = Dense::new(eng);
+        let map = SparseMap::empty(4, 4, 2);
+        let e = dense.classify(&map).unwrap_err();
+        assert!(e.to_string().contains("pjrt"));
+    }
+}

@@ -1,4 +1,6 @@
-//! Latency/throughput metrics for the serving pipeline.
+//! Latency/throughput metrics for the serving runtime: per-request
+//! timings, admission-control accounting (drops, in-flight), per-worker
+//! utilization, and p50/p95/p99 percentile summaries.
 
 use crate::util::stats::Summary;
 use std::time::Instant;
@@ -14,18 +16,108 @@ pub struct RequestTiming {
     pub sim_cycles: Option<u64>,
 }
 
-/// Aggregated pipeline metrics.
+/// Percentile summary of a latency sample set. Percentiles interpolate
+/// between order statistics, so for any nonempty sample
+/// `p50 ≤ p95 ≤ p99 ≤ max` and the report is invariant under permutation
+/// of the samples (both propcheck-verified below).
+#[derive(Debug, Clone, Copy)]
+pub struct PercentileReport {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Default for PercentileReport {
+    fn default() -> Self {
+        PercentileReport {
+            n: 0,
+            mean: f64::NAN,
+            p50: f64::NAN,
+            p95: f64::NAN,
+            p99: f64::NAN,
+            max: f64::NAN,
+        }
+    }
+}
+
+impl PercentileReport {
+    /// Summarize a sample set (empty ⇒ all-NaN report). Built on
+    /// [`Summary`] so there is exactly one percentile implementation in
+    /// the crate — the propcheck properties below exercise it too.
+    pub fn from_samples(xs: &[f64]) -> PercentileReport {
+        let s = Summary::from(xs);
+        if s.n() == 0 {
+            return PercentileReport::default();
+        }
+        PercentileReport {
+            n: s.n(),
+            mean: s.mean(),
+            p50: s.percentile(50.0),
+            p95: s.percentile(95.0),
+            p99: s.percentile(99.0),
+            max: s.max(),
+        }
+    }
+}
+
+/// Per-worker accounting for the replicated accelerator pool.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    /// Worker replica index.
+    pub worker: usize,
+    /// Requests this replica served.
+    pub served: usize,
+    /// Total accelerator-busy seconds.
+    pub busy_s: f64,
+    /// Service-latency percentiles for this replica.
+    pub service: PercentileReport,
+    /// End-to-end latency percentiles for requests this replica served.
+    pub e2e: PercentileReport,
+}
+
+impl WorkerStats {
+    /// Fraction of the wall-clock interval this replica spent serving.
+    pub fn utilization(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            return f64::NAN;
+        }
+        self.busy_s / wall_s
+    }
+}
+
+/// Aggregated serving metrics.
 #[derive(Debug)]
 pub struct Metrics {
     pub started: Instant,
     pub timings: Vec<RequestTiming>,
     pub correct: usize,
     pub total: usize,
+    /// Requests evicted by admission control (drop-oldest under saturation).
+    /// (Requests stranded by an aborted run are not in any `Metrics` —
+    /// they're reported via `PipelineError::in_flight` on the error path.)
+    pub dropped: usize,
+    /// Per-replica stats, one entry per pool worker (the single-
+    /// accelerator `run_pipeline` facade has exactly one).
+    pub per_worker: Vec<WorkerStats>,
+    /// Wall-clock duration of the completed run in seconds (0 until the
+    /// runtime finalizes it — see [`Metrics::wall_seconds`]).
+    pub wall_s: f64,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
-        Metrics { started: Instant::now(), timings: Vec::new(), correct: 0, total: 0 }
+        Metrics {
+            started: Instant::now(),
+            timings: Vec::new(),
+            correct: 0,
+            total: 0,
+            dropped: 0,
+            per_worker: Vec::new(),
+            wall_s: 0.0,
+        }
     }
 }
 
@@ -45,6 +137,19 @@ impl Metrics {
         self.correct as f64 / self.total as f64
     }
 
+    /// Requests offered to the accelerator stage (served + dropped).
+    pub fn offered(&self) -> usize {
+        self.total + self.dropped
+    }
+
+    /// Fraction of offered requests shed by admission control.
+    pub fn drop_rate(&self) -> f64 {
+        if self.offered() == 0 {
+            return 0.0;
+        }
+        self.dropped as f64 / self.offered() as f64
+    }
+
     pub fn e2e_summary(&self) -> Summary {
         Summary::from(&self.timings.iter().map(|t| t.e2e_s).collect::<Vec<_>>())
     }
@@ -53,9 +158,33 @@ impl Metrics {
         Summary::from(&self.timings.iter().map(|t| t.service_s).collect::<Vec<_>>())
     }
 
+    /// Aggregated end-to-end latency percentiles.
+    pub fn e2e_percentiles(&self) -> PercentileReport {
+        PercentileReport::from_samples(&self.timings.iter().map(|t| t.e2e_s).collect::<Vec<_>>())
+    }
+
+    /// Aggregated service-latency percentiles.
+    pub fn service_percentiles(&self) -> PercentileReport {
+        PercentileReport::from_samples(
+            &self.timings.iter().map(|t| t.service_s).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Wall-clock duration of the run: the finalized duration recorded by
+    /// the serving runtime, or time-since-start while still in flight —
+    /// so utilization/throughput don't dilute when a result is rendered
+    /// long after the run completed.
+    pub fn wall_seconds(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.wall_s
+        } else {
+            self.started.elapsed().as_secs_f64()
+        }
+    }
+
     /// Wall-clock throughput (requests/s).
     pub fn throughput(&self) -> f64 {
-        let dt = self.started.elapsed().as_secs_f64();
+        let dt = self.wall_seconds();
         if dt <= 0.0 {
             return f64::NAN;
         }
@@ -79,6 +208,7 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::propcheck::{check, Gen};
 
     #[test]
     fn aggregates() {
@@ -90,5 +220,72 @@ mod tests {
         assert!((m.e2e_summary().mean() - 0.015).abs() < 1e-9);
         let lat = m.mean_sim_latency_ms(1e6).unwrap();
         assert!((lat - 2.0).abs() < 1e-9); // 2000 cycles avg @1MHz = 2ms
+    }
+
+    #[test]
+    fn drop_accounting() {
+        let mut m = Metrics::default();
+        m.record(RequestTiming { e2e_s: 0.01, service_s: 0.01, sim_cycles: None }, true);
+        m.dropped = 3;
+        assert_eq!(m.offered(), 4);
+        assert!((m.drop_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_report_known_values() {
+        let p = PercentileReport::from_samples(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(p.n, 4);
+        assert!((p.mean - 2.5).abs() < 1e-12);
+        assert!((p.p50 - 2.5).abs() < 1e-12);
+        assert!((p.max - 4.0).abs() < 1e-12);
+        // Empty set is explicit about having no data.
+        let e = PercentileReport::from_samples(&[]);
+        assert_eq!(e.n, 0);
+        assert!(e.p50.is_nan() && e.max.is_nan());
+    }
+
+    /// Property: percentiles are monotone in q and bounded by the extremes.
+    #[test]
+    fn percentile_ordering_property() {
+        check("p50 ≤ p95 ≤ p99 ≤ max", 256, |g: &mut Gen| {
+            let n = g.usize(1, 200);
+            let xs: Vec<f64> = (0..n).map(|_| g.f64() * 10.0 - 5.0).collect();
+            let p = PercentileReport::from_samples(&xs);
+            assert!(p.p50 <= p.p95, "p50 {} > p95 {}", p.p50, p.p95);
+            assert!(p.p95 <= p.p99, "p95 {} > p99 {}", p.p95, p.p99);
+            assert!(p.p99 <= p.max, "p99 {} > max {}", p.p99, p.max);
+            let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(p.p50 >= lo && p.max <= hi);
+            assert!(p.mean >= lo - 1e-12 && p.mean <= hi + 1e-12);
+        });
+    }
+
+    /// Property: the report depends only on the sample multiset, not order.
+    #[test]
+    fn percentile_permutation_invariance() {
+        check("percentiles are permutation-invariant", 128, |g: &mut Gen| {
+            let n = g.usize(1, 64);
+            let mut xs: Vec<f64> = (0..n).map(|_| g.f64() * 100.0).collect();
+            let p1 = PercentileReport::from_samples(&xs);
+            // Fisher–Yates shuffle driven by the property's generator.
+            for i in (1..xs.len()).rev() {
+                let j = g.usize(0, i);
+                xs.swap(i, j);
+            }
+            let p2 = PercentileReport::from_samples(&xs);
+            // Same sorted array ⇒ bitwise-identical outputs.
+            for (a, b) in [(p1.p50, p2.p50), (p1.p95, p2.p95), (p1.p99, p2.p99), (p1.max, p2.max)]
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn worker_utilization() {
+        let w = WorkerStats { worker: 0, served: 10, busy_s: 0.5, ..Default::default() };
+        assert!((w.utilization(1.0) - 0.5).abs() < 1e-12);
+        assert!(w.utilization(0.0).is_nan());
     }
 }

@@ -1,16 +1,56 @@
-//! L3 serving coordinator: a threaded event-vision pipeline that composes
-//! the substrates into the deployable system of Fig. 2 —
+//! L3 serving coordinator: the sharded event-vision serving runtime that
+//! composes the substrates into a deployable system —
 //!
 //! ```text
-//! event source → representation builder → accelerator → classifications
-//!   (camera/        (histogram2, on the     (cycle-sim or
-//!    synthetic)      "PS" thread)            PJRT engine)
+//!                                      ┌ accel worker 0 ┐
+//! event source → representation → ingress queue    …     → classifications
+//!   (camera/        builder       (admission ─ accel worker N ─ + metrics
+//!    synthetic)    (histogram2)    control)
 //! ```
 //!
-//! Stages run on std threads connected by bounded channels (backpressure),
-//! since the offline build vendors no async runtime. Throughput/latency
-//! metrics are collected per stage.
-pub mod pipeline;
+//! Stages run on std threads connected by bounded queues (backpressure),
+//! since the offline build vendors no async runtime. The accelerator stage
+//! is a pool of N replicas sharing one [`Backend`] trait object; the
+//! ingress queue applies admission control (block vs drop-oldest) and the
+//! merged [`metrics::Metrics`] report per-worker utilization plus
+//! p50/p95/p99 latency percentiles.
+//!
+//! [`run_pipeline`] is the single-accelerator batch-1 facade (the paper's
+//! deployment); [`run_server`] is the replicated runtime.
+pub mod backend;
 pub mod metrics;
+pub mod pipeline;
+pub mod queue;
+pub mod serve;
 
-pub use pipeline::{run_pipeline, Backend, PipelineConfig, PipelineResult};
+pub use backend::{Backend, BackendError, Classification, Dense, Functional, Simulator};
+pub use metrics::{Metrics, PercentileReport, RequestTiming, WorkerStats};
+pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
+pub use queue::{AdmissionQueue, DropPolicy};
+pub use serve::{run_server, PipelineError, Prediction, ServerConfig, ServerResult};
+
+/// Shared unit-test fixtures (integration tests under `rust/tests/` keep
+/// their own copies — crate-private test code is invisible to them).
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::events::{repr::histogram2_norm, DatasetProfile};
+    use crate::model::quant::{quantize_network, QuantizedNet};
+    use crate::model::weights::FloatWeights;
+    use crate::model::NetworkSpec;
+    use crate::sparse::SparseMap;
+    use crate::util::Rng;
+
+    /// A tiny calibrated int8 network for `profile`.
+    pub fn qnet_for(profile: &DatasetProfile) -> QuantizedNet {
+        let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+        let w = FloatWeights::random(&spec, 3);
+        let mut rng = Rng::new(9);
+        let calib: Vec<SparseMap<f32>> = (0..2)
+            .map(|i| {
+                let es = profile.sample(i % profile.n_classes, &mut rng);
+                histogram2_norm(&es, profile.w, profile.h, 8.0)
+            })
+            .collect();
+        quantize_network(&spec, &w, &calib)
+    }
+}

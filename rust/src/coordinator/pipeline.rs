@@ -1,34 +1,22 @@
-//! The threaded serving pipeline.
+//! The single-accelerator pipeline — the paper's batch-1 deployment, kept
+//! as a thin compatibility facade over the sharded serving runtime
+//! ([`super::serve::run_server`]) with one worker replica and lossless
+//! (blocking) admission.
 //!
-//! Three stages on std threads with bounded channels (backpressure):
-//! 1. **source** — draws labelled event recordings (synthetic camera),
-//! 2. **repr** — clips windows and builds the 2-channel histogram (the
-//!    "processing system" work of Fig. 2),
-//! 3. **accel** — classifies via the selected backend: the cycle-level
-//!    hardware simulator (batch-1, the paper's deployment) or the PJRT
-//!    dense engine (the GPU-platform stand-in).
+//! Compared to the original fixed three-stage implementation this path:
+//! - takes any [`Backend`](super::backend::Backend) trait object instead
+//!   of a closed enum,
+//! - surfaces accelerator-stage panics and backend errors as
+//!   [`PipelineError`] instead of poisoning the stage joins, and
+//! - counts requests that were admitted but never classified
+//!   (`PipelineError::in_flight`) when the accelerator hangs up early.
 
-use super::metrics::{Metrics, RequestTiming};
-use crate::arch::{simulate_inference, HwConfig};
-use crate::events::{repr::histogram2_norm, DatasetProfile};
-use crate::model::exec::{argmax, forward_i8};
-use crate::model::quant::QuantizedNet;
-use crate::sparse::SparseMap;
-use crate::util::Rng;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::Instant;
+use super::backend::Backend;
+use super::serve::{run_server, PipelineError, Prediction, ServerConfig};
+use crate::events::DatasetProfile;
 
-/// Classification backend.
-pub enum Backend {
-    /// Cycle-level ESDA simulator (reports hardware cycles too).
-    Simulator { qnet: QuantizedNet, cfg: HwConfig },
-    /// Functional int8 reference (fast; no cycle model).
-    Functional { qnet: QuantizedNet },
-    /// PJRT dense engine (AOT artifact).
-    Dense { engine: crate::runtime::Engine },
-}
-
-/// Pipeline configuration.
+/// Pipeline configuration (single-accelerator path).
+#[derive(Debug, Clone)]
 pub struct PipelineConfig {
     pub n_requests: usize,
     pub seed: u64,
@@ -46,112 +34,42 @@ impl Default for PipelineConfig {
 
 /// Outcome of a pipeline run.
 pub struct PipelineResult {
-    pub metrics: Metrics,
+    pub metrics: super::metrics::Metrics,
+    pub predictions: Vec<Prediction>,
 }
 
-struct Request {
-    label: usize,
-    map: SparseMap<f32>,
-    enqueued: Instant,
-}
-
-/// Run the three-stage pipeline to completion.
+/// Run the three-stage pipeline to completion on a single accelerator.
 pub fn run_pipeline(
     profile: &DatasetProfile,
-    backend: &Backend,
+    backend: &dyn Backend,
     cfg: &PipelineConfig,
-) -> PipelineResult {
-    let (tx_ev, rx_ev): (SyncSender<(usize, Vec<crate::events::Event>)>, Receiver<_>) =
-        sync_channel(cfg.queue_depth);
-    let (tx_req, rx_req): (SyncSender<Request>, Receiver<Request>) = sync_channel(cfg.queue_depth);
-
-    // Stage 1: synthetic event camera.
-    let p1 = profile.clone();
-    let n = cfg.n_requests;
-    let seed = cfg.seed;
-    let source = std::thread::spawn(move || {
-        let mut rng = Rng::new(seed);
-        for i in 0..n {
-            let class = i % p1.n_classes;
-            let events = p1.sample(class, &mut rng);
-            if tx_ev.send((class, events)).is_err() {
-                return;
-            }
-        }
-    });
-
-    // Stage 2: representation builder.
-    let (w, h) = (profile.w, profile.h);
-    let clip = cfg.clip;
-    let repr = std::thread::spawn(move || {
-        for (label, events) in rx_ev.iter() {
-            let map = histogram2_norm(&events, w, h, clip);
-            let req = Request { label, map, enqueued: Instant::now() };
-            if tx_req.send(req).is_err() {
-                return;
-            }
-        }
-    });
-
-    // Stage 3: accelerator (runs on the caller thread).
-    let mut metrics = Metrics::default();
-    for req in rx_req.iter() {
-        let t0 = Instant::now();
-        let (pred, sim_cycles) = classify(backend, &req.map);
-        let service_s = t0.elapsed().as_secs_f64();
-        let e2e_s = req.enqueued.elapsed().as_secs_f64();
-        metrics.record(
-            RequestTiming { e2e_s, service_s, sim_cycles },
-            pred == req.label,
-        );
-    }
-    source.join().expect("source thread");
-    repr.join().expect("repr thread");
-    PipelineResult { metrics }
-}
-
-fn classify(backend: &Backend, map: &SparseMap<f32>) -> (usize, Option<u64>) {
-    match backend {
-        Backend::Simulator { qnet, cfg } => {
-            let (logits, report) =
-                simulate_inference(qnet, cfg, map, 10_000_000_000).expect("simulation");
-            (argmax(&logits), Some(report.cycles))
-        }
-        Backend::Functional { qnet } => (argmax(&forward_i8(qnet, map)), None),
-        Backend::Dense { engine } => {
-            let logits = engine.infer_sparse(map).expect("dense inference");
-            (argmax(&logits), None)
-        }
-    }
+) -> Result<PipelineResult, PipelineError> {
+    let scfg = ServerConfig {
+        n_requests: cfg.n_requests,
+        seed: cfg.seed,
+        clip: cfg.clip,
+        workers: 1,
+        queue_depth: cfg.queue_depth,
+        drop_policy: super::queue::DropPolicy::Block,
+    };
+    let r = run_server(profile, backend, &scfg)?;
+    Ok(PipelineResult { metrics: r.metrics, predictions: r.predictions })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::quant::quantize_network;
-    use crate::model::weights::FloatWeights;
-    use crate::model::NetworkSpec;
-
-    fn qnet_for(profile: &DatasetProfile) -> QuantizedNet {
-        let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
-        let w = FloatWeights::random(&spec, 3);
-        let mut rng = Rng::new(9);
-        let calib: Vec<SparseMap<f32>> = (0..2)
-            .map(|i| {
-                let es = profile.sample(i, &mut rng);
-                histogram2_norm(&es, profile.w, profile.h, 8.0)
-            })
-            .collect();
-        quantize_network(&spec, &w, &calib)
-    }
+    use crate::arch::HwConfig;
+    use crate::coordinator::backend::{BackendError, Classification, Functional, Simulator};
+    use crate::coordinator::testutil::qnet_for;
+    use crate::sparse::SparseMap;
 
     #[test]
     fn functional_backend_processes_all_requests() {
         let profile = DatasetProfile::n_mnist();
-        let qnet = qnet_for(&profile);
-        let backend = Backend::Functional { qnet };
+        let backend = Functional::new(qnet_for(&profile));
         let cfg = PipelineConfig { n_requests: 12, seed: 4, queue_depth: 2, clip: 8.0 };
-        let r = run_pipeline(&profile, &backend, &cfg);
+        let r = run_pipeline(&profile, &backend, &cfg).unwrap();
         assert_eq!(r.metrics.total, 12);
         assert!(r.metrics.e2e_summary().mean() > 0.0);
         assert!(r.metrics.throughput() > 0.0);
@@ -162,30 +80,33 @@ mod tests {
         let profile = DatasetProfile::n_mnist();
         let qnet = qnet_for(&profile);
         let n_ops = qnet.spec.ops().len();
-        let backend = Backend::Simulator { qnet, cfg: HwConfig::uniform(n_ops, 16) };
+        let backend = Simulator::new(qnet, HwConfig::uniform(n_ops, 16));
         let cfg = PipelineConfig { n_requests: 3, seed: 5, queue_depth: 2, clip: 8.0 };
-        let r = run_pipeline(&profile, &backend, &cfg);
+        let r = run_pipeline(&profile, &backend, &cfg).unwrap();
         assert_eq!(r.metrics.total, 3);
         let lat = r.metrics.mean_sim_latency_ms(crate::hwopt::power::CLOCK_HZ).unwrap();
         assert!(lat > 0.0);
     }
 
-    /// Simulator and functional backends must classify identically.
+    /// Stage-3 (accelerator) panics surface as a `PipelineError` with
+    /// in-flight accounting — they must not poison the stage joins.
     #[test]
-    fn backends_agree_on_predictions() {
-        let profile = DatasetProfile::n_mnist();
-        let qnet = qnet_for(&profile);
-        let mut rng = Rng::new(77);
-        for i in 0..3 {
-            let es = profile.sample(i, &mut rng);
-            let map = histogram2_norm(&es, profile.w, profile.h, 8.0);
-            let n_ops = qnet.spec.ops().len();
-            let (f, _) = classify(&Backend::Functional { qnet: qnet.clone() }, &map);
-            let (s, _) = classify(
-                &Backend::Simulator { qnet: qnet.clone(), cfg: HwConfig::uniform(n_ops, 8) },
-                &map,
-            );
-            assert_eq!(f, s);
+    fn accelerator_panic_surfaces_as_error() {
+        struct Panicky;
+        impl crate::coordinator::backend::Backend for Panicky {
+            fn name(&self) -> &str {
+                "panicky"
+            }
+            fn classify(&self, _map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+                panic!("injected accelerator panic");
+            }
         }
+        let profile = DatasetProfile::n_mnist();
+        let cfg = PipelineConfig { n_requests: 8, seed: 6, queue_depth: 2, clip: 8.0 };
+        let err = run_pipeline(&profile, &Panicky, &cfg).unwrap_err();
+        assert!(err.msg.contains("injected accelerator panic"), "msg: {}", err.msg);
+        assert_eq!(err.completed, 0);
+        // The panicking worker hung up while requests were queued behind it.
+        assert!(err.in_flight >= 1, "in-flight requests not counted: {err:?}");
     }
 }

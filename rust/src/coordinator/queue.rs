@@ -1,0 +1,220 @@
+//! Bounded ingress queue with admission control.
+//!
+//! `std::sync::mpsc` cannot evict, so the drop-oldest policy needs its own
+//! queue: a mutex-guarded deque with two condvars (classic bounded-buffer)
+//! plus admission accounting. Under saturation the queue either exerts
+//! backpressure ([`DropPolicy::Block`], the paper's all-on-chip FIFO
+//! behaviour) or sheds load by evicting the stalest request
+//! ([`DropPolicy::DropOldest`], the ESST-style smart-tracker policy —
+//! fresh events supersede stale ones for a live vision stream).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// What to do when a request arrives and the ingress queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DropPolicy {
+    /// Block the producer until a worker frees a slot (lossless).
+    #[default]
+    Block,
+    /// Evict the oldest queued request and admit the new one (lossy,
+    /// bounded staleness — the ESST admission policy).
+    DropOldest,
+}
+
+impl DropPolicy {
+    /// Parse a CLI spelling (`block` | `drop-oldest`).
+    pub fn parse(s: &str) -> Option<DropPolicy> {
+        match s {
+            "block" => Some(DropPolicy::Block),
+            "drop-oldest" | "drop_oldest" | "oldest" => Some(DropPolicy::DropOldest),
+            _ => None,
+        }
+    }
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    /// No further admissions; consumers drain what's queued, then stop.
+    closed: bool,
+    /// Hard stop: consumers return immediately, leaving queued items
+    /// unserved (they are accounted as in-flight by the caller).
+    aborted: bool,
+    /// Requests admitted into the queue (including ones later evicted).
+    submitted: usize,
+    /// Requests evicted by `DropOldest` admission control.
+    dropped: usize,
+}
+
+/// Bounded MPMC queue with a saturation policy and drop accounting.
+pub struct AdmissionQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    policy: DropPolicy,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(cap: usize, policy: DropPolicy) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                closed: false,
+                aborted: false,
+                submitted: 0,
+                dropped: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+            policy,
+        }
+    }
+
+    /// Admit one request. Returns `Err(item)` if the queue is closed.
+    /// Under `Block`, waits for a free slot; under `DropOldest`, evicts the
+    /// stalest queued request when full and never waits.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.cap {
+                st.items.push_back(item);
+                st.submitted += 1;
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            match self.policy {
+                DropPolicy::Block => st = self.not_full.wait(st).unwrap(),
+                DropPolicy::DropOldest => {
+                    st.items.pop_front();
+                    st.dropped += 1;
+                    st.items.push_back(item);
+                    st.submitted += 1;
+                    self.not_empty.notify_one();
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Take the oldest admitted request; `None` once the queue is closed
+    /// and drained, or immediately after an abort (queued items stay put
+    /// and show up in [`AdmissionQueue::stats`] as still queued).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return None;
+            }
+            if let Some(x) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail fast, consumers drain then stop.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Abort: close *and* stop consumers immediately without draining —
+    /// the error path, where serving queued work would only delay the
+    /// failure report (its results would be discarded anyway).
+    pub fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        st.aborted = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// `(submitted, dropped, still_queued)` snapshot.
+    pub fn stats(&self) -> (usize, usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.submitted, st.dropped, st.items.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn drop_oldest_evicts_stalest() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(2, DropPolicy::DropOldest);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap(); // evicts 1
+        let (submitted, dropped, queued) = q.stats();
+        assert_eq!((submitted, dropped, queued), (3, 1, 2));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn push_after_close_returns_item() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(1, DropPolicy::Block);
+        q.close();
+        assert_eq!(q.push(7), Err(7));
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(1, DropPolicy::Block));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn block_policy_applies_backpressure() {
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(1, DropPolicy::Block));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        // Producer blocks on the full queue until the consumer pops.
+        let h = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+        let (submitted, dropped, _) = q.stats();
+        assert_eq!((submitted, dropped), (2, 0));
+    }
+
+    #[test]
+    fn abort_stops_consumers_without_draining() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(4, DropPolicy::Block);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.abort();
+        assert_eq!(q.pop(), None, "abort must not hand out queued items");
+        assert_eq!(q.push(3), Err(3), "abort implies closed");
+        let (submitted, dropped, queued) = q.stats();
+        assert_eq!((submitted, dropped, queued), (2, 0, 2));
+    }
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(DropPolicy::parse("block"), Some(DropPolicy::Block));
+        assert_eq!(DropPolicy::parse("drop-oldest"), Some(DropPolicy::DropOldest));
+        assert_eq!(DropPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,304 @@
+//! The sharded multi-worker serving runtime.
+//!
+//! ```text
+//!                                     ┌─ accel worker 0 ─┐
+//! event source → repr builder → ingress├─ accel worker 1 ─┤→ merged metrics
+//!  (synthetic     (histogram2)   queue │       …          │  + predictions
+//!   camera)                    (admission└─ accel worker N ┘
+//!                               control)
+//! ```
+//!
+//! The source and representation stages run on their own threads (the
+//! "processing system" of Fig. 2); classified requests fan out over a pool
+//! of N accelerator replicas sharing one [`Backend`] via `&self`. The
+//! ingress queue applies admission control: `Block` exerts backpressure
+//! (lossless, the paper's batch-1 deployment), `DropOldest` sheds stale
+//! load under saturation and counts every drop.
+//!
+//! Worker panics and backend errors are caught and surfaced as
+//! [`PipelineError`] — they never poison a join — and requests that were
+//! admitted but not classified when the run aborts are counted as
+//! `in_flight`.
+
+use super::backend::Backend;
+use super::metrics::{Metrics, PercentileReport, RequestTiming, WorkerStats};
+use super::queue::{AdmissionQueue, DropPolicy};
+use crate::events::{repr::histogram2_norm, DatasetProfile};
+use crate::sparse::SparseMap;
+use crate::util::{panic_message, Rng};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Serving-runtime configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Number of requests the synthetic source generates.
+    pub n_requests: usize,
+    /// Source seed (fixes the request stream).
+    pub seed: u64,
+    /// Histogram clip value.
+    pub clip: f32,
+    /// Accelerator worker replicas.
+    pub workers: usize,
+    /// Ingress/stage queue depth.
+    pub queue_depth: usize,
+    /// Admission control policy when the ingress queue saturates.
+    pub drop_policy: DropPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            n_requests: 32,
+            seed: 1,
+            clip: 8.0,
+            workers: 1,
+            queue_depth: 4,
+            drop_policy: DropPolicy::Block,
+        }
+    }
+}
+
+/// One served request's outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Prediction {
+    /// Ground-truth class of the synthetic recording.
+    pub label: usize,
+    /// Backend's predicted class.
+    pub pred: usize,
+    /// Worker replica that served it.
+    pub worker: usize,
+}
+
+/// Outcome of a serving run.
+#[derive(Debug)]
+pub struct ServerResult {
+    pub metrics: Metrics,
+    /// Per-request outcomes, grouped by worker (use as a multiset: the
+    /// worker interleaving is scheduling-dependent).
+    pub predictions: Vec<Prediction>,
+}
+
+/// A serving run that aborted: the first backend error or worker panic,
+/// plus how much work completed and how much was stranded.
+#[derive(Debug, Clone)]
+pub struct PipelineError {
+    pub msg: String,
+    /// Requests classified before the abort.
+    pub completed: usize,
+    /// Requests admitted but never classified.
+    pub in_flight: usize,
+}
+
+impl fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "serving aborted after {} request(s) ({} in flight): {}",
+            self.completed, self.in_flight, self.msg
+        )
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+struct Request {
+    label: usize,
+    map: SparseMap<f32>,
+    enqueued: Instant,
+}
+
+/// Per-worker raw output collected at join time.
+type WorkerOutput = (usize, f64, Vec<(usize, usize, RequestTiming)>);
+
+/// Run the serving pipeline to completion over `cfg.n_requests` synthetic
+/// requests, fanning the accelerator stage out over `cfg.workers` replicas.
+pub fn run_server(
+    profile: &DatasetProfile,
+    backend: &dyn Backend,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    assert!(cfg.workers >= 1, "need at least one worker replica");
+    let t_start = Instant::now();
+    let queue: AdmissionQueue<Request> = AdmissionQueue::new(cfg.queue_depth, cfg.drop_policy);
+    let first_error: Mutex<Option<String>> = Mutex::new(None);
+    let (tx_ev, rx_ev) =
+        sync_channel::<(usize, Vec<crate::events::Event>)>(cfg.queue_depth.max(1));
+
+    let mut outputs: Vec<WorkerOutput> = Vec::new();
+    std::thread::scope(|s| {
+        // Stage 1: synthetic event camera.
+        let p1 = profile.clone();
+        let (n, seed) = (cfg.n_requests, cfg.seed);
+        let source = s.spawn(move || {
+            let mut rng = Rng::new(seed);
+            for i in 0..n {
+                let class = i % p1.n_classes;
+                let events = p1.sample(class, &mut rng);
+                if tx_ev.send((class, events)).is_err() {
+                    return; // downstream hung up early
+                }
+            }
+        });
+
+        // Stage 2: representation builder + admission control.
+        let (w, h, clip) = (profile.w, profile.h, cfg.clip);
+        let queue_ref = &queue;
+        let repr = s.spawn(move || {
+            for (label, events) in rx_ev.iter() {
+                let map = histogram2_norm(&events, w, h, clip);
+                let req = Request { label, map, enqueued: Instant::now() };
+                if queue_ref.push(req).is_err() {
+                    break; // queue closed by an aborting worker
+                }
+            }
+            queue_ref.close();
+        });
+
+        // Stage 3: the accelerator worker pool.
+        let error_ref = &first_error;
+        let handles: Vec<_> = (0..cfg.workers)
+            .map(|wid| {
+                s.spawn(move || {
+                    let mut records: Vec<(usize, usize, RequestTiming)> = Vec::new();
+                    let mut busy_s = 0.0f64;
+                    while let Some(req) = queue_ref.pop() {
+                        let t0 = Instant::now();
+                        let outcome = catch_unwind(AssertUnwindSafe(|| backend.classify(&req.map)));
+                        let service_s = t0.elapsed().as_secs_f64();
+                        let c = match outcome {
+                            Ok(Ok(c)) => c,
+                            Ok(Err(e)) => {
+                                let mut slot = error_ref.lock().unwrap();
+                                slot.get_or_insert_with(|| e.to_string());
+                                queue_ref.abort();
+                                break;
+                            }
+                            Err(p) => {
+                                let mut slot = error_ref.lock().unwrap();
+                                slot.get_or_insert_with(|| {
+                                    format!("worker panic: {}", panic_message(p.as_ref()))
+                                });
+                                queue_ref.abort();
+                                break;
+                            }
+                        };
+                        busy_s += service_s;
+                        let timing = RequestTiming {
+                            e2e_s: req.enqueued.elapsed().as_secs_f64(),
+                            service_s,
+                            sim_cycles: c.sim_cycles,
+                        };
+                        records.push((req.label, c.pred, timing));
+                    }
+                    (wid, busy_s, records)
+                })
+            })
+            .collect();
+
+        outputs = handles.into_iter().map(|h| h.join().expect("worker thread")).collect();
+        repr.join().expect("repr thread");
+        source.join().expect("source thread");
+    });
+
+    outputs.sort_by_key(|(wid, _, _)| *wid);
+    let (submitted, dropped, _still_queued) = queue.stats();
+    let processed: usize = outputs.iter().map(|(_, _, r)| r.len()).sum();
+    let in_flight = submitted.saturating_sub(dropped + processed);
+
+    if let Some(msg) = first_error.into_inner().unwrap() {
+        return Err(PipelineError { msg, completed: processed, in_flight });
+    }
+    // Clean completion conserves requests: everything admitted was either
+    // served or dropped (stranded requests only exist on the Err path).
+    debug_assert_eq!(in_flight, 0, "completed run stranded {in_flight} request(s)");
+
+    let wall_s = t_start.elapsed().as_secs_f64();
+    let mut metrics = Metrics { started: t_start, dropped, wall_s, ..Metrics::default() };
+    let mut predictions = Vec::with_capacity(processed);
+    for (wid, busy_s, records) in &outputs {
+        let service: Vec<f64> = records.iter().map(|(_, _, t)| t.service_s).collect();
+        let e2e: Vec<f64> = records.iter().map(|(_, _, t)| t.e2e_s).collect();
+        metrics.per_worker.push(WorkerStats {
+            worker: *wid,
+            served: records.len(),
+            busy_s: *busy_s,
+            service: PercentileReport::from_samples(&service),
+            e2e: PercentileReport::from_samples(&e2e),
+        });
+        for &(label, pred, timing) in records {
+            metrics.record(timing, pred == label);
+            predictions.push(Prediction { label, pred, worker: *wid });
+        }
+    }
+    Ok(ServerResult { metrics, predictions })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwConfig;
+    use crate::coordinator::backend::{BackendError, Classification, Functional, Simulator};
+    use crate::coordinator::testutil::qnet_for;
+
+    #[test]
+    fn pool_processes_all_requests() {
+        let profile = DatasetProfile::n_mnist();
+        let backend = Functional::new(qnet_for(&profile));
+        let cfg = ServerConfig { n_requests: 12, seed: 4, workers: 3, ..Default::default() };
+        let r = run_server(&profile, &backend, &cfg).unwrap();
+        assert_eq!(r.metrics.total, 12);
+        assert_eq!(r.predictions.len(), 12);
+        assert_eq!(r.metrics.dropped, 0);
+        assert_eq!(r.metrics.per_worker.len(), 3);
+        assert_eq!(r.metrics.per_worker.iter().map(|w| w.served).sum::<usize>(), 12);
+        assert!(r.metrics.throughput() > 0.0);
+    }
+
+    #[test]
+    fn simulator_replicas_report_cycles() {
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let n_ops = qnet.spec.ops().len();
+        let backend = Simulator::new(qnet, HwConfig::uniform(n_ops, 16));
+        let cfg = ServerConfig { n_requests: 4, seed: 5, workers: 2, ..Default::default() };
+        let r = run_server(&profile, &backend, &cfg).unwrap();
+        assert_eq!(r.metrics.total, 4);
+        let lat = r.metrics.mean_sim_latency_ms(crate::hwopt::power::CLOCK_HZ).unwrap();
+        assert!(lat > 0.0);
+    }
+
+    /// A backend that errors mid-stream aborts cleanly with in-flight
+    /// accounting instead of deadlocking or poisoning joins.
+    #[test]
+    fn backend_error_aborts_cleanly() {
+        struct FailAfter {
+            inner: Functional,
+            calls: std::sync::atomic::AtomicUsize,
+        }
+        impl Backend for FailAfter {
+            fn name(&self) -> &str {
+                "fail-after"
+            }
+            fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+                let n = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if n >= 5 {
+                    return Err(BackendError("injected fault".into()));
+                }
+                self.inner.classify(map)
+            }
+        }
+        let profile = DatasetProfile::n_mnist();
+        let backend = FailAfter {
+            inner: Functional::new(qnet_for(&profile)),
+            calls: std::sync::atomic::AtomicUsize::new(0),
+        };
+        let cfg = ServerConfig { n_requests: 16, seed: 2, workers: 2, ..Default::default() };
+        let err = run_server(&profile, &backend, &cfg).unwrap_err();
+        assert!(err.msg.contains("injected fault"), "msg: {}", err.msg);
+        assert!(err.completed < 16);
+    }
+}

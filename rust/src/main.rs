@@ -10,12 +10,17 @@
 //!   cycle-simulate inferences and print latency/bottleneck reports.
 //! - `search     --dataset <name> [--samples N] [--top-k K]`
 //!   run the two-step NAS and print the candidate table.
-//! - `serve      --dataset <name> [--requests N] [--backend sim|func|dense]`
-//!   run the threaded serving pipeline and print metrics.
+//! - `serve      --dataset <name> [--requests N] [--backend sim|func|dense]
+//!               [--workers N] [--queue D] [--drop-policy block|drop-oldest]`
+//!   run the sharded serving runtime (N accelerator worker replicas behind
+//!   an admission-controlled ingress queue) and print per-worker metrics.
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
-//!   load an AOT artifact and run a smoke inference via PJRT.
+//!   load an AOT artifact and run a smoke inference via PJRT (needs the
+//!   `pjrt` feature).
 
-use esda::coordinator::{run_pipeline, Backend, PipelineConfig};
+use esda::coordinator::{
+    run_server, Backend, Dense, DropPolicy, Functional, ServerConfig, Simulator,
+};
 use esda::events::{io::generate_dataset_files, repr::histogram2_norm, DatasetProfile};
 use esda::hwopt::{allocate, power::PowerModel, power::CLOCK_HZ, stats::collect_stats_for_profile, Budget};
 use esda::model::quant::quantize_network;
@@ -209,33 +214,63 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .collect();
     let qnet = quantize_network(&spec, &w, &calib);
     let n_ops = spec.ops().len();
-    let backend = match args.get_or("backend", "func") {
-        "sim" => Backend::Simulator { qnet, cfg: esda::arch::HwConfig::uniform(n_ops, 16) },
+    let backend_name = args.get_or("backend", "func").to_string();
+    let backend: Box<dyn Backend> = match backend_name.as_str() {
+        "sim" => Box::new(Simulator::new(qnet, esda::arch::HwConfig::uniform(n_ops, 16))),
         "dense" => {
             let stem = args.get_or("hlo", "artifacts/compact_n_mnist.hlo.txt").to_string();
             let engine = esda::runtime::Engine::load(std::path::Path::new(&stem))
                 .map_err(|e| e.to_string())?;
-            Backend::Dense { engine }
+            Box::new(Dense::new(engine))
         }
-        _ => Backend::Functional { qnet },
+        _ => Box::new(Functional::new(qnet)),
     };
-    let cfg = PipelineConfig {
+    let policy_raw = args.get_or("drop-policy", "block");
+    let workers = args.get_usize("workers", 1)?;
+    if workers == 0 {
+        return Err("--workers must be >= 1".into());
+    }
+    if workers > 1 && backend_name == "dense" {
+        eprintln!(
+            "note: the dense backend serializes inferences behind a mutex — \
+             --workers {workers} adds no accelerator parallelism"
+        );
+    }
+    let queue_depth = args.get_usize("queue", 4)?;
+    if queue_depth == 0 {
+        return Err("--queue must be >= 1".into());
+    }
+    let cfg = ServerConfig {
         n_requests: args.get_usize("requests", 32)?,
         seed,
-        queue_depth: args.get_usize("queue", 4)?,
         clip: 8.0,
+        workers,
+        queue_depth,
+        drop_policy: DropPolicy::parse(policy_raw)
+            .ok_or_else(|| format!("--drop-policy: expected block|drop-oldest, got '{policy_raw}'"))?,
     };
-    let r = run_pipeline(&p, &backend, &cfg);
+    let r = run_server(&p, backend.as_ref(), &cfg).map_err(|e| e.to_string())?;
     let m = &r.metrics;
+    let e2e = m.e2e_percentiles();
+    let svc = m.service_percentiles();
     println!(
-        "{} requests | accuracy {:.2} | e2e p50 {} p99 {} | service mean {} | throughput {:.0} req/s",
+        "{} served / {} offered ({} dropped, {:.1}% drop rate) | accuracy {:.2} | \
+         e2e p50 {} p95 {} p99 {} | svc p50 {} | {:.0} req/s | {} worker(s)",
         m.total,
+        m.offered(),
+        m.dropped,
+        m.drop_rate() * 100.0,
         m.accuracy(),
-        esda::util::stats::fmt_secs(m.e2e_summary().percentile(50.0)),
-        esda::util::stats::fmt_secs(m.e2e_summary().percentile(99.0)),
-        esda::util::stats::fmt_secs(m.service_summary().mean()),
+        esda::util::stats::fmt_secs(e2e.p50),
+        esda::util::stats::fmt_secs(e2e.p95),
+        esda::util::stats::fmt_secs(e2e.p99),
+        esda::util::stats::fmt_secs(svc.p50),
         m.throughput(),
+        cfg.workers,
     );
+    if cfg.workers > 1 || args.has("verbose") {
+        println!("{}", esda::report::serving_table(m).render());
+    }
     if let Some(ms) = m.mean_sim_latency_ms(CLOCK_HZ) {
         println!("simulated hardware latency: {ms:.3} ms/inference @187MHz");
     }

@@ -224,6 +224,12 @@ pub fn conv_full_s1_i8(
     out
 }
 
+/// Classify a float input through the hardware-exact int8 path
+/// (quantize → forward → argmax) — the functional serving backend.
+pub fn classify_i8(qnet: &QuantizedNet, input: &SparseMap<f32>) -> usize {
+    argmax(&forward_i8(qnet, input))
+}
+
 /// Argmax helper for classification outputs.
 pub fn argmax<T: PartialOrd + Copy>(xs: &[T]) -> usize {
     let mut best = 0;
@@ -320,5 +326,15 @@ mod tests {
     fn argmax_basic() {
         assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[5, -2, 5]), 0); // first max wins
+    }
+
+    #[test]
+    fn classify_i8_matches_manual_path() {
+        let spec = NetworkSpec::tiny(34, 34, 5);
+        let w = FloatWeights::random(&spec, 11);
+        let calib: Vec<SparseMap<f32>> = (0..2u64).map(small_input).collect();
+        let qnet = quantize_network(&spec, &w, &calib);
+        let input = small_input(6);
+        assert_eq!(classify_i8(&qnet, &input), argmax(&forward_i8(&qnet, &input)));
     }
 }

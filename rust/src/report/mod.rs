@@ -86,6 +86,48 @@ pub fn render_series(title: &str, xlabel: &str, series: &[Series]) -> String {
     t.render()
 }
 
+/// Render the serving runtime's per-worker utilization/latency breakdown
+/// plus the aggregate row (used by `esda serve` and the serving example).
+pub fn serving_table(m: &crate::coordinator::Metrics) -> Table {
+    use crate::util::stats::fmt_secs;
+    let wall_s = m.wall_seconds();
+    let mut t = Table::new(
+        "serving — per-worker breakdown",
+        &["worker", "served", "util", "svc p50", "svc p99", "e2e p50", "e2e p95", "e2e p99"],
+    );
+    for w in &m.per_worker {
+        t.row(vec![
+            format!("#{}", w.worker),
+            w.served.to_string(),
+            format!("{:.0}%", w.utilization(wall_s) * 100.0),
+            fmt_secs(w.service.p50),
+            fmt_secs(w.service.p99),
+            fmt_secs(w.e2e.p50),
+            fmt_secs(w.e2e.p95),
+            fmt_secs(w.e2e.p99),
+        ]);
+    }
+    let e2e = m.e2e_percentiles();
+    let svc = m.service_percentiles();
+    let mean_util = if m.per_worker.is_empty() {
+        f64::NAN
+    } else {
+        m.per_worker.iter().map(|w| w.utilization(wall_s)).sum::<f64>()
+            / m.per_worker.len() as f64
+    };
+    t.row(vec![
+        "all".to_string(),
+        m.total.to_string(),
+        format!("{:.0}%", mean_util * 100.0),
+        fmt_secs(svc.p50),
+        fmt_secs(svc.p99),
+        fmt_secs(e2e.p50),
+        fmt_secs(e2e.p95),
+        fmt_secs(e2e.p99),
+    ]);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +149,23 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn serving_table_renders() {
+        use crate::coordinator::{Metrics, PercentileReport, RequestTiming, WorkerStats};
+        let mut m = Metrics::default();
+        m.record(RequestTiming { e2e_s: 0.002, service_s: 0.001, sim_cycles: None }, true);
+        m.per_worker.push(WorkerStats {
+            worker: 0,
+            served: 1,
+            busy_s: 0.001,
+            service: PercentileReport::from_samples(&[0.001]),
+            e2e: PercentileReport::from_samples(&[0.002]),
+        });
+        let s = serving_table(&m).render();
+        assert!(s.contains("#0"), "{s}");
+        assert!(s.contains("all"), "{s}");
     }
 
     #[test]

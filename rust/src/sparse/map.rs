@@ -175,6 +175,25 @@ mod tests {
         });
     }
 
+    /// The other direction: starting from an arbitrary dense array,
+    /// `from_dense ∘ to_dense` is the identity (zeros stay zeros, kept
+    /// locations keep their exact feature vectors, and the rebuilt map is
+    /// a valid token stream).
+    #[test]
+    fn dense_first_roundtrip_property() {
+        check("dense→sparse→dense roundtrip", 128, |g: &mut Gen| {
+            let w = g.usize(1, 12);
+            let h = g.usize(1, 12);
+            let c = g.usize(1, 4);
+            let dense: Vec<f32> = (0..w * h * c)
+                .map(|_| if g.chance(0.3) { (g.f64() as f32 - 0.5) * 4.0 } else { 0.0 })
+                .collect();
+            let m = SparseMap::from_dense(&dense, w, h, c);
+            m.validate().unwrap();
+            assert_eq!(m.to_dense(), dense);
+        });
+    }
+
     #[test]
     fn validate_catches_bad_shapes() {
         let mut m: SparseMap<f32> = SparseMap::empty(4, 4, 2);

@@ -21,3 +21,13 @@ pub mod cli;
 pub mod stats;
 
 pub use rng::Rng;
+
+/// Best-effort extraction of a caught panic payload's message (the
+/// `String`/`&str` cases `panic!` produces). Shared by the propcheck
+/// harness and the serving runtime's worker-panic surfacing.
+pub fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    e.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
+}

@@ -134,14 +134,7 @@ where
     std::panic::set_hook(prev_hook);
     match outcome {
         Ok(()) => Ok(()),
-        Err(e) => {
-            let msg = e
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
-                .unwrap_or_else(|| "<non-string panic>".to_string());
-            Err(msg)
-        }
+        Err(e) => Err(super::panic_message(e.as_ref())),
     }
 }
 
@@ -167,10 +160,7 @@ mod tests {
             });
         });
         let msg = match r {
-            Err(e) => e
-                .downcast_ref::<String>()
-                .cloned()
-                .unwrap_or_default(),
+            Err(e) => crate::util::panic_message(e.as_ref()),
             Ok(()) => panic!("property should have failed"),
         };
         assert!(msg.contains("seed"), "message was: {msg}");

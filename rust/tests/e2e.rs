@@ -3,7 +3,7 @@
 //! cost-model-vs-simulator consistency contract.
 
 use esda::arch::{simulate_inference, HwConfig};
-use esda::coordinator::{run_pipeline, Backend, PipelineConfig};
+use esda::coordinator::{run_pipeline, Backend, Functional, PipelineConfig, Simulator};
 use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::hwopt::{allocate, stats::collect_stats_for_profile, Budget};
 use esda::model::exec::forward_i8;
@@ -63,12 +63,12 @@ fn pipeline_backends_consistent_end_to_end() {
     let calib = inputs_for(&profile, 3, 2);
     let qnet = quantize_network(&spec, &w, &calib);
     let n_ops = spec.ops().len();
-    let run = |backend: Backend| {
+    let run = |backend: &dyn Backend| {
         let cfg = PipelineConfig { n_requests: 10, seed: 77, queue_depth: 3, clip: 8.0 };
-        run_pipeline(&profile, &backend, &cfg)
+        run_pipeline(&profile, backend, &cfg).expect("pipeline run")
     };
-    let f = run(Backend::Functional { qnet: qnet.clone() });
-    let s = run(Backend::Simulator { qnet: qnet.clone(), cfg: HwConfig::uniform(n_ops, 8) });
+    let f = run(&Functional::new(qnet.clone()));
+    let s = run(&Simulator::new(qnet.clone(), HwConfig::uniform(n_ops, 8)));
     assert_eq!(f.metrics.total, 10);
     assert_eq!(s.metrics.total, 10);
     // Deterministic sources (same seed) ⇒ identical correctness counts.

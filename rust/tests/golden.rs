@@ -72,6 +72,10 @@ fn rust_oracle_matches_python_golden() {
 /// PJRT-executed AOT artifact (Pallas kernels inside) == golden logits.
 #[test]
 fn pjrt_engine_matches_python_golden() {
+    if !esda::runtime::pjrt_enabled() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return;
+    }
     let Some((_spec, _fw, inputs, golden)) = load_golden() else { return };
     let engine = Engine::load(&artifacts_dir().join(format!("{STEM}.hlo.txt"))).unwrap();
     for (input, want) in inputs.iter().zip(&golden) {

@@ -1,0 +1,171 @@
+//! Integration tests for the sharded serving runtime: replication must not
+//! change predictions (multiset-identical across pool sizes), and
+//! admission control must shed load under saturation without deadlocking.
+
+use esda::arch::HwConfig;
+use esda::coordinator::{
+    run_server, Backend, BackendError, Classification, DropPolicy, Functional, ServerConfig,
+    ServerResult, Simulator,
+};
+use esda::events::{repr::histogram2_norm, DatasetProfile};
+use esda::model::quant::{quantize_network, QuantizedNet};
+use esda::model::weights::FloatWeights;
+use esda::model::NetworkSpec;
+use esda::sparse::SparseMap;
+use esda::util::Rng;
+use std::time::Duration;
+
+fn qnet_for(profile: &DatasetProfile) -> QuantizedNet {
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let w = FloatWeights::random(&spec, 3);
+    let mut rng = Rng::new(9);
+    let calib: Vec<SparseMap<f32>> = (0..3)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    quantize_network(&spec, &w, &calib)
+}
+
+fn prediction_multiset(r: &ServerResult) -> Vec<(usize, usize)> {
+    let mut v: Vec<(usize, usize)> = r.predictions.iter().map(|p| (p.label, p.pred)).collect();
+    v.sort_unstable();
+    v
+}
+
+/// With a fixed seed and lossless admission, the N-worker pool classifies
+/// exactly the same requests to exactly the same classes as the
+/// single-worker pipeline — replication is an implementation detail.
+#[test]
+fn pool_prediction_multiset_is_replica_invariant() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let cfg = |workers: usize| ServerConfig {
+        n_requests: 24,
+        seed: 42,
+        clip: 8.0,
+        workers,
+        queue_depth: 4,
+        drop_policy: DropPolicy::Block,
+    };
+    let single = run_server(&profile, &backend, &cfg(1)).expect("1-worker run");
+    assert_eq!(single.metrics.total, 24);
+    assert_eq!(single.metrics.dropped, 0);
+    let base = prediction_multiset(&single);
+
+    let pooled = run_server(&profile, &backend, &cfg(4)).expect("4-worker run");
+    assert_eq!(pooled.metrics.total, 24);
+    assert_eq!(pooled.metrics.dropped, 0);
+    assert_eq!(pooled.metrics.per_worker.len(), 4);
+    assert_eq!(
+        pooled.metrics.per_worker.iter().map(|w| w.served).sum::<usize>(),
+        24,
+        "per-worker served counts must sum to the total"
+    );
+    assert_eq!(prediction_multiset(&pooled), base, "replication changed predictions");
+}
+
+/// The simulator backend is deterministic too, so replica-invariance holds
+/// for the cycle-level path as well (smaller request count: it's slower).
+#[test]
+fn simulator_pool_is_replica_invariant() {
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let n_ops = qnet.spec.ops().len();
+    let backend = Simulator::new(qnet, HwConfig::uniform(n_ops, 16));
+    let cfg = |workers: usize| ServerConfig {
+        n_requests: 8,
+        seed: 7,
+        clip: 8.0,
+        workers,
+        queue_depth: 2,
+        drop_policy: DropPolicy::Block,
+    };
+    let a = run_server(&profile, &backend, &cfg(1)).expect("1-worker run");
+    let b = run_server(&profile, &backend, &cfg(3)).expect("3-worker run");
+    assert_eq!(prediction_multiset(&a), prediction_multiset(&b));
+    // Cycle counts are per-request properties and must survive pooling.
+    assert_eq!(
+        a.metrics.mean_sim_latency_ms(1e6).is_some(),
+        b.metrics.mean_sim_latency_ms(1e6).is_some()
+    );
+}
+
+/// A deliberately slow backend to saturate the ingress queue. The first
+/// request stalls for a long window (producers are orders of magnitude
+/// faster, so the depth-1 queue overflows many times during it — drops
+/// are effectively deterministic, not a timing race); later requests are
+/// near-instant to keep the test fast.
+struct Throttled {
+    inner: Functional,
+    first: std::sync::atomic::AtomicBool,
+    first_delay: Duration,
+    delay: Duration,
+}
+
+impl Backend for Throttled {
+    fn name(&self) -> &str {
+        "throttled"
+    }
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        let first = self.first.swap(false, std::sync::atomic::Ordering::SeqCst);
+        std::thread::sleep(if first { self.first_delay } else { self.delay });
+        self.inner.classify(map)
+    }
+}
+
+fn throttled(profile: &DatasetProfile, first_delay_ms: u64, delay_ms: u64) -> Throttled {
+    Throttled {
+        inner: Functional::new(qnet_for(profile)),
+        first: std::sync::atomic::AtomicBool::new(true),
+        first_delay: Duration::from_millis(first_delay_ms),
+        delay: Duration::from_millis(delay_ms),
+    }
+}
+
+/// Saturating a depth-1 queue with the drop-oldest policy records drops,
+/// keeps the books balanced, and completes without deadlock.
+#[test]
+fn saturated_queue_sheds_load_without_deadlock() {
+    let profile = DatasetProfile::n_mnist();
+    // 250ms stall on request 1: the source+repr stages only need to emit
+    // 2 of the remaining 31 requests within it to force a drop.
+    let backend = throttled(&profile, 250, 1);
+    let cfg = ServerConfig {
+        n_requests: 32,
+        seed: 11,
+        clip: 8.0,
+        workers: 1,
+        queue_depth: 1,
+        drop_policy: DropPolicy::DropOldest,
+    };
+    let r = run_server(&profile, &backend, &cfg).expect("shedding run must complete");
+    let m = &r.metrics;
+    assert!(m.dropped >= 1, "expected admission control to drop under saturation");
+    assert!(m.total >= 1, "some requests must still be served");
+    assert_eq!(m.total + m.dropped, 32, "served + dropped must cover the offered stream");
+    assert!(m.drop_rate() > 0.0 && m.drop_rate() < 1.0);
+    // The aggregated percentile report must satisfy the ordering property
+    // the propcheck suite verifies on random samples.
+    let e2e = m.e2e_percentiles();
+    assert!(e2e.p50 <= e2e.p95 && e2e.p95 <= e2e.p99 && e2e.p99 <= e2e.max);
+}
+
+/// Blocking admission under the same load stays lossless end to end.
+#[test]
+fn blocking_admission_is_lossless_under_saturation() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = throttled(&profile, 1, 1);
+    let cfg = ServerConfig {
+        n_requests: 16,
+        seed: 11,
+        clip: 8.0,
+        workers: 2,
+        queue_depth: 1,
+        drop_policy: DropPolicy::Block,
+    };
+    let r = run_server(&profile, &backend, &cfg).expect("blocking run");
+    assert_eq!(r.metrics.total, 16);
+    assert_eq!(r.metrics.dropped, 0);
+}
