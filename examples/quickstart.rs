@@ -6,7 +6,9 @@
 
 use esda::arch::{simulate_inference, HwConfig};
 use esda::events::{repr::histogram2_norm, DatasetProfile};
-use esda::hwopt::{allocate, power::PowerModel, power::CLOCK_HZ, stats::collect_stats_for_profile, Budget};
+use esda::hwopt::{
+    allocate, power::PowerModel, power::CLOCK_HZ, stats::collect_stats_for_profile, Budget,
+};
 use esda::model::exec::argmax;
 use esda::model::quant::quantize_network;
 use esda::model::weights::FloatWeights;
@@ -16,7 +18,10 @@ use esda::util::Rng;
 fn main() {
     // 1. A dataset profile (synthetic stand-in for DvsGesture et al.).
     let profile = DatasetProfile::n_mnist();
-    println!("dataset: {} ({}×{}, {} classes)", profile.name, profile.w, profile.h, profile.n_classes);
+    println!(
+        "dataset: {} ({}×{}, {} classes)",
+        profile.name, profile.w, profile.h, profile.n_classes
+    );
 
     // 2. A network: stem → MBConv blocks → pool+FC (paper Fig. 10).
     let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);

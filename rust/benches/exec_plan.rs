@@ -1,0 +1,142 @@
+//! Exec-engine throughput: the allocating per-op oracle (`classify_i8`)
+//! vs. the compiled arena plan (`ExecPlan` + `ExecCtx`), and micro-batched
+//! serving throughput at batch caps {1, 4, 16} — plus allocs-per-inference
+//! for both paths (the arena must be at zero in steady state).
+//!
+//! Emits `BENCH_exec.json` at the repository root (override the path with
+//! `ESDA_BENCH_OUT`) so the perf trajectory is tracked from PR 2 on:
+//!
+//! ```sh
+//! cargo bench --bench exec_plan
+//! ```
+
+use esda::coordinator::{Backend, Functional};
+use esda::events::{repr::histogram2_norm, DatasetProfile};
+use esda::model::exec::classify_i8;
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::{ExecCtx, ExecPlan, NetworkSpec};
+use esda::sparse::SparseMap;
+use esda::util::alloc::CountingAllocator;
+use esda::util::json::Json;
+use esda::util::stats::bench;
+use esda::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+const WARMUP: usize = 2;
+const ITERS: usize = 20;
+
+fn req_per_s(n_inputs: usize, mean_s: f64) -> f64 {
+    if mean_s <= 0.0 {
+        return f64::NAN;
+    }
+    n_inputs as f64 / mean_s
+}
+
+fn main() {
+    let profile = DatasetProfile::n_mnist();
+    let spec = NetworkSpec::compact("compact", profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 7);
+    let mut rng = Rng::new(42);
+    let inputs: Vec<SparseMap<f32>> = (0..8)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &weights, &inputs[..3]);
+    let n = inputs.len();
+
+    println!("# exec engine — oracle vs compiled arena plan ({} on n_mnist)\n", spec.name);
+
+    // --- Allocating per-op oracle -----------------------------------------
+    let mut sink = 0usize;
+    let a0 = CountingAllocator::thread_allocs();
+    for m in &inputs {
+        sink += classify_i8(&qnet, m);
+    }
+    let oracle_allocs = (CountingAllocator::thread_allocs() - a0) as f64 / n as f64;
+    let s = bench(WARMUP, ITERS, || {
+        for m in &inputs {
+            sink += classify_i8(&qnet, m);
+        }
+    });
+    let oracle_rps = req_per_s(n, s.mean());
+    println!("oracle  : {oracle_rps:9.0} req/s | {oracle_allocs:7.1} allocs/inference");
+
+    // --- Compiled plan + arena context ------------------------------------
+    let plan = ExecPlan::compile(&qnet);
+    let mut ctx = ExecCtx::new();
+    for m in &inputs {
+        sink += plan.classify(&mut ctx, m); // warm the arena
+    }
+    let a0 = CountingAllocator::thread_allocs();
+    for m in &inputs {
+        sink += plan.classify(&mut ctx, m);
+    }
+    let plan_allocs = (CountingAllocator::thread_allocs() - a0) as f64 / n as f64;
+    let s = bench(WARMUP, ITERS, || {
+        for m in &inputs {
+            sink += plan.classify(&mut ctx, m);
+        }
+    });
+    let plan_rps = req_per_s(n, s.mean());
+    println!(
+        "plan    : {plan_rps:9.0} req/s | {plan_allocs:7.1} allocs/inference | {:.2}x oracle",
+        plan_rps / oracle_rps
+    );
+
+    // --- Micro-batched serving path (Functional backend) ------------------
+    let backend = Functional::new(qnet);
+    let mut batches = Vec::new();
+    for cap in [1usize, 4, 16] {
+        // Warm the backend's context pool at this batch shape.
+        for chunk in inputs.chunks(cap) {
+            sink += backend.classify_batch(chunk).len();
+        }
+        let s = bench(WARMUP, ITERS, || {
+            for chunk in inputs.chunks(cap) {
+                for r in backend.classify_batch(chunk) {
+                    if r.is_err() {
+                        panic!("functional backend cannot fail");
+                    }
+                }
+            }
+        });
+        let rps = req_per_s(n, s.mean());
+        println!("batch {cap:2}: {rps:9.0} req/s");
+        batches.push(Json::obj(vec![
+            ("batch", Json::Num(cap as f64)),
+            ("req_per_s", Json::Num(rps)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("exec_plan".into())),
+        ("model", Json::Str(spec.name.clone())),
+        ("dataset", Json::Str(profile.name.into())),
+        ("n_inputs", Json::Num(n as f64)),
+        ("iters", Json::Num(ITERS as f64)),
+        (
+            "oracle",
+            Json::obj(vec![
+                ("req_per_s", Json::Num(oracle_rps)),
+                ("allocs_per_inference", Json::Num(oracle_allocs)),
+            ]),
+        ),
+        (
+            "plan",
+            Json::obj(vec![
+                ("req_per_s", Json::Num(plan_rps)),
+                ("allocs_per_inference", Json::Num(plan_allocs)),
+            ]),
+        ),
+        ("batched", Json::Arr(batches)),
+    ]);
+    let path = std::env::var("ESDA_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_exec.json").into());
+    std::fs::write(&path, format!("{out}\n")).expect("write bench json");
+    println!("\nwrote {path} (sink {sink})");
+}

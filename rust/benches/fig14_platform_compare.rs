@@ -31,7 +31,11 @@ use esda::util::stats::{bench, fmt_secs};
 use esda::util::Rng;
 
 /// Sparse gather–scatter forward (MinkowskiEngine stand-in) — wall time.
-fn rulebook_forward(spec: &NetworkSpec, w: &esda::model::weights::FloatWeights, input: &SparseMap<f32>) {
+fn rulebook_forward(
+    spec: &NetworkSpec,
+    w: &esda::model::weights::FloatWeights,
+    input: &SparseMap<f32>,
+) {
     let ops = spec.ops();
     let mut cur = input.clone();
     let mut stack: Vec<SparseMap<f32>> = Vec::new();
@@ -96,7 +100,9 @@ fn main() {
         let profile = DatasetProfile::by_name(ds).unwrap();
         for model in ["esda_net", "mbv2"] {
             let spec = match model {
-                "mbv2" => NetworkSpec::mobilenet_v2_05("mbv2", profile.w, profile.h, profile.n_classes),
+                "mbv2" => {
+                    NetworkSpec::mobilenet_v2_05("mbv2", profile.w, profile.h, profile.n_classes)
+                }
                 _ => NetworkSpec::compact("esda_net", profile.w, profile.h, profile.n_classes),
             };
             let weights = FloatWeights::random(&spec, 1);

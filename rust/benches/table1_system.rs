@@ -52,11 +52,20 @@ fn main() {
     for profile in DatasetProfile::all() {
         let models: Vec<(&str, NetworkSpec)> = if profile.w.min(profile.h) >= 128 {
             vec![
-                ("ESDA-Net", NetworkSpec::compact("esda_net", profile.w, profile.h, profile.n_classes)),
-                ("MobileNetV2", NetworkSpec::mobilenet_v2_05("mbv2", profile.w, profile.h, profile.n_classes)),
+                (
+                    "ESDA-Net",
+                    NetworkSpec::compact("esda_net", profile.w, profile.h, profile.n_classes),
+                ),
+                (
+                    "MobileNetV2",
+                    NetworkSpec::mobilenet_v2_05("mbv2", profile.w, profile.h, profile.n_classes),
+                ),
             ]
         } else {
-            vec![("ESDA-Net", NetworkSpec::compact("esda_net", profile.w, profile.h, profile.n_classes))]
+            vec![(
+                "ESDA-Net",
+                NetworkSpec::compact("esda_net", profile.w, profile.h, profile.n_classes),
+            )]
         };
         for (mname, spec) in models {
             let mut rng = Rng::new(0x7AB1E1);
@@ -166,7 +175,10 @@ fn main() {
             105.0 / lat,
             18.7 / mj
         );
-        println!("Loihi (DvsGesture): 11.43 ms → {:.1}× ; Asynet CPU (N-Caltech101): 80.4 ms", 11.43 / lat);
+        println!(
+            "Loihi (DvsGesture): 11.43 ms → {:.1}× ; Asynet CPU (N-Caltech101): 80.4 ms",
+            11.43 / lat
+        );
     }
     println!("PPF (BNN, 60×40): 7.71 ms — quoted; no dataset released (paper §4.5).");
 }

@@ -210,7 +210,13 @@ mod tests {
     use crate::util::propcheck::check;
 
     /// SLB + compute chained must equal the functional conv bit-for-bit.
-    fn run_chain(input: &SparseMap<i8>, stride: usize, w: &[i8], b: &[i32], rq: Requant) -> SparseMap<i8> {
+    fn run_chain(
+        input: &SparseMap<i8>,
+        stride: usize,
+        w: &[i8],
+        b: &[i32],
+        rq: Requant,
+    ) -> SparseMap<i8> {
         let c = input.c;
         let mut fab = Fabric::default();
         let ch_in = fab.add_chan(2);

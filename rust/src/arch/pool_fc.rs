@@ -316,7 +316,8 @@ mod tests {
         let ch_in = fab.add_chan(4);
         let ch_out = fab.add_chan(2);
         let mut src = SourceMod::new("src", ch_in, &input);
-        let mut pool = PoolFcMod::new("poolfc", ch_in, ch_out, c, n_classes, 4, wfc.clone(), bfc.clone());
+        let mut pool =
+            PoolFcMod::new("poolfc", ch_in, ch_out, c, n_classes, 4, wfc.clone(), bfc.clone());
         let mut sink = SinkMod::new("sink", ch_out, 1, 1, 1);
         for _ in 0..10_000 {
             sink.step(&mut fab);
@@ -339,7 +340,8 @@ mod tests {
         let ch_in = fab.add_chan(2);
         let ch_out = fab.add_chan(2);
         let mut src = SourceMod::new("src", ch_in, &input);
-        let mut pool = PoolFcMod::new("poolfc", ch_in, ch_out, 2, 3, 1, vec![1i8; 6], vec![7, 8, 9]);
+        let mut pool =
+            PoolFcMod::new("poolfc", ch_in, ch_out, 2, 3, 1, vec![1i8; 6], vec![7, 8, 9]);
         let mut sink = SinkMod::new("sink", ch_out, 1, 1, 1);
         for _ in 0..1000 {
             sink.step(&mut fab);

@@ -103,7 +103,14 @@ pub struct SlbS1 {
 }
 
 impl SlbS1 {
-    pub fn new(name: impl Into<String>, in_ch: ChanId, out_ch: ChanId, k: usize, w: usize, h: usize) -> Self {
+    pub fn new(
+        name: impl Into<String>,
+        in_ch: ChanId,
+        out_ch: ChanId,
+        k: usize,
+        w: usize,
+        h: usize,
+    ) -> Self {
         assert!(k % 2 == 1 && k >= 3);
         SlbS1 {
             name: name.into(),
@@ -189,7 +196,9 @@ impl Module for SlbS1 {
         // (r = t.y − h.y ≤ u); unconditionally when no head is pending.
         if !self.in_end {
             let accept = match (fab.peek(self.in_ch), self.toks.front()) {
-                (Some(Item::Feat { t, .. }), Some(h)) => t.y as isize - h.y as isize <= self.u as isize,
+                (Some(Item::Feat { t, .. }), Some(h)) => {
+                    t.y as isize - h.y as isize <= self.u as isize
+                }
                 (Some(Item::Feat { .. }), None) => true,
                 (Some(Item::End), _) => true,
                 _ => false,
@@ -252,7 +261,14 @@ pub struct SlbS2 {
 }
 
 impl SlbS2 {
-    pub fn new(name: impl Into<String>, in_ch: ChanId, out_ch: ChanId, k: usize, w: usize, h: usize) -> Self {
+    pub fn new(
+        name: impl Into<String>,
+        in_ch: ChanId,
+        out_ch: ChanId,
+        k: usize,
+        w: usize,
+        h: usize,
+    ) -> Self {
         assert!(k % 2 == 1 && k >= 3);
         SlbS2 {
             name: name.into(),
@@ -450,7 +466,13 @@ mod tests {
         out
     }
 
-    fn random_i8_map(g: &mut crate::util::propcheck::Gen, w: usize, h: usize, c: usize, p: f64) -> SparseMap<i8> {
+    fn random_i8_map(
+        g: &mut crate::util::propcheck::Gen,
+        w: usize,
+        h: usize,
+        c: usize,
+        p: f64,
+    ) -> SparseMap<i8> {
         let mut m = SparseMap::empty(w, h, c);
         for y in 0..h {
             for x in 0..w {
@@ -482,7 +504,12 @@ mod tests {
                     for dx in 0..3isize {
                         let x = t.x as isize + dx - 1;
                         let y = t.y as isize + dy - 1;
-                        if x >= 0 && y >= 0 && (x as usize) < w && (y as usize) < h && bm.get(x as usize, y as usize) {
+                        if x >= 0
+                            && y >= 0
+                            && (x as usize) < w
+                            && (y as usize) < h
+                            && bm.get(x as usize, y as usize)
+                        {
                             want.push((dy * 3 + dx) as u8);
                         }
                     }
@@ -493,7 +520,8 @@ mod tests {
                 for (o, f) in offs {
                     let dy = (*o as usize / 3) as isize - 1;
                     let dx = (*o as usize % 3) as isize - 1;
-                    let idx = m.find((t.x as isize + dx) as u16, (t.y as isize + dy) as u16).unwrap();
+                    let idx =
+                        m.find((t.x as isize + dx) as u16, (t.y as isize + dy) as u16).unwrap();
                     assert_eq!(f.as_slice(), m.feat(idx));
                 }
             }
@@ -518,7 +546,12 @@ mod tests {
                     for dx in 0..3isize {
                         let x = 2 * t.x as isize + dx - 1;
                         let y = 2 * t.y as isize + dy - 1;
-                        if x >= 0 && y >= 0 && (x as usize) < w && (y as usize) < h && bm.get(x as usize, y as usize) {
+                        if x >= 0
+                            && y >= 0
+                            && (x as usize) < w
+                            && (y as usize) < h
+                            && bm.get(x as usize, y as usize)
+                        {
                             want_offs.push((dy * 3 + dx) as u8);
                         }
                     }
@@ -545,7 +578,11 @@ mod tests {
                         let dx = o as isize % 5 - 2;
                         let x = t.x as isize + dx;
                         let y = t.y as isize + dy;
-                        x >= 0 && y >= 0 && (x as usize) < w && (y as usize) < h && bm.get(x as usize, y as usize)
+                        x >= 0
+                            && y >= 0
+                            && (x as usize) < w
+                            && (y as usize) < h
+                            && bm.get(x as usize, y as usize)
                     })
                     .count();
                 assert_eq!(offs.len(), n_want);

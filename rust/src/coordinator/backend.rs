@@ -12,10 +12,12 @@
 //!   only with the `pjrt` feature).
 
 use crate::arch::{simulate_inference, HwConfig};
-use crate::model::exec::{argmax, classify_i8};
+use crate::model::exec::argmax;
+use crate::model::plan::{ExecCtx, ExecPlan};
 use crate::model::quant::QuantizedNet;
 use crate::sparse::SparseMap;
 use std::fmt;
+use std::sync::Mutex;
 
 /// Default simulator cycle budget per inference (generous: deadlock and
 /// runaway detection live inside the simulator itself).
@@ -52,16 +54,43 @@ pub trait Backend: Send + Sync {
 
     /// Classify one sparse input map.
     fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError>;
+
+    /// Classify a micro-batch of input maps, returning one result per map
+    /// in order. The default runs one-by-one; backends override it to
+    /// amortize per-inference setup (the functional backend reuses one
+    /// execution arena across the whole batch, the dense engine takes its
+    /// lock once).
+    fn classify_batch(&self, maps: &[SparseMap<f32>]) -> Vec<Result<Classification, BackendError>> {
+        maps.iter().map(|m| self.classify(m)).collect()
+    }
 }
 
-/// Functional int8 reference (fast; no cycle model).
+/// Functional int8 backend (fast; no cycle model). The network is compiled
+/// **once** into an [`ExecPlan`] at construction (the `QuantizedNet` is
+/// consumed — the plan holds the only weight copy); requests execute
+/// through pooled [`ExecCtx`] buffer arenas, so steady-state inference
+/// performs no per-request program walking, weight resolution, or heap
+/// allocation.
 pub struct Functional {
-    pub qnet: QuantizedNet,
+    plan: ExecPlan,
+    /// Warm execution contexts, one per concurrently-classifying thread
+    /// (grown on demand; the lock is held only to pop/push).
+    ctxs: Mutex<Vec<ExecCtx>>,
 }
 
 impl Functional {
     pub fn new(qnet: QuantizedNet) -> Functional {
-        Functional { qnet }
+        let plan = ExecPlan::compile(&qnet);
+        Functional { plan, ctxs: Mutex::new(Vec::new()) }
+    }
+
+    /// Run `f` with a pooled execution context; the context returns to the
+    /// pool afterwards so its arena stays warm for the next request.
+    fn with_ctx<R>(&self, f: impl FnOnce(&ExecPlan, &mut ExecCtx) -> R) -> R {
+        let mut ctx = self.ctxs.lock().unwrap().pop().unwrap_or_default();
+        let r = f(&self.plan, &mut ctx);
+        self.ctxs.lock().unwrap().push(ctx);
+        r
     }
 }
 
@@ -71,7 +100,18 @@ impl Backend for Functional {
     }
 
     fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
-        Ok(Classification { pred: classify_i8(&self.qnet, map), sim_cycles: None })
+        let pred = self.with_ctx(|plan, ctx| plan.classify(ctx, map));
+        Ok(Classification { pred, sim_cycles: None })
+    }
+
+    fn classify_batch(&self, maps: &[SparseMap<f32>]) -> Vec<Result<Classification, BackendError>> {
+        // One context for the whole batch: the arena stays hot and the
+        // pool lock is taken once per batch instead of once per request.
+        self.with_ctx(|plan, ctx| {
+            maps.iter()
+                .map(|m| Ok(Classification { pred: plan.classify(ctx, m), sim_cycles: None }))
+                .collect()
+        })
     }
 }
 
@@ -128,6 +168,20 @@ impl Backend for Dense {
             .map_err(|e| BackendError(format!("dense inference: {e}")))?;
         Ok(Classification { pred: argmax(&logits), sim_cycles: None })
     }
+
+    fn classify_batch(&self, maps: &[SparseMap<f32>]) -> Vec<Result<Classification, BackendError>> {
+        // Native batching for the serialized engine: take the lock once
+        // per batch so replicas queue per accelerator visit, not per map.
+        let engine = self.engine.lock().unwrap_or_else(|p| p.into_inner());
+        maps.iter()
+            .map(|m| {
+                engine
+                    .infer_sparse(m)
+                    .map(|logits| Classification { pred: argmax(&logits), sim_cycles: None })
+                    .map_err(|e| BackendError(format!("dense inference: {e}")))
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +209,52 @@ mod tests {
             assert!(f.sim_cycles.is_none());
             assert!(s.sim_cycles.unwrap() > 0);
         }
+    }
+
+    /// The compiled-plan path behind `Functional` must agree with the
+    /// allocating oracle on every request.
+    #[test]
+    fn functional_plan_matches_oracle_classify() {
+        use crate::model::exec::classify_i8;
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let func = Functional::new(qnet.clone());
+        let mut rng = Rng::new(123);
+        for i in 0..6 {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            let map = histogram2_norm(&es, profile.w, profile.h, 8.0);
+            assert_eq!(func.classify(&map).unwrap().pred, classify_i8(&qnet, &map));
+        }
+    }
+
+    /// `classify_batch` returns one in-order result per map and matches
+    /// the sequential path (both for the functional override and for a
+    /// default-implementation backend).
+    #[test]
+    fn classify_batch_matches_sequential() {
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let n_ops = qnet.spec.ops().len();
+        let func = Functional::new(qnet.clone());
+        let sim = Simulator::new(qnet, HwConfig::uniform(n_ops, 8));
+        let mut rng = Rng::new(5);
+        let maps: Vec<SparseMap<f32>> = (0..5)
+            .map(|i| {
+                let es = profile.sample(i % profile.n_classes, &mut rng);
+                histogram2_norm(&es, profile.w, profile.h, 8.0)
+            })
+            .collect();
+        for backend in [&func as &dyn Backend, &sim as &dyn Backend] {
+            let seq: Vec<usize> =
+                maps.iter().map(|m| backend.classify(m).unwrap().pred).collect();
+            let batched: Vec<usize> = backend
+                .classify_batch(&maps)
+                .into_iter()
+                .map(|r| r.unwrap().pred)
+                .collect();
+            assert_eq!(batched, seq, "{}", backend.name());
+        }
+        assert!(func.classify_batch(&[]).is_empty());
     }
 
     /// Backends are shareable across threads (the pool's core contract).

@@ -70,12 +70,17 @@ pub struct WorkerStats {
     pub worker: usize,
     /// Requests this replica served.
     pub served: usize,
+    /// Accelerator visits (micro-batches) this replica made;
+    /// `served / batches` is its mean batch size.
+    pub batches: usize,
     /// Total accelerator-busy seconds.
     pub busy_s: f64,
     /// Service-latency percentiles for this replica.
     pub service: PercentileReport,
     /// End-to-end latency percentiles for requests this replica served.
     pub e2e: PercentileReport,
+    /// Batch-size percentiles across this replica's accelerator visits.
+    pub batch: PercentileReport,
 }
 
 impl WorkerStats {
@@ -102,6 +107,9 @@ pub struct Metrics {
     /// Per-replica stats, one entry per pool worker (the single-
     /// accelerator `run_pipeline` facade has exactly one).
     pub per_worker: Vec<WorkerStats>,
+    /// Size of every micro-batch any worker pulled from the ingress queue
+    /// (one entry per accelerator visit, across all workers).
+    pub batch_sizes: Vec<usize>,
     /// Wall-clock duration of the completed run in seconds (0 until the
     /// runtime finalizes it — see [`Metrics::wall_seconds`]).
     pub wall_s: f64,
@@ -116,6 +124,7 @@ impl Default for Metrics {
             total: 0,
             dropped: 0,
             per_worker: Vec::new(),
+            batch_sizes: Vec::new(),
             wall_s: 0.0,
         }
     }
@@ -189,6 +198,23 @@ impl Metrics {
             return f64::NAN;
         }
         self.total as f64 / dt
+    }
+
+    /// Batch-size distribution across all accelerator visits (empty ⇒
+    /// all-NaN report, as with the latency percentiles).
+    pub fn batch_percentiles(&self) -> PercentileReport {
+        PercentileReport::from_samples(
+            &self.batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean requests per accelerator visit (NaN with no visits). 1.0 means
+    /// micro-batching never coalesced anything.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return f64::NAN;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
     }
 
     /// Mean simulated hardware latency in ms at `clock_hz`, when available.
@@ -280,6 +306,19 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
             }
         });
+    }
+
+    #[test]
+    fn batch_distribution() {
+        let mut m = Metrics::default();
+        assert!(m.mean_batch().is_nan());
+        assert_eq!(m.batch_percentiles().n, 0);
+        m.batch_sizes.extend_from_slice(&[1, 4, 4, 7]);
+        assert!((m.mean_batch() - 4.0).abs() < 1e-12);
+        let p = m.batch_percentiles();
+        assert_eq!(p.n, 4);
+        assert!((p.max - 7.0).abs() < 1e-12);
+        assert!(p.p50 <= p.p95 && p.p95 <= p.p99 && p.p99 <= p.max);
     }
 
     #[test]

@@ -51,6 +51,7 @@ pub fn run_pipeline(
         workers: 1,
         queue_depth: cfg.queue_depth,
         drop_policy: super::queue::DropPolicy::Block,
+        batch: 1,
     };
     let r = run_server(profile, backend, &scfg)?;
     Ok(PipelineResult { metrics: r.metrics, predictions: r.predictions })

@@ -121,6 +121,37 @@ impl<T> AdmissionQueue<T> {
         }
     }
 
+    /// Blocking micro-batch pop: wait like [`AdmissionQueue::pop`] for the
+    /// first item, then greedily drain whatever is *already queued*, up to
+    /// `max` items, without waiting again. `out` is cleared first and left
+    /// empty once the queue is closed-and-drained or aborted — reusing the
+    /// caller's buffer keeps the worker loop allocation-free.
+    pub fn pop_batch(&self, max: usize, out: &mut Vec<T>) {
+        out.clear();
+        let max = max.max(1);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return;
+            }
+            if !st.items.is_empty() {
+                while out.len() < max {
+                    match st.items.pop_front() {
+                        Some(x) => out.push(x),
+                        None => break,
+                    }
+                }
+                // Up to `max` slots freed: wake every blocked producer.
+                self.not_full.notify_all();
+                return;
+            }
+            if st.closed {
+                return;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
     /// Close the queue: producers fail fast, consumers drain then stop.
     pub fn close(&self) {
         let mut st = self.state.lock().unwrap();
@@ -165,6 +196,48 @@ mod tests {
         assert_eq!(q.pop(), Some(3));
         q.close();
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_batch_drains_up_to_max_without_waiting() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(8, DropPolicy::Block);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let mut batch = Vec::new();
+        q.pop_batch(3, &mut batch);
+        assert_eq!(batch, vec![0, 1, 2]);
+        // Fewer queued than max: return what's there, don't block.
+        q.pop_batch(16, &mut batch);
+        assert_eq!(batch, vec![3, 4]);
+        q.close();
+        q.pop_batch(4, &mut batch);
+        assert!(batch.is_empty(), "closed+drained queue must yield an empty batch");
+    }
+
+    #[test]
+    fn pop_batch_blocks_for_first_item_and_wakes_on_close() {
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(2, DropPolicy::Block));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let mut b = Vec::new();
+            q2.pop_batch(4, &mut b);
+            b
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(9).unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got, vec![9]);
+        // Abort wakes a blocked batch consumer with an empty batch.
+        let q3 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let mut b = Vec::new();
+            q3.pop_batch(4, &mut b);
+            b
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.abort();
+        assert!(h.join().unwrap().is_empty());
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Admission control policy when the ingress queue saturates.
     pub drop_policy: DropPolicy,
+    /// Max requests a worker drains from the ingress queue per wakeup
+    /// (micro-batch cap; 1 = classic one-at-a-time). Workers never wait to
+    /// fill a batch — they take what is already queued — so batching adds
+    /// no latency when the system is unloaded and amortizes per-visit
+    /// backend overhead when it is saturated.
+    pub batch: usize,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +64,7 @@ impl Default for ServerConfig {
             workers: 1,
             queue_depth: 4,
             drop_policy: DropPolicy::Block,
+            batch: 1,
         }
     }
 }
@@ -111,8 +118,9 @@ struct Request {
     enqueued: Instant,
 }
 
-/// Per-worker raw output collected at join time.
-type WorkerOutput = (usize, f64, Vec<(usize, usize, RequestTiming)>);
+/// Per-worker raw output collected at join time:
+/// `(worker id, busy seconds, served records, per-visit batch sizes)`.
+type WorkerOutput = (usize, f64, Vec<(usize, usize, RequestTiming)>, Vec<usize>);
 
 /// Run the serving pipeline to completion over `cfg.n_requests` synthetic
 /// requests, fanning the accelerator stage out over `cfg.workers` replicas.
@@ -158,25 +166,40 @@ pub fn run_server(
             queue_ref.close();
         });
 
-        // Stage 3: the accelerator worker pool.
+        // Stage 3: the accelerator worker pool. Each wakeup drains up to
+        // `cfg.batch` already-queued requests and classifies them in one
+        // backend visit (`classify_batch`), so backends that amortize
+        // per-visit setup — the functional plan arena, the dense engine's
+        // lock — see the whole micro-batch.
         let error_ref = &first_error;
+        let batch_cap = cfg.batch.max(1);
         let handles: Vec<_> = (0..cfg.workers)
             .map(|wid| {
                 s.spawn(move || {
                     let mut records: Vec<(usize, usize, RequestTiming)> = Vec::new();
+                    let mut batch_sizes: Vec<usize> = Vec::new();
                     let mut busy_s = 0.0f64;
-                    while let Some(req) = queue_ref.pop() {
+                    let mut batch: Vec<Request> = Vec::with_capacity(batch_cap);
+                    let mut metas: Vec<(usize, Instant)> = Vec::with_capacity(batch_cap);
+                    let mut maps: Vec<SparseMap<f32>> = Vec::with_capacity(batch_cap);
+                    loop {
+                        queue_ref.pop_batch(batch_cap, &mut batch);
+                        if batch.is_empty() {
+                            break; // closed and drained, or aborted
+                        }
+                        let n = batch.len();
+                        metas.clear();
+                        maps.clear();
+                        for req in batch.drain(..) {
+                            metas.push((req.label, req.enqueued));
+                            maps.push(req.map);
+                        }
                         let t0 = Instant::now();
-                        let outcome = catch_unwind(AssertUnwindSafe(|| backend.classify(&req.map)));
-                        let service_s = t0.elapsed().as_secs_f64();
-                        let c = match outcome {
-                            Ok(Ok(c)) => c,
-                            Ok(Err(e)) => {
-                                let mut slot = error_ref.lock().unwrap();
-                                slot.get_or_insert_with(|| e.to_string());
-                                queue_ref.abort();
-                                break;
-                            }
+                        let outcome =
+                            catch_unwind(AssertUnwindSafe(|| backend.classify_batch(&maps)));
+                        let visit_s = t0.elapsed().as_secs_f64();
+                        let results = match outcome {
+                            Ok(rs) => rs,
                             Err(p) => {
                                 let mut slot = error_ref.lock().unwrap();
                                 slot.get_or_insert_with(|| {
@@ -186,15 +209,50 @@ pub fn run_server(
                                 break;
                             }
                         };
-                        busy_s += service_s;
-                        let timing = RequestTiming {
-                            e2e_s: req.enqueued.elapsed().as_secs_f64(),
-                            service_s,
-                            sim_cycles: c.sim_cycles,
-                        };
-                        records.push((req.label, c.pred, timing));
+                        if results.len() != n {
+                            // A broken Backend impl must fail loudly, not
+                            // silently lose requests to zip truncation.
+                            let mut slot = error_ref.lock().unwrap();
+                            slot.get_or_insert_with(|| {
+                                format!(
+                                    "backend '{}' returned {} result(s) for a batch of {n}",
+                                    backend.name(),
+                                    results.len(),
+                                )
+                            });
+                            queue_ref.abort();
+                            break;
+                        }
+                        busy_s += visit_s;
+                        batch_sizes.push(n);
+                        // The visit is one accelerator pass; attribute its
+                        // cost evenly across the requests it served.
+                        let service_s = visit_s / n as f64;
+                        let mut failed = false;
+                        for (&(label, enqueued), res) in metas.iter().zip(results) {
+                            match res {
+                                Ok(c) => {
+                                    let timing = RequestTiming {
+                                        e2e_s: enqueued.elapsed().as_secs_f64(),
+                                        service_s,
+                                        sim_cycles: c.sim_cycles,
+                                    };
+                                    records.push((label, c.pred, timing));
+                                }
+                                Err(e) => {
+                                    let mut slot = error_ref.lock().unwrap();
+                                    slot.get_or_insert_with(|| e.to_string());
+                                    queue_ref.abort();
+                                    failed = true;
+                                    break;
+                                }
+                            }
+                        }
+                        if failed {
+                            break;
+                        }
                     }
-                    (wid, busy_s, records)
+                    (wid, busy_s, records, batch_sizes)
                 })
             })
             .collect();
@@ -204,9 +262,9 @@ pub fn run_server(
         source.join().expect("source thread");
     });
 
-    outputs.sort_by_key(|(wid, _, _)| *wid);
+    outputs.sort_by_key(|(wid, _, _, _)| *wid);
     let (submitted, dropped, _still_queued) = queue.stats();
-    let processed: usize = outputs.iter().map(|(_, _, r)| r.len()).sum();
+    let processed: usize = outputs.iter().map(|(_, _, r, _)| r.len()).sum();
     let in_flight = submitted.saturating_sub(dropped + processed);
 
     if let Some(msg) = first_error.into_inner().unwrap() {
@@ -219,16 +277,20 @@ pub fn run_server(
     let wall_s = t_start.elapsed().as_secs_f64();
     let mut metrics = Metrics { started: t_start, dropped, wall_s, ..Metrics::default() };
     let mut predictions = Vec::with_capacity(processed);
-    for (wid, busy_s, records) in &outputs {
+    for (wid, busy_s, records, batch_sizes) in &outputs {
         let service: Vec<f64> = records.iter().map(|(_, _, t)| t.service_s).collect();
         let e2e: Vec<f64> = records.iter().map(|(_, _, t)| t.e2e_s).collect();
+        let batches: Vec<f64> = batch_sizes.iter().map(|&b| b as f64).collect();
         metrics.per_worker.push(WorkerStats {
             worker: *wid,
             served: records.len(),
+            batches: batch_sizes.len(),
             busy_s: *busy_s,
             service: PercentileReport::from_samples(&service),
             e2e: PercentileReport::from_samples(&e2e),
+            batch: PercentileReport::from_samples(&batches),
         });
+        metrics.batch_sizes.extend_from_slice(batch_sizes);
         for &(label, pred, timing) in records {
             metrics.record(timing, pred == label);
             predictions.push(Prediction { label, pred, worker: *wid });
@@ -256,6 +318,31 @@ mod tests {
         assert_eq!(r.metrics.per_worker.len(), 3);
         assert_eq!(r.metrics.per_worker.iter().map(|w| w.served).sum::<usize>(), 12);
         assert!(r.metrics.throughput() > 0.0);
+    }
+
+    /// Micro-batching is a scheduling detail: every request is still served
+    /// exactly once, and the batch-size books stay consistent.
+    #[test]
+    fn batched_pool_serves_every_request_once() {
+        let profile = DatasetProfile::n_mnist();
+        let backend = Functional::new(qnet_for(&profile));
+        let cfg = ServerConfig {
+            n_requests: 20,
+            seed: 6,
+            workers: 2,
+            queue_depth: 8,
+            batch: 4,
+            ..Default::default()
+        };
+        let r = run_server(&profile, &backend, &cfg).unwrap();
+        assert_eq!(r.metrics.total, 20);
+        assert_eq!(r.predictions.len(), 20);
+        let visits: usize = r.metrics.batch_sizes.iter().sum();
+        assert_eq!(visits, 20, "batch sizes must partition the request stream");
+        assert!(r.metrics.batch_sizes.iter().all(|&b| (1..=4).contains(&b)));
+        assert!(r.metrics.mean_batch() >= 1.0);
+        let per_worker: usize = r.metrics.per_worker.iter().map(|w| w.batches).sum();
+        assert_eq!(per_worker, r.metrics.batch_sizes.len());
     }
 
     #[test]

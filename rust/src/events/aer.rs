@@ -26,23 +26,52 @@ impl<'a> EventSlice<'a> {
         &self.0[lo..hi]
     }
 
+    /// Recording duration: timestamp of the last event, or 0 for an empty
+    /// stream (an empty recording has an empty profile, not a panic —
+    /// event cameras emit nothing for a static scene).
+    pub fn duration_us(&self) -> u32 {
+        self.0.last().map_or(0, |e| e.t_us)
+    }
+
     /// Split into fixed-interval windows covering the whole recording
     /// (paper §4.1: "clips event recordings with a fixed time interval").
+    /// An empty stream or a zero interval yields no windows.
     pub fn fixed_windows(&self, interval_us: u32) -> Vec<&'a [Event]> {
-        if self.0.is_empty() {
-            return Vec::new();
-        }
-        let t_end = self.0.last().unwrap().t_us;
         let mut out = Vec::new();
+        if self.0.is_empty() || interval_us == 0 {
+            return out;
+        }
+        let t_end = self.duration_us();
         let mut t0 = 0u32;
-        while t0 <= t_end {
-            let w = self.window(t0, t0.saturating_add(interval_us));
+        loop {
+            let (w, next) = match t0.checked_add(interval_us) {
+                Some(t1) => (self.window(t0, t1), Some(t1)),
+                None => {
+                    // Window clipped at the u32 range: take everything from
+                    // t0 through the end of the recording (inclusive, so a
+                    // u32::MAX-timestamped event is not silently dropped).
+                    let lo = self.0.partition_point(|e| e.t_us < t0);
+                    (&self.0[lo..], None)
+                }
+            };
             if !w.is_empty() {
                 out.push(w);
             }
-            t0 = t0.saturating_add(interval_us);
+            match next {
+                Some(n) if n <= t_end => t0 = n,
+                _ => break,
+            }
         }
         out
+    }
+}
+
+/// Time span covered by a window slice: `last.t - first.t`, or 0 for an
+/// empty (or single-event) window.
+pub fn span_us(events: &[Event]) -> u32 {
+    match (events.first(), events.last()) {
+        (Some(a), Some(b)) => b.t_us.saturating_sub(a.t_us),
+        _ => 0,
     }
 }
 
@@ -79,9 +108,33 @@ mod tests {
         assert_eq!(total, es.len());
         for w in &ws {
             assert!(!w.is_empty());
-            let span = w.last().unwrap().t_us - w.first().unwrap().t_us;
-            assert!(span < 100);
+            assert!(span_us(w) < 100);
         }
+    }
+
+    /// Regression: an empty event stream has a 0-duration, zero-window
+    /// profile — no panic anywhere on the windowing path.
+    #[test]
+    fn empty_stream_has_empty_profile() {
+        let s = EventSlice(&[]);
+        assert_eq!(s.duration_us(), 0);
+        assert!(s.window(0, 1000).is_empty());
+        assert!(s.fixed_windows(100).is_empty());
+        assert_eq!(span_us(&[]), 0);
+        assert!(is_time_sorted(&[]));
+    }
+
+    /// Degenerate inputs the old loop mishandled: a zero interval must not
+    /// spin forever, and a max-timestamp event must not overflow.
+    #[test]
+    fn degenerate_windows_terminate() {
+        let es = vec![ev(0), ev(50)];
+        assert!(EventSlice(&es).fixed_windows(0).is_empty());
+        let far = vec![ev(u32::MAX)];
+        let ws = EventSlice(&far).fixed_windows(1 << 30);
+        let total: usize = ws.iter().map(|w| w.len()).sum();
+        assert_eq!(total, 1);
+        assert_eq!(span_us(&far), 0);
     }
 
     #[test]

@@ -11,9 +11,12 @@
 //! - `search     --dataset <name> [--samples N] [--top-k K]`
 //!   run the two-step NAS and print the candidate table.
 //! - `serve      --dataset <name> [--requests N] [--backend sim|func|dense]
-//!               [--workers N] [--queue D] [--drop-policy block|drop-oldest]`
+//!               [--workers N] [--queue D] [--drop-policy block|drop-oldest]
+//!               [--batch B]`
 //!   run the sharded serving runtime (N accelerator worker replicas behind
-//!   an admission-controlled ingress queue) and print per-worker metrics.
+//!   an admission-controlled ingress queue; each worker drains up to B
+//!   already-queued requests per backend visit) and print per-worker
+//!   metrics including the realized batch-size distribution.
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
@@ -22,7 +25,9 @@ use esda::coordinator::{
     run_server, Backend, Dense, DropPolicy, Functional, ServerConfig, Simulator,
 };
 use esda::events::{io::generate_dataset_files, repr::histogram2_norm, DatasetProfile};
-use esda::hwopt::{allocate, power::PowerModel, power::CLOCK_HZ, stats::collect_stats_for_profile, Budget};
+use esda::hwopt::{
+    allocate, power::PowerModel, power::CLOCK_HZ, stats::collect_stats_for_profile, Budget,
+};
 use esda::model::quant::quantize_network;
 use esda::model::weights::FloatWeights;
 use esda::model::NetworkSpec;
@@ -240,6 +245,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if queue_depth == 0 {
         return Err("--queue must be >= 1".into());
     }
+    let batch = args.get_usize("batch", 1)?;
+    if batch == 0 {
+        return Err("--batch must be >= 1".into());
+    }
     let cfg = ServerConfig {
         n_requests: args.get_usize("requests", 32)?,
         seed,
@@ -248,6 +257,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         queue_depth,
         drop_policy: DropPolicy::parse(policy_raw)
             .ok_or_else(|| format!("--drop-policy: expected block|drop-oldest, got '{policy_raw}'"))?,
+        batch,
     };
     let r = run_server(&p, backend.as_ref(), &cfg).map_err(|e| e.to_string())?;
     let m = &r.metrics;
@@ -268,6 +278,18 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         m.throughput(),
         cfg.workers,
     );
+    if cfg.batch > 1 {
+        let bp = m.batch_percentiles();
+        println!(
+            "micro-batching: cap {} | mean {:.2} req/visit | p50 {:.0} p99 {:.0} max {:.0} | {} visit(s)",
+            cfg.batch,
+            m.mean_batch(),
+            bp.p50,
+            bp.p99,
+            bp.max,
+            m.batch_sizes.len(),
+        );
+    }
     if cfg.workers > 1 || args.has("verbose") {
         println!("{}", esda::report::serving_table(m).render());
     }

@@ -135,9 +135,7 @@ pub fn forward_i8_observed(
             Op::ConvKxK { k, cout, stride, .. } => {
                 let q = qnet.per_op[i].as_ref().unwrap();
                 cur = if stride == 1 {
-                    // full k×k stride-1 via the generic path: reuse s2 code
-                    // shape would differ; dedicated s1 full conv:
-                    conv_full_s1_i8(&cur, k, &q.w, &q.b, cout, &q.rq)
+                    conv::conv_kxk_s1_i8(&cur, k, &q.w, &q.b, cout, &q.rq)
                 } else {
                     conv::conv_kxk_s2_i8(&cur, k, &q.w, &q.b, cout, &q.rq)
                 };
@@ -175,7 +173,9 @@ pub fn forward_i8_observed(
     pooled
 }
 
-/// Full k×k submanifold conv, stride 1, int8 (the stem layer).
+/// Full k×k submanifold conv, stride 1, int8 (the stem layer). Kept as a
+/// compatibility alias — the kernel now lives in
+/// [`conv::conv_kxk_s1_i8`] next to its `_into` arena variant.
 pub fn conv_full_s1_i8(
     input: &SparseMap<i8>,
     k: usize,
@@ -184,44 +184,7 @@ pub fn conv_full_s1_i8(
     cout: usize,
     rq: &crate::sparse::quant::Requant,
 ) -> SparseMap<i8> {
-    let cin = input.c;
-    assert_eq!(w.len(), k * k * cin * cout);
-    let u = (k - 1) / 2;
-    let bm = input.bitmap();
-    let mut out = SparseMap::empty(input.w, input.h, cout);
-    out.tokens = input.tokens.clone();
-    out.feats.reserve(out.tokens.len() * cout);
-    let mut acc = vec![0i32; cout];
-    for t in &input.tokens {
-        acc.copy_from_slice(bias);
-        for dy in 0..k {
-            for dx in 0..k {
-                let ix = t.x as isize + dx as isize - u as isize;
-                let iy = t.y as isize + dy as isize - u as isize;
-                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
-                    continue;
-                }
-                let (ix, iy) = (ix as usize, iy as usize);
-                if !bm.get(ix, iy) {
-                    continue;
-                }
-                let ni = input.find(ix as u16, iy as u16).unwrap();
-                let nf = input.feat(ni);
-                let wbase = (dy * k + dx) * cin * cout;
-                for ci in 0..cin {
-                    let a = nf[ci] as i32;
-                    let wrow = wbase + ci * cout;
-                    for co in 0..cout {
-                        acc[co] += a * w[wrow + co] as i32;
-                    }
-                }
-            }
-        }
-        for co in 0..cout {
-            out.feats.push(rq.apply(acc[co]));
-        }
-    }
-    out
+    conv::conv_kxk_s1_i8(input, k, w, bias, cout, rq)
 }
 
 /// Classify a float input through the hardware-exact int8 path

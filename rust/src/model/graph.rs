@@ -45,7 +45,9 @@ impl Op {
     /// Output channels given input channels (for shape checking).
     pub fn cout(&self) -> Option<usize> {
         match self {
-            Op::Conv1x1 { cout, .. } | Op::ConvKxK { cout, .. } | Op::Fc { cout, .. } => Some(*cout),
+            Op::Conv1x1 { cout, .. } | Op::ConvKxK { cout, .. } | Op::Fc { cout, .. } => {
+                Some(*cout)
+            }
             Op::DwConv { c, .. } | Op::GlobalPool { c } => Some(*c),
             Op::ResFork | Op::ResAdd => None,
         }

@@ -14,10 +14,16 @@
 //! container), and [`quant`] converts calibrated float weights into the
 //! dyadic int8 form both the functional int8 path and the simulator
 //! consume.
+//! [`plan`] splits functional int8 execution into a compile phase
+//! ([`plan::ExecPlan`], built once per network) and an execute phase
+//! through a reusable per-worker buffer arena ([`plan::ExecCtx`]) — the
+//! serving hot path. [`exec`] remains the allocating per-op oracle.
 pub mod graph;
 pub mod weights;
 pub mod quant;
 pub mod exec;
+pub mod plan;
 
 pub use graph::{Act, Block, NetworkSpec, Op};
+pub use plan::{ExecCtx, ExecPlan};
 pub use weights::{OpWeights, QuantOpWeights};

@@ -1,0 +1,447 @@
+//! Compile-once / execute-many functional execution.
+//!
+//! The paper's premise is compose-once, stream-forever: modules are
+//! parametrized and wired a single time, then event batches flow through a
+//! fixed dataflow with no per-inference setup. [`super::exec`] (the oracle)
+//! does the opposite — it re-walks the op program, re-resolves quantized
+//! weights, and allocates fresh token/feature vectors on every request.
+//! This module splits that into:
+//!
+//! - [`ExecPlan`] — built **once** per network from a [`QuantizedNet`]:
+//!   ops lowered to a flat step list with pre-resolved weight/requant
+//!   references (no `Option` unwrapping on the hot path), weights laid out
+//!   for cache-friendly inner loops (the FC matrix is stored transposed;
+//!   pointwise loops run ci-outer/co-inner over the native `[ci][co]`
+//!   rows), and per-step geometry / scratch-size descriptors.
+//! - [`ExecCtx`] — a reusable per-worker buffer arena: double-buffered
+//!   token/feature maps, a residual fork pool, the [`NeighborIndex`]
+//!   rulebook scratch, and the int32 accumulators. After a warm-up
+//!   inference sizes the buffers, steady-state execution performs **zero
+//!   heap allocations** (enforced by `rust/tests/exec_plan.rs` with a
+//!   counting allocator).
+//!
+//! Execution is bit-exact with [`super::exec::forward_i8`]: both paths run
+//! the same integer kernels (`sparse::conv`), property-tested across random
+//! networks and inputs in `rust/tests/exec_plan.rs`.
+
+use super::exec::argmax;
+use super::graph::Op;
+use super::quant::QuantizedNet;
+use crate::sparse::conv;
+use crate::sparse::quant::Requant;
+use crate::sparse::rulebook::NeighborIndex;
+use crate::sparse::{Bitmap, SparseMap};
+
+/// Pre-resolved weights for one step (cloned out of the `QuantizedNet` at
+/// compile time so execution never touches `Option<QuantOpWeights>`).
+#[derive(Clone, Debug)]
+pub struct StepWeights {
+    pub w: Vec<i8>,
+    pub b: Vec<i32>,
+    pub rq: Requant,
+}
+
+/// One lowered execution step. Weighted variants embed their weights —
+/// resolving them is a compile-time, not a per-request, operation.
+#[derive(Clone, Debug)]
+pub enum StepKind {
+    /// 1×1 pointwise conv.
+    Conv1x1(StepWeights),
+    /// Full k×k submanifold conv, stride 1 (the stem).
+    ConvKxKS1 { k: usize, w: StepWeights },
+    /// Full k×k sparse conv, stride 2.
+    ConvKxKS2 { k: usize, w: StepWeights },
+    /// Depthwise k×k submanifold conv, stride 1.
+    DwConvS1 { k: usize, w: StepWeights },
+    /// Depthwise k×k sparse conv, stride 2.
+    DwConvS2 { k: usize, w: StepWeights },
+    /// Push a copy of the stream for an identity shortcut.
+    ResFork,
+    /// Pop the shortcut and add it (saturating int8).
+    ResAdd,
+    /// Global average pool over tokens (map → int32 vector).
+    GlobalPool,
+    /// FC head; weights stored **transposed** (`wt[co * cin + ci]`).
+    Fc(StepWeights),
+}
+
+/// One step plus its geometry descriptor (input/output spatial size and
+/// channel counts — `cout` doubles as the accumulator scratch size).
+#[derive(Clone, Debug)]
+pub struct PlanStep {
+    pub kind: StepKind,
+    pub in_w: usize,
+    pub in_h: usize,
+    pub cin: usize,
+    pub out_w: usize,
+    pub out_h: usize,
+    pub cout: usize,
+}
+
+/// A compiled execution plan: build once per network, execute per request
+/// through a reusable [`ExecCtx`].
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    pub steps: Vec<PlanStep>,
+    /// Scale mapping f32 input → int8 (from calibration).
+    pub input_scale: f32,
+    /// Expected input geometry.
+    pub in_w: usize,
+    pub in_h: usize,
+    pub cin: usize,
+    /// Logit arity of the FC head.
+    pub n_classes: usize,
+    /// Largest accumulator any step needs (scratch-size descriptor).
+    pub max_cout: usize,
+    /// Deepest simultaneous residual-fork nesting.
+    pub fork_depth: usize,
+}
+
+impl ExecPlan {
+    /// Lower a quantized network into a flat step list. Panics on a
+    /// malformed network (missing quantized weights, unbalanced residual
+    /// forks, or a program that does not end in `GlobalPool → Fc`) — the
+    /// same conditions the oracle would panic on mid-request, surfaced at
+    /// compile time instead.
+    pub fn compile(qnet: &QuantizedNet) -> ExecPlan {
+        let spec = &qnet.spec;
+        let ops = spec.ops();
+        assert!(
+            matches!(ops.last(), Some(Op::Fc { .. })),
+            "ExecPlan requires a classification network ending in an FC head"
+        );
+        let weights_of = |i: usize| -> StepWeights {
+            let q = qnet.per_op[i]
+                .as_ref()
+                .unwrap_or_else(|| panic!("op {i} has no quantized weights"));
+            StepWeights { w: q.w.clone(), b: q.b.clone(), rq: q.rq }
+        };
+        let mut steps = Vec::with_capacity(ops.len());
+        let (mut w, mut h) = (spec.w, spec.h);
+        let mut c = spec.cin;
+        let mut depth = 0usize;
+        let mut fork_depth = 0usize;
+        let mut max_cout = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            let (in_w, in_h, cin) = (w, h, c);
+            let kind = match *op {
+                Op::Conv1x1 { cout, .. } => {
+                    c = cout;
+                    StepKind::Conv1x1(weights_of(i))
+                }
+                Op::ConvKxK { k, cout, stride, .. } => {
+                    c = cout;
+                    if stride == 1 {
+                        StepKind::ConvKxKS1 { k, w: weights_of(i) }
+                    } else {
+                        w = (w + 1) / 2;
+                        h = (h + 1) / 2;
+                        StepKind::ConvKxKS2 { k, w: weights_of(i) }
+                    }
+                }
+                Op::DwConv { k, stride, .. } => {
+                    if stride == 1 {
+                        StepKind::DwConvS1 { k, w: weights_of(i) }
+                    } else {
+                        w = (w + 1) / 2;
+                        h = (h + 1) / 2;
+                        StepKind::DwConvS2 { k, w: weights_of(i) }
+                    }
+                }
+                Op::ResFork => {
+                    depth += 1;
+                    fork_depth = fork_depth.max(depth);
+                    StepKind::ResFork
+                }
+                Op::ResAdd => {
+                    assert!(depth > 0, "ResAdd without matching ResFork at op {i}");
+                    depth -= 1;
+                    StepKind::ResAdd
+                }
+                Op::GlobalPool { .. } => StepKind::GlobalPool,
+                Op::Fc { cin, cout } => {
+                    let q = qnet.per_op[i]
+                        .as_ref()
+                        .unwrap_or_else(|| panic!("FC op {i} has no quantized weights"));
+                    assert_eq!(q.w.len(), cin * cout, "FC weight shape mismatch");
+                    // Transpose to `wt[co * cin + ci]` so each logit's dot
+                    // product walks one contiguous row.
+                    let mut wt = vec![0i8; cin * cout];
+                    for ci in 0..cin {
+                        for co in 0..cout {
+                            wt[co * cin + ci] = q.w[ci * cout + co];
+                        }
+                    }
+                    c = cout;
+                    StepKind::Fc(StepWeights { w: wt, b: q.b.clone(), rq: q.rq })
+                }
+            };
+            max_cout = max_cout.max(c);
+            steps.push(PlanStep { kind, in_w, in_h, cin, out_w: w, out_h: h, cout: c });
+        }
+        assert_eq!(depth, 0, "unbalanced ResFork/ResAdd");
+        ExecPlan {
+            steps,
+            input_scale: qnet.input_scale,
+            in_w: spec.w,
+            in_h: spec.h,
+            cin: spec.cin,
+            n_classes: spec.n_classes,
+            max_cout,
+            fork_depth,
+        }
+    }
+
+    /// Run the plan over a float input, reusing `ctx`'s arena; returns the
+    /// int32 logits (borrowed from the context — copy them out if they must
+    /// outlive the next execution).
+    ///
+    /// Only the channel count is checked (matching the oracle,
+    /// [`super::exec::forward_i8`]): every kernel derives its geometry from
+    /// the input map, so off-spec resolutions execute fine — the plan's
+    /// `in_w`/`in_h` and per-step descriptors are the *expected* geometry,
+    /// for sizing and diagnostics.
+    pub fn execute<'c>(&self, ctx: &'c mut ExecCtx, input: &SparseMap<f32>) -> &'c [i32] {
+        assert_eq!(input.c, self.cin, "input channels mismatch");
+        quantize_into(self.input_scale, input, &mut ctx.cur);
+        ctx.fork_top = 0;
+        for step in &self.steps {
+            match step.kind {
+                StepKind::Conv1x1(ref sw) => {
+                    conv::conv1x1_i8_into(
+                        &ctx.cur,
+                        &sw.w,
+                        &sw.b,
+                        step.cout,
+                        &sw.rq,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                }
+                StepKind::ConvKxKS1 { k, w: ref sw } => {
+                    conv::conv_kxk_s1_i8_into(
+                        &ctx.cur,
+                        k,
+                        &sw.w,
+                        &sw.b,
+                        step.cout,
+                        &sw.rq,
+                        &mut ctx.idx,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                }
+                StepKind::ConvKxKS2 { k, w: ref sw } => {
+                    conv::conv_kxk_s2_i8_into(
+                        &ctx.cur,
+                        k,
+                        &sw.w,
+                        &sw.b,
+                        step.cout,
+                        &sw.rq,
+                        &mut ctx.idx,
+                        &mut ctx.ds,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                }
+                StepKind::DwConvS1 { k, w: ref sw } => {
+                    conv::dwconv_kxk_s1_i8_into(
+                        &ctx.cur,
+                        k,
+                        &sw.w,
+                        &sw.b,
+                        &sw.rq,
+                        &mut ctx.idx,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                }
+                StepKind::DwConvS2 { k, w: ref sw } => {
+                    conv::dwconv_kxk_s2_i8_into(
+                        &ctx.cur,
+                        k,
+                        &sw.w,
+                        &sw.b,
+                        &sw.rq,
+                        &mut ctx.idx,
+                        &mut ctx.ds,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                }
+                StepKind::ResFork => {
+                    if ctx.forks.len() == ctx.fork_top {
+                        ctx.forks.push(SparseMap::empty(0, 0, 0));
+                    }
+                    let top = ctx.fork_top;
+                    ctx.forks[top].copy_from(&ctx.cur);
+                    ctx.fork_top += 1;
+                }
+                StepKind::ResAdd => {
+                    let top = ctx.fork_top.checked_sub(1).expect("ResAdd without ResFork");
+                    ctx.fork_top = top;
+                    conv::residual_add_i8_inplace(&mut ctx.cur, &ctx.forks[top]);
+                }
+                StepKind::GlobalPool => {
+                    conv::global_avg_pool_i8_into(&ctx.cur, &mut ctx.acc64, &mut ctx.pooled);
+                }
+                StepKind::Fc(ref sw) => {
+                    conv::fc_i8_t_into(&ctx.pooled, &sw.w, &sw.b, step.cout, &mut ctx.logits);
+                }
+            }
+        }
+        &ctx.logits
+    }
+
+    /// Classify: execute and argmax the logits.
+    pub fn classify(&self, ctx: &mut ExecCtx, input: &SparseMap<f32>) -> usize {
+        argmax(self.execute(ctx, input))
+    }
+}
+
+/// Quantize a float input map into `out` with the network's input scale —
+/// the arena variant of [`super::exec::quantize_input`].
+fn quantize_into(scale: f32, input: &SparseMap<f32>, out: &mut SparseMap<i8>) {
+    out.reset(input.w, input.h, input.c);
+    out.tokens.extend_from_slice(&input.tokens);
+    out.feats.reserve(input.feats.len());
+    for &v in &input.feats {
+        out.feats.push(((v / scale).round() as i32).clamp(-128, 127) as i8);
+    }
+}
+
+/// Per-worker execution context: the buffer arena a plan executes through.
+/// Create once (cheap — all buffers start empty), reuse for every request;
+/// the first execution sizes the buffers and subsequent ones run
+/// allocation-free. A context is plan-agnostic: it can be shared across
+/// plans (buffers regrow as needed).
+#[derive(Debug)]
+pub struct ExecCtx {
+    /// Double-buffered token/feature maps (current layer input / output).
+    cur: SparseMap<i8>,
+    next: SparseMap<i8>,
+    /// Residual shortcut pool, `fork_top` slots live.
+    forks: Vec<SparseMap<i8>>,
+    fork_top: usize,
+    /// Rulebook scratch: dense coordinate → token-index grid.
+    idx: NeighborIndex,
+    /// Stride-2 downsample bitmap scratch.
+    ds: Bitmap,
+    /// int32 accumulator (sized to the plan's `max_cout`).
+    acc: Vec<i32>,
+    /// i64 pooling accumulator.
+    acc64: Vec<i64>,
+    /// Pooled vector and logits.
+    pooled: Vec<i32>,
+    logits: Vec<i32>,
+}
+
+impl ExecCtx {
+    pub fn new() -> ExecCtx {
+        ExecCtx {
+            cur: SparseMap::empty(0, 0, 0),
+            next: SparseMap::empty(0, 0, 0),
+            forks: Vec::new(),
+            fork_top: 0,
+            idx: NeighborIndex::new(),
+            ds: Bitmap::new(0, 0),
+            acc: Vec::new(),
+            acc64: Vec::new(),
+            pooled: Vec::new(),
+            logits: Vec::new(),
+        }
+    }
+}
+
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{repr::histogram2_norm, DatasetProfile};
+    use crate::model::exec::{classify_i8, forward_i8};
+    use crate::model::quant::quantize_network;
+    use crate::model::weights::FloatWeights;
+    use crate::model::NetworkSpec;
+    use crate::util::Rng;
+
+    fn small_input(seed: u64) -> SparseMap<f32> {
+        let p = DatasetProfile::n_mnist();
+        let mut rng = Rng::new(seed);
+        let es = p.sample(seed as usize % p.n_classes, &mut rng);
+        histogram2_norm(&es, p.w, p.h, 8.0)
+    }
+
+    fn tiny_qnet(seed: u64) -> QuantizedNet {
+        let spec = NetworkSpec::tiny(34, 34, 5);
+        let w = FloatWeights::random(&spec, seed);
+        let calib: Vec<SparseMap<f32>> = (0..3).map(small_input).collect();
+        quantize_network(&spec, &w, &calib)
+    }
+
+    #[test]
+    fn plan_structure_mirrors_ops() {
+        let qnet = tiny_qnet(1);
+        let plan = ExecPlan::compile(&qnet);
+        assert_eq!(plan.steps.len(), qnet.spec.ops().len());
+        assert_eq!(plan.n_classes, 5);
+        assert_eq!(plan.fork_depth, 1); // tiny has one residual block
+        assert!(plan.max_cout >= 8);
+        // Geometry chains: each step's input is the previous step's output.
+        for pair in plan.steps.windows(2) {
+            assert_eq!((pair[0].out_w, pair[0].out_h), (pair[1].in_w, pair[1].in_h));
+        }
+        // The stride-2 block halves resolution exactly once in tiny.
+        let last = plan.steps.last().unwrap();
+        assert_eq!((last.out_w, last.out_h), (17, 17));
+    }
+
+    #[test]
+    fn plan_execution_matches_oracle_logits() {
+        let qnet = tiny_qnet(7);
+        let plan = ExecPlan::compile(&qnet);
+        let mut ctx = ExecCtx::new();
+        for s in 20..26u64 {
+            let input = small_input(s);
+            let want = forward_i8(&qnet, &input);
+            let got = plan.execute(&mut ctx, &input).to_vec();
+            assert_eq!(got, want, "seed {s}");
+            assert_eq!(plan.classify(&mut ctx, &input), classify_i8(&qnet, &input));
+        }
+    }
+
+    #[test]
+    fn context_is_reusable_across_plans() {
+        let qa = tiny_qnet(3);
+        let qb = tiny_qnet(4);
+        let pa = ExecPlan::compile(&qa);
+        let pb = ExecPlan::compile(&qb);
+        let mut ctx = ExecCtx::new();
+        let input = small_input(9);
+        // Interleave two plans through one context: no cross-talk.
+        for _ in 0..2 {
+            assert_eq!(pa.execute(&mut ctx, &input).to_vec(), forward_i8(&qa, &input));
+            assert_eq!(pb.execute(&mut ctx, &input).to_vec(), forward_i8(&qb, &input));
+        }
+    }
+
+    #[test]
+    fn empty_input_classifies_without_panic() {
+        let qnet = tiny_qnet(5);
+        let plan = ExecPlan::compile(&qnet);
+        let mut ctx = ExecCtx::new();
+        let empty: SparseMap<f32> = SparseMap::empty(34, 34, 2);
+        let got = plan.execute(&mut ctx, &empty).to_vec();
+        assert_eq!(got, forward_i8(&qnet, &empty));
+    }
+}

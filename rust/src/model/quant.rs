@@ -209,7 +209,9 @@ mod tests {
         for (q, op) in qnet.per_op.iter().zip(&spec.ops()) {
             if let (Some(q), true) = (q, op.has_weights()) {
                 let act = match *op {
-                    Op::Conv1x1 { act, .. } | Op::ConvKxK { act, .. } | Op::DwConv { act, .. } => act,
+                    Op::Conv1x1 { act, .. } | Op::ConvKxK { act, .. } | Op::DwConv { act, .. } => {
+                        act
+                    }
                     _ => Act::None,
                 };
                 if matches!(act, Act::Relu6) {

@@ -277,7 +277,10 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("esda_w_{}", std::process::id()));
         let path = dir.join("t.esdw");
         let mut m = TensorMap::new();
-        m.insert("a".into(), Tensor::F32 { dims: vec![2, 3], data: vec![1.0, 2.0, 3.0, -4.0, 0.5, 6.0] });
+        m.insert(
+            "a".into(),
+            Tensor::F32 { dims: vec![2, 3], data: vec![1.0, 2.0, 3.0, -4.0, 0.5, 6.0] },
+        );
         m.insert("b".into(), Tensor::I8 { dims: vec![4], data: vec![-128, 0, 1, 127] });
         m.insert("c".into(), Tensor::I32 { dims: vec![2], data: vec![i32::MIN, i32::MAX] });
         write_tensors(&path, &m).unwrap();
@@ -297,8 +300,14 @@ mod tests {
             if ow.w.is_empty() {
                 continue;
             }
-            m.insert(format!("op{i}.w"), Tensor::F32 { dims: vec![ow.w.len()], data: ow.w.clone() });
-            m.insert(format!("op{i}.b"), Tensor::F32 { dims: vec![ow.b.len()], data: ow.b.clone() });
+            m.insert(
+                format!("op{i}.w"),
+                Tensor::F32 { dims: vec![ow.w.len()], data: ow.w.clone() },
+            );
+            m.insert(
+                format!("op{i}.b"),
+                Tensor::F32 { dims: vec![ow.b.len()], data: ow.b.clone() },
+            );
         }
         write_tensors(&path, &m).unwrap();
         let loaded = load_float_weights(&path, &spec).unwrap();

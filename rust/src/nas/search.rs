@@ -50,7 +50,11 @@ pub struct Candidate {
 }
 
 /// Pooled random-feature extraction for the probe.
-fn pooled_features(spec: &NetworkSpec, w: &FloatWeights, input: &crate::sparse::SparseMap<f32>) -> Vec<f32> {
+fn pooled_features(
+    spec: &NetworkSpec,
+    w: &FloatWeights,
+    input: &crate::sparse::SparseMap<f32>,
+) -> Vec<f32> {
     let ops = spec.ops();
     let pool_idx = ops
         .iter()
@@ -145,7 +149,8 @@ pub fn search(profile: &DatasetProfile, space: &SearchSpace, cfg: &SearchConfig)
     // Step 1: sample + hardware-optimize.
     for i in 0..cfg.n_samples {
         let spec = sample_network(space, &mut rng, &format!("{}_cand{}", profile.name, i));
-        let stats = collect_stats_for_profile(&spec, profile, cfg.n_stat_samples, cfg.seed ^ i as u64);
+        let stats =
+            collect_stats_for_profile(&spec, profile, cfg.n_stat_samples, cfg.seed ^ i as u64);
         if let Some(alloc) = allocate(&spec, &stats, &cfg.budget) {
             let throughput = crate::hwopt::power::CLOCK_HZ / alloc.latency.max(1.0);
             candidates.push(Candidate { spec, alloc, throughput, accuracy: None });

@@ -122,7 +122,9 @@ mod tests {
     fn samples_are_diverse() {
         let space = SearchSpace::for_dataset(64, 64, 3);
         let mut rng = Rng::new(2);
-        let nets: Vec<NetworkSpec> = (0..10).map(|i| sample_network(&space, &mut rng, &format!("s{i}"))).collect();
+        let nets: Vec<NetworkSpec> = (0..10)
+            .map(|i| sample_network(&space, &mut rng, &format!("s{i}")))
+            .collect();
         let distinct: std::collections::BTreeSet<String> =
             nets.iter().map(|n| format!("{:?}", n.blocks)).collect();
         assert!(distinct.len() >= 5, "only {} distinct architectures", distinct.len());

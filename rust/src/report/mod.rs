@@ -42,7 +42,8 @@ impl Table {
                 .join("  ")
         };
         let _ = writeln!(out, "{}", line(&self.headers, &widths));
-        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        let sep = "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1));
+        let _ = writeln!(out, "{sep}");
         for r in &self.rows {
             let _ = writeln!(out, "{}", line(r, &widths));
         }
@@ -93,12 +94,16 @@ pub fn serving_table(m: &crate::coordinator::Metrics) -> Table {
     let wall_s = m.wall_seconds();
     let mut t = Table::new(
         "serving — per-worker breakdown",
-        &["worker", "served", "util", "svc p50", "svc p99", "e2e p50", "e2e p95", "e2e p99"],
+        &[
+            "worker", "served", "visits", "util", "svc p50", "svc p99", "e2e p50", "e2e p95",
+            "e2e p99",
+        ],
     );
     for w in &m.per_worker {
         t.row(vec![
             format!("#{}", w.worker),
             w.served.to_string(),
+            w.batches.to_string(),
             format!("{:.0}%", w.utilization(wall_s) * 100.0),
             fmt_secs(w.service.p50),
             fmt_secs(w.service.p99),
@@ -118,6 +123,7 @@ pub fn serving_table(m: &crate::coordinator::Metrics) -> Table {
     t.row(vec![
         "all".to_string(),
         m.total.to_string(),
+        m.batch_sizes.len().to_string(),
         format!("{:.0}%", mean_util * 100.0),
         fmt_secs(svc.p50),
         fmt_secs(svc.p99),
@@ -162,6 +168,7 @@ mod tests {
             busy_s: 0.001,
             service: PercentileReport::from_samples(&[0.001]),
             e2e: PercentileReport::from_samples(&[0.002]),
+            ..Default::default()
         });
         let s = serving_table(&m).render();
         assert!(s.contains("#0"), "{s}");

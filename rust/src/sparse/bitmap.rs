@@ -24,8 +24,19 @@ impl Bitmap {
         Bitmap {
             h,
             w,
-            words: vec![0; (h * w + 63) / 64],
+            words: vec![0; (h * w).div_ceil(64)],
         }
+    }
+
+    /// Reset to an all-clear `w × h` grid, reusing the word storage — the
+    /// arena-execution path (`model::plan`) calls this once per layer, so
+    /// at steady state it must not touch the heap.
+    pub fn reset(&mut self, w: usize, h: usize) {
+        self.w = w;
+        self.h = h;
+        let need = (h * w).div_ceil(64);
+        self.words.clear();
+        self.words.resize(need, 0);
     }
 
     #[inline]
@@ -66,7 +77,8 @@ impl Bitmap {
 
     /// Iterate set coordinates in ravel order.
     pub fn iter_set(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
-        (0..self.h).flat_map(move |y| (0..self.w).filter_map(move |x| self.get(x, y).then_some((x, y))))
+        (0..self.h)
+            .flat_map(move |y| (0..self.w).filter_map(move |x| self.get(x, y).then_some((x, y))))
     }
 
     /// Pattern after a standard k×k stride-1 conv with `pad = (k-1)/2`:
@@ -154,6 +166,23 @@ mod tests {
             }
         }
         b
+    }
+
+    #[test]
+    fn reset_clears_and_resizes() {
+        let mut b = Bitmap::new(8, 8);
+        b.set(3, 3);
+        b.reset(8, 8);
+        assert_eq!(b.count(), 0);
+        b.reset(5, 3);
+        assert_eq!((b.w, b.h), (5, 3));
+        b.set(4, 2);
+        assert_eq!(b.count(), 1);
+        // Growing after a shrink works too.
+        b.reset(16, 16);
+        assert_eq!(b.count(), 0);
+        b.set(15, 15);
+        assert!(b.get(15, 15));
     }
 
     #[test]

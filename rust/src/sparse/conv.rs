@@ -15,7 +15,9 @@
 
 use super::map::SparseMap;
 use super::quant::Requant;
+use super::rulebook::NeighborIndex;
 use super::token::Token;
+use super::Bitmap;
 
 /// Activation applied inside the float layers (int8 layers fold activation
 /// clamps into their [`Requant`]).
@@ -360,52 +362,76 @@ pub fn standard_conv_dense_f32(
 }
 
 // ---------------------------------------------------------------------------
-// int8 hardware-exact path
+// int8 hardware-exact path — arena (`_into`) kernels
+//
+// The compile-once/execute-many engine (`model::plan`) calls these with
+// buffers owned by a per-worker `ExecCtx`, so steady-state inference does
+// zero per-layer heap allocation: outputs are `reset` (capacity kept),
+// neighbor lookups go through a reusable `NeighborIndex` grid, and the
+// int32 accumulator is caller-provided. The classic allocating functions
+// below are thin wrappers over these and remain the numerics oracle the
+// cycle-level simulator and the golden tests check against. Integer
+// arithmetic makes both paths bit-identical by construction.
 // ---------------------------------------------------------------------------
 
-/// 1×1 convolution, int8 in / int8 out, int32 accumulate, dyadic requant.
-/// Weights `w[ci * cout + co]` int8, `bias[co]` int32 (input-scale · w-scale).
-pub fn conv1x1_i8(
+/// Arena variant of [`conv1x1_i8`]: pointwise loop runs ci-outer/co-inner
+/// so the `[ci][co]` weight rows are walked contiguously.
+pub fn conv1x1_i8_into(
     input: &SparseMap<i8>,
     w: &[i8],
     bias: &[i32],
     cout: usize,
     rq: &Requant,
-) -> SparseMap<i8> {
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) {
     let cin = input.c;
     assert_eq!(w.len(), cin * cout);
-    let mut out = SparseMap::empty(input.w, input.h, cout);
-    out.tokens = input.tokens.clone();
-    out.feats.reserve(out.tokens.len() * cout);
+    assert_eq!(bias.len(), cout);
+    out.reset(input.w, input.h, cout);
+    out.tokens.extend_from_slice(&input.tokens);
+    out.feats.reserve(input.nnz() * cout);
+    acc.clear();
+    acc.resize(cout, 0);
     for i in 0..input.nnz() {
         let f = input.feat(i);
-        for co in 0..cout {
-            let mut acc: i32 = bias[co];
-            for ci in 0..cin {
-                acc += f[ci] as i32 * w[ci * cout + co] as i32;
+        acc.copy_from_slice(bias);
+        for ci in 0..cin {
+            let a = f[ci] as i32;
+            let wrow = ci * cout;
+            for co in 0..cout {
+                acc[co] += a * w[wrow + co] as i32;
             }
-            out.feats.push(rq.apply(acc));
+        }
+        for co in 0..cout {
+            out.feats.push(rq.apply(acc[co]));
         }
     }
-    out
 }
 
-/// k×k depthwise submanifold convolution, stride 1, int8.
-pub fn dwconv_kxk_s1_i8(
+/// Arena variant of [`conv_kxk_s1_i8`] (full k×k submanifold, stride 1).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kxk_s1_i8_into(
     input: &SparseMap<i8>,
     k: usize,
     w: &[i8],
     bias: &[i32],
+    cout: usize,
     rq: &Requant,
-) -> SparseMap<i8> {
-    let c = input.c;
-    assert_eq!(w.len(), k * k * c);
+    idx: &mut NeighborIndex,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) {
+    let cin = input.c;
+    assert_eq!(w.len(), k * k * cin * cout);
+    assert_eq!(bias.len(), cout);
     let u = (k - 1) / 2;
-    let bm = input.bitmap();
-    let mut out = SparseMap::empty(input.w, input.h, c);
-    out.tokens = input.tokens.clone();
-    out.feats.reserve(out.tokens.len() * c);
-    let mut acc = vec![0i32; c];
+    idx.build(input);
+    out.reset(input.w, input.h, cout);
+    out.tokens.extend_from_slice(&input.tokens);
+    out.feats.reserve(input.nnz() * cout);
+    acc.clear();
+    acc.resize(cout, 0);
     for t in &input.tokens {
         acc.copy_from_slice(bias);
         for dy in 0..k {
@@ -415,61 +441,12 @@ pub fn dwconv_kxk_s1_i8(
                 if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
                     continue;
                 }
-                let (ix, iy) = (ix as usize, iy as usize);
-                if !bm.get(ix, iy) {
-                    continue;
-                }
-                let ni = input.find(ix as u16, iy as u16).unwrap();
+                let ni = match idx.find(ix as usize, iy as usize) {
+                    Some(i) => i,
+                    None => continue,
+                };
                 let nf = input.feat(ni);
-                let off = dy * k + dx;
-                for ch in 0..c {
-                    acc[ch] += nf[ch] as i32 * w[off * c + ch] as i32;
-                }
-            }
-        }
-        for ch in 0..c {
-            out.feats.push(rq.apply(acc[ch]));
-        }
-    }
-    out
-}
-
-/// k×k full sparse convolution, stride 2, int8.
-pub fn conv_kxk_s2_i8(
-    input: &SparseMap<i8>,
-    k: usize,
-    w: &[i8],
-    bias: &[i32],
-    cout: usize,
-    rq: &Requant,
-) -> SparseMap<i8> {
-    let cin = input.c;
-    assert_eq!(w.len(), k * k * cin * cout);
-    let pad = (k - 1) / 2;
-    let bm = input.bitmap();
-    let ow = (input.w + 1) / 2;
-    let oh = (input.h + 1) / 2;
-    let mut out = SparseMap::empty(ow, oh, cout);
-    out.tokens = downsample_tokens(&bm);
-    out.feats.reserve(out.tokens.len() * cout);
-    let mut acc = vec![0i32; cout];
-    for t in &out.tokens {
-        acc.copy_from_slice(bias);
-        for dy in 0..k {
-            for dx in 0..k {
-                let ix = t.x as isize * 2 + dx as isize - pad as isize;
-                let iy = t.y as isize * 2 + dy as isize - pad as isize;
-                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
-                    continue;
-                }
-                let (ix, iy) = (ix as usize, iy as usize);
-                if !bm.get(ix, iy) {
-                    continue;
-                }
-                let ni = input.find(ix as u16, iy as u16).unwrap();
-                let nf = input.feat(ni);
-                let off = dy * k + dx;
-                let wbase = off * cin * cout;
+                let wbase = (dy * k + dx) * cin * cout;
                 for ci in 0..cin {
                     let a = nf[ci] as i32;
                     let wrow = wbase + ci * cout;
@@ -483,41 +460,43 @@ pub fn conv_kxk_s2_i8(
             out.feats.push(rq.apply(acc[co]));
         }
     }
-    out
 }
 
-/// k×k depthwise sparse convolution, stride 2, int8.
-pub fn dwconv_kxk_s2_i8(
+/// Arena variant of [`dwconv_kxk_s1_i8`].
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv_kxk_s1_i8_into(
     input: &SparseMap<i8>,
     k: usize,
     w: &[i8],
     bias: &[i32],
     rq: &Requant,
-) -> SparseMap<i8> {
+    idx: &mut NeighborIndex,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) {
     let c = input.c;
     assert_eq!(w.len(), k * k * c);
-    let pad = (k - 1) / 2;
-    let bm = input.bitmap();
-    let ow = (input.w + 1) / 2;
-    let oh = (input.h + 1) / 2;
-    let mut out = SparseMap::empty(ow, oh, c);
-    out.tokens = downsample_tokens(&bm);
-    out.feats.reserve(out.tokens.len() * c);
-    let mut acc = vec![0i32; c];
-    for t in &out.tokens {
+    assert_eq!(bias.len(), c);
+    let u = (k - 1) / 2;
+    idx.build(input);
+    out.reset(input.w, input.h, c);
+    out.tokens.extend_from_slice(&input.tokens);
+    out.feats.reserve(input.nnz() * c);
+    acc.clear();
+    acc.resize(c, 0);
+    for t in &input.tokens {
         acc.copy_from_slice(bias);
         for dy in 0..k {
             for dx in 0..k {
-                let ix = t.x as isize * 2 + dx as isize - pad as isize;
-                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                let ix = t.x as isize + dx as isize - u as isize;
+                let iy = t.y as isize + dy as isize - u as isize;
                 if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
                     continue;
                 }
-                let (ix, iy) = (ix as usize, iy as usize);
-                if !bm.get(ix, iy) {
-                    continue;
-                }
-                let ni = input.find(ix as u16, iy as u16).unwrap();
+                let ni = match idx.find(ix as usize, iy as usize) {
+                    Some(i) => i,
+                    None => continue,
+                };
                 let nf = input.feat(ni);
                 let off = dy * k + dx;
                 for ch in 0..c {
@@ -529,6 +508,263 @@ pub fn dwconv_kxk_s2_i8(
             out.feats.push(rq.apply(acc[ch]));
         }
     }
+}
+
+/// Derive the stride-2 output tokens of `input` into `out_tokens`, using
+/// `ds` as bitmap scratch — the arena equivalent of
+/// [`downsample_tokens`]`(&input.bitmap())`.
+fn downsample_tokens_from_map<T>(
+    input: &SparseMap<T>,
+    ds: &mut Bitmap,
+    out_tokens: &mut Vec<Token>,
+) {
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    ds.reset(ow, oh);
+    for t in &input.tokens {
+        ds.set(t.x as usize / 2, t.y as usize / 2);
+    }
+    out_tokens.clear();
+    for (x, y) in ds.iter_set() {
+        out_tokens.push(Token::new(x as u16, y as u16));
+    }
+}
+
+/// Arena variant of [`conv_kxk_s2_i8`] (full k×k sparse conv, stride 2).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kxk_s2_i8_into(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+    idx: &mut NeighborIndex,
+    ds: &mut Bitmap,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) {
+    let cin = input.c;
+    assert_eq!(w.len(), k * k * cin * cout);
+    assert_eq!(bias.len(), cout);
+    let pad = (k - 1) / 2;
+    idx.build(input);
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    out.reset(ow, oh, cout);
+    downsample_tokens_from_map(input, ds, &mut out.tokens);
+    out.feats.reserve(out.tokens.len() * cout);
+    acc.clear();
+    acc.resize(cout, 0);
+    for t in &out.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize * 2 + dx as isize - pad as isize;
+                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let ni = match idx.find(ix as usize, iy as usize) {
+                    Some(i) => i,
+                    None => continue,
+                };
+                let nf = input.feat(ni);
+                let wbase = (dy * k + dx) * cin * cout;
+                for ci in 0..cin {
+                    let a = nf[ci] as i32;
+                    let wrow = wbase + ci * cout;
+                    for co in 0..cout {
+                        acc[co] += a * w[wrow + co] as i32;
+                    }
+                }
+            }
+        }
+        for co in 0..cout {
+            out.feats.push(rq.apply(acc[co]));
+        }
+    }
+}
+
+/// Arena variant of [`dwconv_kxk_s2_i8`].
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv_kxk_s2_i8_into(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    rq: &Requant,
+    idx: &mut NeighborIndex,
+    ds: &mut Bitmap,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) {
+    let c = input.c;
+    assert_eq!(w.len(), k * k * c);
+    assert_eq!(bias.len(), c);
+    let pad = (k - 1) / 2;
+    idx.build(input);
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    out.reset(ow, oh, c);
+    downsample_tokens_from_map(input, ds, &mut out.tokens);
+    out.feats.reserve(out.tokens.len() * c);
+    acc.clear();
+    acc.resize(c, 0);
+    for t in &out.tokens {
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize * 2 + dx as isize - pad as isize;
+                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let ni = match idx.find(ix as usize, iy as usize) {
+                    Some(i) => i,
+                    None => continue,
+                };
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                for ch in 0..c {
+                    acc[ch] += nf[ch] as i32 * w[off * c + ch] as i32;
+                }
+            }
+        }
+        for ch in 0..c {
+            out.feats.push(rq.apply(acc[ch]));
+        }
+    }
+}
+
+/// In-place residual add: `cur += shortcut` with int8 saturation.
+pub fn residual_add_i8_inplace(cur: &mut SparseMap<i8>, shortcut: &SparseMap<i8>) {
+    assert_eq!(cur.tokens, shortcut.tokens, "residual branches must share tokens");
+    assert_eq!(cur.c, shortcut.c);
+    for (o, r) in cur.feats.iter_mut().zip(&shortcut.feats) {
+        *o = (*o as i32 + *r as i32).clamp(-128, 127) as i8;
+    }
+}
+
+/// Arena variant of [`global_avg_pool_i8`]; `acc64` is the caller's i64
+/// accumulator scratch, `out` receives the pooled int32 vector.
+pub fn global_avg_pool_i8_into(input: &SparseMap<i8>, acc64: &mut Vec<i64>, out: &mut Vec<i32>) {
+    let n = input.nnz().max(1) as i64;
+    acc64.clear();
+    acc64.resize(input.c, 0);
+    for i in 0..input.nnz() {
+        for (a, &v) in acc64.iter_mut().zip(input.feat(i)) {
+            *a += v as i64;
+        }
+    }
+    out.clear();
+    out.reserve(input.c);
+    for &s in acc64.iter() {
+        let half = if s >= 0 { n / 2 } else { -(n / 2) };
+        out.push(((s + half) / n) as i32);
+    }
+}
+
+/// Arena FC head over **transposed** weights `wt[co * cin + ci]` (the
+/// `ExecPlan` stores the FC matrix transposed so each output's dot product
+/// walks a contiguous row). Bit-identical to [`fc_i8`] on the untransposed
+/// matrix.
+pub fn fc_i8_t_into(input: &[i32], wt: &[i8], bias: &[i32], cout: usize, out: &mut Vec<i32>) {
+    let cin = input.len();
+    assert_eq!(wt.len(), cin * cout);
+    assert_eq!(bias.len(), cout);
+    out.clear();
+    out.reserve(cout);
+    for co in 0..cout {
+        let mut acc = bias[co];
+        let row = &wt[co * cin..(co + 1) * cin];
+        for ci in 0..cin {
+            acc += input[ci] * row[ci] as i32;
+        }
+        out.push(acc);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 hardware-exact path — classic allocating API (thin wrappers)
+// ---------------------------------------------------------------------------
+
+/// 1×1 convolution, int8 in / int8 out, int32 accumulate, dyadic requant.
+/// Weights `w[ci * cout + co]` int8, `bias[co]` int32 (input-scale · w-scale).
+pub fn conv1x1_i8(
+    input: &SparseMap<i8>,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let mut out = SparseMap::empty(input.w, input.h, cout);
+    let mut acc = Vec::new();
+    conv1x1_i8_into(input, w, bias, cout, rq, &mut acc, &mut out);
+    out
+}
+
+/// Full k×k submanifold convolution, stride 1, int8 (the stem layer).
+pub fn conv_kxk_s1_i8(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let mut out = SparseMap::empty(input.w, input.h, cout);
+    let mut idx = NeighborIndex::new();
+    let mut acc = Vec::new();
+    conv_kxk_s1_i8_into(input, k, w, bias, cout, rq, &mut idx, &mut acc, &mut out);
+    out
+}
+
+/// k×k depthwise submanifold convolution, stride 1, int8.
+pub fn dwconv_kxk_s1_i8(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let mut out = SparseMap::empty(input.w, input.h, input.c);
+    let mut idx = NeighborIndex::new();
+    let mut acc = Vec::new();
+    dwconv_kxk_s1_i8_into(input, k, w, bias, rq, &mut idx, &mut acc, &mut out);
+    out
+}
+
+/// k×k full sparse convolution, stride 2, int8.
+pub fn conv_kxk_s2_i8(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let mut out = SparseMap::empty((input.w + 1) / 2, (input.h + 1) / 2, cout);
+    let mut idx = NeighborIndex::new();
+    let mut ds = Bitmap::new(0, 0);
+    let mut acc = Vec::new();
+    conv_kxk_s2_i8_into(input, k, w, bias, cout, rq, &mut idx, &mut ds, &mut acc, &mut out);
+    out
+}
+
+/// k×k depthwise sparse convolution, stride 2, int8.
+pub fn dwconv_kxk_s2_i8(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    rq: &Requant,
+) -> SparseMap<i8> {
+    let mut out = SparseMap::empty((input.w + 1) / 2, (input.h + 1) / 2, input.c);
+    let mut idx = NeighborIndex::new();
+    let mut ds = Bitmap::new(0, 0);
+    let mut acc = Vec::new();
+    dwconv_kxk_s2_i8_into(input, k, w, bias, rq, &mut idx, &mut ds, &mut acc, &mut out);
     out
 }
 
@@ -536,12 +772,8 @@ pub fn dwconv_kxk_s2_i8(
 /// branches must already be at the same output scale — the quantizer
 /// arranges this, matching HAWQ-V3's shared-scale residual handling).
 pub fn residual_add_i8(a: &SparseMap<i8>, b: &SparseMap<i8>) -> SparseMap<i8> {
-    assert_eq!(a.tokens, b.tokens, "residual branches must share tokens");
-    assert_eq!(a.c, b.c);
     let mut out = a.clone();
-    for (o, r) in out.feats.iter_mut().zip(&b.feats) {
-        *o = (*o as i32 + *r as i32).clamp(-128, 127) as i8;
-    }
+    residual_add_i8_inplace(&mut out, b);
     out
 }
 
@@ -550,19 +782,10 @@ pub fn residual_add_i8(a: &SparseMap<i8>, b: &SparseMap<i8>) -> SparseMap<i8> {
 /// the *token count*, known only at `.end`; hardware uses one int divide —
 /// we model exact integer division with round-half-up).
 pub fn global_avg_pool_i8(input: &SparseMap<i8>) -> Vec<i32> {
-    let n = input.nnz().max(1) as i64;
-    let mut acc = vec![0i64; input.c];
-    for i in 0..input.nnz() {
-        for (a, &v) in acc.iter_mut().zip(input.feat(i)) {
-            *a += v as i64;
-        }
-    }
-    acc.iter()
-        .map(|&s| {
-            let half = if s >= 0 { n / 2 } else { -(n / 2) };
-            ((s + half) / n) as i32
-        })
-        .collect()
+    let mut acc64 = Vec::new();
+    let mut out = Vec::new();
+    global_avg_pool_i8_into(input, &mut acc64, &mut out);
+    out
 }
 
 /// Fully connected head, int8 weights on int32 pooled input; returns raw
@@ -761,6 +984,114 @@ mod tests {
                     );
                 }
             }
+        });
+    }
+
+    fn random_map_i8(g: &mut Gen, w: usize, h: usize, c: usize, p: f64) -> SparseMap<i8> {
+        let mut m: SparseMap<i8> = SparseMap::empty(w, h, c);
+        for y in 0..h {
+            for x in 0..w {
+                if g.chance(p) {
+                    let f: Vec<i8> = (0..c).map(|_| g.i64(-128, 127) as i8).collect();
+                    m.push(Token::new(x as u16, y as u16), &f);
+                }
+            }
+        }
+        m
+    }
+
+    fn rand_w_i8(g: &mut Gen, n: usize) -> Vec<i8> {
+        (0..n).map(|_| g.i64(-128, 127) as i8).collect()
+    }
+
+    /// The arena kernels must produce identical maps when their scratch
+    /// buffers are dirty from a *previous, differently-shaped* layer — the
+    /// exact reuse pattern of `model::plan`'s steady state.
+    #[test]
+    fn arena_kernels_match_allocating_with_dirty_buffers() {
+        check("i8 _into kernels == allocating kernels under reuse", 32, |g| {
+            let rq = Requant::from_scale(0.37, -128, 127);
+            let mut idx = NeighborIndex::new();
+            let mut ds = Bitmap::new(0, 0);
+            let mut acc = Vec::new();
+            let mut out: SparseMap<i8> = SparseMap::empty(0, 0, 0);
+            for _ in 0..3 {
+                let w = g.usize(2, 12);
+                let h = g.usize(2, 12);
+                let cin = g.usize(1, 4);
+                let cout = g.usize(1, 4);
+                let k = 3;
+                let m = random_map_i8(g, w, h, cin, 0.35);
+                let bias: Vec<i32> = (0..cout.max(cin)).map(|_| g.i64(-64, 64) as i32).collect();
+
+                let wt = rand_w_i8(g, cin * cout);
+                conv1x1_i8_into(&m, &wt, &bias[..cout], cout, &rq, &mut acc, &mut out);
+                assert_eq!(out, conv1x1_i8(&m, &wt, &bias[..cout], cout, &rq));
+
+                let wt = rand_w_i8(g, k * k * cin * cout);
+                conv_kxk_s1_i8_into(
+                    &m,
+                    k,
+                    &wt,
+                    &bias[..cout],
+                    cout,
+                    &rq,
+                    &mut idx,
+                    &mut acc,
+                    &mut out,
+                );
+                assert_eq!(out, conv_kxk_s1_i8(&m, k, &wt, &bias[..cout], cout, &rq));
+                conv_kxk_s2_i8_into(
+                    &m,
+                    k,
+                    &wt,
+                    &bias[..cout],
+                    cout,
+                    &rq,
+                    &mut idx,
+                    &mut ds,
+                    &mut acc,
+                    &mut out,
+                );
+                assert_eq!(out, conv_kxk_s2_i8(&m, k, &wt, &bias[..cout], cout, &rq));
+
+                let wt = rand_w_i8(g, k * k * cin);
+                dwconv_kxk_s1_i8_into(&m, k, &wt, &bias[..cin], &rq, &mut idx, &mut acc, &mut out);
+                assert_eq!(out, dwconv_kxk_s1_i8(&m, k, &wt, &bias[..cin], &rq));
+                dwconv_kxk_s2_i8_into(
+                    &m,
+                    k,
+                    &wt,
+                    &bias[..cin],
+                    &rq,
+                    &mut idx,
+                    &mut ds,
+                    &mut acc,
+                    &mut out,
+                );
+                assert_eq!(out, dwconv_kxk_s2_i8(&m, k, &wt, &bias[..cin], &rq));
+            }
+        });
+    }
+
+    /// FC over transposed weights must equal the classic FC bit-for-bit.
+    #[test]
+    fn fc_transposed_matches_classic() {
+        check("fc_i8_t_into == fc_i8", 48, |g| {
+            let cin = g.usize(1, 8);
+            let cout = g.usize(1, 6);
+            let input: Vec<i32> = (0..cin).map(|_| g.i64(-1000, 1000) as i32).collect();
+            let w = rand_w_i8(g, cin * cout);
+            let bias: Vec<i32> = (0..cout).map(|_| g.i64(-100, 100) as i32).collect();
+            let mut wt = vec![0i8; cin * cout];
+            for ci in 0..cin {
+                for co in 0..cout {
+                    wt[co * cin + ci] = w[ci * cout + co];
+                }
+            }
+            let mut got = Vec::new();
+            fc_i8_t_into(&input, &wt, &bias, cout, &mut got);
+            assert_eq!(got, fc_i8(&input, &w, &bias, cout));
         });
     }
 

@@ -27,6 +27,30 @@ impl<T: Copy + Default + PartialEq> SparseMap<T> {
         self.tokens.len()
     }
 
+    /// Reset to an empty `w × h × c` map, keeping the token/feature
+    /// allocations — the arena-execution path (`model::plan`) resets its
+    /// double buffers once per layer, so at steady state this must not
+    /// touch the heap.
+    pub fn reset(&mut self, w: usize, h: usize, c: usize) {
+        self.w = w;
+        self.h = h;
+        self.c = c;
+        self.tokens.clear();
+        self.feats.clear();
+    }
+
+    /// Copy `src` into `self`, reusing allocations (unlike `Clone::clone`,
+    /// which builds fresh vectors).
+    pub fn copy_from(&mut self, src: &SparseMap<T>) {
+        self.w = src.w;
+        self.h = src.h;
+        self.c = src.c;
+        self.tokens.clear();
+        self.tokens.extend_from_slice(&src.tokens);
+        self.feats.clear();
+        self.feats.extend_from_slice(&src.feats);
+    }
+
     pub fn nz_ratio(&self) -> f64 {
         self.nnz() as f64 / (self.w * self.h) as f64
     }
@@ -140,6 +164,25 @@ mod tests {
             }
         }
         m
+    }
+
+    #[test]
+    fn reset_and_copy_from_reuse_storage() {
+        let mut rng = Rng::new(11);
+        let src = random_map(&mut rng, 9, 7, 3, 0.4);
+        let mut dst: SparseMap<f32> = SparseMap::empty(0, 0, 0);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        let cap_t = dst.tokens.capacity();
+        let cap_f = dst.feats.capacity();
+        dst.reset(4, 4, 1);
+        assert_eq!(dst.nnz(), 0);
+        assert_eq!((dst.w, dst.h, dst.c), (4, 4, 1));
+        // A same-or-smaller copy after reset keeps the capacities.
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.tokens.capacity(), cap_t);
+        assert_eq!(dst.feats.capacity(), cap_f);
     }
 
     #[test]

@@ -33,6 +33,46 @@ pub struct RulebookStats {
     pub macs: usize,
 }
 
+/// Dense coordinate → token-index lookup, reused across layers — the
+/// execution engine's "rulebook scratch". One O(nnz) rebuild per layer
+/// replaces a hash probe (rulebook) or binary search (`SparseMap::find`)
+/// per (token, offset) pair, and the grid storage is reused so steady-state
+/// rebuilds never touch the heap. Entries store `index + 1`; a zero-filled
+/// grid means "empty".
+#[derive(Debug, Default)]
+pub struct NeighborIndex {
+    grid: Vec<u32>,
+    w: usize,
+    h: usize,
+}
+
+impl NeighborIndex {
+    pub fn new() -> NeighborIndex {
+        NeighborIndex { grid: Vec::new(), w: 0, h: 0 }
+    }
+
+    /// Point the index at `m`'s tokens, reusing the grid storage.
+    pub fn build<T>(&mut self, m: &SparseMap<T>) {
+        self.w = m.w;
+        self.h = m.h;
+        self.grid.clear();
+        self.grid.resize(m.w * m.h, 0);
+        for (i, t) in m.tokens.iter().enumerate() {
+            self.grid[t.y as usize * m.w + t.x as usize] = i as u32 + 1;
+        }
+    }
+
+    /// Token index at `(x, y)`, if occupied.
+    #[inline]
+    pub fn find(&self, x: usize, y: usize) -> Option<usize> {
+        debug_assert!(x < self.w && y < self.h, "({x},{y}) outside {}×{}", self.w, self.h);
+        match self.grid[y * self.w + x] {
+            0 => None,
+            i => Some(i as usize - 1),
+        }
+    }
+}
+
 /// Rulebook for one layer: per kernel offset, the (in, out) index pairs.
 pub struct Rulebook {
     pub k: usize,
@@ -224,6 +264,26 @@ mod tests {
             assert_eq!(got.tokens, want.tokens);
             for (a, e) in got.feats.iter().zip(&want.feats) {
                 assert!((a - e).abs() < 1e-4);
+            }
+        });
+    }
+
+    /// The grid index must agree with the binary-search `find` on every
+    /// coordinate, including across rebuilds with different geometry.
+    #[test]
+    fn neighbor_index_matches_map_find() {
+        check("NeighborIndex == SparseMap::find", 64, |g| {
+            let mut idx = NeighborIndex::new();
+            for _ in 0..2 {
+                let w = g.usize(1, 14);
+                let h = g.usize(1, 14);
+                let m = random_map(g.rng(), w, h, 1, 0.3);
+                idx.build(&m);
+                for y in 0..h {
+                    for x in 0..w {
+                        assert_eq!(idx.find(x, y), m.find(x as u16, y as u16), "({x},{y})");
+                    }
+                }
             }
         });
     }

@@ -16,7 +16,10 @@ pub struct Args {
 impl Args {
     /// Parse from an iterator of raw arguments (usually `std::env::args().skip(1)`).
     /// `bool_flags` lists flags that take no value.
-    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
         let mut out = Args::default();
         let mut it = raw.into_iter().peekable();
         while let Some(a) = it.next() {

@@ -14,11 +14,14 @@
 //!   artifact metadata exchanged with the python compile path.
 //! - [`cli`]: flag parsing for the `esda` binary and the examples.
 //! - [`stats`]: summary statistics and timing helpers shared by the benches.
+//! - [`alloc`]: a counting global-allocator wrapper that proves the
+//!   zero-allocation steady state of the arena execution engine.
 pub mod rng;
 pub mod propcheck;
 pub mod json;
 pub mod cli;
 pub mod stats;
+pub mod alloc;
 
 pub use rng::Rng;
 

@@ -1,0 +1,171 @@
+//! Compile-once/execute-many engine: plan/oracle equivalence and the
+//! zero-allocation steady state.
+//!
+//! - Property: `ExecPlan` execution is **bit-exact** with the allocating
+//!   per-op oracle (`model::exec::forward_i8`) across random networks and
+//!   random sparse inputs, with one `ExecCtx` arena reused throughout.
+//! - Batching: `Backend::classify_batch` equals the sequential path.
+//! - Allocation: after warm-up, plan execution performs zero heap
+//!   allocations (counted by a thread-local counting global allocator).
+
+use esda::coordinator::{Backend, Functional};
+use esda::events::{repr::histogram2_norm, DatasetProfile};
+use esda::model::exec::{classify_i8, forward_i8};
+use esda::model::quant::{quantize_network, QuantizedNet};
+use esda::model::weights::FloatWeights;
+use esda::model::{Act, Block, ExecCtx, ExecPlan, NetworkSpec};
+use esda::sparse::{SparseMap, Token};
+use esda::util::alloc::CountingAllocator;
+use esda::util::propcheck::{check, Gen};
+use esda::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn random_map(rng: &mut Rng, w: usize, h: usize, c: usize, p: f64) -> SparseMap<f32> {
+    let mut m = SparseMap::empty(w, h, c);
+    for y in 0..h {
+        for x in 0..w {
+            if rng.chance(p) {
+                let f: Vec<f32> = (0..c).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+                m.push(Token::new(x as u16, y as u16), &f);
+            }
+        }
+    }
+    m
+}
+
+/// A random compact classification network: stem (stride 1 or 2), a few
+/// MBConv blocks (random width/expansion/stride; equal widths at stride 1
+/// produce residual fork/add pairs), an optional channel mixer, PoolFc.
+fn random_spec(g: &mut Gen) -> NetworkSpec {
+    let w = g.usize(8, 20);
+    let h = g.usize(8, 20);
+    let n_classes = g.usize(2, 5);
+    let stem_cout = g.usize(2, 4);
+    let mut blocks = vec![Block::Stem {
+        k: 3,
+        cout: stem_cout,
+        stride: if g.chance(0.25) { 2 } else { 1 },
+    }];
+    let mut prev = stem_cout;
+    for _ in 0..g.usize(1, 3) {
+        let cout = if g.chance(0.4) { prev } else { g.usize(2, 6) };
+        blocks.push(Block::MBConv {
+            cout,
+            expand: g.usize(1, 2),
+            k: 3,
+            stride: if g.chance(0.3) { 2 } else { 1 },
+        });
+        prev = cout;
+    }
+    if g.chance(0.5) {
+        blocks.push(Block::Conv1x1 { cout: g.usize(2, 6), act: Act::Relu6 });
+    }
+    blocks.push(Block::PoolFc);
+    NetworkSpec { name: "prop".into(), w, h, cin: 2, n_classes, blocks }
+}
+
+fn quantized(g: &mut Gen, spec: &NetworkSpec) -> QuantizedNet {
+    let weights = FloatWeights::random(spec, g.u64(0..=u64::MAX - 1));
+    let calib: Vec<SparseMap<f32>> = (0..2)
+        .map(|_| random_map(g.rng(), spec.w, spec.h, spec.cin, 0.3))
+        .collect();
+    quantize_network(spec, &weights, &calib)
+}
+
+/// The tentpole property: plan execution is bit-exact with the oracle on
+/// random networks and random inputs, including through arena reuse (one
+/// context serves every case's inputs in sequence, and sparse/empty inputs
+/// exercise the downsample/pool edge cases).
+#[test]
+fn plan_is_bit_exact_with_oracle_on_random_networks() {
+    check("ExecPlan == forward_i8 (bit-exact)", 24, |g| {
+        let spec = random_spec(g);
+        let qnet = quantized(g, &spec);
+        let plan = ExecPlan::compile(&qnet);
+        // One arena serves all of this case's inputs — reuse is part of
+        // the property (cross-case reuse is covered in model::plan tests).
+        let mut ctx = ExecCtx::new();
+        for i in 0..3 {
+            let density = [0.0, 0.15, 0.45][i % 3];
+            let input = random_map(g.rng(), spec.w, spec.h, spec.cin, density);
+            let want = forward_i8(&qnet, &input);
+            let got = plan.execute(&mut ctx, &input).to_vec();
+            assert_eq!(got, want, "logits diverged (case {i}, density {density})");
+            assert_eq!(
+                plan.classify(&mut ctx, &input),
+                classify_i8(&qnet, &input),
+                "classification diverged (case {i})"
+            );
+        }
+    });
+}
+
+/// Batched and sequential classification agree through the `Backend`
+/// trait, for every batch size.
+#[test]
+fn classify_batch_prediction_equality() {
+    let profile = DatasetProfile::n_mnist();
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 3);
+    let mut rng = Rng::new(9);
+    let mk = |rng: &mut Rng, i: usize| {
+        let es = profile.sample(i % profile.n_classes, rng);
+        histogram2_norm(&es, profile.w, profile.h, 8.0)
+    };
+    let calib: Vec<SparseMap<f32>> = (0..3).map(|i| mk(&mut rng, i)).collect();
+    let backend = Functional::new(quantize_network(&spec, &weights, &calib));
+    let maps: Vec<SparseMap<f32>> = (0..12).map(|i| mk(&mut rng, i)).collect();
+    let seq: Vec<usize> = maps.iter().map(|m| backend.classify(m).unwrap().pred).collect();
+    for chunk in [1usize, 4, 16] {
+        let mut batched = Vec::new();
+        for maps in maps.chunks(chunk) {
+            for r in backend.classify_batch(maps) {
+                batched.push(r.unwrap().pred);
+            }
+        }
+        assert_eq!(batched, seq, "batch size {chunk} changed predictions");
+    }
+}
+
+/// The acceptance bar for the arena: once warmed, executing the plan makes
+/// **zero** heap allocations per inference.
+#[test]
+fn steady_state_execution_is_allocation_free() {
+    let profile = DatasetProfile::n_mnist();
+    let spec = NetworkSpec::compact("compact", profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 11);
+    let mut rng = Rng::new(21);
+    let inputs: Vec<SparseMap<f32>> = (0..4)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &weights, &inputs);
+    let plan = ExecPlan::compile(&qnet);
+    let mut ctx = ExecCtx::new();
+    // Warm-up pass sizes every arena buffer.
+    for m in &inputs {
+        plan.classify(&mut ctx, m);
+    }
+    let before = CountingAllocator::thread_allocs();
+    let mut preds = 0usize;
+    for _ in 0..8 {
+        for m in &inputs {
+            preds += plan.classify(&mut ctx, m);
+        }
+    }
+    let after = CountingAllocator::thread_allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state arena execution touched the heap ({} allocs over {} inferences)",
+        after - before,
+        8 * inputs.len()
+    );
+    // Keep the classification results observable so the loop cannot be
+    // optimized away.
+    assert!(preds < 8 * inputs.len() * profile.n_classes);
+}

@@ -14,7 +14,10 @@ use esda::sparse::SparseMap;
 
 const STEM: &str = "compact_n_mnist";
 
-fn load_golden() -> Option<(NetworkSpec, esda::model::weights::FloatWeights, Vec<SparseMap<f32>>, Vec<Vec<f32>>)> {
+type Golden =
+    (NetworkSpec, esda::model::weights::FloatWeights, Vec<SparseMap<f32>>, Vec<Vec<f32>>);
+
+fn load_golden() -> Option<Golden> {
     if !artifact_available(STEM) {
         eprintln!("skipping: run `make artifacts` to build artifacts/{STEM}.*");
         return None;

@@ -48,6 +48,7 @@ fn pool_prediction_multiset_is_replica_invariant() {
         workers,
         queue_depth: 4,
         drop_policy: DropPolicy::Block,
+        batch: 1,
     };
     let single = run_server(&profile, &backend, &cfg(1)).expect("1-worker run");
     assert_eq!(single.metrics.total, 24);
@@ -81,6 +82,7 @@ fn simulator_pool_is_replica_invariant() {
         workers,
         queue_depth: 2,
         drop_policy: DropPolicy::Block,
+        batch: 1,
     };
     let a = run_server(&profile, &backend, &cfg(1)).expect("1-worker run");
     let b = run_server(&profile, &backend, &cfg(3)).expect("3-worker run");
@@ -139,6 +141,7 @@ fn saturated_queue_sheds_load_without_deadlock() {
         workers: 1,
         queue_depth: 1,
         drop_policy: DropPolicy::DropOldest,
+        batch: 1,
     };
     let r = run_server(&profile, &backend, &cfg).expect("shedding run must complete");
     let m = &r.metrics;
@@ -164,8 +167,46 @@ fn blocking_admission_is_lossless_under_saturation() {
         workers: 2,
         queue_depth: 1,
         drop_policy: DropPolicy::Block,
+        batch: 1,
     };
     let r = run_server(&profile, &backend, &cfg).expect("blocking run");
     assert_eq!(r.metrics.total, 16);
     assert_eq!(r.metrics.dropped, 0);
+}
+
+/// Micro-batching must not change what gets predicted: the prediction
+/// multiset is identical across batch caps (the batched-vs-sequential
+/// equality the compile-once/execute-many engine guarantees), and the
+/// recorded batch sizes always partition the served stream.
+#[test]
+fn batched_pool_prediction_multiset_is_batch_invariant() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let cfg = |batch: usize| ServerConfig {
+        n_requests: 24,
+        seed: 42,
+        clip: 8.0,
+        workers: 3,
+        queue_depth: 8,
+        drop_policy: DropPolicy::Block,
+        batch,
+    };
+    let mut base: Option<Vec<(usize, usize)>> = None;
+    for batch in [1usize, 4, 16] {
+        let r = run_server(&profile, &backend, &cfg(batch)).expect("batched run");
+        assert_eq!(r.metrics.total, 24, "batch cap {batch}");
+        assert_eq!(r.metrics.dropped, 0);
+        let served: usize = r.metrics.batch_sizes.iter().sum();
+        assert_eq!(served, 24, "batch sizes must partition the stream (cap {batch})");
+        assert!(
+            r.metrics.batch_sizes.iter().all(|&b| b >= 1 && b <= batch),
+            "visit outside [1, {batch}]: {:?}",
+            r.metrics.batch_sizes
+        );
+        let ms = prediction_multiset(&r);
+        match &base {
+            None => base = Some(ms),
+            Some(b) => assert_eq!(&ms, b, "batch cap {batch} changed predictions"),
+        }
+    }
 }
