@@ -184,6 +184,126 @@ impl Backend for Dense {
     }
 }
 
+/// How one replica class of a heterogeneous pool is instantiated and
+/// scheduled: a display name, a replica count, a batch affinity (the
+/// micro-batch cap its workers drain — dense engines want large batches,
+/// the cycle simulator wants batch 1), and a **factory** that builds one
+/// independent backend instance per replica.
+///
+/// Per-replica instances are what make heterogeneous pools truly parallel:
+/// the homogeneous [`run_server`](super::serve::run_server) path shares a
+/// single backend across workers, which serializes the [`Dense`] engine
+/// behind its mutex — a pool built from `ReplicaSpec::dense` loads one
+/// engine per replica instead.
+pub struct ReplicaSpec {
+    class: String,
+    count: usize,
+    batch: usize,
+    #[allow(clippy::type_complexity)]
+    factory: Box<dyn Fn(usize) -> Result<Box<dyn Backend>, BackendError> + Send + Sync>,
+}
+
+impl ReplicaSpec {
+    /// A class built from an arbitrary factory; `factory(i)` constructs
+    /// replica `i`'s backend instance.
+    pub fn new(
+        class: impl Into<String>,
+        count: usize,
+        batch: usize,
+        factory: impl Fn(usize) -> Result<Box<dyn Backend>, BackendError> + Send + Sync + 'static,
+    ) -> ReplicaSpec {
+        ReplicaSpec { class: class.into(), count, batch: batch.max(1), factory: Box::new(factory) }
+    }
+
+    /// Functional int8 replicas (each compiles its own [`ExecPlan`]).
+    /// Default batch affinity 4: the arena amortizes per-visit setup.
+    pub fn functional(count: usize, qnet: QuantizedNet) -> ReplicaSpec {
+        ReplicaSpec::new("func", count, 4, move |_| Ok(Box::new(Functional::new(qnet.clone()))))
+    }
+
+    /// Cycle-level simulator replicas. Batch affinity 1: the simulator
+    /// models the paper's batch-1 FPGA deployment and amortizes nothing
+    /// across a visit.
+    pub fn simulator(count: usize, qnet: QuantizedNet, cfg: HwConfig) -> ReplicaSpec {
+        ReplicaSpec::new("sim", count, 1, move |_| {
+            Ok(Box::new(Simulator::new(qnet.clone(), cfg.clone())))
+        })
+    }
+
+    /// PJRT dense replicas — one engine loaded **per replica**, so dense
+    /// inference finally runs in parallel instead of queueing on a single
+    /// shared mutex. Batch affinity 16: the dense engine is happiest
+    /// amortizing its dispatch over large batches.
+    pub fn dense(count: usize, hlo_path: std::path::PathBuf) -> ReplicaSpec {
+        ReplicaSpec::new("dense", count, 16, move |i| {
+            let engine = crate::runtime::Engine::load(&hlo_path)
+                .map_err(|e| BackendError(format!("dense replica {i}: {e}")))?;
+            Ok(Box::new(Dense::new(engine)))
+        })
+    }
+
+    /// Override the batch affinity (e.g. from a `class=count@batch` CLI
+    /// spec entry).
+    pub fn with_batch(mut self, batch: usize) -> ReplicaSpec {
+        self.batch = batch.max(1);
+        self
+    }
+}
+
+/// One instantiated replica class of a [`ReplicaPool`].
+pub struct PoolClass {
+    /// Display name (metrics/report key).
+    pub name: String,
+    /// Micro-batch cap this class's workers drain per accelerator visit.
+    pub batch: usize,
+    /// Independent backend instances, one per worker replica.
+    pub replicas: Vec<Box<dyn Backend>>,
+}
+
+/// A heterogeneous accelerator pool: differently-shaped replica classes
+/// that coexist behind one serving runtime, with the router picking a
+/// class per request (see [`run_pool`](super::serve::run_pool)).
+pub struct ReplicaPool {
+    pub classes: Vec<PoolClass>,
+}
+
+impl ReplicaPool {
+    /// Instantiate every replica of every class via its factory.
+    pub fn build(specs: Vec<ReplicaSpec>) -> Result<ReplicaPool, BackendError> {
+        if specs.is_empty() {
+            return Err(BackendError("pool needs at least one replica class".into()));
+        }
+        let mut classes = Vec::with_capacity(specs.len());
+        for spec in specs {
+            if spec.count == 0 {
+                return Err(BackendError(format!(
+                    "replica class '{}' needs a count >= 1",
+                    spec.class
+                )));
+            }
+            // Class names key the metrics/report rows; duplicates would
+            // render as indistinguishable rows and break name lookups.
+            if classes.iter().any(|c: &PoolClass| c.name == spec.class) {
+                return Err(BackendError(format!(
+                    "duplicate replica class '{}' in pool spec",
+                    spec.class
+                )));
+            }
+            let mut replicas = Vec::with_capacity(spec.count);
+            for i in 0..spec.count {
+                replicas.push((spec.factory)(i)?);
+            }
+            classes.push(PoolClass { name: spec.class, batch: spec.batch, replicas });
+        }
+        Ok(ReplicaPool { classes })
+    }
+
+    /// Total worker replicas across all classes.
+    pub fn n_replicas(&self) -> usize {
+        self.classes.iter().map(|c| c.replicas.len()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +375,53 @@ mod tests {
             assert_eq!(batched, seq, "{}", backend.name());
         }
         assert!(func.classify_batch(&[]).is_empty());
+    }
+
+    /// The pool builder instantiates one independent backend per replica,
+    /// applies class batch affinities, and rejects degenerate specs.
+    #[test]
+    fn replica_pool_builds_per_replica_instances() {
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let n_ops = qnet.spec.ops().len();
+        let pool = ReplicaPool::build(vec![
+            ReplicaSpec::functional(2, qnet.clone()),
+            ReplicaSpec::simulator(1, qnet.clone(), HwConfig::uniform(n_ops, 8)),
+        ])
+        .unwrap();
+        assert_eq!(pool.classes.len(), 2);
+        assert_eq!(pool.n_replicas(), 3);
+        assert_eq!(pool.classes[0].name, "func");
+        assert_eq!(pool.classes[0].batch, 4, "functional batch affinity");
+        assert_eq!(pool.classes[0].replicas.len(), 2);
+        assert_eq!(pool.classes[1].name, "sim");
+        assert_eq!(pool.classes[1].batch, 1, "the simulator is a batch-1 device");
+
+        // `with_batch` overrides the affinity (floored at 1).
+        let spec = ReplicaSpec::functional(1, qnet.clone()).with_batch(0);
+        let pool = ReplicaPool::build(vec![spec]).unwrap();
+        assert_eq!(pool.classes[0].batch, 1);
+
+        assert!(ReplicaPool::build(vec![]).is_err(), "empty pool must be rejected");
+        let zero = ReplicaSpec::functional(0, qnet.clone());
+        assert!(ReplicaPool::build(vec![zero]).is_err(), "zero-count class must be rejected");
+
+        // Duplicate class names would render indistinguishable report rows
+        // and break per-class lookups.
+        let dup =
+            vec![ReplicaSpec::functional(1, qnet.clone()), ReplicaSpec::functional(1, qnet)];
+        let err = ReplicaPool::build(dup).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    /// Factory errors propagate out of the builder with the replica index.
+    #[test]
+    fn replica_pool_surfaces_factory_errors() {
+        let spec = ReplicaSpec::new("broken", 1, 1, |i| {
+            Err(BackendError(format!("replica {i} failed to init")))
+        });
+        let err = ReplicaPool::build(vec![spec]).unwrap_err();
+        assert!(err.to_string().contains("replica 0"), "{err}");
     }
 
     /// Backends are shareable across threads (the pool's core contract).

@@ -1,8 +1,10 @@
 //! Latency/throughput metrics for the serving runtime: per-request
 //! timings, admission-control accounting (drops, in-flight), per-worker
-//! utilization, and p50/p95/p99 percentile summaries.
+//! and per-class utilization, p50/p95/p99 percentile summaries, and the
+//! [`CostModel`] the heterogeneous router predicts service times with.
 
 use crate::util::stats::Summary;
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Per-request timing record.
@@ -63,11 +65,117 @@ impl PercentileReport {
     }
 }
 
+/// Per-class service-time predictor for the heterogeneous router: an EWMA
+/// of observed per-request service seconds, bucketed by input sparsity
+/// (log2 of the map's nonzero count), plus a class-wide EWMA fallback for
+/// buckets with no observation yet. "Seeded from first requests": until a
+/// class has served anything, [`CostModel::predict`] returns `None` and
+/// the router probes it instead of trusting a made-up number.
+#[derive(Debug, Default)]
+pub struct CostModel {
+    state: Mutex<CostState>,
+}
+
+#[derive(Debug, Default)]
+struct CostState {
+    /// Class-wide EWMA over every observation (bucket fallback).
+    global: Option<f64>,
+    /// Per-bucket EWMAs, indexed by [`CostModel::bucket_of`].
+    buckets: Vec<Option<f64>>,
+}
+
+impl CostModel {
+    /// EWMA smoothing factor: heavy enough that a one-off hiccup doesn't
+    /// repaint the class, light enough to track real drift within a run.
+    pub const ALPHA: f64 = 0.25;
+
+    pub fn new() -> CostModel {
+        CostModel::default()
+    }
+
+    /// Event-count bucket: log2 of the input's nonzero count (empty maps
+    /// share bucket 1 with single-event maps). Sparse service time scales
+    /// with nnz, so log buckets give the predictor resolution where it
+    /// matters without a bucket per exact count.
+    pub fn bucket_of(nnz: usize) -> usize {
+        (usize::BITS - nnz.max(1).leading_zeros()) as usize
+    }
+
+    /// Predicted per-request service seconds for `bucket`: the bucket EWMA
+    /// when seeded, else the class-wide EWMA, else `None` (class never
+    /// observed — the router must probe, not trust).
+    pub fn predict(&self, bucket: usize) -> Option<f64> {
+        let st = self.state.lock().unwrap();
+        st.buckets.get(bucket).copied().flatten().or(st.global)
+    }
+
+    /// Fold one observed per-request service time into the model.
+    pub fn observe(&self, bucket: usize, service_s: f64) {
+        if !service_s.is_finite() || service_s < 0.0 {
+            return;
+        }
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        if st.buckets.len() <= bucket {
+            st.buckets.resize(bucket + 1, None);
+        }
+        for slot in [&mut st.buckets[bucket], &mut st.global] {
+            *slot = Some(match *slot {
+                Some(v) => v + Self::ALPHA * (service_s - v),
+                None => service_s,
+            });
+        }
+    }
+}
+
+/// Per-class accounting for the heterogeneous replica pool: who served
+/// what, at what batch shape, and how well the routing cost model
+/// predicted reality.
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    /// Replica-class display name (e.g. `func`, `sim`, `dense`).
+    pub class: String,
+    /// Worker replicas in this class.
+    pub replicas: usize,
+    /// Requests this class served.
+    pub served: usize,
+    /// Accelerator visits (micro-batches) this class made.
+    pub batches: usize,
+    /// Total accelerator-busy seconds across the class's replicas.
+    pub busy_s: f64,
+    /// Batch-size percentiles across this class's visits.
+    pub batch: PercentileReport,
+    /// Service-latency percentiles for requests this class served.
+    pub service: PercentileReport,
+    /// Mean relative routing-cost error `|predicted − actual| / actual`
+    /// over requests routed with a seeded predictor (NaN when none were).
+    pub cost_err: f64,
+    /// Requests routed to this class before its cost model had any
+    /// observation (the probe traffic that seeds the EWMA).
+    pub unseeded: usize,
+}
+
+impl ClassStats {
+    /// Mean fraction of the wall-clock interval this class's replicas
+    /// spent serving.
+    pub fn utilization(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 || self.replicas == 0 {
+            return f64::NAN;
+        }
+        self.busy_s / (wall_s * self.replicas as f64)
+    }
+}
+
 /// Per-worker accounting for the replicated accelerator pool.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerStats {
     /// Worker replica index.
     pub worker: usize,
+    /// Replica class this worker belongs to. The serving runtime always
+    /// fills it (the homogeneous path uses the backend's `name()`); it is
+    /// empty only on hand-built `Default` values, which the report renders
+    /// as a dash.
+    pub class: String,
     /// Requests this replica served.
     pub served: usize,
     /// Accelerator visits (micro-batches) this replica made;
@@ -107,6 +215,9 @@ pub struct Metrics {
     /// Per-replica stats, one entry per pool worker (the single-
     /// accelerator `run_pipeline` facade has exactly one).
     pub per_worker: Vec<WorkerStats>,
+    /// Per-class stats, one entry per replica class of the heterogeneous
+    /// pool (a single entry for the homogeneous `run_server` path).
+    pub per_class: Vec<ClassStats>,
     /// Size of every micro-batch any worker pulled from the ingress queue
     /// (one entry per accelerator visit, across all workers).
     pub batch_sizes: Vec<usize>,
@@ -124,6 +235,7 @@ impl Default for Metrics {
             total: 0,
             dropped: 0,
             per_worker: Vec::new(),
+            per_class: Vec::new(),
             batch_sizes: Vec::new(),
             wall_s: 0.0,
         }
@@ -326,5 +438,53 @@ mod tests {
         let w = WorkerStats { worker: 0, served: 10, busy_s: 0.5, ..Default::default() };
         assert!((w.utilization(1.0) - 0.5).abs() < 1e-12);
         assert!(w.utilization(0.0).is_nan());
+    }
+
+    #[test]
+    fn class_utilization_divides_by_replicas() {
+        let c = ClassStats {
+            class: "func".into(),
+            replicas: 2,
+            served: 8,
+            batches: 4,
+            busy_s: 1.0,
+            batch: PercentileReport::default(),
+            service: PercentileReport::default(),
+            cost_err: f64::NAN,
+            unseeded: 0,
+        };
+        assert!((c.utilization(1.0) - 0.5).abs() < 1e-12);
+        assert!(c.utilization(0.0).is_nan());
+    }
+
+    #[test]
+    fn cost_model_buckets_by_log2_nnz() {
+        assert_eq!(CostModel::bucket_of(0), 1);
+        assert_eq!(CostModel::bucket_of(1), 1);
+        assert_eq!(CostModel::bucket_of(2), 2);
+        assert_eq!(CostModel::bucket_of(3), 2);
+        assert_eq!(CostModel::bucket_of(1024), 11);
+        assert!(CostModel::bucket_of(usize::MAX) as u32 <= usize::BITS);
+    }
+
+    /// Unseeded ⇒ `None`; a bucket observation seeds that bucket; other
+    /// buckets fall back to the class-wide EWMA; observations move the
+    /// estimate toward recent reality.
+    #[test]
+    fn cost_model_seeds_and_tracks() {
+        let m = CostModel::new();
+        assert_eq!(m.predict(3), None, "never-observed class must not invent a cost");
+        m.observe(3, 0.010);
+        assert!((m.predict(3).unwrap() - 0.010).abs() < 1e-12);
+        // A different bucket falls back to the class-wide estimate.
+        assert!((m.predict(7).unwrap() - 0.010).abs() < 1e-12);
+        // EWMA moves toward a faster observation but doesn't jump to it.
+        m.observe(3, 0.002);
+        let p = m.predict(3).unwrap();
+        assert!(p < 0.010 && p > 0.002, "EWMA out of range: {p}");
+        // Garbage observations are ignored.
+        m.observe(3, f64::NAN);
+        m.observe(3, -1.0);
+        assert!((m.predict(3).unwrap() - p).abs() < 1e-15);
     }
 }

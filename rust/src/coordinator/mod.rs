@@ -10,24 +10,32 @@
 //!
 //! Stages run on std threads connected by bounded queues (backpressure),
 //! since the offline build vendors no async runtime. The accelerator stage
-//! is a pool of N replicas sharing one [`Backend`] trait object; the
-//! ingress queue applies admission control (block vs drop-oldest) and the
-//! merged [`metrics::Metrics`] report per-worker utilization plus
-//! p50/p95/p99 latency percentiles.
+//! is a pool of replicas — homogeneous (N workers sharing one [`Backend`]
+//! trait object) or heterogeneous (a [`ReplicaPool`] of per-replica
+//! instances across classes, with a cost-aware router picking a class per
+//! request). The ingress queue applies admission control (block vs
+//! drop-oldest) and the merged [`metrics::Metrics`] report per-worker and
+//! per-class utilization plus p50/p95/p99 latency percentiles.
 //!
 //! [`run_pipeline`] is the single-accelerator batch-1 facade (the paper's
-//! deployment); [`run_server`] is the replicated runtime.
+//! deployment); [`run_server`] is the replicated homogeneous runtime;
+//! [`run_pool`] is the heterogeneous cost-aware runtime.
 pub mod backend;
 pub mod metrics;
 pub mod pipeline;
 pub mod queue;
 pub mod serve;
 
-pub use backend::{Backend, BackendError, Classification, Dense, Functional, Simulator};
-pub use metrics::{Metrics, PercentileReport, RequestTiming, WorkerStats};
+pub use backend::{
+    Backend, BackendError, Classification, Dense, Functional, PoolClass, ReplicaPool,
+    ReplicaSpec, Simulator,
+};
+pub use metrics::{
+    ClassStats, CostModel, Metrics, PercentileReport, RequestTiming, WorkerStats,
+};
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
 pub use queue::{AdmissionQueue, DropPolicy};
-pub use serve::{run_server, PipelineError, Prediction, ServerConfig, ServerResult};
+pub use serve::{run_pool, run_server, PipelineError, Prediction, ServerConfig, ServerResult};
 
 /// Shared unit-test fixtures (integration tests under `rust/tests/` keep
 /// their own copies — crate-private test code is invisible to them).

@@ -1,33 +1,53 @@
-//! The sharded multi-worker serving runtime.
+//! The sharded serving runtime with a heterogeneous, cost-aware pool.
 //!
 //! ```text
-//!                                     ┌─ accel worker 0 ─┐
-//! event source → repr builder → ingress├─ accel worker 1 ─┤→ merged metrics
-//!  (synthetic     (histogram2)   queue │       …          │  + predictions
-//!   camera)                    (admission└─ accel worker N ┘
+//!                                              ┌ class "func" ┬ worker 0 ┐
+//! event source → repr builder → ingress → router┤  sub-queue   └ worker 1 ┤→ merged
+//!  (synthetic     (histogram2)   queue   (cost- │             …           │  metrics +
+//!   camera)                    (admission aware)└ class "sim" ── worker N ┘  predictions
 //!                               control)
 //! ```
 //!
 //! The source and representation stages run on their own threads (the
-//! "processing system" of Fig. 2); classified requests fan out over a pool
-//! of N accelerator replicas sharing one [`Backend`] via `&self`. The
-//! ingress queue applies admission control: `Block` exerts backpressure
-//! (lossless, the paper's batch-1 deployment), `DropOldest` sheds stale
-//! load under saturation and counts every drop.
+//! "processing system" of Fig. 2). With more than one replica class,
+//! admitted requests flow through a **router** that picks a class per
+//! request (with a single class, workers drain the ingress directly — no
+//! router thread, no cost-model overhead, and the original drop-oldest
+//! semantics): each class
+//! advertises a cost model (an EWMA of observed service seconds per
+//! event-count bucket, seeded from its first requests — see
+//! [`CostModel`]) and a batch affinity (the micro-batch cap its workers
+//! drain; dense engines want large batches, the cycle simulator wants
+//! batch 1). The router sends each request to the class minimizing
+//! predicted completion time given current per-class backlogs, via
+//! per-class sub-queues layered on the global [`AdmissionQueue`].
+//!
+//! Admission control stays **global**: only the ingress queue drops
+//! (`Block` exerts backpressure, `DropOldest` sheds stale load and counts
+//! every drop); sub-queues always block, so a saturated class
+//! back-pressures the router and the shedding decision is still made — and
+//! accounted — at one place.
 //!
 //! Worker panics and backend errors are caught and surfaced as
 //! [`PipelineError`] — they never poison a join — and requests that were
 //! admitted but not classified when the run aborts are counted as
 //! `in_flight`.
+//!
+//! Entry points: [`run_server`] (homogeneous — one backend shared by N
+//! workers, a single routing class) and [`run_pool`] (heterogeneous — a
+//! [`ReplicaPool`] of per-replica backend instances).
 
-use super::backend::Backend;
-use super::metrics::{Metrics, PercentileReport, RequestTiming, WorkerStats};
+use super::backend::{Backend, ReplicaPool};
+use super::metrics::{
+    ClassStats, CostModel, Metrics, PercentileReport, RequestTiming, WorkerStats,
+};
 use super::queue::{AdmissionQueue, DropPolicy};
 use crate::events::{repr::histogram2_norm, DatasetProfile};
 use crate::sparse::SparseMap;
 use crate::util::{panic_message, Rng};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -41,16 +61,18 @@ pub struct ServerConfig {
     pub seed: u64,
     /// Histogram clip value.
     pub clip: f32,
-    /// Accelerator worker replicas.
+    /// Accelerator worker replicas ([`run_server`] only — a
+    /// [`ReplicaPool`] carries its own per-class counts).
     pub workers: usize,
-    /// Ingress/stage queue depth.
+    /// Ingress queue depth (also the depth of each per-class sub-queue).
     pub queue_depth: usize,
     /// Admission control policy when the ingress queue saturates.
     pub drop_policy: DropPolicy,
-    /// Max requests a worker drains from the ingress queue per wakeup
-    /// (micro-batch cap; 1 = classic one-at-a-time). Workers never wait to
-    /// fill a batch — they take what is already queued — so batching adds
-    /// no latency when the system is unloaded and amortizes per-visit
+    /// Max requests a worker drains from its queue per wakeup
+    /// ([`run_server`] only — pool classes carry their own batch
+    /// affinity; 1 = classic one-at-a-time). Workers never wait to fill a
+    /// batch — they take what is already queued — so batching adds no
+    /// latency when the system is unloaded and amortizes per-visit
     /// backend overhead when it is saturated.
     pub batch: usize,
 }
@@ -98,40 +120,307 @@ pub struct PipelineError {
     pub completed: usize,
     /// Requests admitted but never classified.
     pub in_flight: usize,
+    /// Requests evicted by admission control before the abort.
+    pub dropped: usize,
 }
 
 impl fmt::Display for PipelineError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "serving aborted after {} request(s) ({} in flight): {}",
-            self.completed, self.in_flight, self.msg
+            "serving aborted after {} request(s) ({} in flight, {} dropped): {}",
+            self.completed, self.in_flight, self.dropped, self.msg
         )
     }
 }
 
 impl std::error::Error for PipelineError {}
 
-struct Request {
+/// An admitted request: built by the repr stage, (optionally) routed, then
+/// served from a queue. With a single replica class there is no router and
+/// workers drain the ingress directly; with several, the router fills in
+/// `predicted_s` and moves it to a class sub-queue.
+struct Routed {
     label: usize,
     map: SparseMap<f32>,
     enqueued: Instant,
+    /// Event-count bucket ([`CostModel::bucket_of`]), computed once at
+    /// admission.
+    bucket: usize,
+    /// Service seconds the router predicted for this request (NaN when no
+    /// router ran or the class was unseeded at routing time).
+    predicted_s: f64,
 }
 
-/// Per-worker raw output collected at join time:
-/// `(worker id, busy seconds, served records, per-visit batch sizes)`.
-type WorkerOutput = (usize, f64, Vec<(usize, usize, RequestTiming)>, Vec<usize>);
+/// One replica class's scheduling inputs: display name, batch affinity,
+/// and one backend reference per worker replica.
+struct ClassSlots<'a> {
+    name: String,
+    batch: usize,
+    backends: Vec<&'a dyn Backend>,
+}
+
+/// A replica class's live runtime state.
+struct ClassCtx<'a> {
+    name: String,
+    batch: usize,
+    backends: Vec<&'a dyn Backend>,
+    /// Per-class sub-queue (always blocking — drops are global-only).
+    queue: AdmissionQueue<Routed>,
+    /// Requests routed here and not yet classified (queued + in service).
+    backlog: AtomicUsize,
+    /// Observed-service-time predictor the router consults.
+    cost: CostModel,
+}
+
+/// Pick the class minimizing predicted completion time for a request in
+/// `bucket`, given current backlogs. Unseeded classes are probed eagerly
+/// (their real cost is unknown and must be learned) but only up to one
+/// outstanding request per replica while any alternative — seeded, or
+/// under its probe cap — exists. In the cold-start corner where *every*
+/// class is unseeded and probe-capped, requests spread by per-replica
+/// backlog (and each sub-queue's bounded depth caps how much can ever
+/// stack behind one slow class). Ties break toward the smaller
+/// per-replica backlog.
+///
+/// Returns the chosen class index and the per-request service prediction
+/// the decision was based on (NaN for a probe), so the caller records
+/// exactly what the router saw — not a re-query that a concurrent
+/// `observe` may have seeded in the meantime.
+fn route(classes: &[ClassCtx<'_>], bucket: usize) -> (usize, f64) {
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    let mut best_load = f64::INFINITY;
+    let mut best_pred = f64::NAN;
+    for (i, c) in classes.iter().enumerate() {
+        let backlog = c.backlog.load(Ordering::SeqCst);
+        let replicas = c.backends.len();
+        // Queued + in-service requests per replica: the tie-break key, so
+        // a 1-replica class doesn't absorb as much as a 4-replica one.
+        let load = backlog as f64 / replicas as f64;
+        let pred = c.cost.predict(bucket);
+        let cost = match pred {
+            // Predicted completion ≈ own service time scaled by how many
+            // requests already wait ahead of it per replica.
+            Some(s) => s * (load + 1.0),
+            None if backlog < replicas => f64::NEG_INFINITY,
+            None => f64::INFINITY,
+        };
+        if cost < best_cost || (cost == best_cost && load < best_load) {
+            best = i;
+            best_cost = cost;
+            best_load = load;
+            best_pred = pred.unwrap_or(f64::NAN);
+        }
+    }
+    (best, best_pred)
+}
+
+/// One classified request as a worker recorded it.
+struct ServedRecord {
+    label: usize,
+    pred: usize,
+    timing: RequestTiming,
+    predicted_s: f64,
+}
+
+/// Per-worker raw output collected at join time.
+struct WorkerOutput {
+    wid: usize,
+    class: usize,
+    busy_s: f64,
+    records: Vec<ServedRecord>,
+    batch_sizes: Vec<usize>,
+}
+
+/// The accelerator worker body: drain `queue` in micro-batches and
+/// classify through this replica's backend. `routed` is true when a
+/// router feeds this class (several classes): the worker then maintains
+/// the class backlog and folds observed service times back into the class
+/// cost model; in the single-class fast path (`queue` *is* the ingress)
+/// both are skipped — there is no routing decision to inform.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    wid: usize,
+    ci: usize,
+    class: &ClassCtx<'_>,
+    queue: &AdmissionQueue<Routed>,
+    routed: bool,
+    backend: &dyn Backend,
+    classes: &[ClassCtx<'_>],
+    ingress: &AdmissionQueue<Routed>,
+    first_error: &Mutex<Option<String>>,
+) -> WorkerOutput {
+    // Record the first failure and hard-stop every stage: producers fail
+    // fast, the router and all class workers wake and exit.
+    let fail = |msg: String| {
+        first_error.lock().unwrap().get_or_insert_with(|| msg);
+        ingress.abort();
+        for c in classes {
+            c.queue.abort();
+        }
+    };
+    let mut records: Vec<ServedRecord> = Vec::new();
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    let mut busy_s = 0.0f64;
+    let batch_cap = class.batch.max(1);
+    let mut batch: Vec<Routed> = Vec::with_capacity(batch_cap);
+    let mut metas: Vec<(usize, Instant, usize, f64)> = Vec::with_capacity(batch_cap);
+    let mut maps: Vec<SparseMap<f32>> = Vec::with_capacity(batch_cap);
+    loop {
+        queue.pop_batch(batch_cap, &mut batch);
+        if batch.is_empty() {
+            break; // closed and drained, or aborted
+        }
+        let n = batch.len();
+        metas.clear();
+        maps.clear();
+        for req in batch.drain(..) {
+            metas.push((req.label, req.enqueued, req.bucket, req.predicted_s));
+            maps.push(req.map);
+        }
+        let t0 = Instant::now();
+        let outcome = catch_unwind(AssertUnwindSafe(|| backend.classify_batch(&maps)));
+        let visit_s = t0.elapsed().as_secs_f64();
+        if routed {
+            // The visit is over: these requests leave the class's routing
+            // backlog whatever the outcome.
+            class.backlog.fetch_sub(n, Ordering::SeqCst);
+        }
+        let results = match outcome {
+            Ok(rs) => rs,
+            Err(p) => {
+                fail(format!("worker panic: {}", panic_message(p.as_ref())));
+                break;
+            }
+        };
+        if results.len() != n {
+            // A broken Backend impl must fail loudly, not silently lose
+            // requests to zip truncation.
+            fail(format!(
+                "backend '{}' returned {} result(s) for a batch of {n}",
+                backend.name(),
+                results.len(),
+            ));
+            break;
+        }
+        busy_s += visit_s;
+        batch_sizes.push(n);
+        // The visit is one accelerator pass; attribute its cost evenly
+        // across the requests it served, and — when a router is making
+        // decisions — teach it what this class actually costs at each
+        // request's event-count bucket.
+        let service_s = visit_s / n as f64;
+        if routed {
+            for &(_, _, bucket, _) in &metas {
+                class.cost.observe(bucket, service_s);
+            }
+        }
+        let mut failed = false;
+        for (&(label, enqueued, _bucket, predicted_s), res) in metas.iter().zip(results) {
+            match res {
+                Ok(c) => {
+                    let timing = RequestTiming {
+                        e2e_s: enqueued.elapsed().as_secs_f64(),
+                        service_s,
+                        sim_cycles: c.sim_cycles,
+                    };
+                    records.push(ServedRecord { label, pred: c.pred, timing, predicted_s });
+                }
+                Err(e) => {
+                    fail(e.to_string());
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if failed {
+            break;
+        }
+    }
+    WorkerOutput { wid, class: ci, busy_s, records, batch_sizes }
+}
 
 /// Run the serving pipeline to completion over `cfg.n_requests` synthetic
-/// requests, fanning the accelerator stage out over `cfg.workers` replicas.
+/// requests with a **homogeneous** pool: `cfg.workers` replicas sharing
+/// one backend, a single class. With one class there is no routing
+/// decision, so no router thread runs — workers drain the ingress queue
+/// directly, exactly as the pre-pool runtime did (same admission and
+/// drop-oldest semantics, no cost-model overhead).
 pub fn run_server(
     profile: &DatasetProfile,
     backend: &dyn Backend,
     cfg: &ServerConfig,
 ) -> Result<ServerResult, PipelineError> {
     assert!(cfg.workers >= 1, "need at least one worker replica");
+    let slots = vec![ClassSlots {
+        name: backend.name().to_string(),
+        batch: cfg.batch.max(1),
+        backends: vec![backend; cfg.workers],
+    }];
+    serve_classes(profile, slots, cfg)
+}
+
+/// Run the serving pipeline over a **heterogeneous** [`ReplicaPool`]: each
+/// class brings its own replica count, per-replica backend instances, and
+/// batch affinity; the router spreads admitted requests across classes by
+/// predicted completion time. `cfg.workers` and `cfg.batch` are ignored —
+/// the pool defines the shape.
+pub fn run_pool(
+    profile: &DatasetProfile,
+    pool: &ReplicaPool,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    assert!(!pool.classes.is_empty(), "pool needs at least one replica class");
+    let slots: Vec<ClassSlots<'_>> = pool
+        .classes
+        .iter()
+        .map(|c| ClassSlots {
+            name: c.name.clone(),
+            batch: c.batch,
+            backends: c.replicas.iter().map(|b| b.as_ref()).collect(),
+        })
+        .collect();
+    serve_classes(profile, slots, cfg)
+}
+
+/// The shared serving spine behind [`run_server`] and [`run_pool`].
+fn serve_classes(
+    profile: &DatasetProfile,
+    slots: Vec<ClassSlots<'_>>,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    assert!(!slots.is_empty(), "need at least one replica class");
+    assert!(
+        slots.iter().all(|c| !c.backends.is_empty()),
+        "every replica class needs at least one worker"
+    );
     let t_start = Instant::now();
-    let queue: AdmissionQueue<Request> = AdmissionQueue::new(cfg.queue_depth, cfg.drop_policy);
+    // With a single class there is nothing to route: workers drain the
+    // ingress directly (no router thread, no cost-model locks), which also
+    // preserves the exact drop-oldest semantics the homogeneous runtime
+    // always had — the stalest *queued* request is the one evicted.
+    let has_router = slots.len() > 1;
+    let ingress: AdmissionQueue<Routed> = AdmissionQueue::new(cfg.queue_depth, cfg.drop_policy);
+    let classes: Vec<ClassCtx<'_>> = slots
+        .into_iter()
+        .map(|c| ClassCtx {
+            // Sub-queues always block: admission control (and its drop
+            // accounting) lives at the global ingress only. A full
+            // sub-queue back-pressures the router, which lets the ingress
+            // saturate, where the shedding decision is made and counted.
+            // (Trade-off vs the single-class path: requests already routed
+            // into a sub-queue are no longer evictable, so under drop-
+            // oldest the very stalest in-flight requests survive while
+            // ingress-queued ones shed.)
+            queue: AdmissionQueue::new(cfg.queue_depth, DropPolicy::Block),
+            backlog: AtomicUsize::new(0),
+            cost: CostModel::new(),
+            name: c.name,
+            batch: c.batch.max(1),
+            backends: c.backends,
+        })
+        .collect();
     let first_error: Mutex<Option<String>> = Mutex::new(None);
     let (tx_ev, rx_ev) =
         sync_channel::<(usize, Vec<crate::events::Event>)>(cfg.queue_depth.max(1));
@@ -154,121 +443,77 @@ pub fn run_server(
 
         // Stage 2: representation builder + admission control.
         let (w, h, clip) = (profile.w, profile.h, cfg.clip);
-        let queue_ref = &queue;
+        let ingress_ref = &ingress;
         let repr = s.spawn(move || {
             for (label, events) in rx_ev.iter() {
                 let map = histogram2_norm(&events, w, h, clip);
-                let req = Request { label, map, enqueued: Instant::now() };
-                if queue_ref.push(req).is_err() {
+                let req = Routed {
+                    label,
+                    bucket: CostModel::bucket_of(map.nnz()),
+                    map,
+                    enqueued: Instant::now(),
+                    predicted_s: f64::NAN,
+                };
+                if ingress_ref.push(req).is_err() {
                     break; // queue closed by an aborting worker
                 }
             }
-            queue_ref.close();
+            ingress_ref.close();
         });
 
-        // Stage 3: the accelerator worker pool. Each wakeup drains up to
-        // `cfg.batch` already-queued requests and classifies them in one
-        // backend visit (`classify_batch`), so backends that amortize
-        // per-visit setup — the functional plan arena, the dense engine's
-        // lock — see the whole micro-batch.
-        let error_ref = &first_error;
-        let batch_cap = cfg.batch.max(1);
-        let handles: Vec<_> = (0..cfg.workers)
-            .map(|wid| {
-                s.spawn(move || {
-                    let mut records: Vec<(usize, usize, RequestTiming)> = Vec::new();
-                    let mut batch_sizes: Vec<usize> = Vec::new();
-                    let mut busy_s = 0.0f64;
-                    let mut batch: Vec<Request> = Vec::with_capacity(batch_cap);
-                    let mut metas: Vec<(usize, Instant)> = Vec::with_capacity(batch_cap);
-                    let mut maps: Vec<SparseMap<f32>> = Vec::with_capacity(batch_cap);
-                    loop {
-                        queue_ref.pop_batch(batch_cap, &mut batch);
-                        if batch.is_empty() {
-                            break; // closed and drained, or aborted
-                        }
-                        let n = batch.len();
-                        metas.clear();
-                        maps.clear();
-                        for req in batch.drain(..) {
-                            metas.push((req.label, req.enqueued));
-                            maps.push(req.map);
-                        }
-                        let t0 = Instant::now();
-                        let outcome =
-                            catch_unwind(AssertUnwindSafe(|| backend.classify_batch(&maps)));
-                        let visit_s = t0.elapsed().as_secs_f64();
-                        let results = match outcome {
-                            Ok(rs) => rs,
-                            Err(p) => {
-                                let mut slot = error_ref.lock().unwrap();
-                                slot.get_or_insert_with(|| {
-                                    format!("worker panic: {}", panic_message(p.as_ref()))
-                                });
-                                queue_ref.abort();
-                                break;
-                            }
-                        };
-                        if results.len() != n {
-                            // A broken Backend impl must fail loudly, not
-                            // silently lose requests to zip truncation.
-                            let mut slot = error_ref.lock().unwrap();
-                            slot.get_or_insert_with(|| {
-                                format!(
-                                    "backend '{}' returned {} result(s) for a batch of {n}",
-                                    backend.name(),
-                                    results.len(),
-                                )
-                            });
-                            queue_ref.abort();
-                            break;
-                        }
-                        busy_s += visit_s;
-                        batch_sizes.push(n);
-                        // The visit is one accelerator pass; attribute its
-                        // cost evenly across the requests it served.
-                        let service_s = visit_s / n as f64;
-                        let mut failed = false;
-                        for (&(label, enqueued), res) in metas.iter().zip(results) {
-                            match res {
-                                Ok(c) => {
-                                    let timing = RequestTiming {
-                                        e2e_s: enqueued.elapsed().as_secs_f64(),
-                                        service_s,
-                                        sim_cycles: c.sim_cycles,
-                                    };
-                                    records.push((label, c.pred, timing));
-                                }
-                                Err(e) => {
-                                    let mut slot = error_ref.lock().unwrap();
-                                    slot.get_or_insert_with(|| e.to_string());
-                                    queue_ref.abort();
-                                    failed = true;
-                                    break;
-                                }
-                            }
-                        }
-                        if failed {
-                            break;
-                        }
+        // Stage 3: the cost-aware router — admitted requests to class
+        // sub-queues by predicted completion time. Only spawned when there
+        // is a routing decision to make.
+        let classes_ref: &[ClassCtx<'_>] = &classes;
+        let router = has_router.then(|| {
+            s.spawn(move || {
+                while let Some(mut req) = ingress_ref.pop() {
+                    let (ci, predicted_s) = route(classes_ref, req.bucket);
+                    let class = &classes_ref[ci];
+                    req.predicted_s = predicted_s;
+                    class.backlog.fetch_add(1, Ordering::SeqCst);
+                    if class.queue.push(req).is_err() {
+                        break; // aborted downstream
                     }
-                    (wid, busy_s, records, batch_sizes)
-                })
+                }
+                for c in classes_ref {
+                    c.queue.close();
+                }
             })
-            .collect();
+        });
 
+        // Stage 4: per-class accelerator worker pools.
+        let error_ref = &first_error;
+        let mut handles = Vec::new();
+        let mut next_wid = 0usize;
+        for (ci, class) in classes.iter().enumerate() {
+            for &backend in &class.backends {
+                let wid = next_wid;
+                next_wid += 1;
+                handles.push(s.spawn(move || {
+                    let queue = if has_router { &class.queue } else { ingress_ref };
+                    worker_loop(
+                        wid, ci, class, queue, has_router, backend, classes_ref, ingress_ref,
+                        error_ref,
+                    )
+                }));
+            }
+        }
         outputs = handles.into_iter().map(|h| h.join().expect("worker thread")).collect();
+        if let Some(h) = router {
+            h.join().expect("router thread");
+        }
         repr.join().expect("repr thread");
         source.join().expect("source thread");
     });
 
-    outputs.sort_by_key(|(wid, _, _, _)| *wid);
-    let (submitted, dropped, _still_queued) = queue.stats();
-    let processed: usize = outputs.iter().map(|(_, _, r, _)| r.len()).sum();
+    outputs.sort_by_key(|o| o.wid);
+    let (submitted, dropped, _still_queued) = ingress.stats();
+    let processed: usize = outputs.iter().map(|o| o.records.len()).sum();
     let in_flight = submitted.saturating_sub(dropped + processed);
 
     if let Some(msg) = first_error.into_inner().unwrap() {
-        return Err(PipelineError { msg, completed: processed, in_flight });
+        return Err(PipelineError { msg, completed: processed, in_flight, dropped });
     }
     // Clean completion conserves requests: everything admitted was either
     // served or dropped (stranded requests only exist on the Err path).
@@ -277,24 +522,67 @@ pub fn run_server(
     let wall_s = t_start.elapsed().as_secs_f64();
     let mut metrics = Metrics { started: t_start, dropped, wall_s, ..Metrics::default() };
     let mut predictions = Vec::with_capacity(processed);
-    for (wid, busy_s, records, batch_sizes) in &outputs {
-        let service: Vec<f64> = records.iter().map(|(_, _, t)| t.service_s).collect();
-        let e2e: Vec<f64> = records.iter().map(|(_, _, t)| t.e2e_s).collect();
-        let batches: Vec<f64> = batch_sizes.iter().map(|&b| b as f64).collect();
+    for o in &outputs {
+        let service: Vec<f64> = o.records.iter().map(|r| r.timing.service_s).collect();
+        let e2e: Vec<f64> = o.records.iter().map(|r| r.timing.e2e_s).collect();
+        let batches: Vec<f64> = o.batch_sizes.iter().map(|&b| b as f64).collect();
         metrics.per_worker.push(WorkerStats {
-            worker: *wid,
-            served: records.len(),
-            batches: batch_sizes.len(),
-            busy_s: *busy_s,
+            worker: o.wid,
+            class: classes[o.class].name.clone(),
+            served: o.records.len(),
+            batches: o.batch_sizes.len(),
+            busy_s: o.busy_s,
             service: PercentileReport::from_samples(&service),
             e2e: PercentileReport::from_samples(&e2e),
             batch: PercentileReport::from_samples(&batches),
         });
-        metrics.batch_sizes.extend_from_slice(batch_sizes);
-        for &(label, pred, timing) in records {
-            metrics.record(timing, pred == label);
-            predictions.push(Prediction { label, pred, worker: *wid });
+        metrics.batch_sizes.extend_from_slice(&o.batch_sizes);
+        for r in &o.records {
+            metrics.record(r.timing, r.pred == r.label);
+            predictions.push(Prediction { label: r.label, pred: r.pred, worker: o.wid });
         }
+    }
+    // Per-class rollup: served/visit/busy books plus how well the routing
+    // predictor tracked observed service times.
+    for (ci, class) in classes.iter().enumerate() {
+        let mut served = 0usize;
+        let mut batches = 0usize;
+        let mut busy_s = 0.0f64;
+        let mut service: Vec<f64> = Vec::new();
+        let mut batch_f: Vec<f64> = Vec::new();
+        let mut err_sum = 0.0f64;
+        let mut err_n = 0usize;
+        let mut unseeded = 0usize;
+        for o in outputs.iter().filter(|o| o.class == ci) {
+            served += o.records.len();
+            batches += o.batch_sizes.len();
+            busy_s += o.busy_s;
+            batch_f.extend(o.batch_sizes.iter().map(|&b| b as f64));
+            for r in &o.records {
+                service.push(r.timing.service_s);
+                if r.predicted_s.is_finite() {
+                    err_sum += (r.predicted_s - r.timing.service_s).abs()
+                        / r.timing.service_s.max(1e-9);
+                    err_n += 1;
+                } else if has_router {
+                    // Probe traffic: routed before this class's cost model
+                    // had an observation. (Without a router no prediction
+                    // is ever attempted, so nothing counts as a probe.)
+                    unseeded += 1;
+                }
+            }
+        }
+        metrics.per_class.push(ClassStats {
+            class: class.name.clone(),
+            replicas: class.backends.len(),
+            served,
+            batches,
+            busy_s,
+            batch: PercentileReport::from_samples(&batch_f),
+            service: PercentileReport::from_samples(&service),
+            cost_err: if err_n > 0 { err_sum / err_n as f64 } else { f64::NAN },
+            unseeded,
+        });
     }
     Ok(ServerResult { metrics, predictions })
 }
@@ -303,7 +591,9 @@ pub fn run_server(
 mod tests {
     use super::*;
     use crate::arch::HwConfig;
-    use crate::coordinator::backend::{BackendError, Classification, Functional, Simulator};
+    use crate::coordinator::backend::{
+        BackendError, Classification, Functional, ReplicaSpec, Simulator,
+    };
     use crate::coordinator::testutil::qnet_for;
 
     #[test]
@@ -318,6 +608,10 @@ mod tests {
         assert_eq!(r.metrics.per_worker.len(), 3);
         assert_eq!(r.metrics.per_worker.iter().map(|w| w.served).sum::<usize>(), 12);
         assert!(r.metrics.throughput() > 0.0);
+        // The homogeneous path reports a single routing class.
+        assert_eq!(r.metrics.per_class.len(), 1);
+        assert_eq!(r.metrics.per_class[0].served, 12);
+        assert_eq!(r.metrics.per_class[0].replicas, 3);
     }
 
     /// Micro-batching is a scheduling detail: every request is still served
@@ -356,6 +650,47 @@ mod tests {
         assert_eq!(r.metrics.total, 4);
         let lat = r.metrics.mean_sim_latency_ms(crate::hwopt::power::CLOCK_HZ).unwrap();
         assert!(lat > 0.0);
+    }
+
+    /// A two-class heterogeneous pool serves every request exactly once,
+    /// respects each class's batch affinity, and reports a per-class
+    /// breakdown whose books balance.
+    #[test]
+    fn heterogeneous_pool_keeps_class_books_balanced() {
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let qnet2 = qnet.clone();
+        let pool = ReplicaPool::build(vec![
+            ReplicaSpec::functional(2, qnet),
+            ReplicaSpec::new("func-b", 1, 2, move |_| {
+                Ok(Box::new(Functional::new(qnet2.clone())))
+            }),
+        ])
+        .unwrap();
+        assert_eq!(pool.n_replicas(), 3);
+        let cfg = ServerConfig { n_requests: 16, seed: 9, queue_depth: 4, ..Default::default() };
+        let r = run_pool(&profile, &pool, &cfg).unwrap();
+        assert_eq!(r.metrics.total, 16);
+        assert_eq!(r.metrics.per_worker.len(), 3);
+        assert_eq!(r.metrics.per_class.len(), 2);
+        assert_eq!(r.metrics.per_class.iter().map(|c| c.served).sum::<usize>(), 16);
+        let class_batches: usize = r.metrics.per_class.iter().map(|c| c.batches).sum();
+        assert_eq!(class_batches, r.metrics.batch_sizes.len());
+        let visits: usize = r.metrics.batch_sizes.iter().sum();
+        assert_eq!(visits, 16, "batch sizes must partition the request stream");
+        for c in &r.metrics.per_class {
+            let cap = if c.class == "func" { 4.0 } else { 2.0 };
+            assert!(
+                c.batches == 0 || c.batch.max <= cap,
+                "class {} exceeded its batch affinity: {:?}",
+                c.class,
+                c.batch
+            );
+        }
+        // Worker stats carry their class name for the report.
+        for w in &r.metrics.per_worker {
+            assert!(w.class == "func" || w.class == "func-b", "class: {}", w.class);
+        }
     }
 
     /// A backend that errors mid-stream aborts cleanly with in-flight

@@ -70,31 +70,57 @@ pub fn write_dataset(path: &Path, w: usize, h: usize, samples: &[Sample]) -> std
     f.flush()
 }
 
+/// Bytes one serialized event occupies (t_us + x + y + polarity + pad).
+const EVENT_BYTES: u64 = 10;
+/// Bytes the fixed per-sample prefix occupies (label + n_events).
+const SAMPLE_HEADER_BYTES: u64 = 8;
+/// `Vec::with_capacity` clamp for header-supplied counts. Counts are
+/// untrusted until the payload bytes actually arrive: a truncated or
+/// corrupt file must not demand a multi-GB allocation up front. Reads
+/// past the clamp grow the vec amortized as real bytes are decoded.
+const MAX_PREALLOC: usize = 1 << 16;
+
+fn invalid(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
 /// Read a dataset file. Returns (w, h, samples).
+///
+/// Header-supplied counts are validated against the file size before any
+/// allocation sized from them: a header claiming more samples/events than
+/// the remaining bytes could possibly hold is rejected as corrupt instead
+/// of being trusted with a `Vec::with_capacity` reservation.
 pub fn read_dataset(path: &Path) -> std::io::Result<(usize, usize, Vec<Sample>)> {
-    let mut f = BufReader::new(File::open(path)?);
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut f = BufReader::new(file);
     let magic = get_u32(&mut f)?;
     if magic != MAGIC {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("bad magic {magic:#x}"),
-        ));
+        return Err(invalid(format!("bad magic {magic:#x}")));
     }
     let version = get_u32(&mut f)?;
     if version != VERSION {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("unsupported version {version}"),
-        ));
+        return Err(invalid(format!("unsupported version {version}")));
     }
     let w = get_u32(&mut f)? as usize;
     let h = get_u32(&mut f)? as usize;
     let n = get_u32(&mut f)? as usize;
-    let mut samples = Vec::with_capacity(n);
-    for _ in 0..n {
+    // Every sample needs at least its fixed prefix on disk.
+    if (n as u64).saturating_mul(SAMPLE_HEADER_BYTES) > file_len {
+        return Err(invalid(format!(
+            "header claims {n} sample(s) but the file is only {file_len} byte(s)"
+        )));
+    }
+    let mut samples = Vec::with_capacity(n.min(MAX_PREALLOC));
+    for i in 0..n {
         let label = get_u32(&mut f)?;
         let ne = get_u32(&mut f)? as usize;
-        let mut events = Vec::with_capacity(ne);
+        if (ne as u64).saturating_mul(EVENT_BYTES) > file_len {
+            return Err(invalid(format!(
+                "sample {i} claims {ne} event(s) but the file is only {file_len} byte(s)"
+            )));
+        }
+        let mut events = Vec::with_capacity(ne.min(MAX_PREALLOC));
         for _ in 0..ne {
             let t_us = get_u32(&mut f)?;
             let x = get_u16(&mut f)?;
@@ -173,6 +199,50 @@ mod tests {
         let path = dir.join("bad.esda");
         std::fs::write(&path, b"not a dataset").unwrap();
         assert!(read_dataset(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A corrupt header claiming astronomically many samples/events must be
+    /// rejected from the file-size check, not trusted with a header-sized
+    /// `Vec::with_capacity` (a truncated file could otherwise demand tens
+    /// of GB before the first payload byte is read).
+    #[test]
+    fn rejects_truncated_file_without_header_sized_alloc() {
+        let dir = std::env::temp_dir().join(format!("esda_io_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // Valid magic/version/geometry, but n = u32::MAX and no payload.
+        let path = dir.join("huge_n.esda");
+        let mut bytes = Vec::new();
+        for v in [MAGIC, VERSION, 64, 48, u32::MAX] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_dataset(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert!(err.to_string().contains("sample"), "{err}");
+
+        // One sample whose event count (~5 GB worth) exceeds the file size.
+        let path = dir.join("huge_ne.esda");
+        let mut bytes = Vec::new();
+        for v in [MAGIC, VERSION, 64, 48, 1, /* label */ 0, /* n_events */ 0x2000_0000] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_dataset(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert!(err.to_string().contains("event"), "{err}");
+
+        // A file truncated mid-events still errors (cleanly, via read_exact).
+        let path = dir.join("cut.esda");
+        let mut bytes = Vec::new();
+        for v in [MAGIC, VERSION, 64, 48, 1, 0, 2] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[1, 2, 3]); // 3 of the 20 event bytes
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_dataset(&path).is_err());
+
         std::fs::remove_dir_all(&dir).ok();
     }
 

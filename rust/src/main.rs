@@ -12,17 +12,23 @@
 //!   run the two-step NAS and print the candidate table.
 //! - `serve      --dataset <name> [--requests N] [--backend sim|func|dense]
 //!               [--workers N] [--queue D] [--drop-policy block|drop-oldest]
-//!               [--batch B]`
-//!   run the sharded serving runtime (N accelerator worker replicas behind
+//!               [--batch B] [--pool class=count[@batch],...]`
+//!   run the sharded serving runtime (accelerator worker replicas behind
 //!   an admission-controlled ingress queue; each worker drains up to B
 //!   already-queued requests per backend visit) and print per-worker
-//!   metrics including the realized batch-size distribution.
+//!   metrics including the realized batch-size distribution. With
+//!   `--pool` (e.g. `--pool func=4,sim=1,dense=1`) the runtime becomes a
+//!   heterogeneous pool: per-replica backend instances grouped into
+//!   classes, each with its own batch affinity, and a cost-aware router
+//!   sending each request to the class minimizing predicted completion
+//!   time; the report adds a per-class breakdown.
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
 
 use esda::coordinator::{
-    run_server, Backend, Dense, DropPolicy, Functional, ServerConfig, Simulator,
+    run_pool, run_server, Backend, Dense, DropPolicy, Functional, ReplicaPool, ReplicaSpec,
+    ServerConfig, Simulator,
 };
 use esda::events::{io::generate_dataset_files, repr::histogram2_norm, DatasetProfile};
 use esda::hwopt::{
@@ -219,27 +225,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .collect();
     let qnet = quantize_network(&spec, &w, &calib);
     let n_ops = spec.ops().len();
-    let backend_name = args.get_or("backend", "func").to_string();
-    let backend: Box<dyn Backend> = match backend_name.as_str() {
-        "sim" => Box::new(Simulator::new(qnet, esda::arch::HwConfig::uniform(n_ops, 16))),
-        "dense" => {
-            let stem = args.get_or("hlo", "artifacts/compact_n_mnist.hlo.txt").to_string();
-            let engine = esda::runtime::Engine::load(std::path::Path::new(&stem))
-                .map_err(|e| e.to_string())?;
-            Box::new(Dense::new(engine))
-        }
-        _ => Box::new(Functional::new(qnet)),
-    };
     let policy_raw = args.get_or("drop-policy", "block");
     let workers = args.get_usize("workers", 1)?;
     if workers == 0 {
         return Err("--workers must be >= 1".into());
-    }
-    if workers > 1 && backend_name == "dense" {
-        eprintln!(
-            "note: the dense backend serializes inferences behind a mutex — \
-             --workers {workers} adds no accelerator parallelism"
-        );
     }
     let queue_depth = args.get_usize("queue", 4)?;
     if queue_depth == 0 {
@@ -259,7 +248,82 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             .ok_or_else(|| format!("--drop-policy: expected block|drop-oldest, got '{policy_raw}'"))?,
         batch,
     };
-    let r = run_server(&p, backend.as_ref(), &cfg).map_err(|e| e.to_string())?;
+    let pooled = args.get("pool").is_some();
+    if pooled && args.get("backend").is_some() {
+        return Err(
+            "--backend and --pool are mutually exclusive: name the backend as a pool \
+             class instead (e.g. --pool dense=2,func=1)"
+                .into(),
+        );
+    }
+    if pooled && args.get("workers").is_some() {
+        return Err(
+            "--workers and --pool are mutually exclusive: the pool spec carries each \
+             class's replica count (e.g. --pool func=4)"
+                .into(),
+        );
+    }
+    if pooled && args.get("batch").is_some() {
+        return Err(
+            "--batch and --pool are mutually exclusive: set a class's batch affinity in \
+             the pool spec (e.g. --pool func=4@8)"
+                .into(),
+        );
+    }
+    let r = if let Some(pool_raw) = args.get("pool") {
+        // Heterogeneous pool: per-replica backend instances grouped into
+        // classes, cost-aware routing between them. The pool spec defines
+        // the worker count and per-class batch affinity (explicit
+        // `--workers`/`--batch`/`--backend` were rejected above).
+        let items =
+            esda::util::cli::parse_pool_spec(pool_raw).map_err(|e| format!("--pool: {e}"))?;
+        let mut specs = Vec::new();
+        for it in &items {
+            let s = match it.class.as_str() {
+                "func" => ReplicaSpec::functional(it.count, qnet.clone()),
+                "sim" => ReplicaSpec::simulator(
+                    it.count,
+                    qnet.clone(),
+                    esda::arch::HwConfig::uniform(n_ops, 16),
+                ),
+                "dense" => {
+                    let stem = args.get_or("hlo", "artifacts/compact_n_mnist.hlo.txt");
+                    ReplicaSpec::dense(it.count, std::path::PathBuf::from(stem))
+                }
+                other => {
+                    return Err(format!(
+                        "--pool: unknown replica class '{other}' (choose from: func, sim, dense)"
+                    ))
+                }
+            };
+            specs.push(match it.batch {
+                Some(b) => s.with_batch(b),
+                None => s,
+            });
+        }
+        let pool = ReplicaPool::build(specs).map_err(|e| e.to_string())?;
+        run_pool(&p, &pool, &cfg).map_err(|e| e.to_string())?
+    } else {
+        let backend_name = args.get_or("backend", "func").to_string();
+        let backend: Box<dyn Backend> = match backend_name.as_str() {
+            "sim" => Box::new(Simulator::new(qnet, esda::arch::HwConfig::uniform(n_ops, 16))),
+            "dense" => {
+                let stem = args.get_or("hlo", "artifacts/compact_n_mnist.hlo.txt").to_string();
+                let engine = esda::runtime::Engine::load(std::path::Path::new(&stem))
+                    .map_err(|e| e.to_string())?;
+                Box::new(Dense::new(engine))
+            }
+            _ => Box::new(Functional::new(qnet)),
+        };
+        if workers > 1 && backend_name == "dense" {
+            eprintln!(
+                "note: a shared dense backend serializes inferences behind a mutex — \
+                 --workers {workers} adds no accelerator parallelism (use \
+                 `--pool dense={workers}` for one engine per replica)"
+            );
+        }
+        run_server(&p, backend.as_ref(), &cfg).map_err(|e| e.to_string())?
+    };
     let m = &r.metrics;
     let e2e = m.e2e_percentiles();
     let svc = m.service_percentiles();
@@ -276,13 +340,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         esda::util::stats::fmt_secs(e2e.p99),
         esda::util::stats::fmt_secs(svc.p50),
         m.throughput(),
-        cfg.workers,
+        m.per_worker.len(),
     );
-    if cfg.batch > 1 {
+    if m.mean_batch() > 1.0 {
         let bp = m.batch_percentiles();
         println!(
-            "micro-batching: cap {} | mean {:.2} req/visit | p50 {:.0} p99 {:.0} max {:.0} | {} visit(s)",
-            cfg.batch,
+            "micro-batching: mean {:.2} req/visit | p50 {:.0} p99 {:.0} max {:.0} | {} visit(s)",
             m.mean_batch(),
             bp.p50,
             bp.p99,
@@ -290,7 +353,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             m.batch_sizes.len(),
         );
     }
-    if cfg.workers > 1 || args.has("verbose") {
+    if pooled {
+        println!("{}", esda::report::pool_table(m).render());
+    }
+    if m.per_worker.len() > 1 || args.has("verbose") {
         println!("{}", esda::report::serving_table(m).render());
     }
     if let Some(ms) = m.mean_sim_latency_ms(CLOCK_HZ) {

@@ -95,13 +95,14 @@ pub fn serving_table(m: &crate::coordinator::Metrics) -> Table {
     let mut t = Table::new(
         "serving — per-worker breakdown",
         &[
-            "worker", "served", "visits", "util", "svc p50", "svc p99", "e2e p50", "e2e p95",
-            "e2e p99",
+            "worker", "class", "served", "visits", "util", "svc p50", "svc p99", "e2e p50",
+            "e2e p95", "e2e p99",
         ],
     );
     for w in &m.per_worker {
         t.row(vec![
             format!("#{}", w.worker),
+            if w.class.is_empty() { "-".to_string() } else { w.class.clone() },
             w.served.to_string(),
             w.batches.to_string(),
             format!("{:.0}%", w.utilization(wall_s) * 100.0),
@@ -122,6 +123,7 @@ pub fn serving_table(m: &crate::coordinator::Metrics) -> Table {
     };
     t.row(vec![
         "all".to_string(),
+        "-".to_string(),
         m.total.to_string(),
         m.batch_sizes.len().to_string(),
         format!("{:.0}%", mean_util * 100.0),
@@ -131,6 +133,44 @@ pub fn serving_table(m: &crate::coordinator::Metrics) -> Table {
         fmt_secs(e2e.p95),
         fmt_secs(e2e.p99),
     ]);
+    t
+}
+
+/// Render the heterogeneous pool's per-class breakdown: traffic share,
+/// realized batch shape, utilization, and how well the routing cost model
+/// predicted observed service times (used by `esda serve --pool` and the
+/// routing example).
+pub fn pool_table(m: &crate::coordinator::Metrics) -> Table {
+    use crate::util::stats::fmt_secs;
+    let wall_s = m.wall_seconds();
+    let mut t = Table::new(
+        "serving — per-class breakdown (cost-aware routing)",
+        &[
+            "class", "replicas", "served", "share", "visits", "mean batch", "util", "svc p50",
+            "svc p99", "cost err", "probes",
+        ],
+    );
+    // NaN marks "no data" (class never served / never predicted-for):
+    // render it as a dash, not a literal NaN, in the user-facing table.
+    let pct = |v: f64| if v.is_finite() { format!("{:.0}%", v * 100.0) } else { "-".into() };
+    for c in &m.per_class {
+        let share = if m.total == 0 { f64::NAN } else { c.served as f64 / m.total as f64 };
+        let mean_batch =
+            if c.batches == 0 { f64::NAN } else { c.served as f64 / c.batches as f64 };
+        t.row(vec![
+            c.class.clone(),
+            c.replicas.to_string(),
+            c.served.to_string(),
+            pct(share),
+            c.batches.to_string(),
+            if mean_batch.is_finite() { format!("{mean_batch:.2}") } else { "-".into() },
+            pct(c.utilization(wall_s)),
+            fmt_secs(c.service.p50),
+            fmt_secs(c.service.p99),
+            pct(c.cost_err),
+            c.unseeded.to_string(),
+        ]);
+    }
     t
 }
 
@@ -173,6 +213,42 @@ mod tests {
         let s = serving_table(&m).render();
         assert!(s.contains("#0"), "{s}");
         assert!(s.contains("all"), "{s}");
+    }
+
+    #[test]
+    fn pool_table_renders_class_rows() {
+        use crate::coordinator::{ClassStats, Metrics, PercentileReport, RequestTiming};
+        let mut m = Metrics::default();
+        m.record(RequestTiming { e2e_s: 0.002, service_s: 0.001, sim_cycles: None }, true);
+        m.record(RequestTiming { e2e_s: 0.004, service_s: 0.002, sim_cycles: None }, true);
+        m.per_class.push(ClassStats {
+            class: "func".into(),
+            replicas: 2,
+            served: 2,
+            batches: 1,
+            busy_s: 0.003,
+            batch: PercentileReport::from_samples(&[2.0]),
+            service: PercentileReport::from_samples(&[0.001, 0.002]),
+            cost_err: 0.25,
+            unseeded: 1,
+        });
+        m.per_class.push(ClassStats {
+            class: "sim".into(),
+            replicas: 1,
+            served: 0,
+            batches: 0,
+            busy_s: 0.0,
+            batch: PercentileReport::default(),
+            service: PercentileReport::default(),
+            cost_err: f64::NAN,
+            unseeded: 0,
+        });
+        let s = pool_table(&m).render();
+        assert!(s.contains("func"), "{s}");
+        assert!(s.contains("sim"), "{s}");
+        assert!(s.contains("100%"), "func serves the full stream: {s}");
+        // The zero-traffic class renders dashes, never a literal NaN.
+        assert!(!s.contains("NaN"), "{s}");
     }
 
     #[test]

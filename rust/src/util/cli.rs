@@ -86,6 +86,52 @@ impl Args {
     }
 }
 
+/// One entry of a `--pool` spec: a replica class name, its replica count,
+/// and an optional batch-affinity override.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolItem {
+    pub class: String,
+    pub count: usize,
+    /// `Some(b)` when spelled `class=count@b`; `None` leaves the class's
+    /// default batch affinity in place.
+    pub batch: Option<usize>,
+}
+
+/// Parse a `--pool` spec: a comma-separated list of `class=count[@batch]`
+/// entries, e.g. `func=4,sim=1,dense=1` or `func=4@8,sim=1`.
+pub fn parse_pool_spec(s: &str) -> Result<Vec<PoolItem>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let (class, rest) = part
+            .split_once('=')
+            .ok_or_else(|| format!("pool entry '{part}': expected class=count[@batch]"))?;
+        let (count_s, batch) = match rest.split_once('@') {
+            Some((c, b)) => {
+                let b: usize = b
+                    .parse()
+                    .map_err(|_| format!("pool entry '{part}': bad batch '{b}'"))?;
+                if b == 0 {
+                    return Err(format!("pool entry '{part}': batch must be >= 1"));
+                }
+                (c, Some(b))
+            }
+            None => (rest, None),
+        };
+        let count: usize = count_s
+            .parse()
+            .map_err(|_| format!("pool entry '{part}': bad count '{count_s}'"))?;
+        if count == 0 {
+            return Err(format!("pool entry '{part}': count must be >= 1"));
+        }
+        if class.is_empty() {
+            return Err(format!("pool entry '{part}': empty class name"));
+        }
+        out.push(PoolItem { class: class.to_string(), count, batch });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +172,29 @@ mod tests {
         let a = parse(&["--steps", "abc"], &[]);
         let e = a.get_usize("steps", 0).unwrap_err();
         assert!(e.contains("steps"));
+    }
+
+    #[test]
+    fn pool_spec_parses_counts_and_batch_overrides() {
+        let items = parse_pool_spec("func=4,sim=1,dense=2").unwrap();
+        assert_eq!(
+            items,
+            vec![
+                PoolItem { class: "func".into(), count: 4, batch: None },
+                PoolItem { class: "sim".into(), count: 1, batch: None },
+                PoolItem { class: "dense".into(), count: 2, batch: None },
+            ]
+        );
+        let items = parse_pool_spec("func=4@8, sim=1").unwrap();
+        assert_eq!(items[0].batch, Some(8));
+        assert_eq!(items[1], PoolItem { class: "sim".into(), count: 1, batch: None });
+    }
+
+    #[test]
+    fn pool_spec_rejects_malformed_entries() {
+        for bad in ["", "func", "func=", "func=0", "=3", "func=2@0", "func=2@x", "func=4,,sim=1"]
+        {
+            assert!(parse_pool_spec(bad).is_err(), "accepted '{bad}'");
+        }
     }
 }

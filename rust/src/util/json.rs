@@ -83,12 +83,22 @@ impl fmt::Display for Json {
     }
 }
 
+/// Largest magnitude where every integral f64 is exactly representable and
+/// the `as i64` conversion is lossless (2^53). Integral values beyond it
+/// take the float path — `i64` casts would saturate/mangle them.
+const MAX_EXACT_INT: f64 = 9_007_199_254_740_992.0;
+
 fn write(j: &Json, f: &mut fmt::Formatter<'_>) -> fmt::Result {
     match j {
         Json::Null => write!(f, "null"),
         Json::Bool(b) => write!(f, "{b}"),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no NaN/Infinity literal; `null` is the
+                // conventional stand-in (what `JSON.stringify` emits) and
+                // keeps reports loadable by strict parsers.
+                write!(f, "null")
+            } else if n.fract() == 0.0 && n.abs() <= MAX_EXACT_INT {
                 write!(f, "{}", *n as i64)
             } else {
                 write!(f, "{n}")
@@ -361,6 +371,56 @@ mod tests {
                 )
             }
         }
+    }
+
+    /// Non-finite numbers must serialize to valid JSON (`null`), not the
+    /// literal `NaN`/`inf` that breaks any downstream `json.load` — the
+    /// shape an empty-sample `PercentileReport::default()` produces.
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(v).to_string();
+            assert_eq!(s, "null", "{v} must not leak into JSON");
+            assert_eq!(parse(&s).unwrap(), Json::Null, "null must round-trip");
+        }
+        // A default (empty-sample) percentile report is all-NaN with n = 0:
+        // exactly what the serving report writes for an idle worker.
+        let p = crate::coordinator::PercentileReport::default();
+        let doc = Json::obj(vec![
+            ("n", Json::Num(p.n as f64)),
+            ("mean", Json::Num(p.mean)),
+            ("p50", Json::Num(p.p50)),
+            ("p95", Json::Num(p.p95)),
+            ("p99", Json::Num(p.p99)),
+            ("max", Json::Num(p.max)),
+        ]);
+        let s = doc.to_string();
+        let back = parse(&s).unwrap_or_else(|e| panic!("invalid JSON emitted: {e}\ndoc: {s}"));
+        assert_eq!(back.get("n").unwrap().as_f64(), Some(0.0));
+        for k in ["mean", "p50", "p95", "p99", "max"] {
+            assert_eq!(back.get(k), Some(&Json::Null), "{k} in {s}");
+        }
+    }
+
+    /// Finite integral values beyond 2^53 must not go through the `as i64`
+    /// fast path (saturation would silently mangle them): they take the
+    /// float formatter and round-trip exactly.
+    #[test]
+    fn huge_integral_numbers_round_trip() {
+        for v in [
+            super::MAX_EXACT_INT,
+            -super::MAX_EXACT_INT,
+            super::MAX_EXACT_INT * 4.0,
+            i64::MAX as f64 * 8.0, // far above any i64
+            1e300,
+            -1e300,
+        ] {
+            let s = Json::Num(v).to_string();
+            let back = parse(&s).unwrap_or_else(|e| panic!("parse failed: {e}\ndoc: {s}"));
+            assert_eq!(back.as_f64(), Some(v), "doc: {s}");
+        }
+        // The exact-boundary value still uses the compact integer form.
+        assert_eq!(Json::Num(super::MAX_EXACT_INT).to_string(), "9007199254740992");
     }
 
     #[test]

@@ -4,8 +4,8 @@
 
 use esda::arch::HwConfig;
 use esda::coordinator::{
-    run_server, Backend, BackendError, Classification, DropPolicy, Functional, ServerConfig,
-    ServerResult, Simulator,
+    run_pool, run_server, Backend, BackendError, Classification, DropPolicy, Functional,
+    ReplicaPool, ReplicaSpec, ServerConfig, ServerResult, Simulator,
 };
 use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::model::quant::{quantize_network, QuantizedNet};
@@ -172,6 +172,246 @@ fn blocking_admission_is_lossless_under_saturation() {
     let r = run_server(&profile, &backend, &cfg).expect("blocking run");
     assert_eq!(r.metrics.total, 16);
     assert_eq!(r.metrics.dropped, 0);
+}
+
+/// Cost-aware routing is a scheduling detail: for any pool shape built
+/// from prediction-equivalent classes, the (label, pred) multiset is
+/// identical to the single-replica baseline — heterogeneity changes *who*
+/// serves a request, never *what* it predicts.
+#[test]
+fn pool_shape_invariant_prediction_multiset() {
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let cfg = ServerConfig {
+        n_requests: 24,
+        seed: 42,
+        clip: 8.0,
+        workers: 1,
+        queue_depth: 4,
+        drop_policy: DropPolicy::Block,
+        batch: 1,
+    };
+    let baseline =
+        run_server(&profile, &Functional::new(qnet.clone()), &cfg).expect("baseline run");
+    assert_eq!(baseline.metrics.total, 24);
+    let base = prediction_multiset(&baseline);
+
+    // Shape A: one class, three replicas, batch affinity 4.
+    let pool_a =
+        ReplicaPool::build(vec![ReplicaSpec::functional(3, qnet.clone())]).expect("pool a");
+    // Shape B: two functional classes at different batch affinities.
+    let (qb1, qb2) = (qnet.clone(), qnet.clone());
+    let pool_b = ReplicaPool::build(vec![
+        ReplicaSpec::new("func-a", 2, 4, move |_| Ok(Box::new(Functional::new(qb1.clone())))),
+        ReplicaSpec::new("func-b", 1, 2, move |_| Ok(Box::new(Functional::new(qb2.clone())))),
+    ])
+    .expect("pool b");
+    // Shape C: a fast class next to a throttled (but prediction-identical)
+    // class, so the router actually has a cost gradient to act on.
+    let (qc1, qc2) = (qnet.clone(), qnet);
+    let pool_c = ReplicaPool::build(vec![
+        ReplicaSpec::new("fast", 1, 2, move |_| Ok(Box::new(Functional::new(qc1.clone())))),
+        ReplicaSpec::new("lagged", 1, 1, move |_| {
+            Ok(Box::new(Throttled {
+                inner: Functional::new(qc2.clone()),
+                first: std::sync::atomic::AtomicBool::new(false),
+                first_delay: Duration::ZERO,
+                delay: Duration::from_millis(1),
+            }))
+        }),
+    ])
+    .expect("pool c");
+
+    for (label, pool) in [("a", pool_a), ("b", pool_b), ("c", pool_c)] {
+        let r = run_pool(&profile, &pool, &cfg).expect("pool run");
+        assert_eq!(r.metrics.total, 24, "shape {label}");
+        assert_eq!(r.metrics.dropped, 0, "shape {label}");
+        assert_eq!(
+            prediction_multiset(&r),
+            base,
+            "pool shape {label} changed predictions"
+        );
+        assert_eq!(
+            r.metrics.per_class.iter().map(|c| c.served).sum::<usize>(),
+            24,
+            "shape {label}: per-class served must sum to the total"
+        );
+    }
+}
+
+/// The router must learn to starve a deliberately slow replica class: it
+/// probes the class to seed its cost model (a handful of requests at
+/// most), then routes traffic to the fast class — while the prediction
+/// multiset stays exactly the single-replica baseline's.
+#[test]
+fn cost_aware_routing_starves_slow_class() {
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let cfg = ServerConfig {
+        n_requests: 48,
+        seed: 42,
+        clip: 8.0,
+        workers: 1,
+        queue_depth: 4,
+        drop_policy: DropPolicy::Block,
+        batch: 1,
+    };
+    let baseline =
+        run_server(&profile, &Functional::new(qnet.clone()), &cfg).expect("baseline run");
+    let base = prediction_multiset(&baseline);
+
+    let (qf, qs) = (qnet.clone(), qnet);
+    // Slow class listed FIRST so the probe traffic actually hits it before
+    // the fast class's cost model can win by default ordering.
+    let pool = ReplicaPool::build(vec![
+        ReplicaSpec::new("slow", 1, 1, move |_| {
+            Ok(Box::new(Throttled {
+                inner: Functional::new(qs.clone()),
+                first: std::sync::atomic::AtomicBool::new(false),
+                first_delay: Duration::ZERO,
+                delay: Duration::from_millis(25),
+            }))
+        }),
+        ReplicaSpec::new("fast", 1, 4, move |_| Ok(Box::new(Functional::new(qf.clone())))),
+    ])
+    .expect("pool build");
+    let r = run_pool(&profile, &pool, &cfg).expect("pool run");
+    assert_eq!(r.metrics.total, 48);
+    assert_eq!(prediction_multiset(&r), base, "routing changed predictions");
+
+    let slow = r.metrics.per_class.iter().find(|c| c.class == "slow").expect("slow class");
+    let fast = r.metrics.per_class.iter().find(|c| c.class == "fast").expect("fast class");
+    assert_eq!(slow.served + fast.served, 48);
+    assert!(slow.served >= 1, "the slow class must at least be probed");
+    assert!(
+        slow.served * 3 <= fast.served,
+        "cost-aware routing failed to shift load: slow {} vs fast {}",
+        slow.served,
+        fast.served
+    );
+    assert!(
+        slow.unseeded >= 1,
+        "the slow class's first request(s) must predate its cost model"
+    );
+}
+
+/// Conservation under randomized configs — worker count, queue depth,
+/// batch caps, drop policy, pool shape, service jitter, and mid-stream
+/// backend failure: every generated request is accounted for exactly once
+/// (`submitted == served + dropped + in_flight`) and no request is served
+/// twice (backend classification count == recorded servings).
+#[test]
+fn serving_conserves_requests_property() {
+    use esda::util::propcheck::{check, Gen};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    struct Counting {
+        inner: Functional,
+        calls: Arc<AtomicUsize>,
+        fail_after: Option<usize>,
+        delay: Duration,
+    }
+    impl Backend for Counting {
+        fn name(&self) -> &str {
+            "counting"
+        }
+        fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+            let n = self.calls.fetch_add(1, Ordering::SeqCst);
+            if let Some(k) = self.fail_after {
+                if n >= k {
+                    return Err(BackendError("injected mid-stream fault".into()));
+                }
+            }
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            self.inner.classify(map)
+        }
+    }
+
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    check("served + dropped + in_flight == submitted", 14, |g: &mut Gen| {
+        let n_requests = g.usize(4, 20);
+        let cfg = ServerConfig {
+            n_requests,
+            seed: g.u64(0..=1 << 40),
+            clip: 8.0,
+            workers: g.usize(1, 3),
+            queue_depth: g.usize(1, 4),
+            drop_policy: if g.bool() { DropPolicy::Block } else { DropPolicy::DropOldest },
+            batch: g.usize(1, 4),
+        };
+        let fail_after = if g.chance(0.35) { Some(g.usize(0, n_requests)) } else { None };
+        let delay = Duration::from_micros(g.u64(0..=400));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let outcome = if g.bool() {
+            // Heterogeneous: two counting classes sharing one call
+            // counter; only the first injects the fault, so the abort
+            // path crosses class boundaries.
+            let (qa, qb) = (qnet.clone(), qnet.clone());
+            let (ca, cb) = (Arc::clone(&calls), Arc::clone(&calls));
+            let pool = ReplicaPool::build(vec![
+                ReplicaSpec::new("a", g.usize(1, 2), g.usize(1, 4), move |_| {
+                    Ok(Box::new(Counting {
+                        inner: Functional::new(qa.clone()),
+                        calls: Arc::clone(&ca),
+                        fail_after,
+                        delay,
+                    }))
+                }),
+                ReplicaSpec::new("b", g.usize(1, 2), g.usize(1, 4), move |_| {
+                    Ok(Box::new(Counting {
+                        inner: Functional::new(qb.clone()),
+                        calls: Arc::clone(&cb),
+                        fail_after: None,
+                        delay: Duration::ZERO,
+                    }))
+                }),
+            ])
+            .expect("pool build");
+            run_pool(&profile, &pool, &cfg)
+        } else {
+            let backend = Counting {
+                inner: Functional::new(qnet.clone()),
+                calls: Arc::clone(&calls),
+                fail_after,
+                delay,
+            };
+            run_server(&profile, &backend, &cfg)
+        };
+        match outcome {
+            Ok(r) => {
+                assert_eq!(
+                    r.metrics.total + r.metrics.dropped,
+                    n_requests,
+                    "clean run must conserve the request stream"
+                );
+                assert_eq!(r.predictions.len(), r.metrics.total);
+                assert_eq!(
+                    calls.load(Ordering::SeqCst),
+                    r.metrics.total,
+                    "a request was classified more or fewer times than it was recorded"
+                );
+                let per_class: usize = r.metrics.per_class.iter().map(|c| c.served).sum();
+                assert_eq!(per_class, r.metrics.total);
+            }
+            Err(e) => {
+                assert!(
+                    e.completed + e.dropped + e.in_flight <= n_requests,
+                    "aborted run over-counts: {} + {} + {} > {n_requests}",
+                    e.completed,
+                    e.dropped,
+                    e.in_flight
+                );
+                assert!(
+                    calls.load(Ordering::SeqCst) >= e.completed,
+                    "recorded more servings than classifications"
+                );
+            }
+        }
+    });
 }
 
 /// Micro-batching must not change what gets predicted: the prediction
