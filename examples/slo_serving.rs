@@ -1,0 +1,132 @@
+//! Deadline-aware serving demo: a recorded dataset replayed as a live
+//! stream, with a per-request latency SLO driving admission.
+//!
+//! The run generates a small `.esda` dataset, then serves it three ways:
+//! 1. replay at 1× with a generous SLO — everything lands in deadline,
+//! 2. replay **time-compressed** (speed ≫ 1) through a deliberately slow
+//!    replica with a tight SLO — requests expire at the ingress and at
+//!    the worker pop; the report separates those deadline drops from
+//!    queue-full drops,
+//! 3. a two-class pool (fast + slow) under the same pressure — the
+//!    cost-aware router sheds predicted-infeasible requests *before*
+//!    they occupy a replica, and the per-class table shows where the
+//!    deadline drops landed.
+//!
+//! Run: `cargo run --release --example slo_serving -- --dataset n_mnist`
+
+use esda::coordinator::{
+    run_pool_source, run_server_source, Backend, BackendError, Classification, Functional,
+    ReplaySource, ReplicaPool, ReplicaSpec, ServerConfig, ServerResult,
+};
+use esda::events::{io::generate_dataset_files, repr::histogram2_norm, DatasetProfile};
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::NetworkSpec;
+use esda::sparse::SparseMap;
+use esda::util::cli::Args;
+use esda::util::stats::fmt_secs;
+use esda::util::Rng;
+use std::time::Duration;
+
+/// A deliberately slow backend so deadlines actually bite.
+struct Throttled {
+    inner: Functional,
+    delay: Duration,
+}
+
+impl Backend for Throttled {
+    fn name(&self) -> &str {
+        "throttled-functional"
+    }
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        std::thread::sleep(self.delay);
+        self.inner.classify(map)
+    }
+}
+
+fn report(label: &str, r: &ServerResult) {
+    let m = &r.metrics;
+    let e2e = m.e2e_percentiles();
+    println!("== {label} ==");
+    println!(
+        "  {} served / {} offered | e2e p50 {} p95 {} | {:.0} req/s",
+        m.total,
+        m.offered(),
+        fmt_secs(e2e.p50),
+        fmt_secs(e2e.p95),
+        m.throughput(),
+    );
+    if let Some(line) = esda::report::slo_line(m) {
+        println!("  {line}");
+    }
+    println!();
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &[]).unwrap();
+    let name = args.get_or("dataset", "n_mnist");
+    let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 5);
+    let mut rng = Rng::new(11);
+    let calib: Vec<_> = (0..4)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &weights, &calib);
+
+    // A small recorded dataset to replay (self-contained demo; in
+    // production this is a real capture).
+    let dir = std::env::temp_dir().join(format!("esda_slo_demo_{}", std::process::id()));
+    let (_train, test) =
+        generate_dataset_files(&profile, &dir, 2, 3, 7).expect("generate replay dataset");
+    println!("replaying {} as a live stream\n", test.display());
+    let open = |speed: f64| ReplaySource::open(&test, speed).expect("open replay");
+
+    // 1: real-time replay, generous SLO — the SLO machinery is inert.
+    let cfg = ServerConfig {
+        queue_depth: 8,
+        slo: Some(Duration::from_secs(2)),
+        ..Default::default()
+    };
+    let backend = Functional::new(qnet.clone());
+    let r = run_server_source(Box::new(open(1.0)), &backend, &cfg).expect("serve");
+    report("replay @1x, SLO 2 s — unloaded, everything in deadline", &r);
+
+    // 2: time-compressed replay into one slow replica, tight SLO —
+    // ingress expiries and pop-time expiries shed the doomed work.
+    let cfg = ServerConfig {
+        queue_depth: 4,
+        slo: Some(Duration::from_millis(30)),
+        ..Default::default()
+    };
+    let slow = Throttled { inner: Functional::new(qnet.clone()), delay: Duration::from_millis(8) };
+    let r = run_server_source(Box::new(open(500.0)), &slow, &cfg).expect("serve");
+    report("replay @500x into a slow replica, SLO 30 ms — deadline shedding", &r);
+
+    // 3: fast + slow classes under the same pressure — the router sheds
+    // predicted-infeasible requests before they occupy a replica.
+    let (qf, qs) = (qnet.clone(), qnet);
+    let pool = ReplicaPool::build(vec![
+        ReplicaSpec::new("fast", 1, 4, move |_| Ok(Box::new(Functional::new(qf.clone())))),
+        ReplicaSpec::new("slow", 1, 1, move |_| {
+            Ok(Box::new(Throttled {
+                inner: Functional::new(qs.clone()),
+                delay: Duration::from_millis(8),
+            }))
+        }),
+    ])
+    .expect("pool build");
+    let cfg = ServerConfig {
+        queue_depth: 4,
+        slo: Some(Duration::from_millis(30)),
+        ..Default::default()
+    };
+    let r = run_pool_source(Box::new(open(500.0)), &pool, &cfg).expect("pool serve");
+    report("same pressure, fast+slow pool — router-level SLO shedding", &r);
+    println!("{}", esda::report::pool_table(&r.metrics).render());
+
+    std::fs::remove_dir_all(&dir).ok();
+}

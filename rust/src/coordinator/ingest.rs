@@ -1,0 +1,789 @@
+//! The ingestion boundary: where timestamped requests enter the serving
+//! runtime.
+//!
+//! The paper's premise (§2.1) is a *live* AER stream: a request is born
+//! when its recording window completes at the camera, not when a
+//! benchmark loop conjures it — every latency and deadline downstream is
+//! measured from that arrival. An [`EventSource`] produces
+//! [`SourcedRequest`]s with real arrival times; three implementations
+//! cover the deployment spectrum:
+//!
+//! - [`SyntheticSource`] — the original in-memory scene generator behind
+//!   the same trait (benchmarks, tests; arrivals are "now"),
+//! - [`ReplaySource`] — replays a recorded `.esda` dataset at wall-clock
+//!   rate scaled by a speed factor, assigning each sample the arrival
+//!   instant its recording would have completed in the replayed timeline
+//!   (so downstream overload shows up as real deadline pressure),
+//! - [`TailSource`] — follows a *growing* `.esda` file (a camera-dump
+//!   pipeline appending via [`events::io::append_sample`]), emitting each
+//!   sample the moment it is fully on disk.
+//!
+//! The boundary also **validates** what it admits: every event must lie
+//! inside the source's geometry (the representation builder indexes
+//! unchecked), and event order is checked with
+//! [`is_time_sorted`] under a per-source [`UnsortedPolicy`] — recorded
+//! datasets should already be sorted (replay rejects), while a live tail
+//! can legitimately observe reordered events (tail sorts).
+//!
+//! [`events::io::append_sample`]: crate::events::io::append_sample
+
+use crate::events::aer::{is_time_sorted, EventSlice};
+use crate::events::{io, DatasetProfile, Event};
+use crate::util::Rng;
+use std::fmt;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// One request as it crosses the ingestion boundary.
+#[derive(Debug, Clone)]
+pub struct SourcedRequest {
+    /// Ground-truth class when the source knows it (replayed datasets and
+    /// the synthetic generator always do; a live pipeline's labels are
+    /// whatever the producer wrote).
+    pub label: usize,
+    /// The recording window's events, time-sorted (enforced here).
+    pub events: Vec<Event>,
+    /// When this request was *born*: the instant its recording window
+    /// completed at the (real or replayed) camera. End-to-end latency and
+    /// any deadline are measured from this, not from queue admission.
+    pub arrival: Instant,
+}
+
+/// Ingestion failure: unreadable/corrupt input, or a sample the boundary
+/// validation rejected.
+#[derive(Debug, Clone)]
+pub struct IngestError(pub String);
+
+impl fmt::Display for IngestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+/// What to do with a sample whose events are not time-sorted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnsortedPolicy {
+    /// Reject the sample as corrupt ([`ReplaySource`] default: a recorded
+    /// dataset has no excuse for unsorted events, and the windowing
+    /// helpers silently return wrong windows on them).
+    Reject,
+    /// Stable-sort by timestamp ([`TailSource`] default: a live capture
+    /// path can reorder events in flight).
+    Sort,
+}
+
+/// A producer of timestamped requests — the serving runtime's stage 1.
+///
+/// Sources are driven from a dedicated thread and may block (pacing
+/// sleeps, tail polls). Returning `Ok(None)` ends the stream; an `Err`
+/// aborts the serving run with the source's message.
+pub trait EventSource: Send {
+    /// Short display name for reports and errors.
+    fn name(&self) -> &str;
+
+    /// `(w, h)` every emitted event is validated against — the geometry
+    /// the representation stage builds maps at.
+    fn geometry(&self) -> (usize, usize);
+
+    /// Produce the next request, blocking as needed to honor real
+    /// arrival times.
+    fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError>;
+}
+
+/// Boundary validation shared by every source: geometry bounds (the
+/// representation builder indexes `y*w + x` unchecked) and time order
+/// under the source's [`UnsortedPolicy`].
+fn validate_events(
+    events: &mut Vec<Event>,
+    w: usize,
+    h: usize,
+    policy: UnsortedPolicy,
+    what: &str,
+) -> Result<(), IngestError> {
+    if let Some(e) = events.iter().find(|e| e.x as usize >= w || e.y as usize >= h) {
+        return Err(IngestError(format!(
+            "{what}: event at ({}, {}) lies outside the {w}x{h} geometry",
+            e.x, e.y
+        )));
+    }
+    if !is_time_sorted(events) {
+        match policy {
+            UnsortedPolicy::Sort => events.sort_by_key(|e| e.t_us),
+            UnsortedPolicy::Reject => {
+                return Err(IngestError(format!(
+                    "{what}: events are not time-sorted (unsorted policy: reject)"
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Geometry sanity shared by the file-backed sources: event coordinates
+/// are u16, so anything outside [1, 65536] is corrupt — and a bogus huge
+/// header must not size the repr stage's dense scratch.
+fn validate_geometry(w: usize, h: usize, what: &str) -> Result<(), IngestError> {
+    if !(1..=65536).contains(&w) || !(1..=65536).contains(&h) {
+        return Err(IngestError(format!("{what}: implausible geometry {w}x{h}")));
+    }
+    Ok(())
+}
+
+/// The synthetic event camera behind the [`EventSource`] trait: `n`
+/// requests cycling over the profile's classes, identical stream to the
+/// pre-ingest serving runtime for a given seed (prediction multisets are
+/// unchanged). Arrivals are assigned at generation time.
+pub struct SyntheticSource {
+    profile: DatasetProfile,
+    rng: Rng,
+    n: usize,
+    emitted: usize,
+}
+
+impl SyntheticSource {
+    pub fn new(profile: DatasetProfile, n: usize, seed: u64) -> SyntheticSource {
+        SyntheticSource { profile, rng: Rng::new(seed), n, emitted: 0 }
+    }
+}
+
+impl EventSource for SyntheticSource {
+    fn name(&self) -> &str {
+        "synth"
+    }
+
+    fn geometry(&self) -> (usize, usize) {
+        (self.profile.w, self.profile.h)
+    }
+
+    fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+        if self.emitted >= self.n {
+            return Ok(None);
+        }
+        let label = self.emitted % self.profile.n_classes;
+        // The scene generator steps time forward, so its events are
+        // sorted and in-bounds by construction — no validation pass.
+        let events = self.profile.sample(label, &mut self.rng);
+        self.emitted += 1;
+        Ok(Some(SourcedRequest { label, events, arrival: Instant::now() }))
+    }
+}
+
+/// Replays a recorded `.esda` dataset as a live stream: sample `i`
+/// arrives when its recording window completes in the replayed timeline —
+/// `(sum of durations of samples 0..=i) / speed` after the first
+/// request was pulled. `speed` > 1 compresses time (stress), < 1 dilates
+/// it. If the consumer falls behind, arrivals keep their *scheduled*
+/// instants: a real camera would have produced the data on time, so the
+/// lag shows up as end-to-end latency and deadline pressure, exactly as
+/// in deployment.
+pub struct ReplaySource {
+    name: String,
+    w: usize,
+    h: usize,
+    samples: Vec<io::Sample>,
+    idx: usize,
+    /// Requests actually emitted (rejected samples don't count toward
+    /// the limit).
+    emitted: usize,
+    speed: f64,
+    policy: UnsortedPolicy,
+    limit: Option<usize>,
+    started: Option<Instant>,
+    /// Replayed-timeline position (µs) after the previous sample.
+    offset_us: u64,
+}
+
+impl ReplaySource {
+    /// Load a dataset for replay at `speed`× wall-clock rate.
+    ///
+    /// The whole file is read and validated up front (via
+    /// [`io::read_dataset`]'s remaining-bytes budget), trading O(file)
+    /// memory for a corruption check before the first request is emitted
+    /// — fine for the generated datasets this repo replays. Streaming
+    /// sample-at-a-time replay for long real captures is a noted
+    /// follow-on (see ROADMAP).
+    pub fn open(path: &Path, speed: f64) -> Result<ReplaySource, IngestError> {
+        if !(speed.is_finite() && speed > 0.0) {
+            return Err(IngestError(format!("replay speed must be finite and > 0, got {speed}")));
+        }
+        let (w, h, samples) = io::read_dataset(path)
+            .map_err(|e| IngestError(format!("replay {}: {e}", path.display())))?;
+        let name = format!("replay:{}", path.display());
+        validate_geometry(w, h, &name)?;
+        Ok(ReplaySource {
+            name,
+            w,
+            h,
+            samples,
+            idx: 0,
+            emitted: 0,
+            speed,
+            policy: UnsortedPolicy::Reject,
+            limit: None,
+            started: None,
+            offset_us: 0,
+        })
+    }
+
+    /// Override the unsorted-events policy (default: reject).
+    pub fn with_unsorted_policy(mut self, policy: UnsortedPolicy) -> ReplaySource {
+        self.policy = policy;
+        self
+    }
+
+    /// Cap the number of requests emitted (default: the whole dataset).
+    pub fn with_limit(mut self, limit: usize) -> ReplaySource {
+        self.limit = Some(limit);
+        self
+    }
+
+    /// Samples left to emit.
+    pub fn remaining(&self) -> usize {
+        let left = self.samples.len() - self.idx;
+        match self.limit {
+            Some(l) => left.min(l.saturating_sub(self.emitted)),
+            None => left,
+        }
+    }
+}
+
+impl EventSource for ReplaySource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn geometry(&self) -> (usize, usize) {
+        (self.w, self.h)
+    }
+
+    fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+        if self.idx >= self.samples.len() || self.limit.is_some_and(|l| self.emitted >= l) {
+            return Ok(None);
+        }
+        let started = *self.started.get_or_insert_with(Instant::now);
+        let i = self.idx;
+        let label = self.samples[i].label as usize;
+        let mut events = std::mem::take(&mut self.samples[i].events);
+        // The sample is consumed whatever validation says: a caller that
+        // retries after an `Err` continues with the *next* sample instead
+        // of receiving the rejected one back as a phantom empty request
+        // (its events were already taken).
+        self.idx += 1;
+        validate_events(&mut events, self.w, self.h, self.policy, &format!("sample {i}"))?;
+        // The recording is complete — and the request born — at the end
+        // of its window in the replayed timeline.
+        self.offset_us += EventSlice(&events).duration_us() as u64;
+        let due = started + Duration::from_secs_f64(self.offset_us as f64 / self.speed / 1e6);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        self.emitted += 1;
+        Ok(Some(SourcedRequest { label, events, arrival: due }))
+    }
+}
+
+/// Per-sample event-count sanity cap for tailed files (a corrupt prefix
+/// must not make the tail wait forever for gigabytes that will never
+/// arrive): 2^24 events ≈ 160 MB per sample.
+const MAX_TAIL_EVENTS: u64 = 1 << 24;
+
+/// Follows a growing `.esda` file — the camera-dump pipeline: a producer
+/// writes the container header once ([`io::write_header`], sample count
+/// advisory) and appends samples ([`io::append_sample`]); the tail emits
+/// each sample the moment its bytes are fully on disk, with the arrival
+/// stamped then. After `idle_timeout` without file growth the stream
+/// ends — cleanly (`Ok(None)`) when the producer stopped at a sample
+/// boundary, with a truncation error when unconsumed trailing bytes
+/// never became a whole sample (a producer crash mid-append).
+pub struct TailSource {
+    name: String,
+    file: File,
+    w: usize,
+    h: usize,
+    /// Bytes consumed so far (starts past the file header).
+    offset: u64,
+    poll: Duration,
+    idle_timeout: Duration,
+    policy: UnsortedPolicy,
+    limit: Option<usize>,
+    emitted: usize,
+}
+
+impl TailSource {
+    /// Open a (possibly not-yet-created) tail file, waiting up to the
+    /// default idle timeout for the producer to create it and finish the
+    /// header.
+    pub fn open(path: &Path) -> Result<TailSource, IngestError> {
+        TailSource::open_with(path, Duration::from_millis(2), Duration::from_secs(2))
+    }
+
+    /// [`TailSource::open`] with explicit poll interval and idle timeout.
+    pub fn open_with(
+        path: &Path,
+        poll: Duration,
+        idle_timeout: Duration,
+    ) -> Result<TailSource, IngestError> {
+        let name = format!("tail:{}", path.display());
+        // Wait for the producer to create the file at all (the consumer
+        // is routinely launched a beat before the camera pipeline), then
+        // for it to finish the 20-byte header — one shared idle budget.
+        let mut waited = Duration::ZERO;
+        let mut file = loop {
+            match File::open(path) {
+                Ok(f) => break f,
+                Err(e) => {
+                    if waited >= idle_timeout {
+                        return Err(IngestError(format!(
+                            "{name}: {e} (waited {idle_timeout:?} for the producer)"
+                        )));
+                    }
+                    std::thread::sleep(poll);
+                    waited += poll;
+                }
+            }
+        };
+        loop {
+            let len = file.metadata().map_err(|e| IngestError(format!("{name}: {e}")))?.len();
+            if len >= io::FILE_HEADER_BYTES {
+                break;
+            }
+            if waited >= idle_timeout {
+                return Err(IngestError(format!(
+                    "{name}: no container header after {idle_timeout:?}"
+                )));
+            }
+            std::thread::sleep(poll);
+            waited += poll;
+        }
+        let (w, h, _advisory_n) = io::read_file_header(&mut file)
+            .map_err(|e| IngestError(format!("{name}: {e}")))?;
+        validate_geometry(w, h, &name)?;
+        Ok(TailSource {
+            name,
+            file,
+            w,
+            h,
+            offset: io::FILE_HEADER_BYTES,
+            poll,
+            idle_timeout,
+            policy: UnsortedPolicy::Sort,
+            limit: None,
+            emitted: 0,
+        })
+    }
+
+    /// Override the unsorted-events policy (default: sort — live capture
+    /// can reorder events in flight).
+    pub fn with_unsorted_policy(mut self, policy: UnsortedPolicy) -> TailSource {
+        self.policy = policy;
+        self
+    }
+
+    /// Cap the number of requests emitted (default: follow forever, until
+    /// the idle timeout).
+    pub fn with_limit(mut self, limit: usize) -> TailSource {
+        self.limit = Some(limit);
+        self
+    }
+
+    fn io_err(&self, e: std::io::Error) -> IngestError {
+        IngestError(format!("{}: {e}", self.name))
+    }
+}
+
+impl EventSource for TailSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn geometry(&self) -> (usize, usize) {
+        (self.w, self.h)
+    }
+
+    fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+        if self.limit.is_some_and(|l| self.emitted >= l) {
+            return Ok(None);
+        }
+        let mut waited = Duration::ZERO;
+        let mut last_len = u64::MAX;
+        loop {
+            let len = self.file.metadata().map_err(|e| self.io_err(e))?.len();
+            if len < self.offset {
+                // The file shrank below what we already consumed: it was
+                // truncated or rotated out from under the tail. Stale
+                // offsets into a replacement file would parse unrelated
+                // bytes as samples — fail loudly instead.
+                return Err(IngestError(format!(
+                    "{}: file shrank to {len} byte(s) below consumed offset {} — \
+                     truncated or rotated mid-tail",
+                    self.name, self.offset
+                )));
+            }
+            if len != last_len {
+                // The file grew (or this is the first look): the producer
+                // is alive, restart the idle clock.
+                last_len = len;
+                waited = Duration::ZERO;
+            }
+            if len >= self.offset + io::SAMPLE_HEADER_BYTES {
+                self.file
+                    .seek(SeekFrom::Start(self.offset))
+                    .map_err(|e| self.io_err(e))?;
+                let mut prefix = [0u8; 8];
+                self.file.read_exact(&mut prefix).map_err(|e| self.io_err(e))?;
+                let label = u32::from_le_bytes(prefix[0..4].try_into().unwrap());
+                let ne = u32::from_le_bytes(prefix[4..8].try_into().unwrap()) as u64;
+                if ne > MAX_TAIL_EVENTS {
+                    return Err(IngestError(format!(
+                        "{}: sample at byte {} claims {ne} events (cap {MAX_TAIL_EVENTS}) — \
+                         corrupt tail",
+                        self.name, self.offset
+                    )));
+                }
+                let need = io::SAMPLE_HEADER_BYTES + ne * io::EVENT_BYTES;
+                if len >= self.offset + need {
+                    // The whole sample is on disk (the file only grows,
+                    // so the bytes cannot vanish between check and read).
+                    let mut events =
+                        io::read_events(&mut self.file, ne as usize).map_err(|e| self.io_err(e))?;
+                    let what = format!("sample at byte {}", self.offset);
+                    self.offset += need;
+                    validate_events(&mut events, self.w, self.h, self.policy, &what)?;
+                    self.emitted += 1;
+                    return Ok(Some(SourcedRequest {
+                        label: label as usize,
+                        events,
+                        arrival: Instant::now(),
+                    }));
+                }
+            }
+            if waited >= self.idle_timeout {
+                if len > self.offset {
+                    // Trailing bytes that never became a whole sample: a
+                    // producer crash mid-append is a truncation error,
+                    // not a clean end of stream.
+                    return Err(IngestError(format!(
+                        "{}: producer went quiet mid-sample ({} trailing byte(s) past \
+                         offset {})",
+                        self.name,
+                        len - self.offset,
+                        self.offset
+                    )));
+                }
+                return Ok(None); // quiet at a sample boundary: end of stream
+            }
+            std::thread::sleep(self.poll);
+            waited += self.poll;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::io::{append_sample, write_dataset, write_header, Sample};
+    use std::io::Write as _;
+
+    fn ev(t: u32, x: u16, y: u16) -> Event {
+        Event { t_us: t, x, y, polarity: true }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("esda_ingest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn synthetic_source_emits_the_classic_stream() {
+        let profile = DatasetProfile::n_mnist();
+        let (w, h) = (profile.w, profile.h);
+        let mut src = SyntheticSource::new(profile, 5, 42);
+        assert_eq!(src.geometry(), (w, h));
+        for i in 0..5 {
+            let r = src.next_request().unwrap().expect("request");
+            assert_eq!(r.label, i % 10);
+            assert!(!r.events.is_empty());
+            assert!(is_time_sorted(&r.events));
+        }
+        assert!(src.next_request().unwrap().is_none(), "stream must end at n");
+    }
+
+    #[test]
+    fn replay_source_replays_in_file_order_with_limit() {
+        let dir = tmp_dir("replay");
+        let path = dir.join("d.esda");
+        let samples: Vec<Sample> = (0..4)
+            .map(|i| Sample { label: i, events: vec![ev(10, 1, 2), ev(20, 3, 4)] })
+            .collect();
+        write_dataset(&path, 8, 8, &samples).unwrap();
+        // Generous speed: pacing sleeps are sub-microsecond.
+        let mut src = ReplaySource::open(&path, 1e6).unwrap();
+        assert_eq!(src.geometry(), (8, 8));
+        assert_eq!(src.remaining(), 4);
+        let mut labels = Vec::new();
+        while let Some(r) = src.next_request().unwrap() {
+            labels.push(r.label);
+        }
+        assert_eq!(labels, vec![0, 1, 2, 3]);
+        assert!(src.next_request().unwrap().is_none(), "drained source stays drained");
+
+        let mut src = ReplaySource::open(&path, 1e6).unwrap().with_limit(2);
+        assert_eq!(src.remaining(), 2);
+        assert!(src.next_request().unwrap().is_some());
+        assert!(src.next_request().unwrap().is_some());
+        assert!(src.next_request().unwrap().is_none(), "limit must cap the stream");
+    }
+
+    /// Replay pacing: a recording that spans T µs of camera time arrives
+    /// no earlier than T/speed after the stream starts — and a large
+    /// speed factor compresses that to nothing.
+    #[test]
+    fn replay_paces_arrivals_by_duration_over_speed() {
+        let dir = tmp_dir("pace");
+        let path = dir.join("d.esda");
+        // Two samples, each spanning 10 ms of camera time.
+        let samples: Vec<Sample> = (0..2)
+            .map(|i| Sample { label: i, events: vec![ev(0, 0, 0), ev(10_000, 1, 1)] })
+            .collect();
+        write_dataset(&path, 4, 4, &samples).unwrap();
+        let mut src = ReplaySource::open(&path, 1.0).unwrap();
+        let t0 = Instant::now();
+        let a = src.next_request().unwrap().unwrap();
+        let b = src.next_request().unwrap().unwrap();
+        assert!(
+            t0.elapsed() >= Duration::from_millis(20),
+            "20 ms of camera time replayed at 1x in {:?}",
+            t0.elapsed()
+        );
+        assert!(b.arrival >= a.arrival, "arrivals must be monotone");
+
+        let mut fast = ReplaySource::open(&path, 1e3).unwrap();
+        let t0 = Instant::now();
+        while fast.next_request().unwrap().is_some() {}
+        assert!(
+            t0.elapsed() < Duration::from_millis(20),
+            "1000x replay should compress 20 ms to ~20 µs, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    /// The ingestion boundary enforces time order: replay rejects
+    /// unsorted samples by default and stable-sorts them on request.
+    #[test]
+    fn replay_applies_the_unsorted_policy() {
+        let dir = tmp_dir("unsorted");
+        let path = dir.join("d.esda");
+        let samples = vec![Sample {
+            label: 0,
+            events: vec![ev(30, 1, 1), ev(10, 2, 2), ev(20, 3, 3)],
+        }];
+        write_dataset(&path, 8, 8, &samples).unwrap();
+        let mut strict = ReplaySource::open(&path, 1e6).unwrap();
+        let err = strict.next_request().unwrap_err();
+        assert!(err.to_string().contains("time-sorted"), "{err}");
+        // A rejected sample is consumed: retrying must not hand back a
+        // phantom empty request built from the taken-out events — the
+        // stream simply ends here (it was the only sample).
+        assert!(strict.next_request().unwrap().is_none(), "rejected sample must be consumed");
+
+        let mut lenient = ReplaySource::open(&path, 1e6)
+            .unwrap()
+            .with_unsorted_policy(UnsortedPolicy::Sort);
+        let r = lenient.next_request().unwrap().unwrap();
+        let ts: Vec<u32> = r.events.iter().map(|e| e.t_us).collect();
+        assert_eq!(ts, vec![10, 20, 30]);
+    }
+
+    /// Out-of-geometry events would index the repr builder's dense
+    /// scratch out of bounds — the boundary rejects them.
+    #[test]
+    fn replay_rejects_out_of_geometry_events() {
+        let dir = tmp_dir("geom");
+        let path = dir.join("d.esda");
+        let samples = vec![Sample { label: 0, events: vec![ev(5, 200, 0)] }];
+        write_dataset(&path, 8, 8, &samples).unwrap();
+        let mut src = ReplaySource::open(&path, 1e6).unwrap();
+        let err = src.next_request().unwrap_err();
+        assert!(err.to_string().contains("geometry"), "{err}");
+    }
+
+    #[test]
+    fn replay_rejects_degenerate_speed() {
+        let dir = tmp_dir("speed");
+        let path = dir.join("d.esda");
+        write_dataset(&path, 4, 4, &[]).unwrap();
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(ReplaySource::open(&path, bad).is_err(), "accepted speed {bad}");
+        }
+    }
+
+    /// A tail source sees samples appear as a producer appends them, and
+    /// ends the stream once the producer goes quiet.
+    #[test]
+    fn tail_source_follows_a_growing_file() {
+        let dir = tmp_dir("tail");
+        let path = dir.join("grow.esda");
+        let s0 = Sample { label: 7, events: vec![ev(1, 1, 1), ev(2, 2, 2)] };
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f, 8, 8, 0).unwrap(); // advisory count: producer appends
+        append_sample(&mut f, &s0).unwrap();
+        f.flush().unwrap();
+        drop(f);
+
+        let mut src = TailSource::open_with(
+            &path,
+            Duration::from_millis(1),
+            Duration::from_millis(200),
+        )
+        .unwrap();
+        assert_eq!(src.geometry(), (8, 8));
+        let r = src.next_request().unwrap().expect("pre-existing sample");
+        assert_eq!(r.label, 7);
+        assert_eq!(r.events, s0.events);
+
+        // A producer thread appends the next sample after a delay; the
+        // tail blocks until it is fully on disk.
+        let path2 = path.clone();
+        let appender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path2).unwrap();
+            let s1 = Sample { label: 3, events: vec![ev(9, 4, 4)] };
+            append_sample(&mut f, &s1).unwrap();
+            f.flush().unwrap();
+        });
+        let r = src.next_request().unwrap().expect("appended sample");
+        assert_eq!(r.label, 3);
+        appender.join().unwrap();
+
+        // No further growth: the idle timeout ends the stream.
+        let t0 = Instant::now();
+        assert!(src.next_request().unwrap().is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(200), "must wait out the idle window");
+    }
+
+    /// Live tails default to sorting reordered events instead of
+    /// rejecting the stream.
+    #[test]
+    fn tail_source_sorts_reordered_events_by_default() {
+        let dir = tmp_dir("tailsort");
+        let path = dir.join("grow.esda");
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f, 8, 8, 0).unwrap();
+        append_sample(
+            &mut f,
+            &Sample { label: 0, events: vec![ev(50, 1, 1), ev(10, 2, 2)] },
+        )
+        .unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let mut src = TailSource::open_with(
+            &path,
+            Duration::from_millis(1),
+            Duration::from_millis(50),
+        )
+        .unwrap();
+        let r = src.next_request().unwrap().unwrap();
+        let ts: Vec<u32> = r.events.iter().map(|e| e.t_us).collect();
+        assert_eq!(ts, vec![10, 50], "tail must stable-sort reordered events");
+        // Under an explicit reject policy the same bytes are an error.
+        let mut strict = TailSource::open_with(
+            &path,
+            Duration::from_millis(1),
+            Duration::from_millis(50),
+        )
+        .unwrap()
+        .with_unsorted_policy(UnsortedPolicy::Reject);
+        assert!(strict.next_request().is_err());
+    }
+
+    /// A producer that dies mid-append leaves trailing bytes that never
+    /// become a whole sample: that is a truncation error, not a clean end
+    /// of stream — and a consumer started before the file exists waits
+    /// for the producer instead of failing instantly.
+    #[test]
+    fn tail_reports_truncation_and_waits_for_late_producers() {
+        let dir = tmp_dir("tailtrunc");
+        let path = dir.join("grow.esda");
+        // Consumer first: opening waits for the producer to create the
+        // file and write the header.
+        let path2 = path.clone();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let mut f = std::fs::File::create(&path2).unwrap();
+            write_header(&mut f, 8, 8, 0).unwrap();
+            append_sample(&mut f, &Sample { label: 1, events: vec![ev(1, 1, 1)] }).unwrap();
+            // ...then dies mid-append: a prefix claiming 4 events, no
+            // event bytes.
+            f.write_all(&2u32.to_le_bytes()).unwrap();
+            f.write_all(&4u32.to_le_bytes()).unwrap();
+            f.flush().unwrap();
+        });
+        let mut src = TailSource::open_with(
+            &path,
+            Duration::from_millis(1),
+            Duration::from_millis(120),
+        )
+        .expect("open must wait for the producer to create the file");
+        producer.join().unwrap();
+        let r = src.next_request().unwrap().expect("the complete sample");
+        assert_eq!(r.label, 1);
+        let err = src.next_request().unwrap_err();
+        assert!(err.to_string().contains("mid-sample"), "{err}");
+    }
+
+    /// A tail file that shrinks below the consumed offset (truncated or
+    /// rotated) must fail loudly — a stale offset into a replacement
+    /// file would parse unrelated bytes as samples.
+    #[test]
+    fn tail_rejects_a_shrunken_file() {
+        let dir = tmp_dir("tailshrink");
+        let path = dir.join("grow.esda");
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f, 8, 8, 0).unwrap();
+        append_sample(&mut f, &Sample { label: 5, events: vec![ev(1, 1, 1)] }).unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let mut src = TailSource::open_with(
+            &path,
+            Duration::from_millis(1),
+            Duration::from_millis(50),
+        )
+        .unwrap();
+        assert_eq!(src.next_request().unwrap().unwrap().label, 5);
+        // Rotate: the file is replaced by a bare header, shorter than
+        // what the tail already consumed.
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(io::FILE_HEADER_BYTES).unwrap();
+        drop(f);
+        let err = src.next_request().unwrap_err();
+        assert!(err.to_string().contains("shrank"), "{err}");
+    }
+
+    #[test]
+    fn tail_rejects_corrupt_event_count() {
+        let dir = tmp_dir("tailcorrupt");
+        let path = dir.join("grow.esda");
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f, 8, 8, 0).unwrap();
+        // A prefix claiming ~4 billion events: waiting for it would hang
+        // the pipeline forever, so the tail must call it corrupt.
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        f.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let mut src = TailSource::open_with(
+            &path,
+            Duration::from_millis(1),
+            Duration::from_millis(50),
+        )
+        .unwrap();
+        let err = src.next_request().unwrap_err();
+        assert!(err.to_string().contains("corrupt"), "{err}");
+    }
+}

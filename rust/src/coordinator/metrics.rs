@@ -10,7 +10,11 @@ use std::time::Instant;
 /// Per-request timing record.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestTiming {
-    /// End-to-end latency (enqueue → classified), seconds.
+    /// End-to-end latency (source arrival → classified), seconds. The
+    /// arrival is the instant the request was born at its
+    /// [`EventSource`](super::ingest::EventSource) — for a replayed or
+    /// tailed stream that is when the recording window completed, so
+    /// queue backlog shows up here exactly as it would in deployment.
     pub e2e_s: f64,
     /// Accelerator-stage service time, seconds.
     pub service_s: f64,
@@ -153,6 +157,11 @@ pub struct ClassStats {
     /// Requests routed to this class before its cost model had any
     /// observation (the probe traffic that seeds the EWMA).
     pub unseeded: usize,
+    /// Requests bound for this class that were shed on deadline grounds:
+    /// the router predicted this (best) class could not complete them in
+    /// time, or they expired in the class's queue before a worker reached
+    /// them.
+    pub deadline_drops: usize,
 }
 
 impl ClassStats {
@@ -212,6 +221,22 @@ pub struct Metrics {
     /// (Requests stranded by an aborted run are not in any `Metrics` —
     /// they're reported via `PipelineError::in_flight` on the error path.)
     pub dropped: usize,
+    /// Deadline-carrying requests that entered the system (the SLO
+    /// attainment denominator; 0 when no `--slo-ms` was set).
+    pub deadline_offered: usize,
+    /// Requests already past their deadline at the ingress (dropped
+    /// before admission — they never occupied a queue slot).
+    pub deadline_ingress: usize,
+    /// Requests shed at the scheduling point: the router's predictive
+    /// shed (no class's predicted completion met the deadline) plus
+    /// expiries at the worker pop — the routerless single-class path's
+    /// scheduling point, and the post-route safety net in pools.
+    pub deadline_router: usize,
+    /// Served requests that completed within their deadline.
+    pub deadline_met: usize,
+    /// Served requests that completed *after* their deadline (they count
+    /// as served, but against SLO attainment).
+    pub deadline_missed: usize,
     /// Per-replica stats, one entry per pool worker (the single-
     /// accelerator `run_pipeline` facade has exactly one).
     pub per_worker: Vec<WorkerStats>,
@@ -234,6 +259,11 @@ impl Default for Metrics {
             correct: 0,
             total: 0,
             dropped: 0,
+            deadline_offered: 0,
+            deadline_ingress: 0,
+            deadline_router: 0,
+            deadline_met: 0,
+            deadline_missed: 0,
             per_worker: Vec::new(),
             per_class: Vec::new(),
             batch_sizes: Vec::new(),
@@ -258,17 +288,39 @@ impl Metrics {
         self.correct as f64 / self.total as f64
     }
 
-    /// Requests offered to the accelerator stage (served + dropped).
+    /// Requests offered to the system: served + queue-full drops +
+    /// deadline drops (without an SLO the deadline terms are 0, so this
+    /// stays served + dropped).
     pub fn offered(&self) -> usize {
-        self.total + self.dropped
+        self.total + self.dropped + self.deadline_drops()
     }
 
-    /// Fraction of offered requests shed by admission control.
+    /// Fraction of offered requests shed by queue-full admission control
+    /// (deadline sheds are reported separately — see
+    /// [`Metrics::deadline_drops`]).
     pub fn drop_rate(&self) -> f64 {
         if self.offered() == 0 {
             return 0.0;
         }
         self.dropped as f64 / self.offered() as f64
+    }
+
+    /// Total deadline-based sheds, distinguished from queue-full drops:
+    /// ingress expiries plus router/scheduling-point sheds.
+    pub fn deadline_drops(&self) -> usize {
+        self.deadline_ingress + self.deadline_router
+    }
+
+    /// SLO attainment: the fraction of deadline-carrying requests that
+    /// were served within their deadline. Everything else — ingress
+    /// expiry, router shed, queue-full drop, served-but-late — counts
+    /// against it. `None` when no request carried a deadline (no SLO
+    /// configured).
+    pub fn slo_attainment(&self) -> Option<f64> {
+        if self.deadline_offered == 0 {
+            return None;
+        }
+        Some(self.deadline_met as f64 / self.deadline_offered as f64)
     }
 
     pub fn e2e_summary(&self) -> Summary {
@@ -452,9 +504,33 @@ mod tests {
             service: PercentileReport::default(),
             cost_err: f64::NAN,
             unseeded: 0,
+            deadline_drops: 0,
         };
         assert!((c.utilization(1.0) - 0.5).abs() < 1e-12);
         assert!(c.utilization(0.0).is_nan());
+    }
+
+    /// Deadline books: attainment over every deadline-carrying request,
+    /// deadline drops distinct from queue-full drops, and `None` when no
+    /// SLO was configured.
+    #[test]
+    fn slo_attainment_accounting() {
+        let mut m = Metrics::default();
+        assert_eq!(m.slo_attainment(), None, "no SLO ⇒ no attainment figure");
+        assert_eq!(m.deadline_drops(), 0);
+        // 10 deadline-carrying requests offered: 6 met, 1 served late,
+        // 1 expired at ingress, 1 shed at the router, 1 queue-dropped.
+        m.deadline_offered = 10;
+        m.deadline_met = 6;
+        m.deadline_missed = 1;
+        m.deadline_ingress = 1;
+        m.deadline_router = 1;
+        m.dropped = 1;
+        m.total = 7; // 6 met + 1 late
+        assert_eq!(m.deadline_drops(), 2);
+        assert_eq!(m.offered(), 10, "served + queue drops + deadline drops");
+        assert!((m.slo_attainment().unwrap() - 0.6).abs() < 1e-12);
+        assert!((m.drop_rate() - 0.1).abs() < 1e-12, "queue drops only");
     }
 
     #[test]

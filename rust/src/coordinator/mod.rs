@@ -9,18 +9,26 @@
 //! ```
 //!
 //! Stages run on std threads connected by bounded queues (backpressure),
-//! since the offline build vendors no async runtime. The accelerator stage
+//! since the offline build vendors no async runtime. The event source is
+//! any [`ingest::EventSource`] — the synthetic camera, a paced dataset
+//! replay, or a tailed capture file — stamping real arrival times that
+//! latency (and any `--slo-ms` deadline) is measured from. The
+//! accelerator stage
 //! is a pool of replicas — homogeneous (N workers sharing one [`Backend`]
 //! trait object) or heterogeneous (a [`ReplicaPool`] of per-replica
 //! instances across classes, with a cost-aware router picking a class per
 //! request). The ingress queue applies admission control (block vs
-//! drop-oldest) and the merged [`metrics::Metrics`] report per-worker and
-//! per-class utilization plus p50/p95/p99 latency percentiles.
+//! drop-oldest), deadlines are enforced at the ingress, the router, and
+//! the worker pop (see [`serve`]), and the merged [`metrics::Metrics`]
+//! report per-worker and
+//! per-class utilization, p50/p95/p99 latency percentiles, and SLO
+//! attainment.
 //!
 //! [`run_pipeline`] is the single-accelerator batch-1 facade (the paper's
 //! deployment); [`run_server`] is the replicated homogeneous runtime;
 //! [`run_pool`] is the heterogeneous cost-aware runtime.
 pub mod backend;
+pub mod ingest;
 pub mod metrics;
 pub mod pipeline;
 pub mod queue;
@@ -30,12 +38,19 @@ pub use backend::{
     Backend, BackendError, Classification, Dense, Functional, PoolClass, ReplicaPool,
     ReplicaSpec, Simulator,
 };
+pub use ingest::{
+    EventSource, IngestError, ReplaySource, SourcedRequest, SyntheticSource, TailSource,
+    UnsortedPolicy,
+};
 pub use metrics::{
     ClassStats, CostModel, Metrics, PercentileReport, RequestTiming, WorkerStats,
 };
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
 pub use queue::{AdmissionQueue, DropPolicy};
-pub use serve::{run_pool, run_server, PipelineError, Prediction, ServerConfig, ServerResult};
+pub use serve::{
+    run_pool, run_pool_source, run_server, run_server_source, PipelineError, Prediction,
+    ServerConfig, ServerResult,
+};
 
 /// Shared unit-test fixtures (integration tests under `rust/tests/` keep
 /// their own copies — crate-private test code is invisible to them).

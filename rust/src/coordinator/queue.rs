@@ -127,26 +127,59 @@ impl<T> AdmissionQueue<T> {
     /// empty once the queue is closed-and-drained or aborted — reusing the
     /// caller's buffer keeps the worker loop allocation-free.
     pub fn pop_batch(&self, max: usize, out: &mut Vec<T>) {
+        self.pop_batch_where(max, out, |_| false);
+    }
+
+    /// [`AdmissionQueue::pop_batch`] with an inline rejection filter:
+    /// queued items matching `reject` are removed and **discarded**
+    /// (freeing their slots) without occupying batch capacity; the return
+    /// value is how many were discarded, for the caller's accounting.
+    /// Returns as soon as it has made progress — at least one accepted
+    /// item, **or** at least one discard (possibly with an empty `out`),
+    /// or the queue is closed-and-drained / aborted. Returning promptly
+    /// on an all-reject drain matters: the caller's scheduling state
+    /// (backlogs, drop counters) is stale until it folds the discards in,
+    /// and blocking here would let a router route against phantom
+    /// backlog. Callers must therefore treat "empty `out`, nonzero
+    /// return" as *look again*, not end-of-stream. The serving runtime
+    /// uses this to expire deadline-passed requests at the pop, inside
+    /// the lock, so an expired request never wastes a batch slot or an
+    /// accelerator visit.
+    pub fn pop_batch_where<F: FnMut(&T) -> bool>(
+        &self,
+        max: usize,
+        out: &mut Vec<T>,
+        mut reject: F,
+    ) -> usize {
         out.clear();
         let max = max.max(1);
+        let mut rejected = 0usize;
         let mut st = self.state.lock().unwrap();
         loop {
             if st.aborted {
-                return;
+                return rejected;
             }
-            if !st.items.is_empty() {
-                while out.len() < max {
-                    match st.items.pop_front() {
-                        Some(x) => out.push(x),
-                        None => break,
+            while out.len() < max {
+                match st.items.pop_front() {
+                    Some(x) => {
+                        if reject(&x) {
+                            rejected += 1;
+                        } else {
+                            out.push(x);
+                        }
                     }
+                    None => break,
                 }
-                // Up to `max` slots freed: wake every blocked producer.
+            }
+            if !out.is_empty() || rejected > 0 {
+                // Slots freed (served or discarded): wake every blocked
+                // producer, and hand control back so the caller can
+                // account for the discards immediately.
                 self.not_full.notify_all();
-                return;
+                return rejected;
             }
             if st.closed {
-                return;
+                return rejected;
             }
             st = self.not_empty.wait(st).unwrap();
         }
@@ -238,6 +271,52 @@ mod tests {
         std::thread::sleep(Duration::from_millis(10));
         q.abort();
         assert!(h.join().unwrap().is_empty());
+    }
+
+    /// The filtered pop discards rejects without letting them occupy
+    /// batch slots and reports the discard count; batch capacity counts
+    /// accepted items only.
+    #[test]
+    fn pop_batch_where_discards_rejects_without_eating_slots() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(8, DropPolicy::Block);
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        let mut batch = Vec::new();
+        // Reject odd items: the drain walks 0..=4 to fill 3 accepted
+        // slots, discarding the 2 odds in between; 5 stays queued.
+        let rejected = q.pop_batch_where(3, &mut batch, |&x| x % 2 == 1);
+        assert_eq!(batch, vec![0, 2, 4]);
+        assert_eq!(rejected, 2);
+        // All-reject queue + close: returns empty with the discard count.
+        q.push(7).unwrap();
+        q.close();
+        let rejected = q.pop_batch_where(4, &mut batch, |_| true);
+        assert!(batch.is_empty());
+        assert_eq!(rejected, 2, "5 and 7 both discarded");
+    }
+
+    /// An all-reject drain returns promptly (empty batch, nonzero count)
+    /// so the caller can account for the discards — and the freed slot
+    /// unblocks a waiting producer; a subsequent call blocks for a real
+    /// item as usual.
+    #[test]
+    fn pop_batch_where_returns_promptly_on_all_reject_drains() {
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(1, DropPolicy::Block));
+        q.push(99).unwrap(); // the reject, filling the depth-1 queue
+        let q2 = Arc::clone(&q);
+        // Producer blocked on the full queue until the discard frees it.
+        let producer = std::thread::spawn(move || q2.push(1));
+        std::thread::sleep(Duration::from_millis(10));
+        let mut batch = Vec::new();
+        let rejected = q.pop_batch_where(2, &mut batch, |&x| x == 99);
+        assert!(batch.is_empty(), "all-reject drain must not fabricate items");
+        assert_eq!(rejected, 1);
+        producer.join().unwrap().unwrap();
+        // The next call picks up the producer's accepted item.
+        let rejected = q.pop_batch_where(2, &mut batch, |&x| x == 99);
+        assert_eq!(batch, vec![1]);
+        assert_eq!(rejected, 0);
     }
 
     #[test]

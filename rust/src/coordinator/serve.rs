@@ -1,19 +1,40 @@
-//! The sharded serving runtime with a heterogeneous, cost-aware pool.
+//! The sharded serving runtime with a heterogeneous, cost-aware pool and
+//! deadline-aware admission.
 //!
 //! ```text
 //!                                              ┌ class "func" ┬ worker 0 ┐
 //! event source → repr builder → ingress → router┤  sub-queue   └ worker 1 ┤→ merged
-//!  (synthetic     (histogram2)   queue   (cost- │             …           │  metrics +
-//!   camera)                    (admission aware)└ class "sim" ── worker N ┘  predictions
-//!                               control)
+//!  (synth /       (histogram2)   queue   (cost- │             …           │  metrics +
+//!   replay /                   (admission aware, └ class "sim" ── worker N ┘  predictions
+//!   tail)                       + deadline  SLO
+//!                               expiry)     shed)
 //! ```
 //!
-//! The source and representation stages run on their own threads (the
-//! "processing system" of Fig. 2). With more than one replica class,
-//! admitted requests flow through a **router** that picks a class per
-//! request (with a single class, workers drain the ingress directly — no
-//! router thread, no cost-model overhead, and the original drop-oldest
-//! semantics): each class
+//! The source is any [`EventSource`] — the synthetic camera, a paced
+//! dataset replay, or a tailed capture file — producing requests with
+//! **real arrival times**; an optional SLO turns each arrival into a
+//! deadline (`arrival + slo`). Deadlines are enforced at the three
+//! cheapest points, in order:
+//!
+//! 1. **ingress** — a request already past its deadline is dropped before
+//!    the representation is even built (`deadline_ingress`),
+//! 2. **router** — with several classes, a request is shed when even the
+//!    best class's predicted completion time (service EWMA × backlog)
+//!    cannot meet the deadline — the cheapest point to kill work that is
+//!    doomed anyway (`deadline_router`),
+//! 3. **worker pop** — a request that expired while queued is discarded
+//!    inside the queue lock without occupying a batch slot or an
+//!    accelerator visit (also `deadline_router`; in the routerless
+//!    single-class path this *is* the scheduling point).
+//!
+//! Served requests are additionally scored against their deadline for the
+//! SLO-attainment figure ([`Metrics::slo_attainment`]) — a late
+//! completion counts as served but against the SLO.
+//!
+//! With more than one replica class, admitted requests flow through a
+//! **router** that picks a class per request (with a single class,
+//! workers drain the ingress directly — no router thread, no cost-model
+//! overhead, and the original drop-oldest semantics): each class
 //! advertises a cost model (an EWMA of observed service seconds per
 //! event-count bucket, seeded from its first requests — see
 //! [`CostModel`]) and a batch affinity (the micro-batch cap its workers
@@ -33,29 +54,32 @@
 //! admitted but not classified when the run aborts are counted as
 //! `in_flight`.
 //!
-//! Entry points: [`run_server`] (homogeneous — one backend shared by N
-//! workers, a single routing class) and [`run_pool`] (heterogeneous — a
-//! [`ReplicaPool`] of per-replica backend instances).
+//! Entry points: [`run_server`] / [`run_pool`] (synthetic source built
+//! from a dataset profile) and [`run_server_source`] /
+//! [`run_pool_source`] (any [`EventSource`]).
 
 use super::backend::{Backend, ReplicaPool};
+use super::ingest::{EventSource, SyntheticSource};
 use super::metrics::{
     ClassStats, CostModel, Metrics, PercentileReport, RequestTiming, WorkerStats,
 };
 use super::queue::{AdmissionQueue, DropPolicy};
 use crate::events::{repr::histogram2_norm, DatasetProfile};
 use crate::sparse::SparseMap;
-use crate::util::{panic_message, Rng};
+use crate::util::panic_message;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Serving-runtime configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Number of requests the synthetic source generates.
+    /// Number of requests the synthetic source generates ([`run_server`] /
+    /// [`run_pool`] only — an explicit [`EventSource`] owns its stream
+    /// length).
     pub n_requests: usize,
     /// Source seed (fixes the request stream).
     pub seed: u64,
@@ -75,6 +99,10 @@ pub struct ServerConfig {
     /// latency when the system is unloaded and amortizes per-visit
     /// backend overhead when it is saturated.
     pub batch: usize,
+    /// Per-request latency SLO: each request's deadline is its arrival
+    /// plus this. `None` disables every deadline mechanism (the pre-SLO
+    /// behavior, bit for bit).
+    pub slo: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -87,6 +115,7 @@ impl Default for ServerConfig {
             queue_depth: 4,
             drop_policy: DropPolicy::Block,
             batch: 1,
+            slo: None,
         }
     }
 }
@@ -143,13 +172,24 @@ impl std::error::Error for PipelineError {}
 struct Routed {
     label: usize,
     map: SparseMap<f32>,
-    enqueued: Instant,
+    /// When the request was born at its source — end-to-end latency and
+    /// the deadline are measured from here.
+    arrival: Instant,
+    /// `arrival + slo` when an SLO is configured; a request past this is
+    /// worthless and every stage may discard it.
+    deadline: Option<Instant>,
     /// Event-count bucket ([`CostModel::bucket_of`]), computed once at
     /// admission.
     bucket: usize,
     /// Service seconds the router predicted for this request (NaN when no
     /// router ran or the class was unseeded at routing time).
     predicted_s: f64,
+}
+
+impl Routed {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|dl| now >= dl)
+    }
 }
 
 /// One replica class's scheduling inputs: display name, batch affinity,
@@ -171,6 +211,24 @@ struct ClassCtx<'a> {
     backlog: AtomicUsize,
     /// Observed-service-time predictor the router consults.
     cost: CostModel,
+    /// Deadline sheds attributed to this class: router-predicted
+    /// infeasibility plus pop-time expiries.
+    deadline_drops: AtomicUsize,
+}
+
+/// What the router decided for one request.
+struct RouteDecision {
+    /// Chosen class index.
+    class: usize,
+    /// Per-request service-seconds prediction the decision was based on
+    /// (NaN for a probe), recorded so the caller logs exactly what the
+    /// router saw — not a re-query that a concurrent `observe` may have
+    /// seeded in the meantime.
+    predicted_s: f64,
+    /// Predicted *completion* seconds including queueing ahead (NaN when
+    /// unknown — a probe, or every class unseeded). The deadline shed
+    /// compares this against the request's remaining budget.
+    completion_s: f64,
 }
 
 /// Pick the class minimizing predicted completion time for a request in
@@ -182,12 +240,7 @@ struct ClassCtx<'a> {
 /// backlog (and each sub-queue's bounded depth caps how much can ever
 /// stack behind one slow class). Ties break toward the smaller
 /// per-replica backlog.
-///
-/// Returns the chosen class index and the per-request service prediction
-/// the decision was based on (NaN for a probe), so the caller records
-/// exactly what the router saw — not a re-query that a concurrent
-/// `observe` may have seeded in the meantime.
-fn route(classes: &[ClassCtx<'_>], bucket: usize) -> (usize, f64) {
+fn route(classes: &[ClassCtx<'_>], bucket: usize) -> RouteDecision {
     let mut best = 0usize;
     let mut best_cost = f64::INFINITY;
     let mut best_load = f64::INFINITY;
@@ -213,7 +266,11 @@ fn route(classes: &[ClassCtx<'_>], bucket: usize) -> (usize, f64) {
             best_pred = pred.unwrap_or(f64::NAN);
         }
     }
-    (best, best_pred)
+    RouteDecision {
+        class: best,
+        predicted_s: best_pred,
+        completion_s: if best_cost.is_finite() { best_cost } else { f64::NAN },
+    }
 }
 
 /// One classified request as a worker recorded it.
@@ -222,6 +279,18 @@ struct ServedRecord {
     pred: usize,
     timing: RequestTiming,
     predicted_s: f64,
+    /// Whether the request completed within its deadline (`None`: no
+    /// deadline was set).
+    met_deadline: Option<bool>,
+}
+
+/// Per-request metadata a worker holds across the backend visit.
+struct Meta {
+    label: usize,
+    arrival: Instant,
+    bucket: usize,
+    predicted_s: f64,
+    deadline: Option<Instant>,
 }
 
 /// Per-worker raw output collected at join time.
@@ -233,12 +302,13 @@ struct WorkerOutput {
     batch_sizes: Vec<usize>,
 }
 
-/// The accelerator worker body: drain `queue` in micro-batches and
-/// classify through this replica's backend. `routed` is true when a
-/// router feeds this class (several classes): the worker then maintains
-/// the class backlog and folds observed service times back into the class
-/// cost model; in the single-class fast path (`queue` *is* the ingress)
-/// both are skipped — there is no routing decision to inform.
+/// The accelerator worker body: drain `queue` in micro-batches — expiring
+/// deadline-passed requests at the pop, without spending a batch slot on
+/// them — and classify through this replica's backend. `routed` is true
+/// when a router feeds this class (several classes): the worker then
+/// maintains the class backlog and folds observed service times back into
+/// the class cost model; in the single-class fast path (`queue` *is* the
+/// ingress) both are skipped — there is no routing decision to inform.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wid: usize,
@@ -265,23 +335,45 @@ fn worker_loop(
     let mut busy_s = 0.0f64;
     let batch_cap = class.batch.max(1);
     let mut batch: Vec<Routed> = Vec::with_capacity(batch_cap);
-    let mut metas: Vec<(usize, Instant, usize, f64)> = Vec::with_capacity(batch_cap);
+    let mut metas: Vec<Meta> = Vec::with_capacity(batch_cap);
     let mut maps: Vec<SparseMap<f32>> = Vec::with_capacity(batch_cap);
     loop {
-        queue.pop_batch(batch_cap, &mut batch);
+        // Deadline-passed requests are discarded inside the queue lock:
+        // they must not waste a batch slot, let alone a backend visit.
+        // The pop returns promptly on an all-reject drain so the class
+        // backlog and drop books update *before* the next routing
+        // decision — the router must not see phantom backlog.
+        let expired =
+            queue.pop_batch_where(batch_cap, &mut batch, |r| r.expired(Instant::now()));
+        if expired > 0 {
+            class.deadline_drops.fetch_add(expired, Ordering::SeqCst);
+            if routed {
+                class.backlog.fetch_sub(expired, Ordering::SeqCst);
+            }
+        }
         if batch.is_empty() {
+            if expired > 0 {
+                continue; // expiries accounted; look for real work again
+            }
             break; // closed and drained, or aborted
         }
         let n = batch.len();
         metas.clear();
         maps.clear();
         for req in batch.drain(..) {
-            metas.push((req.label, req.enqueued, req.bucket, req.predicted_s));
+            metas.push(Meta {
+                label: req.label,
+                arrival: req.arrival,
+                bucket: req.bucket,
+                predicted_s: req.predicted_s,
+                deadline: req.deadline,
+            });
             maps.push(req.map);
         }
         let t0 = Instant::now();
         let outcome = catch_unwind(AssertUnwindSafe(|| backend.classify_batch(&maps)));
         let visit_s = t0.elapsed().as_secs_f64();
+        let done = Instant::now();
         if routed {
             // The visit is over: these requests leave the class's routing
             // backlog whatever the outcome.
@@ -312,20 +404,26 @@ fn worker_loop(
         // request's event-count bucket.
         let service_s = visit_s / n as f64;
         if routed {
-            for &(_, _, bucket, _) in &metas {
-                class.cost.observe(bucket, service_s);
+            for m in &metas {
+                class.cost.observe(m.bucket, service_s);
             }
         }
         let mut failed = false;
-        for (&(label, enqueued, _bucket, predicted_s), res) in metas.iter().zip(results) {
+        for (m, res) in metas.iter().zip(results) {
             match res {
                 Ok(c) => {
                     let timing = RequestTiming {
-                        e2e_s: enqueued.elapsed().as_secs_f64(),
+                        e2e_s: done.duration_since(m.arrival).as_secs_f64(),
                         service_s,
                         sim_cycles: c.sim_cycles,
                     };
-                    records.push(ServedRecord { label, pred: c.pred, timing, predicted_s });
+                    records.push(ServedRecord {
+                        label: m.label,
+                        pred: c.pred,
+                        timing,
+                        predicted_s: m.predicted_s,
+                        met_deadline: m.deadline.map(|dl| done <= dl),
+                    });
                 }
                 Err(e) => {
                     fail(e.to_string());
@@ -352,13 +450,25 @@ pub fn run_server(
     backend: &dyn Backend,
     cfg: &ServerConfig,
 ) -> Result<ServerResult, PipelineError> {
+    let source = SyntheticSource::new(profile.clone(), cfg.n_requests, cfg.seed);
+    run_server_source(Box::new(source), backend, cfg)
+}
+
+/// [`run_server`] over an arbitrary [`EventSource`] — replayed datasets,
+/// tailed capture files, or anything implementing the trait. The source
+/// owns the stream length; `cfg.n_requests` is ignored.
+pub fn run_server_source(
+    source: Box<dyn EventSource>,
+    backend: &dyn Backend,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
     assert!(cfg.workers >= 1, "need at least one worker replica");
     let slots = vec![ClassSlots {
         name: backend.name().to_string(),
         batch: cfg.batch.max(1),
         backends: vec![backend; cfg.workers],
     }];
-    serve_classes(profile, slots, cfg)
+    serve_classes(source, slots, cfg)
 }
 
 /// Run the serving pipeline over a **heterogeneous** [`ReplicaPool`]: each
@@ -368,6 +478,16 @@ pub fn run_server(
 /// the pool defines the shape.
 pub fn run_pool(
     profile: &DatasetProfile,
+    pool: &ReplicaPool,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    let source = SyntheticSource::new(profile.clone(), cfg.n_requests, cfg.seed);
+    run_pool_source(Box::new(source), pool, cfg)
+}
+
+/// [`run_pool`] over an arbitrary [`EventSource`].
+pub fn run_pool_source(
+    source: Box<dyn EventSource>,
     pool: &ReplicaPool,
     cfg: &ServerConfig,
 ) -> Result<ServerResult, PipelineError> {
@@ -381,12 +501,12 @@ pub fn run_pool(
             backends: c.replicas.iter().map(|b| b.as_ref()).collect(),
         })
         .collect();
-    serve_classes(profile, slots, cfg)
+    serve_classes(source, slots, cfg)
 }
 
-/// The shared serving spine behind [`run_server`] and [`run_pool`].
+/// The shared serving spine behind every entry point.
 fn serve_classes(
-    profile: &DatasetProfile,
+    source: Box<dyn EventSource>,
     slots: Vec<ClassSlots<'_>>,
     cfg: &ServerConfig,
 ) -> Result<ServerResult, PipelineError> {
@@ -410,48 +530,79 @@ fn serve_classes(
             // sub-queue back-pressures the router, which lets the ingress
             // saturate, where the shedding decision is made and counted.
             // (Trade-off vs the single-class path: requests already routed
-            // into a sub-queue are no longer evictable, so under drop-
-            // oldest the very stalest in-flight requests survive while
-            // ingress-queued ones shed.)
+            // into a sub-queue are no longer evictable by drop-oldest —
+            // though a deadline can still expire them at the worker pop.)
             queue: AdmissionQueue::new(cfg.queue_depth, DropPolicy::Block),
             backlog: AtomicUsize::new(0),
             cost: CostModel::new(),
+            deadline_drops: AtomicUsize::new(0),
             name: c.name,
             batch: c.batch.max(1),
             backends: c.backends,
         })
         .collect();
     let first_error: Mutex<Option<String>> = Mutex::new(None);
+    let deadline_offered = AtomicUsize::new(0);
+    let deadline_ingress = AtomicUsize::new(0);
+    let (w, h) = source.geometry();
     let (tx_ev, rx_ev) =
-        sync_channel::<(usize, Vec<crate::events::Event>)>(cfg.queue_depth.max(1));
+        sync_channel::<super::ingest::SourcedRequest>(cfg.queue_depth.max(1));
 
     let mut outputs: Vec<WorkerOutput> = Vec::new();
     std::thread::scope(|s| {
-        // Stage 1: synthetic event camera.
-        let p1 = profile.clone();
-        let (n, seed) = (cfg.n_requests, cfg.seed);
-        let source = s.spawn(move || {
-            let mut rng = Rng::new(seed);
-            for i in 0..n {
-                let class = i % p1.n_classes;
-                let events = p1.sample(class, &mut rng);
-                if tx_ev.send((class, events)).is_err() {
-                    return; // downstream hung up early
+        let error_ref = &first_error;
+
+        // Stage 1: the event source (synthetic camera, dataset replay, or
+        // capture tail) — owns pacing and arrival timestamps.
+        let src_thread = s.spawn(move || {
+            let mut src = source;
+            loop {
+                match src.next_request() {
+                    Ok(Some(req)) => {
+                        if tx_ev.send(req).is_err() {
+                            return; // downstream hung up early
+                        }
+                    }
+                    Ok(None) => return, // stream complete
+                    Err(e) => {
+                        // Record the failure and end the stream; the
+                        // stages downstream drain what was already
+                        // admitted and exit cleanly.
+                        error_ref
+                            .lock()
+                            .unwrap()
+                            .get_or_insert_with(|| format!("event source: {e}"));
+                        return;
+                    }
                 }
             }
         });
 
-        // Stage 2: representation builder + admission control.
-        let (w, h, clip) = (profile.w, profile.h, cfg.clip);
+        // Stage 2: representation builder + admission control, including
+        // the ingress deadline check.
+        let (clip, slo) = (cfg.clip, cfg.slo);
         let ingress_ref = &ingress;
+        let offered_ref = &deadline_offered;
+        let ingress_exp_ref = &deadline_ingress;
         let repr = s.spawn(move || {
-            for (label, events) in rx_ev.iter() {
-                let map = histogram2_norm(&events, w, h, clip);
+            for sr in rx_ev.iter() {
+                let deadline = slo.map(|d| sr.arrival + d);
+                if deadline.is_some() {
+                    offered_ref.fetch_add(1, Ordering::SeqCst);
+                }
+                // Drop already-expired requests before paying for their
+                // representation — the cheapest possible shed.
+                if deadline.is_some_and(|dl| Instant::now() >= dl) {
+                    ingress_exp_ref.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                let map = histogram2_norm(&sr.events, w, h, clip);
                 let req = Routed {
-                    label,
+                    label: sr.label,
                     bucket: CostModel::bucket_of(map.nnz()),
                     map,
-                    enqueued: Instant::now(),
+                    arrival: sr.arrival,
+                    deadline,
                     predicted_s: f64::NAN,
                 };
                 if ingress_ref.push(req).is_err() {
@@ -462,15 +613,36 @@ fn serve_classes(
         });
 
         // Stage 3: the cost-aware router — admitted requests to class
-        // sub-queues by predicted completion time. Only spawned when there
-        // is a routing decision to make.
+        // sub-queues by predicted completion time, shedding requests no
+        // class can finish in time. Only spawned when there is a routing
+        // decision to make.
         let classes_ref: &[ClassCtx<'_>] = &classes;
         let router = has_router.then(|| {
             s.spawn(move || {
                 while let Some(mut req) = ingress_ref.pop() {
-                    let (ci, predicted_s) = route(classes_ref, req.bucket);
-                    let class = &classes_ref[ci];
-                    req.predicted_s = predicted_s;
+                    let d = route(classes_ref, req.bucket);
+                    if let Some(dl) = req.deadline {
+                        let now = Instant::now();
+                        // Shed when the deadline has passed, or when even
+                        // the *best* class's predicted completion misses
+                        // it. An unknown completion (probe traffic, cold
+                        // pool) is never shed predictively — the probe's
+                        // value is the cost observation itself.
+                        let predicted_done = d.completion_s.is_finite().then(|| {
+                            // Clamp: any sane SLO is far under 1e6 s, and
+                            // `from_secs_f64` must not overflow on a
+                            // pathological EWMA.
+                            now + Duration::from_secs_f64(d.completion_s.clamp(0.0, 1e6))
+                        });
+                        if now >= dl || predicted_done.is_some_and(|t| t > dl) {
+                            classes_ref[d.class]
+                                .deadline_drops
+                                .fetch_add(1, Ordering::SeqCst);
+                            continue;
+                        }
+                    }
+                    let class = &classes_ref[d.class];
+                    req.predicted_s = d.predicted_s;
                     class.backlog.fetch_add(1, Ordering::SeqCst);
                     if class.queue.push(req).is_err() {
                         break; // aborted downstream
@@ -483,7 +655,6 @@ fn serve_classes(
         });
 
         // Stage 4: per-class accelerator worker pools.
-        let error_ref = &first_error;
         let mut handles = Vec::new();
         let mut next_wid = 0usize;
         for (ci, class) in classes.iter().enumerate() {
@@ -504,23 +675,36 @@ fn serve_classes(
             h.join().expect("router thread");
         }
         repr.join().expect("repr thread");
-        source.join().expect("source thread");
+        src_thread.join().expect("source thread");
     });
 
     outputs.sort_by_key(|o| o.wid);
     let (submitted, dropped, _still_queued) = ingress.stats();
     let processed: usize = outputs.iter().map(|o| o.records.len()).sum();
-    let in_flight = submitted.saturating_sub(dropped + processed);
+    // Deadline sheds past admission (router + worker pop) — these were
+    // submitted but intentionally never classified.
+    let deadline_shed: usize =
+        classes.iter().map(|c| c.deadline_drops.load(Ordering::SeqCst)).sum();
+    let in_flight = submitted.saturating_sub(dropped + processed + deadline_shed);
 
     if let Some(msg) = first_error.into_inner().unwrap() {
         return Err(PipelineError { msg, completed: processed, in_flight, dropped });
     }
     // Clean completion conserves requests: everything admitted was either
-    // served or dropped (stranded requests only exist on the Err path).
+    // served, dropped, or shed on deadline (stranded requests only exist
+    // on the Err path).
     debug_assert_eq!(in_flight, 0, "completed run stranded {in_flight} request(s)");
 
     let wall_s = t_start.elapsed().as_secs_f64();
-    let mut metrics = Metrics { started: t_start, dropped, wall_s, ..Metrics::default() };
+    let mut metrics = Metrics {
+        started: t_start,
+        dropped,
+        wall_s,
+        deadline_offered: deadline_offered.load(Ordering::SeqCst),
+        deadline_ingress: deadline_ingress.load(Ordering::SeqCst),
+        deadline_router: deadline_shed,
+        ..Metrics::default()
+    };
     let mut predictions = Vec::with_capacity(processed);
     for o in &outputs {
         let service: Vec<f64> = o.records.iter().map(|r| r.timing.service_s).collect();
@@ -539,6 +723,11 @@ fn serve_classes(
         metrics.batch_sizes.extend_from_slice(&o.batch_sizes);
         for r in &o.records {
             metrics.record(r.timing, r.pred == r.label);
+            match r.met_deadline {
+                Some(true) => metrics.deadline_met += 1,
+                Some(false) => metrics.deadline_missed += 1,
+                None => {}
+            }
             predictions.push(Prediction { label: r.label, pred: r.pred, worker: o.wid });
         }
     }
@@ -582,6 +771,7 @@ fn serve_classes(
             service: PercentileReport::from_samples(&service),
             cost_err: if err_n > 0 { err_sum / err_n as f64 } else { f64::NAN },
             unseeded,
+            deadline_drops: class.deadline_drops.load(Ordering::SeqCst),
         });
     }
     Ok(ServerResult { metrics, predictions })
@@ -612,6 +802,10 @@ mod tests {
         assert_eq!(r.metrics.per_class.len(), 1);
         assert_eq!(r.metrics.per_class[0].served, 12);
         assert_eq!(r.metrics.per_class[0].replicas, 3);
+        // No SLO: the deadline books stay empty and attainment is N/A.
+        assert_eq!(r.metrics.deadline_offered, 0);
+        assert_eq!(r.metrics.deadline_drops(), 0);
+        assert_eq!(r.metrics.slo_attainment(), None);
     }
 
     /// Micro-batching is a scheduling detail: every request is still served
@@ -686,11 +880,58 @@ mod tests {
                 c.class,
                 c.batch
             );
+            assert_eq!(c.deadline_drops, 0, "no SLO ⇒ no deadline sheds");
         }
         // Worker stats carry their class name for the report.
         for w in &r.metrics.per_worker {
             assert!(w.class == "func" || w.class == "func-b", "class: {}", w.class);
         }
+    }
+
+    /// A zero SLO expires every request at the ingress: nothing reaches a
+    /// worker, the drop is accounted as an ingress deadline drop, and
+    /// attainment is 0.
+    #[test]
+    fn zero_slo_expires_everything_at_ingress() {
+        let profile = DatasetProfile::n_mnist();
+        let backend = Functional::new(qnet_for(&profile));
+        let cfg = ServerConfig {
+            n_requests: 8,
+            seed: 4,
+            workers: 2,
+            slo: Some(Duration::ZERO),
+            ..Default::default()
+        };
+        let r = run_server(&profile, &backend, &cfg).unwrap();
+        assert_eq!(r.metrics.total, 0, "an expired request must never be served");
+        assert!(r.predictions.is_empty());
+        assert_eq!(r.metrics.deadline_offered, 8);
+        assert_eq!(r.metrics.deadline_ingress, 8);
+        assert_eq!(r.metrics.deadline_router, 0);
+        assert_eq!(r.metrics.dropped, 0, "deadline drops are not queue-full drops");
+        assert_eq!(r.metrics.offered(), 8);
+        assert_eq!(r.metrics.slo_attainment(), Some(0.0));
+    }
+
+    /// A generous SLO on an unloaded pool changes nothing: everything is
+    /// served, everything meets its deadline, attainment is 1.
+    #[test]
+    fn generous_slo_serves_everything_in_deadline() {
+        let profile = DatasetProfile::n_mnist();
+        let backend = Functional::new(qnet_for(&profile));
+        let cfg = ServerConfig {
+            n_requests: 10,
+            seed: 4,
+            workers: 2,
+            slo: Some(Duration::from_secs(60)),
+            ..Default::default()
+        };
+        let r = run_server(&profile, &backend, &cfg).unwrap();
+        assert_eq!(r.metrics.total, 10);
+        assert_eq!(r.metrics.deadline_offered, 10);
+        assert_eq!(r.metrics.deadline_met, 10);
+        assert_eq!(r.metrics.deadline_drops(), 0);
+        assert_eq!(r.metrics.slo_attainment(), Some(1.0));
     }
 
     /// A backend that errors mid-stream aborts cleanly with in-flight
@@ -722,5 +963,44 @@ mod tests {
         let err = run_server(&profile, &backend, &cfg).unwrap_err();
         assert!(err.msg.contains("injected fault"), "msg: {}", err.msg);
         assert!(err.completed < 16);
+    }
+
+    /// An erroring event source surfaces as a `PipelineError` naming the
+    /// source, after the already-admitted prefix was served.
+    #[test]
+    fn source_error_surfaces_as_pipeline_error() {
+        use crate::coordinator::ingest::{IngestError, SourcedRequest};
+        struct FailingSource {
+            inner: SyntheticSource,
+            after: usize,
+            emitted: usize,
+        }
+        impl EventSource for FailingSource {
+            fn name(&self) -> &str {
+                "failing"
+            }
+            fn geometry(&self) -> (usize, usize) {
+                self.inner.geometry()
+            }
+            fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+                if self.emitted >= self.after {
+                    return Err(IngestError("sensor unplugged".into()));
+                }
+                self.emitted += 1;
+                self.inner.next_request()
+            }
+        }
+        let profile = DatasetProfile::n_mnist();
+        let backend = Functional::new(qnet_for(&profile));
+        let source = FailingSource {
+            inner: SyntheticSource::new(profile, 100, 3),
+            after: 4,
+            emitted: 0,
+        };
+        let cfg = ServerConfig { workers: 2, ..Default::default() };
+        let err = run_server_source(Box::new(source), &backend, &cfg).unwrap_err();
+        assert!(err.msg.contains("sensor unplugged"), "msg: {}", err.msg);
+        assert_eq!(err.completed, 4, "the admitted prefix is served before the abort");
+        assert_eq!(err.in_flight, 0);
     }
 }

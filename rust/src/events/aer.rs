@@ -15,6 +15,13 @@ pub struct Event {
 }
 
 /// Borrowed view over a time-ordered event slice with window helpers.
+///
+/// Every helper assumes the slice is time-sorted ([`is_time_sorted`]) —
+/// binary search over unsorted events silently returns wrong windows, not
+/// an error. Sortedness is *enforced at the ingestion boundary*
+/// ([`coordinator::ingest`](crate::coordinator::ingest)): file-backed
+/// sources reject or stable-sort unsorted samples per their
+/// `UnsortedPolicy` before events reach any consumer of this type.
 pub struct EventSlice<'a>(pub &'a [Event]);
 
 impl<'a> EventSlice<'a> {

@@ -46,34 +46,73 @@ fn get_u16(r: &mut impl Read) -> std::io::Result<u16> {
     Ok(u16::from_le_bytes(b))
 }
 
+/// Validate a count against the container's u32 fields. Every on-disk
+/// count is u32; a plain `as u32` cast would silently truncate anything
+/// larger and produce a file that *parses* — with the wrong shape.
+fn count_u32(v: u64, what: &str) -> std::io::Result<u32> {
+    u32::try_from(v).map_err(|_| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("{what} {v} exceeds the container's u32 limit ({})", u32::MAX),
+        )
+    })
+}
+
+/// Write the container header. For append-mode ("tail") files the writer
+/// may not know the final sample count up front; `n` is then a lower
+/// bound — `read_dataset` trusts it exactly, while a tailing reader
+/// follows whatever samples actually appear.
+pub fn write_header(f: &mut impl Write, w: usize, h: usize, n: usize) -> std::io::Result<()> {
+    // Validate every count before the first byte goes out: a failed
+    // header must not leave a partial prefix behind.
+    let wv = count_u32(w as u64, "width")?;
+    let hv = count_u32(h as u64, "height")?;
+    let nv = count_u32(n as u64, "sample count")?;
+    put_u32(f, MAGIC)?;
+    put_u32(f, VERSION)?;
+    put_u32(f, wv)?;
+    put_u32(f, hv)?;
+    put_u32(f, nv)
+}
+
+/// Serialize one sample (fixed prefix + events). Composable with
+/// [`write_header`] for camera-dump pipelines that append samples to a
+/// growing file a [`TailSource`](crate::coordinator::ingest::TailSource)
+/// follows.
+pub fn append_sample(f: &mut impl Write, s: &Sample) -> std::io::Result<()> {
+    // Validate before emitting: a rejected sample leaves no partial
+    // prefix in the (possibly live-tailed) file.
+    let ne = count_u32(s.events.len() as u64, "sample event count")?;
+    put_u32(f, s.label)?;
+    put_u32(f, ne)?;
+    for e in &s.events {
+        put_u32(f, e.t_us)?;
+        put_u16(f, e.x)?;
+        put_u16(f, e.y)?;
+        f.write_all(&[e.polarity as u8, 0u8])?;
+    }
+    Ok(())
+}
+
 /// Write a dataset file.
 pub fn write_dataset(path: &Path, w: usize, h: usize, samples: &[Sample]) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = BufWriter::new(File::create(path)?);
-    put_u32(&mut f, MAGIC)?;
-    put_u32(&mut f, VERSION)?;
-    put_u32(&mut f, w as u32)?;
-    put_u32(&mut f, h as u32)?;
-    put_u32(&mut f, samples.len() as u32)?;
+    write_header(&mut f, w, h, samples.len())?;
     for s in samples {
-        put_u32(&mut f, s.label)?;
-        put_u32(&mut f, s.events.len() as u32)?;
-        for e in &s.events {
-            put_u32(&mut f, e.t_us)?;
-            put_u16(&mut f, e.x)?;
-            put_u16(&mut f, e.y)?;
-            f.write_all(&[e.polarity as u8, 0u8])?;
-        }
+        append_sample(&mut f, s)?;
     }
     f.flush()
 }
 
 /// Bytes one serialized event occupies (t_us + x + y + polarity + pad).
-const EVENT_BYTES: u64 = 10;
+pub(crate) const EVENT_BYTES: u64 = 10;
 /// Bytes the fixed per-sample prefix occupies (label + n_events).
-const SAMPLE_HEADER_BYTES: u64 = 8;
+pub(crate) const SAMPLE_HEADER_BYTES: u64 = 8;
+/// Bytes the file header occupies (magic + version + w + h + n).
+pub(crate) const FILE_HEADER_BYTES: u64 = 20;
 /// `Vec::with_capacity` clamp for header-supplied counts. Counts are
 /// untrusted until the payload bytes actually arrive: a truncated or
 /// corrupt file must not demand a multi-GB allocation up front. Reads
@@ -84,52 +123,80 @@ fn invalid(msg: String) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
 }
 
+/// Read and validate the file header, returning `(w, h, n)`.
+pub(crate) fn read_file_header(f: &mut impl Read) -> std::io::Result<(usize, usize, usize)> {
+    let magic = get_u32(f)?;
+    if magic != MAGIC {
+        return Err(invalid(format!("bad magic {magic:#x}")));
+    }
+    let version = get_u32(f)?;
+    if version != VERSION {
+        return Err(invalid(format!("unsupported version {version}")));
+    }
+    let w = get_u32(f)? as usize;
+    let h = get_u32(f)? as usize;
+    let n = get_u32(f)? as usize;
+    Ok((w, h, n))
+}
+
+/// Decode `ne` serialized events (the caller has already validated `ne`
+/// against whatever byte budget applies).
+pub(crate) fn read_events(f: &mut impl Read, ne: usize) -> std::io::Result<Vec<Event>> {
+    let mut events = Vec::with_capacity(ne.min(MAX_PREALLOC));
+    for _ in 0..ne {
+        let t_us = get_u32(f)?;
+        let x = get_u16(f)?;
+        let y = get_u16(f)?;
+        let mut pb = [0u8; 2];
+        f.read_exact(&mut pb)?;
+        events.push(Event { t_us, x, y, polarity: pb[0] != 0 });
+    }
+    Ok(events)
+}
+
 /// Read a dataset file. Returns (w, h, samples).
 ///
-/// Header-supplied counts are validated against the file size before any
-/// allocation sized from them: a header claiming more samples/events than
-/// the remaining bytes could possibly hold is rejected as corrupt instead
-/// of being trusted with a `Vec::with_capacity` reservation.
+/// Header-supplied counts are validated against a running remaining-bytes
+/// budget before any allocation sized from them: a sample claiming more
+/// events than the *unconsumed* bytes could possibly hold (accounting for
+/// the fixed prefixes every later sample still needs) is rejected as
+/// corrupt instead of being trusted with a `Vec::with_capacity`
+/// reservation. Checking each claim against the whole file size — as an
+/// earlier revision did — lets several samples cumulatively over-claim
+/// the file while each passes individually.
 pub fn read_dataset(path: &Path) -> std::io::Result<(usize, usize, Vec<Sample>)> {
     let file = File::open(path)?;
     let file_len = file.metadata()?.len();
     let mut f = BufReader::new(file);
-    let magic = get_u32(&mut f)?;
-    if magic != MAGIC {
-        return Err(invalid(format!("bad magic {magic:#x}")));
-    }
-    let version = get_u32(&mut f)?;
-    if version != VERSION {
-        return Err(invalid(format!("unsupported version {version}")));
-    }
-    let w = get_u32(&mut f)? as usize;
-    let h = get_u32(&mut f)? as usize;
-    let n = get_u32(&mut f)? as usize;
+    let (w, h, n) = read_file_header(&mut f)?;
+    // Bytes available past the file header; every claim draws on this.
+    let mut remaining = file_len.saturating_sub(FILE_HEADER_BYTES);
     // Every sample needs at least its fixed prefix on disk.
-    if (n as u64).saturating_mul(SAMPLE_HEADER_BYTES) > file_len {
+    if (n as u64).saturating_mul(SAMPLE_HEADER_BYTES) > remaining {
         return Err(invalid(format!(
             "header claims {n} sample(s) but the file is only {file_len} byte(s)"
         )));
     }
     let mut samples = Vec::with_capacity(n.min(MAX_PREALLOC));
     for i in 0..n {
+        if remaining < SAMPLE_HEADER_BYTES {
+            return Err(invalid(format!("file truncated before sample {i}'s prefix")));
+        }
+        remaining -= SAMPLE_HEADER_BYTES;
         let label = get_u32(&mut f)?;
         let ne = get_u32(&mut f)? as usize;
-        if (ne as u64).saturating_mul(EVENT_BYTES) > file_len {
+        let need = (ne as u64).saturating_mul(EVENT_BYTES);
+        // Later samples' fixed prefixes are spoken for: this sample's
+        // events may only claim what's left after them.
+        let later_prefixes = ((n - 1 - i) as u64) * SAMPLE_HEADER_BYTES;
+        if need.saturating_add(later_prefixes) > remaining {
             return Err(invalid(format!(
-                "sample {i} claims {ne} event(s) but the file is only {file_len} byte(s)"
+                "sample {i} claims {ne} event(s) ({need} B) but only {remaining} byte(s) \
+                 remain for it and {later_prefixes} B of later sample prefixes"
             )));
         }
-        let mut events = Vec::with_capacity(ne.min(MAX_PREALLOC));
-        for _ in 0..ne {
-            let t_us = get_u32(&mut f)?;
-            let x = get_u16(&mut f)?;
-            let y = get_u16(&mut f)?;
-            let mut pb = [0u8; 2];
-            f.read_exact(&mut pb)?;
-            events.push(Event { t_us, x, y, polarity: pb[0] != 0 });
-        }
-        samples.push(Sample { label, events });
+        remaining -= need;
+        samples.push(Sample { label, events: read_events(&mut f, ne)? });
     }
     Ok((w, h, samples))
 }
@@ -243,6 +310,111 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         assert!(read_dataset(&path).is_err());
 
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Writer-side count validation (the "mocked-count" path: a real
+    /// `Vec` of `u32::MAX + 1` events would need ~70 GB, so the check is
+    /// exercised directly). Counts that fit the container's u32 fields
+    /// pass; anything larger must fail with `InvalidInput` instead of
+    /// silently truncating into a corrupt-but-parseable file.
+    #[test]
+    fn writer_rejects_counts_over_u32() {
+        for ok in [0u64, 1, u32::MAX as u64] {
+            assert_eq!(count_u32(ok, "samples").unwrap() as u64, ok);
+        }
+        for over in [u32::MAX as u64 + 1, u64::MAX] {
+            let err = count_u32(over, "sample count").unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput, "{err}");
+            assert!(err.to_string().contains("sample count"), "{err}");
+        }
+        // The same guard sits on the real writer path: a header claiming
+        // an over-u32 width fails before any bytes are written.
+        let mut sink = Vec::new();
+        if usize::BITS > 32 {
+            let too_wide = u32::MAX as u64 + 1;
+            let err = write_header(&mut sink, too_wide as usize, 1, 0).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput, "{err}");
+            assert!(sink.is_empty(), "failed header must not emit partial bytes");
+        }
+        write_header(&mut sink, 4, 4, 1).unwrap();
+        assert_eq!(sink.len(), FILE_HEADER_BYTES as usize);
+    }
+
+    /// Regression: samples that *cumulatively* over-claim the file while
+    /// each individually fits `file_len` must be rejected with
+    /// `InvalidData` at the first over-claim — the old guard compared
+    /// every claim against the whole file size, so the reader only
+    /// noticed at an `UnexpectedEof` deep inside the payload (after
+    /// honoring each claim with a prefix-sized preallocation).
+    #[test]
+    fn rejects_cumulative_overclaim_with_remaining_budget() {
+        let dir = std::env::temp_dir().join(format!("esda_io_cum_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cumulative.esda");
+        let mut bytes = Vec::new();
+        // Header: 2 samples. Sample 0 claims 6 events (60 B, present).
+        // Sample 1 claims 6 events again — individually under the 146-byte
+        // file size, but only 10 payload bytes remain.
+        for v in [MAGIC, VERSION, 8, 8, 2, /* label */ 0, /* ne */ 6] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0u8; 60]); // sample 0's events
+        for v in [/* label */ 1u32, /* ne */ 6] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0u8; 10]); // 10 of the 60 claimed bytes
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_dataset(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        assert!(err.to_string().contains("sample 1"), "{err}");
+        assert!(err.to_string().contains("remain"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The remaining-bytes budget reserves later samples' fixed prefixes:
+    /// a first sample claiming every non-prefix byte of a two-sample file
+    /// is an over-claim even though the bytes nominally exist.
+    #[test]
+    fn budget_reserves_later_sample_prefixes() {
+        let dir = std::env::temp_dir().join(format!("esda_io_pfx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prefix.esda");
+        let mut bytes = Vec::new();
+        // 2 samples; sample 0 claims 2 events (20 B) but the trailing
+        // bytes on disk are exactly its events + sample 1's prefix — so
+        // honoring the claim would eat sample 1's prefix.
+        for v in [MAGIC, VERSION, 8, 8, 2, 0, 2] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0u8; 20]); // sample 0's claimed events
+        bytes.truncate(bytes.len() - 8); // ...but sample 1's prefix is missing
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_dataset(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `write_header` + `append_sample` compose into the exact layout
+    /// `write_dataset` produces (the tail-file producer path).
+    #[test]
+    fn appended_samples_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("esda_io_app_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("appended.esda");
+        let samples = vec![
+            Sample { label: 1, events: vec![Event { t_us: 5, x: 2, y: 3, polarity: true }] },
+            Sample { label: 2, events: vec![] },
+        ];
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f, 16, 12, samples.len()).unwrap();
+        for s in &samples {
+            append_sample(&mut f, s).unwrap();
+        }
+        drop(f);
+        let (w, h, back) = read_dataset(&path).unwrap();
+        assert_eq!((w, h), (16, 12));
+        assert_eq!(back, samples);
         std::fs::remove_dir_all(&dir).ok();
     }
 

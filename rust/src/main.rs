@@ -12,7 +12,8 @@
 //!   run the two-step NAS and print the candidate table.
 //! - `serve      --dataset <name> [--requests N] [--backend sim|func|dense]
 //!               [--workers N] [--queue D] [--drop-policy block|drop-oldest]
-//!               [--batch B] [--pool class=count[@batch],...]`
+//!               [--batch B] [--pool class=count[@batch],...]
+//!               [--source synth|replay:path[@speed]|tail:path] [--slo-ms N]`
 //!   run the sharded serving runtime (accelerator worker replicas behind
 //!   an admission-controlled ingress queue; each worker drains up to B
 //!   already-queued requests per backend visit) and print per-worker
@@ -21,14 +22,21 @@
 //!   heterogeneous pool: per-replica backend instances grouped into
 //!   classes, each with its own batch affinity, and a cost-aware router
 //!   sending each request to the class minimizing predicted completion
-//!   time; the report adds a per-class breakdown.
+//!   time; the report adds a per-class breakdown. `--source` feeds the
+//!   runtime from a recorded `.esda` dataset replayed at wall-clock rate
+//!   × speed, or by tailing a growing capture file; `--slo-ms N` gives
+//!   every request the deadline `arrival + N ms` — expired requests are
+//!   dropped at the ingress, predicted-infeasible ones are shed at the
+//!   router, and the report adds SLO attainment with the deadline-drop
+//!   breakdown.
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
 
 use esda::coordinator::{
-    run_pool, run_server, Backend, Dense, DropPolicy, Functional, ReplicaPool, ReplicaSpec,
-    ServerConfig, Simulator,
+    run_pool, run_pool_source, run_server, run_server_source, Backend, Dense, DropPolicy,
+    EventSource, Functional, ReplicaPool, ReplicaSpec, ReplaySource, ServerConfig, Simulator,
+    TailSource,
 };
 use esda::events::{io::generate_dataset_files, repr::histogram2_norm, DatasetProfile};
 use esda::hwopt::{
@@ -238,6 +246,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if batch == 0 {
         return Err("--batch must be >= 1".into());
     }
+    let slo = match args.get("slo-ms") {
+        None => None,
+        Some(v) => {
+            let ms: f64 =
+                v.parse().map_err(|_| format!("--slo-ms: expected number, got '{v}'"))?;
+            // Upper bound keeps Duration::from_secs_f64 from panicking on
+            // absurd values; 1e9 ms ≈ 11.6 days is already no SLO at all.
+            if !(ms.is_finite() && ms > 0.0 && ms <= 1e9) {
+                return Err(format!("--slo-ms must be in (0, 1e9], got {ms}"));
+            }
+            Some(std::time::Duration::from_secs_f64(ms / 1e3))
+        }
+    };
     let cfg = ServerConfig {
         n_requests: args.get_usize("requests", 32)?,
         seed,
@@ -247,7 +268,46 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         drop_policy: DropPolicy::parse(policy_raw)
             .ok_or_else(|| format!("--drop-policy: expected block|drop-oldest, got '{policy_raw}'"))?,
         batch,
+        slo,
     };
+    let source_spec = esda::util::cli::parse_source_spec(args.get_or("source", "synth"))?;
+    // A non-synthetic source replaces the generated stream: build it now
+    // and check its geometry against the dataset profile the network was
+    // quantized for (a mismatched replay would build maps of the wrong
+    // shape). `--requests` caps a replay only when explicitly given; a
+    // tail follows the file until its producer goes quiet.
+    let source: Option<Box<dyn EventSource>> = match &source_spec {
+        esda::util::cli::SourceSpec::Synth => None,
+        esda::util::cli::SourceSpec::Replay { path, speed } => {
+            let mut src = ReplaySource::open(std::path::Path::new(path), *speed)
+                .map_err(|e| e.to_string())?;
+            if args.get("requests").is_some() {
+                src = src.with_limit(cfg.n_requests);
+            }
+            Some(Box::new(src))
+        }
+        esda::util::cli::SourceSpec::Tail { path } => {
+            let mut src = TailSource::open(std::path::Path::new(path))
+                .map_err(|e| e.to_string())?;
+            if args.get("requests").is_some() {
+                src = src.with_limit(cfg.n_requests);
+            }
+            Some(Box::new(src))
+        }
+    };
+    if let Some(src) = &source {
+        if src.geometry() != (p.w, p.h) {
+            let (sw, sh) = src.geometry();
+            return Err(format!(
+                "{}: geometry {sw}x{sh} does not match dataset '{}' ({}x{}) — pass the \
+                 matching --dataset",
+                src.name(),
+                p.name,
+                p.w,
+                p.h
+            ));
+        }
+    }
     let pooled = args.get("pool").is_some();
     if pooled && args.get("backend").is_some() {
         return Err(
@@ -302,7 +362,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             });
         }
         let pool = ReplicaPool::build(specs).map_err(|e| e.to_string())?;
-        run_pool(&p, &pool, &cfg).map_err(|e| e.to_string())?
+        match source {
+            Some(src) => run_pool_source(src, &pool, &cfg).map_err(|e| e.to_string())?,
+            None => run_pool(&p, &pool, &cfg).map_err(|e| e.to_string())?,
+        }
     } else {
         let backend_name = args.get_or("backend", "func").to_string();
         let backend: Box<dyn Backend> = match backend_name.as_str() {
@@ -322,7 +385,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                  `--pool dense={workers}` for one engine per replica)"
             );
         }
-        run_server(&p, backend.as_ref(), &cfg).map_err(|e| e.to_string())?
+        match source {
+            Some(src) => {
+                run_server_source(src, backend.as_ref(), &cfg).map_err(|e| e.to_string())?
+            }
+            None => run_server(&p, backend.as_ref(), &cfg).map_err(|e| e.to_string())?,
+        }
     };
     let m = &r.metrics;
     let e2e = m.e2e_percentiles();
@@ -342,6 +410,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         m.throughput(),
         m.per_worker.len(),
     );
+    if let Some(line) = esda::report::slo_line(m) {
+        println!("{line}");
+    }
     if m.mean_batch() > 1.0 {
         let bp = m.batch_percentiles();
         println!(

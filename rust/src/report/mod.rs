@@ -137,9 +137,9 @@ pub fn serving_table(m: &crate::coordinator::Metrics) -> Table {
 }
 
 /// Render the heterogeneous pool's per-class breakdown: traffic share,
-/// realized batch shape, utilization, and how well the routing cost model
-/// predicted observed service times (used by `esda serve --pool` and the
-/// routing example).
+/// realized batch shape, utilization, how well the routing cost model
+/// predicted observed service times, and per-class deadline sheds (used
+/// by `esda serve --pool` and the routing example).
 pub fn pool_table(m: &crate::coordinator::Metrics) -> Table {
     use crate::util::stats::fmt_secs;
     let wall_s = m.wall_seconds();
@@ -147,7 +147,7 @@ pub fn pool_table(m: &crate::coordinator::Metrics) -> Table {
         "serving — per-class breakdown (cost-aware routing)",
         &[
             "class", "replicas", "served", "share", "visits", "mean batch", "util", "svc p50",
-            "svc p99", "cost err", "probes",
+            "svc p99", "cost err", "probes", "ddl drops",
         ],
     );
     // NaN marks "no data" (class never served / never predicted-for):
@@ -169,9 +169,28 @@ pub fn pool_table(m: &crate::coordinator::Metrics) -> Table {
             fmt_secs(c.service.p99),
             pct(c.cost_err),
             c.unseeded.to_string(),
+            c.deadline_drops.to_string(),
         ]);
     }
     t
+}
+
+/// One-line SLO summary — attainment plus the deadline-drop breakdown
+/// (ingress expiries vs router/scheduling sheds), kept distinct from
+/// queue-full drops. `None` when the run carried no deadlines.
+pub fn slo_line(m: &crate::coordinator::Metrics) -> Option<String> {
+    let attainment = m.slo_attainment()?;
+    Some(format!(
+        "SLO attainment {:.1}% ({} of {} in deadline; {} served late) | deadline drops: \
+         {} ingress + {} router | {} queue-full drop(s)",
+        attainment * 100.0,
+        m.deadline_met,
+        m.deadline_offered,
+        m.deadline_missed,
+        m.deadline_ingress,
+        m.deadline_router,
+        m.dropped,
+    ))
 }
 
 #[cfg(test)]
@@ -231,6 +250,7 @@ mod tests {
             service: PercentileReport::from_samples(&[0.001, 0.002]),
             cost_err: 0.25,
             unseeded: 1,
+            deadline_drops: 3,
         });
         m.per_class.push(ClassStats {
             class: "sim".into(),
@@ -242,13 +262,35 @@ mod tests {
             service: PercentileReport::default(),
             cost_err: f64::NAN,
             unseeded: 0,
+            deadline_drops: 0,
         });
         let s = pool_table(&m).render();
         assert!(s.contains("func"), "{s}");
         assert!(s.contains("sim"), "{s}");
         assert!(s.contains("100%"), "func serves the full stream: {s}");
+        assert!(s.contains("ddl drops"), "per-class deadline sheds must render: {s}");
         // The zero-traffic class renders dashes, never a literal NaN.
         assert!(!s.contains("NaN"), "{s}");
+    }
+
+    /// The SLO line distinguishes deadline drops from queue-full drops
+    /// and is absent when no deadlines were configured.
+    #[test]
+    fn slo_line_renders_the_deadline_breakdown() {
+        use crate::coordinator::Metrics;
+        let mut m = Metrics::default();
+        assert_eq!(slo_line(&m), None, "no SLO ⇒ no line");
+        m.deadline_offered = 10;
+        m.deadline_met = 6;
+        m.deadline_missed = 1;
+        m.deadline_ingress = 1;
+        m.deadline_router = 2;
+        m.dropped = 0;
+        let line = slo_line(&m).unwrap();
+        assert!(line.contains("60.0%"), "{line}");
+        assert!(line.contains("1 ingress"), "{line}");
+        assert!(line.contains("2 router"), "{line}");
+        assert!(line.contains("0 queue-full"), "{line}");
     }
 
     #[test]

@@ -132,6 +132,59 @@ pub fn parse_pool_spec(s: &str) -> Result<Vec<PoolItem>, String> {
     Ok(out)
 }
 
+/// A parsed `--source` spec: where the serving runtime's requests come
+/// from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SourceSpec {
+    /// The synthetic event camera (default).
+    Synth,
+    /// Replay a recorded `.esda` dataset at `speed`× wall-clock rate.
+    Replay { path: String, speed: f64 },
+    /// Follow a growing `.esda` file (camera-dump pipeline).
+    Tail { path: String },
+}
+
+/// Parse a `--source` spec: `synth`, `replay:path[@speed]`, or
+/// `tail:path`. The substring after the *last* `@` is the replay speed
+/// when it parses as a number (which must then be finite and > 0);
+/// a non-numeric suffix is simply part of the path, so
+/// `replay:runs@v2/cap.esda` opens that file at 1× while
+/// `replay:cap.esda@2.5` replays at 2.5×. A path whose final component
+/// genuinely ends in `@<number>` needs an explicit speed suffix.
+pub fn parse_source_spec(s: &str) -> Result<SourceSpec, String> {
+    if s == "synth" {
+        return Ok(SourceSpec::Synth);
+    }
+    if let Some(rest) = s.strip_prefix("replay:") {
+        let (path, speed) = match rest.rsplit_once('@') {
+            Some((p, sp)) => match sp.parse::<f64>() {
+                Ok(v) if v.is_finite() && v > 0.0 => (p, v),
+                Ok(v) => {
+                    return Err(format!(
+                        "--source replay: speed must be finite and > 0, got {v}"
+                    ))
+                }
+                // Non-numeric suffix: the '@' belongs to the path.
+                Err(_) => (rest, 1.0),
+            },
+            None => (rest, 1.0),
+        };
+        if path.is_empty() {
+            return Err("--source replay: empty path".into());
+        }
+        return Ok(SourceSpec::Replay { path: path.to_string(), speed });
+    }
+    if let Some(path) = s.strip_prefix("tail:") {
+        if path.is_empty() {
+            return Err("--source tail: empty path".into());
+        }
+        return Ok(SourceSpec::Tail { path: path.to_string() });
+    }
+    Err(format!(
+        "--source: expected synth | replay:path[@speed] | tail:path, got '{s}'"
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +248,39 @@ mod tests {
         for bad in ["", "func", "func=", "func=0", "=3", "func=2@0", "func=2@x", "func=4,,sim=1"]
         {
             assert!(parse_pool_spec(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn source_spec_parses_every_variant() {
+        assert_eq!(parse_source_spec("synth").unwrap(), SourceSpec::Synth);
+        assert_eq!(
+            parse_source_spec("replay:data/n_mnist_test.esda").unwrap(),
+            SourceSpec::Replay { path: "data/n_mnist_test.esda".into(), speed: 1.0 }
+        );
+        assert_eq!(
+            parse_source_spec("replay:d.esda@2.5").unwrap(),
+            SourceSpec::Replay { path: "d.esda".into(), speed: 2.5 }
+        );
+        assert_eq!(
+            parse_source_spec("tail:/var/cam/dump.esda").unwrap(),
+            SourceSpec::Tail { path: "/var/cam/dump.esda".into() }
+        );
+        // A non-numeric suffix after '@' is part of the path, not a
+        // malformed speed.
+        assert_eq!(
+            parse_source_spec("replay:runs@v2/cap.esda").unwrap(),
+            SourceSpec::Replay { path: "runs@v2/cap.esda".into(), speed: 1.0 }
+        );
+    }
+
+    #[test]
+    fn source_spec_rejects_malformed_entries() {
+        for bad in [
+            "", "nope", "replay:", "replay:@2", "tail:", "replay:d.esda@0",
+            "replay:d.esda@-1", "replay:d.esda@inf", "replay:d.esda@nan",
+        ] {
+            assert!(parse_source_spec(bad).is_err(), "accepted '{bad}'");
         }
     }
 }

@@ -5,6 +5,14 @@
 use std::time::Instant;
 
 /// Streaming summary of a sample set.
+///
+/// Non-finite samples (NaN, ±∞) are **dropped on entry**: they carry no
+/// usable ordering or magnitude information — a single NaN used to panic
+/// the sort's `partial_cmp().unwrap()`, and an infinity poisons every
+/// mean/percentile it touches. Summarizing the finite subset keeps every
+/// statistic well-defined; callers that must treat non-finite input as an
+/// error should validate before pushing ([`Summary::n`] reflects only the
+/// samples actually kept).
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
     xs: Vec<f64>,
@@ -15,11 +23,15 @@ impl Summary {
         Summary { xs: Vec::new() }
     }
     pub fn from(xs: &[f64]) -> Self {
-        let mut s = Summary { xs: xs.to_vec() };
-        s.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut s = Summary { xs: xs.iter().copied().filter(|x| x.is_finite()).collect() };
+        // total_cmp: total order even if a non-finite ever slips through.
+        s.xs.sort_by(f64::total_cmp);
         s
     }
     pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
         let pos = self.xs.partition_point(|&v| v < x);
         self.xs.insert(pos, x);
     }
@@ -100,12 +112,22 @@ pub fn fmt_secs(s: f64) -> String {
 /// Ordinary least squares fit `y ≈ X·beta` via normal equations with
 /// Gaussian elimination. Used by the power-model calibration
 /// (`hwopt::power`). Returns beta of length `X[0].len()`.
+///
+/// Returns `None` for degenerate systems — including any non-finite
+/// entry in `X` or `y` (a NaN sample used to panic the pivot search's
+/// `partial_cmp().unwrap()`, and would otherwise propagate NaN into
+/// every coefficient) and ragged rows.
 pub fn ols(x_rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
     let n = x_rows.len();
     if n == 0 || n != y.len() {
         return None;
     }
     let k = x_rows[0].len();
+    if x_rows.iter().any(|r| r.len() != k || r.iter().any(|v| !v.is_finite()))
+        || y.iter().any(|v| !v.is_finite())
+    {
+        return None;
+    }
     // Normal equations: (XᵀX) beta = Xᵀy
     let mut a = vec![vec![0.0f64; k + 1]; k]; // augmented
     for r in 0..k {
@@ -114,10 +136,12 @@ pub fn ols(x_rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
         }
         a[r][k] = x_rows.iter().zip(y).map(|(row, &yy)| row[r] * yy).sum();
     }
-    // Gaussian elimination with partial pivoting.
+    // Gaussian elimination with partial pivoting (total_cmp: immune to
+    // any NaN that arithmetic might still manufacture).
     for col in 0..k {
-        let piv = (col..k).max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())?;
-        if a[piv][col].abs() < 1e-12 {
+        let piv = (col..k).max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))?;
+        let p = a[piv][col].abs();
+        if p.is_nan() || p < 1e-12 {
             return None;
         }
         a.swap(col, piv);
@@ -162,6 +186,33 @@ mod tests {
         assert_eq!(s.median(), 3.0);
     }
 
+    /// Regression: non-finite samples used to panic `Summary::from`'s
+    /// `partial_cmp().unwrap()` sort. They are dropped instead, and every
+    /// statistic stays well-defined over the finite subset.
+    #[test]
+    fn summary_drops_non_finite_samples() {
+        let s = Summary::from(&[f64::NAN, 1.0]);
+        assert_eq!(s.n(), 1);
+        assert_eq!(s.mean(), 1.0);
+        assert_eq!(s.median(), 1.0);
+        let s = Summary::from(&[f64::INFINITY, 2.0, f64::NEG_INFINITY, 4.0, f64::NAN]);
+        assert_eq!(s.n(), 2);
+        assert_eq!((s.min(), s.max()), (2.0, 4.0));
+        assert_eq!(s.mean(), 3.0);
+        // push applies the same policy (a NaN used to land unsorted at
+        // the front and corrupt every later percentile).
+        let mut s = Summary::new();
+        s.push(f64::NAN);
+        s.push(3.0);
+        s.push(f64::INFINITY);
+        assert_eq!(s.n(), 1);
+        assert_eq!(s.median(), 3.0);
+        // All-non-finite input degrades to the explicit empty summary.
+        let s = Summary::from(&[f64::NAN, f64::NAN]);
+        assert_eq!(s.n(), 0);
+        assert!(s.mean().is_nan() && s.percentile(50.0).is_nan());
+    }
+
     #[test]
     fn ols_recovers_plane() {
         // y = 2*a + 3*b + 1 (intercept as constant column)
@@ -173,6 +224,28 @@ mod tests {
         assert!((beta[0] - 1.0).abs() < 1e-8);
         assert!((beta[1] - 2.0).abs() < 1e-8);
         assert!((beta[2] - 3.0).abs() < 1e-8);
+    }
+
+    /// Regression: a NaN anywhere in the design matrix or targets used to
+    /// panic the pivot search; it now reports the system as degenerate.
+    #[test]
+    fn ols_rejects_non_finite_inputs() {
+        let mut xs: Vec<Vec<f64>> =
+            (0..6).map(|i| vec![1.0, i as f64, (2 * i) as f64 % 5.0]).collect();
+        let y: Vec<f64> = xs.iter().map(|r| r[1] + r[2]).collect();
+        assert!(ols(&xs, &y).is_some(), "finite baseline must fit");
+        xs[2][1] = f64::NAN;
+        assert_eq!(ols(&xs, &y), None, "NaN row must not panic or fit");
+        xs[2][1] = f64::INFINITY;
+        assert_eq!(ols(&xs, &y), None);
+        xs[2][1] = 2.0;
+        let mut y_bad = y.clone();
+        y_bad[4] = f64::NAN;
+        assert_eq!(ols(&xs, &y_bad), None, "NaN target must not panic or fit");
+        // Ragged rows are degenerate too, not an index panic.
+        let mut ragged = xs;
+        ragged[1] = vec![1.0];
+        assert_eq!(ols(&ragged, &y), None);
     }
 
     #[test]

@@ -4,8 +4,8 @@
 
 use esda::arch::HwConfig;
 use esda::coordinator::{
-    run_pool, run_server, Backend, BackendError, Classification, DropPolicy, Functional,
-    ReplicaPool, ReplicaSpec, ServerConfig, ServerResult, Simulator,
+    run_pool, run_server, run_server_source, Backend, BackendError, Classification, DropPolicy,
+    Functional, ReplaySource, ReplicaPool, ReplicaSpec, ServerConfig, ServerResult, Simulator,
 };
 use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::model::quant::{quantize_network, QuantizedNet};
@@ -49,6 +49,7 @@ fn pool_prediction_multiset_is_replica_invariant() {
         queue_depth: 4,
         drop_policy: DropPolicy::Block,
         batch: 1,
+        slo: None,
     };
     let single = run_server(&profile, &backend, &cfg(1)).expect("1-worker run");
     assert_eq!(single.metrics.total, 24);
@@ -83,6 +84,7 @@ fn simulator_pool_is_replica_invariant() {
         queue_depth: 2,
         drop_policy: DropPolicy::Block,
         batch: 1,
+        slo: None,
     };
     let a = run_server(&profile, &backend, &cfg(1)).expect("1-worker run");
     let b = run_server(&profile, &backend, &cfg(3)).expect("3-worker run");
@@ -142,6 +144,7 @@ fn saturated_queue_sheds_load_without_deadlock() {
         queue_depth: 1,
         drop_policy: DropPolicy::DropOldest,
         batch: 1,
+        slo: None,
     };
     let r = run_server(&profile, &backend, &cfg).expect("shedding run must complete");
     let m = &r.metrics;
@@ -168,6 +171,7 @@ fn blocking_admission_is_lossless_under_saturation() {
         queue_depth: 1,
         drop_policy: DropPolicy::Block,
         batch: 1,
+        slo: None,
     };
     let r = run_server(&profile, &backend, &cfg).expect("blocking run");
     assert_eq!(r.metrics.total, 16);
@@ -190,6 +194,7 @@ fn pool_shape_invariant_prediction_multiset() {
         queue_depth: 4,
         drop_policy: DropPolicy::Block,
         batch: 1,
+        slo: None,
     };
     let baseline =
         run_server(&profile, &Functional::new(qnet.clone()), &cfg).expect("baseline run");
@@ -255,6 +260,7 @@ fn cost_aware_routing_starves_slow_class() {
         queue_depth: 4,
         drop_policy: DropPolicy::Block,
         batch: 1,
+        slo: None,
     };
     let baseline =
         run_server(&profile, &Functional::new(qnet.clone()), &cfg).expect("baseline run");
@@ -296,10 +302,12 @@ fn cost_aware_routing_starves_slow_class() {
 }
 
 /// Conservation under randomized configs — worker count, queue depth,
-/// batch caps, drop policy, pool shape, service jitter, and mid-stream
-/// backend failure: every generated request is accounted for exactly once
-/// (`submitted == served + dropped + in_flight`) and no request is served
-/// twice (backend classification count == recorded servings).
+/// batch caps, drop policy, pool shape, service jitter, an occasional
+/// randomized SLO, and mid-stream backend failure: every generated
+/// request is accounted for exactly once
+/// (`submitted == served + dropped + deadline-shed + in_flight`) and no
+/// request is served twice (backend classification count == recorded
+/// servings).
 #[test]
 fn serving_conserves_requests_property() {
     use esda::util::propcheck::{check, Gen};
@@ -342,6 +350,14 @@ fn serving_conserves_requests_property() {
             queue_depth: g.usize(1, 4),
             drop_policy: if g.bool() { DropPolicy::Block } else { DropPolicy::DropOldest },
             batch: g.usize(1, 4),
+            // Sometimes a (possibly very tight) deadline: requests may
+            // then leave the system via any of the three shed points, and
+            // the books must still balance.
+            slo: if g.chance(0.3) {
+                Some(Duration::from_micros(g.u64(1..=50_000)))
+            } else {
+                None
+            },
         };
         let fail_after = if g.chance(0.35) { Some(g.usize(0, n_requests)) } else { None };
         let delay = Duration::from_micros(g.u64(0..=400));
@@ -384,7 +400,7 @@ fn serving_conserves_requests_property() {
         match outcome {
             Ok(r) => {
                 assert_eq!(
-                    r.metrics.total + r.metrics.dropped,
+                    r.metrics.total + r.metrics.dropped + r.metrics.deadline_drops(),
                     n_requests,
                     "clean run must conserve the request stream"
                 );
@@ -396,6 +412,23 @@ fn serving_conserves_requests_property() {
                 );
                 let per_class: usize = r.metrics.per_class.iter().map(|c| c.served).sum();
                 assert_eq!(per_class, r.metrics.total);
+                // The per-class deadline sheds are exactly the global
+                // router-side count, and every served request was scored
+                // against its deadline when one existed.
+                let class_ddl: usize =
+                    r.metrics.per_class.iter().map(|c| c.deadline_drops).sum();
+                assert_eq!(class_ddl, r.metrics.deadline_router);
+                if cfg.slo.is_some() {
+                    assert_eq!(
+                        r.metrics.deadline_met + r.metrics.deadline_missed,
+                        r.metrics.total,
+                        "every served request must be scored against its deadline"
+                    );
+                    assert_eq!(r.metrics.deadline_offered, n_requests);
+                } else {
+                    assert_eq!(r.metrics.deadline_offered, 0);
+                    assert_eq!(r.metrics.deadline_drops(), 0);
+                }
             }
             Err(e) => {
                 assert!(
@@ -430,6 +463,7 @@ fn batched_pool_prediction_multiset_is_batch_invariant() {
         queue_depth: 8,
         drop_policy: DropPolicy::Block,
         batch,
+        slo: None,
     };
     let mut base: Option<Vec<(usize, usize)>> = None;
     for batch in [1usize, 4, 16] {
@@ -449,4 +483,225 @@ fn batched_pool_prediction_multiset_is_batch_invariant() {
             Some(b) => assert_eq!(&ms, b, "batch cap {batch} changed predictions"),
         }
     }
+}
+
+/// Sorted-multiset subset check: every (label, pred) pair in `sub` must
+/// appear in `sup` with at least the same multiplicity.
+fn is_multisubset(sub: &[(usize, usize)], sup: &[(usize, usize)]) -> bool {
+    let mut j = 0;
+    'outer: for x in sub {
+        while j < sup.len() {
+            match sup[j].cmp(x) {
+                std::cmp::Ordering::Less => j += 1,
+                std::cmp::Ordering::Equal => {
+                    j += 1;
+                    continue 'outer;
+                }
+                std::cmp::Ordering::Greater => return false,
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// The acceptance test for router-level SLO shedding: a pool whose every
+/// class is far slower than the deadline serves only the cost-model
+/// probes — every other request is shed at the router (or expires at the
+/// pop) and **never occupies a replica**. The backend call counter is the
+/// proof: infeasible requests cost zero accelerator time.
+#[test]
+fn router_sheds_infeasible_deadlines_before_replicas() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    struct SlowCounting {
+        inner: Functional,
+        calls: Arc<AtomicUsize>,
+        delay: Duration,
+    }
+    impl Backend for SlowCounting {
+        fn name(&self) -> &str {
+            "slow-counting"
+        }
+        fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(self.delay);
+            self.inner.classify(map)
+        }
+    }
+
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let n_requests = 20;
+    let cfg = ServerConfig {
+        n_requests,
+        seed: 42,
+        clip: 8.0,
+        workers: 1,
+        queue_depth: 4,
+        drop_policy: DropPolicy::Block,
+        batch: 1,
+        // Far tighter than the 30 ms service time: once a class's cost
+        // model seeds, no predicted completion can meet this.
+        slo: Some(Duration::from_millis(4)),
+    };
+    // No-SLO baseline on the same seed: whatever the SLO'd run serves
+    // must predict identically (shedding changes *who* gets served,
+    // never *what* a served request predicts).
+    let baseline_cfg = ServerConfig { slo: None, ..cfg.clone() };
+    let baseline =
+        run_server(&profile, &Functional::new(qnet.clone()), &baseline_cfg).expect("baseline");
+    let base = prediction_multiset(&baseline);
+
+    let calls = Arc::new(AtomicUsize::new(0));
+    let (qa, qb) = (qnet.clone(), qnet);
+    let (ca, cb) = (Arc::clone(&calls), Arc::clone(&calls));
+    let delay = Duration::from_millis(30);
+    let pool = ReplicaPool::build(vec![
+        ReplicaSpec::new("a", 1, 1, move |_| {
+            Ok(Box::new(SlowCounting {
+                inner: Functional::new(qa.clone()),
+                calls: Arc::clone(&ca),
+                delay,
+            }))
+        }),
+        ReplicaSpec::new("b", 1, 1, move |_| {
+            Ok(Box::new(SlowCounting {
+                inner: Functional::new(qb.clone()),
+                calls: Arc::clone(&cb),
+                delay,
+            }))
+        }),
+    ])
+    .expect("pool build");
+    let r = run_pool(&profile, &pool, &cfg).expect("pool run");
+    let m = &r.metrics;
+    let classified = calls.load(Ordering::SeqCst);
+
+    // Conservation with the deadline books.
+    assert_eq!(m.total, classified, "every classification is recorded");
+    assert_eq!(
+        m.total + m.dropped + m.deadline_drops(),
+        n_requests,
+        "served + queue drops + deadline drops must cover the stream"
+    );
+    // The heart of the test: the replicas saw (almost) only the probe
+    // traffic — infeasible requests were shed without a backend call.
+    assert!(
+        classified <= 6,
+        "replicas classified {classified} of {n_requests} requests — infeasible \
+         deadlines were not shed upstream"
+    );
+    assert!(
+        m.deadline_router >= n_requests - 6 - m.deadline_ingress,
+        "deadline sheds must land at the router/pop: router {} ingress {}",
+        m.deadline_router,
+        m.deadline_ingress
+    );
+    let class_ddl: usize = m.per_class.iter().map(|c| c.deadline_drops).sum();
+    assert_eq!(class_ddl, m.deadline_router, "per-class deadline books must balance");
+    // Attainment reflects reality: the 30 ms probes all finished past the
+    // 4 ms deadline, so nothing was served in time.
+    assert_eq!(m.deadline_met + m.deadline_missed, m.total);
+    assert_eq!(m.slo_attainment(), Some(0.0));
+    // Served multiset invariance: what *was* served predicts exactly as
+    // the no-SLO baseline did.
+    assert!(
+        is_multisubset(&prediction_multiset(&r), &base),
+        "SLO shedding changed a served request's prediction"
+    );
+}
+
+/// The single-class path (no router thread) honors deadlines too: a slow
+/// replica behind a deep queue sheds queued-too-long requests at the
+/// worker pop, scores every served request against its deadline, and the
+/// served multiset stays a sub-multiset of the no-SLO baseline.
+#[test]
+fn single_class_deadlines_enforced_without_router() {
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let cfg = ServerConfig {
+        n_requests: 24,
+        seed: 42,
+        clip: 8.0,
+        workers: 1,
+        queue_depth: 8,
+        drop_policy: DropPolicy::Block,
+        batch: 1,
+        // 10 ms service vs a 60 ms deadline: the first requests are
+        // served comfortably in time (robust to CI jitter), then the
+        // backlog (up to 8 × 10 ms of queue wait behind a full depth-8
+        // queue) pushes later ones past their deadline before the worker
+        // reaches them.
+        slo: Some(Duration::from_millis(60)),
+    };
+    let baseline_cfg = ServerConfig { slo: None, ..cfg.clone() };
+    let baseline =
+        run_server(&profile, &Functional::new(qnet.clone()), &baseline_cfg).expect("baseline");
+    let base = prediction_multiset(&baseline);
+
+    let backend = throttled(&profile, 10, 10);
+    let r = run_server(&profile, &backend, &cfg).expect("slo run");
+    let m = &r.metrics;
+    assert_eq!(
+        m.total + m.dropped + m.deadline_drops(),
+        24,
+        "books must balance under deadline shedding"
+    );
+    assert!(m.total >= 1, "an unloaded worker must serve the first request");
+    assert!(
+        m.deadline_drops() >= 1,
+        "a 10 ms/req replica over 24 requests must blow the 60 ms SLO for some"
+    );
+    // No router ran: a single class, no probe accounting — the sheds are
+    // pop-time expiries attributed to that class.
+    assert_eq!(m.per_class.len(), 1);
+    assert_eq!(m.per_class[0].unseeded, 0);
+    assert_eq!(m.per_class[0].deadline_drops, m.deadline_router);
+    assert_eq!(m.deadline_met + m.deadline_missed, m.total);
+    assert_eq!(m.deadline_offered, 24);
+    let att = m.slo_attainment().expect("SLO configured");
+    assert!((0.0..1.0).contains(&att), "some but not all in deadline: {att}");
+    assert!(
+        is_multisubset(&prediction_multiset(&r), &base),
+        "deadline shedding changed a served request's prediction"
+    );
+}
+
+/// End-to-end over the real ingestion boundary: a generated dataset
+/// replayed (time-compressed) through the serving runtime with a generous
+/// SLO serves every sample within deadline — the `serve --source
+/// replay:path@speed --slo-ms N` path, minus the CLI.
+#[test]
+fn replay_source_serves_end_to_end_with_slo() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let dir = std::env::temp_dir().join(format!("esda_replay_e2e_{}", std::process::id()));
+    let (_train, test) =
+        esda::events::io::generate_dataset_files(&profile, &dir, 1, 2, 7).expect("gen");
+    let n = profile.n_classes * 2;
+
+    let cfg = ServerConfig {
+        workers: 2,
+        queue_depth: 8,
+        slo: Some(Duration::from_secs(60)),
+        ..Default::default()
+    };
+    let source = ReplaySource::open(&test, 1e6).expect("open replay");
+    let r = run_server_source(Box::new(source), &backend, &cfg).expect("replay serve");
+    let m = &r.metrics;
+    assert_eq!(m.total, n, "every replayed sample must be served");
+    assert_eq!(m.deadline_offered, n);
+    assert_eq!(m.slo_attainment(), Some(1.0), "unloaded run must meet a 60 s SLO");
+    assert_eq!(m.deadline_drops(), 0);
+    // Replay preserves the recorded labels (n_per_class_test = 2 of each).
+    for c in 0..profile.n_classes {
+        assert_eq!(
+            r.predictions.iter().filter(|p| p.label == c).count(),
+            2,
+            "class {c} must appear exactly twice"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
