@@ -1,0 +1,257 @@
+//! Autoscaling + cost-profile demo: the serving pool grows under
+//! deadline pressure, shrinks when idle, and a persisted cost profile
+//! eliminates the cold-start probe phase on the next run.
+//!
+//! Two parts:
+//! 1. a burst of requests slams a deliberately slow 1..4-replica class —
+//!    the controller scales it up (backlog + deadline-drop pressure),
+//!    then back down across the idle gap that follows; the scaling log
+//!    and the replica-band column show the trajectory, and the
+//!    conservation property (`served + dropped + deadline drops ==
+//!    offered`) holds throughout,
+//! 2. a two-class pool runs cold (cost-model probes), persists its
+//!    learned profile through `CostProfile::save`/`load`, and a second
+//!    run seeded from that file routes with **zero** probe requests.
+//!
+//! With `--report-out path` a machine-readable JSON summary is written —
+//! CI greps it for `null` to catch NaN/inf leaking into reports.
+//!
+//! Run: `cargo run --release --example autoscale -- --dataset n_mnist`
+//! (add `--smoke` for the quick CI-sized run)
+
+use esda::coordinator::{
+    run_pool, run_pool_source, AutoscaleConfig, Backend, BackendError, Classification,
+    CostProfile, EventSource, Functional, IngestError, ReplicaPool, ReplicaSpec, ServerConfig,
+    ServerResult, SourcedRequest,
+};
+use esda::events::DatasetProfile;
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::NetworkSpec;
+use esda::sparse::SparseMap;
+use esda::util::cli::Args;
+use esda::util::json::Json;
+use esda::util::Rng;
+use std::time::{Duration, Instant};
+
+/// A deliberately slow backend so load actually queues behind it.
+struct Throttled {
+    inner: Functional,
+    delay: Duration,
+}
+
+impl Backend for Throttled {
+    fn name(&self) -> &str {
+        "throttled-functional"
+    }
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        std::thread::sleep(self.delay);
+        self.inner.classify(map)
+    }
+}
+
+/// Burst-then-idle event source: emits each phase's requests
+/// back-to-back (arrival = now), sleeping the phase's gap before moving
+/// on — the load shape that makes an autoscaler earn its keep.
+struct BurstSource {
+    profile: DatasetProfile,
+    rng: Rng,
+    /// `(requests, idle gap after the phase)`.
+    phases: Vec<(usize, Duration)>,
+    phase: usize,
+    emitted_in_phase: usize,
+    emitted_total: usize,
+}
+
+impl EventSource for BurstSource {
+    fn name(&self) -> &str {
+        "burst"
+    }
+    fn geometry(&self) -> (usize, usize) {
+        (self.profile.w, self.profile.h)
+    }
+    fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+        while self.phase < self.phases.len() {
+            let (n, gap) = self.phases[self.phase];
+            if self.emitted_in_phase < n {
+                self.emitted_in_phase += 1;
+                let label = self.emitted_total % self.profile.n_classes;
+                self.emitted_total += 1;
+                let events = self.profile.sample(label, &mut self.rng);
+                return Ok(Some(SourcedRequest { label, events, arrival: Instant::now() }));
+            }
+            std::thread::sleep(gap);
+            self.phase += 1;
+            self.emitted_in_phase = 0;
+        }
+        Ok(None)
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["smoke"]).unwrap();
+    let smoke = args.has("smoke");
+    let name = args.get_or("dataset", "n_mnist");
+    let profile = DatasetProfile::by_name(name).expect("unknown dataset");
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 5);
+    let mut rng = Rng::new(11);
+    let calib: Vec<_> = (0..4)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            esda::events::repr::histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &weights, &calib);
+
+    // Part 1: scale up under deadline pressure, back down when idle.
+    let burst = if smoke { 24 } else { 60 };
+    let tail = 2;
+    let n_offered = burst + tail;
+    let source = BurstSource {
+        profile: profile.clone(),
+        rng: Rng::new(7),
+        // Burst, a long idle gap (several autoscaler windows), then a
+        // trickle so the run outlives the scale-down.
+        phases: vec![
+            (burst, Duration::from_millis(if smoke { 600 } else { 900 })),
+            (tail, Duration::ZERO),
+        ],
+        phase: 0,
+        emitted_in_phase: 0,
+        emitted_total: 0,
+    };
+    let qw = qnet.clone();
+    let pool = ReplicaPool::build(vec![ReplicaSpec::new("work", 1, 1, move |_| {
+        Ok(Box::new(Throttled {
+            inner: Functional::new(qw.clone()),
+            delay: Duration::from_millis(3),
+        }))
+    })
+    .with_max_replicas(4)])
+    .expect("pool build");
+    let cfg = ServerConfig {
+        queue_depth: 32,
+        slo: Some(Duration::from_millis(150)),
+        autoscale: Some(AutoscaleConfig {
+            interval: Duration::from_millis(10),
+            window: Duration::from_millis(100),
+            high_backlog: 2.0,
+            low_util: 0.3,
+        }),
+        ..Default::default()
+    };
+    let r = run_pool_source(Box::new(source), &pool, &cfg).expect("autoscaled serve");
+    let m = &r.metrics;
+    println!("== burst into work=1..4 (3 ms/req, SLO 150 ms) ==");
+    println!(
+        "  {} served / {} offered | {} deadline drop(s) | {} scaling event(s)",
+        m.total,
+        m.offered(),
+        m.deadline_drops(),
+        m.scaling_events.len(),
+    );
+    for line in esda::report::scaling_log(m) {
+        println!("  {line}");
+    }
+    if let Some(line) = esda::report::slo_line(m) {
+        println!("  {line}");
+    }
+    println!("{}", esda::report::pool_table(m).render());
+
+    // The demo is also an acceptance check: conservation holds, the
+    // class actually scaled, and the band was respected.
+    assert_eq!(
+        m.total + m.dropped + m.deadline_drops(),
+        n_offered,
+        "conservation must hold under autoscaling"
+    );
+    let c = &m.per_class[0];
+    assert!(
+        c.replicas_peak >= 2,
+        "the burst must scale the class up (peak {})",
+        c.replicas_peak
+    );
+    assert!(
+        (c.replicas_min..=c.replicas_max).contains(&c.replicas)
+            && c.replicas_peak <= c.replicas_max,
+        "replica counts must stay inside the band"
+    );
+    let scaled_down = m.scaling_events.iter().any(|e| e.to < e.from);
+    assert!(scaled_down, "the idle gap must scale the class back down");
+
+    // Part 2: cost-profile persistence kills the cold start.
+    let (qf, qs) = (qnet.clone(), qnet);
+    let two_class_pool = || {
+        let (qf, qs) = (qf.clone(), qs.clone());
+        ReplicaPool::build(vec![
+            ReplicaSpec::new("fast", 1, 4, move |_| Ok(Box::new(Functional::new(qf.clone())))),
+            ReplicaSpec::new("slow", 1, 1, move |_| {
+                Ok(Box::new(Throttled {
+                    inner: Functional::new(qs.clone()),
+                    delay: Duration::from_millis(3),
+                }))
+            }),
+        ])
+        .expect("pool build")
+    };
+    let cfg2 = ServerConfig {
+        n_requests: if smoke { 24 } else { 48 },
+        seed: 9,
+        queue_depth: 8,
+        ..Default::default()
+    };
+    let probes = |r: &ServerResult| -> usize {
+        r.metrics.per_class.iter().map(|c| c.unseeded).sum()
+    };
+    let cold = run_pool(&profile, &two_class_pool(), &cfg2).expect("cold run");
+    let profile_path =
+        std::env::temp_dir().join(format!("esda_autoscale_profile_{}.json", std::process::id()));
+    cold.metrics.cost_profile.save(&profile_path).expect("save profile");
+    let seeded_profile = CostProfile::load(&profile_path).expect("load profile");
+    let warm = run_pool(
+        &profile,
+        &two_class_pool(),
+        &ServerConfig { cost_profile: Some(seeded_profile), ..cfg2.clone() },
+    )
+    .expect("seeded run");
+    println!("== cost-profile persistence (fast+slow pool) ==");
+    println!(
+        "  cold run: {} probe request(s) before the routers seeded",
+        probes(&cold)
+    );
+    println!(
+        "  seeded run ({}): {} probe request(s)",
+        profile_path.display(),
+        probes(&warm)
+    );
+    assert!(probes(&cold) >= 1, "a cold pool must probe");
+    assert_eq!(probes(&warm), 0, "a seeded pool must not probe at all");
+
+    // Machine-readable summary (CI greps this for `null`).
+    if let Some(out) = args.get("report-out") {
+        let wall = m.wall_seconds();
+        let doc = Json::obj(vec![
+            ("offered", Json::Num(n_offered as f64)),
+            ("served", Json::Num(m.total as f64)),
+            ("queue_drops", Json::Num(m.dropped as f64)),
+            ("deadline_drops", Json::Num(m.deadline_drops() as f64)),
+            (
+                "conservation_ok",
+                Json::Bool(m.total + m.dropped + m.deadline_drops() == n_offered),
+            ),
+            ("slo_attainment", Json::Num(m.slo_attainment().unwrap_or(0.0))),
+            ("scaling_events", Json::Num(m.scaling_events.len() as f64)),
+            ("replicas_final", Json::Num(c.replicas as f64)),
+            ("replicas_peak", Json::Num(c.replicas_peak as f64)),
+            ("replicas_min", Json::Num(c.replicas_min as f64)),
+            ("replicas_max", Json::Num(c.replicas_max as f64)),
+            ("class_utilization", Json::Num(c.utilization(wall))),
+            ("probes_cold", Json::Num(probes(&cold) as f64)),
+            ("probes_seeded", Json::Num(probes(&warm) as f64)),
+        ]);
+        std::fs::write(out, doc.to_string()).expect("write report");
+        println!("report written -> {out}");
+    }
+    std::fs::remove_file(&profile_path).ok();
+}

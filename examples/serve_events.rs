@@ -88,7 +88,7 @@ fn main() {
         queue_depth: 4,
         drop_policy: DropPolicy::Block,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let sim = Simulator::new(qnet.clone(), HwConfig::uniform(n_ops, 16));
     let one = run_server(&profile, &sim, &lossless(1)).expect("serve x1");
@@ -120,7 +120,7 @@ fn main() {
         queue_depth: 1,
         drop_policy: DropPolicy::DropOldest,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let r = run_server(&profile, &throttled, &shed).expect("serve shedding");
     report("throttled replica, depth-1 queue, drop-oldest admission", &r);

@@ -17,7 +17,7 @@ use crate::model::plan::{ExecCtx, ExecPlan};
 use crate::model::quant::QuantizedNet;
 use crate::sparse::SparseMap;
 use std::fmt;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Default simulator cycle budget per inference (generous: deadlock and
 /// runaway detection live inside the simulator itself).
@@ -185,19 +185,25 @@ impl Backend for Dense {
 }
 
 /// How one replica class of a heterogeneous pool is instantiated and
-/// scheduled: a display name, a replica count, a batch affinity (the
-/// micro-batch cap its workers drain — dense engines want large batches,
-/// the cycle simulator wants batch 1), and a **factory** that builds one
+/// scheduled: a display name, a replica count (optionally a `min..max`
+/// range the autoscaler moves within), a batch affinity (the micro-batch
+/// cap its workers drain — dense engines want large batches, the cycle
+/// simulator wants batch 1), and a **factory** that builds one
 /// independent backend instance per replica.
 ///
 /// Per-replica instances are what make heterogeneous pools truly parallel:
 /// the homogeneous [`run_server`](super::serve::run_server) path shares a
 /// single backend across workers, which serializes the [`Dense`] engine
 /// behind its mutex — a pool built from `ReplicaSpec::dense` loads one
-/// engine per replica instead.
+/// engine per replica instead. The same factory is what lets the
+/// autoscaler grow a class **on demand**: only the `count` (= min)
+/// replicas are instantiated eagerly at pool build; replicas up to `max`
+/// are built by [`PoolClass::build_replica`] the first time the
+/// controller scales into them (and kept warm for re-activation).
 pub struct ReplicaSpec {
     class: String,
     count: usize,
+    max: usize,
     batch: usize,
     #[allow(clippy::type_complexity)]
     factory: Box<dyn Fn(usize) -> Result<Box<dyn Backend>, BackendError> + Send + Sync>,
@@ -212,7 +218,13 @@ impl ReplicaSpec {
         batch: usize,
         factory: impl Fn(usize) -> Result<Box<dyn Backend>, BackendError> + Send + Sync + 'static,
     ) -> ReplicaSpec {
-        ReplicaSpec { class: class.into(), count, batch: batch.max(1), factory: Box::new(factory) }
+        ReplicaSpec {
+            class: class.into(),
+            count,
+            max: count,
+            batch: batch.max(1),
+            factory: Box::new(factory),
+        }
     }
 
     /// Functional int8 replicas (each compiles its own [`ExecPlan`]).
@@ -248,6 +260,15 @@ impl ReplicaSpec {
         self.batch = batch.max(1);
         self
     }
+
+    /// Allow the autoscaler to grow this class up to `max` replicas (the
+    /// `class=min..max` CLI range syntax; floored at the base count).
+    /// Replicas beyond the base count are built lazily via the factory
+    /// when the controller first scales into them.
+    pub fn with_max_replicas(mut self, max: usize) -> ReplicaSpec {
+        self.max = max.max(self.count);
+        self
+    }
 }
 
 /// One instantiated replica class of a [`ReplicaPool`].
@@ -256,8 +277,27 @@ pub struct PoolClass {
     pub name: String,
     /// Micro-batch cap this class's workers drain per accelerator visit.
     pub batch: usize,
-    /// Independent backend instances, one per worker replica.
-    pub replicas: Vec<Box<dyn Backend>>,
+    /// Independent backend instances for the base (minimum) replica
+    /// count; shared (`Arc`) so the serving runtime can hand clones to
+    /// dynamically spawned worker threads.
+    pub replicas: Vec<Arc<dyn Backend>>,
+    /// Minimum active replicas (== `replicas.len()`).
+    pub min: usize,
+    /// Maximum replicas the autoscaler may grow to (== `min` when the
+    /// class is not scalable).
+    pub max: usize,
+    /// Retained factory for on-demand growth past `min`.
+    #[allow(clippy::type_complexity)]
+    factory: Box<dyn Fn(usize) -> Result<Box<dyn Backend>, BackendError> + Send + Sync>,
+}
+
+impl PoolClass {
+    /// Build replica `i`'s backend on demand (the autoscaler's scale-up
+    /// path; `i ∈ [min, max)` — the base replicas already exist).
+    pub fn build_replica(&self, i: usize) -> Result<Arc<dyn Backend>, BackendError> {
+        debug_assert!(i < self.max, "replica {i} beyond class '{}' max {}", self.name, self.max);
+        Ok(Arc::from((self.factory)(i)?))
+    }
 }
 
 /// A heterogeneous accelerator pool: differently-shaped replica classes
@@ -289,18 +329,38 @@ impl ReplicaPool {
                     spec.class
                 )));
             }
-            let mut replicas = Vec::with_capacity(spec.count);
+            let mut replicas: Vec<Arc<dyn Backend>> = Vec::with_capacity(spec.count);
             for i in 0..spec.count {
-                replicas.push((spec.factory)(i)?);
+                replicas.push(Arc::from((spec.factory)(i)?));
             }
-            classes.push(PoolClass { name: spec.class, batch: spec.batch, replicas });
+            classes.push(PoolClass {
+                name: spec.class,
+                batch: spec.batch,
+                replicas,
+                min: spec.count,
+                max: spec.max.max(spec.count),
+                factory: spec.factory,
+            });
         }
         Ok(ReplicaPool { classes })
     }
 
-    /// Total worker replicas across all classes.
+    /// Total worker replicas instantiated eagerly across all classes (the
+    /// per-class minimums; autoscaled classes may grow past this at
+    /// serve time).
     pub fn n_replicas(&self) -> usize {
         self.classes.iter().map(|c| c.replicas.len()).sum()
+    }
+
+    /// Total replica capacity if every class scaled to its max.
+    pub fn max_replicas(&self) -> usize {
+        self.classes.iter().map(|c| c.max).sum()
+    }
+
+    /// True when some class can grow past its base count (an autoscaler
+    /// would have something to do).
+    pub fn is_scalable(&self) -> bool {
+        self.classes.iter().any(|c| c.max > c.min)
     }
 }
 
@@ -412,6 +472,50 @@ mod tests {
             vec![ReplicaSpec::functional(1, qnet.clone()), ReplicaSpec::functional(1, qnet)];
         let err = ReplicaPool::build(dup).unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    /// A ranged spec instantiates only its base replicas eagerly and
+    /// grows the rest on demand through the retained factory.
+    #[test]
+    fn scalable_class_grows_replicas_on_demand() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let built = std::sync::Arc::new(AtomicUsize::new(0));
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let b2 = std::sync::Arc::clone(&built);
+        let spec = ReplicaSpec::new("func", 1, 4, move |_| {
+            b2.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(Functional::new(qnet.clone())))
+        })
+        .with_max_replicas(3);
+        let pool = ReplicaPool::build(vec![spec]).unwrap();
+        let class = &pool.classes[0];
+        assert_eq!((class.min, class.max), (1, 3));
+        assert_eq!(class.replicas.len(), 1, "only the base replica is built eagerly");
+        assert_eq!(built.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.n_replicas(), 1);
+        assert_eq!(pool.max_replicas(), 3);
+        assert!(pool.is_scalable());
+        // Scale-up path: replicas 1 and 2 are built on demand.
+        let r1 = class.build_replica(1).unwrap();
+        let _r2 = class.build_replica(2).unwrap();
+        assert_eq!(built.load(Ordering::SeqCst), 3);
+        let map = {
+            let mut rng = Rng::new(4);
+            let es = profile.sample(0, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        };
+        // A grown replica classifies like any other.
+        assert_eq!(
+            r1.classify(&map).unwrap().pred,
+            class.replicas[0].classify(&map).unwrap().pred
+        );
+        // `with_max_replicas` floors at the base count.
+        let profile = DatasetProfile::n_mnist();
+        let spec = ReplicaSpec::functional(2, qnet_for(&profile)).with_max_replicas(1);
+        let pool = ReplicaPool::build(vec![spec]).unwrap();
+        assert_eq!((pool.classes[0].min, pool.classes[0].max), (2, 2));
+        assert!(!pool.is_scalable());
     }
 
     /// Factory errors propagate out of the builder with the replica index.

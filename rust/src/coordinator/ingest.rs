@@ -172,6 +172,13 @@ impl EventSource for SyntheticSource {
     }
 }
 
+/// Largest due-offset (seconds into the replayed timeline, after speed
+/// scaling) the pacer will schedule. Beyond this the replay is
+/// degenerate — a `@speed` tiny enough, or a capture long enough, to put
+/// a sample decades out — and `Duration::from_secs_f64` would eventually
+/// panic on overflow; the source reports [`IngestError`] instead.
+const MAX_REPLAY_DUE_SECS: f64 = 1e9;
+
 /// Replays a recorded `.esda` dataset as a live stream: sample `i`
 /// arrives when its recording window completes in the replayed timeline —
 /// `(sum of durations of samples 0..=i) / speed` after the first
@@ -180,11 +187,26 @@ impl EventSource for SyntheticSource {
 /// instants: a real camera would have produced the data on time, so the
 /// lag shows up as end-to-end latency and deadline pressure, exactly as
 /// in deployment.
+///
+/// The replay is **streaming**: only the container header is read at
+/// open; each sample's bytes are decoded (via the same
+/// [`io::read_events`] primitive the tail source uses) just ahead of its
+/// due time, so replaying a multi-GB capture holds one sample in memory,
+/// not the file. Corruption checks run per sample against a running
+/// remaining-bytes budget (the same discipline as [`io::read_dataset`]),
+/// so a truncated or over-claiming capture fails at the offending sample
+/// with a clear error instead of an allocation blowup.
 pub struct ReplaySource {
     name: String,
     w: usize,
     h: usize,
-    samples: Vec<io::Sample>,
+    reader: std::io::BufReader<File>,
+    /// Samples the container header promises.
+    total: usize,
+    /// Unread bytes past the file header — every per-sample claim draws
+    /// on this budget before being trusted with an allocation.
+    remaining_bytes: u64,
+    /// Next sample ordinal (consumed samples, including rejected ones).
     idx: usize,
     /// Requests actually emitted (rejected samples don't count toward
     /// the limit).
@@ -195,30 +217,46 @@ pub struct ReplaySource {
     started: Option<Instant>,
     /// Replayed-timeline position (µs) after the previous sample.
     offset_us: u64,
+    /// Latched byte-stream failure (truncation, over-claim, IO error,
+    /// pacing overflow): the reader position is no longer trustworthy
+    /// after one, so every subsequent call re-reports it instead of
+    /// parsing garbage bytes as a sample. Per-sample *validation*
+    /// rejects (geometry, unsorted) do not latch — the reader is still
+    /// aligned, and the stream continues with the next sample.
+    failed: Option<String>,
 }
 
 impl ReplaySource {
-    /// Load a dataset for replay at `speed`× wall-clock rate.
-    ///
-    /// The whole file is read and validated up front (via
-    /// [`io::read_dataset`]'s remaining-bytes budget), trading O(file)
-    /// memory for a corruption check before the first request is emitted
-    /// — fine for the generated datasets this repo replays. Streaming
-    /// sample-at-a-time replay for long real captures is a noted
-    /// follow-on (see ROADMAP).
+    /// Open a dataset for replay at `speed`× wall-clock rate. Only the
+    /// 20-byte container header is read and validated here; sample bytes
+    /// stream out one recording ahead of its due time.
     pub fn open(path: &Path, speed: f64) -> Result<ReplaySource, IngestError> {
         if !(speed.is_finite() && speed > 0.0) {
             return Err(IngestError(format!("replay speed must be finite and > 0, got {speed}")));
         }
-        let (w, h, samples) = io::read_dataset(path)
-            .map_err(|e| IngestError(format!("replay {}: {e}", path.display())))?;
         let name = format!("replay:{}", path.display());
+        let file = File::open(path).map_err(|e| IngestError(format!("{name}: {e}")))?;
+        let file_len =
+            file.metadata().map_err(|e| IngestError(format!("{name}: {e}")))?.len();
+        let mut reader = std::io::BufReader::new(file);
+        let (w, h, total) = io::read_file_header(&mut reader)
+            .map_err(|e| IngestError(format!("{name}: {e}")))?;
         validate_geometry(w, h, &name)?;
+        let remaining_bytes = file_len.saturating_sub(io::FILE_HEADER_BYTES);
+        // Cheap whole-file sanity before the first sample: every promised
+        // sample needs at least its fixed prefix on disk.
+        if (total as u64).saturating_mul(io::SAMPLE_HEADER_BYTES) > remaining_bytes {
+            return Err(IngestError(format!(
+                "{name}: header claims {total} sample(s) but the file is only {file_len} byte(s)"
+            )));
+        }
         Ok(ReplaySource {
             name,
             w,
             h,
-            samples,
+            reader,
+            total,
+            remaining_bytes,
             idx: 0,
             emitted: 0,
             speed,
@@ -226,7 +264,14 @@ impl ReplaySource {
             limit: None,
             started: None,
             offset_us: 0,
+            failed: None,
         })
+    }
+
+    /// Latch and return a byte-stream failure (see the `failed` field).
+    fn fail(&mut self, msg: String) -> IngestError {
+        self.failed = Some(msg.clone());
+        IngestError(msg)
     }
 
     /// Override the unsorted-events policy (default: reject).
@@ -243,7 +288,7 @@ impl ReplaySource {
 
     /// Samples left to emit.
     pub fn remaining(&self) -> usize {
-        let left = self.samples.len() - self.idx;
+        let left = self.total - self.idx;
         match self.limit {
             Some(l) => left.min(l.saturating_sub(self.emitted)),
             None => left,
@@ -261,23 +306,76 @@ impl EventSource for ReplaySource {
     }
 
     fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
-        if self.idx >= self.samples.len() || self.limit.is_some_and(|l| self.emitted >= l) {
+        // A broken byte stream stays broken: re-report rather than parse
+        // garbage from a misaligned reader.
+        if let Some(msg) = &self.failed {
+            return Err(IngestError(msg.clone()));
+        }
+        if self.idx >= self.total || self.limit.is_some_and(|l| self.emitted >= l) {
             return Ok(None);
         }
         let started = *self.started.get_or_insert_with(Instant::now);
         let i = self.idx;
-        let label = self.samples[i].label as usize;
-        let mut events = std::mem::take(&mut self.samples[i].events);
-        // The sample is consumed whatever validation says: a caller that
-        // retries after an `Err` continues with the *next* sample instead
-        // of receiving the rejected one back as a phantom empty request
-        // (its events were already taken).
+        // Stream the sample off disk: prefix first, with its event claim
+        // checked against the running byte budget (later samples' fixed
+        // prefixes are spoken for) before any allocation trusts it. Every
+        // failure from here to the decoded events latches `failed`.
+        if self.remaining_bytes < io::SAMPLE_HEADER_BYTES {
+            let msg = format!("{}: file truncated before sample {i}'s prefix", self.name);
+            return Err(self.fail(msg));
+        }
+        self.remaining_bytes -= io::SAMPLE_HEADER_BYTES;
+        let mut prefix = [0u8; 8];
+        if let Err(e) = self.reader.read_exact(&mut prefix) {
+            let msg = format!("{}: sample {i}: {e}", self.name);
+            return Err(self.fail(msg));
+        }
+        let label = u32::from_le_bytes(prefix[0..4].try_into().unwrap()) as usize;
+        let ne = u32::from_le_bytes(prefix[4..8].try_into().unwrap()) as usize;
+        let need = (ne as u64).saturating_mul(io::EVENT_BYTES);
+        let later_prefixes = ((self.total - 1 - i) as u64) * io::SAMPLE_HEADER_BYTES;
+        if need.saturating_add(later_prefixes) > self.remaining_bytes {
+            let msg = format!(
+                "{}: sample {i} claims {ne} event(s) ({need} B) but only {} byte(s) remain \
+                 for it and {later_prefixes} B of later sample prefixes",
+                self.name, self.remaining_bytes
+            );
+            return Err(self.fail(msg));
+        }
+        self.remaining_bytes -= need;
+        let mut events = match io::read_events(&mut self.reader, ne) {
+            Ok(events) => events,
+            Err(e) => {
+                let msg = format!("{}: sample {i}: {e}", self.name);
+                return Err(self.fail(msg));
+            }
+        };
+        // The sample's bytes are fully consumed and the reader is aligned
+        // at the next sample, so a per-sample *validation* reject is
+        // recoverable: a caller that retries after this `Err` continues
+        // with the next sample instead of receiving the rejected one back.
         self.idx += 1;
         validate_events(&mut events, self.w, self.h, self.policy, &format!("sample {i}"))?;
         // The recording is complete — and the request born — at the end
         // of its window in the replayed timeline.
         self.offset_us += EventSlice(&events).duration_us() as u64;
-        let due = started + Duration::from_secs_f64(self.offset_us as f64 / self.speed / 1e6);
+        let due_secs = self.offset_us as f64 / self.speed / 1e6;
+        // Guard the pacer: a tiny-but-valid `@speed` (or an enormous
+        // capture) can push the due offset past anything `Duration` can
+        // hold — `from_secs_f64` would panic on overflow, so reject the
+        // degenerate replay with a diagnosable error instead. Latched:
+        // the timeline offset only ever grows, so no later sample can
+        // pace either.
+        if !(due_secs.is_finite() && due_secs <= MAX_REPLAY_DUE_SECS) {
+            let msg = format!(
+                "{}: replay pacing overflow at sample {i}: due {due_secs:.3e} s into the \
+                 replayed timeline (speed {:.3e} too small or capture too long; cap \
+                 {MAX_REPLAY_DUE_SECS:.0e} s)",
+                self.name, self.speed
+            );
+            return Err(self.fail(msg));
+        }
+        let due = started + Duration::from_secs_f64(due_secs);
         let now = Instant::now();
         if due > now {
             std::thread::sleep(due - now);
@@ -621,6 +719,88 @@ mod tests {
         for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
             assert!(ReplaySource::open(&path, bad).is_err(), "accepted speed {bad}");
         }
+    }
+
+    /// Regression: a tiny-but-valid `@speed` used to reach
+    /// `Duration::from_secs_f64` with an astronomically large due offset
+    /// and *panic* on overflow; the pacer must instead report an
+    /// `IngestError` naming the degenerate pacing.
+    #[test]
+    fn replay_rejects_pacing_overflow_instead_of_panicking() {
+        let dir = tmp_dir("overflow");
+        let path = dir.join("d.esda");
+        // One sample spanning 10 ms of camera time: at speed 1e-300 its
+        // due offset is ~1e295 s — far past anything a Duration can hold.
+        let samples =
+            vec![Sample { label: 0, events: vec![ev(0, 0, 0), ev(10_000, 1, 1)] }];
+        write_dataset(&path, 4, 4, &samples).unwrap();
+        let mut src = ReplaySource::open(&path, 1e-300).expect("1e-300 is a valid speed");
+        let err = src.next_request().unwrap_err();
+        assert!(err.to_string().contains("pacing overflow"), "{err}");
+        assert!(err.to_string().contains("sample 0"), "{err}");
+        // A zero-duration capture at the same speed paces fine (0 / tiny
+        // = 0): the guard rejects degenerate *products*, not speeds.
+        let path2 = dir.join("flat.esda");
+        write_dataset(&path2, 4, 4, &[Sample { label: 3, events: vec![ev(5, 0, 0)] }])
+            .unwrap();
+        let mut src = ReplaySource::open(&path2, 1e-300).unwrap();
+        assert_eq!(src.next_request().unwrap().unwrap().label, 3);
+    }
+
+    /// The streaming replay reads one sample at a time off the io
+    /// primitives: a header over-claim fails at open, and a sample that
+    /// over-claims the remaining bytes fails exactly when it is reached —
+    /// after the valid prefix of the capture was already served.
+    #[test]
+    fn replay_streams_and_rejects_corruption_at_the_offending_sample() {
+        use std::io::Write as _;
+        let dir = tmp_dir("stream");
+        // Header promising more samples than the file could hold: open
+        // fails before any request is emitted.
+        let path = dir.join("overclaim_n.esda");
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f, 8, 8, 1000).unwrap();
+        f.flush().unwrap();
+        drop(f);
+        let err = ReplaySource::open(&path, 1e6).unwrap_err();
+        assert!(err.to_string().contains("1000 sample(s)"), "{err}");
+
+        // A valid first sample, then a sample claiming more event bytes
+        // than remain: the first replays, the second errors (streaming —
+        // the failure surfaces mid-stream, not at open).
+        let path = dir.join("overclaim_ne.esda");
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f, 8, 8, 2).unwrap();
+        append_sample(&mut f, &Sample { label: 4, events: vec![ev(1, 1, 1)] }).unwrap();
+        f.write_all(&7u32.to_le_bytes()).unwrap(); // label
+        f.write_all(&100u32.to_le_bytes()).unwrap(); // 100 events claimed…
+        f.write_all(&[0u8; 10]).unwrap(); // …1 event's bytes present
+        f.flush().unwrap();
+        drop(f);
+        let mut src = ReplaySource::open(&path, 1e6).unwrap();
+        assert_eq!(src.remaining(), 2);
+        assert_eq!(src.next_request().unwrap().unwrap().label, 4);
+        let err = src.next_request().unwrap_err();
+        assert!(err.to_string().contains("sample 1"), "{err}");
+        assert!(err.to_string().contains("claims 100 event(s)"), "{err}");
+        // A byte-stream failure latches: retrying must re-report it, not
+        // parse the corrupt sample's payload bytes as a fresh prefix.
+        let err2 = src.next_request().unwrap_err();
+        assert!(err2.to_string().contains("claims 100 event(s)"), "{err2}");
+
+        // Truncated before the second sample's prefix: same per-sample
+        // failure point.
+        let path = dir.join("cut.esda");
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_header(&mut f, 8, 8, 2).unwrap();
+        append_sample(&mut f, &Sample { label: 2, events: vec![ev(1, 1, 1)] }).unwrap();
+        f.write_all(&[0u8; 3]).unwrap(); // 3 of the 8 prefix bytes
+        f.flush().unwrap();
+        drop(f);
+        let mut src = ReplaySource::open(&path, 1e6).unwrap();
+        assert_eq!(src.next_request().unwrap().unwrap().label, 2);
+        let err = src.next_request().unwrap_err();
+        assert!(err.to_string().contains("sample 1"), "{err}");
     }
 
     /// A tail source sees samples appear as a producer appends them, and

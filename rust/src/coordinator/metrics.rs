@@ -1,11 +1,17 @@
 //! Latency/throughput metrics for the serving runtime: per-request
 //! timings, admission-control accounting (drops, in-flight), per-worker
-//! and per-class utilization, p50/p95/p99 percentile summaries, and the
-//! [`CostModel`] the heterogeneous router predicts service times with.
+//! and per-class utilization, p50/p95/p99 percentile summaries, the
+//! [`CostModel`] the heterogeneous router predicts service times with
+//! (plus its persisted [`CostProfile`] form), the [`SlidingWindow`]
+//! counters the autoscaler samples, and the [`ScalingEvent`] log it
+//! leaves behind.
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Per-request timing record.
 #[derive(Debug, Clone, Copy)]
@@ -130,6 +136,233 @@ impl CostModel {
             });
         }
     }
+
+    /// Snapshot the EWMA state for persistence ([`CostProfile`]).
+    pub fn snapshot(&self) -> CostSnapshot {
+        let st = self.state.lock().unwrap();
+        CostSnapshot { global: st.global, buckets: st.buckets.clone() }
+    }
+
+    /// Seed unobserved state from a persisted snapshot. Live observations
+    /// always win: a slot that has already seen real traffic keeps its
+    /// estimate, so stale profiles can only fill gaps, never repaint
+    /// reality. Non-finite or negative persisted values are ignored (a
+    /// hand-edited profile must not poison the router).
+    pub fn seed(&self, snap: &CostSnapshot) {
+        let ok = |v: Option<f64>| v.filter(|x| x.is_finite() && *x >= 0.0);
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        if st.global.is_none() {
+            st.global = ok(snap.global);
+        }
+        if st.buckets.len() < snap.buckets.len() {
+            st.buckets.resize(snap.buckets.len(), None);
+        }
+        for (slot, &persisted) in st.buckets.iter_mut().zip(&snap.buckets) {
+            if slot.is_none() {
+                *slot = ok(persisted);
+            }
+        }
+    }
+}
+
+/// A [`CostModel`]'s persisted state: the class-wide EWMA plus the
+/// per-bucket EWMAs (`None` = never observed), exactly mirroring
+/// `CostState`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostSnapshot {
+    pub global: Option<f64>,
+    pub buckets: Vec<Option<f64>>,
+}
+
+impl CostSnapshot {
+    /// True when nothing was ever observed (seeding from it is a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.global.is_none() && self.buckets.iter().all(|b| b.is_none())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("global", Json::opt_num(self.global)),
+            ("buckets", Json::Arr(self.buckets.iter().map(|&b| Json::opt_num(b)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CostSnapshot, String> {
+        let num = |v: &Json| match v {
+            Json::Null => Ok(None),
+            Json::Num(n) => Ok(Some(*n)),
+            other => Err(format!("expected number or null, got {other}")),
+        };
+        let global = num(j.req("global")?)?;
+        let buckets = j
+            .req("buckets")?
+            .as_arr()
+            .ok_or("'buckets' must be an array")?
+            .iter()
+            .map(num)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(CostSnapshot { global, buckets })
+    }
+}
+
+/// On-disk cost profile: one [`CostSnapshot`] per replica class, written
+/// at the end of a serving run (`serve --cost-profile path` rewrites it
+/// at shutdown) and seeded into the next run's routers at startup — so a
+/// freshly started pool, or a freshly scaled-up replica's class, predicts
+/// from day-one reality instead of burning probe requests, and the SLO
+/// shed can act before the first observation lands.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostProfile {
+    pub classes: BTreeMap<String, CostSnapshot>,
+}
+
+impl CostProfile {
+    /// Profile format version (bump on incompatible layout changes).
+    pub const VERSION: f64 = 1.0;
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.values().all(|s| s.is_empty())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(Self::VERSION)),
+            (
+                "classes",
+                Json::Obj(
+                    self.classes.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CostProfile, String> {
+        let version = j.req("version")?.as_f64().ok_or("'version' must be a number")?;
+        if version != Self::VERSION {
+            return Err(format!("unsupported cost-profile version {version}"));
+        }
+        let classes = j
+            .req("classes")?
+            .as_obj()
+            .ok_or("'classes' must be an object")?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), CostSnapshot::from_json(v)?)))
+            .collect::<Result<BTreeMap<_, _>, String>>()?;
+        Ok(CostProfile { classes })
+    }
+
+    /// Load a profile from disk (parse errors name the file).
+    pub fn load(path: &Path) -> Result<CostProfile, String> {
+        let raw = std::fs::read_to_string(path)
+            .map_err(|e| format!("cost profile {}: {e}", path.display()))?;
+        let j = crate::util::json::parse(&raw)
+            .map_err(|e| format!("cost profile {}: {e}", path.display()))?;
+        CostProfile::from_json(&j).map_err(|e| format!("cost profile {}: {e}", path.display()))
+    }
+
+    /// Write the profile to disk (pretty-printing is not worth a
+    /// dependency; the document is one line of JSON). The write is
+    /// **atomic** — a sibling temp file renamed over the target — so a
+    /// run killed mid-rewrite leaves the previous profile intact instead
+    /// of a truncated file that would make every later
+    /// `serve --cost-profile` fail at load.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let ctx = |e: std::io::Error| format!("cost profile {}: {e}", path.display());
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(ctx)?;
+            }
+        }
+        let file_name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| format!("cost profile {}: not a file path", path.display()))?;
+        let tmp = path.with_file_name(format!("{file_name}.tmp"));
+        std::fs::write(&tmp, self.to_json().to_string()).map_err(ctx)?;
+        std::fs::rename(&tmp, path).map_err(ctx)
+    }
+}
+
+/// Windowed view over a monotonically non-decreasing counter: the caller
+/// records `(now, total)` snapshots at its own cadence and reads how much
+/// the counter grew across (roughly) the window. Old snapshots are
+/// evicted, but the newest snapshot at-or-beyond the window edge is kept
+/// so [`SlidingWindow::delta`] spans the full window instead of
+/// collapsing to the last tick. The autoscaler keeps one per class for
+/// deadline drops and accelerator-busy time.
+#[derive(Debug)]
+pub struct SlidingWindow {
+    window: Duration,
+    samples: VecDeque<(Instant, u64)>,
+}
+
+impl SlidingWindow {
+    pub fn new(window: Duration) -> SlidingWindow {
+        SlidingWindow { window, samples: VecDeque::new() }
+    }
+
+    /// Record a counter snapshot. `total` is cumulative; a regressing
+    /// total (which a well-formed counter never produces) is clamped by
+    /// the saturating read side rather than rejected here.
+    pub fn record(&mut self, now: Instant, total: u64) {
+        self.samples.push_back((now, total));
+        // Evict from the front, but always leave one sample at-or-before
+        // the window edge (and never fewer than two samples, so a delta
+        // exists at all).
+        while self.samples.len() > 2 {
+            let second = self.samples[1].0;
+            if now.duration_since(second) >= self.window {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Counter growth across the retained window (0 until two snapshots
+    /// exist).
+    pub fn delta(&self) -> u64 {
+        match (self.samples.front(), self.samples.back()) {
+            (Some(&(_, a)), Some(&(_, b))) => b.saturating_sub(a),
+            _ => 0,
+        }
+    }
+
+    /// Wall-clock span the retained snapshots cover, in seconds.
+    pub fn span_secs(&self) -> f64 {
+        match (self.samples.front(), self.samples.back()) {
+            (Some(&(a, _)), Some(&(b, _))) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+
+    /// Growth rate (delta per second) over the retained span; 0.0 for a
+    /// degenerate (empty or zero-length) window — never NaN.
+    pub fn rate(&self) -> f64 {
+        let span = self.span_secs();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.delta() as f64 / span
+        }
+    }
+}
+
+/// One autoscaler decision, recorded for the report's scaling log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingEvent {
+    /// Seconds since the run started.
+    pub at_s: f64,
+    /// Replica class the decision applied to.
+    pub class: String,
+    /// Active replicas before the step.
+    pub from: usize,
+    /// Active replicas after the step.
+    pub to: usize,
+    /// Human-readable trigger (deadline-drop rate, backlog, idleness, or
+    /// a failed replica factory).
+    pub reason: String,
 }
 
 /// Per-class accounting for the heterogeneous replica pool: who served
@@ -139,8 +372,25 @@ impl CostModel {
 pub struct ClassStats {
     /// Replica-class display name (e.g. `func`, `sim`, `dense`).
     pub class: String,
-    /// Worker replicas in this class.
+    /// Worker replicas active at the end of the run (the autoscaler moves
+    /// this within `[replicas_min, replicas_max]`; without autoscaling it
+    /// equals the configured count).
     pub replicas: usize,
+    /// Lower replica bound (the count the class started with).
+    pub replicas_min: usize,
+    /// Upper replica bound the autoscaler may grow to (== `replicas_min`
+    /// when the class is not scalable).
+    pub replicas_max: usize,
+    /// Highest simultaneously-active replica count seen during the run.
+    pub replicas_peak: usize,
+    /// Integrated active-replica capacity over the run, in replica-
+    /// seconds (`replicas × wall` for a fixed class; the integral of the
+    /// active count over time when the autoscaler moved it). This is the
+    /// truthful utilization denominator — dividing by the *final* count
+    /// would over- or under-report whenever a run ends at a different
+    /// size than it mostly ran at. 0.0 on hand-built stats ⇒
+    /// [`ClassStats::utilization`] falls back to `wall × replicas`.
+    pub replica_s: f64,
     /// Requests this class served.
     pub served: usize,
     /// Accelerator visits (micro-batches) this class made.
@@ -165,11 +415,22 @@ pub struct ClassStats {
 }
 
 impl ClassStats {
-    /// Mean fraction of the wall-clock interval this class's replicas
-    /// spent serving.
+    /// Mean fraction of the class's active capacity spent serving:
+    /// `busy_s` over the integrated replica-seconds (`replica_s`) when
+    /// the runtime filled them, else over `wall_s × replicas` (the
+    /// fixed-class equivalent, kept for hand-built stats). Using the
+    /// integral matters for autoscaled classes: a run that mostly ran at
+    /// 4 replicas but ended scaled back to 1 must not divide four
+    /// replicas' busy time by one replica's wall clock. A degenerate
+    /// window (zero/negative/non-finite denominator) reports 0.0 — not
+    /// NaN/inf, which `util::json` would serialize as `null` deep inside
+    /// a report.
     pub fn utilization(&self, wall_s: f64) -> f64 {
-        if wall_s <= 0.0 || self.replicas == 0 {
-            return f64::NAN;
+        if self.replica_s.is_finite() && self.replica_s > 0.0 {
+            return self.busy_s / self.replica_s;
+        }
+        if !(wall_s > 0.0 && wall_s.is_finite()) || self.replicas == 0 {
+            return 0.0;
         }
         self.busy_s / (wall_s * self.replicas as f64)
     }
@@ -202,9 +463,10 @@ pub struct WorkerStats {
 
 impl WorkerStats {
     /// Fraction of the wall-clock interval this replica spent serving.
+    /// 0.0 for a degenerate window (see [`ClassStats::utilization`]).
     pub fn utilization(&self, wall_s: f64) -> f64 {
-        if wall_s <= 0.0 {
-            return f64::NAN;
+        if !(wall_s > 0.0 && wall_s.is_finite()) {
+            return 0.0;
         }
         self.busy_s / wall_s
     }
@@ -246,6 +508,13 @@ pub struct Metrics {
     /// Size of every micro-batch any worker pulled from the ingress queue
     /// (one entry per accelerator visit, across all workers).
     pub batch_sizes: Vec<usize>,
+    /// Autoscaler decisions in the order they were taken (empty without
+    /// autoscaling).
+    pub scaling_events: Vec<ScalingEvent>,
+    /// Final per-class cost-model snapshots — what `--cost-profile`
+    /// rewrites at shutdown (empty snapshots for classes that never
+    /// observed, e.g. the routerless single-class path).
+    pub cost_profile: CostProfile,
     /// Wall-clock duration of the completed run in seconds (0 until the
     /// runtime finalizes it — see [`Metrics::wall_seconds`]).
     pub wall_s: f64,
@@ -267,6 +536,8 @@ impl Default for Metrics {
             per_worker: Vec::new(),
             per_class: Vec::new(),
             batch_sizes: Vec::new(),
+            scaling_events: Vec::new(),
+            cost_profile: CostProfile::default(),
             wall_s: 0.0,
         }
     }
@@ -314,13 +585,31 @@ impl Metrics {
     /// SLO attainment: the fraction of deadline-carrying requests that
     /// were served within their deadline. Everything else — ingress
     /// expiry, router shed, queue-full drop, served-but-late — counts
-    /// against it. `None` when no request carried a deadline (no SLO
-    /// configured).
+    /// against it: the denominator is every request *offered* with a
+    /// deadline, never just the served ones, so a run that sheds 90% of
+    /// its traffic cannot report 100% attainment. (The served-only
+    /// figure, useful for judging replica speed in isolation, is
+    /// [`Metrics::slo_attainment_served`].) `None` when no request
+    /// carried a deadline (no SLO configured).
     pub fn slo_attainment(&self) -> Option<f64> {
         if self.deadline_offered == 0 {
             return None;
         }
         Some(self.deadline_met as f64 / self.deadline_offered as f64)
+    }
+
+    /// Served-only SLO attainment: of the deadline-carrying requests that
+    /// actually reached a backend, the fraction that completed in time.
+    /// This deliberately ignores sheds and drops — it measures replica
+    /// speed, not end-to-end service quality; headline SLO reporting must
+    /// use [`Metrics::slo_attainment`]. `None` when no deadline-carrying
+    /// request was served.
+    pub fn slo_attainment_served(&self) -> Option<f64> {
+        let served = self.deadline_met + self.deadline_missed;
+        if served == 0 {
+            return None;
+        }
+        Some(self.deadline_met as f64 / served as f64)
     }
 
     pub fn e2e_summary(&self) -> Summary {
@@ -489,25 +778,67 @@ mod tests {
     fn worker_utilization() {
         let w = WorkerStats { worker: 0, served: 10, busy_s: 0.5, ..Default::default() };
         assert!((w.utilization(1.0) - 0.5).abs() < 1e-12);
-        assert!(w.utilization(0.0).is_nan());
     }
 
-    #[test]
-    fn class_utilization_divides_by_replicas() {
-        let c = ClassStats {
+    fn class_stats(replicas: usize, busy_s: f64) -> ClassStats {
+        ClassStats {
             class: "func".into(),
-            replicas: 2,
+            replicas,
+            replicas_min: replicas,
+            replicas_max: replicas,
+            replicas_peak: replicas,
+            replica_s: 0.0,
             served: 8,
             batches: 4,
-            busy_s: 1.0,
+            busy_s,
             batch: PercentileReport::default(),
             service: PercentileReport::default(),
             cost_err: f64::NAN,
             unseeded: 0,
             deadline_drops: 0,
-        };
+        }
+    }
+
+    #[test]
+    fn class_utilization_divides_by_replicas() {
+        let c = class_stats(2, 1.0);
         assert!((c.utilization(1.0) - 0.5).abs() < 1e-12);
-        assert!(c.utilization(0.0).is_nan());
+    }
+
+    /// With integrated replica-seconds filled, utilization uses them
+    /// instead of `wall × final count` — an autoscaled class that mostly
+    /// ran at 4 replicas but ended at 1 must not report >100%.
+    #[test]
+    fn class_utilization_uses_integrated_replica_seconds() {
+        let mut c = class_stats(1, 3.0); // ended scaled back down to 1
+        // Ran 4 replicas for 0.9 s + 1 replica for 0.1 s of a 1 s run.
+        c.replica_s = 4.0 * 0.9 + 1.0 * 0.1;
+        let u = c.utilization(1.0);
+        assert!((u - 3.0 / 3.7).abs() < 1e-12, "got {u}");
+        assert!(u <= 1.0, "utilization must not exceed 100%: {u}");
+        // Degenerate integral falls back to the fixed-class denominator.
+        c.replica_s = 0.0;
+        assert!((c.utilization(1.0) - 3.0).abs() < 1e-12);
+    }
+
+    /// Regression (degenerate-window utilization): a zero-duration run
+    /// used to yield NaN/inf here, which `util::json` serializes as
+    /// `null` deep inside the report — degenerate windows must read as
+    /// 0.0 exactly.
+    #[test]
+    fn utilization_degenerate_window_is_zero() {
+        let w = WorkerStats { worker: 0, served: 1, busy_s: 0.5, ..Default::default() };
+        for wall in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(w.utilization(wall), 0.0, "wall_s {wall}");
+        }
+        let c = class_stats(2, 1.0);
+        for wall in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(c.utilization(wall), 0.0, "wall_s {wall}");
+        }
+        let no_replicas = class_stats(0, 1.0);
+        assert_eq!(no_replicas.utilization(1.0), 0.0);
+        // The JSON a report would embed stays a real number.
+        assert_eq!(Json::Num(w.utilization(0.0)).to_string(), "0");
     }
 
     /// Deadline books: attainment over every deadline-carrying request,
@@ -531,6 +862,35 @@ mod tests {
         assert_eq!(m.offered(), 10, "served + queue drops + deadline drops");
         assert!((m.slo_attainment().unwrap() - 0.6).abs() < 1e-12);
         assert!((m.drop_rate() - 0.1).abs() < 1e-12, "queue drops only");
+        // Served-only attainment ignores the sheds: 6 of 7 served in time.
+        assert!((m.slo_attainment_served().unwrap() - 6.0 / 7.0).abs() < 1e-12);
+    }
+
+    /// Regression (shed-heavy attainment semantics): a run that sheds 90%
+    /// of its deadline-carrying traffic at the router must not report
+    /// 100% attainment — sheds are misses in the denominator. The
+    /// served-only figure stays available as its own accessor.
+    #[test]
+    fn slo_attainment_counts_sheds_as_misses() {
+        let mut m = Metrics::default();
+        m.deadline_offered = 100;
+        m.deadline_met = 10; // the 10 requests that reached a backend, all in time
+        m.deadline_missed = 0;
+        m.deadline_router = 90; // everything else shed at the router
+        m.total = 10;
+        assert_eq!(
+            m.slo_attainment(),
+            Some(0.1),
+            "90% router-shed traffic must count against attainment"
+        );
+        assert_eq!(m.slo_attainment_served(), Some(1.0), "served-only view: all in time");
+        // No served deadline-carrying requests at all: served-only is N/A,
+        // strict attainment is 0.
+        let mut m = Metrics::default();
+        m.deadline_offered = 5;
+        m.deadline_ingress = 5;
+        assert_eq!(m.slo_attainment(), Some(0.0));
+        assert_eq!(m.slo_attainment_served(), None);
     }
 
     #[test]
@@ -562,5 +922,116 @@ mod tests {
         m.observe(3, f64::NAN);
         m.observe(3, -1.0);
         assert!((m.predict(3).unwrap() - p).abs() < 1e-15);
+    }
+
+    /// Seeding fills gaps but never overrides live observations, and
+    /// rejects non-finite/negative persisted values.
+    #[test]
+    fn cost_model_seed_fills_gaps_only() {
+        let m = CostModel::new();
+        m.observe(2, 0.004);
+        let snap = CostSnapshot {
+            global: Some(0.5),
+            buckets: vec![None, Some(0.010), Some(0.999), Some(f64::NAN), Some(-1.0)],
+        };
+        m.seed(&snap);
+        // Bucket 2 and the global EWMA were live: the profile must not
+        // repaint them.
+        assert!((m.predict(2).unwrap() - 0.004).abs() < 1e-12);
+        // Bucket 1 was empty: seeded from the profile.
+        assert!((m.predict(1).unwrap() - 0.010).abs() < 1e-12);
+        // Poisoned slots (NaN, negative) are ignored — those buckets fall
+        // back to the (live) global EWMA.
+        assert!((m.predict(3).unwrap() - 0.004).abs() < 1e-12);
+        assert!((m.predict(4).unwrap() - 0.004).abs() < 1e-12);
+        // A fresh model adopts the persisted global too.
+        let fresh = CostModel::new();
+        fresh.seed(&snap);
+        assert!((fresh.predict(7).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    /// Property: snapshot → JSON → parse → seed a fresh model ⇒ identical
+    /// predictions for every bucket (the cost-profile round-trip the
+    /// persistence path depends on).
+    #[test]
+    fn cost_profile_roundtrip_property() {
+        check("cost profile json roundtrip preserves predictions", 64, |g: &mut Gen| {
+            let m = CostModel::new();
+            let n_obs = g.usize(0, 40);
+            for _ in 0..n_obs {
+                m.observe(g.usize(0, 12), g.f64() * 0.01);
+            }
+            let profile = CostProfile {
+                classes: [("c".to_string(), m.snapshot())].into_iter().collect(),
+            };
+            let doc = profile.to_json().to_string();
+            let parsed = crate::util::json::parse(&doc)
+                .unwrap_or_else(|e| panic!("invalid profile JSON: {e}\n{doc}"));
+            let back = CostProfile::from_json(&parsed).expect("well-formed profile");
+            assert_eq!(back, profile, "doc: {doc}");
+            let fresh = CostModel::new();
+            fresh.seed(&back.classes["c"]);
+            for bucket in 0..16 {
+                assert_eq!(
+                    fresh.predict(bucket),
+                    m.predict(bucket),
+                    "bucket {bucket} diverged after roundtrip"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn cost_profile_save_load_roundtrip_and_rejects_garbage() {
+        let m = CostModel::new();
+        m.observe(3, 0.002);
+        m.observe(5, 0.008);
+        let profile =
+            CostProfile { classes: [("func".to_string(), m.snapshot())].into_iter().collect() };
+        let dir = std::env::temp_dir().join(format!("esda_costprof_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profile.json");
+        profile.save(&path).unwrap();
+        let back = CostProfile::load(&path).unwrap();
+        assert_eq!(back, profile);
+        assert!(!back.is_empty());
+        // The atomic rewrite leaves no temp file behind.
+        assert!(!dir.join("profile.json.tmp").exists(), "temp file must be renamed away");
+        // Corrupt file and wrong version both fail with the path named.
+        std::fs::write(&path, "{not json").unwrap();
+        let err = CostProfile::load(&path).unwrap_err();
+        assert!(err.contains("profile.json"), "{err}");
+        std::fs::write(&path, r#"{"version": 99, "classes": {}}"#).unwrap();
+        let err = CostProfile::load(&path).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The sliding window reports counter growth over (roughly) its span,
+    /// evicting stale snapshots while keeping the window-edge one, and
+    /// degenerate windows read as 0 rates — never NaN.
+    #[test]
+    fn sliding_window_tracks_recent_growth() {
+        let mut w = SlidingWindow::new(Duration::from_millis(100));
+        assert_eq!(w.delta(), 0);
+        assert_eq!(w.rate(), 0.0, "empty window must not be NaN");
+        let t0 = Instant::now();
+        w.record(t0, 10);
+        assert_eq!(w.delta(), 0, "one snapshot is no delta");
+        assert_eq!(w.rate(), 0.0);
+        w.record(t0 + Duration::from_millis(50), 17);
+        assert_eq!(w.delta(), 7);
+        assert!((w.span_secs() - 0.05).abs() < 1e-9);
+        assert!((w.rate() - 140.0).abs() < 1e-6);
+        // Two window-lengths later the early snapshots are evicted; the
+        // delta reflects only recent growth.
+        w.record(t0 + Duration::from_millis(220), 20);
+        w.record(t0 + Duration::from_millis(260), 26);
+        assert_eq!(w.delta(), 26 - 17, "stale snapshots must be evicted");
+        // A regressing counter (caller bug) saturates instead of wrapping.
+        let mut r = SlidingWindow::new(Duration::from_millis(100));
+        r.record(t0, 50);
+        r.record(t0 + Duration::from_millis(10), 40);
+        assert_eq!(r.delta(), 0);
     }
 }

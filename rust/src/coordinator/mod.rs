@@ -43,13 +43,14 @@ pub use ingest::{
     UnsortedPolicy,
 };
 pub use metrics::{
-    ClassStats, CostModel, Metrics, PercentileReport, RequestTiming, WorkerStats,
+    ClassStats, CostModel, CostProfile, CostSnapshot, Metrics, PercentileReport, RequestTiming,
+    ScalingEvent, SlidingWindow, WorkerStats,
 };
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
 pub use queue::{AdmissionQueue, DropPolicy};
 pub use serve::{
-    run_pool, run_pool_source, run_server, run_server_source, PipelineError, Prediction,
-    ServerConfig, ServerResult,
+    run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig, PipelineError,
+    Prediction, ServerConfig, ServerResult,
 };
 
 /// Shared unit-test fixtures (integration tests under `rust/tests/` keep

@@ -52,7 +52,7 @@ pub fn run_pipeline(
         queue_depth: cfg.queue_depth,
         drop_policy: super::queue::DropPolicy::Block,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let r = run_server(profile, backend, &scfg)?;
     Ok(PipelineResult { metrics: r.metrics, predictions: r.predictions })

@@ -149,8 +149,35 @@ impl<T> AdmissionQueue<T> {
         &self,
         max: usize,
         out: &mut Vec<T>,
-        mut reject: F,
+        reject: F,
     ) -> usize {
+        self.pop_batch_where_cancellable(max, out, reject, || false)
+    }
+
+    /// [`AdmissionQueue::pop_batch_where`] with a cancellation predicate:
+    /// a consumer that would otherwise block on an empty queue first
+    /// checks `cancelled()` and, when it reports true, returns with an
+    /// empty `out` (and whatever discard count it accumulated) instead of
+    /// waiting. The predicate is re-checked on every wakeup, so a caller
+    /// that flips external retire state and then calls
+    /// [`AdmissionQueue::wake_consumers`] reliably unparks the consumer —
+    /// the autoscaler uses this to retire a worker replica that is parked
+    /// on an idle queue without closing the queue for everyone else.
+    /// Cancellation never discards work: a consumer holding popped items
+    /// is not in this function, and the drain attempt happens before the
+    /// cancellation check, so a cancelled consumer that found work still
+    /// returns it.
+    pub fn pop_batch_where_cancellable<F, C>(
+        &self,
+        max: usize,
+        out: &mut Vec<T>,
+        mut reject: F,
+        cancelled: C,
+    ) -> usize
+    where
+        F: FnMut(&T) -> bool,
+        C: Fn() -> bool,
+    {
         out.clear();
         let max = max.max(1);
         let mut rejected = 0usize;
@@ -181,8 +208,24 @@ impl<T> AdmissionQueue<T> {
             if st.closed {
                 return rejected;
             }
+            if cancelled() {
+                return rejected;
+            }
             st = self.not_empty.wait(st).unwrap();
         }
+    }
+
+    /// Wake every blocked consumer without closing the queue, so each
+    /// re-evaluates its cancellation predicate (see
+    /// [`AdmissionQueue::pop_batch_where_cancellable`]). Non-cancelled
+    /// consumers observe no queue state change and simply wait again.
+    /// The notify happens under the state lock: a consumer is either
+    /// still holding the lock (and will see the caller's already-flipped
+    /// external state at its next predicate check) or already waiting
+    /// (and receives the notification) — no lost-wakeup window.
+    pub fn wake_consumers(&self) {
+        let _st = self.state.lock().unwrap();
+        self.not_empty.notify_all();
     }
 
     /// Close the queue: producers fail fast, consumers drain then stop.
@@ -202,6 +245,14 @@ impl<T> AdmissionQueue<T> {
         st.aborted = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
+    }
+
+    /// True once the queue is closed (or aborted) to producers; consumers
+    /// may still be draining what is queued. Lets a consumer woken
+    /// empty-handed from a cancellable pop distinguish "the queue ended"
+    /// from "a cancellation signal meant for a sibling".
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
     }
 
     /// `(submitted, dropped, still_queued)` snapshot.
@@ -317,6 +368,49 @@ mod tests {
         let rejected = q.pop_batch_where(2, &mut batch, |&x| x == 99);
         assert_eq!(batch, vec![1]);
         assert_eq!(rejected, 0);
+    }
+
+    /// A cancelled consumer parked on an empty queue returns promptly
+    /// after `wake_consumers`, without the queue closing — and a consumer
+    /// whose predicate stays false keeps waiting through the same wakeup.
+    #[test]
+    fn cancellable_pop_unparks_on_wake_without_close() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(4, DropPolicy::Block));
+        let retire = Arc::new(AtomicBool::new(false));
+        let (q2, r2) = (Arc::clone(&q), Arc::clone(&retire));
+        let h = std::thread::spawn(move || {
+            let mut b = Vec::new();
+            let rej =
+                q2.pop_batch_where_cancellable(4, &mut b, |_| false, || r2.load(Ordering::SeqCst));
+            (b, rej)
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        // A wake without the predicate flipped must NOT unpark it for good.
+        q.wake_consumers();
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(!h.is_finished(), "non-cancelled consumer must keep waiting");
+        retire.store(true, Ordering::SeqCst);
+        q.wake_consumers();
+        let (b, rej) = h.join().unwrap();
+        assert!(b.is_empty(), "cancellation must not fabricate items");
+        assert_eq!(rej, 0);
+        // The queue itself is still open for other consumers.
+        q.push(5).unwrap();
+        assert_eq!(q.pop(), Some(5));
+    }
+
+    /// Cancellation never discards found work: a consumer whose predicate
+    /// is already true still drains what is queued before returning.
+    #[test]
+    fn cancellable_pop_still_returns_queued_work() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(4, DropPolicy::Block);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let mut b = Vec::new();
+        let rej = q.pop_batch_where_cancellable(4, &mut b, |_| false, || true);
+        assert_eq!(b, vec![1, 2], "drain happens before the cancellation check");
+        assert_eq!(rej, 0);
     }
 
     #[test]

@@ -49,6 +49,18 @@
 //! back-pressures the router and the shedding decision is still made — and
 //! accounted — at one place.
 //!
+//! Pool classes declared with a replica *range* (`ReplicaSpec::
+//! with_max_replicas`, CLI `class=min..max`) are **autoscaled**: a
+//! controller thread ([`AutoscaleConfig`]) samples per-class backlog and
+//! windowed deadline-drop/busy counters, growing a pressured class by
+//! building its next replica through the pool's retained factory and
+//! spawning a worker for it mid-run, and shrinking an idle class by
+//! retiring one worker (which drains its in-flight batch before its
+//! thread exits). Every decision lands in `Metrics::scaling_events`.
+//! Cost models can be **persisted** across runs ([`CostProfile`],
+//! `ServerConfig::cost_profile`): a seeded class predicts — and the SLO
+//! shed can act — from its very first request, with zero probe traffic.
+//!
 //! Worker panics and backend errors are caught and surfaced as
 //! [`PipelineError`] — they never poison a join — and requests that were
 //! admitted but not classified when the run aborts are counted as
@@ -58,10 +70,11 @@
 //! from a dataset profile) and [`run_server_source`] /
 //! [`run_pool_source`] (any [`EventSource`]).
 
-use super::backend::{Backend, ReplicaPool};
+use super::backend::{Backend, PoolClass, ReplicaPool};
 use super::ingest::{EventSource, SyntheticSource};
 use super::metrics::{
-    ClassStats, CostModel, Metrics, PercentileReport, RequestTiming, WorkerStats,
+    ClassStats, CostModel, CostProfile, Metrics, PercentileReport, RequestTiming, ScalingEvent,
+    SlidingWindow, WorkerStats,
 };
 use super::queue::{AdmissionQueue, DropPolicy};
 use crate::events::{repr::histogram2_norm, DatasetProfile};
@@ -69,9 +82,9 @@ use crate::sparse::SparseMap;
 use crate::util::panic_message;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Serving-runtime configuration.
@@ -103,6 +116,16 @@ pub struct ServerConfig {
     /// plus this. `None` disables every deadline mechanism (the pre-SLO
     /// behavior, bit for bit).
     pub slo: Option<Duration>,
+    /// Autoscaler controller configuration. `None` keeps every class at
+    /// its configured replica count; `Some` runs the controller loop,
+    /// which has an effect only on classes whose `max` exceeds their base
+    /// count (see [`crate::coordinator::ReplicaSpec::with_max_replicas`]).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Cost-model seed: per-class snapshots from a previous run's
+    /// profile. Seeded classes predict (and SLO-shed) from their first
+    /// request instead of burning probes — and freshly scaled-up replicas
+    /// join a class that already knows its costs.
+    pub cost_profile: Option<CostProfile>,
 }
 
 impl Default for ServerConfig {
@@ -116,6 +139,45 @@ impl Default for ServerConfig {
             drop_policy: DropPolicy::Block,
             batch: 1,
             slo: None,
+            autoscale: None,
+            cost_profile: None,
+        }
+    }
+}
+
+/// Autoscaler controller tuning. The controller samples every class each
+/// `interval`: it reads the class backlog plus two [`SlidingWindow`]
+/// counters (deadline drops, accelerator-busy time) over `window`, and
+/// takes at most one scaling step per class per tick:
+///
+/// - **up** (toward the class max) when deadline drops landed in the
+///   window, or the backlog per active replica exceeds `high_backlog` —
+///   both read "this class cannot keep up";
+/// - **down** (toward the class min) when the class is idle: zero
+///   backlog, no deadline drops in the window, and windowed utilization
+///   below `low_util`. A retiring replica finishes the batch it holds
+///   before its worker thread exits, and grown backends stay warm for
+///   re-activation.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Controller tick (sampling + at most one step per class).
+    pub interval: Duration,
+    /// Sliding-window span the drop/busy counters are read over.
+    pub window: Duration,
+    /// Queued-plus-in-service requests per active replica above which the
+    /// class scales up.
+    pub high_backlog: f64,
+    /// Windowed utilization below which an idle class scales down.
+    pub low_util: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            interval: Duration::from_millis(20),
+            window: Duration::from_millis(200),
+            high_backlog: 2.0,
+            low_util: 0.2,
         }
     }
 }
@@ -192,19 +254,67 @@ impl Routed {
     }
 }
 
+/// A worker's handle on its backend: borrowed from the caller (the
+/// homogeneous path shares one `&dyn Backend` across replicas) or shared
+/// ownership of a pool replica (`Arc`, so the autoscaler can hand clones
+/// to worker threads it spawns mid-run).
+#[derive(Clone)]
+enum BackendRef<'a> {
+    Borrowed(&'a dyn Backend),
+    Shared(Arc<dyn Backend>),
+}
+
+impl<'a> BackendRef<'a> {
+    fn get(&self) -> &dyn Backend {
+        match self {
+            BackendRef::Borrowed(b) => *b,
+            BackendRef::Shared(a) => a.as_ref(),
+        }
+    }
+}
+
 /// One replica class's scheduling inputs: display name, batch affinity,
-/// and one backend reference per worker replica.
+/// one backend per base worker replica, and (for scalable pool classes)
+/// the growth bound plus factory access.
 struct ClassSlots<'a> {
     name: String,
     batch: usize,
-    backends: Vec<&'a dyn Backend>,
+    backends: Vec<BackendRef<'a>>,
+    /// Upper replica bound (== `backends.len()` when not scalable).
+    max: usize,
+    /// Factory access for on-demand replicas past the base count (pool
+    /// classes only; the homogeneous path cannot grow).
+    grow: Option<&'a PoolClass>,
 }
 
 /// A replica class's live runtime state.
 struct ClassCtx<'a> {
     name: String,
     batch: usize,
-    backends: Vec<&'a dyn Backend>,
+    /// Instantiated replica backends, indexed by slot. Grows monotonically
+    /// (scale-up instantiates lazily, scale-down keeps the warm backend
+    /// for re-activation); only slots `< active` serve.
+    slots: Mutex<Vec<BackendRef<'a>>>,
+    /// Active replica count — the scheduling truth the router divides
+    /// backlogs by and workers compare their slot index against. Always
+    /// within `[min, max]`.
+    active: AtomicUsize,
+    /// Highest `active` value seen (for the report).
+    peak: AtomicUsize,
+    /// Lower replica bound: the controller never takes `active` below it,
+    /// and retire tokens are only minted on scale-down, so the class
+    /// always keeps at least `min` serving workers.
+    min: usize,
+    /// Upper replica bound the autoscaler may grow to.
+    max: usize,
+    /// Factory access for slots past the eagerly-built base replicas.
+    grow: Option<&'a PoolClass>,
+    /// Pending retire tokens: each scale-down step deposits one, and
+    /// exactly one worker of the class claims it and exits after draining
+    /// its in-flight batch. Token-based (rather than slot-indexed)
+    /// retirement makes re-growth race-free: there is never a moment
+    /// where a re-activated slot is served twice.
+    retire: AtomicUsize,
     /// Per-class sub-queue (always blocking — drops are global-only).
     queue: AdmissionQueue<Routed>,
     /// Requests routed here and not yet classified (queued + in service).
@@ -214,6 +324,10 @@ struct ClassCtx<'a> {
     /// Deadline sheds attributed to this class: router-predicted
     /// infeasibility plus pop-time expiries.
     deadline_drops: AtomicUsize,
+    /// Cumulative accelerator-busy microseconds across the class's
+    /// replicas, updated per visit — the autoscaler's windowed
+    /// utilization input.
+    busy_us: AtomicU64,
 }
 
 /// What the router decided for one request.
@@ -247,7 +361,9 @@ fn route(classes: &[ClassCtx<'_>], bucket: usize) -> RouteDecision {
     let mut best_pred = f64::NAN;
     for (i, c) in classes.iter().enumerate() {
         let backlog = c.backlog.load(Ordering::SeqCst);
-        let replicas = c.backends.len();
+        // Active (not instantiated) replicas: the autoscaler moves this,
+        // and routing decisions must follow the live serving capacity.
+        let replicas = c.active.load(Ordering::SeqCst).max(1);
         // Queued + in-service requests per replica: the tie-break key, so
         // a 1-replica class doesn't absorb as much as a 4-replica one.
         let load = backlog as f64 / replicas as f64;
@@ -293,6 +409,20 @@ struct Meta {
     deadline: Option<Instant>,
 }
 
+/// Claim one pending retire token (false when none are pending). CAS
+/// loop so concurrent claimers never double-spend a token — each
+/// scale-down step retires exactly one worker.
+fn take_retire_token(tokens: &AtomicUsize) -> bool {
+    let mut t = tokens.load(Ordering::SeqCst);
+    while t > 0 {
+        match tokens.compare_exchange(t, t - 1, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => return true,
+            Err(cur) => t = cur,
+        }
+    }
+    false
+}
+
 /// Per-worker raw output collected at join time.
 struct WorkerOutput {
     wid: usize,
@@ -309,6 +439,12 @@ struct WorkerOutput {
 /// maintains the class backlog and folds observed service times back into
 /// the class cost model; in the single-class fast path (`queue` *is* the
 /// ingress) both are skipped — there is no routing decision to inform.
+///
+/// Autoscaler retirement: a scale-down step deposits a retire token at
+/// the class; the first worker to claim it finishes the batch it holds
+/// (in-flight work is always drained), stops taking new work, and exits —
+/// a parked worker is unblocked via the queue's cancellable pop and
+/// re-parks if a sibling claimed the token first.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wid: usize,
@@ -338,13 +474,25 @@ fn worker_loop(
     let mut metas: Vec<Meta> = Vec::with_capacity(batch_cap);
     let mut maps: Vec<SparseMap<f32>> = Vec::with_capacity(batch_cap);
     loop {
+        // Retired by the autoscaler: claim the pending token and exit
+        // (the previous iteration's batch was fully served — in-flight
+        // work is never abandoned).
+        if take_retire_token(&class.retire) {
+            break;
+        }
         // Deadline-passed requests are discarded inside the queue lock:
         // they must not waste a batch slot, let alone a backend visit.
         // The pop returns promptly on an all-reject drain so the class
         // backlog and drop books update *before* the next routing
-        // decision — the router must not see phantom backlog.
-        let expired =
-            queue.pop_batch_where(batch_cap, &mut batch, |r| r.expired(Instant::now()));
+        // decision — the router must not see phantom backlog. The
+        // cancellation predicate unparks workers (empty-handed) when the
+        // autoscaler deposits a retire token while the queue is idle.
+        let expired = queue.pop_batch_where_cancellable(
+            batch_cap,
+            &mut batch,
+            |r| r.expired(Instant::now()),
+            || class.retire.load(Ordering::SeqCst) > 0,
+        );
         if expired > 0 {
             class.deadline_drops.fetch_add(expired, Ordering::SeqCst);
             if routed {
@@ -355,7 +503,16 @@ fn worker_loop(
             if expired > 0 {
                 continue; // expiries accounted; look for real work again
             }
-            break; // closed and drained, or aborted
+            // Empty-handed: either the stream ended, or a retire token
+            // woke the class. Exactly one worker claims the token; the
+            // rest find it gone and park again.
+            if take_retire_token(&class.retire) {
+                break; // retired by the autoscaler
+            }
+            if queue.is_closed() {
+                break; // closed and drained, or aborted
+            }
+            continue; // the token went to a sibling — look for work again
         }
         let n = batch.len();
         metas.clear();
@@ -397,6 +554,9 @@ fn worker_loop(
             break;
         }
         busy_s += visit_s;
+        // Class-level busy books feed the autoscaler's windowed
+        // utilization (cheap: one atomic add per accelerator visit).
+        class.busy_us.fetch_add((visit_s * 1e6) as u64, Ordering::SeqCst);
         batch_sizes.push(n);
         // The visit is one accelerator pass; attribute its cost evenly
         // across the requests it served, and — when a router is making
@@ -439,6 +599,171 @@ fn worker_loop(
     WorkerOutput { wid, class: ci, busy_s, records, batch_sizes }
 }
 
+/// The autoscaler controller loop: every `auto.interval` it samples each
+/// class's backlog plus sliding-window deadline-drop and busy counters,
+/// then takes at most one scaling step per class per tick.
+///
+/// - **Scale up** (pressure): deadline drops landed in the window, or the
+///   per-active-replica backlog exceeds the high watermark. The next
+///   replica slot's backend is built on demand through the pool's
+///   retained factory (and kept warm for later re-activation); a fresh
+///   worker thread is spawned into the serving scope for it.
+/// - **Scale down** (idle): zero backlog, no deadline drops in the
+///   window, and windowed utilization under the low watermark. One
+///   retire token is deposited; the first worker of the class to see it
+///   drains its in-flight batch and exits.
+///
+/// A failed scale-up (factory error) is recorded as a scaling event and
+/// does not abort serving — the class simply stays at its current size.
+/// The controller exits when the spine flips the `stop` latch after the
+/// stream has drained.
+#[allow(clippy::too_many_arguments)]
+fn run_autoscaler<'scope, 'a: 'scope>(
+    auto: &AutoscaleConfig,
+    s: &'scope std::thread::Scope<'scope, '_>,
+    classes: &'scope [ClassCtx<'a>],
+    has_router: bool,
+    ingress: &'scope AdmissionQueue<Routed>,
+    t_start: Instant,
+    stop: &'scope (Mutex<bool>, Condvar),
+    events: &'scope Mutex<Vec<ScalingEvent>>,
+    next_wid: &'scope AtomicUsize,
+    outputs: &'scope Mutex<Vec<WorkerOutput>>,
+    first_error: &'scope Mutex<Option<String>>,
+) {
+    let mut drops_w: Vec<SlidingWindow> =
+        classes.iter().map(|_| SlidingWindow::new(auto.window)).collect();
+    let mut busy_w: Vec<SlidingWindow> =
+        classes.iter().map(|_| SlidingWindow::new(auto.window)).collect();
+    let push_event = |class: &ClassCtx<'_>, from: usize, to: usize, reason: String| {
+        events.lock().unwrap().push(ScalingEvent {
+            at_s: t_start.elapsed().as_secs_f64(),
+            class: class.name.clone(),
+            from,
+            to,
+            reason,
+        });
+    };
+    loop {
+        // Sleep one tick — or wake immediately when the spine stops us.
+        {
+            let (lock, cv) = stop;
+            let mut stopped = lock.lock().unwrap();
+            if !*stopped {
+                stopped = cv.wait_timeout(stopped, auto.interval).unwrap().0;
+            }
+            if *stopped {
+                return;
+            }
+        }
+        let now = Instant::now();
+        for (ci, class) in classes.iter().enumerate() {
+            let active = class.active.load(Ordering::SeqCst);
+            drops_w[ci].record(now, class.deadline_drops.load(Ordering::SeqCst) as u64);
+            busy_w[ci].record(now, class.busy_us.load(Ordering::SeqCst));
+            let drop_rate = drops_w[ci].rate();
+            let span = busy_w[ci].span_secs();
+            let util = if span > 0.0 && active > 0 {
+                (busy_w[ci].delta() as f64 / 1e6) / (span * active as f64)
+            } else {
+                0.0
+            };
+            // Backlog: the router maintains per-class counts; the
+            // routerless single-class path reads the ingress queue.
+            let backlog = if has_router {
+                class.backlog.load(Ordering::SeqCst)
+            } else {
+                ingress.stats().2
+            };
+            let per_replica = backlog as f64 / active.max(1) as f64;
+            let pressured = drop_rate > 0.0 || per_replica > auto.high_backlog;
+            if pressured && active < class.max {
+                // Scale up: fetch (or lazily build) the next slot's
+                // backend, then spawn a worker for it.
+                let slot = active;
+                let backend = {
+                    let mut slots = class.slots.lock().unwrap();
+                    match slots.get(slot) {
+                        Some(b) => Some(b.clone()), // warm from an earlier grow
+                        None => match class.grow.map(|pc| pc.build_replica(slot)) {
+                            Some(Ok(b)) => {
+                                let r = BackendRef::Shared(b);
+                                slots.push(r.clone());
+                                Some(r)
+                            }
+                            Some(Err(e)) => {
+                                push_event(
+                                    class,
+                                    active,
+                                    active,
+                                    format!("scale-up failed: {e}"),
+                                );
+                                None
+                            }
+                            // Not growable (homogeneous path): max ==
+                            // base count, so this arm is unreachable —
+                            // kept total for safety.
+                            None => None,
+                        },
+                    }
+                };
+                if let Some(backend) = backend {
+                    // Publish the capacity before the worker exists so its
+                    // very first retire-token check cannot see a stale
+                    // count; the router immediately routes against it.
+                    class.active.store(active + 1, Ordering::SeqCst);
+                    class.peak.fetch_max(active + 1, Ordering::SeqCst);
+                    push_event(
+                        class,
+                        active,
+                        active + 1,
+                        if drop_rate > 0.0 {
+                            format!("deadline-drop rate {drop_rate:.1}/s in window")
+                        } else {
+                            format!(
+                                "backlog {per_replica:.1}/replica > {:.1}",
+                                auto.high_backlog
+                            )
+                        },
+                    );
+                    let wid = next_wid.fetch_add(1, Ordering::SeqCst);
+                    let queue = if has_router { &class.queue } else { ingress };
+                    s.spawn(move || {
+                        let out = worker_loop(
+                            wid, ci, class, queue, has_router, backend.get(), classes,
+                            ingress, first_error,
+                        );
+                        outputs.lock().unwrap().push(out);
+                    });
+                }
+            } else if !pressured
+                && active > class.min
+                && backlog == 0
+                && util < auto.low_util
+                && span >= auto.window.as_secs_f64() * 0.5
+            {
+                // Scale down: shrink the advertised capacity first so the
+                // router stops counting the leaving replica, then deposit
+                // the retire token and wake any parked worker to claim it.
+                class.active.store(active - 1, Ordering::SeqCst);
+                class.retire.fetch_add(1, Ordering::SeqCst);
+                push_event(
+                    class,
+                    active,
+                    active - 1,
+                    format!("idle: backlog 0, util {:.0}% < {:.0}%", util * 100.0,
+                        auto.low_util * 100.0),
+                );
+                if has_router {
+                    class.queue.wake_consumers();
+                } else {
+                    ingress.wake_consumers();
+                }
+            }
+        }
+    }
+}
+
 /// Run the serving pipeline to completion over `cfg.n_requests` synthetic
 /// requests with a **homogeneous** pool: `cfg.workers` replicas sharing
 /// one backend, a single class. With one class there is no routing
@@ -466,7 +791,9 @@ pub fn run_server_source(
     let slots = vec![ClassSlots {
         name: backend.name().to_string(),
         batch: cfg.batch.max(1),
-        backends: vec![backend; cfg.workers],
+        backends: vec![BackendRef::Borrowed(backend); cfg.workers],
+        max: cfg.workers,
+        grow: None,
     }];
     serve_classes(source, slots, cfg)
 }
@@ -498,7 +825,9 @@ pub fn run_pool_source(
         .map(|c| ClassSlots {
             name: c.name.clone(),
             batch: c.batch,
-            backends: c.replicas.iter().map(|b| b.as_ref()).collect(),
+            backends: c.replicas.iter().map(|b| BackendRef::Shared(Arc::clone(b))).collect(),
+            max: c.max,
+            grow: Some(c),
         })
         .collect();
     serve_classes(source, slots, cfg)
@@ -524,31 +853,60 @@ fn serve_classes(
     let ingress: AdmissionQueue<Routed> = AdmissionQueue::new(cfg.queue_depth, cfg.drop_policy);
     let classes: Vec<ClassCtx<'_>> = slots
         .into_iter()
-        .map(|c| ClassCtx {
-            // Sub-queues always block: admission control (and its drop
-            // accounting) lives at the global ingress only. A full
-            // sub-queue back-pressures the router, which lets the ingress
-            // saturate, where the shedding decision is made and counted.
-            // (Trade-off vs the single-class path: requests already routed
-            // into a sub-queue are no longer evictable by drop-oldest —
-            // though a deadline can still expire them at the worker pop.)
-            queue: AdmissionQueue::new(cfg.queue_depth, DropPolicy::Block),
-            backlog: AtomicUsize::new(0),
-            cost: CostModel::new(),
-            deadline_drops: AtomicUsize::new(0),
-            name: c.name,
-            batch: c.batch.max(1),
-            backends: c.backends,
+        .map(|c| {
+            let min = c.backends.len();
+            let cost = CostModel::new();
+            // Seed the predictor from a previous run's persisted profile:
+            // the class routes and SLO-sheds from its first request
+            // instead of burning probe traffic, and replicas the
+            // autoscaler grows later join a class that already knows its
+            // costs.
+            if let Some(profile) = &cfg.cost_profile {
+                if let Some(snap) = profile.classes.get(&c.name) {
+                    cost.seed(snap);
+                }
+            }
+            ClassCtx {
+                // Sub-queues always block: admission control (and its drop
+                // accounting) lives at the global ingress only. A full
+                // sub-queue back-pressures the router, which lets the ingress
+                // saturate, where the shedding decision is made and counted.
+                // (Trade-off vs the single-class path: requests already routed
+                // into a sub-queue are no longer evictable by drop-oldest —
+                // though a deadline can still expire them at the worker pop.)
+                queue: AdmissionQueue::new(cfg.queue_depth, DropPolicy::Block),
+                backlog: AtomicUsize::new(0),
+                cost,
+                deadline_drops: AtomicUsize::new(0),
+                busy_us: AtomicU64::new(0),
+                active: AtomicUsize::new(min),
+                peak: AtomicUsize::new(min),
+                retire: AtomicUsize::new(0),
+                min,
+                max: c.max.max(min),
+                grow: c.grow,
+                slots: Mutex::new(c.backends),
+                name: c.name,
+                batch: c.batch.max(1),
+            }
         })
         .collect();
     let first_error: Mutex<Option<String>> = Mutex::new(None);
     let deadline_offered = AtomicUsize::new(0);
     let deadline_ingress = AtomicUsize::new(0);
+    // Worker outputs land here (workers push at exit rather than being
+    // joined for a return value, because the autoscaler spawns workers
+    // the spine never held handles for).
+    let outputs_mx: Mutex<Vec<WorkerOutput>> = Mutex::new(Vec::new());
+    let scaling_events: Mutex<Vec<ScalingEvent>> = Mutex::new(Vec::new());
+    // Autoscaler shutdown latch: flag + condvar so the controller can be
+    // woken mid-sleep once the stream has fully drained.
+    let scaler_stop: (Mutex<bool>, Condvar) = (Mutex::new(false), Condvar::new());
+    let next_wid = AtomicUsize::new(classes.iter().map(|c| c.min).sum());
     let (w, h) = source.geometry();
     let (tx_ev, rx_ev) =
         sync_channel::<super::ingest::SourcedRequest>(cfg.queue_depth.max(1));
 
-    let mut outputs: Vec<WorkerOutput> = Vec::new();
     std::thread::scope(|s| {
         let error_ref = &first_error;
 
@@ -654,30 +1012,65 @@ fn serve_classes(
             })
         });
 
-        // Stage 4: per-class accelerator worker pools.
+        // Stage 4: per-class accelerator worker pools — the base (min)
+        // replicas; the autoscaler below may spawn more into this scope.
+        let outputs_ref = &outputs_mx;
         let mut handles = Vec::new();
-        let mut next_wid = 0usize;
+        let mut base_wid = 0usize;
         for (ci, class) in classes.iter().enumerate() {
-            for &backend in &class.backends {
-                let wid = next_wid;
-                next_wid += 1;
+            let base: Vec<BackendRef<'_>> = class.slots.lock().unwrap().clone();
+            for backend in base {
+                let wid = base_wid;
+                base_wid += 1;
                 handles.push(s.spawn(move || {
                     let queue = if has_router { &class.queue } else { ingress_ref };
-                    worker_loop(
-                        wid, ci, class, queue, has_router, backend, classes_ref, ingress_ref,
-                        error_ref,
-                    )
+                    let out = worker_loop(
+                        wid, ci, class, queue, has_router, backend.get(), classes_ref,
+                        ingress_ref, error_ref,
+                    );
+                    outputs_ref.lock().unwrap().push(out);
                 }));
             }
         }
-        outputs = handles.into_iter().map(|h| h.join().expect("worker thread")).collect();
+
+        // Stage 5: the autoscaler controller. Spawned only when it could
+        // ever act — autoscaling requested AND some class has headroom.
+        let stop_ref = &scaler_stop;
+        let events_ref = &scaling_events;
+        let next_wid_ref = &next_wid;
+        let scalable = classes.iter().any(|c| c.max > c.min);
+        let controller = (cfg.autoscale.is_some() && scalable).then(|| {
+            let auto = cfg.autoscale.clone().unwrap();
+            s.spawn(move || {
+                run_autoscaler(
+                    &auto, s, classes_ref, has_router, ingress_ref, t_start, stop_ref,
+                    events_ref, next_wid_ref, outputs_ref, error_ref,
+                )
+            })
+        });
+
+        for h in handles {
+            h.join().expect("worker thread");
+        }
         if let Some(h) = router {
             h.join().expect("router thread");
         }
         repr.join().expect("repr thread");
         src_thread.join().expect("source thread");
+        // The stream has drained: stop the controller. Workers it spawned
+        // exit on their own (queues are closed) and are joined by the
+        // scope before `outputs_mx` is read below.
+        {
+            let (lock, cv) = &scaler_stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        if let Some(h) = controller {
+            h.join().expect("autoscaler thread");
+        }
     });
 
+    let mut outputs = outputs_mx.into_inner().unwrap();
     outputs.sort_by_key(|o| o.wid);
     let (submitted, dropped, _still_queued) = ingress.stats();
     let processed: usize = outputs.iter().map(|o| o.records.len()).sum();
@@ -703,6 +1096,12 @@ fn serve_classes(
         deadline_offered: deadline_offered.load(Ordering::SeqCst),
         deadline_ingress: deadline_ingress.load(Ordering::SeqCst),
         deadline_router: deadline_shed,
+        scaling_events: scaling_events.into_inner().unwrap(),
+        // What `--cost-profile` rewrites at shutdown: every class's final
+        // EWMA state (seeded knowledge + everything learned this run).
+        cost_profile: CostProfile {
+            classes: classes.iter().map(|c| (c.name.clone(), c.cost.snapshot())).collect(),
+        },
         ..Metrics::default()
     };
     let mut predictions = Vec::with_capacity(processed);
@@ -731,6 +1130,25 @@ fn serve_classes(
             predictions.push(Prediction { label: r.label, pred: r.pred, worker: o.wid });
         }
     }
+    // Integrated active-replica seconds per class, reconstructed from the
+    // scaling log: the truthful utilization denominator when the
+    // autoscaler moved the count mid-run (a run that mostly served at 4
+    // replicas but ended at 1 must not divide by 1 × wall).
+    let replica_secs: Vec<f64> = classes
+        .iter()
+        .map(|class| {
+            let mut level = class.min as f64;
+            let mut t_prev = 0.0f64;
+            let mut integral = 0.0f64;
+            for e in metrics.scaling_events.iter().filter(|e| e.class == class.name) {
+                let t = e.at_s.clamp(0.0, wall_s);
+                integral += level * (t - t_prev).max(0.0);
+                t_prev = t;
+                level = e.to as f64;
+            }
+            integral + level * (wall_s - t_prev).max(0.0)
+        })
+        .collect();
     // Per-class rollup: served/visit/busy books plus how well the routing
     // predictor tracked observed service times.
     for (ci, class) in classes.iter().enumerate() {
@@ -763,7 +1181,11 @@ fn serve_classes(
         }
         metrics.per_class.push(ClassStats {
             class: class.name.clone(),
-            replicas: class.backends.len(),
+            replicas: class.active.load(Ordering::SeqCst),
+            replicas_min: class.min,
+            replicas_max: class.max,
+            replicas_peak: class.peak.load(Ordering::SeqCst),
+            replica_s: replica_secs[ci],
             served,
             batches,
             busy_s,

@@ -13,7 +13,8 @@
 //! - `serve      --dataset <name> [--requests N] [--backend sim|func|dense]
 //!               [--workers N] [--queue D] [--drop-policy block|drop-oldest]
 //!               [--batch B] [--pool class=count[@batch],...]
-//!               [--source synth|replay:path[@speed]|tail:path] [--slo-ms N]`
+//!               [--source synth|replay:path[@speed]|tail:path] [--slo-ms N]
+//!               [--cost-profile path] [--scale-interval-ms N] [--scale-window-ms N]`
 //!   run the sharded serving runtime (accelerator worker replicas behind
 //!   an admission-controlled ingress queue; each worker drains up to B
 //!   already-queued requests per backend visit) and print per-worker
@@ -24,11 +25,20 @@
 //!   sending each request to the class minimizing predicted completion
 //!   time; the report adds a per-class breakdown. `--source` feeds the
 //!   runtime from a recorded `.esda` dataset replayed at wall-clock rate
-//!   × speed, or by tailing a growing capture file; `--slo-ms N` gives
-//!   every request the deadline `arrival + N ms` — expired requests are
-//!   dropped at the ingress, predicted-infeasible ones are shed at the
-//!   router, and the report adds SLO attainment with the deadline-drop
-//!   breakdown.
+//!   × speed (streamed sample-at-a-time — long captures never
+//!   materialize), or by tailing a growing capture file; `--slo-ms N`
+//!   gives every request the deadline `arrival + N ms` — expired requests
+//!   are dropped at the ingress, predicted-infeasible ones are shed at
+//!   the router, and the report adds SLO attainment with the
+//!   deadline-drop breakdown. A pool class spelled as a range
+//!   (`--pool func=1..4`) is autoscaled: a controller samples its
+//!   backlog, windowed utilization, and deadline-drop rate, growing and
+//!   shrinking the replica count inside the band (tick/window tunable
+//!   via `--scale-interval-ms`/`--scale-window-ms`); the report gains
+//!   the scaling log and a replica-band column. `--cost-profile path`
+//!   seeds every class's routing cost model from a previous run's
+//!   profile (no cold-start probes) and rewrites the file with the
+//!   updated models at shutdown.
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
@@ -259,6 +269,24 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             Some(std::time::Duration::from_secs_f64(ms / 1e3))
         }
     };
+    // Cost-model persistence: seed from the profile when it exists (a
+    // missing file just means a cold first run — the same flag rewrites
+    // it at shutdown); a *corrupt* profile is an error, not a cold start.
+    let cost_profile_path = args.get("cost-profile").map(std::path::PathBuf::from);
+    let cost_profile = match &cost_profile_path {
+        Some(p) if p.exists() => Some(esda::coordinator::CostProfile::load(p)?),
+        _ => None,
+    };
+    let scale_interval_ms = args.get_f64("scale-interval-ms", 20.0)?;
+    let scale_window_ms = args.get_f64("scale-window-ms", 200.0)?;
+    if !(scale_interval_ms > 0.0 && scale_interval_ms <= 1e6)
+        || !(scale_window_ms >= scale_interval_ms && scale_window_ms <= 1e7)
+    {
+        return Err(format!(
+            "--scale-interval-ms must be in (0, 1e6] and --scale-window-ms in \
+             [interval, 1e7], got {scale_interval_ms} / {scale_window_ms}"
+        ));
+    }
     let cfg = ServerConfig {
         n_requests: args.get_usize("requests", 32)?,
         seed,
@@ -269,6 +297,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             .ok_or_else(|| format!("--drop-policy: expected block|drop-oldest, got '{policy_raw}'"))?,
         batch,
         slo,
+        autoscale: Some(esda::coordinator::AutoscaleConfig {
+            interval: std::time::Duration::from_secs_f64(scale_interval_ms / 1e3),
+            window: std::time::Duration::from_secs_f64(scale_window_ms / 1e3),
+            ..Default::default()
+        }),
+        cost_profile,
     };
     let source_spec = esda::util::cli::parse_source_spec(args.get_or("source", "synth"))?;
     // A non-synthetic source replaces the generated stream: build it now
@@ -356,8 +390,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                     ))
                 }
             };
-            specs.push(match it.batch {
+            let s = match it.batch {
                 Some(b) => s.with_batch(b),
+                None => s,
+            };
+            // `class=min..max` hands the class to the autoscaler.
+            specs.push(match it.max {
+                Some(m) => s.with_max_replicas(m),
                 None => s,
             });
         }
@@ -413,6 +452,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(line) = esda::report::slo_line(m) {
         println!("{line}");
     }
+    for line in esda::report::scaling_log(m) {
+        println!("autoscale {line}");
+    }
     if m.mean_batch() > 1.0 {
         let bp = m.batch_percentiles();
         println!(
@@ -432,6 +474,20 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     if let Some(ms) = m.mean_sim_latency_ms(CLOCK_HZ) {
         println!("simulated hardware latency: {ms:.3} ms/inference @187MHz");
+    }
+    // Rewrite the cost profile with everything this run learned, so the
+    // next `serve --cost-profile` starts with seeded routers.
+    if let Some(p) = &cost_profile_path {
+        if m.cost_profile.is_empty() {
+            println!(
+                "cost profile: nothing observed (single-class run learns no routing \
+                 costs) — {} left unchanged",
+                p.display()
+            );
+        } else {
+            m.cost_profile.save(p)?;
+            println!("cost profile rewritten -> {}", p.display());
+        }
     }
     Ok(())
 }

@@ -157,9 +157,19 @@ pub fn pool_table(m: &crate::coordinator::Metrics) -> Table {
         let share = if m.total == 0 { f64::NAN } else { c.served as f64 / m.total as f64 };
         let mean_batch =
             if c.batches == 0 { f64::NAN } else { c.served as f64 / c.batches as f64 };
+        // A fixed class renders its count; an autoscaled one renders the
+        // final count, the configured band, and the peak it reached.
+        let replicas = if c.replicas_max > c.replicas_min {
+            format!(
+                "{} [{}..{}] peak {}",
+                c.replicas, c.replicas_min, c.replicas_max, c.replicas_peak
+            )
+        } else {
+            c.replicas.to_string()
+        };
         t.row(vec![
             c.class.clone(),
-            c.replicas.to_string(),
+            replicas,
             c.served.to_string(),
             pct(share),
             c.batches.to_string(),
@@ -175,14 +185,20 @@ pub fn pool_table(m: &crate::coordinator::Metrics) -> Table {
     t
 }
 
-/// One-line SLO summary — attainment plus the deadline-drop breakdown
-/// (ingress expiries vs router/scheduling sheds), kept distinct from
-/// queue-full drops. `None` when the run carried no deadlines.
+/// One-line SLO summary — attainment over every *offered* deadline
+/// (sheds and drops count as misses), the served-only figure beside it,
+/// and the deadline-drop breakdown (ingress expiries vs
+/// router/scheduling sheds), kept distinct from queue-full drops. `None`
+/// when the run carried no deadlines.
 pub fn slo_line(m: &crate::coordinator::Metrics) -> Option<String> {
     let attainment = m.slo_attainment()?;
+    let served_only = match m.slo_attainment_served() {
+        Some(v) => format!("{:.1}% of served", v * 100.0),
+        None => "none served".to_string(),
+    };
     Some(format!(
-        "SLO attainment {:.1}% ({} of {} in deadline; {} served late) | deadline drops: \
-         {} ingress + {} router | {} queue-full drop(s)",
+        "SLO attainment {:.1}% ({} of {} offered in deadline; {served_only}; {} served \
+         late) | deadline drops: {} ingress + {} router | {} queue-full drop(s)",
         attainment * 100.0,
         m.deadline_met,
         m.deadline_offered,
@@ -191,6 +207,20 @@ pub fn slo_line(m: &crate::coordinator::Metrics) -> Option<String> {
         m.deadline_router,
         m.dropped,
     ))
+}
+
+/// The autoscaler's decision log, one line per scaling event (empty when
+/// the run had no autoscaler or it never acted).
+pub fn scaling_log(m: &crate::coordinator::Metrics) -> Vec<String> {
+    m.scaling_events
+        .iter()
+        .map(|e| {
+            format!(
+                "[+{:.3}s] {}: {} -> {} replica(s) ({})",
+                e.at_s, e.class, e.from, e.to, e.reason
+            )
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -243,6 +273,10 @@ mod tests {
         m.per_class.push(ClassStats {
             class: "func".into(),
             replicas: 2,
+            replicas_min: 1,
+            replicas_max: 4,
+            replicas_peak: 3,
+            replica_s: 0.006,
             served: 2,
             batches: 1,
             busy_s: 0.003,
@@ -255,6 +289,10 @@ mod tests {
         m.per_class.push(ClassStats {
             class: "sim".into(),
             replicas: 1,
+            replicas_min: 1,
+            replicas_max: 1,
+            replicas_peak: 1,
+            replica_s: 0.0,
             served: 0,
             batches: 0,
             busy_s: 0.0,
@@ -269,8 +307,38 @@ mod tests {
         assert!(s.contains("sim"), "{s}");
         assert!(s.contains("100%"), "func serves the full stream: {s}");
         assert!(s.contains("ddl drops"), "per-class deadline sheds must render: {s}");
+        // The autoscaled class renders its band and peak; the fixed class
+        // renders a bare count.
+        assert!(s.contains("2 [1..4] peak 3"), "{s}");
         // The zero-traffic class renders dashes, never a literal NaN.
         assert!(!s.contains("NaN"), "{s}");
+    }
+
+    /// The scaling log renders one line per autoscaler decision.
+    #[test]
+    fn scaling_log_renders_events() {
+        use crate::coordinator::{Metrics, ScalingEvent};
+        let mut m = Metrics::default();
+        assert!(scaling_log(&m).is_empty(), "no autoscaler ⇒ no log");
+        m.scaling_events.push(ScalingEvent {
+            at_s: 0.25,
+            class: "func".into(),
+            from: 1,
+            to: 2,
+            reason: "deadline-drop rate 3.0/s in window".into(),
+        });
+        m.scaling_events.push(ScalingEvent {
+            at_s: 1.5,
+            class: "func".into(),
+            from: 2,
+            to: 1,
+            reason: "idle: backlog 0, util 4% < 20%".into(),
+        });
+        let lines = scaling_log(&m);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("func: 1 -> 2"), "{}", lines[0]);
+        assert!(lines[0].contains("deadline-drop rate"), "{}", lines[0]);
+        assert!(lines[1].contains("2 -> 1"), "{}", lines[1]);
     }
 
     /// The SLO line distinguishes deadline drops from queue-full drops
@@ -288,6 +356,7 @@ mod tests {
         m.dropped = 0;
         let line = slo_line(&m).unwrap();
         assert!(line.contains("60.0%"), "{line}");
+        assert!(line.contains("85.7% of served"), "served-only figure: {line}");
         assert!(line.contains("1 ingress"), "{line}");
         assert!(line.contains("2 router"), "{line}");
         assert!(line.contains("0 queue-full"), "{line}");

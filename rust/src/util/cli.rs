@@ -86,26 +86,32 @@ impl Args {
     }
 }
 
-/// One entry of a `--pool` spec: a replica class name, its replica count,
-/// and an optional batch-affinity override.
+/// One entry of a `--pool` spec: a replica class name, its base replica
+/// count, an optional autoscaling upper bound, and an optional
+/// batch-affinity override.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PoolItem {
     pub class: String,
+    /// Base (minimum) replica count.
     pub count: usize,
+    /// `Some(m)` when spelled `class=min..max`: the autoscaler may grow
+    /// the class up to `m` replicas. `None` pins the class at `count`.
+    pub max: Option<usize>,
     /// `Some(b)` when spelled `class=count@b`; `None` leaves the class's
     /// default batch affinity in place.
     pub batch: Option<usize>,
 }
 
-/// Parse a `--pool` spec: a comma-separated list of `class=count[@batch]`
-/// entries, e.g. `func=4,sim=1,dense=1` or `func=4@8,sim=1`.
+/// Parse a `--pool` spec: a comma-separated list of
+/// `class=count[@batch]` or `class=min..max[@batch]` entries, e.g.
+/// `func=4,sim=1,dense=1`, `func=4@8,sim=1`, or `func=1..4,sim=1..2@1`.
 pub fn parse_pool_spec(s: &str) -> Result<Vec<PoolItem>, String> {
     let mut out = Vec::new();
     for part in s.split(',') {
         let part = part.trim();
-        let (class, rest) = part
-            .split_once('=')
-            .ok_or_else(|| format!("pool entry '{part}': expected class=count[@batch]"))?;
+        let (class, rest) = part.split_once('=').ok_or_else(|| {
+            format!("pool entry '{part}': expected class=count[@batch] or class=min..max[@batch]")
+        })?;
         let (count_s, batch) = match rest.split_once('@') {
             Some((c, b)) => {
                 let b: usize = b
@@ -118,16 +124,35 @@ pub fn parse_pool_spec(s: &str) -> Result<Vec<PoolItem>, String> {
             }
             None => (rest, None),
         };
-        let count: usize = count_s
-            .parse()
-            .map_err(|_| format!("pool entry '{part}': bad count '{count_s}'"))?;
+        let (count, max) = match count_s.split_once("..") {
+            Some((lo, hi)) => {
+                let lo: usize = lo
+                    .parse()
+                    .map_err(|_| format!("pool entry '{part}': bad min count '{lo}'"))?;
+                let hi: usize = hi
+                    .parse()
+                    .map_err(|_| format!("pool entry '{part}': bad max count '{hi}'"))?;
+                if hi < lo {
+                    return Err(format!(
+                        "pool entry '{part}': replica range must satisfy min <= max"
+                    ));
+                }
+                (lo, Some(hi))
+            }
+            None => {
+                let count: usize = count_s
+                    .parse()
+                    .map_err(|_| format!("pool entry '{part}': bad count '{count_s}'"))?;
+                (count, None)
+            }
+        };
         if count == 0 {
             return Err(format!("pool entry '{part}': count must be >= 1"));
         }
         if class.is_empty() {
             return Err(format!("pool entry '{part}': empty class name"));
         }
-        out.push(PoolItem { class: class.to_string(), count, batch });
+        out.push(PoolItem { class: class.to_string(), count, max, batch });
     }
     Ok(out)
 }
@@ -233,20 +258,39 @@ mod tests {
         assert_eq!(
             items,
             vec![
-                PoolItem { class: "func".into(), count: 4, batch: None },
-                PoolItem { class: "sim".into(), count: 1, batch: None },
-                PoolItem { class: "dense".into(), count: 2, batch: None },
+                PoolItem { class: "func".into(), count: 4, max: None, batch: None },
+                PoolItem { class: "sim".into(), count: 1, max: None, batch: None },
+                PoolItem { class: "dense".into(), count: 2, max: None, batch: None },
             ]
         );
         let items = parse_pool_spec("func=4@8, sim=1").unwrap();
         assert_eq!(items[0].batch, Some(8));
-        assert_eq!(items[1], PoolItem { class: "sim".into(), count: 1, batch: None });
+        assert_eq!(
+            items[1],
+            PoolItem { class: "sim".into(), count: 1, max: None, batch: None }
+        );
+    }
+
+    /// The autoscaling range syntax: `class=min..max[@batch]`.
+    #[test]
+    fn pool_spec_parses_replica_ranges() {
+        let items = parse_pool_spec("func=1..4,sim=2..2@1,dense=3").unwrap();
+        assert_eq!(
+            items,
+            vec![
+                PoolItem { class: "func".into(), count: 1, max: Some(4), batch: None },
+                PoolItem { class: "sim".into(), count: 2, max: Some(2), batch: Some(1) },
+                PoolItem { class: "dense".into(), count: 3, max: None, batch: None },
+            ]
+        );
     }
 
     #[test]
     fn pool_spec_rejects_malformed_entries() {
-        for bad in ["", "func", "func=", "func=0", "=3", "func=2@0", "func=2@x", "func=4,,sim=1"]
-        {
+        for bad in [
+            "", "func", "func=", "func=0", "=3", "func=2@0", "func=2@x", "func=4,,sim=1",
+            "func=4..2", "func=0..2", "func=..2", "func=1..", "func=1..x", "func=x..2",
+        ] {
             assert!(parse_pool_spec(bad).is_err(), "accepted '{bad}'");
         }
     }

@@ -69,6 +69,14 @@ impl Json {
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// `Some(v)` ⇒ number, `None` ⇒ null — the emit side of optional
+    /// numeric fields (e.g. unobserved cost-model slots).
+    pub fn opt_num(v: Option<f64>) -> Json {
+        match v {
+            Some(x) => Json::Num(x),
+            None => Json::Null,
+        }
+    }
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
@@ -335,6 +343,14 @@ mod tests {
         assert_eq!(b[0], Json::Bool(true));
         assert_eq!(b[1], Json::Null);
         assert_eq!(b[2].as_str(), Some("x\n"));
+    }
+
+    #[test]
+    fn opt_num_maps_none_to_null() {
+        assert_eq!(Json::opt_num(None), Json::Null);
+        assert_eq!(Json::opt_num(Some(2.5)), Json::Num(2.5));
+        let doc = Json::Arr(vec![Json::opt_num(None), Json::opt_num(Some(1.0))]).to_string();
+        assert_eq!(doc, "[null,1]");
     }
 
     #[test]

@@ -4,8 +4,10 @@
 
 use esda::arch::HwConfig;
 use esda::coordinator::{
-    run_pool, run_server, run_server_source, Backend, BackendError, Classification, DropPolicy,
-    Functional, ReplaySource, ReplicaPool, ReplicaSpec, ServerConfig, ServerResult, Simulator,
+    run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig, Backend,
+    BackendError, Classification, DropPolicy, EventSource, Functional, IngestError,
+    ReplaySource, ReplicaPool, ReplicaSpec, ServerConfig, ServerResult, Simulator,
+    SourcedRequest,
 };
 use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::model::quant::{quantize_network, QuantizedNet};
@@ -49,7 +51,7 @@ fn pool_prediction_multiset_is_replica_invariant() {
         queue_depth: 4,
         drop_policy: DropPolicy::Block,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let single = run_server(&profile, &backend, &cfg(1)).expect("1-worker run");
     assert_eq!(single.metrics.total, 24);
@@ -84,7 +86,7 @@ fn simulator_pool_is_replica_invariant() {
         queue_depth: 2,
         drop_policy: DropPolicy::Block,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let a = run_server(&profile, &backend, &cfg(1)).expect("1-worker run");
     let b = run_server(&profile, &backend, &cfg(3)).expect("3-worker run");
@@ -144,7 +146,7 @@ fn saturated_queue_sheds_load_without_deadlock() {
         queue_depth: 1,
         drop_policy: DropPolicy::DropOldest,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let r = run_server(&profile, &backend, &cfg).expect("shedding run must complete");
     let m = &r.metrics;
@@ -171,7 +173,7 @@ fn blocking_admission_is_lossless_under_saturation() {
         queue_depth: 1,
         drop_policy: DropPolicy::Block,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let r = run_server(&profile, &backend, &cfg).expect("blocking run");
     assert_eq!(r.metrics.total, 16);
@@ -194,7 +196,7 @@ fn pool_shape_invariant_prediction_multiset() {
         queue_depth: 4,
         drop_policy: DropPolicy::Block,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let baseline =
         run_server(&profile, &Functional::new(qnet.clone()), &cfg).expect("baseline run");
@@ -260,7 +262,7 @@ fn cost_aware_routing_starves_slow_class() {
         queue_depth: 4,
         drop_policy: DropPolicy::Block,
         batch: 1,
-        slo: None,
+        ..Default::default()
     };
     let baseline =
         run_server(&profile, &Functional::new(qnet.clone()), &cfg).expect("baseline run");
@@ -358,6 +360,21 @@ fn serving_conserves_requests_property() {
             } else {
                 None
             },
+            // Sometimes a deliberately twitchy autoscaler (tiny tick,
+            // hair-trigger watermarks) so replica counts churn mid-run:
+            // scale-ups, token retirements, and re-growth must all
+            // conserve requests.
+            autoscale: if g.chance(0.5) {
+                Some(AutoscaleConfig {
+                    interval: Duration::from_millis(2),
+                    window: Duration::from_millis(20),
+                    high_backlog: 0.5,
+                    low_util: 0.9,
+                })
+            } else {
+                None
+            },
+            ..Default::default()
         };
         let fail_after = if g.chance(0.35) { Some(g.usize(0, n_requests)) } else { None };
         let delay = Duration::from_micros(g.u64(0..=400));
@@ -368,23 +385,29 @@ fn serving_conserves_requests_property() {
             // path crosses class boundaries.
             let (qa, qb) = (qnet.clone(), qnet.clone());
             let (ca, cb) = (Arc::clone(&calls), Arc::clone(&calls));
+            // Classes are sometimes scalable: the factory then also runs
+            // mid-serve, on the controller's scale-up path.
+            let (na, nb) = (g.usize(1, 2), g.usize(1, 2));
+            let (ma, mb) = (na + g.usize(0, 2), nb + g.usize(0, 1));
             let pool = ReplicaPool::build(vec![
-                ReplicaSpec::new("a", g.usize(1, 2), g.usize(1, 4), move |_| {
+                ReplicaSpec::new("a", na, g.usize(1, 4), move |_| {
                     Ok(Box::new(Counting {
                         inner: Functional::new(qa.clone()),
                         calls: Arc::clone(&ca),
                         fail_after,
                         delay,
                     }))
-                }),
-                ReplicaSpec::new("b", g.usize(1, 2), g.usize(1, 4), move |_| {
+                })
+                .with_max_replicas(ma),
+                ReplicaSpec::new("b", nb, g.usize(1, 4), move |_| {
                     Ok(Box::new(Counting {
                         inner: Functional::new(qb.clone()),
                         calls: Arc::clone(&cb),
                         fail_after: None,
                         delay: Duration::ZERO,
                     }))
-                }),
+                })
+                .with_max_replicas(mb),
             ])
             .expect("pool build");
             run_pool(&profile, &pool, &cfg)
@@ -418,6 +441,25 @@ fn serving_conserves_requests_property() {
                 let class_ddl: usize =
                     r.metrics.per_class.iter().map(|c| c.deadline_drops).sum();
                 assert_eq!(class_ddl, r.metrics.deadline_router);
+                // Autoscaled or not, replica books stay inside the band.
+                for c in &r.metrics.per_class {
+                    assert!(
+                        c.replicas_min <= c.replicas && c.replicas <= c.replicas_max,
+                        "class {}: {} outside [{}, {}]",
+                        c.class,
+                        c.replicas,
+                        c.replicas_min,
+                        c.replicas_max
+                    );
+                    assert!(
+                        (c.replicas_min..=c.replicas_max).contains(&c.replicas_peak),
+                        "class {}: peak {} outside [{}, {}]",
+                        c.class,
+                        c.replicas_peak,
+                        c.replicas_min,
+                        c.replicas_max
+                    );
+                }
                 if cfg.slo.is_some() {
                     assert_eq!(
                         r.metrics.deadline_met + r.metrics.deadline_missed,
@@ -463,7 +505,7 @@ fn batched_pool_prediction_multiset_is_batch_invariant() {
         queue_depth: 8,
         drop_policy: DropPolicy::Block,
         batch,
-        slo: None,
+        ..Default::default()
     };
     let mut base: Option<Vec<(usize, usize)>> = None;
     for batch in [1usize, 4, 16] {
@@ -545,6 +587,7 @@ fn router_sheds_infeasible_deadlines_before_replicas() {
         // Far tighter than the 30 ms service time: once a class's cost
         // model seeds, no predicted completion can meet this.
         slo: Some(Duration::from_millis(4)),
+        ..Default::default()
     };
     // No-SLO baseline on the same seed: whatever the SLO'd run serves
     // must predict identically (shedding changes *who* gets served,
@@ -635,6 +678,7 @@ fn single_class_deadlines_enforced_without_router() {
         // queue) pushes later ones past their deadline before the worker
         // reaches them.
         slo: Some(Duration::from_millis(60)),
+        ..Default::default()
     };
     let baseline_cfg = ServerConfig { slo: None, ..cfg.clone() };
     let baseline =
@@ -666,6 +710,164 @@ fn single_class_deadlines_enforced_without_router() {
     assert!(
         is_multisubset(&prediction_multiset(&r), &base),
         "deadline shedding changed a served request's prediction"
+    );
+}
+
+/// The autoscaler acceptance test: a burst into a deliberately slow
+/// 1..3-replica class scales it up (backlog/deadline pressure), the idle
+/// gap that follows scales it back down, replica counts never leave the
+/// band, and the conservation property holds throughout.
+#[test]
+fn autoscaler_scales_up_under_pressure_and_down_when_idle() {
+    use std::time::Instant;
+
+    /// Burst, long idle gap, then a trickle — arrival is always "now".
+    struct BurstSource {
+        profile: DatasetProfile,
+        rng: Rng,
+        phases: Vec<(usize, Duration)>,
+        phase: usize,
+        in_phase: usize,
+        total: usize,
+    }
+    impl EventSource for BurstSource {
+        fn name(&self) -> &str {
+            "burst"
+        }
+        fn geometry(&self) -> (usize, usize) {
+            (self.profile.w, self.profile.h)
+        }
+        fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+            while self.phase < self.phases.len() {
+                let (n, gap) = self.phases[self.phase];
+                if self.in_phase < n {
+                    self.in_phase += 1;
+                    let label = self.total % self.profile.n_classes;
+                    self.total += 1;
+                    let events = self.profile.sample(label, &mut self.rng);
+                    return Ok(Some(SourcedRequest {
+                        label,
+                        events,
+                        arrival: Instant::now(),
+                    }));
+                }
+                std::thread::sleep(gap);
+                self.phase += 1;
+                self.in_phase = 0;
+            }
+            Ok(None)
+        }
+    }
+
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let n_burst = 40;
+    let n_tail = 2;
+    let source = BurstSource {
+        profile: profile.clone(),
+        rng: Rng::new(13),
+        // The gap spans many autoscaler windows, so the scale-down side
+        // is not a timing race even on a slow CI box.
+        phases: vec![(n_burst, Duration::from_millis(600)), (n_tail, Duration::ZERO)],
+        phase: 0,
+        in_phase: 0,
+        total: 0,
+    };
+    let qs = qnet.clone();
+    let pool = ReplicaPool::build(vec![ReplicaSpec::new("work", 1, 1, move |_| {
+        Ok(Box::new(Throttled {
+            inner: Functional::new(qs.clone()),
+            first: std::sync::atomic::AtomicBool::new(false),
+            first_delay: Duration::ZERO,
+            delay: Duration::from_millis(3),
+        }))
+    })
+    .with_max_replicas(3)])
+    .expect("pool build");
+    let cfg = ServerConfig {
+        queue_depth: 32,
+        drop_policy: DropPolicy::Block,
+        slo: Some(Duration::from_secs(30)), // generous: pressure comes from backlog
+        autoscale: Some(AutoscaleConfig {
+            interval: Duration::from_millis(5),
+            window: Duration::from_millis(60),
+            high_backlog: 2.0,
+            low_util: 0.5,
+        }),
+        ..Default::default()
+    };
+    let r = run_pool_source(Box::new(source), &pool, &cfg).expect("autoscaled run");
+    let m = &r.metrics;
+    // Conservation holds while replicas come and go.
+    assert_eq!(
+        m.total + m.dropped + m.deadline_drops(),
+        n_burst + n_tail,
+        "conservation must hold under autoscaling"
+    );
+    let c = &m.per_class[0];
+    assert_eq!((c.replicas_min, c.replicas_max), (1, 3));
+    assert!(c.replicas_peak >= 2, "the burst must trigger a scale-up (peak {})", c.replicas_peak);
+    assert!(c.replicas_peak <= 3 && c.replicas >= 1 && c.replicas <= 3, "band violated");
+    assert!(
+        m.scaling_events.iter().any(|e| e.to > e.from),
+        "scale-up must be logged: {:?}",
+        m.scaling_events
+    );
+    assert!(
+        m.scaling_events.iter().any(|e| e.to < e.from),
+        "the idle gap must log a scale-down: {:?}",
+        m.scaling_events
+    );
+    for e in &m.scaling_events {
+        assert!(e.from.abs_diff(e.to) <= 1, "one step per tick: {e:?}");
+        assert!((1..=3).contains(&e.to), "event outside band: {e:?}");
+    }
+}
+
+/// Cost-profile persistence: a cold two-class pool burns probe requests
+/// to seed its routers; re-running with the learned profile seeds them
+/// up front — zero probes — while predictions stay baseline-identical.
+#[test]
+fn seeded_cost_profile_eliminates_probes() {
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let make_pool = |qnet: &QuantizedNet| {
+        let (qa, qb) = (qnet.clone(), qnet.clone());
+        ReplicaPool::build(vec![
+            ReplicaSpec::new("fast", 1, 4, move |_| Ok(Box::new(Functional::new(qa.clone())))),
+            ReplicaSpec::new("slow", 1, 1, move |_| {
+                Ok(Box::new(Throttled {
+                    inner: Functional::new(qb.clone()),
+                    first: std::sync::atomic::AtomicBool::new(false),
+                    first_delay: Duration::ZERO,
+                    delay: Duration::from_millis(2),
+                }))
+            }),
+        ])
+        .expect("pool build")
+    };
+    let cfg = ServerConfig { n_requests: 32, seed: 42, queue_depth: 8, ..Default::default() };
+    let probes = |r: &ServerResult| r.metrics.per_class.iter().map(|c| c.unseeded).sum::<usize>();
+
+    let cold = run_pool(&profile, &make_pool(&qnet), &cfg).expect("cold run");
+    assert!(probes(&cold) >= 1, "a cold pool must probe to seed its cost models");
+    let learned = cold.metrics.cost_profile.clone();
+    assert!(!learned.is_empty(), "a routed run must leave a non-empty profile");
+    assert!(learned.classes.contains_key("fast") && learned.classes.contains_key("slow"));
+
+    let warm_cfg = ServerConfig { cost_profile: Some(learned), ..cfg.clone() };
+    let warm = run_pool(&profile, &make_pool(&qnet), &warm_cfg).expect("seeded run");
+    assert_eq!(warm.metrics.total, 32);
+    assert_eq!(
+        probes(&warm),
+        0,
+        "a profile-seeded pool must route every request with a prediction"
+    );
+    // Seeding changes routing knowledge, never predictions.
+    assert_eq!(
+        prediction_multiset(&warm),
+        prediction_multiset(&cold),
+        "cost seeding changed predictions"
     );
 }
 
