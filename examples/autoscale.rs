@@ -22,7 +22,7 @@
 use esda::coordinator::{
     run_pool, run_pool_source, AutoscaleConfig, Backend, BackendError, Classification,
     CostProfile, EventSource, Functional, IngestError, ReplicaPool, ReplicaSpec, ServerConfig,
-    ServerResult, SourcedRequest,
+    ServerResult, SourcedRequest, DEFAULT_TENANT,
 };
 use esda::events::DatasetProfile;
 use esda::model::quant::quantize_network;
@@ -78,7 +78,8 @@ impl EventSource for BurstSource {
                 let label = self.emitted_total % self.profile.n_classes;
                 self.emitted_total += 1;
                 let events = self.profile.sample(label, &mut self.rng);
-                return Ok(Some(SourcedRequest { label, events, arrival: Instant::now() }));
+                let arrival = Instant::now();
+                return Ok(Some(SourcedRequest { label, events, arrival, tenant: DEFAULT_TENANT }));
             }
             std::thread::sleep(gap);
             self.phase += 1;

@@ -18,12 +18,26 @@
 //!   pipeline appending via [`events::io::append_sample`]), emitting each
 //!   sample the moment it is fully on disk.
 //!
+//! Socket-backed sources (UDP/TCP packet ingestion with per-packet
+//! tenant identity) live in [`super::net`] behind the same trait.
+//!
 //! The boundary also **validates** what it admits: every event must lie
 //! inside the source's geometry (the representation builder indexes
 //! unchecked), and event order is checked with
 //! [`is_time_sorted`] under a per-source [`UnsortedPolicy`] — recorded
 //! datasets should already be sorted (replay rejects), while a live tail
 //! can legitimately observe reordered events (tail sorts).
+//!
+//! **Error severity.** An [`IngestError`] is either *fatal* or
+//! *recoverable* ([`IngestError::is_recoverable`]). Byte-stream failures
+//! (truncation, over-claims, IO errors, pacing overflow) latch the
+//! source broken and are fatal: the reader position is no longer
+//! trustworthy, so the serving run aborts. Per-sample *validation*
+//! rejects (out-of-geometry events, unsorted-under-`Reject`) leave the
+//! reader aligned at the next sample and are recoverable: the server
+//! skips the sample, counts it under the `ingest_rejects` metric, and
+//! the stream continues — one bad sample in a capture must not kill a
+//! serving run.
 //!
 //! [`events::io::append_sample`]: crate::events::io::append_sample
 
@@ -35,6 +49,11 @@ use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// The tenant id file-backed and synthetic sources stamp on every
+/// request: single-owner streams all share the front door's default
+/// tenant. Socket sources carry a real per-packet tenant instead.
+pub const DEFAULT_TENANT: usize = 0;
 
 /// One request as it crosses the ingestion boundary.
 #[derive(Debug, Clone)]
@@ -49,16 +68,62 @@ pub struct SourcedRequest {
     /// completed at the (real or replayed) camera. End-to-end latency and
     /// any deadline are measured from this, not from queue admission.
     pub arrival: Instant,
+    /// Which tenant owns this request (index into the server's tenant
+    /// table; [`DEFAULT_TENANT`] for single-owner sources). Admission
+    /// quotas, per-tenant SLOs, and the per-tenant report key on this.
+    pub tenant: usize,
 }
 
-/// Ingestion failure: unreadable/corrupt input, or a sample the boundary
-/// validation rejected.
+/// Ingestion failure: unreadable/corrupt input (fatal), or a sample the
+/// boundary validation rejected (recoverable — see the module docs).
 #[derive(Debug, Clone)]
-pub struct IngestError(pub String);
+pub struct IngestError {
+    msg: String,
+    recoverable: bool,
+    /// Tenant the rejected sample belonged to, when the failure happened
+    /// late enough for the tenant id to have parsed (socket sources).
+    tenant: Option<usize>,
+}
+
+impl IngestError {
+    /// A failure the source cannot continue past: the serving run aborts.
+    pub fn fatal(msg: impl Into<String>) -> IngestError {
+        IngestError { msg: msg.into(), recoverable: false, tenant: None }
+    }
+
+    /// A per-sample reject the source *has already skipped*: the server
+    /// counts it and keeps pulling.
+    pub fn recoverable(msg: impl Into<String>) -> IngestError {
+        IngestError { msg: msg.into(), recoverable: true, tenant: None }
+    }
+
+    /// Attach the owning tenant (socket sources, where the packet header
+    /// parsed before validation rejected the payload).
+    pub fn with_tenant(mut self, tenant: usize) -> IngestError {
+        self.tenant = Some(tenant);
+        self
+    }
+
+    /// `true` when the source stays usable and the caller should skip
+    /// this sample and retry `next_request`.
+    pub fn is_recoverable(&self) -> bool {
+        self.recoverable
+    }
+
+    /// The tenant whose sample was rejected, when known.
+    pub fn tenant(&self) -> Option<usize> {
+        self.tenant
+    }
+
+    /// The failure message.
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+}
 
 impl fmt::Display for IngestError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}", self.0)
+        write!(f, "{}", self.msg)
     }
 }
 
@@ -79,8 +144,11 @@ pub enum UnsortedPolicy {
 /// A producer of timestamped requests — the serving runtime's stage 1.
 ///
 /// Sources are driven from a dedicated thread and may block (pacing
-/// sleeps, tail polls). Returning `Ok(None)` ends the stream; an `Err`
-/// aborts the serving run with the source's message.
+/// sleeps, tail polls). Returning `Ok(None)` ends the stream. A *fatal*
+/// `Err` aborts the serving run with the source's message; a
+/// *recoverable* one ([`IngestError::is_recoverable`]) marks a sample
+/// the source already skipped — the server counts it under
+/// `ingest_rejects` and keeps pulling.
 pub trait EventSource: Send {
     /// Short display name for reports and errors.
     fn name(&self) -> &str;
@@ -96,8 +164,10 @@ pub trait EventSource: Send {
 
 /// Boundary validation shared by every source: geometry bounds (the
 /// representation builder indexes `y*w + x` unchecked) and time order
-/// under the source's [`UnsortedPolicy`].
-fn validate_events(
+/// under the source's [`UnsortedPolicy`]. Rejects are *recoverable* —
+/// callers advance past the sample before validating, so the stream
+/// continues.
+pub(crate) fn validate_events(
     events: &mut Vec<Event>,
     w: usize,
     h: usize,
@@ -105,7 +175,7 @@ fn validate_events(
     what: &str,
 ) -> Result<(), IngestError> {
     if let Some(e) = events.iter().find(|e| e.x as usize >= w || e.y as usize >= h) {
-        return Err(IngestError(format!(
+        return Err(IngestError::recoverable(format!(
             "{what}: event at ({}, {}) lies outside the {w}x{h} geometry",
             e.x, e.y
         )));
@@ -114,7 +184,7 @@ fn validate_events(
         match policy {
             UnsortedPolicy::Sort => events.sort_by_key(|e| e.t_us),
             UnsortedPolicy::Reject => {
-                return Err(IngestError(format!(
+                return Err(IngestError::recoverable(format!(
                     "{what}: events are not time-sorted (unsorted policy: reject)"
                 )))
             }
@@ -123,12 +193,13 @@ fn validate_events(
     Ok(())
 }
 
-/// Geometry sanity shared by the file-backed sources: event coordinates
-/// are u16, so anything outside [1, 65536] is corrupt — and a bogus huge
-/// header must not size the repr stage's dense scratch.
-fn validate_geometry(w: usize, h: usize, what: &str) -> Result<(), IngestError> {
+/// Geometry sanity shared by the file-backed and socket sources: event
+/// coordinates are u16, so anything outside [1, 65536] is corrupt — and
+/// a bogus huge header must not size the repr stage's dense scratch.
+/// Fatal: a source with a broken geometry cannot emit anything.
+pub(crate) fn validate_geometry(w: usize, h: usize, what: &str) -> Result<(), IngestError> {
     if !(1..=65536).contains(&w) || !(1..=65536).contains(&h) {
-        return Err(IngestError(format!("{what}: implausible geometry {w}x{h}")));
+        return Err(IngestError::fatal(format!("{what}: implausible geometry {w}x{h}")));
     }
     Ok(())
 }
@@ -168,7 +239,7 @@ impl EventSource for SyntheticSource {
         // sorted and in-bounds by construction — no validation pass.
         let events = self.profile.sample(label, &mut self.rng);
         self.emitted += 1;
-        Ok(Some(SourcedRequest { label, events, arrival: Instant::now() }))
+        Ok(Some(SourcedRequest { label, events, arrival: Instant::now(), tenant: DEFAULT_TENANT }))
     }
 }
 
@@ -232,21 +303,23 @@ impl ReplaySource {
     /// stream out one recording ahead of its due time.
     pub fn open(path: &Path, speed: f64) -> Result<ReplaySource, IngestError> {
         if !(speed.is_finite() && speed > 0.0) {
-            return Err(IngestError(format!("replay speed must be finite and > 0, got {speed}")));
+            return Err(IngestError::fatal(format!(
+                "replay speed must be finite and > 0, got {speed}"
+            )));
         }
         let name = format!("replay:{}", path.display());
-        let file = File::open(path).map_err(|e| IngestError(format!("{name}: {e}")))?;
+        let file = File::open(path).map_err(|e| IngestError::fatal(format!("{name}: {e}")))?;
         let file_len =
-            file.metadata().map_err(|e| IngestError(format!("{name}: {e}")))?.len();
+            file.metadata().map_err(|e| IngestError::fatal(format!("{name}: {e}")))?.len();
         let mut reader = std::io::BufReader::new(file);
         let (w, h, total) = io::read_file_header(&mut reader)
-            .map_err(|e| IngestError(format!("{name}: {e}")))?;
+            .map_err(|e| IngestError::fatal(format!("{name}: {e}")))?;
         validate_geometry(w, h, &name)?;
         let remaining_bytes = file_len.saturating_sub(io::FILE_HEADER_BYTES);
         // Cheap whole-file sanity before the first sample: every promised
         // sample needs at least its fixed prefix on disk.
         if (total as u64).saturating_mul(io::SAMPLE_HEADER_BYTES) > remaining_bytes {
-            return Err(IngestError(format!(
+            return Err(IngestError::fatal(format!(
                 "{name}: header claims {total} sample(s) but the file is only {file_len} byte(s)"
             )));
         }
@@ -269,9 +342,10 @@ impl ReplaySource {
     }
 
     /// Latch and return a byte-stream failure (see the `failed` field).
+    /// Always fatal: a misaligned reader cannot continue.
     fn fail(&mut self, msg: String) -> IngestError {
         self.failed = Some(msg.clone());
-        IngestError(msg)
+        IngestError::fatal(msg)
     }
 
     /// Override the unsorted-events policy (default: reject).
@@ -309,7 +383,7 @@ impl EventSource for ReplaySource {
         // A broken byte stream stays broken: re-report rather than parse
         // garbage from a misaligned reader.
         if let Some(msg) = &self.failed {
-            return Err(IngestError(msg.clone()));
+            return Err(IngestError::fatal(msg.clone()));
         }
         if self.idx >= self.total || self.limit.is_some_and(|l| self.emitted >= l) {
             return Ok(None);
@@ -381,7 +455,7 @@ impl EventSource for ReplaySource {
             std::thread::sleep(due - now);
         }
         self.emitted += 1;
-        Ok(Some(SourcedRequest { label, events, arrival: due }))
+        Ok(Some(SourcedRequest { label, events, arrival: due, tenant: DEFAULT_TENANT }))
     }
 }
 
@@ -429,37 +503,39 @@ impl TailSource {
         let name = format!("tail:{}", path.display());
         // Wait for the producer to create the file at all (the consumer
         // is routinely launched a beat before the camera pipeline), then
-        // for it to finish the 20-byte header — one shared idle budget.
-        let mut waited = Duration::ZERO;
+        // for it to finish the 20-byte header — one shared idle budget,
+        // measured against a wall-clock deadline: accumulating the
+        // *nominal* poll interval would drift under scheduler jitter
+        // (each sleep runs at least `poll`, often longer).
+        let deadline = Instant::now() + idle_timeout;
         let mut file = loop {
             match File::open(path) {
                 Ok(f) => break f,
                 Err(e) => {
-                    if waited >= idle_timeout {
-                        return Err(IngestError(format!(
+                    if Instant::now() >= deadline {
+                        return Err(IngestError::fatal(format!(
                             "{name}: {e} (waited {idle_timeout:?} for the producer)"
                         )));
                     }
                     std::thread::sleep(poll);
-                    waited += poll;
                 }
             }
         };
         loop {
-            let len = file.metadata().map_err(|e| IngestError(format!("{name}: {e}")))?.len();
+            let len =
+                file.metadata().map_err(|e| IngestError::fatal(format!("{name}: {e}")))?.len();
             if len >= io::FILE_HEADER_BYTES {
                 break;
             }
-            if waited >= idle_timeout {
-                return Err(IngestError(format!(
+            if Instant::now() >= deadline {
+                return Err(IngestError::fatal(format!(
                     "{name}: no container header after {idle_timeout:?}"
                 )));
             }
             std::thread::sleep(poll);
-            waited += poll;
         }
         let (w, h, _advisory_n) = io::read_file_header(&mut file)
-            .map_err(|e| IngestError(format!("{name}: {e}")))?;
+            .map_err(|e| IngestError::fatal(format!("{name}: {e}")))?;
         validate_geometry(w, h, &name)?;
         Ok(TailSource {
             name,
@@ -490,7 +566,7 @@ impl TailSource {
     }
 
     fn io_err(&self, e: std::io::Error) -> IngestError {
-        IngestError(format!("{}: {e}", self.name))
+        IngestError::fatal(format!("{}: {e}", self.name))
     }
 }
 
@@ -507,7 +583,10 @@ impl EventSource for TailSource {
         if self.limit.is_some_and(|l| self.emitted >= l) {
             return Ok(None);
         }
-        let mut waited = Duration::ZERO;
+        // Idle budget against a wall-clock deadline (not `+= poll`
+        // accumulation, which under-counts real elapsed time whenever a
+        // sleep overshoots its nominal interval).
+        let mut deadline = Instant::now() + self.idle_timeout;
         let mut last_len = u64::MAX;
         loop {
             let len = self.file.metadata().map_err(|e| self.io_err(e))?.len();
@@ -516,7 +595,7 @@ impl EventSource for TailSource {
                 // truncated or rotated out from under the tail. Stale
                 // offsets into a replacement file would parse unrelated
                 // bytes as samples — fail loudly instead.
-                return Err(IngestError(format!(
+                return Err(IngestError::fatal(format!(
                     "{}: file shrank to {len} byte(s) below consumed offset {} — \
                      truncated or rotated mid-tail",
                     self.name, self.offset
@@ -526,7 +605,7 @@ impl EventSource for TailSource {
                 // The file grew (or this is the first look): the producer
                 // is alive, restart the idle clock.
                 last_len = len;
-                waited = Duration::ZERO;
+                deadline = Instant::now() + self.idle_timeout;
             }
             if len >= self.offset + io::SAMPLE_HEADER_BYTES {
                 self.file
@@ -537,7 +616,7 @@ impl EventSource for TailSource {
                 let label = u32::from_le_bytes(prefix[0..4].try_into().unwrap());
                 let ne = u32::from_le_bytes(prefix[4..8].try_into().unwrap()) as u64;
                 if ne > MAX_TAIL_EVENTS {
-                    return Err(IngestError(format!(
+                    return Err(IngestError::fatal(format!(
                         "{}: sample at byte {} claims {ne} events (cap {MAX_TAIL_EVENTS}) — \
                          corrupt tail",
                         self.name, self.offset
@@ -557,15 +636,16 @@ impl EventSource for TailSource {
                         label: label as usize,
                         events,
                         arrival: Instant::now(),
+                        tenant: DEFAULT_TENANT,
                     }));
                 }
             }
-            if waited >= self.idle_timeout {
+            if Instant::now() >= deadline {
                 if len > self.offset {
                     // Trailing bytes that never became a whole sample: a
                     // producer crash mid-append is a truncation error,
                     // not a clean end of stream.
-                    return Err(IngestError(format!(
+                    return Err(IngestError::fatal(format!(
                         "{}: producer went quiet mid-sample ({} trailing byte(s) past \
                          offset {})",
                         self.name,
@@ -576,7 +656,6 @@ impl EventSource for TailSource {
                 return Ok(None); // quiet at a sample boundary: end of stream
             }
             std::thread::sleep(self.poll);
-            waited += self.poll;
         }
     }
 }
@@ -685,6 +764,7 @@ mod tests {
         let mut strict = ReplaySource::open(&path, 1e6).unwrap();
         let err = strict.next_request().unwrap_err();
         assert!(err.to_string().contains("time-sorted"), "{err}");
+        assert!(err.is_recoverable(), "a validation reject must be recoverable");
         // A rejected sample is consumed: retrying must not hand back a
         // phantom empty request built from the taken-out events — the
         // stream simply ends here (it was the only sample).
@@ -709,6 +789,7 @@ mod tests {
         let mut src = ReplaySource::open(&path, 1e6).unwrap();
         let err = src.next_request().unwrap_err();
         assert!(err.to_string().contains("geometry"), "{err}");
+        assert!(err.is_recoverable(), "a geometry reject must be recoverable");
     }
 
     #[test]
@@ -783,6 +864,7 @@ mod tests {
         let err = src.next_request().unwrap_err();
         assert!(err.to_string().contains("sample 1"), "{err}");
         assert!(err.to_string().contains("claims 100 event(s)"), "{err}");
+        assert!(!err.is_recoverable(), "a byte-stream failure must be fatal");
         // A byte-stream failure latches: retrying must re-report it, not
         // parse the corrupt sample's payload bytes as a fresh prefix.
         let err2 = src.next_request().unwrap_err();

@@ -436,6 +436,66 @@ impl ClassStats {
     }
 }
 
+/// Per-tenant accounting for the multi-tenant front door: every request a
+/// tenant's stream offered ends up in exactly one of these buckets, so
+/// `served + dropped + deadline drops + ingest rejects` reconstructs the
+/// tenant's offered load (see [`TenantStats::offered`] — the conservation
+/// law the serving propcheck tests assert per tenant).
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    /// Tenant display name (`default` for single-tenant runs).
+    pub tenant: String,
+    /// Fair-share weight the admission quota was derived from.
+    pub weight: usize,
+    /// Ingress-queue slots this tenant may occupy at once (its weighted
+    /// share of the queue depth; the full depth for single-tenant runs).
+    pub quota: usize,
+    /// Requests of this tenant that were classified.
+    pub served: usize,
+    /// Requests shed by admission control: drop-oldest evictions of this
+    /// tenant's queued requests plus over-quota arrivals.
+    pub dropped: usize,
+    /// Deadline-carrying requests this tenant offered (its SLO-attainment
+    /// denominator).
+    pub deadline_offered: usize,
+    /// This tenant's requests already expired at the ingress.
+    pub deadline_ingress: usize,
+    /// This tenant's requests shed at the router or expired at a worker
+    /// pop.
+    pub deadline_router: usize,
+    /// Served within the deadline.
+    pub deadline_met: usize,
+    /// Served, but late (counts as served and against the SLO).
+    pub deadline_missed: usize,
+    /// Recoverable per-sample validation rejects attributed to this tenant
+    /// at the source boundary (the stream continued past them).
+    pub ingest_rejects: usize,
+}
+
+impl TenantStats {
+    /// Total deadline-based sheds for this tenant.
+    pub fn deadline_drops(&self) -> usize {
+        self.deadline_ingress + self.deadline_router
+    }
+
+    /// Requests this tenant's stream offered: everything lands in exactly
+    /// one of served / dropped / deadline-shed / ingest-rejected.
+    pub fn offered(&self) -> usize {
+        self.served + self.dropped + self.deadline_drops() + self.ingest_rejects
+    }
+
+    /// Per-tenant SLO attainment, with the same strict denominator as
+    /// [`Metrics::slo_attainment`]: every deadline-carrying request this
+    /// tenant offered, not just the served ones. `None` when the tenant
+    /// carried no deadline.
+    pub fn slo_attainment(&self) -> Option<f64> {
+        if self.deadline_offered == 0 {
+            return None;
+        }
+        Some(self.deadline_met as f64 / self.deadline_offered as f64)
+    }
+}
+
 /// Per-worker accounting for the replicated accelerator pool.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerStats {
@@ -499,6 +559,15 @@ pub struct Metrics {
     /// Served requests that completed *after* their deadline (they count
     /// as served, but against SLO attainment).
     pub deadline_missed: usize,
+    /// Recoverable per-sample rejects at the source boundary (corrupt or
+    /// out-of-geometry samples the stream skipped past). These requests
+    /// never reached admission, so they are *not* part of
+    /// [`Metrics::offered`] — they are the gap between what the source
+    /// emitted and what the system was offered.
+    pub ingest_rejects: usize,
+    /// Per-tenant books, one entry per configured tenant (a single
+    /// `default` entry when no tenants were configured).
+    pub per_tenant: Vec<TenantStats>,
     /// Per-replica stats, one entry per pool worker (the single-
     /// accelerator `run_pipeline` facade has exactly one).
     pub per_worker: Vec<WorkerStats>,
@@ -533,6 +602,8 @@ impl Default for Metrics {
             deadline_router: 0,
             deadline_met: 0,
             deadline_missed: 0,
+            ingest_rejects: 0,
+            per_tenant: Vec::new(),
             per_worker: Vec::new(),
             per_class: Vec::new(),
             batch_sizes: Vec::new(),
@@ -891,6 +962,32 @@ mod tests {
         m.deadline_ingress = 5;
         assert_eq!(m.slo_attainment(), Some(0.0));
         assert_eq!(m.slo_attainment_served(), None);
+    }
+
+    /// Per-tenant books: the conservation identity behind
+    /// [`TenantStats::offered`], strict-denominator attainment, and `None`
+    /// attainment for a tenant that never carried a deadline.
+    #[test]
+    fn tenant_stats_books_balance() {
+        let t = TenantStats {
+            tenant: "cam0".into(),
+            weight: 3,
+            quota: 3,
+            served: 10,
+            dropped: 2,
+            deadline_offered: 12,
+            deadline_ingress: 1,
+            deadline_router: 1,
+            deadline_met: 9,
+            deadline_missed: 1,
+            ingest_rejects: 2,
+        };
+        assert_eq!(t.deadline_drops(), 2);
+        assert_eq!(t.offered(), 10 + 2 + 2 + 2);
+        assert!((t.slo_attainment().unwrap() - 0.75).abs() < 1e-12);
+        let quiet = TenantStats { tenant: "cam1".into(), served: 4, ..Default::default() };
+        assert_eq!(quiet.slo_attainment(), None, "no deadline ⇒ no attainment figure");
+        assert_eq!(quiet.offered(), 4);
     }
 
     #[test]

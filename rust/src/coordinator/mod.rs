@@ -11,7 +11,8 @@
 //! Stages run on std threads connected by bounded queues (backpressure),
 //! since the offline build vendors no async runtime. The event source is
 //! any [`ingest::EventSource`] — the synthetic camera, a paced dataset
-//! replay, or a tailed capture file — stamping real arrival times that
+//! replay, a tailed capture file, or a UDP/TCP socket speaking the
+//! [`net`] event-packet format — stamping real arrival times that
 //! latency (and any `--slo-ms` deadline) is measured from. The
 //! accelerator stage
 //! is a pool of replicas — homogeneous (N workers sharing one [`Backend`]
@@ -30,6 +31,7 @@
 pub mod backend;
 pub mod ingest;
 pub mod metrics;
+pub mod net;
 pub mod pipeline;
 pub mod queue;
 pub mod serve;
@@ -40,17 +42,18 @@ pub use backend::{
 };
 pub use ingest::{
     EventSource, IngestError, ReplaySource, SourcedRequest, SyntheticSource, TailSource,
-    UnsortedPolicy,
+    UnsortedPolicy, DEFAULT_TENANT,
 };
 pub use metrics::{
     ClassStats, CostModel, CostProfile, CostSnapshot, Metrics, PercentileReport, RequestTiming,
-    ScalingEvent, SlidingWindow, WorkerStats,
+    ScalingEvent, SlidingWindow, TenantStats, WorkerStats,
 };
+pub use net::{decode_packet, encode_packet, NetConfig, NetSource, Packet};
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
 pub use queue::{AdmissionQueue, DropPolicy};
 pub use serve::{
     run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig, PipelineError,
-    Prediction, ServerConfig, ServerResult,
+    Prediction, ServerConfig, ServerResult, TenantConfig,
 };
 
 /// Shared unit-test fixtures (integration tests under `rust/tests/` keep

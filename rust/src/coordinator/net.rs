@@ -1,0 +1,693 @@
+//! Socket ingestion: the multi-tenant network front door.
+//!
+//! The paper's deployment model (§2.1) is a *live* AER stream arriving
+//! over the PS host interface — modeled here after the Prophesee
+//! EVT 2.1 / KV260 pipeline: producers push compact event packets over
+//! UDP or TCP, the receiver lands them in DMA-style buffers that are
+//! flushed downstream on **size or timeout** (whichever comes first),
+//! and every packet carries a per-stream tenant identity so the serving
+//! runtime can enforce per-tenant admission quotas and SLOs.
+//!
+//! ## Wire format
+//!
+//! One packet is the on-wire twin of the `.esda` sample record, all
+//! fields little-endian:
+//!
+//! ```text
+//! magic   u32  = NET_MAGIC
+//! version u16  = NET_VERSION
+//! tenant  u16  index into the server's tenant table
+//! label   u32  producer-asserted ground-truth class
+//! n       u32  event count (<= MAX_PACKET_EVENTS)
+//! n × [ t_us u32 | x u16 | y u16 | polarity u8 | pad u8 ]
+//! ```
+//!
+//! Over **UDP** each datagram is exactly one packet (the event cap keeps
+//! a full packet inside one 64 KiB datagram). Over **TCP** packets are
+//! length-prefixed (`u32` byte length, then the packet) on a persistent
+//! connection; each connection gets its own receive thread and DMA
+//! buffer — per-stream identity as in EventFlow.
+//!
+//! ## Validation and error severity
+//!
+//! Per-packet validation reuses the ingest boundary's
+//! [`validate_events`]/[`validate_geometry`]: a malformed or rejected
+//! packet is a *recoverable* [`IngestError`] (datagram/frame boundaries
+//! keep the stream aligned), tagged with the owning tenant whenever the
+//! header parsed — the server skips it and counts it under
+//! `ingest_rejects`. Only socket-level failures (bind errors, broken
+//! receive loop) are fatal.
+
+use super::ingest::{validate_events, validate_geometry, EventSource, IngestError};
+use super::{SourcedRequest, UnsortedPolicy};
+use crate::events::{io, Event};
+use std::collections::VecDeque;
+use std::io::Read;
+use std::net::{TcpListener, TcpStream, UdpSocket};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Packet magic ("ESNP"): distinct from the `.esda` container magic so a
+/// file accidentally piped at a socket fails loudly at the first packet.
+pub const NET_MAGIC: u32 = 0x4553_4e50;
+/// Packet format version.
+pub const NET_VERSION: u16 = 1;
+/// Fixed packet header bytes (magic + version + tenant + label + n).
+pub const PACKET_HEADER_BYTES: usize = 16;
+/// Serialized bytes per event record (same layout as `.esda`).
+pub const PACKET_EVENT_BYTES: usize = 10;
+/// Per-packet event cap: the largest count whose packet still fits one
+/// 64 KiB UDP datagram (65507 payload bytes). TCP frames obey the same
+/// cap so producers need one packetizer.
+pub const MAX_PACKET_EVENTS: usize = (65507 - PACKET_HEADER_BYTES) / PACKET_EVENT_BYTES;
+
+/// A decoded packet, before boundary validation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packet {
+    pub tenant: u16,
+    pub label: u32,
+    pub events: Vec<Event>,
+}
+
+/// Serialize one packet. Panics if `events` exceeds
+/// [`MAX_PACKET_EVENTS`] — producers must window their streams.
+pub fn encode_packet(tenant: u16, label: u32, events: &[Event]) -> Vec<u8> {
+    assert!(
+        events.len() <= MAX_PACKET_EVENTS,
+        "packet holds {} events (cap {MAX_PACKET_EVENTS})",
+        events.len()
+    );
+    let mut out = Vec::with_capacity(PACKET_HEADER_BYTES + events.len() * PACKET_EVENT_BYTES);
+    out.extend_from_slice(&NET_MAGIC.to_le_bytes());
+    out.extend_from_slice(&NET_VERSION.to_le_bytes());
+    out.extend_from_slice(&tenant.to_le_bytes());
+    out.extend_from_slice(&label.to_le_bytes());
+    out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    for e in events {
+        out.extend_from_slice(&e.t_us.to_le_bytes());
+        out.extend_from_slice(&e.x.to_le_bytes());
+        out.extend_from_slice(&e.y.to_le_bytes());
+        out.push(e.polarity as u8);
+        out.push(0);
+    }
+    out
+}
+
+/// Decode one packet, trusting nothing: the event-count claim is checked
+/// against the bytes actually present (the same remaining-bytes
+/// discipline as the `.esda` reader) before any allocation sized from
+/// it.
+pub fn decode_packet(buf: &[u8]) -> Result<Packet, String> {
+    if buf.len() < PACKET_HEADER_BYTES {
+        return Err(format!(
+            "short packet: {} byte(s), header needs {PACKET_HEADER_BYTES}",
+            buf.len()
+        ));
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != NET_MAGIC {
+        return Err(format!("bad magic {magic:#010x}"));
+    }
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    if version != NET_VERSION {
+        return Err(format!("unsupported packet version {version}"));
+    }
+    let tenant = u16::from_le_bytes(buf[6..8].try_into().unwrap());
+    let label = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let ne = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    if ne > MAX_PACKET_EVENTS {
+        return Err(format!("claims {ne} event(s) (cap {MAX_PACKET_EVENTS})"));
+    }
+    let need = PACKET_HEADER_BYTES + ne * PACKET_EVENT_BYTES;
+    if buf.len() != need {
+        return Err(format!(
+            "claims {ne} event(s) ({need} B) but the packet is {} byte(s)",
+            buf.len()
+        ));
+    }
+    let events = io::read_events(&mut &buf[PACKET_HEADER_BYTES..], ne)
+        .map_err(|e| format!("event records: {e}"))?;
+    Ok(Packet { tenant, label, events })
+}
+
+/// Tuning for a socket source.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Tenant-table size: packets naming a tenant `>= tenants` are
+    /// rejected (recoverably) at the boundary.
+    pub tenants: usize,
+    /// Unsorted-events policy (default: sort — live capture paths can
+    /// reorder events in flight, same rationale as `TailSource`).
+    pub policy: UnsortedPolicy,
+    /// DMA buffer flush threshold: a buffer holding this many decoded
+    /// packets is handed downstream immediately.
+    pub flush_count: usize,
+    /// DMA buffer flush deadline: a non-empty buffer is handed
+    /// downstream once its oldest packet has waited this long.
+    pub flush_timeout: Duration,
+    /// Receive-loop poll granularity (read timeouts, stop-flag checks).
+    pub poll: Duration,
+    /// `next_request` returns end-of-stream after this long without any
+    /// flushed buffer arriving.
+    pub idle_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            tenants: 1,
+            policy: UnsortedPolicy::Sort,
+            flush_count: 32,
+            flush_timeout: Duration::from_millis(2),
+            poll: Duration::from_millis(1),
+            idle_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One boundary outcome: an admitted request, or a recoverable reject
+/// the server should count.
+type Item = Result<SourcedRequest, IngestError>;
+
+/// DMA-style receive buffer: decoded packets accumulate here and the
+/// whole buffer is handed downstream when it reaches `cap` packets *or*
+/// its oldest packet has waited `timeout` — the size/latency trade the
+/// KV260 PS interface makes in hardware.
+struct DmaBuffer {
+    cap: usize,
+    timeout: Duration,
+    buf: Vec<Item>,
+    oldest: Option<Instant>,
+}
+
+impl DmaBuffer {
+    fn new(cap: usize, timeout: Duration) -> DmaBuffer {
+        DmaBuffer { cap: cap.max(1), timeout, buf: Vec::new(), oldest: None }
+    }
+
+    fn take(&mut self) -> Vec<Item> {
+        self.oldest = None;
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Land one item; returns the full buffer when the size threshold
+    /// trips.
+    fn push(&mut self, item: Item, now: Instant) -> Option<Vec<Item>> {
+        self.oldest.get_or_insert(now);
+        self.buf.push(item);
+        (self.buf.len() >= self.cap).then(|| self.take())
+    }
+
+    /// Returns the buffer when the oldest item has waited out the flush
+    /// deadline.
+    fn due(&mut self, now: Instant) -> Option<Vec<Item>> {
+        match self.oldest {
+            Some(t) if now.duration_since(t) >= self.timeout => Some(self.take()),
+            _ => None,
+        }
+    }
+}
+
+/// Decode + boundary-validate one packet's bytes into an [`Item`].
+fn item_from_bytes(buf: &[u8], what: &str, w: usize, h: usize, cfg: &NetConfig) -> Item {
+    let pkt = match decode_packet(buf) {
+        Ok(p) => p,
+        Err(e) => return Err(IngestError::recoverable(format!("{what}: {e}"))),
+    };
+    let tenant = pkt.tenant as usize;
+    if tenant >= cfg.tenants {
+        return Err(IngestError::recoverable(format!(
+            "{what}: unknown tenant {tenant} (front door has {})",
+            cfg.tenants
+        )));
+    }
+    let mut events = pkt.events;
+    validate_events(&mut events, w, h, cfg.policy, what).map_err(|e| e.with_tenant(tenant))?;
+    Ok(SourcedRequest { label: pkt.label as usize, events, arrival: Instant::now(), tenant })
+}
+
+/// A socket-backed [`EventSource`]: background receive threads land
+/// packets in DMA buffers and flush them (on size or timeout) over a
+/// channel the serving runtime's stage-1 thread drains.
+pub struct NetSource {
+    name: String,
+    w: usize,
+    h: usize,
+    rx: Receiver<Vec<Item>>,
+    pending: VecDeque<Item>,
+    idle_timeout: Duration,
+    limit: Option<usize>,
+    emitted: usize,
+    local_port: u16,
+    stop: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl NetSource {
+    /// Bind a UDP socket on `port` (0 picks an ephemeral port — see
+    /// [`NetSource::local_port`]) receiving one packet per datagram.
+    /// `(w, h)` is the geometry every packet is validated against.
+    pub fn udp(port: u16, w: usize, h: usize, cfg: NetConfig) -> Result<NetSource, IngestError> {
+        validate_geometry(w, h, "udp source")?;
+        let sock = UdpSocket::bind(("127.0.0.1", port))
+            .map_err(|e| IngestError::fatal(format!("udp:{port}: bind: {e}")))?;
+        let local_port = sock
+            .local_addr()
+            .map_err(|e| IngestError::fatal(format!("udp:{port}: {e}")))?
+            .port();
+        sock.set_read_timeout(Some(cfg.poll))
+            .map_err(|e| IngestError::fatal(format!("udp:{port}: {e}")))?;
+        let (tx, rx) = std::sync::mpsc::channel::<Vec<Item>>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let idle_timeout = cfg.idle_timeout;
+        let handle = std::thread::spawn(move || {
+            let mut dma = DmaBuffer::new(cfg.flush_count, cfg.flush_timeout);
+            let mut buf = vec![0u8; 65536];
+            loop {
+                if stop2.load(Ordering::Relaxed) {
+                    return;
+                }
+                match sock.recv(&mut buf) {
+                    Ok(n) => {
+                        let item = item_from_bytes(&buf[..n], "udp packet", w, h, &cfg);
+                        if let Some(batch) = dma.push(item, Instant::now()) {
+                            if tx.send(batch).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut => {}
+                    Err(e) => {
+                        let fail = IngestError::fatal(format!("udp receive: {e}"));
+                        let _ = tx.send(vec![Err(fail)]);
+                        return;
+                    }
+                }
+                if let Some(batch) = dma.due(Instant::now()) {
+                    if tx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+        });
+        Ok(NetSource {
+            name: format!("udp:{local_port}"),
+            w,
+            h,
+            rx,
+            pending: VecDeque::new(),
+            idle_timeout,
+            limit: None,
+            emitted: 0,
+            local_port,
+            stop,
+            handles: vec![handle],
+        })
+    }
+
+    /// Bind a TCP listener on `port` (0 picks an ephemeral port)
+    /// accepting length-prefixed packet streams; each connection gets
+    /// its own receive thread and DMA buffer.
+    pub fn tcp(port: u16, w: usize, h: usize, cfg: NetConfig) -> Result<NetSource, IngestError> {
+        validate_geometry(w, h, "tcp source")?;
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .map_err(|e| IngestError::fatal(format!("tcp:{port}: bind: {e}")))?;
+        let local_port = listener
+            .local_addr()
+            .map_err(|e| IngestError::fatal(format!("tcp:{port}: {e}")))?
+            .port();
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| IngestError::fatal(format!("tcp:{port}: {e}")))?;
+        let (tx, rx) = std::sync::mpsc::channel::<Vec<Item>>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let idle_timeout = cfg.idle_timeout;
+        let poll = cfg.poll;
+        let handle = std::thread::spawn(move || loop {
+            if stop2.load(Ordering::Relaxed) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    let (tx, stop, cfg) = (tx.clone(), Arc::clone(&stop2), cfg.clone());
+                    std::thread::spawn(move || {
+                        serve_connection(stream, &format!("tcp peer {peer}"), w, h, cfg, tx, stop)
+                    });
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    std::thread::sleep(poll)
+                }
+                Err(e) => {
+                    let fail = IngestError::fatal(format!("tcp accept: {e}"));
+                    let _ = tx.send(vec![Err(fail)]);
+                    return;
+                }
+            }
+        });
+        Ok(NetSource {
+            name: format!("tcp:{local_port}"),
+            w,
+            h,
+            rx,
+            pending: VecDeque::new(),
+            idle_timeout,
+            limit: None,
+            emitted: 0,
+            local_port,
+            stop,
+            handles: vec![handle],
+        })
+    }
+
+    /// The port actually bound — useful with port 0 (tests, examples).
+    pub fn local_port(&self) -> u16 {
+        self.local_port
+    }
+
+    /// Cap the number of requests emitted (default: until idle timeout).
+    pub fn with_limit(mut self, limit: usize) -> NetSource {
+        self.limit = Some(limit);
+        self
+    }
+}
+
+impl Drop for NetSource {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+impl EventSource for NetSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn geometry(&self) -> (usize, usize) {
+        (self.w, self.h)
+    }
+
+    fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+        if self.limit.is_some_and(|l| self.emitted >= l) {
+            return Ok(None);
+        }
+        loop {
+            match self.pending.pop_front() {
+                Some(Ok(req)) => {
+                    self.emitted += 1;
+                    return Ok(Some(req));
+                }
+                Some(Err(e)) => return Err(e),
+                None => {}
+            }
+            match self.rx.recv_timeout(self.idle_timeout) {
+                Ok(batch) => self.pending.extend(batch),
+                // Quiet past the idle window, or the receive loop is
+                // gone with nothing queued: end of stream.
+                Err(_) => return Ok(None),
+            }
+        }
+    }
+}
+
+/// Per-connection receive loop: length-prefixed frames into this
+/// connection's DMA buffer. A malformed frame poisons the framing, so it
+/// is reported (recoverably) and the connection dropped; the listener
+/// keeps serving other producers.
+fn serve_connection(
+    mut stream: TcpStream,
+    what: &str,
+    w: usize,
+    h: usize,
+    cfg: NetConfig,
+    tx: Sender<Vec<Item>>,
+    stop: Arc<AtomicBool>,
+) {
+    if stream.set_read_timeout(Some(cfg.poll)).is_err() {
+        return;
+    }
+    let frame_cap = PACKET_HEADER_BYTES + MAX_PACKET_EVENTS * PACKET_EVENT_BYTES;
+    let mut dma = DmaBuffer::new(cfg.flush_count, cfg.flush_timeout);
+    let flush = |dma: &mut DmaBuffer| {
+        if let Some(batch) = dma.due(Instant::now()) {
+            return tx.send(batch).is_ok();
+        }
+        true
+    };
+    loop {
+        let mut len_buf = [0u8; 4];
+        match read_full(&mut stream, &mut len_buf, &stop, &mut || flush(&mut dma)) {
+            ReadOutcome::Full => {}
+            ReadOutcome::CleanEof => break,
+            ReadOutcome::Stopped | ReadOutcome::Failed => return,
+        }
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len < PACKET_HEADER_BYTES || len > frame_cap {
+            let _ = tx.send(vec![Err(IngestError::recoverable(format!(
+                "{what}: bad frame length {len} (connection dropped)"
+            )))]);
+            return;
+        }
+        let mut frame = vec![0u8; len];
+        match read_full(&mut stream, &mut frame, &stop, &mut || flush(&mut dma)) {
+            ReadOutcome::Full => {}
+            // EOF mid-frame: the producer died between length and
+            // payload — report it like a truncated tail.
+            ReadOutcome::CleanEof => {
+                let _ = tx.send(vec![Err(IngestError::recoverable(format!(
+                    "{what}: connection closed mid-frame"
+                )))]);
+                return;
+            }
+            ReadOutcome::Stopped | ReadOutcome::Failed => return,
+        }
+        let item = item_from_bytes(&frame, what, w, h, &cfg);
+        if let Some(batch) = dma.push(item, Instant::now()) {
+            if tx.send(batch).is_err() {
+                return;
+            }
+        }
+        if !flush(&mut dma) {
+            return;
+        }
+    }
+    // Clean close: hand over whatever the buffer still holds.
+    let tail = dma.take();
+    if !tail.is_empty() {
+        let _ = tx.send(tail);
+    }
+}
+
+enum ReadOutcome {
+    /// The buffer was filled.
+    Full,
+    /// EOF before the first byte — a clean close at a frame boundary.
+    CleanEof,
+    /// The stop flag tripped or the flush callback lost its channel.
+    Stopped,
+    /// EOF mid-buffer or a hard IO error.
+    Failed,
+}
+
+/// Fill `buf` from a read-timeout'd stream, running `tick` on every
+/// timeout so the caller can flush DMA deadlines and observe shutdown.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    tick: &mut dyn FnMut() -> bool,
+) -> ReadOutcome {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return ReadOutcome::Stopped;
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 { ReadOutcome::CleanEof } else { ReadOutcome::Failed }
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if !tick() {
+                    return ReadOutcome::Stopped;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Failed,
+        }
+    }
+    ReadOutcome::Full
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn ev(t: u32, x: u16, y: u16) -> Event {
+        Event { t_us: t, x, y, polarity: true }
+    }
+
+    fn quick_cfg() -> NetConfig {
+        NetConfig {
+            tenants: 2,
+            flush_count: 4,
+            flush_timeout: Duration::from_millis(1),
+            poll: Duration::from_millis(1),
+            idle_timeout: Duration::from_millis(300),
+            ..NetConfig::default()
+        }
+    }
+
+    #[test]
+    fn packet_roundtrips() {
+        let events = vec![ev(1, 2, 3), ev(5, 4, 4)];
+        let wire = encode_packet(1, 7, &events);
+        assert_eq!(wire.len(), PACKET_HEADER_BYTES + 2 * PACKET_EVENT_BYTES);
+        let pkt = decode_packet(&wire).unwrap();
+        assert_eq!(pkt, Packet { tenant: 1, label: 7, events });
+    }
+
+    #[test]
+    fn decode_rejects_malformed_packets() {
+        let good = encode_packet(0, 1, &[ev(1, 1, 1)]);
+        // Short, bad magic, bad version, truncated payload, trailing
+        // junk, and an event-count over-claim.
+        assert!(decode_packet(&good[..10]).unwrap_err().contains("short packet"));
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(decode_packet(&bad).unwrap_err().contains("magic"));
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(decode_packet(&bad).unwrap_err().contains("version"));
+        assert!(decode_packet(&good[..good.len() - 1]).unwrap_err().contains("1 event(s)"));
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode_packet(&bad).unwrap_err().contains("byte(s)"));
+        let mut bad = good.clone();
+        bad[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_packet(&bad).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn dma_buffer_flushes_on_size_or_timeout() {
+        let mut dma = DmaBuffer::new(2, Duration::from_millis(50));
+        let t0 = Instant::now();
+        let req =
+            || Ok(SourcedRequest { label: 0, events: vec![], arrival: Instant::now(), tenant: 0 });
+        assert!(dma.push(req(), t0).is_none(), "below the size threshold");
+        assert!(dma.due(t0 + Duration::from_millis(10)).is_none(), "deadline not reached");
+        let batch = dma.push(req(), t0).expect("size threshold flushes");
+        assert_eq!(batch.len(), 2);
+        assert!(dma.due(t0 + Duration::from_secs(1)).is_none(), "empty buffer never flushes");
+        assert!(dma.push(req(), t0).is_none());
+        let batch = dma.due(t0 + Duration::from_millis(50)).expect("deadline flushes");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn udp_source_receives_validates_and_tags_tenants() {
+        let mut src = NetSource::udp(0, 8, 8, quick_cfg()).unwrap();
+        let port = src.local_port();
+        assert_eq!(src.geometry(), (8, 8));
+        let out = UdpSocket::bind(("127.0.0.1", 0)).unwrap();
+        let dst = ("127.0.0.1", port);
+        out.send_to(&encode_packet(0, 3, &[ev(1, 1, 1)]), dst).unwrap();
+        out.send_to(&encode_packet(1, 5, &[ev(2, 2, 2)]), dst).unwrap();
+        // Out-of-geometry payload: recoverable, attributed to tenant 1.
+        out.send_to(&encode_packet(1, 0, &[ev(3, 200, 0)]), dst).unwrap();
+        // Unknown tenant: recoverable, unattributed.
+        out.send_to(&encode_packet(9, 0, &[ev(4, 1, 1)]), dst).unwrap();
+        // Garbage datagram: recoverable.
+        out.send_to(b"not a packet at all", dst).unwrap();
+
+        let a = src.next_request().unwrap().expect("first packet");
+        assert_eq!((a.label, a.tenant), (3, 0));
+        let b = src.next_request().unwrap().expect("second packet");
+        assert_eq!((b.label, b.tenant), (5, 1));
+        let geom = src.next_request().unwrap_err();
+        assert!(geom.is_recoverable(), "{geom}");
+        assert!(geom.to_string().contains("geometry"), "{geom}");
+        assert_eq!(geom.tenant(), Some(1));
+        let unk = src.next_request().unwrap_err();
+        assert!(unk.is_recoverable() && unk.to_string().contains("unknown tenant"), "{unk}");
+        assert_eq!(unk.tenant(), None);
+        let junk = src.next_request().unwrap_err();
+        assert!(junk.is_recoverable(), "{junk}");
+        // Nothing further: the idle timeout ends the stream.
+        assert!(src.next_request().unwrap().is_none());
+    }
+
+    #[test]
+    fn tcp_source_frames_streams_per_connection() {
+        let mut src = NetSource::tcp(0, 8, 8, quick_cfg()).unwrap();
+        let port = src.local_port();
+        let frame = |pkt: &[u8]| {
+            let mut f = (pkt.len() as u32).to_le_bytes().to_vec();
+            f.extend_from_slice(pkt);
+            f
+        };
+        let mut c0 = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let mut c1 = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        c0.write_all(&frame(&encode_packet(0, 1, &[ev(1, 1, 1)]))).unwrap();
+        c1.write_all(&frame(&encode_packet(1, 2, &[ev(2, 2, 2)]))).unwrap();
+        c0.write_all(&frame(&encode_packet(0, 3, &[ev(3, 3, 3)]))).unwrap();
+        c0.flush().unwrap();
+        c1.flush().unwrap();
+        drop(c0);
+        drop(c1);
+        let mut got = Vec::new();
+        while let Some(r) = src.next_request().unwrap() {
+            got.push((r.tenant, r.label));
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 1), (0, 3), (1, 2)]);
+    }
+
+    #[test]
+    fn tcp_bad_frame_drops_the_connection_recoverably() {
+        let mut src = NetSource::tcp(0, 8, 8, quick_cfg()).unwrap();
+        let port = src.local_port();
+        let mut c = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        // An absurd frame length: the connection is dropped, the reject
+        // surfaces recoverably, and the listener keeps serving.
+        c.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        c.flush().unwrap();
+        let err = src.next_request().unwrap_err();
+        assert!(err.is_recoverable(), "{err}");
+        assert!(err.to_string().contains("bad frame length"), "{err}");
+        let mut c2 = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        let pkt = encode_packet(0, 9, &[ev(1, 1, 1)]);
+        c2.write_all(&(pkt.len() as u32).to_le_bytes()).unwrap();
+        c2.write_all(&pkt).unwrap();
+        c2.flush().unwrap();
+        let r = src.next_request().unwrap().expect("listener survived the bad producer");
+        assert_eq!(r.label, 9);
+    }
+
+    #[test]
+    fn net_source_honors_limit() {
+        let mut src = NetSource::udp(0, 8, 8, quick_cfg()).unwrap().with_limit(1);
+        let port = src.local_port();
+        let out = UdpSocket::bind(("127.0.0.1", 0)).unwrap();
+        for _ in 0..3 {
+            out.send_to(&encode_packet(0, 1, &[ev(1, 1, 1)]), ("127.0.0.1", port)).unwrap();
+        }
+        assert!(src.next_request().unwrap().is_some());
+        assert!(src.next_request().unwrap().is_none(), "limit caps the stream");
+    }
+}

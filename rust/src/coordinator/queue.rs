@@ -76,6 +76,15 @@ impl<T> AdmissionQueue<T> {
     /// Under `Block`, waits for a free slot; under `DropOldest`, evicts the
     /// stalest queued request when full and never waits.
     pub fn push(&self, item: T) -> Result<(), T> {
+        self.push_evicting(item).map(|_| ())
+    }
+
+    /// [`AdmissionQueue::push`] that hands an evicted request back to the
+    /// caller instead of silently discarding it: `Ok(Some(victim))` when
+    /// `DropOldest` had to make room (the victim is still counted in the
+    /// queue's drop books — the caller's job is attribution, e.g. charging
+    /// the drop to the victim's tenant, not re-accounting it).
+    pub fn push_evicting(&self, item: T) -> Result<Option<T>, T> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
@@ -85,17 +94,17 @@ impl<T> AdmissionQueue<T> {
                 st.items.push_back(item);
                 st.submitted += 1;
                 self.not_empty.notify_one();
-                return Ok(());
+                return Ok(None);
             }
             match self.policy {
                 DropPolicy::Block => st = self.not_full.wait(st).unwrap(),
                 DropPolicy::DropOldest => {
-                    st.items.pop_front();
+                    let victim = st.items.pop_front();
                     st.dropped += 1;
                     st.items.push_back(item);
                     st.submitted += 1;
                     self.not_empty.notify_one();
-                    return Ok(());
+                    return Ok(victim);
                 }
             }
         }
@@ -411,6 +420,20 @@ mod tests {
         let rej = q.pop_batch_where_cancellable(4, &mut b, |_| false, || true);
         assert_eq!(b, vec![1, 2], "drain happens before the cancellation check");
         assert_eq!(rej, 0);
+    }
+
+    /// The evicting push surfaces the drop-oldest victim for caller-side
+    /// attribution while the queue's own drop books stay authoritative.
+    #[test]
+    fn push_evicting_hands_back_the_victim() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(2, DropPolicy::DropOldest);
+        assert_eq!(q.push_evicting(1), Ok(None));
+        assert_eq!(q.push_evicting(2), Ok(None));
+        assert_eq!(q.push_evicting(3), Ok(Some(1)), "full queue evicts the stalest");
+        let (submitted, dropped, queued) = q.stats();
+        assert_eq!((submitted, dropped, queued), (3, 1, 2));
+        q.close();
+        assert_eq!(q.push_evicting(4), Err(4));
     }
 
     #[test]

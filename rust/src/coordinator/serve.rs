@@ -61,6 +61,27 @@
 //! `ServerConfig::cost_profile`): a seeded class predicts — and the SLO
 //! shed can act — from its very first request, with zero probe traffic.
 //!
+//! **Multi-tenant front door.** Every [`super::ingest::SourcedRequest`]
+//! carries a tenant id (file/synthetic sources map to the single default tenant; the
+//! socket sources in [`super::net`] take it from the packet header).
+//! Configuring more than one [`TenantConfig`] partitions the ingress
+//! queue by weighted fair share: each tenant may occupy at most
+//! `max(1, depth × weight / Σweights)` slots, and an arrival from a
+//! tenant already at its quota is dropped — so a saturating tenant
+//! exhausts only its own share and cannot starve the rest. Tenants may
+//! also carry their own SLO, overriding the global `slo` for their
+//! requests, and the merged metrics grow a per-tenant section
+//! ([`TenantStats`]). With a single tenant the quota gate is inert and
+//! admission semantics are bit-for-bit the pre-tenant ones.
+//!
+//! **Recoverable source rejects.** A *recoverable*
+//! [`super::ingest::IngestError`] from the source (a corrupt or
+//! out-of-geometry sample the reader skipped past — see
+//! [`super::ingest`]) does not abort the run: the spine counts
+//! it under `Metrics::ingest_rejects` (global and per-tenant) and keeps
+//! pulling. Only fatal errors (latched byte-stream failures) end the
+//! stream and surface as a [`PipelineError`].
+//!
 //! Worker panics and backend errors are caught and surfaced as
 //! [`PipelineError`] — they never poison a join — and requests that were
 //! admitted but not classified when the run aborts are counted as
@@ -74,7 +95,7 @@ use super::backend::{Backend, PoolClass, ReplicaPool};
 use super::ingest::{EventSource, SyntheticSource};
 use super::metrics::{
     ClassStats, CostModel, CostProfile, Metrics, PercentileReport, RequestTiming, ScalingEvent,
-    SlidingWindow, WorkerStats,
+    SlidingWindow, TenantStats, WorkerStats,
 };
 use super::queue::{AdmissionQueue, DropPolicy};
 use crate::events::{repr::histogram2_norm, DatasetProfile};
@@ -126,6 +147,36 @@ pub struct ServerConfig {
     /// request instead of burning probes — and freshly scaled-up replicas
     /// join a class that already knows its costs.
     pub cost_profile: Option<CostProfile>,
+    /// Tenant table for the multi-tenant front door (CLI `--tenant
+    /// name=weight[,slo_ms]`). Empty = single implicit `default` tenant
+    /// with weight 1 — the quota gate stays inert and admission behaves
+    /// exactly as before tenancy existed. With several tenants, each
+    /// request's `tenant` field indexes this table, admission enforces the
+    /// weighted ingress quotas, and a tenant's own `slo` overrides the
+    /// global one for its requests.
+    pub tenants: Vec<TenantConfig>,
+}
+
+/// One tenant of the multi-tenant front door: a display name, a fair-share
+/// weight (its slice of the ingress queue is `depth × weight / Σweights`,
+/// floored, min 1), and an optional per-tenant SLO overriding
+/// [`ServerConfig::slo`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantConfig {
+    pub name: String,
+    pub weight: usize,
+    pub slo: Option<Duration>,
+}
+
+impl TenantConfig {
+    pub fn new(name: impl Into<String>, weight: usize) -> TenantConfig {
+        TenantConfig { name: name.into(), weight, slo: None }
+    }
+
+    pub fn with_slo(mut self, slo: Duration) -> TenantConfig {
+        self.slo = Some(slo);
+        self
+    }
 }
 
 impl Default for ServerConfig {
@@ -141,6 +192,7 @@ impl Default for ServerConfig {
             slo: None,
             autoscale: None,
             cost_profile: None,
+            tenants: Vec::new(),
         }
     }
 }
@@ -233,6 +285,8 @@ impl std::error::Error for PipelineError {}
 /// `predicted_s` and moves it to a class sub-queue.
 struct Routed {
     label: usize,
+    /// Index into the run's tenant table (0 for single-tenant runs).
+    tenant: usize,
     map: SparseMap<f32>,
     /// When the request was born at its source — end-to-end latency and
     /// the deadline are measured from here.
@@ -392,6 +446,7 @@ fn route(classes: &[ClassCtx<'_>], bucket: usize) -> RouteDecision {
 /// One classified request as a worker recorded it.
 struct ServedRecord {
     label: usize,
+    tenant: usize,
     pred: usize,
     timing: RequestTiming,
     predicted_s: f64,
@@ -403,10 +458,54 @@ struct ServedRecord {
 /// Per-request metadata a worker holds across the backend visit.
 struct Meta {
     label: usize,
+    tenant: usize,
     arrival: Instant,
     bucket: usize,
     predicted_s: f64,
     deadline: Option<Instant>,
+}
+
+/// One tenant's live admission state and books. The `in_queue` occupancy
+/// tracks this tenant's requests sitting in the *ingress* queue only —
+/// the quota is an admission concept; once the router moves a request to
+/// a class sub-queue it has been admitted and scheduled. All counters are
+/// written from the stage threads and read after the scope joins.
+struct TenantCtx {
+    name: String,
+    weight: usize,
+    /// Ingress slots this tenant may occupy (weighted share of the queue
+    /// depth; the full depth when the run has a single tenant).
+    quota: usize,
+    /// Per-tenant SLO overriding the global one.
+    slo: Option<Duration>,
+    /// This tenant's requests currently in the ingress queue (maintained
+    /// only in multi-tenant runs — the single-tenant path never reads it).
+    in_queue: AtomicUsize,
+    /// Admission sheds: drop-oldest evictions + over-quota arrivals.
+    dropped: AtomicUsize,
+    deadline_offered: AtomicUsize,
+    deadline_ingress: AtomicUsize,
+    /// Router sheds + worker-pop expiries.
+    deadline_router: AtomicUsize,
+    /// Recoverable source rejects attributed to this tenant.
+    ingest_rejects: AtomicUsize,
+}
+
+impl TenantCtx {
+    fn new(name: String, weight: usize, slo: Option<Duration>, quota: usize) -> TenantCtx {
+        TenantCtx {
+            name,
+            weight,
+            quota,
+            slo,
+            in_queue: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+            deadline_offered: AtomicUsize::new(0),
+            deadline_ingress: AtomicUsize::new(0),
+            deadline_router: AtomicUsize::new(0),
+            ingest_rejects: AtomicUsize::new(0),
+        }
+    }
 }
 
 /// Claim one pending retire token (false when none are pending). CAS
@@ -455,8 +554,10 @@ fn worker_loop(
     backend: &dyn Backend,
     classes: &[ClassCtx<'_>],
     ingress: &AdmissionQueue<Routed>,
+    tenants: &[TenantCtx],
     first_error: &Mutex<Option<String>>,
 ) -> WorkerOutput {
+    let multi_tenant = tenants.len() > 1;
     // Record the first failure and hard-stop every stage: producers fail
     // fast, the router and all class workers wake and exit.
     let fail = |msg: String| {
@@ -490,7 +591,20 @@ fn worker_loop(
         let expired = queue.pop_batch_where_cancellable(
             batch_cap,
             &mut batch,
-            |r| r.expired(Instant::now()),
+            |r| {
+                let ex = r.expired(Instant::now());
+                if ex {
+                    // Attribute the expiry to its tenant here, where the
+                    // item is still visible; in the routerless path the
+                    // queue *is* the ingress, so the expiry also frees the
+                    // tenant's quota slot.
+                    tenants[r.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
+                    if !routed && multi_tenant {
+                        tenants[r.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+                ex
+            },
             || class.retire.load(Ordering::SeqCst) > 0,
         );
         if expired > 0 {
@@ -518,8 +632,15 @@ fn worker_loop(
         metas.clear();
         maps.clear();
         for req in batch.drain(..) {
+            // In the routerless path this pop took the request out of the
+            // ingress queue, freeing its tenant's quota slot (the routed
+            // path freed it when the router popped the ingress).
+            if !routed && multi_tenant {
+                tenants[req.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+            }
             metas.push(Meta {
                 label: req.label,
+                tenant: req.tenant,
                 arrival: req.arrival,
                 bucket: req.bucket,
                 predicted_s: req.predicted_s,
@@ -579,6 +700,7 @@ fn worker_loop(
                     };
                     records.push(ServedRecord {
                         label: m.label,
+                        tenant: m.tenant,
                         pred: c.pred,
                         timing,
                         predicted_s: m.predicted_s,
@@ -622,6 +744,7 @@ fn run_autoscaler<'scope, 'a: 'scope>(
     auto: &AutoscaleConfig,
     s: &'scope std::thread::Scope<'scope, '_>,
     classes: &'scope [ClassCtx<'a>],
+    tenants: &'scope [TenantCtx],
     has_router: bool,
     ingress: &'scope AdmissionQueue<Routed>,
     t_start: Instant,
@@ -731,7 +854,7 @@ fn run_autoscaler<'scope, 'a: 'scope>(
                     s.spawn(move || {
                         let out = worker_loop(
                             wid, ci, class, queue, has_router, backend.get(), classes,
-                            ingress, first_error,
+                            ingress, tenants, first_error,
                         );
                         outputs.lock().unwrap().push(out);
                     });
@@ -851,6 +974,30 @@ fn serve_classes(
     // always had — the stalest *queued* request is the one evicted.
     let has_router = slots.len() > 1;
     let ingress: AdmissionQueue<Routed> = AdmissionQueue::new(cfg.queue_depth, cfg.drop_policy);
+    // Tenant table: the configured tenants, or a single implicit default
+    // whose quota is the whole queue — the front door stays inert and
+    // single-tenant admission semantics are exactly the pre-tenant ones.
+    let depth = cfg.queue_depth.max(1);
+    let multi_tenant = cfg.tenants.len() > 1;
+    let total_weight: usize =
+        cfg.tenants.iter().map(|t| t.weight.max(1)).sum::<usize>().max(1);
+    let tenants: Vec<TenantCtx> = if cfg.tenants.is_empty() {
+        vec![TenantCtx::new("default".to_string(), 1, None, depth)]
+    } else {
+        cfg.tenants
+            .iter()
+            .map(|t| {
+                let weight = t.weight.max(1);
+                // Floor-share quotas keep Σ quotas ≤ depth (short of the
+                // min-1 floor with many tiny tenants), so an under-quota
+                // arrival finds a free slot instead of blocking on other
+                // tenants' traffic.
+                let quota =
+                    if multi_tenant { (depth * weight / total_weight).max(1) } else { depth };
+                TenantCtx::new(t.name.clone(), weight, t.slo, quota)
+            })
+            .collect()
+    };
     let classes: Vec<ClassCtx<'_>> = slots
         .into_iter()
         .map(|c| {
@@ -894,6 +1041,10 @@ fn serve_classes(
     let first_error: Mutex<Option<String>> = Mutex::new(None);
     let deadline_offered = AtomicUsize::new(0);
     let deadline_ingress = AtomicUsize::new(0);
+    // Recoverable source rejects (the stream skipped past them) and
+    // over-quota admission drops — both outside the queue's own books.
+    let ingest_rejects = AtomicUsize::new(0);
+    let quota_drops = AtomicUsize::new(0);
     // Worker outputs land here (workers push at exit rather than being
     // joined for a return value, because the autoscaler spawns workers
     // the spine never held handles for).
@@ -909,9 +1060,11 @@ fn serve_classes(
 
     std::thread::scope(|s| {
         let error_ref = &first_error;
+        let tenants_ref: &[TenantCtx] = &tenants;
+        let rejects_ref = &ingest_rejects;
 
-        // Stage 1: the event source (synthetic camera, dataset replay, or
-        // capture tail) — owns pacing and arrival timestamps.
+        // Stage 1: the event source (synthetic camera, dataset replay,
+        // capture tail, or socket) — owns pacing and arrival timestamps.
         let src_thread = s.spawn(move || {
             let mut src = source;
             loop {
@@ -922,10 +1075,23 @@ fn serve_classes(
                         }
                     }
                     Ok(None) => return, // stream complete
+                    Err(e) if e.is_recoverable() => {
+                        // A per-sample validation reject: the reader is
+                        // still aligned and the stream continues — count
+                        // it and keep pulling. One bad sample must not
+                        // kill the serving run.
+                        rejects_ref.fetch_add(1, Ordering::SeqCst);
+                        // Attribute it when the source knows the tenant
+                        // (socket packets) or when there is only one.
+                        let t = e.tenant().or((tenants_ref.len() == 1).then_some(0));
+                        if let Some(tc) = t.and_then(|t| tenants_ref.get(t)) {
+                            tc.ingest_rejects.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
                     Err(e) => {
-                        // Record the failure and end the stream; the
-                        // stages downstream drain what was already
-                        // admitted and exit cleanly.
+                        // Fatal: a latched byte-stream failure. Record it
+                        // and end the stream; the stages downstream drain
+                        // what was already admitted and exit cleanly.
                         error_ref
                             .lock()
                             .unwrap()
@@ -942,29 +1108,60 @@ fn serve_classes(
         let ingress_ref = &ingress;
         let offered_ref = &deadline_offered;
         let ingress_exp_ref = &deadline_ingress;
+        let quota_drops_ref = &quota_drops;
         let repr = s.spawn(move || {
             for sr in rx_ev.iter() {
-                let deadline = slo.map(|d| sr.arrival + d);
+                // Clamp out-of-range tenant ids (a socket source whose
+                // tenant table disagrees with the server's) to the last
+                // tenant rather than panicking mid-spine.
+                let t = sr.tenant.min(tenants_ref.len() - 1);
+                let tc = &tenants_ref[t];
+                // The tenant's own SLO wins over the global one.
+                let deadline = tc.slo.or(slo).map(|d| sr.arrival + d);
                 if deadline.is_some() {
                     offered_ref.fetch_add(1, Ordering::SeqCst);
+                    tc.deadline_offered.fetch_add(1, Ordering::SeqCst);
                 }
                 // Drop already-expired requests before paying for their
                 // representation — the cheapest possible shed.
                 if deadline.is_some_and(|dl| Instant::now() >= dl) {
                     ingress_exp_ref.fetch_add(1, Ordering::SeqCst);
+                    tc.deadline_ingress.fetch_add(1, Ordering::SeqCst);
+                    continue;
+                }
+                // Weighted fair admission: a tenant at its ingress quota
+                // is shed *before* the repr is built — it can saturate
+                // only its own share of the queue, never starve siblings.
+                if multi_tenant && tc.in_queue.load(Ordering::SeqCst) >= tc.quota {
+                    quota_drops_ref.fetch_add(1, Ordering::SeqCst);
+                    tc.dropped.fetch_add(1, Ordering::SeqCst);
                     continue;
                 }
                 let map = histogram2_norm(&sr.events, w, h, clip);
                 let req = Routed {
                     label: sr.label,
+                    tenant: t,
                     bucket: CostModel::bucket_of(map.nnz()),
                     map,
                     arrival: sr.arrival,
                     deadline,
                     predicted_s: f64::NAN,
                 };
-                if ingress_ref.push(req).is_err() {
-                    break; // queue closed by an aborting worker
+                if multi_tenant {
+                    tc.in_queue.fetch_add(1, Ordering::SeqCst);
+                }
+                match ingress_ref.push_evicting(req) {
+                    Ok(Some(victim)) => {
+                        // Drop-oldest made room: charge the eviction to
+                        // the victim's tenant and free its quota slot.
+                        let vt = &tenants_ref[victim.tenant];
+                        vt.dropped.fetch_add(1, Ordering::SeqCst);
+                        if multi_tenant {
+                            vt.in_queue.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                    Ok(None) => {}
+                    Err(_) => break, // queue closed by an aborting worker
                 }
             }
             ingress_ref.close();
@@ -978,6 +1175,11 @@ fn serve_classes(
         let router = has_router.then(|| {
             s.spawn(move || {
                 while let Some(mut req) = ingress_ref.pop() {
+                    // Out of the ingress queue: the tenant's quota slot is
+                    // free again whatever happens downstream.
+                    if multi_tenant {
+                        tenants_ref[req.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+                    }
                     let d = route(classes_ref, req.bucket);
                     if let Some(dl) = req.deadline {
                         let now = Instant::now();
@@ -995,6 +1197,9 @@ fn serve_classes(
                         if now >= dl || predicted_done.is_some_and(|t| t > dl) {
                             classes_ref[d.class]
                                 .deadline_drops
+                                .fetch_add(1, Ordering::SeqCst);
+                            tenants_ref[req.tenant]
+                                .deadline_router
                                 .fetch_add(1, Ordering::SeqCst);
                             continue;
                         }
@@ -1026,7 +1231,7 @@ fn serve_classes(
                     let queue = if has_router { &class.queue } else { ingress_ref };
                     let out = worker_loop(
                         wid, ci, class, queue, has_router, backend.get(), classes_ref,
-                        ingress_ref, error_ref,
+                        ingress_ref, tenants_ref, error_ref,
                     );
                     outputs_ref.lock().unwrap().push(out);
                 }));
@@ -1043,8 +1248,8 @@ fn serve_classes(
             let auto = cfg.autoscale.clone().unwrap();
             s.spawn(move || {
                 run_autoscaler(
-                    &auto, s, classes_ref, has_router, ingress_ref, t_start, stop_ref,
-                    events_ref, next_wid_ref, outputs_ref, error_ref,
+                    &auto, s, classes_ref, tenants_ref, has_router, ingress_ref, t_start,
+                    stop_ref, events_ref, next_wid_ref, outputs_ref, error_ref,
                 )
             })
         });
@@ -1079,9 +1284,12 @@ fn serve_classes(
     let deadline_shed: usize =
         classes.iter().map(|c| c.deadline_drops.load(Ordering::SeqCst)).sum();
     let in_flight = submitted.saturating_sub(dropped + processed + deadline_shed);
+    // Admission sheds: queue evictions plus over-quota drops (the latter
+    // never occupied a slot, so they are outside the queue's own books).
+    let shed = dropped + quota_drops.load(Ordering::SeqCst);
 
     if let Some(msg) = first_error.into_inner().unwrap() {
-        return Err(PipelineError { msg, completed: processed, in_flight, dropped });
+        return Err(PipelineError { msg, completed: processed, in_flight, dropped: shed });
     }
     // Clean completion conserves requests: everything admitted was either
     // served, dropped, or shed on deadline (stranded requests only exist
@@ -1091,11 +1299,12 @@ fn serve_classes(
     let wall_s = t_start.elapsed().as_secs_f64();
     let mut metrics = Metrics {
         started: t_start,
-        dropped,
+        dropped: shed,
         wall_s,
         deadline_offered: deadline_offered.load(Ordering::SeqCst),
         deadline_ingress: deadline_ingress.load(Ordering::SeqCst),
         deadline_router: deadline_shed,
+        ingest_rejects: ingest_rejects.load(Ordering::SeqCst),
         scaling_events: scaling_events.into_inner().unwrap(),
         // What `--cost-profile` rewrites at shutdown: every class's final
         // EWMA state (seeded knowledge + everything learned this run).
@@ -1105,6 +1314,9 @@ fn serve_classes(
         ..Metrics::default()
     };
     let mut predictions = Vec::with_capacity(processed);
+    let mut t_served = vec![0usize; tenants.len()];
+    let mut t_met = vec![0usize; tenants.len()];
+    let mut t_missed = vec![0usize; tenants.len()];
     for o in &outputs {
         let service: Vec<f64> = o.records.iter().map(|r| r.timing.service_s).collect();
         let e2e: Vec<f64> = o.records.iter().map(|r| r.timing.e2e_s).collect();
@@ -1122,14 +1334,40 @@ fn serve_classes(
         metrics.batch_sizes.extend_from_slice(&o.batch_sizes);
         for r in &o.records {
             metrics.record(r.timing, r.pred == r.label);
+            t_served[r.tenant] += 1;
             match r.met_deadline {
-                Some(true) => metrics.deadline_met += 1,
-                Some(false) => metrics.deadline_missed += 1,
+                Some(true) => {
+                    metrics.deadline_met += 1;
+                    t_met[r.tenant] += 1;
+                }
+                Some(false) => {
+                    metrics.deadline_missed += 1;
+                    t_missed[r.tenant] += 1;
+                }
                 None => {}
             }
             predictions.push(Prediction { label: r.label, pred: r.pred, worker: o.wid });
         }
     }
+    // Per-tenant rollup: the books the stage threads kept, plus served /
+    // met / missed tallied from the records above.
+    metrics.per_tenant = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, tc)| TenantStats {
+            tenant: tc.name.clone(),
+            weight: tc.weight,
+            quota: tc.quota,
+            served: t_served[i],
+            dropped: tc.dropped.load(Ordering::SeqCst),
+            deadline_offered: tc.deadline_offered.load(Ordering::SeqCst),
+            deadline_ingress: tc.deadline_ingress.load(Ordering::SeqCst),
+            deadline_router: tc.deadline_router.load(Ordering::SeqCst),
+            deadline_met: t_met[i],
+            deadline_missed: t_missed[i],
+            ingest_rejects: tc.ingest_rejects.load(Ordering::SeqCst),
+        })
+        .collect();
     // Integrated active-replica seconds per class, reconstructed from the
     // scaling log: the truthful utilization denominator when the
     // autoscaler moved the count mid-run (a run that mostly served at 4
@@ -1406,7 +1644,7 @@ mod tests {
             }
             fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
                 if self.emitted >= self.after {
-                    return Err(IngestError("sensor unplugged".into()));
+                    return Err(IngestError::fatal("sensor unplugged"));
                 }
                 self.emitted += 1;
                 self.inner.next_request()
@@ -1424,5 +1662,110 @@ mod tests {
         assert!(err.msg.contains("sensor unplugged"), "msg: {}", err.msg);
         assert_eq!(err.completed, 4, "the admitted prefix is served before the abort");
         assert_eq!(err.in_flight, 0);
+    }
+
+    /// Regression (one bad sample must not kill the run): recoverable
+    /// source rejects are skipped and counted — globally and on the
+    /// default tenant — while every good sample is still served.
+    #[test]
+    fn recoverable_source_rejects_are_counted_not_fatal() {
+        use crate::coordinator::ingest::{IngestError, SourcedRequest};
+        struct FlakySource {
+            inner: SyntheticSource,
+            emitted: usize,
+        }
+        impl EventSource for FlakySource {
+            fn name(&self) -> &str {
+                "flaky"
+            }
+            fn geometry(&self) -> (usize, usize) {
+                self.inner.geometry()
+            }
+            fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+                self.emitted += 1;
+                // Every third pull hits a bad sample the reader skipped.
+                if self.emitted % 3 == 0 {
+                    return Err(IngestError::recoverable("events not sorted"));
+                }
+                self.inner.next_request()
+            }
+        }
+        let profile = DatasetProfile::n_mnist();
+        let backend = Functional::new(qnet_for(&profile));
+        let source = FlakySource { inner: SyntheticSource::new(profile, 8, 3), emitted: 0 };
+        let cfg = ServerConfig { workers: 2, ..Default::default() };
+        let r = run_server_source(Box::new(source), &backend, &cfg).unwrap();
+        assert_eq!(r.metrics.total, 8, "every good sample is still served");
+        assert_eq!(r.metrics.ingest_rejects, 4, "8 good pulls + terminal None ⇒ 4 rejects");
+        assert_eq!(r.metrics.per_tenant.len(), 1, "implicit default tenant");
+        let t = &r.metrics.per_tenant[0];
+        assert_eq!(t.tenant, "default");
+        assert_eq!(t.ingest_rejects, 4, "single-tenant rejects land on the default tenant");
+        assert_eq!(t.served, 8);
+        assert_eq!(t.offered(), 12, "served + rejects reconstruct the stream");
+    }
+
+    /// Two tenants with distinct SLOs: each request's deadline follows its
+    /// tenant's override, and the per-tenant books balance independently.
+    #[test]
+    fn per_tenant_slo_overrides_global() {
+        use crate::coordinator::ingest::{IngestError, SourcedRequest};
+        // Tenant 0 gets an impossible (zero) SLO, tenant 1 a generous one;
+        // no global SLO at all.
+        struct TwoTenantSource {
+            inner: SyntheticSource,
+            emitted: usize,
+            n: usize,
+        }
+        impl EventSource for TwoTenantSource {
+            fn name(&self) -> &str {
+                "two-tenant"
+            }
+            fn geometry(&self) -> (usize, usize) {
+                self.inner.geometry()
+            }
+            fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+                if self.emitted >= self.n {
+                    return Ok(None);
+                }
+                let tenant = self.emitted % 2;
+                self.emitted += 1;
+                Ok(self.inner.next_request()?.map(|mut sr| {
+                    sr.tenant = tenant;
+                    sr
+                }))
+            }
+        }
+        let profile = DatasetProfile::n_mnist();
+        let backend = Functional::new(qnet_for(&profile));
+        let source =
+            TwoTenantSource { inner: SyntheticSource::new(profile, 100, 7), emitted: 0, n: 10 };
+        let cfg = ServerConfig {
+            workers: 2,
+            // Deep enough that each tenant's quota (depth/2) exceeds its 5
+            // requests — no quota drop can race the assertions below.
+            queue_depth: 16,
+            tenants: vec![
+                TenantConfig::new("strict", 1).with_slo(Duration::ZERO),
+                TenantConfig::new("lax", 1).with_slo(Duration::from_secs(60)),
+            ],
+            ..Default::default()
+        };
+        let r = run_server_source(Box::new(source), &backend, &cfg).unwrap();
+        assert_eq!(r.metrics.per_tenant.len(), 2);
+        let strict = &r.metrics.per_tenant[0];
+        let lax = &r.metrics.per_tenant[1];
+        assert_eq!(strict.served, 0, "zero SLO expires everything at the ingress");
+        assert_eq!(strict.deadline_ingress, 5);
+        assert_eq!(strict.slo_attainment(), Some(0.0));
+        assert_eq!(lax.served, 5);
+        assert_eq!(lax.slo_attainment(), Some(1.0));
+        for t in [strict, lax] {
+            assert_eq!(t.offered(), 5, "each tenant's books reconstruct its stream");
+        }
+        // Global books are the per-tenant sums.
+        assert_eq!(r.metrics.total, 5);
+        assert_eq!(r.metrics.deadline_ingress, 5);
+        assert_eq!(r.metrics.deadline_offered, 10);
     }
 }

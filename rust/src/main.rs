@@ -13,7 +13,8 @@
 //! - `serve      --dataset <name> [--requests N] [--backend sim|func|dense]
 //!               [--workers N] [--queue D] [--drop-policy block|drop-oldest]
 //!               [--batch B] [--pool class=count[@batch],...]
-//!               [--source synth|replay:path[@speed]|tail:path] [--slo-ms N]
+//!               [--source synth|replay:path[@speed]|tail:path|udp:port|tcp:port]
+//!               [--slo-ms N] [--tenant name=weight[,slo_ms],...]
 //!               [--cost-profile path] [--scale-interval-ms N] [--scale-window-ms N]`
 //!   run the sharded serving runtime (accelerator worker replicas behind
 //!   an admission-controlled ingress queue; each worker drains up to B
@@ -38,15 +39,24 @@
 //!   the scaling log and a replica-band column. `--cost-profile path`
 //!   seeds every class's routing cost model from a previous run's
 //!   profile (no cold-start probes) and rewrites the file with the
-//!   updated models at shutdown.
+//!   updated models at shutdown. `--source udp:port` / `tcp:port` binds
+//!   a socket front door speaking the compact event-packet format (see
+//!   `coordinator::net`): UDP takes one packet per datagram, TCP takes
+//!   length-prefixed packet streams per connection, and both land
+//!   packets in DMA-style buffers flushed on size or timeout. `--tenant`
+//!   (e.g. `--tenant cam0=3,5.0,cam1=1`) declares the tenant table:
+//!   each tenant's ingress quota is its weighted fair share of the
+//!   queue depth, an optional per-tenant SLO (ms) overrides the global
+//!   `--slo-ms`, and the report adds a per-tenant breakdown including
+//!   recoverable ingest rejects.
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
 
 use esda::coordinator::{
     run_pool, run_pool_source, run_server, run_server_source, Backend, Dense, DropPolicy,
-    EventSource, Functional, ReplicaPool, ReplicaSpec, ReplaySource, ServerConfig, Simulator,
-    TailSource,
+    EventSource, Functional, NetConfig, NetSource, ReplicaPool, ReplicaSpec, ReplaySource,
+    ServerConfig, Simulator, TailSource, TenantConfig,
 };
 use esda::events::{io::generate_dataset_files, repr::histogram2_norm, DatasetProfile};
 use esda::hwopt::{
@@ -269,6 +279,33 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             Some(std::time::Duration::from_secs_f64(ms / 1e3))
         }
     };
+    // Tenant table: weighted fair shares of the ingress queue depth,
+    // each with an optional SLO overriding the global --slo-ms. Absent,
+    // the server runs its implicit single tenant (front door inert).
+    let tenants: Vec<TenantConfig> = match args.get("tenant") {
+        None => Vec::new(),
+        Some(raw) => {
+            let specs =
+                esda::util::cli::parse_tenant_spec(raw).map_err(|e| format!("--tenant: {e}"))?;
+            let mut out = Vec::with_capacity(specs.len());
+            for t in specs {
+                let tc = TenantConfig::new(t.name.as_str(), t.weight);
+                out.push(match t.slo_ms {
+                    None => tc,
+                    Some(ms) if ms <= 1e9 => {
+                        tc.with_slo(std::time::Duration::from_secs_f64(ms / 1e3))
+                    }
+                    Some(ms) => {
+                        return Err(format!(
+                            "--tenant {}: slo must be <= 1e9 ms, got {ms}",
+                            t.name
+                        ))
+                    }
+                });
+            }
+            out
+        }
+    };
     // Cost-model persistence: seed from the profile when it exists (a
     // missing file just means a cold first run — the same flag rewrites
     // it at shutdown); a *corrupt* profile is an error, not a cold start.
@@ -303,6 +340,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             ..Default::default()
         }),
         cost_profile,
+        tenants,
     };
     let source_spec = esda::util::cli::parse_source_spec(args.get_or("source", "synth"))?;
     // A non-synthetic source replaces the generated stream: build it now
@@ -323,6 +361,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         esda::util::cli::SourceSpec::Tail { path } => {
             let mut src = TailSource::open(std::path::Path::new(path))
                 .map_err(|e| e.to_string())?;
+            if args.get("requests").is_some() {
+                src = src.with_limit(cfg.n_requests);
+            }
+            Some(Box::new(src))
+        }
+        esda::util::cli::SourceSpec::Udp { port } | esda::util::cli::SourceSpec::Tcp { port } => {
+            // Socket front door: geometry comes from the dataset profile
+            // (packets are validated against it at the boundary) and the
+            // boundary's tenant table matches the server's.
+            let ncfg = NetConfig { tenants: cfg.tenants.len().max(1), ..NetConfig::default() };
+            let src = match &source_spec {
+                esda::util::cli::SourceSpec::Udp { .. } => NetSource::udp(*port, p.w, p.h, ncfg),
+                _ => NetSource::tcp(*port, p.w, p.h, ncfg),
+            };
+            let mut src = src.map_err(|e| e.to_string())?;
             if args.get("requests").is_some() {
                 src = src.with_limit(cfg.n_requests);
             }
@@ -449,6 +502,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         m.throughput(),
         m.per_worker.len(),
     );
+    if m.ingest_rejects > 0 {
+        println!(
+            "ingest: {} recoverable reject(s) skipped at the source boundary",
+            m.ingest_rejects
+        );
+    }
     if let Some(line) = esda::report::slo_line(m) {
         println!("{line}");
     }
@@ -465,6 +524,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             bp.max,
             m.batch_sizes.len(),
         );
+    }
+    if m.per_tenant.len() > 1 {
+        println!("{}", esda::report::tenant_table(m).render());
     }
     if pooled {
         println!("{}", esda::report::pool_table(m).render());

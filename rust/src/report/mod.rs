@@ -185,6 +185,39 @@ pub fn pool_table(m: &crate::coordinator::Metrics) -> Table {
     t
 }
 
+/// Render the multi-tenant front door's per-tenant breakdown: configured
+/// weight and the ingress quota it earned, served/dropped/deadline-shed
+/// counts, recoverable ingest rejects, the conservation total
+/// ([`TenantStats::offered`]), and per-tenant SLO attainment (used by
+/// `esda serve --tenant` and the net-serving example).
+///
+/// [`TenantStats::offered`]: crate::coordinator::TenantStats::offered
+pub fn tenant_table(m: &crate::coordinator::Metrics) -> Table {
+    let mut t = Table::new(
+        "serving — per-tenant front door",
+        &[
+            "tenant", "weight", "quota", "served", "dropped", "ddl drops", "rejects", "offered",
+            "slo",
+        ],
+    );
+    // A tenant that was never offered a deadline renders a dash, not NaN.
+    let pct = |v: f64| if v.is_finite() { format!("{:.1}%", v * 100.0) } else { "-".into() };
+    for ts in &m.per_tenant {
+        t.row(vec![
+            ts.tenant.clone(),
+            ts.weight.to_string(),
+            ts.quota.to_string(),
+            ts.served.to_string(),
+            ts.dropped.to_string(),
+            ts.deadline_drops().to_string(),
+            ts.ingest_rejects.to_string(),
+            ts.offered().to_string(),
+            ts.slo_attainment().map(pct).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t
+}
+
 /// One-line SLO summary — attainment over every *offered* deadline
 /// (sheds and drops count as misses), the served-only figure beside it,
 /// and the deadline-drop breakdown (ingress expiries vs
@@ -312,6 +345,40 @@ mod tests {
         assert!(s.contains("2 [1..4] peak 3"), "{s}");
         // The zero-traffic class renders dashes, never a literal NaN.
         assert!(!s.contains("NaN"), "{s}");
+    }
+
+    /// The tenant table renders one row per tenant, dashes (never NaN)
+    /// for tenants that carried no deadlines, and the conservation
+    /// total in the "offered" column.
+    #[test]
+    fn tenant_table_renders_per_tenant_rows() {
+        use crate::coordinator::{Metrics, TenantStats};
+        let mut m = Metrics::default();
+        m.per_tenant.push(TenantStats {
+            tenant: "cam-a".into(),
+            weight: 3,
+            quota: 12,
+            served: 40,
+            dropped: 2,
+            deadline_offered: 40,
+            deadline_met: 39,
+            deadline_missed: 1,
+            ingest_rejects: 1,
+            ..Default::default()
+        });
+        m.per_tenant.push(TenantStats {
+            tenant: "cam-b".into(),
+            weight: 1,
+            quota: 4,
+            served: 5,
+            ..Default::default()
+        });
+        let s = tenant_table(&m).render();
+        assert!(s.contains("cam-a"), "{s}");
+        assert!(s.contains("cam-b"), "{s}");
+        assert!(s.contains("97.5%"), "attainment 39/40: {s}");
+        assert!(s.contains("43"), "offered = 40 + 2 + 0 + 1: {s}");
+        assert!(!s.contains("NaN"), "no-deadline tenant renders a dash: {s}");
     }
 
     /// The scaling log renders one line per autoscaler decision.

@@ -33,6 +33,14 @@ impl Args {
                     let v = it
                         .next()
                         .ok_or_else(|| format!("flag --{stripped} expects a value"))?;
+                    // A following `--flag` is almost certainly a typo'd
+                    // invocation, not a value (`--source --slo-ms 5`
+                    // would silently yield source="--slo-ms"). Values
+                    // that legitimately start with `--` still have the
+                    // `--flag=--value` escape hatch above.
+                    if v.starts_with("--") {
+                        return Err(format!("flag --{stripped} expects a value, got flag '{v}'"));
+                    }
                     out.flags.insert(stripped.to_string(), v);
                 }
             } else {
@@ -167,10 +175,16 @@ pub enum SourceSpec {
     Replay { path: String, speed: f64 },
     /// Follow a growing `.esda` file (camera-dump pipeline).
     Tail { path: String },
+    /// Listen for event packets on a UDP socket (one packet per
+    /// datagram).
+    Udp { port: u16 },
+    /// Accept length-prefixed event-packet streams on a TCP socket.
+    Tcp { port: u16 },
 }
 
-/// Parse a `--source` spec: `synth`, `replay:path[@speed]`, or
-/// `tail:path`. The substring after the *last* `@` is the replay speed
+/// Parse a `--source` spec: `synth`, `replay:path[@speed]`,
+/// `tail:path`, `udp:port`, or `tcp:port`.
+/// For `replay:`, the substring after the *last* `@` is the replay speed
 /// when it parses as a number (which must then be finite and > 0);
 /// a non-numeric suffix is simply part of the path, so
 /// `replay:runs@v2/cap.esda` opens that file at 1× while
@@ -205,9 +219,92 @@ pub fn parse_source_spec(s: &str) -> Result<SourceSpec, String> {
         }
         return Ok(SourceSpec::Tail { path: path.to_string() });
     }
+    if let Some(port) = s.strip_prefix("udp:") {
+        let port: u16 = port
+            .parse()
+            .map_err(|_| format!("--source udp: bad port '{port}'"))?;
+        if port == 0 {
+            return Err("--source udp: port must be >= 1".into());
+        }
+        return Ok(SourceSpec::Udp { port });
+    }
+    if let Some(port) = s.strip_prefix("tcp:") {
+        let port: u16 = port
+            .parse()
+            .map_err(|_| format!("--source tcp: bad port '{port}'"))?;
+        if port == 0 {
+            return Err("--source tcp: port must be >= 1".into());
+        }
+        return Ok(SourceSpec::Tcp { port });
+    }
     Err(format!(
-        "--source: expected synth | replay:path[@speed] | tail:path, got '{s}'"
+        "--source: expected synth | replay:path[@speed] | tail:path | udp:port | tcp:port, \
+         got '{s}'"
     ))
+}
+
+/// One entry of a `--tenant` spec: a tenant name, its fair-share weight,
+/// and an optional per-tenant latency SLO overriding the global
+/// `--slo-ms`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative fair-share weight (admission quota is proportional).
+    pub weight: usize,
+    /// `Some(ms)` when spelled `name=weight,slo_ms`; `None` inherits the
+    /// global SLO (if any).
+    pub slo_ms: Option<f64>,
+}
+
+/// Parse a `--tenant` spec: a comma-separated list of
+/// `name=weight[,slo_ms]` entries. A token containing `=` starts a new
+/// tenant; a bare numeric token is the per-tenant SLO (milliseconds) of
+/// the tenant preceding it. E.g. `--tenant cam0=3,cam1=1` or
+/// `--tenant cam0=3,5.0,cam1=1`.
+pub fn parse_tenant_spec(s: &str) -> Result<Vec<TenantSpec>, String> {
+    let mut out: Vec<TenantSpec> = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if let Some((name, w)) = part.split_once('=') {
+            if name.is_empty() {
+                return Err(format!("tenant entry '{part}': empty tenant name"));
+            }
+            if out.iter().any(|t| t.name == name) {
+                return Err(format!("tenant entry '{part}': duplicate tenant '{name}'"));
+            }
+            let weight: usize = w
+                .parse()
+                .map_err(|_| format!("tenant entry '{part}': bad weight '{w}'"))?;
+            if weight == 0 {
+                return Err(format!("tenant entry '{part}': weight must be >= 1"));
+            }
+            out.push(TenantSpec { name: name.to_string(), weight, slo_ms: None });
+        } else {
+            let tenant = out
+                .last_mut()
+                .ok_or_else(|| format!("tenant spec: slo '{part}' precedes any name=weight"))?;
+            if tenant.slo_ms.is_some() {
+                return Err(format!(
+                    "tenant '{}': second slo value '{part}'",
+                    tenant.name
+                ));
+            }
+            let ms: f64 = part
+                .parse()
+                .map_err(|_| format!("tenant '{}': bad slo '{part}'", tenant.name))?;
+            if !ms.is_finite() || ms <= 0.0 {
+                return Err(format!(
+                    "tenant '{}': slo must be finite and > 0, got {ms}",
+                    tenant.name
+                ));
+            }
+            tenant.slo_ms = Some(ms);
+        }
+    }
+    if out.is_empty() {
+        return Err("tenant spec: expected name=weight[,slo_ms] entries".into());
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -235,6 +332,22 @@ mod tests {
     fn missing_value_errors() {
         let r = Args::parse(vec!["--steps".to_string()], &[]);
         assert!(r.is_err());
+    }
+
+    /// `--source --slo-ms 5` must not swallow `--slo-ms` as the value of
+    /// `--source`; `--flag=--weird` stays the escape hatch for values
+    /// that genuinely start with `--`.
+    #[test]
+    fn flag_value_cannot_be_another_flag() {
+        let e = Args::parse(
+            ["--source", "--slo-ms", "5"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap_err();
+        assert!(e.contains("--source expects a value"), "got: {e}");
+        let a = parse(&["--marker=--weird", "--steps", "3"], &[]);
+        assert_eq!(a.get("marker"), Some("--weird"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 3);
     }
 
     #[test]
@@ -316,6 +429,8 @@ mod tests {
             parse_source_spec("replay:runs@v2/cap.esda").unwrap(),
             SourceSpec::Replay { path: "runs@v2/cap.esda".into(), speed: 1.0 }
         );
+        assert_eq!(parse_source_spec("udp:9000").unwrap(), SourceSpec::Udp { port: 9000 });
+        assert_eq!(parse_source_spec("tcp:7700").unwrap(), SourceSpec::Tcp { port: 7700 });
     }
 
     #[test]
@@ -323,8 +438,38 @@ mod tests {
         for bad in [
             "", "nope", "replay:", "replay:@2", "tail:", "replay:d.esda@0",
             "replay:d.esda@-1", "replay:d.esda@inf", "replay:d.esda@nan",
+            "udp:", "udp:0", "udp:x", "udp:70000", "tcp:", "tcp:0", "tcp:-5",
         ] {
             assert!(parse_source_spec(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn tenant_spec_parses_weights_and_slos() {
+        let ts = parse_tenant_spec("cam0=3,cam1=1").unwrap();
+        assert_eq!(
+            ts,
+            vec![
+                TenantSpec { name: "cam0".into(), weight: 3, slo_ms: None },
+                TenantSpec { name: "cam1".into(), weight: 1, slo_ms: None },
+            ]
+        );
+        let ts = parse_tenant_spec("cam0=3,5.5,cam1=2").unwrap();
+        assert_eq!(ts[0].slo_ms, Some(5.5));
+        assert_eq!(ts[1], TenantSpec { name: "cam1".into(), weight: 2, slo_ms: None });
+        // Whitespace-tolerant, like the pool spec.
+        let ts = parse_tenant_spec("a=1, 10, b=2").unwrap();
+        assert_eq!(ts[0].slo_ms, Some(10.0));
+        assert_eq!(ts[1].name, "b");
+    }
+
+    #[test]
+    fn tenant_spec_rejects_malformed_entries() {
+        for bad in [
+            "", "cam0", "cam0=", "cam0=0", "=3", "cam0=x", "5,cam0=1", "cam0=1,5,6",
+            "cam0=1,0", "cam0=1,-2", "cam0=1,inf", "cam0=1,cam0=2",
+        ] {
+            assert!(parse_tenant_spec(bad).is_err(), "accepted '{bad}'");
         }
     }
 }

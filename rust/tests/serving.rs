@@ -4,10 +4,10 @@
 
 use esda::arch::HwConfig;
 use esda::coordinator::{
-    run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig, Backend,
-    BackendError, Classification, DropPolicy, EventSource, Functional, IngestError,
-    ReplaySource, ReplicaPool, ReplicaSpec, ServerConfig, ServerResult, Simulator,
-    SourcedRequest,
+    encode_packet, run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig,
+    Backend, BackendError, Classification, DropPolicy, EventSource, Functional, IngestError,
+    NetConfig, NetSource, ReplaySource, ReplicaPool, ReplicaSpec, ServerConfig, ServerResult,
+    Simulator, SourcedRequest, TenantConfig, DEFAULT_TENANT,
 };
 use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::model::quant::{quantize_network, QuantizedNet};
@@ -749,6 +749,7 @@ fn autoscaler_scales_up_under_pressure_and_down_when_idle() {
                         label,
                         events,
                         arrival: Instant::now(),
+                        tenant: DEFAULT_TENANT,
                     }));
                 }
                 std::thread::sleep(gap);
@@ -906,4 +907,251 @@ fn replay_source_serves_end_to_end_with_slo() {
         );
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The ingestion-boundary regression test: a capture whose middle sample
+/// is corrupt (unsorted events under the replay's reject policy) no
+/// longer kills the run — the bad sample is skipped and counted under
+/// `ingest_rejects` while every good sample around it is still served.
+#[test]
+fn replay_with_corrupt_sample_mid_capture_completes() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let dir = std::env::temp_dir().join(format!("esda_bad_sample_{}", std::process::id()));
+    let mut rng = Rng::new(5);
+    let good = |label: usize, rng: &mut Rng| esda::events::io::Sample {
+        label: label as u32,
+        events: profile.sample(label, rng),
+    };
+    let ev = |t: u32| esda::events::Event { t_us: t, x: 1, y: 1, polarity: true };
+    // One unsorted sample sandwiched between good ones.
+    let samples = vec![
+        good(0, &mut rng),
+        good(1, &mut rng),
+        esda::events::io::Sample { label: 0, events: vec![ev(50), ev(10)] },
+        good(2, &mut rng),
+    ];
+    let path = dir.join("corrupt_mid.esda");
+    esda::events::io::write_dataset(&path, profile.w, profile.h, &samples).expect("write");
+
+    let cfg = ServerConfig { queue_depth: 8, ..Default::default() };
+    let source = ReplaySource::open(&path, 1e6).expect("open replay");
+    let r = run_server_source(Box::new(source), &backend, &cfg).expect("run must complete");
+    let m = &r.metrics;
+    assert_eq!(m.total, 3, "every good sample is served");
+    assert_eq!(m.ingest_rejects, 1, "the corrupt sample is counted, not fatal");
+    assert_eq!(m.dropped, 0);
+    // Single-tenant run: the reject lands on the implicit default tenant.
+    assert_eq!(m.per_tenant.len(), 1);
+    assert_eq!(m.per_tenant[0].ingest_rejects, 1);
+    assert_eq!(m.per_tenant[0].offered(), 4, "3 served + 1 reject");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Randomized multi-tenant conservation: with random tenant tables
+/// (weights, occasional per-tenant SLOs), random queue shapes, and
+/// mid-stream recoverable rejects, every emission is accounted for
+/// exactly once — globally, and per tenant via
+/// `offered() == served + dropped + deadline-shed + ingest-rejected`.
+#[test]
+fn multi_tenant_serving_conserves_requests_property() {
+    use esda::util::propcheck::{check, Gen};
+    use std::time::Instant;
+
+    /// Emits its plan in order: an admitted request tagged with a tenant,
+    /// or a recoverable reject (tagged or untagged).
+    struct TenantSource {
+        profile: DatasetProfile,
+        rng: Rng,
+        plan: std::collections::VecDeque<Result<usize, Option<usize>>>,
+        emitted: usize,
+    }
+    impl EventSource for TenantSource {
+        fn name(&self) -> &str {
+            "tenants"
+        }
+        fn geometry(&self) -> (usize, usize) {
+            (self.profile.w, self.profile.h)
+        }
+        fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+            match self.plan.pop_front() {
+                None => Ok(None),
+                Some(Ok(tenant)) => {
+                    let label = self.emitted % self.profile.n_classes;
+                    self.emitted += 1;
+                    let events = self.profile.sample(label, &mut self.rng);
+                    Ok(Some(SourcedRequest { label, events, arrival: Instant::now(), tenant }))
+                }
+                Some(Err(tag)) => {
+                    let e = IngestError::recoverable("injected mid-stream reject");
+                    Err(match tag {
+                        Some(t) => e.with_tenant(t),
+                        None => e,
+                    })
+                }
+            }
+        }
+    }
+
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    check("per-tenant books balance", 10, |g: &mut Gen| {
+        let n_tenants = g.usize(1, 3);
+        let tenants: Vec<TenantConfig> = (0..n_tenants)
+            .map(|i| {
+                let tc = TenantConfig::new(format!("t{i}"), g.usize(1, 4));
+                if g.chance(0.3) {
+                    tc.with_slo(Duration::from_micros(g.u64(1..=200_000)))
+                } else {
+                    tc
+                }
+            })
+            .collect();
+        let n_items = g.usize(6, 24);
+        let mut sent = vec![0usize; n_tenants];
+        let mut rejected = vec![0usize; n_tenants];
+        let mut untagged = 0usize;
+        let plan: std::collections::VecDeque<Result<usize, Option<usize>>> = (0..n_items)
+            .map(|_| {
+                if g.chance(0.2) {
+                    if g.chance(0.25) {
+                        untagged += 1;
+                        Err(None)
+                    } else {
+                        let t = g.usize(0, n_tenants - 1);
+                        rejected[t] += 1;
+                        Err(Some(t))
+                    }
+                } else {
+                    let t = g.usize(0, n_tenants - 1);
+                    sent[t] += 1;
+                    Ok(t)
+                }
+            })
+            .collect();
+        let cfg = ServerConfig {
+            seed: g.u64(0..=1 << 40),
+            workers: g.usize(1, 2),
+            queue_depth: g.usize(1, 6),
+            drop_policy: if g.bool() { DropPolicy::Block } else { DropPolicy::DropOldest },
+            batch: g.usize(1, 3),
+            slo: if g.chance(0.3) {
+                Some(Duration::from_micros(g.u64(1..=100_000)))
+            } else {
+                None
+            },
+            tenants,
+            ..Default::default()
+        };
+        let source = TenantSource {
+            profile: profile.clone(),
+            rng: Rng::new(g.u64(0..=1 << 32)),
+            plan,
+            emitted: 0,
+        };
+        let backend = Functional::new(qnet.clone());
+        let r = run_server_source(Box::new(source), &backend, &cfg).expect("run");
+        let m = &r.metrics;
+        let n_ok: usize = sent.iter().sum();
+        let n_rej: usize = rejected.iter().sum::<usize>() + untagged;
+        assert_eq!(
+            m.total + m.dropped + m.deadline_drops(),
+            n_ok,
+            "global books must cover every admitted emission"
+        );
+        assert_eq!(m.ingest_rejects, n_rej, "every injected reject is counted");
+        assert_eq!(m.per_tenant.len(), n_tenants);
+        for (i, ts) in m.per_tenant.iter().enumerate() {
+            // Untagged rejects stay global-only on a multi-tenant table;
+            // on a single-tenant table they land on the only tenant.
+            let attributed = rejected[i] + if n_tenants == 1 { untagged } else { 0 };
+            assert_eq!(
+                ts.offered(),
+                sent[i] + attributed,
+                "tenant {i} ({}) books must balance: {ts:?}",
+                ts.tenant
+            );
+        }
+        let t_served: usize = m.per_tenant.iter().map(|t| t.served).sum();
+        assert_eq!(t_served, m.total, "per-tenant served must sum to the total");
+    });
+}
+
+/// The multi-tenant acceptance test: a tenant flooding the loopback TCP
+/// front door cannot starve the quiet tenant. The quota gate sheds the
+/// flood at admission, every quiet request is served, and the quiet
+/// tenant's SLO attainment stays perfect.
+#[test]
+fn loopback_saturating_tenant_cannot_starve_the_quiet_one() {
+    use std::io::Write as _;
+    use std::net::TcpStream;
+
+    let profile = DatasetProfile::n_mnist();
+    let backend = throttled(&profile, 2, 2);
+    let (n_flood, n_quiet) = (40u32, 5u32);
+    let ncfg =
+        NetConfig { tenants: 2, idle_timeout: Duration::from_secs(5), ..NetConfig::default() };
+    let src = NetSource::tcp(0, profile.w, profile.h, ncfg)
+        .expect("bind")
+        .with_limit((n_flood + n_quiet) as usize);
+    let port = src.local_port();
+    fn ev(t: u32, x: u16, y: u16) -> esda::events::Event {
+        esda::events::Event { t_us: t, x, y, polarity: true }
+    }
+    fn frame(tenant: u16, label: u32, x: u16) -> Vec<u8> {
+        let pkt = encode_packet(tenant, label, &[ev(1, x, x), ev(2, x, x), ev(3, x, x)]);
+        let mut f = (pkt.len() as u32).to_le_bytes().to_vec();
+        f.extend_from_slice(&pkt);
+        f
+    }
+    // The flood burst goes out back-to-back on one connection; the quiet
+    // tenant trickles on another, landing mid-saturation.
+    let flood = std::thread::spawn(move || {
+        let mut c = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        for i in 0..n_flood {
+            c.write_all(&frame(0, i % 10, 1)).unwrap();
+        }
+        c.flush().unwrap();
+    });
+    let quiet = std::thread::spawn(move || {
+        let mut c = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        for i in 0..n_quiet {
+            c.write_all(&frame(1, i % 10, 4)).unwrap();
+            c.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    });
+    // Depth 16 split 1:1 gives each tenant a quota of 8: the flood can
+    // hold at most 8 ingress slots, so the queue never fills and the
+    // quiet tenant's (at most 5 concurrent) requests are always admitted.
+    let cfg = ServerConfig {
+        workers: 1,
+        queue_depth: 16,
+        drop_policy: DropPolicy::DropOldest,
+        tenants: vec![
+            TenantConfig::new("flood", 1),
+            TenantConfig::new("quiet", 1).with_slo(Duration::from_secs(60)),
+        ],
+        ..Default::default()
+    };
+    let r = run_server_source(Box::new(src), &backend, &cfg).expect("loopback run");
+    flood.join().unwrap();
+    quiet.join().unwrap();
+    let m = &r.metrics;
+    assert_eq!(m.per_tenant.len(), 2);
+    let f = &m.per_tenant[0];
+    let q = &m.per_tenant[1];
+    assert_eq!((f.tenant.as_str(), q.tenant.as_str()), ("flood", "quiet"));
+    assert_eq!(q.served, n_quiet as usize, "the quiet tenant must not be starved");
+    assert_eq!(q.dropped, 0);
+    assert_eq!(q.slo_attainment(), Some(1.0), "quiet requests all land in deadline");
+    assert!(f.dropped >= 1, "the flood must be shed at its quota: {f:?}");
+    // TCP delivers everything: per-tenant and global books cover it all.
+    assert_eq!(f.offered(), n_flood as usize, "{f:?}");
+    assert_eq!(q.offered(), n_quiet as usize, "{q:?}");
+    assert_eq!(
+        m.total + m.dropped + m.deadline_drops(),
+        (n_flood + n_quiet) as usize,
+        "global books must cover the full loopback stream"
+    );
 }
