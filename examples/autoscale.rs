@@ -79,7 +79,13 @@ impl EventSource for BurstSource {
                 self.emitted_total += 1;
                 let events = self.profile.sample(label, &mut self.rng);
                 let arrival = Instant::now();
-                return Ok(Some(SourcedRequest { label, events, arrival, tenant: DEFAULT_TENANT }));
+                return Ok(Some(SourcedRequest {
+                    label,
+                    events,
+                    arrival,
+                    tenant: DEFAULT_TENANT,
+                    stream: None,
+                }));
             }
             std::thread::sleep(gap);
             self.phase += 1;
@@ -209,7 +215,8 @@ fn main() {
     let profile_path =
         std::env::temp_dir().join(format!("esda_autoscale_profile_{}.json", std::process::id()));
     cold.metrics.cost_profile.save(&profile_path).expect("save profile");
-    let seeded_profile = CostProfile::load(&profile_path).expect("load profile");
+    let (seeded_profile, warning) = CostProfile::load(&profile_path).expect("load profile");
+    assert!(warning.is_none(), "a freshly saved profile must load clean");
     let warm = run_pool(
         &profile,
         &two_class_pool(),

@@ -1,0 +1,273 @@
+//! Incremental (delta) inference + sticky routing demo: two event
+//! streams share a serving pool — a near-static camera whose successive
+//! windows overlap ~95% (a fixed background plus a small drifting
+//! object), and a scene-cut stream whose windows share nothing. The
+//! delta-capable class diffs each window against the stream's cached
+//! previous one and recomputes only changed sites; the sticky router
+//! pins each stream to the replica holding its cache. The overlapping
+//! stream delta-hits, the scene-cut stream falls back over-threshold,
+//! and a control run with delta disabled proves the machinery changes
+//! **throughput accounting only**: predictions are bit-equal.
+//!
+//! With `--report-out path` a machine-readable JSON summary is written —
+//! CI greps it for `null` to catch NaN/inf leaking into reports.
+//!
+//! Run: `cargo run --release --example delta_serving`
+//! (add `--smoke` for the quick CI-sized run)
+
+use esda::coordinator::{
+    run_pool_source, AutoscaleConfig, Backend, BackendError, Classification, DeltaStatus,
+    DeltaStore, DropPolicy, EventSource, Functional, IngestError, ReplicaPool, ReplicaSpec,
+    ServerConfig, ServerResult, SourcedRequest, DEFAULT_TENANT,
+};
+use esda::events::{repr::histogram2_norm, DatasetProfile, Event};
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::NetworkSpec;
+use esda::sparse::SparseMap;
+use esda::util::cli::Args;
+use esda::util::json::Json;
+use esda::util::Rng;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Paced replica with full delta delegation: ~1 ms per request keeps a
+/// backlog alive long enough for stream affinity to engage mid-run.
+struct Paced {
+    inner: Functional,
+    delay: Duration,
+}
+
+impl Backend for Paced {
+    fn name(&self) -> &str {
+        "paced"
+    }
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        std::thread::sleep(self.delay);
+        self.inner.classify(map)
+    }
+    fn supports_delta(&self) -> bool {
+        self.inner.supports_delta()
+    }
+    fn classify_batch_delta(
+        &self,
+        streams: &[Option<u64>],
+        maps: &[SparseMap<f32>],
+    ) -> Vec<Result<(Classification, DeltaStatus), BackendError>> {
+        std::thread::sleep(self.delay * maps.len() as u32);
+        self.inner.classify_batch_delta(streams, maps)
+    }
+    fn evict_stream(&self, stream: u64) {
+        self.inner.evict_stream(stream);
+    }
+}
+
+const PATCH: usize = 6;
+
+/// Two interleaved streams. Stream 1 ("camera"): a fixed background of
+/// events plus a small patch of fresh events that drifts a few pixels
+/// per window — consecutive windows overlap ~95%. Stream 2 ("cuts"):
+/// every window is a fresh full-frame scatter. Labels are the request
+/// ordinal, so multiset prediction equality between two runs implies
+/// per-request bit-equality.
+struct TwoStreamSource {
+    w: usize,
+    h: usize,
+    n_total: usize,
+    emitted: usize,
+    bg: Vec<Event>,
+    rng: Rng,
+}
+
+impl TwoStreamSource {
+    fn new(w: usize, h: usize, n_total: usize) -> TwoStreamSource {
+        let mut rng = Rng::new(4242);
+        let bg = (0..600)
+            .map(|j| Event {
+                t_us: j as u32,
+                x: rng.below(w as u64) as u16,
+                y: rng.below(h as u64) as u16,
+                polarity: rng.chance(0.5),
+            })
+            .collect();
+        TwoStreamSource { w, h, n_total, emitted: 0, bg, rng }
+    }
+}
+
+impl EventSource for TwoStreamSource {
+    fn name(&self) -> &str {
+        "two-stream"
+    }
+    fn geometry(&self) -> (usize, usize) {
+        (self.w, self.h)
+    }
+    fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+        if self.emitted >= self.n_total {
+            return Ok(None);
+        }
+        let i = self.emitted;
+        self.emitted += 1;
+        let (events, stream) = if i % 2 == 0 {
+            // Camera: background + a patch drifting with the window index.
+            let k = i / 2;
+            let (px, py) = ((5 * k) % (self.w - PATCH), (7 * k) % (self.h - PATCH));
+            let mut es = self.bg.clone();
+            for j in 0..30 {
+                es.push(Event {
+                    t_us: (600 + j) as u32,
+                    x: (px + self.rng.index(PATCH)) as u16,
+                    y: (py + self.rng.index(PATCH)) as u16,
+                    polarity: self.rng.chance(0.5),
+                });
+            }
+            (es, 1)
+        } else {
+            // Scene cuts: a fresh scatter, nothing shared between windows.
+            let es = (0..300)
+                .map(|j| Event {
+                    t_us: j as u32,
+                    x: self.rng.below(self.w as u64) as u16,
+                    y: self.rng.below(self.h as u64) as u16,
+                    polarity: self.rng.chance(0.5),
+                })
+                .collect();
+            (es, 2)
+        };
+        Ok(Some(SourcedRequest {
+            label: i,
+            events,
+            arrival: Instant::now(),
+            tenant: DEFAULT_TENANT,
+            stream: Some(stream),
+        }))
+    }
+}
+
+fn prediction_multiset(r: &ServerResult) -> Vec<(usize, usize)> {
+    let mut v: Vec<(usize, usize)> = r.predictions.iter().map(|p| (p.label, p.pred)).collect();
+    v.sort_unstable();
+    v
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["smoke"]).unwrap();
+    let smoke = args.has("smoke");
+    let profile = DatasetProfile::n_mnist();
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 5);
+    let mut rng = Rng::new(11);
+    let calib: Vec<_> = (0..4)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &weights, &calib);
+
+    // Two classes (the sticky router only exists when there is a routing
+    // decision to make): "delta" runs incremental execution against a
+    // cache store shared across its replicas, "plain" recomputes every
+    // window. Same weights, so class placement cannot change predictions.
+    let mk_pool = |delta: bool| {
+        let (qa, qb) = (qnet.clone(), qnet.clone());
+        let store: DeltaStore = Arc::new(Mutex::new(HashMap::new()));
+        ReplicaPool::build(vec![
+            ReplicaSpec::new("delta", 1, 2, move |_| {
+                let inner = if delta {
+                    Functional::new(qa.clone()).with_delta_store(0.35, Arc::clone(&store))
+                } else {
+                    Functional::new(qa.clone())
+                };
+                Ok(Box::new(Paced { inner, delay: Duration::from_millis(1) }))
+            })
+            .with_max_replicas(2),
+            ReplicaSpec::new("plain", 1, 2, move |_| {
+                Ok(Box::new(Paced {
+                    inner: Functional::new(qb.clone()),
+                    delay: Duration::from_millis(1),
+                }))
+            }),
+        ])
+        .expect("pool build")
+    };
+    let n_offered = if smoke { 40 } else { 160 };
+    let cfg = ServerConfig {
+        queue_depth: 8,
+        drop_policy: DropPolicy::Block,
+        batch: 2,
+        autoscale: Some(AutoscaleConfig {
+            interval: Duration::from_millis(5),
+            window: Duration::from_millis(50),
+            high_backlog: 2.0,
+            low_util: 0.3,
+        }),
+        ..Default::default()
+    };
+    let source = |n| Box::new(TwoStreamSource::new(profile.w, profile.h, n));
+
+    let with_delta =
+        run_pool_source(source(n_offered), &mk_pool(true), &cfg).expect("delta run");
+    let control =
+        run_pool_source(source(n_offered), &mk_pool(false), &cfg).expect("control run");
+
+    let m = &with_delta.metrics;
+    let d = &m.delta;
+    println!("== two streams into delta+plain classes ({n_offered} requests) ==");
+    println!(
+        "  {} served / {} offered | {} queue drop(s) | {} scaling event(s)",
+        m.total,
+        n_offered,
+        m.dropped,
+        m.scaling_events.len(),
+    );
+    if let Some(line) = esda::report::delta_line(m) {
+        println!("  {line}");
+    }
+    println!("{}", esda::report::pool_table(m).render());
+
+    // The demo is also an acceptance check: lossless conservation, live
+    // delta + sticky books, and bit-equal predictions vs. the control.
+    let conservation_ok = m.total + m.dropped + m.deadline_drops() == n_offered;
+    assert!(conservation_ok, "conservation must hold under sticky routing");
+    assert_eq!(m.total, n_offered, "blocking admission is lossless");
+    assert!(d.attempts() > 0, "the delta class must see stream-tagged requests");
+    assert!(d.hits >= 1, "the overlapping stream must delta-hit on its cached window");
+    assert_eq!(
+        d.attempts() + d.not_applicable,
+        m.total,
+        "delta statuses must partition the served stream"
+    );
+    let sticky_total = d.sticky_hits + d.sticky_cold + d.sticky_retired + d.sticky_capacity;
+    assert!(sticky_total > 0, "the sticky router must have made placement decisions");
+    let bit_equal = prediction_multiset(&with_delta) == prediction_multiset(&control);
+    assert!(bit_equal, "delta execution changed predictions");
+    println!(
+        "control (delta off): bit-equal predictions over {} request(s) — ok",
+        control.metrics.total
+    );
+
+    // Machine-readable summary (CI greps this for `null`).
+    if let Some(out) = args.get("report-out") {
+        let doc = Json::obj(vec![
+            ("offered", Json::Num(n_offered as f64)),
+            ("served", Json::Num(m.total as f64)),
+            ("queue_drops", Json::Num(m.dropped as f64)),
+            ("deadline_drops", Json::Num(m.deadline_drops() as f64)),
+            ("conservation_ok", Json::Bool(conservation_ok)),
+            ("delta_hits", Json::Num(d.hits as f64)),
+            ("delta_full_cold", Json::Num(d.full_cold as f64)),
+            ("delta_full_geometry", Json::Num(d.full_geometry as f64)),
+            ("delta_full_over_threshold", Json::Num(d.full_over_threshold as f64)),
+            ("delta_attempts", Json::Num(d.attempts() as f64)),
+            ("delta_hit_rate", Json::Num(d.hit_rate())),
+            ("sticky_hits", Json::Num(d.sticky_hits as f64)),
+            ("sticky_cold", Json::Num(d.sticky_cold as f64)),
+            ("sticky_retired", Json::Num(d.sticky_retired as f64)),
+            ("sticky_capacity", Json::Num(d.sticky_capacity as f64)),
+            ("bit_equal_vs_control", Json::Bool(bit_equal)),
+        ]);
+        std::fs::write(out, doc.to_string()).expect("write report");
+        println!("report written -> {out}");
+    }
+}

@@ -1,0 +1,214 @@
+//! Incremental (delta) inference speedup vs. window overlap: full
+//! recompute (`ExecPlan::classify`) against the dirty-frontier delta path
+//! (`ExecPlan::classify_delta`) over sliding-window streams at overlap
+//! fractions {0, 0.5, 0.9, 0.99} — plus allocs-per-window for the delta
+//! path (the per-stream cache must be at zero in steady state) and a
+//! bit-exactness cross-check on every window.
+//!
+//! The workload models the event-camera regime the delta path targets: a
+//! static scene (a fixed background set of events, the carried fraction)
+//! plus a drifting object (an 8×8 patch of fresh events that moves a few
+//! pixels per window). At overlap 0 every window is all-fresh, the diff
+//! exceeds `--delta-max-frac`, and the delta path degrades to a full
+//! recompute (speedup ~1x); at 0.9+ only the patch neighbourhood is
+//! recomputed and the speedup is the point of the whole feature.
+//!
+//! Emits `BENCH_delta.json` at the repository root (override the path
+//! with `ESDA_BENCH_OUT`):
+//!
+//! ```sh
+//! cargo bench --bench delta
+//! ```
+//!
+//! `ESDA_BENCH_SMOKE=1` runs a fast low-iteration pass — numbers too
+//! noisy to compare, but every field is measured and non-null.
+//! `ESDA_BENCH_ASSERT=1` additionally asserts the ISSUE acceptance bar:
+//! delta >= 2x full-recompute throughput at 0.9 overlap.
+
+use esda::events::{repr::histogram2_norm, DatasetProfile, Event};
+use esda::model::quant::quantize_network;
+use esda::model::weights::FloatWeights;
+use esda::model::{DeltaCache, ExecCtx, ExecPlan, NetworkSpec};
+use esda::sparse::SparseMap;
+use esda::util::alloc::CountingAllocator;
+use esda::util::json::Json;
+use esda::util::stats::bench;
+use esda::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Measured iterations: the real run amortizes noise over 20; smoke mode
+/// (CI) only proves the harness measures and emits real numbers.
+fn iters() -> (usize, usize) {
+    if std::env::var_os("ESDA_BENCH_SMOKE").is_some() {
+        (1, 2)
+    } else {
+        (2, 20)
+    }
+}
+
+fn req_per_s(n: usize, mean_s: f64) -> f64 {
+    if mean_s <= 0.0 {
+        return f64::NAN;
+    }
+    n as f64 / mean_s
+}
+
+const PATCH: usize = 8;
+const EVENTS_PER_WINDOW: usize = 800;
+const N_WINDOWS: usize = 16;
+
+/// Sliding-window stream at `overlap`: each window carries
+/// `overlap * EVENTS_PER_WINDOW` fixed background events and replaces the
+/// rest with fresh events inside a patch that drifts per window.
+fn windows(profile: &DatasetProfile, overlap: f64, seed: u64) -> Vec<SparseMap<f32>> {
+    let (w, h) = (profile.w, profile.h);
+    let mut rng = Rng::new(seed);
+    let n_bg = (overlap * EVENTS_PER_WINDOW as f64).round() as usize;
+    let bg: Vec<Event> = (0..n_bg)
+        .map(|j| Event {
+            t_us: j as u32,
+            x: rng.below(w as u64) as u16,
+            y: rng.below(h as u64) as u16,
+            polarity: rng.chance(0.5),
+        })
+        .collect();
+    (0..N_WINDOWS)
+        .map(|i| {
+            let (px, py) = ((7 * i) % (w - PATCH), (11 * i) % (h - PATCH));
+            let mut es = bg.clone();
+            for j in 0..EVENTS_PER_WINDOW - n_bg {
+                es.push(Event {
+                    t_us: (n_bg + j) as u32,
+                    x: (px + rng.index(PATCH)) as u16,
+                    y: (py + rng.index(PATCH)) as u16,
+                    polarity: rng.chance(0.5),
+                });
+            }
+            histogram2_norm(&es, w, h, 8.0)
+        })
+        .collect()
+}
+
+fn main() {
+    let (warmup, iters) = iters();
+    let assert_speedup = std::env::var_os("ESDA_BENCH_ASSERT").is_some();
+    let profile = DatasetProfile::n_mnist();
+    let spec = NetworkSpec::compact("compact", profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 7);
+    let mut rng = Rng::new(42);
+    let calib: Vec<SparseMap<f32>> = (0..3)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    let qnet = quantize_network(&spec, &weights, &calib);
+    let plan = ExecPlan::compile(&qnet);
+    let max_frac = 0.35; // the serving default (--delta-max-frac)
+
+    println!(
+        "# delta inference — full recompute vs dirty-frontier delta \
+         ({} on n_mnist, {N_WINDOWS} windows/stream, max_frac {max_frac})\n",
+        spec.name
+    );
+
+    let mut sink = 0usize;
+    let mut curve = Vec::new();
+    let mut speedup_at_09 = f64::NAN;
+    for overlap in [0.0, 0.5, 0.9, 0.99] {
+        let wins = windows(&profile, overlap, 1000 + (overlap * 100.0) as u64);
+
+        // Bit-exactness first (also a warm-up): the delta path must equal
+        // the full path on every window, including fallback boundaries.
+        let mut ctx = ExecCtx::new();
+        let mut cache = DeltaCache::new();
+        let mut hits = 0usize;
+        let mut fulls = 0usize;
+        let (mut dirty_sum, mut recomputed_sum) = (0.0f64, 0.0f64);
+        for m in &wins {
+            let full = plan.classify(&mut ctx, m);
+            let (delta, outcome) = plan.classify_delta(&mut ctx, &mut cache, m, max_frac);
+            assert_eq!(full, delta, "delta path must be bit-exact (overlap {overlap})");
+            if outcome.is_delta() {
+                hits += 1;
+                dirty_sum += outcome.dirty_frac();
+                recomputed_sum += outcome.recomputed_frac();
+            } else {
+                fulls += 1;
+            }
+            sink += delta;
+        }
+
+        // Full-recompute throughput over the same stream.
+        let s = bench(warmup, iters, || {
+            for m in &wins {
+                sink += plan.classify(&mut ctx, m);
+            }
+        });
+        let full_rps = req_per_s(N_WINDOWS, s.mean());
+
+        // Delta throughput (cache already warm), then steady-state allocs.
+        let s = bench(warmup, iters, || {
+            for m in &wins {
+                sink += plan.classify_delta(&mut ctx, &mut cache, m, max_frac).0;
+            }
+        });
+        let delta_rps = req_per_s(N_WINDOWS, s.mean());
+        let a0 = CountingAllocator::thread_allocs();
+        for m in &wins {
+            sink += plan.classify_delta(&mut ctx, &mut cache, m, max_frac).0;
+        }
+        let allocs = (CountingAllocator::thread_allocs() - a0) as f64 / N_WINDOWS as f64;
+
+        let speedup = delta_rps / full_rps;
+        if overlap == 0.9 {
+            speedup_at_09 = speedup;
+        }
+        println!(
+            "overlap {overlap:4}: full {full_rps:9.0} req/s | delta {delta_rps:9.0} req/s \
+             ({speedup:5.2}x) | {hits:2} hit(s) / {fulls:2} full | {allocs:5.1} allocs/window",
+        );
+        curve.push(Json::obj(vec![
+            ("overlap", Json::Num(overlap)),
+            ("full_req_per_s", Json::Num(full_rps)),
+            ("delta_req_per_s", Json::Num(delta_rps)),
+            ("speedup", Json::Num(speedup)),
+            ("delta_hits", Json::Num(hits as f64)),
+            ("delta_fulls", Json::Num(fulls as f64)),
+            (
+                "mean_dirty_frac",
+                Json::Num(if hits == 0 { 0.0 } else { dirty_sum / hits as f64 }),
+            ),
+            (
+                "mean_recomputed_frac",
+                Json::Num(if hits == 0 { 0.0 } else { recomputed_sum / hits as f64 }),
+            ),
+            ("delta_allocs_per_window", Json::Num(allocs)),
+        ]));
+    }
+
+    if assert_speedup {
+        assert!(
+            speedup_at_09 >= 2.0,
+            "acceptance: delta must be >= 2x full at 0.9 overlap (got {speedup_at_09:.2}x)"
+        );
+        println!("\nacceptance: {speedup_at_09:.2}x at 0.9 overlap (>= 2x required) — ok");
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("delta".into())),
+        ("model", Json::Str(spec.name.clone())),
+        ("dataset", Json::Str(profile.name.into())),
+        ("n_windows", Json::Num(N_WINDOWS as f64)),
+        ("events_per_window", Json::Num(EVENTS_PER_WINDOW as f64)),
+        ("max_frac", Json::Num(max_frac)),
+        ("iters", Json::Num(iters as f64)),
+        ("curve", Json::Arr(curve)),
+    ]);
+    let path = std::env::var("ESDA_BENCH_OUT")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_delta.json").into());
+    std::fs::write(&path, format!("{out}\n")).expect("write bench json");
+    println!("\nwrote {path} (sink {sink})");
+}

@@ -13,9 +13,10 @@
 
 use crate::arch::{simulate_inference, HwConfig};
 use crate::model::exec::argmax;
-use crate::model::plan::{ExecCtx, ExecPlan};
+use crate::model::plan::{DeltaCache, DeltaOutcome, ExecCtx, ExecPlan, FullReason};
 use crate::model::quant::QuantizedNet;
 use crate::sparse::SparseMap;
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::{Arc, Mutex};
 
@@ -30,6 +31,30 @@ pub struct Classification {
     pub pred: usize,
     /// Simulated hardware cycles (simulator backend only).
     pub sim_cycles: Option<u64>,
+}
+
+/// Per-request outcome of a delta-capable classification (what the
+/// incremental path did, for the serving metrics/report).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeltaStatus {
+    /// Backend has no delta path, or the request carried no stream id.
+    NotApplicable,
+    /// The incremental path ran; fractions per [`DeltaOutcome`].
+    Hit { dirty_frac: f64, recomputed_frac: f64 },
+    /// Full recompute, with the reason (cache refreshed along the way).
+    Full(FullReason),
+}
+
+impl DeltaStatus {
+    fn from_outcome(o: DeltaOutcome) -> DeltaStatus {
+        match o {
+            DeltaOutcome::Delta { .. } => DeltaStatus::Hit {
+                dirty_frac: o.dirty_frac(),
+                recomputed_frac: o.recomputed_frac(),
+            },
+            DeltaOutcome::Full(r) => DeltaStatus::Full(r),
+        }
+    }
 }
 
 /// Backend failure (simulator deadlock/timeout, PJRT error, …).
@@ -63,6 +88,34 @@ pub trait Backend: Send + Sync {
     fn classify_batch(&self, maps: &[SparseMap<f32>]) -> Vec<Result<Classification, BackendError>> {
         maps.iter().map(|m| self.classify(m)).collect()
     }
+
+    /// True when [`Backend::classify_batch_delta`] can reuse per-stream
+    /// cached state (the router then applies sticky routing so a stream
+    /// keeps landing on the worker that holds its cache warm).
+    fn supports_delta(&self) -> bool {
+        false
+    }
+
+    /// Classify a micro-batch with per-request stream identities
+    /// (`streams[i]` labels `maps[i]`; `None` = no stream identity). The
+    /// default delegates to [`Backend::classify_batch`] and reports
+    /// [`DeltaStatus::NotApplicable`]; delta-capable backends override it
+    /// to run incremental execution against each stream's cached window.
+    /// Results must be **bit-identical** to the non-delta path.
+    fn classify_batch_delta(
+        &self,
+        streams: &[Option<u64>],
+        maps: &[SparseMap<f32>],
+    ) -> Vec<Result<(Classification, DeltaStatus), BackendError>> {
+        debug_assert_eq!(streams.len(), maps.len());
+        self.classify_batch(maps)
+            .into_iter()
+            .map(|r| r.map(|c| (c, DeltaStatus::NotApplicable)))
+            .collect()
+    }
+
+    /// Drop any cached per-stream state (no-op without a delta path).
+    fn evict_stream(&self, _stream: u64) {}
 }
 
 /// Functional int8 backend (fast; no cycle model). The network is compiled
@@ -76,12 +129,49 @@ pub struct Functional {
     /// Warm execution contexts, one per concurrently-classifying thread
     /// (grown on demand; the lock is held only to pop/push).
     ctxs: Mutex<Vec<ExecCtx>>,
+    /// Incremental-execution engine ([`Functional::with_delta`]).
+    delta: Option<DeltaEngine>,
 }
+
+/// Per-stream cache store for incremental execution. The store may be
+/// shared across every replica of a pool class
+/// ([`ReplicaSpec::functional_delta`]): a [`DeltaCache`] is self-consistent
+/// (its cached input and layer activations always come from one coherent
+/// previous window), so any replica can serve any stream correctly — at
+/// worst a non-sticky hop diffs against an older window and recomputes
+/// more. Stickiness is purely a performance property, never a correctness
+/// one, which is what makes replica retirement trivially safe.
+pub type DeltaStore = Arc<Mutex<HashMap<u64, DeltaCache>>>;
+
+struct DeltaEngine {
+    max_frac: f64,
+    caches: DeltaStore,
+}
+
+/// Cap on concurrently-cached streams per store: beyond this, an arbitrary
+/// entry is evicted (the evicted stream simply cold-starts on its next
+/// window). Bounds memory for long-tail stream populations.
+const MAX_CACHED_STREAMS: usize = 1024;
 
 impl Functional {
     pub fn new(qnet: QuantizedNet) -> Functional {
         let plan = ExecPlan::compile(&qnet);
-        Functional { plan, ctxs: Mutex::new(Vec::new()) }
+        Functional { plan, ctxs: Mutex::new(Vec::new()), delta: None }
+    }
+
+    /// Enable incremental (delta) execution across overlapping windows:
+    /// requests carrying a stream id diff against that stream's cached
+    /// previous window and recompute only changed sites, falling back to a
+    /// full pass when the changed fraction exceeds `max_frac`.
+    pub fn with_delta(self, max_frac: f64) -> Functional {
+        self.with_delta_store(max_frac, Arc::new(Mutex::new(HashMap::new())))
+    }
+
+    /// [`Functional::with_delta`] against a caller-provided (possibly
+    /// shared) stream-cache store.
+    pub fn with_delta_store(mut self, max_frac: f64, caches: DeltaStore) -> Functional {
+        self.delta = Some(DeltaEngine { max_frac, caches });
+        self
     }
 
     /// Run `f` with a pooled execution context; the context returns to the
@@ -112,6 +202,66 @@ impl Backend for Functional {
                 .map(|m| Ok(Classification { pred: plan.classify(ctx, m), sim_cycles: None }))
                 .collect()
         })
+    }
+
+    fn supports_delta(&self) -> bool {
+        self.delta.is_some()
+    }
+
+    fn classify_batch_delta(
+        &self,
+        streams: &[Option<u64>],
+        maps: &[SparseMap<f32>],
+    ) -> Vec<Result<(Classification, DeltaStatus), BackendError>> {
+        debug_assert_eq!(streams.len(), maps.len());
+        let Some(engine) = &self.delta else {
+            return streams
+                .iter()
+                .zip(maps)
+                .map(|(_, m)| {
+                    self.with_ctx(|plan, ctx| {
+                        let pred = plan.classify(ctx, m);
+                        Ok((Classification { pred, sim_cycles: None }, DeltaStatus::NotApplicable))
+                    })
+                })
+                .collect();
+        };
+        self.with_ctx(|plan, ctx| {
+            streams
+                .iter()
+                .zip(maps)
+                .map(|(stream, m)| {
+                    let (pred, status) = match stream {
+                        None => (plan.classify(ctx, m), DeltaStatus::NotApplicable),
+                        Some(id) => {
+                            // Take the stream's cache *out* of the store so
+                            // the lock is not held during execution; other
+                            // replicas hitting the same stream concurrently
+                            // just cold-start (correct, merely slower).
+                            let cached = engine.caches.lock().unwrap().remove(id);
+                            let mut cache = cached.unwrap_or_default();
+                            let (pred, outcome) =
+                                plan.classify_delta(ctx, &mut cache, m, engine.max_frac);
+                            let mut store = engine.caches.lock().unwrap();
+                            if store.len() >= MAX_CACHED_STREAMS {
+                                if let Some(&victim) = store.keys().next() {
+                                    store.remove(&victim);
+                                }
+                            }
+                            store.insert(*id, cache);
+                            (pred, DeltaStatus::from_outcome(outcome))
+                        }
+                    };
+                    Ok((Classification { pred, sim_cycles: None }, status))
+                })
+                .collect()
+        })
+    }
+
+    fn evict_stream(&self, stream: u64) {
+        if let Some(engine) = &self.delta {
+            engine.caches.lock().unwrap().remove(&stream);
+        }
     }
 }
 
@@ -231,6 +381,20 @@ impl ReplicaSpec {
     /// Default batch affinity 4: the arena amortizes per-visit setup.
     pub fn functional(count: usize, qnet: QuantizedNet) -> ReplicaSpec {
         ReplicaSpec::new("func", count, 4, move |_| Ok(Box::new(Functional::new(qnet.clone()))))
+    }
+
+    /// Functional replicas with incremental (delta) execution enabled.
+    /// All replicas of the class — including ones the autoscaler builds
+    /// later — share **one** stream-cache store, so scaling a replica down
+    /// loses no cached windows: its streams rehome to a sibling and keep
+    /// hitting (the move shows up as a sticky-routing miss, not a delta
+    /// cold-start).
+    pub fn functional_delta(count: usize, qnet: QuantizedNet, max_frac: f64) -> ReplicaSpec {
+        let store: DeltaStore = Arc::new(Mutex::new(HashMap::new()));
+        ReplicaSpec::new("func", count, 4, move |_| {
+            let f = Functional::new(qnet.clone()).with_delta_store(max_frac, Arc::clone(&store));
+            Ok(Box::new(f))
+        })
     }
 
     /// Cycle-level simulator replicas. Batch affinity 1: the simulator
@@ -536,6 +700,69 @@ mod tests {
         assert_sync::<Functional>();
         assert_sync::<Simulator>();
         assert_sync::<Dense>();
+    }
+
+    /// Delta-enabled classification is bit-equal to the plain path while
+    /// reporting cache status: cold start on the first window of a stream,
+    /// hits on subsequent overlapping windows, `NotApplicable` without a
+    /// stream identity.
+    #[test]
+    fn functional_delta_matches_plain_and_reports_status() {
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let plain = Functional::new(qnet.clone());
+        let delta = Functional::new(qnet).with_delta(0.35);
+        assert!(!plain.supports_delta());
+        assert!(delta.supports_delta());
+        let mut rng = Rng::new(9);
+        let es = profile.sample(3, &mut rng);
+        // Overlapping windows: each step drops one more trailing event.
+        let maps: Vec<_> = (0..5)
+            .map(|t| histogram2_norm(&es[..es.len() - t], profile.w, profile.h, 8.0))
+            .collect();
+        let mut statuses = Vec::new();
+        for (t, m) in maps.iter().enumerate() {
+            let stream = if t == 4 { None } else { Some(7u64) };
+            let got = delta.classify_batch_delta(&[stream], std::slice::from_ref(m));
+            let (c, status) = got.into_iter().next().unwrap().unwrap();
+            assert_eq!(c.pred, plain.classify(m).unwrap().pred, "step {t} diverged");
+            statuses.push(status);
+        }
+        assert_eq!(statuses[0], DeltaStatus::Full(FullReason::ColdCache));
+        assert!(
+            statuses[1..4].iter().all(|s| matches!(s, DeltaStatus::Hit { .. })),
+            "{statuses:?}"
+        );
+        assert_eq!(statuses[4], DeltaStatus::NotApplicable);
+        // Evicting the stream forces the next window back to a cold start.
+        delta.evict_stream(7);
+        let got = delta.classify_batch_delta(&[Some(7)], std::slice::from_ref(&maps[0]));
+        let (_, status) = got.into_iter().next().unwrap().unwrap();
+        assert_eq!(status, DeltaStatus::Full(FullReason::ColdCache));
+    }
+
+    /// Two Functional instances sharing one store (the
+    /// `functional_delta` replica arrangement): a stream warmed on one
+    /// replica hits on the other, so replica retirement loses no state.
+    #[test]
+    fn functional_delta_store_is_shared_across_replicas() {
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let store: DeltaStore = Arc::new(Mutex::new(HashMap::new()));
+        let a = Functional::new(qnet.clone()).with_delta_store(0.35, Arc::clone(&store));
+        let b = Functional::new(qnet).with_delta_store(0.35, Arc::clone(&store));
+        let mut rng = Rng::new(10);
+        let es = profile.sample(1, &mut rng);
+        let m0 = histogram2_norm(&es, profile.w, profile.h, 8.0);
+        let m1 = histogram2_norm(&es[..es.len() - 1], profile.w, profile.h, 8.0);
+        let (_, s0) = a.classify_batch_delta(&[Some(42)], std::slice::from_ref(&m0))
+            .into_iter().next().unwrap().unwrap();
+        assert_eq!(s0, DeltaStatus::Full(FullReason::ColdCache));
+        let (c1, s1) = b.classify_batch_delta(&[Some(42)], std::slice::from_ref(&m1))
+            .into_iter().next().unwrap().unwrap();
+        assert!(matches!(s1, DeltaStatus::Hit { .. }), "{s1:?}");
+        assert_eq!(c1.pred, b.classify(&m1).unwrap().pred);
+        assert_eq!(store.lock().unwrap().len(), 1);
     }
 
     /// A stub Dense backend surfaces engine errors instead of panicking.

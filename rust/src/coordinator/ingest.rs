@@ -72,6 +72,13 @@ pub struct SourcedRequest {
     /// table; [`DEFAULT_TENANT`] for single-owner sources). Admission
     /// quotas, per-tenant SLOs, and the per-tenant report key on this.
     pub tenant: usize,
+    /// Stable identity of the event stream this window came from, when the
+    /// source has one (a TCP connection, a synthetic per-stream camera).
+    /// Consecutive windows of one stream overlap heavily, so the router
+    /// sticky-routes on this and delta-capable backends diff against the
+    /// stream's cached previous window. `None` (datagram/replay/tail
+    /// sources) always takes the full-recompute path.
+    pub stream: Option<u64>,
 }
 
 /// Ingestion failure: unreadable/corrupt input (fatal), or a sample the
@@ -213,11 +220,38 @@ pub struct SyntheticSource {
     rng: Rng,
     n: usize,
     emitted: usize,
+    /// Fraction of each window's events carried over from the stream's
+    /// previous window (0 = independent windows, the classic mode).
+    overlap: f64,
+    /// Number of interleaved synthetic streams in overlap mode.
+    streams: usize,
+    /// Previous window per stream (overlap mode only).
+    prev: Vec<Vec<Event>>,
 }
 
 impl SyntheticSource {
     pub fn new(profile: DatasetProfile, n: usize, seed: u64) -> SyntheticSource {
-        SyntheticSource { profile, rng: Rng::new(seed), n, emitted: 0 }
+        SyntheticSource {
+            profile,
+            rng: Rng::new(seed),
+            n,
+            emitted: 0,
+            overlap: 0.0,
+            streams: 1,
+            prev: Vec::new(),
+        }
+    }
+
+    /// Emit `streams` interleaved sliding-window streams instead of
+    /// independent windows: each stream keeps a fixed class, and every
+    /// window after its first carries over `frac` of the previous window's
+    /// events (evenly strided), topped up with fresh ones. Deterministic
+    /// per seed; requests are stamped with a synthetic stream id.
+    pub fn with_overlap(mut self, frac: f64, streams: usize) -> SyntheticSource {
+        self.overlap = frac.clamp(0.0, 1.0);
+        self.streams = streams.max(1);
+        self.prev = vec![Vec::new(); self.streams];
+        self
     }
 }
 
@@ -234,12 +268,66 @@ impl EventSource for SyntheticSource {
         if self.emitted >= self.n {
             return Ok(None);
         }
+        if self.overlap > 0.0 {
+            let s = self.emitted % self.streams;
+            // A stream is one camera watching one scene: its class stays
+            // fixed so consecutive windows genuinely correlate.
+            let label = s % self.profile.n_classes;
+            let fresh = self.profile.sample(label, &mut self.rng);
+            let events = if self.prev[s].is_empty() {
+                fresh
+            } else {
+                let total = fresh.len().max(1);
+                let keep = ((self.overlap * total as f64).round() as usize)
+                    .min(self.prev[s].len())
+                    .min(total);
+                // Evenly strided carry-over keeps the previous window's
+                // spatial distribution; both halves are time-sorted, so a
+                // linear merge yields a sorted window.
+                let prev = &self.prev[s];
+                let kept: Vec<Event> =
+                    (0..keep).map(|i| prev[i * prev.len() / keep.max(1)]).collect();
+                let fresh_n = total - keep;
+                let mut merged = Vec::with_capacity(total);
+                let (mut a, mut b) = (0, 0);
+                while a < kept.len() || b < fresh_n {
+                    let take_kept = match (kept.get(a), (b < fresh_n).then(|| fresh[b])) {
+                        (Some(ka), Some(fb)) => ka.t_us <= fb.t_us,
+                        (Some(_), None) => true,
+                        _ => false,
+                    };
+                    if take_kept {
+                        merged.push(kept[a]);
+                        a += 1;
+                    } else {
+                        merged.push(fresh[b]);
+                        b += 1;
+                    }
+                }
+                merged
+            };
+            self.prev[s] = events.clone();
+            self.emitted += 1;
+            return Ok(Some(SourcedRequest {
+                label,
+                events,
+                arrival: Instant::now(),
+                tenant: DEFAULT_TENANT,
+                stream: Some(s as u64),
+            }));
+        }
         let label = self.emitted % self.profile.n_classes;
         // The scene generator steps time forward, so its events are
         // sorted and in-bounds by construction — no validation pass.
         let events = self.profile.sample(label, &mut self.rng);
         self.emitted += 1;
-        Ok(Some(SourcedRequest { label, events, arrival: Instant::now(), tenant: DEFAULT_TENANT }))
+        Ok(Some(SourcedRequest {
+            label,
+            events,
+            arrival: Instant::now(),
+            tenant: DEFAULT_TENANT,
+            stream: None,
+        }))
     }
 }
 
@@ -455,7 +543,13 @@ impl EventSource for ReplaySource {
             std::thread::sleep(due - now);
         }
         self.emitted += 1;
-        Ok(Some(SourcedRequest { label, events, arrival: due, tenant: DEFAULT_TENANT }))
+        Ok(Some(SourcedRequest {
+            label,
+            events,
+            arrival: due,
+            tenant: DEFAULT_TENANT,
+            stream: None,
+        }))
     }
 }
 
@@ -637,6 +731,7 @@ impl EventSource for TailSource {
                         events,
                         arrival: Instant::now(),
                         tenant: DEFAULT_TENANT,
+                        stream: None,
                     }));
                 }
             }
@@ -689,6 +784,60 @@ mod tests {
             assert!(is_time_sorted(&r.events));
         }
         assert!(src.next_request().unwrap().is_none(), "stream must end at n");
+    }
+
+    /// Plain mode stamps no stream identity; the classic request stream is
+    /// unchanged by the overlap machinery existing.
+    #[test]
+    fn synthetic_source_plain_mode_has_no_stream() {
+        let profile = DatasetProfile::n_mnist();
+        let mut src = SyntheticSource::new(profile, 3, 42);
+        while let Some(r) = src.next_request().unwrap() {
+            assert_eq!(r.stream, None);
+        }
+    }
+
+    /// Overlap mode: streams cycle round-robin with fixed per-stream
+    /// labels, windows stay valid, and after the first window of a stream
+    /// roughly `frac` of the previous window's pixels recur.
+    #[test]
+    fn synthetic_source_overlap_mode_produces_overlapping_streams() {
+        let profile = DatasetProfile::n_mnist();
+        let n_classes = profile.n_classes;
+        let mut src = SyntheticSource::new(profile, 12, 7).with_overlap(0.9, 3);
+        let mut prev: Vec<Option<Vec<Event>>> = vec![None; 3];
+        for i in 0..12 {
+            let r = src.next_request().unwrap().expect("request");
+            let s = (i % 3) as u64;
+            assert_eq!(r.stream, Some(s));
+            assert_eq!(r.label, (s as usize) % n_classes);
+            assert!(is_time_sorted(&r.events));
+            assert!(!r.events.is_empty());
+            if let Some(p) = &prev[s as usize] {
+                let pixels: std::collections::HashSet<(u16, u16)> =
+                    p.iter().map(|e| (e.x, e.y)).collect();
+                let shared = r.events.iter().filter(|e| pixels.contains(&(e.x, e.y))).count();
+                assert!(
+                    shared as f64 >= 0.5 * r.events.len() as f64,
+                    "window {i}: only {shared}/{} events on previously-active pixels",
+                    r.events.len()
+                );
+            }
+            prev[s as usize] = Some(r.events);
+        }
+        assert!(src.next_request().unwrap().is_none());
+    }
+
+    /// Overlap mode is deterministic per seed.
+    #[test]
+    fn synthetic_source_overlap_mode_is_deterministic() {
+        let mk = || SyntheticSource::new(DatasetProfile::n_mnist(), 6, 99).with_overlap(0.5, 2);
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..6 {
+            let (ra, rb) = (a.next_request().unwrap().unwrap(), b.next_request().unwrap().unwrap());
+            assert_eq!(ra.events, rb.events);
+            assert_eq!((ra.label, ra.stream), (rb.label, rb.stream));
+        }
     }
 
     #[test]

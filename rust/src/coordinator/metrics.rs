@@ -176,9 +176,35 @@ pub struct CostSnapshot {
 }
 
 impl CostSnapshot {
+    /// Age at which persisted per-bucket costs expire (1 day): bucket
+    /// estimates are fine-grained enough to drift with load mix, thermal
+    /// state, and co-tenancy, so yesterday's buckets are probe-worthy
+    /// again.
+    pub const BUCKET_TTL_SECS: f64 = 86_400.0;
+    /// Age at which even the class-wide mean expires (7 days): past a
+    /// week the hardware/build may have changed outright.
+    pub const GLOBAL_TTL_SECS: f64 = 604_800.0;
+
     /// True when nothing was ever observed (seeding from it is a no-op).
     pub fn is_empty(&self) -> bool {
         self.global.is_none() && self.buckets.iter().all(|b| b.is_none())
+    }
+
+    /// Tiered staleness decay, pure in the snapshot's age: per-bucket
+    /// estimates survive [`CostSnapshot::BUCKET_TTL_SECS`], the class-wide
+    /// mean survives [`CostSnapshot::GLOBAL_TTL_SECS`]. An unknown age
+    /// (`f64::INFINITY` — e.g. a profile with no save stamp) decays
+    /// everything: seeding from state of unknowable vintage is worse than
+    /// probing.
+    pub fn decayed(&self, age_secs: f64) -> CostSnapshot {
+        let mut out = self.clone();
+        if !(age_secs < Self::BUCKET_TTL_SECS) {
+            out.buckets.iter_mut().for_each(|b| *b = None);
+        }
+        if !(age_secs < Self::GLOBAL_TTL_SECS) {
+            out.global = None;
+        }
+        out
     }
 
     pub fn to_json(&self) -> Json {
@@ -215,19 +241,40 @@ impl CostSnapshot {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CostProfile {
     pub classes: BTreeMap<String, CostSnapshot>,
+    /// Unix seconds when [`CostProfile::save`] wrote the profile (`None`
+    /// for in-memory profiles and pre-versioning files). Drives the
+    /// staleness decay applied at seeding ([`CostProfile::age_secs`] +
+    /// [`CostSnapshot::decayed`]).
+    pub saved_unix: Option<f64>,
 }
 
 impl CostProfile {
     /// Profile format version (bump on incompatible layout changes).
-    pub const VERSION: f64 = 1.0;
+    /// 1.1 added the `saved_unix` stamp.
+    pub const VERSION: f64 = 1.1;
 
     pub fn is_empty(&self) -> bool {
         self.classes.values().all(|s| s.is_empty())
     }
 
+    /// Seconds since the profile was saved: `f64::INFINITY` when it never
+    /// was (or carries a garbage stamp), so unstamped state decays fully;
+    /// a stamp from the future (clock skew) reads as fresh, not negative.
+    pub fn age_secs(&self) -> f64 {
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        match self.saved_unix {
+            Some(t) if t.is_finite() => (now - t).max(0.0),
+            _ => f64::INFINITY,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::Num(Self::VERSION)),
+            ("saved_unix", Json::opt_num(self.saved_unix)),
             (
                 "classes",
                 Json::Obj(
@@ -237,11 +284,24 @@ impl CostProfile {
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<CostProfile, String> {
+    /// Parse a profile document. A structurally broken document is an
+    /// error; a *version mismatch* is not — the profile is advisory
+    /// state, and an old file must never stop a serving run. Mismatches
+    /// yield an empty profile plus a warning for the caller to surface,
+    /// so nothing stale seeds the routers.
+    pub fn from_json(j: &Json) -> Result<(CostProfile, Option<String>), String> {
         let version = j.req("version")?.as_f64().ok_or("'version' must be a number")?;
         if version != Self::VERSION {
-            return Err(format!("unsupported cost-profile version {version}"));
+            let warn = format!(
+                "cost-profile version {version} != supported {} — ignoring persisted costs",
+                Self::VERSION
+            );
+            return Ok((CostProfile::default(), Some(warn)));
         }
+        let saved_unix = match j.get("saved_unix") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or("'saved_unix' must be a number or null")?),
+        };
         let classes = j
             .req("classes")?
             .as_obj()
@@ -249,11 +309,13 @@ impl CostProfile {
             .iter()
             .map(|(k, v)| Ok((k.clone(), CostSnapshot::from_json(v)?)))
             .collect::<Result<BTreeMap<_, _>, String>>()?;
-        Ok(CostProfile { classes })
+        Ok((CostProfile { classes, saved_unix }, None))
     }
 
-    /// Load a profile from disk (parse errors name the file).
-    pub fn load(path: &Path) -> Result<CostProfile, String> {
+    /// Load a profile from disk (parse errors name the file; a version
+    /// mismatch is a warning, not an error — see
+    /// [`CostProfile::from_json`]).
+    pub fn load(path: &Path) -> Result<(CostProfile, Option<String>), String> {
         let raw = std::fs::read_to_string(path)
             .map_err(|e| format!("cost profile {}: {e}", path.display()))?;
         let j = crate::util::json::parse(&raw)
@@ -279,7 +341,13 @@ impl CostProfile {
             .and_then(|n| n.to_str())
             .ok_or_else(|| format!("cost profile {}: not a file path", path.display()))?;
         let tmp = path.with_file_name(format!("{file_name}.tmp"));
-        std::fs::write(&tmp, self.to_json().to_string()).map_err(ctx)?;
+        // Stamp the write time so the next run can age what it seeds.
+        let mut stamped = self.clone();
+        stamped.saved_unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .ok()
+            .map(|d| d.as_secs_f64());
+        std::fs::write(&tmp, stamped.to_json().to_string()).map_err(ctx)?;
         std::fs::rename(&tmp, path).map_err(ctx)
     }
 }
@@ -532,6 +600,88 @@ impl WorkerStats {
     }
 }
 
+/// Books for incremental (delta) execution across overlapping windows and
+/// the sticky routing that keeps a stream's cache warm. A *delta attempt*
+/// is a request that reached a delta-capable backend with a stream
+/// identity; it lands in exactly one of hit / cold / geometry /
+/// over-threshold. `not_applicable` counts everything else (no stream, or
+/// a backend without delta support). The sticky counters book the router's
+/// affinity decisions, which are independent of the execution outcome —
+/// a non-sticky hop can still delta-hit off the shared cache store.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeltaMetrics {
+    /// Requests served incrementally (diff + partial recompute).
+    pub hits: usize,
+    /// Full recomputes: the stream had no usable cached window.
+    pub full_cold: usize,
+    /// Full recomputes: the cached window's geometry/plan changed.
+    pub full_geometry: usize,
+    /// Full recomputes: the dirty fraction exceeded the threshold.
+    pub full_over_threshold: usize,
+    /// Requests outside the delta machinery entirely.
+    pub not_applicable: usize,
+    /// Σ dirty-input-site fraction over hits.
+    pub dirty_frac_sum: f64,
+    /// Σ recomputed-site fraction over hits.
+    pub recomputed_frac_sum: f64,
+    /// Sticky routing: requests delivered to their stream's affine worker.
+    pub sticky_hits: usize,
+    /// Sticky routing: stream had no affinity yet (first sight).
+    pub sticky_cold: usize,
+    /// Sticky routing: the affine worker was retired (entry dropped,
+    /// request cost-routed).
+    pub sticky_retired: usize,
+    /// Sticky routing: the affine worker's queue was full (request
+    /// cost-routed; affinity kept).
+    pub sticky_capacity: usize,
+}
+
+impl DeltaMetrics {
+    /// Requests that entered the delta machinery at all.
+    pub fn attempts(&self) -> usize {
+        self.hits + self.full_cold + self.full_geometry + self.full_over_threshold
+    }
+
+    /// Fraction of delta attempts served incrementally (NaN when none).
+    pub fn hit_rate(&self) -> f64 {
+        if self.attempts() == 0 {
+            return f64::NAN;
+        }
+        self.hits as f64 / self.attempts() as f64
+    }
+
+    /// Mean dirty-input fraction across hits (NaN when none).
+    pub fn mean_dirty_frac(&self) -> f64 {
+        if self.hits == 0 {
+            return f64::NAN;
+        }
+        self.dirty_frac_sum / self.hits as f64
+    }
+
+    /// Mean recomputed-site fraction across hits (NaN when none).
+    pub fn mean_recomputed_frac(&self) -> f64 {
+        if self.hits == 0 {
+            return f64::NAN;
+        }
+        self.recomputed_frac_sum / self.hits as f64
+    }
+
+    /// Field-wise accumulate (per-worker books → run totals).
+    pub fn merge(&mut self, o: &DeltaMetrics) {
+        self.hits += o.hits;
+        self.full_cold += o.full_cold;
+        self.full_geometry += o.full_geometry;
+        self.full_over_threshold += o.full_over_threshold;
+        self.not_applicable += o.not_applicable;
+        self.dirty_frac_sum += o.dirty_frac_sum;
+        self.recomputed_frac_sum += o.recomputed_frac_sum;
+        self.sticky_hits += o.sticky_hits;
+        self.sticky_cold += o.sticky_cold;
+        self.sticky_retired += o.sticky_retired;
+        self.sticky_capacity += o.sticky_capacity;
+    }
+}
+
 /// Aggregated serving metrics.
 #[derive(Debug)]
 pub struct Metrics {
@@ -584,6 +734,9 @@ pub struct Metrics {
     /// rewrites at shutdown (empty snapshots for classes that never
     /// observed, e.g. the routerless single-class path).
     pub cost_profile: CostProfile,
+    /// Incremental-execution and sticky-routing books (all zero when
+    /// `--delta` was off).
+    pub delta: DeltaMetrics,
     /// Wall-clock duration of the completed run in seconds (0 until the
     /// runtime finalizes it — see [`Metrics::wall_seconds`]).
     pub wall_s: f64,
@@ -609,6 +762,7 @@ impl Default for Metrics {
             batch_sizes: Vec::new(),
             scaling_events: Vec::new(),
             cost_profile: CostProfile::default(),
+            delta: DeltaMetrics::default(),
             wall_s: 0.0,
         }
     }
@@ -1060,11 +1214,13 @@ mod tests {
             }
             let profile = CostProfile {
                 classes: [("c".to_string(), m.snapshot())].into_iter().collect(),
+                saved_unix: Some(1_700_000_000.0),
             };
             let doc = profile.to_json().to_string();
             let parsed = crate::util::json::parse(&doc)
                 .unwrap_or_else(|e| panic!("invalid profile JSON: {e}\n{doc}"));
-            let back = CostProfile::from_json(&parsed).expect("well-formed profile");
+            let (back, warn) = CostProfile::from_json(&parsed).expect("well-formed profile");
+            assert_eq!(warn, None, "doc: {doc}");
             assert_eq!(back, profile, "doc: {doc}");
             let fresh = CostModel::new();
             fresh.seed(&back.classes["c"]);
@@ -1083,25 +1239,92 @@ mod tests {
         let m = CostModel::new();
         m.observe(3, 0.002);
         m.observe(5, 0.008);
-        let profile =
-            CostProfile { classes: [("func".to_string(), m.snapshot())].into_iter().collect() };
+        let profile = CostProfile {
+            classes: [("func".to_string(), m.snapshot())].into_iter().collect(),
+            saved_unix: None,
+        };
         let dir = std::env::temp_dir().join(format!("esda_costprof_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("profile.json");
         profile.save(&path).unwrap();
-        let back = CostProfile::load(&path).unwrap();
-        assert_eq!(back, profile);
+        let (back, warn) = CostProfile::load(&path).unwrap();
+        assert_eq!(warn, None);
+        assert_eq!(back.classes, profile.classes);
         assert!(!back.is_empty());
+        // `save` stamped the write time, so a reload seeds fresh state.
+        assert!(back.saved_unix.is_some(), "save must stamp saved_unix");
+        assert!(back.age_secs() < 3600.0, "age {}", back.age_secs());
         // The atomic rewrite leaves no temp file behind.
         assert!(!dir.join("profile.json.tmp").exists(), "temp file must be renamed away");
-        // Corrupt file and wrong version both fail with the path named.
+        // Corrupt file still fails hard, with the path named.
         std::fs::write(&path, "{not json").unwrap();
         let err = CostProfile::load(&path).unwrap_err();
         assert!(err.contains("profile.json"), "{err}");
+        // A version mismatch is lenient: empty profile + warning, so an
+        // old file never blocks serving (regression — this used to Err).
         std::fs::write(&path, r#"{"version": 99, "classes": {}}"#).unwrap();
-        let err = CostProfile::load(&path).unwrap_err();
-        assert!(err.contains("version"), "{err}");
+        let (old, warn) = CostProfile::load(&path).unwrap();
+        assert!(old.is_empty(), "mismatched version must seed nothing");
+        let warn = warn.expect("mismatch must carry a warning");
+        assert!(warn.contains("version 99"), "{warn}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Staleness decay tiers: fresh profiles seed everything, day-old
+    /// ones keep only the class-wide mean, week-old (or unstamped) ones
+    /// seed nothing.
+    #[test]
+    fn cost_snapshot_decay_tiers() {
+        let snap = CostSnapshot { global: Some(0.01), buckets: vec![None, Some(0.02)] };
+        let fresh = snap.decayed(10.0);
+        assert_eq!(fresh, snap, "young state survives untouched");
+        let day_old = snap.decayed(CostSnapshot::BUCKET_TTL_SECS + 1.0);
+        assert_eq!(day_old.global, Some(0.01), "global mean survives a day");
+        assert!(day_old.buckets.iter().all(|b| b.is_none()), "buckets expire after a day");
+        let week_old = snap.decayed(CostSnapshot::GLOBAL_TTL_SECS + 1.0);
+        assert!(week_old.is_empty(), "everything expires after a week");
+        assert!(snap.decayed(f64::INFINITY).is_empty(), "unknown age seeds nothing");
+        assert!(snap.decayed(f64::NAN).is_empty(), "garbage age seeds nothing");
+        // The unstamped-profile age really is unknown.
+        let p = CostProfile::default();
+        assert_eq!(p.age_secs(), f64::INFINITY);
+    }
+
+    /// Delta books: attempts partition, NaN-safe means, and the
+    /// per-worker → run-total merge.
+    #[test]
+    fn delta_metrics_rates_and_merge() {
+        let empty = DeltaMetrics::default();
+        assert_eq!(empty.attempts(), 0);
+        assert!(empty.hit_rate().is_nan(), "no attempts ⇒ NaN, not 0/0 panic");
+        assert!(empty.mean_dirty_frac().is_nan());
+        assert!(empty.mean_recomputed_frac().is_nan());
+        let mut total = DeltaMetrics {
+            hits: 3,
+            full_cold: 1,
+            dirty_frac_sum: 0.3,
+            recomputed_frac_sum: 0.6,
+            sticky_hits: 2,
+            ..Default::default()
+        };
+        let other = DeltaMetrics {
+            hits: 1,
+            full_over_threshold: 2,
+            not_applicable: 5,
+            dirty_frac_sum: 0.5,
+            recomputed_frac_sum: 0.2,
+            sticky_retired: 1,
+            ..Default::default()
+        };
+        total.merge(&other);
+        assert_eq!(total.attempts(), 3 + 1 + 1 + 2);
+        assert!((total.hit_rate() - 4.0 / 7.0).abs() < 1e-12);
+        assert!((total.mean_dirty_frac() - 0.2).abs() < 1e-12);
+        assert!((total.mean_recomputed_frac() - 0.2).abs() < 1e-12);
+        assert_eq!(
+            (total.not_applicable, total.sticky_hits, total.sticky_retired),
+            (5, 2, 1)
+        );
     }
 
     /// The sliding window reports counter growth over (roughly) its span,

@@ -37,20 +37,20 @@ pub mod queue;
 pub mod serve;
 
 pub use backend::{
-    Backend, BackendError, Classification, Dense, Functional, PoolClass, ReplicaPool,
-    ReplicaSpec, Simulator,
+    Backend, BackendError, Classification, DeltaStatus, DeltaStore, Dense, Functional,
+    PoolClass, ReplicaPool, ReplicaSpec, Simulator,
 };
 pub use ingest::{
     EventSource, IngestError, ReplaySource, SourcedRequest, SyntheticSource, TailSource,
     UnsortedPolicy, DEFAULT_TENANT,
 };
 pub use metrics::{
-    ClassStats, CostModel, CostProfile, CostSnapshot, Metrics, PercentileReport, RequestTiming,
-    ScalingEvent, SlidingWindow, TenantStats, WorkerStats,
+    ClassStats, CostModel, CostProfile, CostSnapshot, DeltaMetrics, Metrics, PercentileReport,
+    RequestTiming, ScalingEvent, SlidingWindow, TenantStats, WorkerStats,
 };
 pub use net::{decode_packet, encode_packet, NetConfig, NetSource, Packet};
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
-pub use queue::{AdmissionQueue, DropPolicy};
+pub use queue::{AdmissionQueue, DropPolicy, TryPushError};
 pub use serve::{
     run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig, PipelineError,
     Prediction, ServerConfig, ServerResult, TenantConfig,

@@ -44,7 +44,7 @@ use crate::events::{io, Event};
 use std::collections::VecDeque;
 use std::io::Read;
 use std::net::{TcpListener, TcpStream, UdpSocket};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -211,7 +211,18 @@ impl DmaBuffer {
 }
 
 /// Decode + boundary-validate one packet's bytes into an [`Item`].
-fn item_from_bytes(buf: &[u8], what: &str, w: usize, h: usize, cfg: &NetConfig) -> Item {
+/// `conn` is the carrying TCP connection's id when there is one: a
+/// connection is a stable event stream, so its packets get a stream
+/// identity of `tenant << 32 | conn` for sticky routing and delta
+/// execution. Datagrams (`None`) have no connection, hence no stream.
+fn item_from_bytes(
+    buf: &[u8],
+    what: &str,
+    w: usize,
+    h: usize,
+    cfg: &NetConfig,
+    conn: Option<u64>,
+) -> Item {
     let pkt = match decode_packet(buf) {
         Ok(p) => p,
         Err(e) => return Err(IngestError::recoverable(format!("{what}: {e}"))),
@@ -225,7 +236,14 @@ fn item_from_bytes(buf: &[u8], what: &str, w: usize, h: usize, cfg: &NetConfig) 
     }
     let mut events = pkt.events;
     validate_events(&mut events, w, h, cfg.policy, what).map_err(|e| e.with_tenant(tenant))?;
-    Ok(SourcedRequest { label: pkt.label as usize, events, arrival: Instant::now(), tenant })
+    let stream = conn.map(|c| ((tenant as u64) << 32) | (c & 0xffff_ffff));
+    Ok(SourcedRequest {
+        label: pkt.label as usize,
+        events,
+        arrival: Instant::now(),
+        tenant,
+        stream,
+    })
 }
 
 /// A socket-backed [`EventSource`]: background receive threads land
@@ -272,7 +290,7 @@ impl NetSource {
                 }
                 match sock.recv(&mut buf) {
                     Ok(n) => {
-                        let item = item_from_bytes(&buf[..n], "udp packet", w, h, &cfg);
+                        let item = item_from_bytes(&buf[..n], "udp packet", w, h, &cfg, None);
                         if let Some(batch) = dma.push(item, Instant::now()) {
                             if tx.send(batch).is_err() {
                                 return;
@@ -437,6 +455,10 @@ fn serve_connection(
     if stream.set_read_timeout(Some(cfg.poll)).is_err() {
         return;
     }
+    // Process-unique connection id: the low half of this connection's
+    // packets' stream identity (see `item_from_bytes`).
+    static NEXT_CONN: AtomicU64 = AtomicU64::new(1);
+    let conn = NEXT_CONN.fetch_add(1, Ordering::Relaxed);
     let frame_cap = PACKET_HEADER_BYTES + MAX_PACKET_EVENTS * PACKET_EVENT_BYTES;
     let mut dma = DmaBuffer::new(cfg.flush_count, cfg.flush_timeout);
     let flush = |dma: &mut DmaBuffer| {
@@ -472,7 +494,7 @@ fn serve_connection(
             }
             ReadOutcome::Stopped | ReadOutcome::Failed => return,
         }
-        let item = item_from_bytes(&frame, what, w, h, &cfg);
+        let item = item_from_bytes(&frame, what, w, h, &cfg, Some(conn));
         if let Some(batch) = dma.push(item, Instant::now()) {
             if tx.send(batch).is_err() {
                 return;
@@ -587,8 +609,15 @@ mod tests {
     fn dma_buffer_flushes_on_size_or_timeout() {
         let mut dma = DmaBuffer::new(2, Duration::from_millis(50));
         let t0 = Instant::now();
-        let req =
-            || Ok(SourcedRequest { label: 0, events: vec![], arrival: Instant::now(), tenant: 0 });
+        let req = || {
+            Ok(SourcedRequest {
+                label: 0,
+                events: vec![],
+                arrival: Instant::now(),
+                tenant: 0,
+                stream: None,
+            })
+        };
         assert!(dma.push(req(), t0).is_none(), "below the size threshold");
         assert!(dma.due(t0 + Duration::from_millis(10)).is_none(), "deadline not reached");
         let batch = dma.push(req(), t0).expect("size threshold flushes");
@@ -617,6 +646,7 @@ mod tests {
 
         let a = src.next_request().unwrap().expect("first packet");
         assert_eq!((a.label, a.tenant), (3, 0));
+        assert_eq!(a.stream, None, "datagrams carry no stream identity");
         let b = src.next_request().unwrap().expect("second packet");
         assert_eq!((b.label, b.tenant), (5, 1));
         let geom = src.next_request().unwrap_err();
@@ -652,10 +682,16 @@ mod tests {
         drop(c1);
         let mut got = Vec::new();
         while let Some(r) = src.next_request().unwrap() {
-            got.push((r.tenant, r.label));
+            let stream = r.stream.expect("tcp packets carry a stream identity");
+            assert_eq!((stream >> 32) as usize, r.tenant, "tenant rides the high half");
+            got.push((r.tenant, r.label, stream));
         }
         got.sort_unstable();
-        assert_eq!(got, vec![(0, 1), (0, 3), (1, 2)]);
+        let triples: Vec<_> = got.iter().map(|&(t, l, _)| (t, l)).collect();
+        assert_eq!(triples, vec![(0, 1), (0, 3), (1, 2)]);
+        // Same connection ⇒ same stream; different connections differ.
+        assert_eq!(got[0].2, got[1].2, "c0's two packets share a stream");
+        assert_ne!(got[0].2, got[2].2, "c0 and c1 are distinct streams");
     }
 
     #[test]

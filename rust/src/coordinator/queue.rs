@@ -46,6 +46,16 @@ struct State<T> {
     dropped: usize,
 }
 
+/// Why a non-blocking [`AdmissionQueue::try_push`] declined the item; the
+/// item rides back so the caller can redirect it.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryPushError<T> {
+    /// The queue is at capacity (and this call never blocks or evicts).
+    Full(T),
+    /// The queue is closed (or aborted) to producers.
+    Closed(T),
+}
+
 /// Bounded MPMC queue with a saturation policy and drop accounting.
 pub struct AdmissionQueue<T> {
     state: Mutex<State<T>>,
@@ -108,6 +118,25 @@ impl<T> AdmissionQueue<T> {
                 }
             }
         }
+    }
+
+    /// Non-blocking, non-evicting admission regardless of policy: admit if
+    /// a slot is free, otherwise hand the item straight back with the
+    /// reason. The sticky router uses this — a full or closed affinity
+    /// queue means "fall back to cost-aware placement", never "wait" and
+    /// never "evict someone else's work".
+    pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        if st.items.len() >= self.cap {
+            return Err(TryPushError::Full(item));
+        }
+        st.items.push_back(item);
+        st.submitted += 1;
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Take the oldest admitted request; `None` once the queue is closed
@@ -434,6 +463,22 @@ mod tests {
         assert_eq!((submitted, dropped, queued), (3, 1, 2));
         q.close();
         assert_eq!(q.push_evicting(4), Err(4));
+    }
+
+    /// `try_push` admits into free slots, reports Full without blocking or
+    /// evicting (even under DropOldest), and reports Closed after close.
+    #[test]
+    fn try_push_never_blocks_or_evicts() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(2, DropPolicy::DropOldest);
+        assert_eq!(q.try_push(1), Ok(()));
+        assert_eq!(q.try_push(2), Ok(()));
+        assert_eq!(q.try_push(3), Err(TryPushError::Full(3)));
+        assert_eq!(q.pop(), Some(1), "no eviction happened");
+        assert_eq!(q.try_push(4), Ok(()));
+        let (submitted, dropped, queued) = q.stats();
+        assert_eq!((submitted, dropped, queued), (3, 0, 2));
+        q.close();
+        assert_eq!(q.try_push(5), Err(TryPushError::Closed(5)));
     }
 
     #[test]

@@ -60,6 +60,23 @@
 //! Cost models can be **persisted** across runs ([`CostProfile`],
 //! `ServerConfig::cost_profile`): a seeded class predicts — and the SLO
 //! shed can act — from its very first request, with zero probe traffic.
+//! Persisted snapshots are **aged** at seed time ([`CostSnapshot::
+//! decayed`](super::metrics::CostSnapshot::decayed)): stale buckets (and,
+//! much later, the global mean) are dropped rather than trusted.
+//!
+//! **Incremental (delta) inference + sticky routing.** Delta-capable
+//! backends ([`Backend::supports_delta`]) cache each stream's previous
+//! window and re-execute only the sites the new window changed
+//! ([`crate::model::ExecPlan::execute_delta`] — bit-exact by
+//! construction, with a full-recompute fallback above a dirty-fraction
+//! threshold). To keep a stream's cache hot, the router first attempts a
+//! **sticky** delivery through a bounded per-worker side queue owned by
+//! the worker that served the stream last. Every miss — cold stream,
+//! retired worker, full side queue — falls back to the cost-aware route,
+//! and replicas of a class share one delta store, so a request landing
+//! elsewhere is still served correctly: stickiness buys performance,
+//! never correctness. Hits and every fallback reason are counted in
+//! [`Metrics::delta`].
 //!
 //! **Multi-tenant front door.** Every [`super::ingest::SourcedRequest`]
 //! carries a tenant id (file/synthetic sources map to the single default tenant; the
@@ -91,16 +108,18 @@
 //! from a dataset profile) and [`run_server_source`] /
 //! [`run_pool_source`] (any [`EventSource`]).
 
-use super::backend::{Backend, PoolClass, ReplicaPool};
+use super::backend::{Backend, DeltaStatus, PoolClass, ReplicaPool};
 use super::ingest::{EventSource, SyntheticSource};
 use super::metrics::{
-    ClassStats, CostModel, CostProfile, Metrics, PercentileReport, RequestTiming, ScalingEvent,
-    SlidingWindow, TenantStats, WorkerStats,
+    ClassStats, CostModel, CostProfile, DeltaMetrics, Metrics, PercentileReport, RequestTiming,
+    ScalingEvent, SlidingWindow, TenantStats, WorkerStats,
 };
-use super::queue::{AdmissionQueue, DropPolicy};
+use super::queue::{AdmissionQueue, DropPolicy, TryPushError};
 use crate::events::{repr::histogram2_norm, DatasetProfile};
+use crate::model::FullReason;
 use crate::sparse::SparseMap;
 use crate::util::panic_message;
+use std::collections::HashMap;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -155,6 +174,17 @@ pub struct ServerConfig {
     /// weighted ingress quotas, and a tenant's own `slo` overrides the
     /// global one for its requests.
     pub tenants: Vec<TenantConfig>,
+    /// Synthetic-source sliding-window overlap fraction ([`run_server`] /
+    /// [`run_pool`] only — an explicit [`EventSource`] owns its own
+    /// stream shape). 0 = independent windows (the classic source); > 0
+    /// emits `streams` interleaved per-stream sliding windows, each
+    /// window after a stream's first carrying over this fraction of its
+    /// predecessor's events — the workload shape the delta/sticky path
+    /// exists for.
+    pub overlap: f64,
+    /// Interleaved synthetic streams in overlap mode (ignored when
+    /// `overlap` is 0).
+    pub streams: usize,
 }
 
 /// One tenant of the multi-tenant front door: a display name, a fair-share
@@ -193,6 +223,8 @@ impl Default for ServerConfig {
             autoscale: None,
             cost_profile: None,
             tenants: Vec::new(),
+            overlap: 0.0,
+            streams: 1,
         }
     }
 }
@@ -300,6 +332,13 @@ struct Routed {
     /// Service seconds the router predicted for this request (NaN when no
     /// router ran or the class was unseeded at routing time).
     predicted_s: f64,
+    /// Per-stream identity for delta inference (see
+    /// [`super::ingest::SourcedRequest::stream`]); `None` = no stream.
+    stream: Option<u64>,
+    /// True when the router delivered this request over the sticky fast
+    /// path: `predicted_s` stays NaN by design, so the per-class rollup
+    /// must not count it as an unseeded probe.
+    sticky: bool,
 }
 
 impl Routed {
@@ -453,6 +492,9 @@ struct ServedRecord {
     /// Whether the request completed within its deadline (`None`: no
     /// deadline was set).
     met_deadline: Option<bool>,
+    /// Delivered via the sticky fast path (excluded from the unseeded
+    /// probe count — its NaN prediction is by design, not ignorance).
+    sticky: bool,
 }
 
 /// Per-request metadata a worker holds across the backend visit.
@@ -463,6 +505,119 @@ struct Meta {
     bucket: usize,
     predicted_s: f64,
     deadline: Option<Instant>,
+    sticky: bool,
+}
+
+/// Sticky (cache-affinity) routing state — present only when a router
+/// runs AND some class backend supports delta inference. `table`
+/// remembers which worker holds each stream's delta cache warm; `sides`
+/// holds one bounded side queue per delta-capable worker. Stickiness is a
+/// pure performance hint: every miss (cold stream, retired worker, full
+/// side queue) falls back to cost-aware routing, and replicas of a class
+/// share one delta store, so a request that lands elsewhere is still
+/// served correctly — it just pays cache traffic it could have avoided.
+struct StickyCtx {
+    /// stream id → worker that served the stream last.
+    table: Mutex<HashMap<u64, usize>>,
+    /// Live sticky targets: `(worker id, class index, side queue)`. A
+    /// retiring worker deregisters itself before draining its remainder.
+    sides: Mutex<Vec<(usize, usize, Arc<AdmissionQueue<Routed>>)>>,
+    hits: AtomicUsize,
+    miss_cold: AtomicUsize,
+    miss_retired: AtomicUsize,
+    miss_capacity: AtomicUsize,
+}
+
+impl StickyCtx {
+    fn new() -> StickyCtx {
+        StickyCtx {
+            table: Mutex::new(HashMap::new()),
+            sides: Mutex::new(Vec::new()),
+            hits: AtomicUsize::new(0),
+            miss_cold: AtomicUsize::new(0),
+            miss_retired: AtomicUsize::new(0),
+            miss_capacity: AtomicUsize::new(0),
+        }
+    }
+
+    /// Advertise worker `wid` (serving class `ci`) as a sticky target.
+    fn enroll(&self, wid: usize, ci: usize, side: &Arc<AdmissionQueue<Routed>>) {
+        self.sides.lock().unwrap().push((wid, ci, Arc::clone(side)));
+    }
+
+    /// Remember where a stream's delta cache now lives.
+    fn remember(&self, stream: u64, wid: usize) {
+        self.table.lock().unwrap().insert(stream, wid);
+    }
+
+    /// Withdraw a retiring worker from the target list. The worker closes
+    /// its side queue *after* this call, so a concurrently in-flight
+    /// sticky push bounces back ([`TryPushError::Closed`]) to the router,
+    /// which cost-routes the request to a live worker instead.
+    fn deregister(&self, wid: usize) {
+        self.sides.lock().unwrap().retain(|(w, _, _)| *w != wid);
+    }
+
+    /// Try to deliver `req` to the worker holding its stream's cache.
+    /// `None`: delivered, books updated. `Some`: handed back for
+    /// cost-aware routing, with the miss reason counted.
+    fn try_route(&self, mut req: Routed, classes: &[ClassCtx<'_>]) -> Option<Routed> {
+        let Some(stream) = req.stream else {
+            return Some(req);
+        };
+        let Some(wid) = self.table.lock().unwrap().get(&stream).copied() else {
+            self.miss_cold.fetch_add(1, Ordering::SeqCst);
+            return Some(req);
+        };
+        let entry = self
+            .sides
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(w, _, _)| *w == wid)
+            .map(|(_, ci, q)| (*ci, Arc::clone(q)));
+        let Some((ci, side)) = entry else {
+            // The worker retired since it last served this stream.
+            self.table.lock().unwrap().remove(&stream);
+            self.miss_retired.fetch_add(1, Ordering::SeqCst);
+            return Some(req);
+        };
+        // A sticky delivery is not a cost-model prediction: NaN keeps it
+        // out of the router-accuracy books, and the `sticky` flag keeps
+        // it out of the unseeded-probe count.
+        req.sticky = true;
+        req.predicted_s = f64::NAN;
+        // Backlog up *before* the push: the worker's pop decrements, and
+        // the counter must never dip below zero in between.
+        classes[ci].backlog.fetch_add(1, Ordering::SeqCst);
+        match side.try_push(req) {
+            Ok(()) => {
+                self.hits.fetch_add(1, Ordering::SeqCst);
+                // The target may be parked on an empty class queue —
+                // unpark it so its cancellation predicate sees side work.
+                classes[ci].queue.wake_consumers();
+                None
+            }
+            Err(e) => {
+                classes[ci].backlog.fetch_sub(1, Ordering::SeqCst);
+                let mut r = match e {
+                    // Bounded stickiness: a hot worker must not build an
+                    // unbounded private backlog while siblings idle.
+                    TryPushError::Full(r) => {
+                        self.miss_capacity.fetch_add(1, Ordering::SeqCst);
+                        r
+                    }
+                    TryPushError::Closed(r) => {
+                        self.table.lock().unwrap().remove(&stream);
+                        self.miss_retired.fetch_add(1, Ordering::SeqCst);
+                        r
+                    }
+                };
+                r.sticky = false;
+                Some(r)
+            }
+        }
+    }
 }
 
 /// One tenant's live admission state and books. The `in_queue` occupancy
@@ -529,6 +684,8 @@ struct WorkerOutput {
     busy_s: f64,
     records: Vec<ServedRecord>,
     batch_sizes: Vec<usize>,
+    /// Delta-inference outcome tallies for requests this worker served.
+    delta: DeltaMetrics,
 }
 
 /// The accelerator worker body: drain `queue` in micro-batches — expiring
@@ -544,6 +701,15 @@ struct WorkerOutput {
 /// (in-flight work is always drained), stops taking new work, and exits —
 /// a parked worker is unblocked via the queue's cancellable pop and
 /// re-parks if a sibling claimed the token first.
+///
+/// Sticky routing: a delta-capable worker under a router additionally
+/// owns a bounded `side` queue of requests pinned to it because it holds
+/// their stream's delta cache. Side work is drained first (non-blocking)
+/// each lap; after a served batch the worker re-advertises the streams it
+/// refreshed via `sticky`. A retiring sticky worker first withdraws from
+/// the target list and closes its side queue (in-flight pushes bounce to
+/// the router for cost routing), then serves the remainder itself — no
+/// pinned request is ever stranded or double-served.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wid: usize,
@@ -555,6 +721,8 @@ fn worker_loop(
     classes: &[ClassCtx<'_>],
     ingress: &AdmissionQueue<Routed>,
     tenants: &[TenantCtx],
+    sticky: Option<&StickyCtx>,
+    side: Option<Arc<AdmissionQueue<Routed>>>,
     first_error: &Mutex<Option<String>>,
 ) -> WorkerOutput {
     let multi_tenant = tenants.len() > 1;
@@ -570,67 +738,136 @@ fn worker_loop(
     let mut records: Vec<ServedRecord> = Vec::new();
     let mut batch_sizes: Vec<usize> = Vec::new();
     let mut busy_s = 0.0f64;
+    let mut delta = DeltaMetrics::default();
+    let use_delta = backend.supports_delta();
     let batch_cap = class.batch.max(1);
     let mut batch: Vec<Routed> = Vec::with_capacity(batch_cap);
     let mut metas: Vec<Meta> = Vec::with_capacity(batch_cap);
     let mut maps: Vec<SparseMap<f32>> = Vec::with_capacity(batch_cap);
+    let mut streams: Vec<Option<u64>> = Vec::with_capacity(batch_cap);
+    let side_pending = || side.as_ref().is_some_and(|q| q.stats().2 > 0);
+    let mut retiring = false;
     loop {
-        // Retired by the autoscaler: claim the pending token and exit
-        // (the previous iteration's batch was fully served — in-flight
-        // work is never abandoned).
-        if take_retire_token(&class.retire) {
+        // Retired by the autoscaler: claim the pending token (the
+        // previous iteration's batch was fully served — in-flight work is
+        // never abandoned), stop being a sticky target, then serve out
+        // the side-queue remainder before exiting.
+        if !retiring && take_retire_token(&class.retire) {
+            retiring = true;
+            if let Some(sq) = &side {
+                if let Some(sc) = sticky {
+                    sc.deregister(wid);
+                }
+                // Closed *after* deregistration: an in-flight sticky push
+                // bounces back to the router, which cost-routes it.
+                sq.close();
+            }
+        }
+        if retiring && side.is_none() {
             break;
         }
-        // Deadline-passed requests are discarded inside the queue lock:
-        // they must not waste a batch slot, let alone a backend visit.
-        // The pop returns promptly on an all-reject drain so the class
-        // backlog and drop books update *before* the next routing
-        // decision — the router must not see phantom backlog. The
-        // cancellation predicate unparks workers (empty-handed) when the
-        // autoscaler deposits a retire token while the queue is idle.
-        let expired = queue.pop_batch_where_cancellable(
-            batch_cap,
-            &mut batch,
-            |r| {
-                let ex = r.expired(Instant::now());
-                if ex {
-                    // Attribute the expiry to its tenant here, where the
-                    // item is still visible; in the routerless path the
-                    // queue *is* the ingress, so the expiry also frees the
-                    // tenant's quota slot.
-                    tenants[r.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
-                    if !routed && multi_tenant {
-                        tenants[r.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+        // Affinity work first: requests the router pinned to this worker
+        // because it holds their stream's delta cache. The always-true
+        // cancellation predicate makes this a non-blocking drain.
+        let mut side_expired = 0usize;
+        if let Some(sq) = &side {
+            side_expired = sq.pop_batch_where_cancellable(
+                batch_cap,
+                &mut batch,
+                |r| {
+                    let ex = r.expired(Instant::now());
+                    if ex {
+                        tenants[r.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
                     }
-                }
-                ex
-            },
-            || class.retire.load(Ordering::SeqCst) > 0,
-        );
-        if expired > 0 {
-            class.deadline_drops.fetch_add(expired, Ordering::SeqCst);
-            if routed {
-                class.backlog.fetch_sub(expired, Ordering::SeqCst);
+                    ex
+                },
+                || true,
+            );
+            if side_expired > 0 {
+                // Side queues exist only under a router: the class books
+                // always apply.
+                class.deadline_drops.fetch_add(side_expired, Ordering::SeqCst);
+                class.backlog.fetch_sub(side_expired, Ordering::SeqCst);
             }
         }
+        if batch.is_empty() && retiring {
+            if side_expired > 0 {
+                continue; // expiries accounted; re-check for a remainder
+            }
+            break; // side queue drained — retirement complete
+        }
         if batch.is_empty() {
+            // No pinned work: drain the class queue (or, routerless, the
+            // ingress) like any sibling. Deadline-passed requests are
+            // discarded inside the queue lock: they must not waste a
+            // batch slot, let alone a backend visit. The pop returns
+            // promptly on an all-reject drain so the class backlog and
+            // drop books update *before* the next routing decision — the
+            // router must not see phantom backlog. The cancellation
+            // predicate unparks workers (empty-handed) when the
+            // autoscaler deposits a retire token — or the router lands
+            // sticky work — while the queue is idle.
+            let expired = queue.pop_batch_where_cancellable(
+                batch_cap,
+                &mut batch,
+                |r| {
+                    let ex = r.expired(Instant::now());
+                    if ex {
+                        // Attribute the expiry to its tenant here, where
+                        // the item is still visible; in the routerless
+                        // path the queue *is* the ingress, so the expiry
+                        // also frees the tenant's quota slot.
+                        tenants[r.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
+                        if !routed && multi_tenant {
+                            tenants[r.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                    ex
+                },
+                || class.retire.load(Ordering::SeqCst) > 0 || side_pending(),
+            );
             if expired > 0 {
-                continue; // expiries accounted; look for real work again
+                class.deadline_drops.fetch_add(expired, Ordering::SeqCst);
+                if routed {
+                    class.backlog.fetch_sub(expired, Ordering::SeqCst);
+                }
             }
-            // Empty-handed: either the stream ended, or a retire token
-            // woke the class. Exactly one worker claims the token; the
-            // rest find it gone and park again.
-            if take_retire_token(&class.retire) {
-                break; // retired by the autoscaler
+            if batch.is_empty() {
+                if expired > 0 {
+                    continue; // expiries accounted; look for real work again
+                }
+                if side_pending() {
+                    continue; // woken for pinned work — the top of the loop drains it
+                }
+                // Empty-handed: the stream ended, or a retire token woke
+                // the class (claimed at the top of the loop — exactly one
+                // worker gets it; the rest find it gone and park again).
+                if class.retire.load(Ordering::SeqCst) > 0 {
+                    continue;
+                }
+                if queue.is_closed() {
+                    // Closed and drained, or aborted. Anything still on
+                    // the side queue was pushed before the router exited —
+                    // serve it before leaving (re-checked after observing
+                    // the close, so no later push can be missed).
+                    if side_pending() {
+                        continue;
+                    }
+                    if let Some(sq) = &side {
+                        if let Some(sc) = sticky {
+                            sc.deregister(wid);
+                        }
+                        sq.close();
+                    }
+                    break;
+                }
+                continue; // the token went to a sibling — look for work again
             }
-            if queue.is_closed() {
-                break; // closed and drained, or aborted
-            }
-            continue; // the token went to a sibling — look for work again
         }
         let n = batch.len();
         metas.clear();
         maps.clear();
+        streams.clear();
         for req in batch.drain(..) {
             // In the routerless path this pop took the request out of the
             // ingress queue, freeing its tenant's quota slot (the routed
@@ -645,11 +882,25 @@ fn worker_loop(
                 bucket: req.bucket,
                 predicted_s: req.predicted_s,
                 deadline: req.deadline,
+                sticky: req.sticky,
             });
+            streams.push(req.stream);
             maps.push(req.map);
         }
         let t0 = Instant::now();
-        let outcome = catch_unwind(AssertUnwindSafe(|| backend.classify_batch(&maps)));
+        // Delta-capable backends take the stream-labelled entry point;
+        // the plain path is adapted so both arms yield one result shape.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if use_delta {
+                backend.classify_batch_delta(&streams, &maps)
+            } else {
+                backend
+                    .classify_batch(&maps)
+                    .into_iter()
+                    .map(|r| r.map(|c| (c, DeltaStatus::NotApplicable)))
+                    .collect()
+            }
+        }));
         let visit_s = t0.elapsed().as_secs_f64();
         let done = Instant::now();
         if routed {
@@ -692,7 +943,20 @@ fn worker_loop(
         let mut failed = false;
         for (m, res) in metas.iter().zip(results) {
             match res {
-                Ok(c) => {
+                Ok((c, st)) => {
+                    match st {
+                        DeltaStatus::NotApplicable => delta.not_applicable += 1,
+                        DeltaStatus::Hit { dirty_frac, recomputed_frac } => {
+                            delta.hits += 1;
+                            delta.dirty_frac_sum += dirty_frac;
+                            delta.recomputed_frac_sum += recomputed_frac;
+                        }
+                        DeltaStatus::Full(FullReason::ColdCache) => delta.full_cold += 1,
+                        DeltaStatus::Full(FullReason::Geometry) => delta.full_geometry += 1,
+                        DeltaStatus::Full(FullReason::OverThreshold) => {
+                            delta.full_over_threshold += 1;
+                        }
+                    }
                     let timing = RequestTiming {
                         e2e_s: done.duration_since(m.arrival).as_secs_f64(),
                         service_s,
@@ -705,6 +969,7 @@ fn worker_loop(
                         timing,
                         predicted_s: m.predicted_s,
                         met_deadline: m.deadline.map(|dl| done <= dl),
+                        sticky: m.sticky,
                     });
                 }
                 Err(e) => {
@@ -717,8 +982,18 @@ fn worker_loop(
         if failed {
             break;
         }
+        // The batch is served: future windows of these streams should come
+        // back here, where their freshly written caches live. A retiring
+        // worker must not re-advertise itself.
+        if use_delta && !retiring {
+            if let (Some(sc), Some(_)) = (sticky, &side) {
+                for &s in streams.iter().flatten() {
+                    sc.remember(s, wid);
+                }
+            }
+        }
     }
-    WorkerOutput { wid, class: ci, busy_s, records, batch_sizes }
+    WorkerOutput { wid, class: ci, busy_s, records, batch_sizes, delta }
 }
 
 /// The autoscaler controller loop: every `auto.interval` it samples each
@@ -752,6 +1027,8 @@ fn run_autoscaler<'scope, 'a: 'scope>(
     events: &'scope Mutex<Vec<ScalingEvent>>,
     next_wid: &'scope AtomicUsize,
     outputs: &'scope Mutex<Vec<WorkerOutput>>,
+    sticky: Option<&'scope StickyCtx>,
+    depth: usize,
     first_error: &'scope Mutex<Option<String>>,
 ) {
     let mut drops_w: Vec<SlidingWindow> =
@@ -851,10 +1128,21 @@ fn run_autoscaler<'scope, 'a: 'scope>(
                     );
                     let wid = next_wid.fetch_add(1, Ordering::SeqCst);
                     let queue = if has_router { &class.queue } else { ingress };
+                    // A delta-capable replica joins the sticky target
+                    // list before its worker runs: streams it serves can
+                    // be pinned back to it from its very first batch.
+                    let side = sticky.and_then(|sc| {
+                        backend.get().supports_delta().then(|| {
+                            let q =
+                                Arc::new(AdmissionQueue::new(depth, DropPolicy::Block));
+                            sc.enroll(wid, ci, &q);
+                            q
+                        })
+                    });
                     s.spawn(move || {
                         let out = worker_loop(
                             wid, ci, class, queue, has_router, backend.get(), classes,
-                            ingress, tenants, first_error,
+                            ingress, tenants, sticky, side, first_error,
                         );
                         outputs.lock().unwrap().push(out);
                     });
@@ -898,8 +1186,19 @@ pub fn run_server(
     backend: &dyn Backend,
     cfg: &ServerConfig,
 ) -> Result<ServerResult, PipelineError> {
+    run_server_source(Box::new(synthetic_source(profile, cfg)), backend, cfg)
+}
+
+/// The synthetic source every profile-based entry point shares:
+/// independent windows classically, or interleaved per-stream sliding
+/// windows when `cfg.overlap` asks for them.
+fn synthetic_source(profile: &DatasetProfile, cfg: &ServerConfig) -> SyntheticSource {
     let source = SyntheticSource::new(profile.clone(), cfg.n_requests, cfg.seed);
-    run_server_source(Box::new(source), backend, cfg)
+    if cfg.overlap > 0.0 {
+        source.with_overlap(cfg.overlap, cfg.streams)
+    } else {
+        source
+    }
 }
 
 /// [`run_server`] over an arbitrary [`EventSource`] — replayed datasets,
@@ -931,8 +1230,7 @@ pub fn run_pool(
     pool: &ReplicaPool,
     cfg: &ServerConfig,
 ) -> Result<ServerResult, PipelineError> {
-    let source = SyntheticSource::new(profile.clone(), cfg.n_requests, cfg.seed);
-    run_pool_source(Box::new(source), pool, cfg)
+    run_pool_source(Box::new(synthetic_source(profile, cfg)), pool, cfg)
 }
 
 /// [`run_pool`] over an arbitrary [`EventSource`].
@@ -1010,7 +1308,11 @@ fn serve_classes(
             // costs.
             if let Some(profile) = &cfg.cost_profile {
                 if let Some(snap) = profile.classes.get(&c.name) {
-                    cost.seed(snap);
+                    // Aged knowledge decays before it seeds: stale buckets
+                    // (and, much later, the global mean) are dropped so a
+                    // profile from last week cannot mis-route or mis-shed
+                    // today's traffic (see [`CostSnapshot::decayed`]).
+                    cost.seed(&snap.decayed(profile.age_secs()));
                 }
             }
             ClassCtx {
@@ -1038,6 +1340,15 @@ fn serve_classes(
             }
         })
         .collect();
+    // Sticky (cache-affinity) routing exists only when a router makes
+    // placement decisions AND some class can actually reuse per-stream
+    // state. Declared before the thread scope so the router, workers,
+    // and autoscaler all borrow one context.
+    let any_delta = classes
+        .iter()
+        .any(|c| c.slots.lock().unwrap().iter().any(|b| b.get().supports_delta()));
+    let sticky_ctx = (has_router && any_delta).then(StickyCtx::new);
+    let sticky_ref = sticky_ctx.as_ref();
     let first_error: Mutex<Option<String>> = Mutex::new(None);
     let deadline_offered = AtomicUsize::new(0);
     let deadline_ingress = AtomicUsize::new(0);
@@ -1146,6 +1457,8 @@ fn serve_classes(
                     arrival: sr.arrival,
                     deadline,
                     predicted_s: f64::NAN,
+                    stream: sr.stream,
+                    sticky: false,
                 };
                 if multi_tenant {
                     tc.in_queue.fetch_add(1, Ordering::SeqCst);
@@ -1179,6 +1492,18 @@ fn serve_classes(
                     // free again whatever happens downstream.
                     if multi_tenant {
                         tenants_ref[req.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    // Sticky fast path: land a live stream back on the
+                    // worker holding its delta cache. Expired requests
+                    // skip it (the cost path below sheds and counts
+                    // them); any miss falls through to cost routing.
+                    if let Some(sc) = sticky_ref {
+                        if !req.expired(Instant::now()) {
+                            match sc.try_route(req, classes_ref) {
+                                None => continue,
+                                Some(back) => req = back,
+                            }
+                        }
                     }
                     let d = route(classes_ref, req.bucket);
                     if let Some(dl) = req.deadline {
@@ -1227,11 +1552,20 @@ fn serve_classes(
             for backend in base {
                 let wid = base_wid;
                 base_wid += 1;
+                // Delta-capable workers under a router own a bounded side
+                // queue for requests pinned to them by stream affinity.
+                let side = sticky_ref.and_then(|sc| {
+                    backend.get().supports_delta().then(|| {
+                        let q = Arc::new(AdmissionQueue::new(depth, DropPolicy::Block));
+                        sc.enroll(wid, ci, &q);
+                        q
+                    })
+                });
                 handles.push(s.spawn(move || {
                     let queue = if has_router { &class.queue } else { ingress_ref };
                     let out = worker_loop(
                         wid, ci, class, queue, has_router, backend.get(), classes_ref,
-                        ingress_ref, tenants_ref, error_ref,
+                        ingress_ref, tenants_ref, sticky_ref, side, error_ref,
                     );
                     outputs_ref.lock().unwrap().push(out);
                 }));
@@ -1249,7 +1583,8 @@ fn serve_classes(
             s.spawn(move || {
                 run_autoscaler(
                     &auto, s, classes_ref, tenants_ref, has_router, ingress_ref, t_start,
-                    stop_ref, events_ref, next_wid_ref, outputs_ref, error_ref,
+                    stop_ref, events_ref, next_wid_ref, outputs_ref, sticky_ref, depth,
+                    error_ref,
                 )
             })
         });
@@ -1310,9 +1645,22 @@ fn serve_classes(
         // EWMA state (seeded knowledge + everything learned this run).
         cost_profile: CostProfile {
             classes: classes.iter().map(|c| (c.name.clone(), c.cost.snapshot())).collect(),
+            // Stamped by `CostProfile::save` at write time, not here.
+            saved_unix: None,
         },
         ..Metrics::default()
     };
+    // Delta/sticky books: per-worker tallies merge; the router's sticky
+    // counters come straight from the shared context.
+    for o in &outputs {
+        metrics.delta.merge(&o.delta);
+    }
+    if let Some(sc) = &sticky_ctx {
+        metrics.delta.sticky_hits = sc.hits.load(Ordering::SeqCst);
+        metrics.delta.sticky_cold = sc.miss_cold.load(Ordering::SeqCst);
+        metrics.delta.sticky_retired = sc.miss_retired.load(Ordering::SeqCst);
+        metrics.delta.sticky_capacity = sc.miss_capacity.load(Ordering::SeqCst);
+    }
     let mut predictions = Vec::with_capacity(processed);
     let mut t_served = vec![0usize; tenants.len()];
     let mut t_met = vec![0usize; tenants.len()];
@@ -1409,10 +1757,11 @@ fn serve_classes(
                     err_sum += (r.predicted_s - r.timing.service_s).abs()
                         / r.timing.service_s.max(1e-9);
                     err_n += 1;
-                } else if has_router {
+                } else if has_router && !r.sticky {
                     // Probe traffic: routed before this class's cost model
                     // had an observation. (Without a router no prediction
-                    // is ever attempted, so nothing counts as a probe.)
+                    // is ever attempted, and a sticky delivery's NaN is by
+                    // design — neither counts as a probe.)
                     unseeded += 1;
                 }
             }

@@ -48,7 +48,16 @@
 //!   each tenant's ingress quota is its weighted fair share of the
 //!   queue depth, an optional per-tenant SLO (ms) overrides the global
 //!   `--slo-ms`, and the report adds a per-tenant breakdown including
-//!   recoverable ingest rejects.
+//!   recoverable ingest rejects. `--delta` (or `--delta-max-frac F`,
+//!   default 0.35, which implies it) switches `func` replicas to
+//!   incremental (delta) inference: each stream's previous window is
+//!   cached and only changed sites re-execute, falling back to a full
+//!   recompute above the dirty-fraction threshold; under a router,
+//!   streams are sticky-routed back to the worker holding their cache.
+//!   `--overlap F` (with `--streams N`) makes the synthetic source emit
+//!   N interleaved sliding-window streams whose consecutive windows
+//!   share fraction F of their events — the workload delta inference is
+//!   for. The report adds the delta hit/fallback/sticky line.
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
@@ -72,7 +81,7 @@ use esda::util::Rng;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["verbose"]) {
+    let args = match Args::parse(raw, &["verbose", "delta"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -266,6 +275,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if batch == 0 {
         return Err("--batch must be >= 1".into());
     }
+    // Incremental (delta) inference: --delta-max-frac implies --delta so
+    // tuning the threshold doesn't also require the switch.
+    let delta_max_frac = args.get_f64("delta-max-frac", 0.35)?;
+    let delta = args.has("delta") || args.get("delta-max-frac").is_some();
+    if delta && !(delta_max_frac > 0.0 && delta_max_frac <= 1.0) {
+        return Err(format!("--delta-max-frac must be in (0, 1], got {delta_max_frac}"));
+    }
+    let overlap = args.get_f64("overlap", 0.0)?;
+    if !(0.0..=1.0).contains(&overlap) {
+        return Err(format!("--overlap must be in [0, 1], got {overlap}"));
+    }
+    let streams = args.get_usize("streams", 4)?;
+    if streams == 0 {
+        return Err("--streams must be >= 1".into());
+    }
     let slo = match args.get("slo-ms") {
         None => None,
         Some(v) => {
@@ -311,7 +335,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // it at shutdown); a *corrupt* profile is an error, not a cold start.
     let cost_profile_path = args.get("cost-profile").map(std::path::PathBuf::from);
     let cost_profile = match &cost_profile_path {
-        Some(p) if p.exists() => Some(esda::coordinator::CostProfile::load(p)?),
+        Some(p) if p.exists() => {
+            // Version-mismatched profiles load leniently as empty (cold
+            // start) with a warning — only garbage is an error.
+            let (profile, warning) = esda::coordinator::CostProfile::load(p)?;
+            if let Some(w) = warning {
+                eprintln!("warning: {w}");
+            }
+            Some(profile)
+        }
         _ => None,
     };
     let scale_interval_ms = args.get_f64("scale-interval-ms", 20.0)?;
@@ -341,6 +373,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }),
         cost_profile,
         tenants,
+        overlap,
+        streams,
     };
     let source_spec = esda::util::cli::parse_source_spec(args.get_or("source", "synth"))?;
     // A non-synthetic source replaces the generated stream: build it now
@@ -427,6 +461,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         let mut specs = Vec::new();
         for it in &items {
             let s = match it.class.as_str() {
+                // With --delta every func replica of the class shares one
+                // delta store, so sticky-routing misses and replica churn
+                // lose no cached windows.
+                "func" if delta => {
+                    ReplicaSpec::functional_delta(it.count, qnet.clone(), delta_max_frac)
+                }
                 "func" => ReplicaSpec::functional(it.count, qnet.clone()),
                 "sim" => ReplicaSpec::simulator(
                     it.count,
@@ -460,6 +500,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }
     } else {
         let backend_name = args.get_or("backend", "func").to_string();
+        if delta && backend_name != "func" {
+            return Err(format!(
+                "--delta requires the functional backend, got --backend {backend_name}"
+            ));
+        }
         let backend: Box<dyn Backend> = match backend_name.as_str() {
             "sim" => Box::new(Simulator::new(qnet, esda::arch::HwConfig::uniform(n_ops, 16))),
             "dense" => {
@@ -468,6 +513,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                     .map_err(|e| e.to_string())?;
                 Box::new(Dense::new(engine))
             }
+            _ if delta => Box::new(Functional::new(qnet).with_delta(delta_max_frac)),
             _ => Box::new(Functional::new(qnet)),
         };
         if workers > 1 && backend_name == "dense" {
@@ -509,6 +555,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         );
     }
     if let Some(line) = esda::report::slo_line(m) {
+        println!("{line}");
+    }
+    if let Some(line) = esda::report::delta_line(m) {
         println!("{line}");
     }
     for line in esda::report::scaling_log(m) {

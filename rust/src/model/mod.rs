@@ -25,5 +25,5 @@ pub mod exec;
 pub mod plan;
 
 pub use graph::{Act, Block, NetworkSpec, Op};
-pub use plan::{ExecCtx, ExecPlan};
+pub use plan::{DeltaCache, DeltaOutcome, ExecCtx, ExecPlan, FullReason};
 pub use weights::{OpWeights, QuantOpWeights};

@@ -95,6 +95,10 @@ pub struct ExecPlan {
     pub max_cout: usize,
     /// Deepest simultaneous residual-fork nesting.
     pub fork_depth: usize,
+    /// FNV-1a over the lowered steps (dims + weights + biases + input
+    /// scale). A [`DeltaCache`] is stamped with this so cached activations
+    /// from a *different* network are never treated as a previous window.
+    pub fingerprint: u64,
 }
 
 impl ExecPlan {
@@ -180,6 +184,7 @@ impl ExecPlan {
             steps.push(PlanStep { kind, in_w, in_h, cin, out_w: w, out_h: h, cout: c });
         }
         assert_eq!(depth, 0, "unbalanced ResFork/ResAdd");
+        let fingerprint = fingerprint_steps(&steps, qnet.input_scale);
         ExecPlan {
             steps,
             input_scale: qnet.input_scale,
@@ -189,6 +194,7 @@ impl ExecPlan {
             n_classes: spec.n_classes,
             max_cout,
             fork_depth,
+            fingerprint,
         }
     }
 
@@ -204,8 +210,18 @@ impl ExecPlan {
     pub fn execute<'c>(&self, ctx: &'c mut ExecCtx, input: &SparseMap<f32>) -> &'c [i32] {
         assert_eq!(input.c, self.cin, "input channels mismatch");
         quantize_into(self.input_scale, input, &mut ctx.cur);
+        self.run_steps(ctx, None);
+        &ctx.logits
+    }
+
+    /// Run the step list over the quantized input already in `ctx.cur`.
+    /// With `store`, each conv step's output is additionally snapshotted
+    /// into the cache's per-layer arena (the full-recompute half of the
+    /// delta path: a fallback still has to refresh the cached window).
+    fn run_steps(&self, ctx: &mut ExecCtx, mut store: Option<&mut DeltaCache>) {
         ctx.fork_top = 0;
-        for step in &self.steps {
+        for (si, step) in self.steps.iter().enumerate() {
+            let mut snapshot = false;
             match step.kind {
                 StepKind::Conv1x1(ref sw) => {
                     conv::conv1x1_i8_into(
@@ -218,6 +234,7 @@ impl ExecPlan {
                         &mut ctx.next,
                     );
                     std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    snapshot = true;
                 }
                 StepKind::ConvKxKS1 { k, w: ref sw } => {
                     conv::conv_kxk_s1_i8_into(
@@ -232,6 +249,7 @@ impl ExecPlan {
                         &mut ctx.next,
                     );
                     std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    snapshot = true;
                 }
                 StepKind::ConvKxKS2 { k, w: ref sw } => {
                     conv::conv_kxk_s2_i8_into(
@@ -247,6 +265,7 @@ impl ExecPlan {
                         &mut ctx.next,
                     );
                     std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    snapshot = true;
                 }
                 StepKind::DwConvS1 { k, w: ref sw } => {
                     conv::dwconv_kxk_s1_i8_into(
@@ -260,6 +279,7 @@ impl ExecPlan {
                         &mut ctx.next,
                     );
                     std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    snapshot = true;
                 }
                 StepKind::DwConvS2 { k, w: ref sw } => {
                     conv::dwconv_kxk_s2_i8_into(
@@ -274,6 +294,7 @@ impl ExecPlan {
                         &mut ctx.next,
                     );
                     std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    snapshot = true;
                 }
                 StepKind::ResFork => {
                     if ctx.forks.len() == ctx.fork_top {
@@ -295,14 +316,392 @@ impl ExecPlan {
                     conv::fc_i8_t_into(&ctx.pooled, &sw.w, &sw.b, step.cout, &mut ctx.logits);
                 }
             }
+            if snapshot {
+                if let Some(c) = store.as_deref_mut() {
+                    c.layers[si].copy_from(&ctx.cur);
+                }
+            }
         }
-        &ctx.logits
     }
 
     /// Classify: execute and argmax the logits.
     pub fn classify(&self, ctx: &mut ExecCtx, input: &SparseMap<f32>) -> usize {
         argmax(self.execute(ctx, input))
     }
+
+    /// Incremental execution across overlapping windows of one stream.
+    ///
+    /// Diffs the new window's quantized active set against the previous
+    /// window cached in `cache` (both token lists are in strictly
+    /// increasing ravel order, so the diff is a linear merge), seeds a
+    /// dirty-site frontier, and propagates only changed sites layer by
+    /// layer: stride-1 receptive fields dilate the frontier
+    /// ([`Bitmap::dilate_into`]), stride-2 steps downsample it
+    /// ([`Bitmap::downsample_dirty_into`]), and each conv kernel recomputes
+    /// dirty outputs while copying clean ones from the cached per-layer
+    /// activations (`sparse::conv::*_delta_into`). Residual forks/adds,
+    /// pooling, and the FC head always run fully — they are cheap relative
+    /// to the convs and keep the path trivially exact.
+    ///
+    /// Falls back to a full recompute (which also refreshes the cache) when
+    /// the cache is cold or stamped by another plan, the input geometry
+    /// changed, or the changed-site fraction exceeds `max_frac`. The result
+    /// is **bit-identical** to [`ExecPlan::execute`] in every case
+    /// (property-tested in `rust/tests/exec_plan.rs`), and like `execute`
+    /// the steady state performs zero heap allocations — `cache`, too, is
+    /// an arena.
+    pub fn execute_delta<'c>(
+        &self,
+        ctx: &'c mut ExecCtx,
+        cache: &mut DeltaCache,
+        input: &SparseMap<f32>,
+        max_frac: f64,
+    ) -> (&'c [i32], DeltaOutcome) {
+        assert_eq!(input.c, self.cin, "input channels mismatch");
+        cache.layers.resize_with(self.steps.len(), || SparseMap::empty(0, 0, 0));
+        quantize_into(self.input_scale, input, &mut ctx.cur);
+        let reason = if !cache.valid || cache.fingerprint != self.fingerprint {
+            Some(FullReason::ColdCache)
+        } else if (cache.in_w, cache.in_h, cache.cin) != (input.w, input.h, input.c) {
+            Some(FullReason::Geometry)
+        } else {
+            None
+        };
+        if let Some(r) = reason {
+            self.run_full_storing(ctx, cache);
+            return (&ctx.logits, DeltaOutcome::Full(r));
+        }
+        // Layer-0 frontier: sites whose presence or quantized features
+        // changed since the previous window.
+        let dirty_sites = diff_into(&ctx.cur, &cache.prev_in, &mut cache.dirty);
+        let input_sites = ctx.cur.nnz();
+        if dirty_sites as f64 > max_frac * input_sites.max(1) as f64 {
+            self.run_full_storing(ctx, cache);
+            return (&ctx.logits, DeltaOutcome::Full(FullReason::OverThreshold));
+        }
+        cache.prev_in.copy_from(&ctx.cur);
+        ctx.fork_top = 0;
+        let mut recomputed = 0usize;
+        let mut total_sites = 0usize;
+        for (si, step) in self.steps.iter().enumerate() {
+            match step.kind {
+                StepKind::Conv1x1(ref sw) => {
+                    // Pointwise: the output frontier equals the input
+                    // frontier — no propagation needed.
+                    recomputed += conv::conv1x1_i8_delta_into(
+                        &ctx.cur,
+                        &sw.w,
+                        &sw.b,
+                        step.cout,
+                        &sw.rq,
+                        &cache.dirty,
+                        &cache.layers[si],
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    total_sites += ctx.cur.nnz();
+                    cache.layers[si].copy_from(&ctx.cur);
+                }
+                StepKind::ConvKxKS1 { k, w: ref sw } => {
+                    cache.dirty.dilate_into(k, &mut cache.dirty_next);
+                    recomputed += conv::conv_kxk_s1_i8_delta_into(
+                        &ctx.cur,
+                        k,
+                        &sw.w,
+                        &sw.b,
+                        step.cout,
+                        &sw.rq,
+                        &cache.dirty_next,
+                        &cache.layers[si],
+                        &mut ctx.idx,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    total_sites += ctx.cur.nnz();
+                    cache.layers[si].copy_from(&ctx.cur);
+                    std::mem::swap(&mut cache.dirty, &mut cache.dirty_next);
+                }
+                StepKind::ConvKxKS2 { k, w: ref sw } => {
+                    cache.dirty.downsample_dirty_into(k, &mut cache.dirty_next);
+                    recomputed += conv::conv_kxk_s2_i8_delta_into(
+                        &ctx.cur,
+                        k,
+                        &sw.w,
+                        &sw.b,
+                        step.cout,
+                        &sw.rq,
+                        &cache.dirty_next,
+                        &cache.layers[si],
+                        &mut ctx.idx,
+                        &mut ctx.ds,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    total_sites += ctx.cur.nnz();
+                    cache.layers[si].copy_from(&ctx.cur);
+                    std::mem::swap(&mut cache.dirty, &mut cache.dirty_next);
+                }
+                StepKind::DwConvS1 { k, w: ref sw } => {
+                    cache.dirty.dilate_into(k, &mut cache.dirty_next);
+                    recomputed += conv::dwconv_kxk_s1_i8_delta_into(
+                        &ctx.cur,
+                        k,
+                        &sw.w,
+                        &sw.b,
+                        &sw.rq,
+                        &cache.dirty_next,
+                        &cache.layers[si],
+                        &mut ctx.idx,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    total_sites += ctx.cur.nnz();
+                    cache.layers[si].copy_from(&ctx.cur);
+                    std::mem::swap(&mut cache.dirty, &mut cache.dirty_next);
+                }
+                StepKind::DwConvS2 { k, w: ref sw } => {
+                    cache.dirty.downsample_dirty_into(k, &mut cache.dirty_next);
+                    recomputed += conv::dwconv_kxk_s2_i8_delta_into(
+                        &ctx.cur,
+                        k,
+                        &sw.w,
+                        &sw.b,
+                        &sw.rq,
+                        &cache.dirty_next,
+                        &cache.layers[si],
+                        &mut ctx.idx,
+                        &mut ctx.ds,
+                        &mut ctx.acc,
+                        &mut ctx.next,
+                    );
+                    std::mem::swap(&mut ctx.cur, &mut ctx.next);
+                    total_sites += ctx.cur.nnz();
+                    cache.layers[si].copy_from(&ctx.cur);
+                    std::mem::swap(&mut cache.dirty, &mut cache.dirty_next);
+                }
+                StepKind::ResFork => {
+                    if ctx.forks.len() == ctx.fork_top {
+                        ctx.forks.push(SparseMap::empty(0, 0, 0));
+                    }
+                    let top = ctx.fork_top;
+                    ctx.forks[top].copy_from(&ctx.cur);
+                    ctx.fork_top += 1;
+                }
+                StepKind::ResAdd => {
+                    // Run fully: the fork-to-add span is stride-1 only
+                    // (ResAdd asserts token equality), so the frontier at
+                    // the add is a superset of the frontier at the fork —
+                    // every site the add could change is already dirty.
+                    let top = ctx.fork_top.checked_sub(1).expect("ResAdd without ResFork");
+                    ctx.fork_top = top;
+                    conv::residual_add_i8_inplace(&mut ctx.cur, &ctx.forks[top]);
+                }
+                StepKind::GlobalPool => {
+                    conv::global_avg_pool_i8_into(&ctx.cur, &mut ctx.acc64, &mut ctx.pooled);
+                }
+                StepKind::Fc(ref sw) => {
+                    conv::fc_i8_t_into(&ctx.pooled, &sw.w, &sw.b, step.cout, &mut ctx.logits);
+                }
+            }
+        }
+        let outcome = DeltaOutcome::Delta { dirty: dirty_sites, input_sites, recomputed, total_sites };
+        (&ctx.logits, outcome)
+    }
+
+    /// Classify incrementally: [`ExecPlan::execute_delta`] + argmax.
+    pub fn classify_delta(
+        &self,
+        ctx: &mut ExecCtx,
+        cache: &mut DeltaCache,
+        input: &SparseMap<f32>,
+        max_frac: f64,
+    ) -> (usize, DeltaOutcome) {
+        let (logits, outcome) = self.execute_delta(ctx, cache, input, max_frac);
+        (argmax(logits), outcome)
+    }
+
+    /// Full recompute that also refreshes `cache` with the new window: the
+    /// quantized input (already in `ctx.cur`), every conv layer's output,
+    /// and the validity/geometry/plan stamps.
+    fn run_full_storing(&self, ctx: &mut ExecCtx, cache: &mut DeltaCache) {
+        cache.valid = true;
+        cache.fingerprint = self.fingerprint;
+        cache.in_w = ctx.cur.w;
+        cache.in_h = ctx.cur.h;
+        cache.cin = ctx.cur.c;
+        cache.prev_in.copy_from(&ctx.cur);
+        self.run_steps(ctx, Some(cache));
+    }
+}
+
+/// Why a delta execution fell back to a full recompute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FullReason {
+    /// First window of a stream, an invalidated cache, or a cache stamped
+    /// by a different plan.
+    ColdCache,
+    /// Input geometry changed since the cached window.
+    Geometry,
+    /// The changed-site fraction exceeded the configured `max_frac`.
+    OverThreshold,
+}
+
+/// What [`ExecPlan::execute_delta`] did for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeltaOutcome {
+    /// The delta path ran: `dirty` of `input_sites` layer-0 sites seeded
+    /// the frontier; `recomputed` of `total_sites` conv output sites were
+    /// recomputed (the rest were copied from the cached window).
+    Delta { dirty: usize, input_sites: usize, recomputed: usize, total_sites: usize },
+    /// Full recompute (cache refreshed along the way).
+    Full(FullReason),
+}
+
+impl DeltaOutcome {
+    /// Fraction of layer-0 sites that changed (1.0 for a full recompute).
+    pub fn dirty_frac(&self) -> f64 {
+        match *self {
+            DeltaOutcome::Delta { dirty, input_sites, .. } => {
+                dirty as f64 / input_sites.max(1) as f64
+            }
+            DeltaOutcome::Full(_) => 1.0,
+        }
+    }
+
+    /// Fraction of conv output sites recomputed (1.0 for a full recompute).
+    pub fn recomputed_frac(&self) -> f64 {
+        match *self {
+            DeltaOutcome::Delta { recomputed, total_sites, .. } => {
+                recomputed as f64 / total_sites.max(1) as f64
+            }
+            DeltaOutcome::Full(_) => 1.0,
+        }
+    }
+
+    pub fn is_delta(&self) -> bool {
+        matches!(self, DeltaOutcome::Delta { .. })
+    }
+}
+
+/// Per-stream delta-execution cache: the previous window's quantized input,
+/// each conv layer's output, and the dirty-frontier double buffer. Same
+/// arena discipline as [`ExecCtx`] — the first window sizes the buffers,
+/// subsequent windows run allocation-free.
+#[derive(Debug)]
+pub struct DeltaCache {
+    valid: bool,
+    fingerprint: u64,
+    in_w: usize,
+    in_h: usize,
+    cin: usize,
+    prev_in: SparseMap<i8>,
+    layers: Vec<SparseMap<i8>>,
+    dirty: Bitmap,
+    dirty_next: Bitmap,
+}
+
+impl DeltaCache {
+    pub fn new() -> DeltaCache {
+        DeltaCache {
+            valid: false,
+            fingerprint: 0,
+            in_w: 0,
+            in_h: 0,
+            cin: 0,
+            prev_in: SparseMap::empty(0, 0, 0),
+            layers: Vec::new(),
+            dirty: Bitmap::new(0, 0),
+            dirty_next: Bitmap::new(0, 0),
+        }
+    }
+
+    /// Drop the cached window: the next `execute_delta` takes the
+    /// cold-cache full path. Buffers are kept for reuse.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+}
+
+impl Default for DeltaCache {
+    fn default() -> Self {
+        DeltaCache::new()
+    }
+}
+
+/// Mark every site whose presence or features differ between two
+/// ravel-ordered maps of identical geometry; returns the marked count.
+fn diff_into(new: &SparseMap<i8>, prev: &SparseMap<i8>, dirty: &mut Bitmap) -> usize {
+    debug_assert_eq!((new.w, new.h, new.c), (prev.w, prev.h, prev.c));
+    dirty.reset(new.w, new.h);
+    let (nn, np) = (new.tokens.len(), prev.tokens.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut n = 0usize;
+    while i < nn || j < np {
+        let rn = if i < nn { new.tokens[i].ravel(new.w) } else { usize::MAX };
+        let rp = if j < np { prev.tokens[j].ravel(new.w) } else { usize::MAX };
+        if rn == rp {
+            if new.feat(i) != prev.feat(j) {
+                let t = new.tokens[i];
+                dirty.set(t.x as usize, t.y as usize);
+                n += 1;
+            }
+            i += 1;
+            j += 1;
+        } else if rn < rp {
+            let t = new.tokens[i];
+            dirty.set(t.x as usize, t.y as usize);
+            n += 1;
+            i += 1;
+        } else {
+            let t = prev.tokens[j];
+            dirty.set(t.x as usize, t.y as usize);
+            n += 1;
+            j += 1;
+        }
+    }
+    n
+}
+
+/// FNV-1a plan fingerprint: step tags, geometry, weights, biases, and the
+/// input scale. Collisions are astronomically unlikely and the stakes are
+/// low (the fingerprint only guards a cache shared across plans).
+fn fingerprint_steps(steps: &[PlanStep], input_scale: f32) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |h: &mut u64, v: u64| {
+        *h ^= v;
+        *h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(&mut h, input_scale.to_bits() as u64);
+    for step in steps {
+        let (tag, k, sw) = match step.kind {
+            StepKind::Conv1x1(ref sw) => (1u64, 1usize, Some(sw)),
+            StepKind::ConvKxKS1 { k, w: ref sw } => (2, k, Some(sw)),
+            StepKind::ConvKxKS2 { k, w: ref sw } => (3, k, Some(sw)),
+            StepKind::DwConvS1 { k, w: ref sw } => (4, k, Some(sw)),
+            StepKind::DwConvS2 { k, w: ref sw } => (5, k, Some(sw)),
+            StepKind::ResFork => (6, 0, None),
+            StepKind::ResAdd => (7, 0, None),
+            StepKind::GlobalPool => (8, 0, None),
+            StepKind::Fc(ref sw) => (9, 0, Some(sw)),
+        };
+        mix(&mut h, tag);
+        mix(&mut h, k as u64);
+        mix(&mut h, (step.in_w ^ (step.in_h << 16) ^ (step.cin << 32)) as u64);
+        mix(&mut h, (step.out_w ^ (step.out_h << 16) ^ (step.cout << 32)) as u64);
+        if let Some(sw) = sw {
+            for &b in &sw.w {
+                mix(&mut h, b as u8 as u64);
+            }
+            for &b in &sw.b {
+                mix(&mut h, b as u32 as u64);
+            }
+        }
+    }
+    h
 }
 
 /// Quantize a float input map into `out` with the network's input scale —
@@ -443,5 +842,105 @@ mod tests {
         let empty: SparseMap<f32> = SparseMap::empty(34, 34, 2);
         let got = plan.execute(&mut ctx, &empty).to_vec();
         assert_eq!(got, forward_i8(&qnet, &empty));
+    }
+
+    /// Overlapping next window: flip a few sites' presence, rewrite a few
+    /// features (in ravel order, so `push` stays happy).
+    fn perturb_input(rng: &mut Rng, prev: &SparseMap<f32>, p: f64) -> SparseMap<f32> {
+        let mut m: SparseMap<f32> = SparseMap::empty(prev.w, prev.h, prev.c);
+        for y in 0..prev.h {
+            for x in 0..prev.w {
+                let at = prev.find(x as u16, y as u16);
+                let present = if rng.chance(p) { at.is_none() } else { at.is_some() };
+                if !present {
+                    continue;
+                }
+                let f: Vec<f32> = match at {
+                    Some(i) if !rng.chance(p) => prev.feat(i).to_vec(),
+                    _ => (0..prev.c).map(|_| rng.f64() as f32).collect(),
+                };
+                m.push(crate::sparse::Token::new(x as u16, y as u16), &f);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn delta_stream_is_bit_exact_and_hits() {
+        let qnet = tiny_qnet(11);
+        let plan = ExecPlan::compile(&qnet);
+        let mut ctx = ExecCtx::new();
+        let mut full_ctx = ExecCtx::new();
+        let mut cache = DeltaCache::new();
+        let mut rng = Rng::new(99);
+        let mut window = small_input(31);
+        let mut hits = 0usize;
+        for step in 0..8 {
+            let (logits, outcome) = plan.execute_delta(&mut ctx, &mut cache, &window, 0.35);
+            let got = logits.to_vec();
+            assert_eq!(got, plan.execute(&mut full_ctx, &window).to_vec(), "step {step}");
+            if step == 0 {
+                assert_eq!(outcome, DeltaOutcome::Full(FullReason::ColdCache));
+            }
+            if outcome.is_delta() {
+                hits += 1;
+                assert!(outcome.dirty_frac() <= 0.35 + 1e-9);
+                assert!(outcome.recomputed_frac() <= 1.0);
+            }
+            window = perturb_input(&mut rng, &window, 0.02);
+        }
+        assert!(hits >= 4, "expected mostly delta hits on 2% perturbations, got {hits}");
+    }
+
+    #[test]
+    fn delta_fallback_reasons_are_reported() {
+        let qnet = tiny_qnet(13);
+        let plan = ExecPlan::compile(&qnet);
+        let mut ctx = ExecCtx::new();
+        let mut cache = DeltaCache::new();
+        let mut rng = Rng::new(5);
+        let base = small_input(41);
+        let (_, o) = plan.execute_delta(&mut ctx, &mut cache, &base, 0.35);
+        assert_eq!(o, DeltaOutcome::Full(FullReason::ColdCache));
+        // Geometry change: kernels derive geometry from the map, so a
+        // different resolution executes fine but must not be diffed.
+        let off_spec: SparseMap<f32> = SparseMap::empty(20, 20, 2);
+        let (_, o) = plan.execute_delta(&mut ctx, &mut cache, &off_spec, 0.35);
+        assert_eq!(o, DeltaOutcome::Full(FullReason::Geometry));
+        // Back on spec (geometry differs from the cached 20×20 again).
+        let (_, o) = plan.execute_delta(&mut ctx, &mut cache, &base, 0.35);
+        assert_eq!(o, DeltaOutcome::Full(FullReason::Geometry));
+        // Identical window at max_frac 0: zero dirty sites, zero recompute.
+        let (logits, o) = plan.execute_delta(&mut ctx, &mut cache, &base, 0.0);
+        let same = logits.to_vec();
+        match o {
+            DeltaOutcome::Delta { dirty: 0, recomputed: 0, .. } => {}
+            other => panic!("expected a zero-site delta hit, got {other:?}"),
+        }
+        assert_eq!(same, plan.execute(&mut ExecCtx::new(), &base).to_vec());
+        // Any change at max_frac 0 falls back over-threshold.
+        let changed = perturb_input(&mut rng, &base, 0.05);
+        let (_, o) = plan.execute_delta(&mut ctx, &mut cache, &changed, 0.0);
+        assert_eq!(o, DeltaOutcome::Full(FullReason::OverThreshold));
+        // An invalidated cache cold-starts.
+        cache.invalidate();
+        let (_, o) = plan.execute_delta(&mut ctx, &mut cache, &changed, 0.35);
+        assert_eq!(o, DeltaOutcome::Full(FullReason::ColdCache));
+    }
+
+    #[test]
+    fn delta_cache_is_plan_stamped() {
+        // A cache warmed by plan A must not feed stale activations to plan
+        // B: the fingerprint stamp forces a cold-cache full pass instead.
+        let qa = ExecPlan::compile(&tiny_qnet(3));
+        let qb = ExecPlan::compile(&tiny_qnet(4));
+        assert_ne!(qa.fingerprint, qb.fingerprint);
+        let mut ctx = ExecCtx::new();
+        let mut cache = DeltaCache::new();
+        let input = small_input(9);
+        qa.execute_delta(&mut ctx, &mut cache, &input, 0.35);
+        let (logits, o) = qb.execute_delta(&mut ctx, &mut cache, &input, 0.35);
+        assert_eq!(o, DeltaOutcome::Full(FullReason::ColdCache));
+        assert_eq!(logits.to_vec(), qb.execute(&mut ExecCtx::new(), &input).to_vec());
     }
 }

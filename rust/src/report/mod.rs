@@ -242,6 +242,36 @@ pub fn slo_line(m: &crate::coordinator::Metrics) -> Option<String> {
     ))
 }
 
+/// One-line delta-inference summary — hit rate over delta attempts, the
+/// mean dirty/recomputed site fractions on hits, the full-recompute
+/// fallback breakdown, and the router's sticky-delivery books. `None`
+/// when no delta-capable backend served (nothing to report). NaN means
+/// (zero hits) render as dashes, never literal NaNs.
+pub fn delta_line(m: &crate::coordinator::Metrics) -> Option<String> {
+    let d = &m.delta;
+    if d.attempts() == 0 {
+        return None;
+    }
+    let pct = |v: f64| if v.is_finite() { format!("{:.1}%", v * 100.0) } else { "-".into() };
+    Some(format!(
+        "delta inference: {} hit(s) / {} attempt(s) ({}; dirty {}, recomputed {}) | full \
+         recompute: {} cold + {} geometry + {} over-threshold | sticky: {} hit(s), miss {} \
+         cold + {} retired + {} capacity",
+        d.hits,
+        d.attempts(),
+        pct(d.hit_rate()),
+        pct(d.mean_dirty_frac()),
+        pct(d.mean_recomputed_frac()),
+        d.full_cold,
+        d.full_geometry,
+        d.full_over_threshold,
+        d.sticky_hits,
+        d.sticky_cold,
+        d.sticky_retired,
+        d.sticky_capacity,
+    ))
+}
+
 /// The autoscaler's decision log, one line per scaling event (empty when
 /// the run had no autoscaler or it never acted).
 pub fn scaling_log(m: &crate::coordinator::Metrics) -> Vec<String> {
@@ -427,6 +457,37 @@ mod tests {
         assert!(line.contains("1 ingress"), "{line}");
         assert!(line.contains("2 router"), "{line}");
         assert!(line.contains("0 queue-full"), "{line}");
+    }
+
+    /// The delta line is absent without delta traffic, renders the
+    /// hit/fallback/sticky breakdown when there is, and never shows a
+    /// literal NaN even with zero hits.
+    #[test]
+    fn delta_line_renders_the_hit_and_fallback_breakdown() {
+        use crate::coordinator::Metrics;
+        let mut m = Metrics::default();
+        assert_eq!(delta_line(&m), None, "no delta traffic ⇒ no line");
+        m.delta.hits = 8;
+        m.delta.full_cold = 2;
+        m.delta.full_over_threshold = 1;
+        m.delta.dirty_frac_sum = 0.8;
+        m.delta.recomputed_frac_sum = 1.6;
+        m.delta.sticky_hits = 7;
+        m.delta.sticky_cold = 2;
+        m.delta.sticky_retired = 1;
+        let line = delta_line(&m).unwrap();
+        assert!(line.contains("8 hit(s) / 11 attempt(s)"), "{line}");
+        assert!(line.contains("72.7%"), "hit rate: {line}");
+        assert!(line.contains("dirty 10.0%"), "{line}");
+        assert!(line.contains("recomputed 20.0%"), "{line}");
+        assert!(line.contains("2 cold + 0 geometry + 1 over-threshold"), "{line}");
+        assert!(line.contains("sticky: 7 hit(s)"), "{line}");
+        // All-fallback runs (zero hits) render dashes, never NaN.
+        let mut m2 = Metrics::default();
+        m2.delta.full_cold = 3;
+        let line2 = delta_line(&m2).unwrap();
+        assert!(!line2.contains("NaN"), "{line2}");
+        assert!(line2.contains("dirty -"), "{line2}");
     }
 
     #[test]

@@ -81,12 +81,31 @@ impl Bitmap {
             .flat_map(move |y| (0..self.w).filter_map(move |x| self.get(x, y).then_some((x, y))))
     }
 
+    /// Copy `src` into `self`, reusing the word storage (unlike
+    /// `Clone::clone`) — the delta-execution path snapshots frontiers once
+    /// per layer, so at steady state this must not touch the heap.
+    pub fn copy_from(&mut self, src: &Bitmap) {
+        self.w = src.w;
+        self.h = src.h;
+        self.words.clear();
+        self.words.extend_from_slice(&src.words);
+    }
+
     /// Pattern after a standard k×k stride-1 conv with `pad = (k-1)/2`:
     /// every output whose window touches a nonzero becomes nonzero.
     pub fn dilate(&self, k: usize) -> Bitmap {
+        let mut out = Bitmap::new(self.w, self.h);
+        self.dilate_into(k, &mut out);
+        out
+    }
+
+    /// Arena variant of [`Bitmap::dilate`]: writes into `out`, reusing its
+    /// storage. This is how the delta-execution path propagates a dirty-site
+    /// frontier through a stride-1 k×k receptive field without allocating.
+    pub fn dilate_into(&self, k: usize, out: &mut Bitmap) {
         assert!(k % 2 == 1, "odd kernels only");
         let u = (k - 1) / 2;
-        let mut out = Bitmap::new(self.w, self.h);
+        out.reset(self.w, self.h);
         for (x, y) in self.iter_set() {
             let y0 = y.saturating_sub(u);
             let y1 = (y + u).min(self.h - 1);
@@ -98,7 +117,41 @@ impl Bitmap {
                 }
             }
         }
-        out
+    }
+
+    /// Propagate a *dirty-site* set through a stride-2 k×k sparse conv
+    /// (pad `(k-1)/2`): an output is marked iff its k×k input window
+    /// contains a marked input (its accumulated value may change), **or**
+    /// it is the 2×2 grid cell of a marked input (its very existence in
+    /// the output token set may change — the Fig. 3b occupancy rule).
+    /// Equivalently: `downsample_standard(k, 2) ∪ downsample_sparse(2)`.
+    /// Output geometry is `ceil(w/2) × ceil(h/2)`; `out` storage is reused.
+    pub fn downsample_dirty_into(&self, k: usize, out: &mut Bitmap) {
+        assert!(k % 2 == 1, "odd kernels only");
+        let pad = (k - 1) / 2;
+        let ow = (self.w + 1) / 2;
+        let oh = (self.h + 1) / 2;
+        out.reset(ow, oh);
+        for (x, y) in self.iter_set() {
+            // Window rule: x is read by outputs ox with
+            // ox*2 ∈ [x+pad-k+1, x+pad]  ⇔  ox ∈ [⌈(x+pad-k+1)/2⌉, ⌊(x+pad)/2⌋].
+            let x0 = (x + pad + 1).saturating_sub(k).div_ceil(2);
+            let x1 = ((x + pad) / 2).min(ow - 1);
+            let y0 = (y + pad + 1).saturating_sub(k).div_ceil(2);
+            let y1 = ((y + pad) / 2).min(oh - 1);
+            // The interval can be empty (e.g. k=1 at odd x): the window
+            // rule then contributes nothing and only the occupancy rule
+            // below applies.
+            if x0 <= x1 && y0 <= y1 {
+                for oy in y0..=y1 {
+                    for ox in x0..=x1 {
+                        out.set(ox, oy);
+                    }
+                }
+            }
+            // Occupancy rule: the grid cell this input feeds.
+            out.set(x / 2, y / 2);
+        }
     }
 
     /// Pattern after a submanifold stride-1 conv: unchanged.
@@ -262,6 +315,60 @@ mod tests {
             }
             assert_eq!(b.submanifold(), b);
             assert!(d.count() >= b.count());
+        });
+    }
+
+    #[test]
+    fn copy_from_matches_and_reuses_storage() {
+        check("copy_from == clone", 32, |g| {
+            let w = g.usize(1, 20);
+            let h = g.usize(1, 20);
+            let b = random_bitmap(g, w, h, 0.3);
+            let mut c = Bitmap::new(40, 40); // larger: storage must shrink-reuse
+            c.set(5, 5);
+            c.copy_from(&b);
+            assert_eq!(c, b);
+        });
+    }
+
+    #[test]
+    fn dilate_into_matches_allocating_dilate() {
+        check("dilate_into == dilate", 48, |g| {
+            let w = g.usize(1, 24);
+            let h = g.usize(1, 24);
+            let k = [1, 3, 5][g.usize(0, 2)];
+            let b = random_bitmap(g, w, h, 0.2);
+            let mut out = Bitmap::new(3, 3); // dirty, wrong geometry
+            out.set(0, 0);
+            b.dilate_into(k, &mut out);
+            assert_eq!(out, b.dilate(k));
+        });
+    }
+
+    #[test]
+    fn downsample_dirty_is_union_of_standard_and_sparse() {
+        // The dirty-propagation rule for a stride-2 k×k conv is exactly
+        // "value may change" (standard-downsample window rule) OR
+        // "existence may change" (sparse-downsample occupancy rule).
+        check("downsample_dirty == standard ∪ sparse", 48, |g| {
+            let w = g.usize(1, 24);
+            let h = g.usize(1, 24);
+            let k = [1, 3, 5][g.usize(0, 2)];
+            let b = random_bitmap(g, w, h, 0.2);
+            let mut got = Bitmap::new(1, 1);
+            b.downsample_dirty_into(k, &mut got);
+            let st = b.downsample_standard(k, 2);
+            let sp = b.downsample_sparse(2);
+            assert_eq!((got.w, got.h), (st.w, st.h));
+            for y in 0..got.h {
+                for x in 0..got.w {
+                    assert_eq!(
+                        got.get(x, y),
+                        st.get(x, y) || sp.get(x, y),
+                        "mismatch at ({x},{y}) k={k} w={w} h={h}"
+                    );
+                }
+            }
         });
     }
 

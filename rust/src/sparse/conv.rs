@@ -686,6 +686,361 @@ pub fn fc_i8_t_into(input: &[i32], wt: &[i8], bias: &[i32], cout: usize, out: &m
 }
 
 // ---------------------------------------------------------------------------
+// int8 hardware-exact path — delta (partial-update) kernels
+//
+// Incremental inference across overlapping windows: when only a few input
+// sites changed since the previous window, each layer only needs to
+// recompute the outputs whose receptive field touches a changed site. The
+// caller (`model::plan::ExecPlan::execute_delta`) propagates a dirty-site
+// frontier layer by layer (`Bitmap::dilate_into` for stride 1,
+// `Bitmap::downsample_dirty_into` for stride 2) and hands each kernel:
+//
+// - `dirty`: the dirty set at **output** resolution — every output site
+//   whose value or existence may differ from the previous window,
+// - `prev`: this layer's cached output from the previous window.
+//
+// Clean outputs are copied from `prev` via a monotone merge pointer (both
+// token lists are in strictly increasing ravel order); dirty outputs run
+// the full window accumulation. A clean token absent from `prev` would
+// mean the frontier under-approximated the change set — we recompute it
+// defensively so the kernels are bit-exact *unconditionally*, and the
+// plan-level property tests check the frontier is in fact sound. Each
+// kernel returns the number of recomputed sites for the metrics/report.
+// ---------------------------------------------------------------------------
+
+/// Advance `*pi` through `prev`'s ravel-ordered tokens to `(x, y)`;
+/// `Some(i)` iff the site existed in the previous window's output.
+#[inline]
+fn merge_find(prev: &SparseMap<i8>, pi: &mut usize, x: u16, y: u16) -> Option<usize> {
+    let target = Token::new(x, y).ravel(prev.w);
+    while *pi < prev.tokens.len() && prev.tokens[*pi].ravel(prev.w) < target {
+        *pi += 1;
+    }
+    (*pi < prev.tokens.len() && prev.tokens[*pi].ravel(prev.w) == target).then_some(*pi)
+}
+
+/// Delta variant of [`conv1x1_i8_into`]. `dirty` is at input (= output)
+/// resolution; returns the number of recomputed sites.
+#[allow(clippy::too_many_arguments)]
+pub fn conv1x1_i8_delta_into(
+    input: &SparseMap<i8>,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+    dirty: &Bitmap,
+    prev: &SparseMap<i8>,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) -> usize {
+    let cin = input.c;
+    assert_eq!(w.len(), cin * cout);
+    assert_eq!(bias.len(), cout);
+    debug_assert_eq!((dirty.w, dirty.h), (input.w, input.h));
+    debug_assert_eq!((prev.w, prev.h, prev.c), (input.w, input.h, cout));
+    out.reset(input.w, input.h, cout);
+    out.tokens.extend_from_slice(&input.tokens);
+    out.feats.reserve(input.nnz() * cout);
+    acc.clear();
+    acc.resize(cout, 0);
+    let mut pi = 0usize;
+    let mut recomputed = 0usize;
+    for i in 0..input.nnz() {
+        let t = input.tokens[i];
+        if !dirty.get(t.x as usize, t.y as usize) {
+            if let Some(p) = merge_find(prev, &mut pi, t.x, t.y) {
+                out.feats.extend_from_slice(prev.feat(p));
+                continue;
+            }
+        }
+        recomputed += 1;
+        let f = input.feat(i);
+        acc.copy_from_slice(bias);
+        for ci in 0..cin {
+            let a = f[ci] as i32;
+            let wrow = ci * cout;
+            for co in 0..cout {
+                acc[co] += a * w[wrow + co] as i32;
+            }
+        }
+        for co in 0..cout {
+            out.feats.push(rq.apply(acc[co]));
+        }
+    }
+    recomputed
+}
+
+/// Delta variant of [`conv_kxk_s1_i8_into`]. `dirty` is at input (= output)
+/// resolution, already dilated by the kernel's receptive radius; returns
+/// the number of recomputed sites.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kxk_s1_i8_delta_into(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+    dirty: &Bitmap,
+    prev: &SparseMap<i8>,
+    idx: &mut NeighborIndex,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) -> usize {
+    let cin = input.c;
+    assert_eq!(w.len(), k * k * cin * cout);
+    assert_eq!(bias.len(), cout);
+    debug_assert_eq!((dirty.w, dirty.h), (input.w, input.h));
+    debug_assert_eq!((prev.w, prev.h, prev.c), (input.w, input.h, cout));
+    let u = (k - 1) / 2;
+    idx.build(input);
+    out.reset(input.w, input.h, cout);
+    out.tokens.extend_from_slice(&input.tokens);
+    out.feats.reserve(input.nnz() * cout);
+    acc.clear();
+    acc.resize(cout, 0);
+    let mut pi = 0usize;
+    let mut recomputed = 0usize;
+    for t in &input.tokens {
+        if !dirty.get(t.x as usize, t.y as usize) {
+            if let Some(p) = merge_find(prev, &mut pi, t.x, t.y) {
+                out.feats.extend_from_slice(prev.feat(p));
+                continue;
+            }
+        }
+        recomputed += 1;
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize + dx as isize - u as isize;
+                let iy = t.y as isize + dy as isize - u as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let ni = match idx.find(ix as usize, iy as usize) {
+                    Some(i) => i,
+                    None => continue,
+                };
+                let nf = input.feat(ni);
+                let wbase = (dy * k + dx) * cin * cout;
+                for ci in 0..cin {
+                    let a = nf[ci] as i32;
+                    let wrow = wbase + ci * cout;
+                    for co in 0..cout {
+                        acc[co] += a * w[wrow + co] as i32;
+                    }
+                }
+            }
+        }
+        for co in 0..cout {
+            out.feats.push(rq.apply(acc[co]));
+        }
+    }
+    recomputed
+}
+
+/// Delta variant of [`dwconv_kxk_s1_i8_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv_kxk_s1_i8_delta_into(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    rq: &Requant,
+    dirty: &Bitmap,
+    prev: &SparseMap<i8>,
+    idx: &mut NeighborIndex,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) -> usize {
+    let c = input.c;
+    assert_eq!(w.len(), k * k * c);
+    assert_eq!(bias.len(), c);
+    debug_assert_eq!((dirty.w, dirty.h), (input.w, input.h));
+    debug_assert_eq!((prev.w, prev.h, prev.c), (input.w, input.h, c));
+    let u = (k - 1) / 2;
+    idx.build(input);
+    out.reset(input.w, input.h, c);
+    out.tokens.extend_from_slice(&input.tokens);
+    out.feats.reserve(input.nnz() * c);
+    acc.clear();
+    acc.resize(c, 0);
+    let mut pi = 0usize;
+    let mut recomputed = 0usize;
+    for t in &input.tokens {
+        if !dirty.get(t.x as usize, t.y as usize) {
+            if let Some(p) = merge_find(prev, &mut pi, t.x, t.y) {
+                out.feats.extend_from_slice(prev.feat(p));
+                continue;
+            }
+        }
+        recomputed += 1;
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize + dx as isize - u as isize;
+                let iy = t.y as isize + dy as isize - u as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let ni = match idx.find(ix as usize, iy as usize) {
+                    Some(i) => i,
+                    None => continue,
+                };
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                for ch in 0..c {
+                    acc[ch] += nf[ch] as i32 * w[off * c + ch] as i32;
+                }
+            }
+        }
+        for ch in 0..c {
+            out.feats.push(rq.apply(acc[ch]));
+        }
+    }
+    recomputed
+}
+
+/// Delta variant of [`conv_kxk_s2_i8_into`]. `dirty` is at **output**
+/// (downsampled) resolution, per [`Bitmap::downsample_dirty_into`];
+/// returns the number of recomputed sites.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kxk_s2_i8_delta_into(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    cout: usize,
+    rq: &Requant,
+    dirty: &Bitmap,
+    prev: &SparseMap<i8>,
+    idx: &mut NeighborIndex,
+    ds: &mut Bitmap,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) -> usize {
+    let cin = input.c;
+    assert_eq!(w.len(), k * k * cin * cout);
+    assert_eq!(bias.len(), cout);
+    let pad = (k - 1) / 2;
+    idx.build(input);
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    debug_assert_eq!((dirty.w, dirty.h), (ow, oh));
+    debug_assert_eq!((prev.w, prev.h, prev.c), (ow, oh, cout));
+    out.reset(ow, oh, cout);
+    downsample_tokens_from_map(input, ds, &mut out.tokens);
+    out.feats.reserve(out.tokens.len() * cout);
+    acc.clear();
+    acc.resize(cout, 0);
+    let mut pi = 0usize;
+    let mut recomputed = 0usize;
+    for ti in 0..out.tokens.len() {
+        let t = out.tokens[ti];
+        if !dirty.get(t.x as usize, t.y as usize) {
+            if let Some(p) = merge_find(prev, &mut pi, t.x, t.y) {
+                out.feats.extend_from_slice(prev.feat(p));
+                continue;
+            }
+        }
+        recomputed += 1;
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize * 2 + dx as isize - pad as isize;
+                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let ni = match idx.find(ix as usize, iy as usize) {
+                    Some(i) => i,
+                    None => continue,
+                };
+                let nf = input.feat(ni);
+                let wbase = (dy * k + dx) * cin * cout;
+                for ci in 0..cin {
+                    let a = nf[ci] as i32;
+                    let wrow = wbase + ci * cout;
+                    for co in 0..cout {
+                        acc[co] += a * w[wrow + co] as i32;
+                    }
+                }
+            }
+        }
+        for co in 0..cout {
+            out.feats.push(rq.apply(acc[co]));
+        }
+    }
+    recomputed
+}
+
+/// Delta variant of [`dwconv_kxk_s2_i8_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv_kxk_s2_i8_delta_into(
+    input: &SparseMap<i8>,
+    k: usize,
+    w: &[i8],
+    bias: &[i32],
+    rq: &Requant,
+    dirty: &Bitmap,
+    prev: &SparseMap<i8>,
+    idx: &mut NeighborIndex,
+    ds: &mut Bitmap,
+    acc: &mut Vec<i32>,
+    out: &mut SparseMap<i8>,
+) -> usize {
+    let c = input.c;
+    assert_eq!(w.len(), k * k * c);
+    assert_eq!(bias.len(), c);
+    let pad = (k - 1) / 2;
+    idx.build(input);
+    let ow = (input.w + 1) / 2;
+    let oh = (input.h + 1) / 2;
+    debug_assert_eq!((dirty.w, dirty.h), (ow, oh));
+    debug_assert_eq!((prev.w, prev.h, prev.c), (ow, oh, c));
+    out.reset(ow, oh, c);
+    downsample_tokens_from_map(input, ds, &mut out.tokens);
+    out.feats.reserve(out.tokens.len() * c);
+    acc.clear();
+    acc.resize(c, 0);
+    let mut pi = 0usize;
+    let mut recomputed = 0usize;
+    for ti in 0..out.tokens.len() {
+        let t = out.tokens[ti];
+        if !dirty.get(t.x as usize, t.y as usize) {
+            if let Some(p) = merge_find(prev, &mut pi, t.x, t.y) {
+                out.feats.extend_from_slice(prev.feat(p));
+                continue;
+            }
+        }
+        recomputed += 1;
+        acc.copy_from_slice(bias);
+        for dy in 0..k {
+            for dx in 0..k {
+                let ix = t.x as isize * 2 + dx as isize - pad as isize;
+                let iy = t.y as isize * 2 + dy as isize - pad as isize;
+                if ix < 0 || iy < 0 || ix as usize >= input.w || iy as usize >= input.h {
+                    continue;
+                }
+                let ni = match idx.find(ix as usize, iy as usize) {
+                    Some(i) => i,
+                    None => continue,
+                };
+                let nf = input.feat(ni);
+                let off = dy * k + dx;
+                for ch in 0..c {
+                    acc[ch] += nf[ch] as i32 * w[off * c + ch] as i32;
+                }
+            }
+        }
+        for ch in 0..c {
+            out.feats.push(rq.apply(acc[ch]));
+        }
+    }
+    recomputed
+}
+
+// ---------------------------------------------------------------------------
 // int8 hardware-exact path — classic allocating API (thin wrappers)
 // ---------------------------------------------------------------------------
 
@@ -1093,6 +1448,127 @@ mod tests {
             fc_i8_t_into(&input, &wt, &bias, cout, &mut got);
             assert_eq!(got, fc_i8(&input, &w, &bias, cout));
         });
+    }
+
+    /// Input-diff bitmap: sites where token presence or features differ.
+    fn diff_bitmap(prev: &SparseMap<i8>, new: &SparseMap<i8>) -> Bitmap {
+        let mut d = Bitmap::new(new.w, new.h);
+        for (i, t) in new.tokens.iter().enumerate() {
+            match prev.find(t.x, t.y) {
+                Some(p) if prev.feat(p) == new.feat(i) => {}
+                _ => d.set(t.x as usize, t.y as usize),
+            }
+        }
+        for t in &prev.tokens {
+            if new.find(t.x, t.y).is_none() {
+                d.set(t.x as usize, t.y as usize);
+            }
+        }
+        d
+    }
+
+    /// Perturb `prev` into an overlapping "next window": flip a few sites'
+    /// presence and rewrite a few features.
+    fn perturb(g: &mut Gen, prev: &SparseMap<i8>) -> SparseMap<i8> {
+        let mut m: SparseMap<i8> = SparseMap::empty(prev.w, prev.h, prev.c);
+        for y in 0..prev.h {
+            for x in 0..prev.w {
+                let at = prev.find(x as u16, y as u16);
+                let present = if g.chance(0.1) { at.is_none() } else { at.is_some() };
+                if !present {
+                    continue;
+                }
+                let f: Vec<i8> = match at {
+                    Some(p) if !g.chance(0.15) => prev.feat(p).to_vec(),
+                    _ => (0..prev.c).map(|_| g.i64(-128, 127) as i8).collect(),
+                };
+                m.push(Token::new(x as u16, y as u16), &f);
+            }
+        }
+        m
+    }
+
+    /// Delta kernels must be bit-identical to the full kernels when handed
+    /// the propagated dirty frontier and the previous window's cached
+    /// output — the induction step of `execute_delta`'s exactness proof.
+    #[test]
+    fn delta_kernels_match_full_kernels() {
+        check("i8 delta kernels == full kernels on overlapping windows", 32, |g| {
+            let rq = Requant::from_scale(0.37, -128, 127);
+            let mut idx = NeighborIndex::new();
+            let mut ds = Bitmap::new(0, 0);
+            let mut acc = Vec::new();
+            let mut out: SparseMap<i8> = SparseMap::empty(0, 0, 0);
+            let w = g.usize(2, 12);
+            let h = g.usize(2, 12);
+            let cin = g.usize(1, 4);
+            let cout = g.usize(1, 4);
+            let k = [1, 3][g.usize(0, 1)];
+            let prev_in = random_map_i8(g, w, h, cin, 0.35);
+            let new_in = perturb(g, &prev_in);
+            let diff = diff_bitmap(&prev_in, &new_in);
+            let bias: Vec<i32> = (0..cout.max(cin)).map(|_| g.i64(-64, 64) as i32).collect();
+
+            // 1×1: dirty = the input diff itself.
+            let wt = rand_w_i8(g, cin * cout);
+            let prev_out = conv1x1_i8(&prev_in, &wt, &bias[..cout], cout, &rq);
+            let n = conv1x1_i8_delta_into(
+                &new_in, &wt, &bias[..cout], cout, &rq, &diff, &prev_out, &mut acc, &mut out,
+            );
+            assert_eq!(out, conv1x1_i8(&new_in, &wt, &bias[..cout], cout, &rq));
+            assert!(n <= new_in.nnz());
+
+            // Full k×k stride 1: dirty = diff dilated by the radius.
+            let wt = rand_w_i8(g, k * k * cin * cout);
+            let dil = diff.dilate(k);
+            let prev_out = conv_kxk_s1_i8(&prev_in, k, &wt, &bias[..cout], cout, &rq);
+            conv_kxk_s1_i8_delta_into(
+                &new_in, k, &wt, &bias[..cout], cout, &rq, &dil, &prev_out, &mut idx, &mut acc,
+                &mut out,
+            );
+            assert_eq!(out, conv_kxk_s1_i8(&new_in, k, &wt, &bias[..cout], cout, &rq));
+
+            // Full k×k stride 2: dirty = downsampled (window ∪ occupancy).
+            let mut dd = Bitmap::new(0, 0);
+            diff.downsample_dirty_into(k, &mut dd);
+            let prev_out = conv_kxk_s2_i8(&prev_in, k, &wt, &bias[..cout], cout, &rq);
+            conv_kxk_s2_i8_delta_into(
+                &new_in, k, &wt, &bias[..cout], cout, &rq, &dd, &prev_out, &mut idx, &mut ds,
+                &mut acc, &mut out,
+            );
+            assert_eq!(out, conv_kxk_s2_i8(&new_in, k, &wt, &bias[..cout], cout, &rq));
+
+            // Depthwise stride 1 and stride 2.
+            let wt = rand_w_i8(g, k * k * cin);
+            let prev_out = dwconv_kxk_s1_i8(&prev_in, k, &wt, &bias[..cin], &rq);
+            dwconv_kxk_s1_i8_delta_into(
+                &new_in, k, &wt, &bias[..cin], &rq, &dil, &prev_out, &mut idx, &mut acc, &mut out,
+            );
+            assert_eq!(out, dwconv_kxk_s1_i8(&new_in, k, &wt, &bias[..cin], &rq));
+            let prev_out = dwconv_kxk_s2_i8(&prev_in, k, &wt, &bias[..cin], &rq);
+            dwconv_kxk_s2_i8_delta_into(
+                &new_in, k, &wt, &bias[..cin], &rq, &dd, &prev_out, &mut idx, &mut ds, &mut acc,
+                &mut out,
+            );
+            assert_eq!(out, dwconv_kxk_s2_i8(&new_in, k, &wt, &bias[..cin], &rq));
+        });
+    }
+
+    /// With an identical window the delta kernel recomputes nothing.
+    #[test]
+    fn delta_kernel_with_empty_diff_recomputes_nothing() {
+        let mut g = Gen::new(7, 1.0);
+        let m = random_map_i8(&mut g, 10, 10, 3, 0.4);
+        let rq = Requant::from_scale(0.5, -128, 127);
+        let wt = rand_w_i8(&mut g, 3 * 2);
+        let bias = vec![0i32; 2];
+        let prev_out = conv1x1_i8(&m, &wt, &bias, 2, &rq);
+        let clean = Bitmap::new(m.w, m.h);
+        let mut acc = Vec::new();
+        let mut out: SparseMap<i8> = SparseMap::empty(0, 0, 0);
+        let n = conv1x1_i8_delta_into(&m, &wt, &bias, 2, &rq, &clean, &prev_out, &mut acc, &mut out);
+        assert_eq!(n, 0);
+        assert_eq!(out, prev_out);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::model::exec::{classify_i8, forward_i8};
 use esda::model::quant::{quantize_network, QuantizedNet};
 use esda::model::weights::FloatWeights;
-use esda::model::{Act, Block, ExecCtx, ExecPlan, NetworkSpec};
+use esda::model::{Act, Block, DeltaCache, ExecCtx, ExecPlan, NetworkSpec};
 use esda::sparse::{SparseMap, Token};
 use esda::util::alloc::CountingAllocator;
 use esda::util::propcheck::{check, Gen};
@@ -100,6 +100,139 @@ fn plan_is_bit_exact_with_oracle_on_random_networks() {
             );
         }
     });
+}
+
+/// Next window of a sliding stream: keep most of `prev` verbatim, drop or
+/// rewrite a sprinkling of sites, and turn on a few empty ones — the
+/// per-pixel walk preserves ravel order, which `SparseMap::push` requires.
+fn mutate_window(
+    rng: &mut Rng,
+    prev: &SparseMap<f32>,
+    p_drop: f64,
+    p_change: f64,
+    p_new: f64,
+) -> SparseMap<f32> {
+    let (w, h, c) = (prev.w, prev.h, prev.c);
+    let mut next = SparseMap::empty(w, h, c);
+    for y in 0..h {
+        for x in 0..w {
+            let t = Token::new(x as u16, y as u16);
+            match prev.find(x as u16, y as u16) {
+                Some(i) => {
+                    if rng.chance(p_drop) {
+                        continue;
+                    }
+                    if rng.chance(p_change) {
+                        let f: Vec<f32> = (0..c).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+                        next.push(t, &f);
+                    } else {
+                        next.push(t, prev.feat(i));
+                    }
+                }
+                None => {
+                    if rng.chance(p_new) {
+                        let f: Vec<f32> = (0..c).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+                        next.push(t, &f);
+                    }
+                }
+            }
+        }
+    }
+    next
+}
+
+/// The delta tentpole property: `execute_delta` is **bit-exact** with the
+/// full path on random networks across sliding-window streams — whichever
+/// side of the `max_frac` fallback boundary each window lands on. The
+/// thresholds 0.0 (everything falls back except a zero-diff window), 0.35
+/// (the serving default), and 1.0 (never falls back) pin both branches
+/// and the boundary itself; a repeated window exercises the zero-dirty
+/// edge, and a fresh cache per threshold exercises the cold-start fall
+/// back.
+#[test]
+fn execute_delta_is_bit_exact_with_execute_on_random_networks() {
+    check("execute_delta == execute (bit-exact)", 16, |g| {
+        let spec = random_spec(g);
+        let qnet = quantized(g, &spec);
+        let plan = ExecPlan::compile(&qnet);
+        let mut ctx = ExecCtx::new();
+        let mut windows = vec![random_map(g.rng(), spec.w, spec.h, spec.cin, 0.3)];
+        for i in 0..5 {
+            let prev = windows.last().unwrap();
+            let next = if i == 2 {
+                prev.clone() // zero-dirty repeat
+            } else {
+                let churn = [0.02, 0.3][i % 2]; // small and large diffs
+                mutate_window(g.rng(), prev, churn, churn, churn / 4.0)
+            };
+            windows.push(next);
+        }
+        for max_frac in [0.0, 0.35, 1.0] {
+            let mut cache = DeltaCache::new();
+            let mut hits = 0usize;
+            for (i, m) in windows.iter().enumerate() {
+                let want = plan.execute(&mut ctx, m).to_vec();
+                let (got, outcome) = plan.execute_delta(&mut ctx, &mut cache, m, max_frac);
+                assert_eq!(
+                    got, want,
+                    "logits diverged (window {i}, max_frac {max_frac}, {outcome:?})"
+                );
+                hits += outcome.is_delta() as usize;
+            }
+            if max_frac >= 1.0 {
+                assert_eq!(hits, windows.len() - 1, "only the cold start may fall back");
+            }
+        }
+    });
+}
+
+/// The delta acceptance bar: once the per-stream cache is warm, both the
+/// dirty-frontier path (`max_frac` 1.0) and the over-threshold fallback
+/// (`max_frac` 0.0, which re-stores every layer into the cache) make
+/// **zero** heap allocations per window.
+#[test]
+fn delta_steady_state_is_allocation_free() {
+    let profile = DatasetProfile::n_mnist();
+    let spec = NetworkSpec::compact("compact", profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, 11);
+    let mut rng = Rng::new(33);
+    let base = {
+        let es = profile.sample(0, &mut rng);
+        histogram2_norm(&es, profile.w, profile.h, 8.0)
+    };
+    let qnet = quantize_network(&spec, &weights, std::slice::from_ref(&base));
+    let plan = ExecPlan::compile(&qnet);
+    let mut windows = vec![base];
+    for _ in 0..5 {
+        let next = mutate_window(&mut rng, windows.last().unwrap(), 0.05, 0.05, 0.01);
+        windows.push(next);
+    }
+    let mut preds = 0usize;
+    for max_frac in [1.0, 0.0] {
+        let mut ctx = ExecCtx::new();
+        let mut cache = DeltaCache::new();
+        // Two warm passes size every arena buffer (the measured pass
+        // replays the same windows, so no buffer can need to grow).
+        for _ in 0..2 {
+            for m in &windows {
+                preds += plan.classify_delta(&mut ctx, &mut cache, m, max_frac).0;
+            }
+        }
+        let before = CountingAllocator::thread_allocs();
+        for _ in 0..4 {
+            for m in &windows {
+                preds += plan.classify_delta(&mut ctx, &mut cache, m, max_frac).0;
+            }
+        }
+        let after = CountingAllocator::thread_allocs();
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state delta execution touched the heap (max_frac {max_frac}, {} allocs)",
+            after - before
+        );
+    }
+    assert!(preds < 16 * windows.len() * profile.n_classes);
 }
 
 /// Batched and sequential classification agree through the `Backend`

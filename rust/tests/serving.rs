@@ -5,9 +5,9 @@
 use esda::arch::HwConfig;
 use esda::coordinator::{
     encode_packet, run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig,
-    Backend, BackendError, Classification, DropPolicy, EventSource, Functional, IngestError,
-    NetConfig, NetSource, ReplaySource, ReplicaPool, ReplicaSpec, ServerConfig, ServerResult,
-    Simulator, SourcedRequest, TenantConfig, DEFAULT_TENANT,
+    Backend, BackendError, Classification, DeltaStatus, DeltaStore, DropPolicy, EventSource,
+    Functional, IngestError, NetConfig, NetSource, ReplaySource, ReplicaPool, ReplicaSpec,
+    ServerConfig, ServerResult, Simulator, SourcedRequest, TenantConfig, DEFAULT_TENANT,
 };
 use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::model::quant::{quantize_network, QuantizedNet};
@@ -322,11 +322,10 @@ fn serving_conserves_requests_property() {
         fail_after: Option<usize>,
         delay: Duration,
     }
-    impl Backend for Counting {
-        fn name(&self) -> &str {
-            "counting"
-        }
-        fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+    impl Counting {
+        /// Count, fault-inject, and throttle one request; `Ok(())` means
+        /// the inner backend may run it.
+        fn admit(&self) -> Result<(), BackendError> {
             let n = self.calls.fetch_add(1, Ordering::SeqCst);
             if let Some(k) = self.fail_after {
                 if n >= k {
@@ -336,7 +335,42 @@ fn serving_conserves_requests_property() {
             if !self.delay.is_zero() {
                 std::thread::sleep(self.delay);
             }
+            Ok(())
+        }
+    }
+    impl Backend for Counting {
+        fn name(&self) -> &str {
+            "counting"
+        }
+        fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+            self.admit()?;
             self.inner.classify(map)
+        }
+        // Delegate the delta path so a counting class can also be a
+        // delta class: the per-request books (and the injected fault)
+        // must hold on the incremental path too.
+        fn supports_delta(&self) -> bool {
+            self.inner.supports_delta()
+        }
+        fn classify_batch_delta(
+            &self,
+            streams: &[Option<u64>],
+            maps: &[SparseMap<f32>],
+        ) -> Vec<Result<(Classification, DeltaStatus), BackendError>> {
+            streams
+                .iter()
+                .zip(maps)
+                .map(|(s, m)| {
+                    self.admit()?;
+                    self.inner
+                        .classify_batch_delta(std::slice::from_ref(s), std::slice::from_ref(m))
+                        .pop()
+                        .expect("one result per request")
+                })
+                .collect()
+        }
+        fn evict_stream(&self, stream: u64) {
+            self.inner.evict_stream(stream);
         }
     }
 
@@ -374,6 +408,11 @@ fn serving_conserves_requests_property() {
             } else {
                 None
             },
+            // Sometimes an overlapping multi-stream source: requests then
+            // carry stream ids, and (with a delta class below) the sticky
+            // router is live while replicas churn.
+            overlap: if g.chance(0.5) { 0.5 + 0.45 * g.rng().f64() } else { 0.0 },
+            streams: g.usize(1, 3),
             ..Default::default()
         };
         let fail_after = if g.chance(0.35) { Some(g.usize(0, n_requests)) } else { None };
@@ -382,7 +421,13 @@ fn serving_conserves_requests_property() {
         let outcome = if g.bool() {
             // Heterogeneous: two counting classes sharing one call
             // counter; only the first injects the fault, so the abort
-            // path crosses class boundaries.
+            // path crosses class boundaries. The first class is sometimes
+            // delta-capable (one cache store shared by its replicas) so
+            // sticky routing and incremental execution run under the same
+            // churn the property already generates.
+            let delta_cls = g.bool();
+            let store: DeltaStore =
+                Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
             let (qa, qb) = (qnet.clone(), qnet.clone());
             let (ca, cb) = (Arc::clone(&calls), Arc::clone(&calls));
             // Classes are sometimes scalable: the factory then also runs
@@ -391,8 +436,13 @@ fn serving_conserves_requests_property() {
             let (ma, mb) = (na + g.usize(0, 2), nb + g.usize(0, 1));
             let pool = ReplicaPool::build(vec![
                 ReplicaSpec::new("a", na, g.usize(1, 4), move |_| {
+                    let inner = if delta_cls {
+                        Functional::new(qa.clone()).with_delta_store(0.35, Arc::clone(&store))
+                    } else {
+                        Functional::new(qa.clone())
+                    };
                     Ok(Box::new(Counting {
-                        inner: Functional::new(qa.clone()),
+                        inner,
                         calls: Arc::clone(&ca),
                         fail_after,
                         delay,
@@ -435,6 +485,20 @@ fn serving_conserves_requests_property() {
                 );
                 let per_class: usize = r.metrics.per_class.iter().map(|c| c.served).sum();
                 assert_eq!(per_class, r.metrics.total);
+                // Delta books: every served request carries exactly one
+                // execution status, and each request crosses the sticky
+                // router at most once.
+                let d = &r.metrics.delta;
+                assert_eq!(
+                    d.attempts() + d.not_applicable,
+                    r.metrics.total,
+                    "delta statuses must partition the served stream"
+                );
+                assert!(
+                    d.sticky_hits + d.sticky_cold + d.sticky_retired + d.sticky_capacity
+                        <= n_requests,
+                    "sticky outcomes exceed the offered stream"
+                );
                 // The per-class deadline sheds are exactly the global
                 // router-side count, and every served request was scored
                 // against its deadline when one existed.
@@ -750,6 +814,7 @@ fn autoscaler_scales_up_under_pressure_and_down_when_idle() {
                         events,
                         arrival: Instant::now(),
                         tenant: DEFAULT_TENANT,
+                        stream: None,
                     }));
                 }
                 std::thread::sleep(gap);
@@ -872,6 +937,132 @@ fn seeded_cost_profile_eliminates_probes() {
     );
 }
 
+/// The delta serving tentpole, end to end: an overlapping multi-stream
+/// source through a two-class pool whose first class runs incremental
+/// execution behind sticky routing, with a twitchy autoscaler churning
+/// replicas underneath. Delta + stickiness are performance machinery
+/// only — the prediction multiset must be identical to a plain pool's,
+/// conservation must hold, and the delta/sticky books must actually move.
+#[test]
+fn sticky_delta_pool_matches_plain_pool_predictions() {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+
+    /// Paced delta-capable replica: ~1 ms per request keeps a backlog
+    /// alive long enough for stream affinity to engage mid-run.
+    struct Paced {
+        inner: Functional,
+        delay: Duration,
+    }
+    impl Backend for Paced {
+        fn name(&self) -> &str {
+            "paced"
+        }
+        fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+            std::thread::sleep(self.delay);
+            self.inner.classify(map)
+        }
+        fn supports_delta(&self) -> bool {
+            self.inner.supports_delta()
+        }
+        fn classify_batch_delta(
+            &self,
+            streams: &[Option<u64>],
+            maps: &[SparseMap<f32>],
+        ) -> Vec<Result<(Classification, DeltaStatus), BackendError>> {
+            std::thread::sleep(self.delay * maps.len() as u32);
+            self.inner.classify_batch_delta(streams, maps)
+        }
+        fn evict_stream(&self, stream: u64) {
+            self.inner.evict_stream(stream);
+        }
+    }
+
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let mk_pool = |delta: bool| {
+        let (qa, qb) = (qnet.clone(), qnet.clone());
+        // One cache store shared across the class's replicas: scale-ups
+        // and retirements move streams between workers without losing
+        // their cached windows.
+        let store: DeltaStore = Arc::new(Mutex::new(HashMap::new()));
+        ReplicaPool::build(vec![
+            ReplicaSpec::new("a", 1, 2, move |_| {
+                let inner = if delta {
+                    Functional::new(qa.clone()).with_delta_store(1.0, Arc::clone(&store))
+                } else {
+                    Functional::new(qa.clone())
+                };
+                Ok(Box::new(Paced { inner, delay: Duration::from_millis(1) }))
+            })
+            .with_max_replicas(3),
+            ReplicaSpec::new("b", 1, 2, move |_| {
+                Ok(Box::new(Paced {
+                    inner: Functional::new(qb.clone()),
+                    delay: Duration::from_millis(1),
+                }))
+            }),
+        ])
+        .expect("pool build")
+    };
+    let n_requests = 48;
+    let cfg = ServerConfig {
+        n_requests,
+        seed: 17,
+        clip: 8.0,
+        queue_depth: 4,
+        drop_policy: DropPolicy::Block,
+        batch: 2,
+        overlap: 0.9,
+        streams: 2,
+        autoscale: Some(AutoscaleConfig {
+            interval: Duration::from_millis(2),
+            window: Duration::from_millis(20),
+            high_backlog: 0.5,
+            low_util: 0.9,
+        }),
+        ..Default::default()
+    };
+
+    let with_delta = run_pool(&profile, &mk_pool(true), &cfg).expect("delta run");
+    let plain = run_pool(&profile, &mk_pool(false), &cfg).expect("plain run");
+    for r in [&with_delta, &plain] {
+        assert_eq!(
+            r.metrics.total + r.metrics.dropped + r.metrics.deadline_drops(),
+            n_requests,
+            "conservation must hold under sticky routing and churn"
+        );
+        assert_eq!(r.metrics.total, n_requests, "blocking admission is lossless");
+    }
+    assert_eq!(
+        prediction_multiset(&with_delta),
+        prediction_multiset(&plain),
+        "delta execution + sticky routing changed predictions"
+    );
+
+    let d = &with_delta.metrics.delta;
+    assert!(d.attempts() > 0, "the delta class must see stream-tagged requests");
+    assert!(d.hits >= 1, "an overlapping stream on a warm shared cache must delta-hit");
+    assert_eq!(
+        d.attempts() + d.not_applicable,
+        with_delta.metrics.total,
+        "delta statuses must partition the served stream"
+    );
+    assert!(
+        d.sticky_hits + d.sticky_cold + d.sticky_retired + d.sticky_capacity > 0,
+        "the sticky router must have made at least one placement decision"
+    );
+
+    let p = &plain.metrics.delta;
+    assert_eq!(p.attempts(), 0, "a delta-free pool must never attempt delta execution");
+    assert_eq!(p.not_applicable, plain.metrics.total);
+    assert_eq!(
+        p.sticky_hits + p.sticky_cold + p.sticky_retired + p.sticky_capacity,
+        0,
+        "sticky routing must stay inert without a delta-capable class"
+    );
+}
+
 /// End-to-end over the real ingestion boundary: a generated dataset
 /// replayed (time-compressed) through the serving runtime with a generous
 /// SLO serves every sample within deadline — the `serve --source
@@ -980,7 +1171,13 @@ fn multi_tenant_serving_conserves_requests_property() {
                     let label = self.emitted % self.profile.n_classes;
                     self.emitted += 1;
                     let events = self.profile.sample(label, &mut self.rng);
-                    Ok(Some(SourcedRequest { label, events, arrival: Instant::now(), tenant }))
+                    Ok(Some(SourcedRequest {
+                        label,
+                        events,
+                        arrival: Instant::now(),
+                        tenant,
+                        stream: None,
+                    }))
                 }
                 Some(Err(tag)) => {
                     let e = IngestError::recoverable("injected mid-stream reject");
