@@ -492,8 +492,8 @@ impl EventSource for ReplaySource {
             let msg = format!("{}: sample {i}: {e}", self.name);
             return Err(self.fail(msg));
         }
-        let label = u32::from_le_bytes(prefix[0..4].try_into().unwrap()) as usize;
-        let ne = u32::from_le_bytes(prefix[4..8].try_into().unwrap()) as usize;
+        let label = u32::from_le_bytes([prefix[0], prefix[1], prefix[2], prefix[3]]) as usize;
+        let ne = u32::from_le_bytes([prefix[4], prefix[5], prefix[6], prefix[7]]) as usize;
         let need = (ne as u64).saturating_mul(io::EVENT_BYTES);
         let later_prefixes = ((self.total - 1 - i) as u64) * io::SAMPLE_HEADER_BYTES;
         if need.saturating_add(later_prefixes) > self.remaining_bytes {
@@ -707,8 +707,8 @@ impl EventSource for TailSource {
                     .map_err(|e| self.io_err(e))?;
                 let mut prefix = [0u8; 8];
                 self.file.read_exact(&mut prefix).map_err(|e| self.io_err(e))?;
-                let label = u32::from_le_bytes(prefix[0..4].try_into().unwrap());
-                let ne = u32::from_le_bytes(prefix[4..8].try_into().unwrap()) as u64;
+                let label = u32::from_le_bytes([prefix[0], prefix[1], prefix[2], prefix[3]]);
+                let ne = u32::from_le_bytes([prefix[4], prefix[5], prefix[6], prefix[7]]) as u64;
                 if ne > MAX_TAIL_EVENTS {
                     return Err(IngestError::fatal(format!(
                         "{}: sample at byte {} claims {ne} events (cap {MAX_TAIL_EVENTS}) — \

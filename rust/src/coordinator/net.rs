@@ -63,6 +63,17 @@ pub const PACKET_EVENT_BYTES: usize = 10;
 /// cap so producers need one packetizer.
 pub const MAX_PACKET_EVENTS: usize = (65507 - PACKET_HEADER_BYTES) / PACKET_EVENT_BYTES;
 
+/// Checked little-endian header reads: the only way wire bytes become
+/// integers here. Callers bound-check `b` before field extraction, and
+/// widths are explicit — no `try_into().unwrap()`, no bare `as`.
+fn le_u16(b: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes([b[at], b[at + 1]])
+}
+
+fn le_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
 /// A decoded packet, before boundary validation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Packet {
@@ -84,7 +95,9 @@ pub fn encode_packet(tenant: u16, label: u32, events: &[Event]) -> Vec<u8> {
     out.extend_from_slice(&NET_VERSION.to_le_bytes());
     out.extend_from_slice(&tenant.to_le_bytes());
     out.extend_from_slice(&label.to_le_bytes());
-    out.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    // lint:allow(panic): the assert above bounds events.len() far below u32::MAX
+    let count = u32::try_from(events.len()).expect("event count fits u32");
+    out.extend_from_slice(&count.to_le_bytes());
     for e in events {
         out.extend_from_slice(&e.t_us.to_le_bytes());
         out.extend_from_slice(&e.x.to_le_bytes());
@@ -106,17 +119,17 @@ pub fn decode_packet(buf: &[u8]) -> Result<Packet, String> {
             buf.len()
         ));
     }
-    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    let magic = le_u32(buf, 0);
     if magic != NET_MAGIC {
         return Err(format!("bad magic {magic:#010x}"));
     }
-    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    let version = le_u16(buf, 4);
     if version != NET_VERSION {
         return Err(format!("unsupported packet version {version}"));
     }
-    let tenant = u16::from_le_bytes(buf[6..8].try_into().unwrap());
-    let label = u32::from_le_bytes(buf[8..12].try_into().unwrap());
-    let ne = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    let tenant = le_u16(buf, 6);
+    let label = le_u32(buf, 8);
+    let ne = usize::try_from(le_u32(buf, 12)).map_err(|e| e.to_string())?;
     if ne > MAX_PACKET_EVENTS {
         return Err(format!("claims {ne} event(s) (cap {MAX_PACKET_EVENTS})"));
     }
@@ -227,7 +240,7 @@ fn item_from_bytes(
         Ok(p) => p,
         Err(e) => return Err(IngestError::recoverable(format!("{what}: {e}"))),
     };
-    let tenant = pkt.tenant as usize;
+    let tenant = usize::from(pkt.tenant);
     if tenant >= cfg.tenants {
         return Err(IngestError::recoverable(format!(
             "{what}: unknown tenant {tenant} (front door has {})",
@@ -236,14 +249,10 @@ fn item_from_bytes(
     }
     let mut events = pkt.events;
     validate_events(&mut events, w, h, cfg.policy, what).map_err(|e| e.with_tenant(tenant))?;
+    let label = usize::try_from(pkt.label)
+        .map_err(|_| IngestError::recoverable(format!("{what}: label {} > usize", pkt.label)))?;
     let stream = conn.map(|c| ((tenant as u64) << 32) | (c & 0xffff_ffff));
-    Ok(SourcedRequest {
-        label: pkt.label as usize,
-        events,
-        arrival: Instant::now(),
-        tenant,
-        stream,
-    })
+    Ok(SourcedRequest { label, events, arrival: Instant::now(), tenant, stream })
 }
 
 /// A socket-backed [`EventSource`]: background receive threads land
@@ -474,7 +483,9 @@ fn serve_connection(
             ReadOutcome::CleanEof => break,
             ReadOutcome::Stopped | ReadOutcome::Failed => return,
         }
-        let len = u32::from_le_bytes(len_buf) as usize;
+        // A u32 length always fits usize on supported targets; a
+        // pathological one lands on MAX and fails the cap check below.
+        let len = usize::try_from(u32::from_le_bytes(len_buf)).unwrap_or(usize::MAX);
         if len < PACKET_HEADER_BYTES || len > frame_cap {
             let _ = tx.send(vec![Err(IngestError::recoverable(format!(
                 "{what}: bad frame length {len} (connection dropped)"
@@ -582,6 +593,44 @@ mod tests {
         assert_eq!(wire.len(), PACKET_HEADER_BYTES + 2 * PACKET_EVENT_BYTES);
         let pkt = decode_packet(&wire).unwrap();
         assert_eq!(pkt, Packet { tenant: 1, label: 7, events });
+    }
+
+    /// Boundary regression for the checked wire casts: the extreme values
+    /// of every narrow header field (tenant u16::MAX, label u32::MAX, the
+    /// exact event-count cap) survive an encode/decode roundtrip bit-for-
+    /// bit, and the decoded extremes widen into a `SourcedRequest` without
+    /// truncation — the failure a bare `as` cast would hide.
+    #[test]
+    fn header_field_extremes_roundtrip_unclipped() {
+        let events = vec![ev(u32::MAX, u16::MAX, u16::MAX)];
+        let wire = encode_packet(u16::MAX, u32::MAX, &events);
+        let pkt = decode_packet(&wire).unwrap();
+        assert_eq!(pkt, Packet { tenant: u16::MAX, label: u32::MAX, events });
+
+        // A packet at exactly the event cap decodes; one past it cannot
+        // even be encoded (and a forged count is rejected by decode —
+        // covered in `decode_rejects_malformed_packets`).
+        let full = vec![ev(1, 1, 1); MAX_PACKET_EVENTS];
+        let wire = encode_packet(0, 0, &full);
+        assert!(wire.len() <= 65507, "cap must keep a packet in one datagram");
+        assert_eq!(decode_packet(&wire).unwrap().events.len(), MAX_PACKET_EVENTS);
+
+        // Widening through the ingest item: a max-tenant packet is
+        // attributed to tenant 65535 (here: rejected as unknown, but with
+        // the *untruncated* index in the message), never aliased to a
+        // small tenant table slot.
+        let cfg = NetConfig { tenants: 2, ..NetConfig::default() };
+        let wire = encode_packet(u16::MAX, 3, &[ev(1, 1, 1)]);
+        let err = item_from_bytes(&wire, "test", 8, 8, &cfg, None).unwrap_err();
+        assert!(err.is_recoverable(), "{err}");
+        assert!(err.to_string().contains("65535"), "{err}");
+
+        // And a max-label packet from a known tenant lands with the label
+        // intact after the u32 -> usize widening.
+        let wire = encode_packet(1, u32::MAX, &[ev(1, 1, 1)]);
+        let req = item_from_bytes(&wire, "test", 8, 8, &cfg, Some(9)).unwrap();
+        assert_eq!(req.label, u32::MAX as usize);
+        assert_eq!(req.tenant, 1);
     }
 
     #[test]

@@ -107,6 +107,8 @@ impl<T> AdmissionQueue<T> {
                 return Ok(None);
             }
             match self.policy {
+                // lint:allow(panic): condvar wait re-acquires the state lock;
+                // poisoning is the lock-poisoning idiom (holders don't panic)
                 DropPolicy::Block => st = self.not_full.wait(st).unwrap(),
                 DropPolicy::DropOldest => {
                     let victim = st.items.pop_front();
@@ -155,6 +157,8 @@ impl<T> AdmissionQueue<T> {
             if st.closed {
                 return None;
             }
+            // lint:allow(panic): condvar wait re-acquires the state lock;
+            // poisoning is the lock-poisoning idiom (holders don't panic)
             st = self.not_empty.wait(st).unwrap();
         }
     }
@@ -249,6 +253,8 @@ impl<T> AdmissionQueue<T> {
             if cancelled() {
                 return rejected;
             }
+            // lint:allow(panic): condvar wait re-acquires the state lock;
+            // poisoning is the lock-poisoning idiom (holders don't panic)
             st = self.not_empty.wait(st).unwrap();
         }
     }

@@ -711,6 +711,16 @@ struct WorkerOutput {
 /// the router for cost routing), then serves the remainder itself — no
 /// pinned request is ever stranded or double-served.
 #[allow(clippy::too_many_arguments)]
+/// Join one pipeline thread, funneling a panic into the run's
+/// first-error slot instead of tearing down the coordinator mid-shutdown.
+/// The remaining stages still get joined and their outputs collected.
+fn join_noting<T>(r: std::thread::Result<T>, what: &str, first_error: &Mutex<Option<String>>) {
+    if r.is_err() {
+        let msg = format!("{what} thread panicked");
+        first_error.lock().unwrap_or_else(|e| e.into_inner()).get_or_insert_with(|| msg);
+    }
+}
+
 fn worker_loop(
     wid: usize,
     ci: usize,
@@ -1050,6 +1060,8 @@ fn run_autoscaler<'scope, 'a: 'scope>(
             let (lock, cv) = stop;
             let mut stopped = lock.lock().unwrap();
             if !*stopped {
+                // lint:allow(panic): condvar poisoning is the lock-poisoning
+                // idiom — holders never panic while flipping the stop flag
                 stopped = cv.wait_timeout(stopped, auto.interval).unwrap().0;
             }
             if *stopped {
@@ -1578,8 +1590,7 @@ fn serve_classes(
         let events_ref = &scaling_events;
         let next_wid_ref = &next_wid;
         let scalable = classes.iter().any(|c| c.max > c.min);
-        let controller = (cfg.autoscale.is_some() && scalable).then(|| {
-            let auto = cfg.autoscale.clone().unwrap();
+        let controller = cfg.autoscale.clone().filter(|_| scalable).map(|auto| {
             s.spawn(move || {
                 run_autoscaler(
                     &auto, s, classes_ref, tenants_ref, has_router, ingress_ref, t_start,
@@ -1590,13 +1601,13 @@ fn serve_classes(
         });
 
         for h in handles {
-            h.join().expect("worker thread");
+            join_noting(h.join(), "worker", error_ref);
         }
         if let Some(h) = router {
-            h.join().expect("router thread");
+            join_noting(h.join(), "router", error_ref);
         }
-        repr.join().expect("repr thread");
-        src_thread.join().expect("source thread");
+        join_noting(repr.join(), "repr", error_ref);
+        join_noting(src_thread.join(), "source", error_ref);
         // The stream has drained: stop the controller. Workers it spawned
         // exit on their own (queues are closed) and are joined by the
         // scope before `outputs_mx` is read below.
@@ -1606,11 +1617,13 @@ fn serve_classes(
             cv.notify_all();
         }
         if let Some(h) = controller {
-            h.join().expect("autoscaler thread");
+            join_noting(h.join(), "autoscaler", error_ref);
         }
     });
 
-    let mut outputs = outputs_mx.into_inner().unwrap();
+    // Poisoning is survivable here: a panicking worker was already noted
+    // in `first_error` by `join_noting`, so take whatever was recorded.
+    let mut outputs = outputs_mx.into_inner().unwrap_or_else(|e| e.into_inner());
     outputs.sort_by_key(|o| o.wid);
     let (submitted, dropped, _still_queued) = ingress.stats();
     let processed: usize = outputs.iter().map(|o| o.records.len()).sum();
@@ -1623,7 +1636,7 @@ fn serve_classes(
     // never occupied a slot, so they are outside the queue's own books).
     let shed = dropped + quota_drops.load(Ordering::SeqCst);
 
-    if let Some(msg) = first_error.into_inner().unwrap() {
+    if let Some(msg) = first_error.into_inner().unwrap_or_else(|e| e.into_inner()) {
         return Err(PipelineError { msg, completed: processed, in_flight, dropped: shed });
     }
     // Clean completion conserves requests: everything admitted was either
@@ -1640,7 +1653,7 @@ fn serve_classes(
         deadline_ingress: deadline_ingress.load(Ordering::SeqCst),
         deadline_router: deadline_shed,
         ingest_rejects: ingest_rejects.load(Ordering::SeqCst),
-        scaling_events: scaling_events.into_inner().unwrap(),
+        scaling_events: scaling_events.into_inner().unwrap_or_else(|e| e.into_inner()),
         // What `--cost-profile` rewrites at shutdown: every class's final
         // EWMA state (seeded knowledge + everything learned this run).
         cost_profile: CostProfile {

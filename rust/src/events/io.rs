@@ -123,6 +123,12 @@ fn invalid(msg: String) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
 }
 
+/// Widen an on-disk u32 count to usize, checked — a 16-bit target would
+/// silently truncate under a bare `as usize`.
+fn usize_of(v: u32, what: &str) -> std::io::Result<usize> {
+    usize::try_from(v).map_err(|_| invalid(format!("{what} {v} exceeds usize on this target")))
+}
+
 /// Read and validate the file header, returning `(w, h, n)`.
 pub(crate) fn read_file_header(f: &mut impl Read) -> std::io::Result<(usize, usize, usize)> {
     let magic = get_u32(f)?;
@@ -133,9 +139,9 @@ pub(crate) fn read_file_header(f: &mut impl Read) -> std::io::Result<(usize, usi
     if version != VERSION {
         return Err(invalid(format!("unsupported version {version}")));
     }
-    let w = get_u32(f)? as usize;
-    let h = get_u32(f)? as usize;
-    let n = get_u32(f)? as usize;
+    let w = usize_of(get_u32(f)?, "width")?;
+    let h = usize_of(get_u32(f)?, "height")?;
+    let n = usize_of(get_u32(f)?, "sample count")?;
     Ok((w, h, n))
 }
 
@@ -184,7 +190,7 @@ pub fn read_dataset(path: &Path) -> std::io::Result<(usize, usize, Vec<Sample>)>
         }
         remaining -= SAMPLE_HEADER_BYTES;
         let label = get_u32(&mut f)?;
-        let ne = get_u32(&mut f)? as usize;
+        let ne = usize_of(get_u32(&mut f)?, "event count")?;
         let need = (ne as u64).saturating_mul(EVENT_BYTES);
         // Later samples' fixed prefixes are spoken for: this sample's
         // events may only claim what's left after them.
@@ -217,6 +223,7 @@ pub fn generate_dataset_files(
         for class in 0..profile.n_classes {
             for _ in 0..n {
                 out.push(Sample {
+                    // lint:allow(cast): class < n_classes, far below u32::MAX
                     label: class as u32,
                     events: profile.sample(class, rng),
                 });

@@ -45,6 +45,7 @@ pub fn time_surface(events: &[Event], w: usize, h: usize, tau_us: f32) -> Sparse
     if events.is_empty() {
         return SparseMap::empty(w, h, 2);
     }
+    // lint:allow(panic): non-empty guaranteed by the early return above
     let t_end = events.last().unwrap().t_us as f32;
     let mut last = vec![[f32::NEG_INFINITY; 2]; w * h];
     let mut touched: Vec<u32> = Vec::new();

@@ -158,6 +158,8 @@ pub fn generate(scene: &Scene, params: &SynthParams, rng: &mut Rng) -> Vec<Event
                     j += 1;
                 }
                 (None, None) => break,
+                // lint:allow(panic): arms above cover every (a, b) shape;
+                // this placates exhaustiveness over the guard conditions
                 _ => unreachable!(),
             }
         }

@@ -22,3 +22,4 @@ pub mod nas;
 pub mod runtime;
 pub mod coordinator;
 pub mod report;
+pub mod lint;

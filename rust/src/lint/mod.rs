@@ -1,0 +1,542 @@
+//! In-tree static analysis: `esda lint`.
+//!
+//! A dependency-free invariant checker for the repo's own source tree.
+//! The dynamic checks (allocator counters, property tests) only prove
+//! invariants on paths the tests actually execute; this pass proves the
+//! textual ones everywhere — including fallback branches — and runs
+//! even where `cargo test` cannot. Rules:
+//!
+//! - **panic** — no `.unwrap()` / `.expect(` / `panic!` /
+//!   `unreachable!` / `todo!` in the serving path (`coordinator/`,
+//!   `model/plan.rs`, `sparse/`, `events/`). The mutex-poisoning idiom
+//!   `.lock().unwrap()` is allowed by pattern (a poisoned lock means a
+//!   worker already panicked — propagating is the correct response);
+//!   anything else needs `// lint:allow(panic): <reason>`.
+//! - **hot-alloc** — no allocating constructors (`Vec::new`, `vec![`,
+//!   `with_capacity`, `.to_vec()`, `.clone()`, `.collect`, `format!`,
+//!   `Box::new`, `String::from`) inside regions bracketed by
+//!   `// lint: hot-path` … `// lint: hot-path end` markers (the
+//!   steady-state execute/delta kernels).
+//! - **cast** — no bare narrowing `as u16` / `as u32` / `as usize` in
+//!   the wire-format files (`events/io.rs`, `coordinator/net.rs`);
+//!   conversions must go through `try_from`-based checked helpers.
+//! - **drift-metrics** — every `usize` counter field of `Metrics` /
+//!   `TenantStats` / `ClassStats` / `DeltaMetrics` must be referenced
+//!   in `report/` (a counter nobody renders is a books-keeping bug
+//!   waiting to be re-found by hand).
+//! - **drift-flags** — every `--flag` string parsed via the `Args`
+//!   accessors in `util/cli.rs` / `main.rs` must appear in README.md.
+//! - **print** — `println!` / `eprintln!` are forbidden in library
+//!   modules outside `report/` and `main.rs` (libraries return data;
+//!   the binary renders it).
+//!
+//! Any rule can be suppressed site-by-site with
+//! `// lint:allow(<rule>): <reason>` on the same or preceding line —
+//! the reason is mandatory, an annotation without one is itself a
+//! finding. Test items (`#[cfg(test)]` / `#[test]`) are exempt from
+//! every rule.
+
+pub mod scan;
+
+use scan::ScannedLine;
+use std::path::{Path, PathBuf};
+
+/// One source file presented to the linter.
+pub struct SourceFile {
+    /// Path relative to the crate's `src/` root, `/`-separated (rule
+    /// scoping keys off this).
+    pub rel_path: String,
+    pub text: String,
+}
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+    /// Suggested remediation, rendered by `esda lint --fix-plan`.
+    pub fix: String,
+}
+
+impl Finding {
+    /// The canonical `file:line: rule: message` form.
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+const PANIC_TOKENS: [&str; 5] = [".unwrap()", ".expect(", "panic!", "unreachable!", "todo!"];
+const ALLOC_TOKENS: [&str; 9] = [
+    "Vec::new",
+    "vec![",
+    "with_capacity",
+    ".to_vec()",
+    ".clone()",
+    ".collect",
+    "format!",
+    "Box::new",
+    "String::from",
+];
+const NARROW_CASTS: [&str; 3] = ["u16", "u32", "usize"];
+const CAST_FILES: [&str; 2] = ["events/io.rs", "coordinator/net.rs"];
+const METRIC_STRUCTS: [&str; 4] = ["Metrics", "TenantStats", "ClassStats", "DeltaMetrics"];
+const FLAG_ACCESSORS: [&str; 6] =
+    [".get(", ".get_or(", ".get_usize(", ".get_u64(", ".get_f64(", ".has("];
+const FLAG_FILES: [&str; 2] = ["util/cli.rs", "main.rs"];
+
+/// Lint a set of scanned sources. `readme` is the README text the
+/// drift-flags rule checks against (the rule is skipped when `None` —
+/// e.g. when linting a bare file list with no README in reach).
+pub fn lint_sources(files: &[SourceFile], readme: Option<&str>) -> Vec<Finding> {
+    let scanned: Vec<(&SourceFile, scan::Scanned)> =
+        files.iter().map(|f| (f, scan::scan(&f.text))).collect();
+    let mut out = Vec::new();
+    for (f, s) in &scanned {
+        rule_panic(f, s, &mut out);
+        rule_hot_alloc(f, s, &mut out);
+        rule_cast(f, s, &mut out);
+        rule_print(f, s, &mut out);
+    }
+    rule_drift_metrics(&scanned, &mut out);
+    rule_drift_flags(&scanned, readme, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+/// Collect `.rs` files under each path (files taken as-is, directories
+/// walked recursively), with rel paths taken from the last `src`
+/// component so rule scoping works wherever the walk was rooted.
+pub fn collect_files(paths: &[PathBuf]) -> Result<Vec<SourceFile>, String> {
+    let mut found = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            walk(p, &mut found)?;
+        } else {
+            found.push(p.clone());
+        }
+    }
+    found.sort();
+    found.dedup();
+    let mut files = Vec::new();
+    for p in found {
+        let text = std::fs::read_to_string(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+        files.push(SourceFile { rel_path: rel_of(&p), text });
+    }
+    Ok(files)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in rd {
+        let p = entry.map_err(|e| format!("{}: {e}", dir.display()))?.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_of(p: &Path) -> String {
+    let comps: Vec<String> =
+        p.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    match comps.iter().rposition(|c| c == "src") {
+        Some(pos) => comps[pos + 1..].join("/"),
+        None => comps.join("/"),
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of `tok` in `code`, requiring a non-identifier char (or
+/// line start) before tokens that begin with an identifier char.
+fn token_positions(code: &str, tok: &str) -> Vec<usize> {
+    let needs_boundary = tok.starts_with(is_ident);
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(tok) {
+        let at = from + p;
+        let prev_ident = code[..at].chars().next_back().is_some_and(is_ident);
+        if !needs_boundary || !prev_ident {
+            out.push(at);
+        }
+        from = at + tok.len();
+    }
+    out
+}
+
+/// Does `word` occur in `hay` with non-identifier chars on both sides?
+fn word_in(hay: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(word) {
+        let at = from + p;
+        let pre = hay[..at].chars().next_back().is_some_and(is_ident);
+        let post = hay[at + word.len()..].chars().next().is_some_and(is_ident);
+        if !pre && !post {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+/// Parse a `lint:allow(<rule>): <reason>` directive out of comment
+/// text. Returns `(rule, reason)`; the reason is empty when the
+/// mandatory `: <reason>` tail is missing.
+fn allow_marker(comment: &str) -> Option<(&str, &str)> {
+    let pos = comment.find("lint:allow(")?;
+    let rest = &comment[pos + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim();
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':').unwrap_or("").trim();
+    Some((rule, reason))
+}
+
+enum Allow {
+    No,
+    Yes,
+    /// Marker present but reasonless — 0-based line of the marker.
+    MissingReason(usize),
+}
+
+/// Look for a matching allow directive on the violation's own line or
+/// on the run of pure-comment lines immediately above it (doc comments
+/// included, so a directive can sit among a field's docs).
+fn allow_state(lines: &[ScannedLine], idx: usize, rule: &str) -> Allow {
+    let mut candidates = vec![idx];
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.code.trim().is_empty() && !l.comment.trim().is_empty() {
+            candidates.push(j);
+        } else {
+            break;
+        }
+    }
+    for &k in &candidates {
+        if let Some((r, reason)) = allow_marker(&lines[k].comment) {
+            if r == rule {
+                if reason.is_empty() {
+                    return Allow::MissingReason(k);
+                }
+                return Allow::Yes;
+            }
+        }
+    }
+    Allow::No
+}
+
+/// Push a finding unless an allow directive suppresses it; a
+/// reasonless directive becomes its own finding.
+fn emit(
+    out: &mut Vec<Finding>,
+    file: &str,
+    lines: &[ScannedLine],
+    idx: usize,
+    rule: &'static str,
+    message: String,
+    fix: String,
+) {
+    match allow_state(lines, idx, rule) {
+        Allow::Yes => {}
+        Allow::MissingReason(k) => out.push(Finding {
+            file: file.to_string(),
+            line: k + 1,
+            rule,
+            message: format!("lint:allow({rule}) without a reason"),
+            fix: format!("spell it `// lint:allow({rule}): <why this site is safe>`"),
+        }),
+        Allow::No => out.push(Finding {
+            file: file.to_string(),
+            line: idx + 1,
+            rule,
+            message,
+            fix,
+        }),
+    }
+}
+
+fn panic_scoped(rel: &str) -> bool {
+    rel == "model/plan.rs"
+        || ["coordinator/", "sparse/", "events/"].iter().any(|d| rel.starts_with(d))
+}
+
+fn rule_panic(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
+    if !panic_scoped(&f.rel_path) {
+        return;
+    }
+    for (i, line) in s.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            for at in token_positions(&line.code, tok) {
+                if tok == ".unwrap()" && lock_idiom(&s.lines, i, at + tok.len()) {
+                    continue;
+                }
+                emit(
+                    out,
+                    &f.rel_path,
+                    &s.lines,
+                    i,
+                    "panic",
+                    format!("`{tok}` on the serving path can panic"),
+                    "handle the error, or annotate `// lint:allow(panic): <why>`".to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Is the `.unwrap()` ending at byte `end` of line `i` the tail of a
+/// `.lock().unwrap()` chain? Checked whitespace-free across up to two
+/// preceding lines so rustfmt-split chains still match.
+fn lock_idiom(lines: &[ScannedLine], i: usize, end: usize) -> bool {
+    let mut ctx = String::new();
+    for line in &lines[i.saturating_sub(2)..i] {
+        ctx.push_str(&line.code);
+    }
+    ctx.push_str(&lines[i].code[..end]);
+    ctx.retain(|c| !c.is_whitespace());
+    ctx.ends_with(".lock().unwrap()")
+}
+
+fn rule_hot_alloc(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
+    let mut open: Option<usize> = None;
+    for (i, line) in s.lines.iter().enumerate() {
+        if let Some(rest) = line.comment.trim().strip_prefix("lint: hot-path") {
+            if rest.trim_start().starts_with("end") {
+                if open.take().is_none() {
+                    out.push(Finding {
+                        file: f.rel_path.clone(),
+                        line: i + 1,
+                        rule: "hot-alloc",
+                        message: "`lint: hot-path end` without an open region".to_string(),
+                        fix: "open the region with `// lint: hot-path`".to_string(),
+                    });
+                }
+            } else if open.is_some() {
+                out.push(Finding {
+                    file: f.rel_path.clone(),
+                    line: i + 1,
+                    rule: "hot-alloc",
+                    message: "nested `lint: hot-path` marker in an open region".to_string(),
+                    fix: "close the previous region with `// lint: hot-path end`".to_string(),
+                });
+            } else {
+                open = Some(i);
+            }
+            continue;
+        }
+        if open.is_none() || line.in_test {
+            continue;
+        }
+        for tok in ALLOC_TOKENS {
+            for _ in token_positions(&line.code, tok) {
+                emit(
+                    out,
+                    &f.rel_path,
+                    &s.lines,
+                    i,
+                    "hot-alloc",
+                    format!("`{tok}` allocates inside a hot-path region"),
+                    "reuse arena scratch, or allocate at compile/setup time".to_string(),
+                );
+            }
+        }
+    }
+    if let Some(i) = open {
+        out.push(Finding {
+            file: f.rel_path.clone(),
+            line: i + 1,
+            rule: "hot-alloc",
+            message: "hot-path region opened here is never closed".to_string(),
+            fix: "add `// lint: hot-path end` after the kernel".to_string(),
+        });
+    }
+}
+
+fn rule_cast(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
+    if !CAST_FILES.contains(&f.rel_path.as_str()) {
+        return;
+    }
+    for (i, line) in s.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for at in token_positions(&line.code, " as ") {
+            let after = line.code[at + 4..].trim_start();
+            let ident: String = after.chars().take_while(|&c| is_ident(c)).collect();
+            if NARROW_CASTS.contains(&ident.as_str()) {
+                emit(
+                    out,
+                    &f.rel_path,
+                    &s.lines,
+                    i,
+                    "cast",
+                    format!("bare `as {ident}` on the wire path truncates silently"),
+                    format!("use `{ident}::try_from(..)` or a checked helper"),
+                );
+            }
+        }
+    }
+}
+
+fn rule_print(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
+    if f.rel_path == "main.rs" || f.rel_path.starts_with("report/") {
+        return;
+    }
+    for (i, line) in s.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for tok in ["println!", "eprintln!"] {
+            for _ in token_positions(&line.code, tok) {
+                emit(
+                    out,
+                    &f.rel_path,
+                    &s.lines,
+                    i,
+                    "print",
+                    format!("`{tok}` in a library module"),
+                    "return data and let main.rs / report render it".to_string(),
+                );
+            }
+        }
+    }
+}
+
+fn rule_drift_metrics(scanned: &[(&SourceFile, scan::Scanned)], out: &mut Vec<Finding>) {
+    let metrics = scanned.iter().find(|(f, _)| f.rel_path == "coordinator/metrics.rs");
+    let Some((mf, ms)) = metrics else {
+        return;
+    };
+    let mut hay = String::new();
+    for (f, s) in scanned {
+        if !f.rel_path.starts_with("report/") {
+            continue;
+        }
+        for l in &s.lines {
+            if !l.in_test {
+                hay.push_str(&l.code);
+                hay.push('\n');
+            }
+        }
+    }
+    if hay.is_empty() {
+        return;
+    }
+    for strukt in METRIC_STRUCTS {
+        for (idx, field) in counter_fields(&ms.lines, strukt) {
+            if !word_in(&hay, &field) {
+                emit(
+                    out,
+                    &mf.rel_path,
+                    &ms.lines,
+                    idx,
+                    "drift-metrics",
+                    format!("counter `{strukt}.{field}` is never referenced in report/"),
+                    "render it in report/, or annotate why it is internal-only".to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// `usize` fields of `pub struct <strukt>`: (0-based line, name).
+fn counter_fields(lines: &[ScannedLine], strukt: &str) -> Vec<(usize, String)> {
+    let pat = format!("pub struct {strukt}");
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        let code = &lines[i].code;
+        if let Some(p) = code.find(&pat) {
+            let next = code[p + pat.len()..].chars().next();
+            if !next.is_some_and(is_ident) {
+                break;
+            }
+        }
+        i += 1;
+    }
+    let mut depth = 0i64;
+    let mut entered = false;
+    while i < lines.len() {
+        let code = &lines[i].code;
+        if entered && depth == 1 {
+            let t = code.trim();
+            if let Some(rest) = t.strip_prefix("pub ") {
+                if let Some(c) = rest.find(':') {
+                    let name = rest[..c].trim();
+                    let ty = rest[c + 1..].trim().trim_end_matches(',');
+                    if ty == "usize" && !name.is_empty() && name.chars().all(is_ident) {
+                        out.push((i, name.to_string()));
+                    }
+                }
+            }
+        }
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    entered = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if entered && depth == 0 {
+            break;
+        }
+        i += 1;
+    }
+    out
+}
+
+fn rule_drift_flags(
+    scanned: &[(&SourceFile, scan::Scanned)],
+    readme: Option<&str>,
+    out: &mut Vec<Finding>,
+) {
+    let Some(readme) = readme else {
+        return;
+    };
+    for (f, s) in scanned {
+        if !FLAG_FILES.contains(&f.rel_path.as_str()) {
+            continue;
+        }
+        for lit in &s.strings {
+            let idx = lit.line - 1;
+            let in_test = match s.lines.get(idx) {
+                Some(l) => l.in_test,
+                None => true,
+            };
+            if in_test {
+                continue;
+            }
+            let p = lit.prefix.trim_end();
+            if !FLAG_ACCESSORS.iter().any(|a| p.ends_with(a)) {
+                continue;
+            }
+            let flag = format!("--{}", lit.value);
+            if !readme.contains(&flag) {
+                emit(
+                    out,
+                    &f.rel_path,
+                    &s.lines,
+                    idx,
+                    "drift-flags",
+                    format!("flag `{flag}` is parsed here but undocumented in README.md"),
+                    format!("document `{flag}` in README.md (or drop the dead flag)"),
+                );
+            }
+        }
+    }
+}

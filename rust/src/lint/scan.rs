@@ -1,0 +1,330 @@
+//! Comment/string/char-aware Rust source scanner for the lint pass.
+//!
+//! The rules in [`crate::lint`] match textual tokens (`.unwrap()`,
+//! `format!`, ` as u32`, …), so the scanner's job is to make that
+//! matching sound: it walks a file character by character tracking
+//! comments, string/raw-string/byte-string literals, char literals (as
+//! distinct from lifetimes), and nested block comments, and produces per
+//! line:
+//!
+//! - `code`: the line with every comment removed and every string/char
+//!   literal reduced to its bare quotes — the only text rules match
+//!   tokens against, so `"call .unwrap()"` in a log message or a doc
+//!   comment can never trip a rule;
+//! - `comment`: the comment text on the line (where `lint:` directives
+//!   live);
+//! - `in_test`: whether the line sits inside a `#[cfg(test)]` /
+//!   `#[test]` item, which every rule skips.
+//!
+//! String literal *values* are still needed by the CLI-drift rule (the
+//! flag names in `args.get_or("dataset", …)`), so the scanner also
+//! emits each literal together with the masked code preceding it on its
+//! line — enough context to tell a flag lookup from any other string.
+
+/// One scanned source line.
+#[derive(Debug, Default)]
+pub struct ScannedLine {
+    /// Masked code: comments stripped, literal contents dropped (their
+    /// delimiting quotes are kept so expression structure survives).
+    pub code: String,
+    /// Concatenated comment text on this line, without the `//` / `/*`
+    /// markers.
+    pub comment: String,
+    /// True when the line is inside a `#[cfg(test)]` or `#[test]` item.
+    pub in_test: bool,
+}
+
+/// A string literal, with enough call-site context to classify it.
+#[derive(Debug)]
+pub struct StrLit {
+    /// 1-based line the literal opens on.
+    pub line: usize,
+    /// Masked code preceding the opening quote on its line.
+    pub prefix: String,
+    /// The literal's raw content (escapes kept verbatim).
+    pub value: String,
+}
+
+/// A whole scanned file.
+#[derive(Debug, Default)]
+pub struct Scanned {
+    pub lines: Vec<ScannedLine>,
+    pub strings: Vec<StrLit>,
+}
+
+enum State {
+    Normal,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Scan `text` into masked lines plus extracted string literals.
+pub fn scan(text: &str) -> Scanned {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Scanned::default();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut lit = String::new();
+    let mut lit_line = 0usize;
+    let mut lit_prefix = String::new();
+    let mut state = State::Normal;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            if matches!(state, State::Str | State::RawStr(_)) {
+                lit.push('\n');
+            }
+            out.lines.push(ScannedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                let next = chars.get(i + 1).copied();
+                let prev_ident = i > 0 && is_ident(chars[i - 1]);
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    lit_prefix = code.clone();
+                    lit_line = out.lines.len() + 1;
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_ident {
+                    // Possible raw/byte string or byte-char prefix:
+                    // r"…", r#"…"#, b"…", br#"…"#, b'…'.
+                    let mut j = i + 1;
+                    let mut raw = c == 'r';
+                    if c == 'b' && chars.get(j).copied() == Some('r') {
+                        raw = true;
+                        j += 1;
+                    }
+                    let mut hashes = 0usize;
+                    while raw && chars.get(j).copied() == Some('#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j).copied() == Some('"') {
+                        // Raw strings take no escapes (even with zero
+                        // hashes), byte strings escape like plain ones.
+                        lit_prefix = code.clone();
+                        lit_line = out.lines.len() + 1;
+                        code.push('"');
+                        state = if raw { State::RawStr(hashes) } else { State::Str };
+                        i = j + 1;
+                    } else if c == 'b' && chars.get(i + 1).copied() == Some('\'') {
+                        // Byte char literal: consume `b`, let the char
+                        // branch below handle the quote.
+                        code.push('b');
+                        i += 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal (`'x'`, `'\…'`) vs. lifetime (`'a`).
+                    let is_char = next == Some('\\')
+                        || (chars.get(i + 2).copied() == Some('\'') && next != Some('\''));
+                    code.push('\'');
+                    i += 1;
+                    if is_char {
+                        while i < chars.len() && chars[i] != '\'' {
+                            if chars[i] == '\\' {
+                                i += 1;
+                            }
+                            i += 1;
+                        }
+                        if i < chars.len() {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        State::Normal
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    lit.push('\\');
+                    if let Some(&e) = chars.get(i + 1) {
+                        if e != '\n' {
+                            lit.push(e);
+                            i += 1;
+                        }
+                    }
+                    i += 1;
+                } else if c == '"' {
+                    code.push('"');
+                    out.strings.push(StrLit {
+                        line: lit_line,
+                        prefix: std::mem::take(&mut lit_prefix),
+                        value: std::mem::take(&mut lit),
+                    });
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    lit.push(c);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                let closes = c == '"'
+                    && (1..=hashes).all(|k| chars.get(i + k).copied() == Some('#'));
+                if closes {
+                    code.push('"');
+                    out.strings.push(StrLit {
+                        line: lit_line,
+                        prefix: std::mem::take(&mut lit_prefix),
+                        value: std::mem::take(&mut lit),
+                    });
+                    state = State::Normal;
+                    i += 1 + hashes;
+                } else {
+                    lit.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.lines.push(ScannedLine { code, comment, in_test: false });
+    }
+    mark_tests(&mut out.lines);
+    out
+}
+
+/// Mark every line inside a `#[cfg(test)]` / `#[test]` item. The
+/// attribute line opens a region at the current brace depth; the region
+/// closes when depth returns there after the item's body was entered.
+/// Nested test attributes inside an open region (e.g. `#[test]` fns in
+/// a `#[cfg(test)] mod`) are already covered by the outer region.
+fn mark_tests(lines: &mut [ScannedLine]) {
+    let mut depth: i64 = 0;
+    let mut region: Option<(i64, bool)> = None;
+    for line in lines.iter_mut() {
+        if region.is_none()
+            && (line.code.contains("#[cfg(test)]") || line.code.contains("#[test]"))
+        {
+            region = Some((depth, false));
+        }
+        if region.is_some() {
+            line.in_test = true;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if let Some((base, false)) = region {
+                        if depth == base + 1 {
+                            region = Some((base, true));
+                        }
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some((base, true)) = region {
+                        if depth == base {
+                            region = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_masked_out_of_code() {
+        let s = scan("let x = \"call .unwrap()\"; // then .unwrap()\n");
+        assert_eq!(s.lines.len(), 1);
+        assert!(!s.lines[0].code.contains("unwrap"), "{:?}", s.lines[0].code);
+        assert!(s.lines[0].comment.contains(".unwrap()"));
+        assert_eq!(s.strings[0].value, "call .unwrap()");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_are_distinguished() {
+        let s = scan("fn f<'a>(x: &'a str) -> char { '\"' }\n");
+        // The quote inside the char literal must not open a string.
+        assert_eq!(s.strings.len(), 0);
+        assert!(s.lines[0].code.contains("fn f<'a>"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings_close_correctly() {
+        let s = scan("let a = r#\"x \" y\"#; let b = b\"z\"; let c = 'q';\n");
+        assert_eq!(s.strings.len(), 2);
+        assert_eq!(s.strings[0].value, "x \" y");
+        assert_eq!(s.strings[1].value, "z");
+    }
+
+    #[test]
+    fn nested_block_comments_stay_comments() {
+        let s = scan("a /* x /* y */ z */ b\n");
+        assert_eq!(s.lines[0].code.replace(' ', ""), "ab");
+        assert!(s.lines[0].comment.contains('y'));
+    }
+
+    #[test]
+    fn test_items_are_marked() {
+        let src =
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let s = scan(src);
+        let flags: Vec<bool> = s.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn string_literal_prefix_carries_the_call_site() {
+        let s = scan("    let v = args.get_or(\"dataset\", \"n_mnist\");\n");
+        assert_eq!(s.strings.len(), 2);
+        assert!(s.strings[0].prefix.trim_end().ends_with(".get_or("));
+        assert_eq!(s.strings[0].value, "dataset");
+        assert!(s.strings[1].prefix.trim_end().ends_with(","));
+    }
+}

@@ -61,6 +61,13 @@
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
+//! - `lint       [--fix-plan] [paths…]`
+//!   run the in-tree static-analysis pass (see `lint`) over `rust/src`
+//!   (or the given files/directories): panic-freedom on the serving
+//!   path, zero-alloc hot-path regions, checked wire casts, and
+//!   metrics/report/CLI drift. Findings print as
+//!   `file:line: rule: message` and the exit code is non-zero when any
+//!   exist; `--fix-plan` adds a suggested remediation per finding.
 
 use esda::coordinator::{
     run_pool, run_pool_source, run_server, run_server_source, Backend, Dense, DropPolicy,
@@ -81,7 +88,7 @@ use esda::util::Rng;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["verbose", "delta"]) {
+    let args = match Args::parse(raw, &["verbose", "delta", "fix-plan"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -96,6 +103,7 @@ fn main() {
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
         "infer" => cmd_infer(&args),
+        "lint" => cmd_lint(&args),
         _ => {
             print_help();
             Ok(())
@@ -110,7 +118,7 @@ fn main() {
 fn print_help() {
     println!(
         "esda — composable dynamic sparse dataflow architecture (FPGA'24 reproduction)\n\
-         usage: esda <gen-data|optimize|simulate|search|serve|infer> [flags]\n\
+         usage: esda <gen-data|optimize|simulate|search|serve|infer|lint> [flags]\n\
          see `rust/src/main.rs` docs for per-command flags"
     );
 }
@@ -531,23 +539,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }
     };
     let m = &r.metrics;
-    let e2e = m.e2e_percentiles();
-    let svc = m.service_percentiles();
-    println!(
-        "{} served / {} offered ({} dropped, {:.1}% drop rate) | accuracy {:.2} | \
-         e2e p50 {} p95 {} p99 {} | svc p50 {} | {:.0} req/s | {} worker(s)",
-        m.total,
-        m.offered(),
-        m.dropped,
-        m.drop_rate() * 100.0,
-        m.accuracy(),
-        esda::util::stats::fmt_secs(e2e.p50),
-        esda::util::stats::fmt_secs(e2e.p95),
-        esda::util::stats::fmt_secs(e2e.p99),
-        esda::util::stats::fmt_secs(svc.p50),
-        m.throughput(),
-        m.per_worker.len(),
-    );
+    println!("{}", esda::report::summary_line(m));
     if m.ingest_rejects > 0 {
         println!(
             "ingest: {} recoverable reject(s) skipped at the source boundary",
@@ -614,4 +606,33 @@ fn cmd_infer(args: &Args) -> Result<(), String> {
     let logits = engine.infer_dense(&dense).map_err(|e| e.to_string())?;
     println!("logits: {logits:?}");
     Ok(())
+}
+
+/// `esda lint [--fix-plan] [paths…]` — run the in-tree static-analysis
+/// pass (panic-freedom, hot-path allocations, wire casts, drift; see
+/// the `lint` module docs) and exit non-zero on any finding.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    use std::path::PathBuf;
+    let mut roots: Vec<PathBuf> = args.positional()[1..].iter().map(PathBuf::from).collect();
+    if roots.is_empty() {
+        let root = ["rust/src", "src"].iter().map(PathBuf::from).find(|p| p.is_dir());
+        roots.push(root.ok_or("no rust/src (or src) here — pass explicit paths to lint")?);
+    }
+    let readme =
+        ["README.md", "../README.md"].iter().find_map(|p| std::fs::read_to_string(p).ok());
+    let files = esda::lint::collect_files(&roots)?;
+    let findings = esda::lint::lint_sources(&files, readme.as_deref());
+    let fix_plan = args.has("fix-plan");
+    for f in &findings {
+        println!("{}", f.render());
+        if fix_plan {
+            println!("    fix: {}", f.fix);
+        }
+    }
+    println!("lint: {} finding(s) across {} file(s)", findings.len(), files.len());
+    if findings.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{} lint finding(s)", findings.len()))
+    }
 }

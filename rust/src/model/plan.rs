@@ -117,6 +117,7 @@ impl ExecPlan {
         let weights_of = |i: usize| -> StepWeights {
             let q = qnet.per_op[i]
                 .as_ref()
+                // lint:allow(panic): compile-time invariant, documented above
                 .unwrap_or_else(|| panic!("op {i} has no quantized weights"));
             StepWeights { w: q.w.clone(), b: q.b.clone(), rq: q.rq }
         };
@@ -166,6 +167,7 @@ impl ExecPlan {
                 Op::Fc { cin, cout } => {
                     let q = qnet.per_op[i]
                         .as_ref()
+                        // lint:allow(panic): compile-time invariant, see above
                         .unwrap_or_else(|| panic!("FC op {i} has no quantized weights"));
                     assert_eq!(q.w.len(), cin * cout, "FC weight shape mismatch");
                     // Transpose to `wt[co * cin + ci]` so each logit's dot
@@ -198,6 +200,7 @@ impl ExecPlan {
         }
     }
 
+    // lint: hot-path — steady-state inference must stay allocation-free
     /// Run the plan over a float input, reusing `ctx`'s arena; returns the
     /// int32 logits (borrowed from the context — copy them out if they must
     /// outlive the next execution).
@@ -305,6 +308,7 @@ impl ExecPlan {
                     ctx.fork_top += 1;
                 }
                 StepKind::ResAdd => {
+                    // lint:allow(panic): plan compiled with balanced forks (compile asserts)
                     let top = ctx.fork_top.checked_sub(1).expect("ResAdd without ResFork");
                     ctx.fork_top = top;
                     conv::residual_add_i8_inplace(&mut ctx.cur, &ctx.forks[top]);
@@ -496,6 +500,7 @@ impl ExecPlan {
                     // (ResAdd asserts token equality), so the frontier at
                     // the add is a superset of the frontier at the fork —
                     // every site the add could change is already dirty.
+                    // lint:allow(panic): plan compiled with balanced forks (compile asserts)
                     let top = ctx.fork_top.checked_sub(1).expect("ResAdd without ResFork");
                     ctx.fork_top = top;
                     conv::residual_add_i8_inplace(&mut ctx.cur, &ctx.forks[top]);
@@ -536,6 +541,7 @@ impl ExecPlan {
         cache.prev_in.copy_from(&ctx.cur);
         self.run_steps(ctx, Some(cache));
     }
+    // lint: hot-path end
 }
 
 /// Why a delta execution fell back to a full recompute.
@@ -632,6 +638,7 @@ impl Default for DeltaCache {
     }
 }
 
+// lint: hot-path — the window diff runs once per request on the delta path
 /// Mark every site whose presence or features differ between two
 /// ravel-ordered maps of identical geometry; returns the marked count.
 fn diff_into(new: &SparseMap<i8>, prev: &SparseMap<i8>, dirty: &mut Bitmap) -> usize {
@@ -665,6 +672,7 @@ fn diff_into(new: &SparseMap<i8>, prev: &SparseMap<i8>, dirty: &mut Bitmap) -> u
     }
     n
 }
+// lint: hot-path end
 
 /// FNV-1a plan fingerprint: step tags, geometry, weights, biases, and the
 /// input scale. Collisions are astronomically unlikely and the stakes are
@@ -704,6 +712,7 @@ fn fingerprint_steps(steps: &[PlanStep], input_scale: f32) -> u64 {
     h
 }
 
+// lint: hot-path — runs once per request before the step list
 /// Quantize a float input map into `out` with the network's input scale —
 /// the arena variant of [`super::exec::quantize_input`].
 fn quantize_into(scale: f32, input: &SparseMap<f32>, out: &mut SparseMap<i8>) {
@@ -714,6 +723,7 @@ fn quantize_into(scale: f32, input: &SparseMap<f32>, out: &mut SparseMap<i8>) {
         out.feats.push(((v / scale).round() as i32).clamp(-128, 127) as i8);
     }
 }
+// lint: hot-path end
 
 /// Per-worker execution context: the buffer arena a plan executes through.
 /// Create once (cheap — all buffers start empty), reuse for every request;

@@ -218,6 +218,31 @@ pub fn tenant_table(m: &crate::coordinator::Metrics) -> Table {
     t
 }
 
+/// The serving headline: volumes, accuracy (rate plus the raw correct
+/// count — the rate alone hides how thin the sample is), end-to-end and
+/// service latency percentiles, throughput, and worker count.
+pub fn summary_line(m: &crate::coordinator::Metrics) -> String {
+    let e2e = m.e2e_percentiles();
+    let svc = m.service_percentiles();
+    format!(
+        "{} served / {} offered ({} dropped, {:.1}% drop rate) | accuracy {:.2} \
+         ({}/{} correct) | e2e p50 {} p95 {} p99 {} | svc p50 {} | {:.0} req/s | {} worker(s)",
+        m.total,
+        m.offered(),
+        m.dropped,
+        m.drop_rate() * 100.0,
+        m.accuracy(),
+        m.correct,
+        m.total,
+        crate::util::stats::fmt_secs(e2e.p50),
+        crate::util::stats::fmt_secs(e2e.p95),
+        crate::util::stats::fmt_secs(e2e.p99),
+        crate::util::stats::fmt_secs(svc.p50),
+        m.throughput(),
+        m.per_worker.len(),
+    )
+}
+
 /// One-line SLO summary — attainment over every *offered* deadline
 /// (sheds and drops count as misses), the served-only figure beside it,
 /// and the deadline-drop breakdown (ingress expiries vs
@@ -255,8 +280,8 @@ pub fn delta_line(m: &crate::coordinator::Metrics) -> Option<String> {
     let pct = |v: f64| if v.is_finite() { format!("{:.1}%", v * 100.0) } else { "-".into() };
     Some(format!(
         "delta inference: {} hit(s) / {} attempt(s) ({}; dirty {}, recomputed {}) | full \
-         recompute: {} cold + {} geometry + {} over-threshold | sticky: {} hit(s), miss {} \
-         cold + {} retired + {} capacity",
+         recompute: {} cold + {} geometry + {} over-threshold | {} outside delta scope | \
+         sticky: {} hit(s), miss {} cold + {} retired + {} capacity",
         d.hits,
         d.attempts(),
         pct(d.hit_rate()),
@@ -265,6 +290,7 @@ pub fn delta_line(m: &crate::coordinator::Metrics) -> Option<String> {
         d.full_cold,
         d.full_geometry,
         d.full_over_threshold,
+        d.not_applicable,
         d.sticky_hits,
         d.sticky_cold,
         d.sticky_retired,
@@ -459,6 +485,19 @@ mod tests {
         assert!(line.contains("0 queue-full"), "{line}");
     }
 
+    /// The headline carries the raw correct count beside the accuracy
+    /// rate, so a thin sample can't hide behind a flattering percentage.
+    #[test]
+    fn summary_line_reports_the_raw_correct_count() {
+        use crate::coordinator::Metrics;
+        let mut m = Metrics::default();
+        m.correct = 3;
+        m.total = 4;
+        let line = summary_line(&m);
+        assert!(line.contains("4 served"), "{line}");
+        assert!(line.contains("(3/4 correct)"), "{line}");
+    }
+
     /// The delta line is absent without delta traffic, renders the
     /// hit/fallback/sticky breakdown when there is, and never shows a
     /// literal NaN even with zero hits.
@@ -481,6 +520,7 @@ mod tests {
         assert!(line.contains("dirty 10.0%"), "{line}");
         assert!(line.contains("recomputed 20.0%"), "{line}");
         assert!(line.contains("2 cold + 0 geometry + 1 over-threshold"), "{line}");
+        assert!(line.contains("0 outside delta scope"), "{line}");
         assert!(line.contains("sticky: 7 hit(s)"), "{line}");
         // All-fallback runs (zero hits) render dashes, never NaN.
         let mut m2 = Metrics::default();

@@ -102,6 +102,7 @@ pub fn conv_kxk_s1_f32(
                 if !bm.get(ix, iy) {
                     continue;
                 }
+                // lint:allow(panic): bitmap set => token present (same map built them)
                 let ni = input.find(ix as u16, iy as u16).expect("bitmap/token mismatch");
                 let nf = input.feat(ni);
                 let off = dy * k + dx;
@@ -152,6 +153,7 @@ pub fn dwconv_kxk_s1_f32(
                 if !bm.get(ix, iy) {
                     continue;
                 }
+                // lint:allow(panic): bitmap set => token present (same map built them)
                 let ni = input.find(ix as u16, iy as u16).unwrap();
                 let nf = input.feat(ni);
                 let off = dy * k + dx;
@@ -209,6 +211,7 @@ pub fn conv_kxk_s2_f32(
                 if !bm.get(ix, iy) {
                     continue;
                 }
+                // lint:allow(panic): bitmap set => token present (same map built them)
                 let ni = input.find(ix as u16, iy as u16).unwrap();
                 let nf = input.feat(ni);
                 let off = dy * k + dx;
@@ -260,6 +263,7 @@ pub fn dwconv_kxk_s2_f32(
                 if !bm.get(ix, iy) {
                     continue;
                 }
+                // lint:allow(panic): bitmap set => token present (same map built them)
                 let ni = input.find(ix as u16, iy as u16).unwrap();
                 let nf = input.feat(ni);
                 let off = dy * k + dx;
@@ -373,6 +377,7 @@ pub fn standard_conv_dense_f32(
 // cycle-level simulator and the golden tests check against. Integer
 // arithmetic makes both paths bit-identical by construction.
 // ---------------------------------------------------------------------------
+// lint: hot-path — arena kernels below must not heap-allocate per call
 
 /// Arena variant of [`conv1x1_i8`]: pointwise loop runs ci-outer/co-inner
 /// so the `[ci][co]` weight rows are walked contiguously.
@@ -1039,6 +1044,7 @@ pub fn dwconv_kxk_s2_i8_delta_into(
     }
     recomputed
 }
+// lint: hot-path end
 
 // ---------------------------------------------------------------------------
 // int8 hardware-exact path — classic allocating API (thin wrappers)

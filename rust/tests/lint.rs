@@ -1,0 +1,237 @@
+//! Fixture tests for the in-tree linter (`esda lint`), one cluster per
+//! rule — each proves the violation is caught, the clean form passes,
+//! and `lint:allow` suppression works (with the reason mandatory) —
+//! plus the self-check: the shipped tree must lint clean, so `esda
+//! lint` in CI is a real gate and not an aspiration.
+
+use esda::lint::{collect_files, lint_sources, SourceFile};
+use std::path::PathBuf;
+
+/// Lint a single in-memory file (no README → drift-flags is skipped).
+fn lint_one(rel: &str, text: &str) -> Vec<String> {
+    lint_files(&[(rel, text)], None)
+}
+
+fn lint_files(files: &[(&str, &str)], readme: Option<&str>) -> Vec<String> {
+    let files: Vec<SourceFile> = files
+        .iter()
+        .map(|(rel, text)| SourceFile { rel_path: rel.to_string(), text: text.to_string() })
+        .collect();
+    lint_sources(&files, readme).iter().map(|f| f.render()).collect()
+}
+
+fn assert_clean(findings: &[String]) {
+    assert!(findings.is_empty(), "expected no findings, got:\n{}", findings.join("\n"));
+}
+
+// ---------------------------------------------------------------- panic
+
+#[test]
+fn panic_rule_catches_unwrap_on_the_serving_path() {
+    let found = lint_one("coordinator/fixture.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n");
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].starts_with("coordinator/fixture.rs:1: panic:"), "{}", found[0]);
+    assert!(found[0].contains(".unwrap()"), "{}", found[0]);
+}
+
+#[test]
+fn panic_rule_catches_every_token_and_reports_each_line() {
+    let text = "fn f() {\n    todo!()\n}\nfn g() {\n    unreachable!()\n}\n";
+    let found = lint_one("sparse/fixture.rs", text);
+    assert_eq!(found.len(), 2, "{found:?}");
+    assert!(found[0].contains(":2: panic:"), "{}", found[0]);
+    assert!(found[1].contains(":5: panic:"), "{}", found[1]);
+}
+
+#[test]
+fn panic_rule_skips_unscoped_files_clean_files_and_test_code() {
+    // Same violation, but outside the panic scope.
+    assert_clean(&lint_one("util/fixture.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n"));
+    // Clean scoped file.
+    assert_clean(&lint_one("events/fixture.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap_or(0) }\n"));
+    // Violations inside #[cfg(test)] / #[test] items are exempt.
+    let text = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { panic!(\"boom\") }\n}\n";
+    assert_clean(&lint_one("events/fixture.rs", text));
+}
+
+#[test]
+fn panic_rule_allows_the_lock_poisoning_idiom_by_pattern() {
+    assert_clean(&lint_one("coordinator/fixture.rs", "fn f(m: &M) { m.lock().unwrap(); }\n"));
+    // ... including rustfmt-split chains.
+    let split =
+        "fn f(s: &S) {\n    s.inner\n        .lock()\n        .unwrap()\n        .push(1);\n}\n";
+    assert_clean(&lint_one("coordinator/fixture.rs", split));
+    // But not arbitrary unwraps that merely mention lock elsewhere.
+    let found = lint_one("coordinator/fixture.rs", "fn f(x: Option<u8>) { x.unwrap(); }\n");
+    assert_eq!(found.len(), 1, "{found:?}");
+}
+
+#[test]
+fn allow_with_reason_suppresses_on_same_or_preceding_comment_line() {
+    let same = "fn f(x: Option<u8>) { x.unwrap(); } // lint:allow(panic): guarded above\n";
+    assert_clean(&lint_one("coordinator/fixture.rs", same));
+    let above = "fn f(x: Option<u8>) {\n    // lint:allow(panic): guarded by the caller\n    \
+                 x.unwrap();\n}\n";
+    assert_clean(&lint_one("coordinator/fixture.rs", above));
+}
+
+#[test]
+fn reasonless_allow_is_itself_a_finding_and_does_not_suppress_silently() {
+    let text = "fn f(x: Option<u8>) {\n    // lint:allow(panic)\n    x.unwrap();\n}\n";
+    let found = lint_one("coordinator/fixture.rs", text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("without a reason"), "{}", found[0]);
+    assert!(found[0].contains(":2:"), "flagged at the marker line: {}", found[0]);
+}
+
+#[test]
+fn allow_for_a_different_rule_does_not_suppress() {
+    let text = "fn f(x: Option<u8>) {\n    // lint:allow(cast): wrong rule\n    x.unwrap();\n}\n";
+    let found = lint_one("coordinator/fixture.rs", text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("panic"), "{}", found[0]);
+}
+
+#[test]
+fn tokens_inside_strings_and_comments_are_not_violations() {
+    let text = "fn f() -> &'static str {\n    // a comment saying panic! and .unwrap()\n    \
+                \"panic! .unwrap() todo!\"\n}\n";
+    assert_clean(&lint_one("coordinator/fixture.rs", text));
+}
+
+// ------------------------------------------------------------ hot-alloc
+
+#[test]
+fn hot_alloc_catches_allocation_inside_a_marked_region() {
+    let text = "// lint: hot-path\nfn k(v: &[u8]) -> Vec<u8> {\n    v.to_vec()\n}\n\
+                // lint: hot-path end\n";
+    let found = lint_one("anywhere.rs", text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains(":3: hot-alloc:"), "{}", found[0]);
+    assert!(found[0].contains(".to_vec()"), "{}", found[0]);
+}
+
+#[test]
+fn hot_alloc_ignores_allocation_outside_regions() {
+    let text = "fn setup() -> Vec<u8> {\n    vec![0; 8]\n}\n// lint: hot-path\n\
+                fn k(acc: &mut [u8]) { acc[0] = 1; }\n// lint: hot-path end\n";
+    assert_clean(&lint_one("anywhere.rs", text));
+}
+
+#[test]
+fn hot_alloc_flags_unbalanced_markers() {
+    let unclosed = lint_one("anywhere.rs", "// lint: hot-path\nfn k() {}\n");
+    assert_eq!(unclosed.len(), 1, "{unclosed:?}");
+    assert!(unclosed[0].contains("never closed"), "{}", unclosed[0]);
+    let orphan = lint_one("anywhere.rs", "fn k() {}\n// lint: hot-path end\n");
+    assert_eq!(orphan.len(), 1, "{orphan:?}");
+    assert!(orphan[0].contains("without an open region"), "{}", orphan[0]);
+}
+
+#[test]
+fn hot_alloc_respects_allow_annotations() {
+    let text = "// lint: hot-path\nfn k() {\n    // lint:allow(hot-alloc): first call sizes \
+                the arena\n    let v = Vec::new();\n    drop(v);\n}\n// lint: hot-path end\n";
+    assert_clean(&lint_one("anywhere.rs", text));
+}
+
+// ----------------------------------------------------------------- cast
+
+#[test]
+fn cast_rule_catches_bare_narrowing_casts_in_wire_files_only() {
+    let text = "fn f(v: u64) -> u32 { v as u32 }\n";
+    let found = lint_one("events/io.rs", text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("cast: bare `as u32`"), "{}", found[0]);
+    // The same text in a non-wire file is out of scope.
+    assert_clean(&lint_one("events/other.rs", text));
+}
+
+#[test]
+fn cast_rule_ignores_widening_and_annotated_casts() {
+    assert_clean(&lint_one("coordinator/net.rs", "fn f(v: u16) -> u64 { v as u64 }\n"));
+    let annotated = "fn f(v: usize) -> u16 {\n    // lint:allow(cast): v < 4 by construction\n    \
+                     v as u16\n}\n";
+    assert_clean(&lint_one("coordinator/net.rs", annotated));
+}
+
+// ---------------------------------------------------------------- print
+
+#[test]
+fn print_rule_bans_println_in_library_modules_only() {
+    let text = "fn f() {\n    println!(\"hi\");\n}\n";
+    let found = lint_one("coordinator/fixture.rs", text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("print: `println!`"), "{}", found[0]);
+    assert_clean(&lint_one("main.rs", text));
+    assert_clean(&lint_one("report/fixture.rs", text));
+}
+
+// -------------------------------------------------------- drift-metrics
+
+const METRICS_FIXTURE: &str = "pub struct Metrics {\n    pub served: usize,\n    \
+                               pub ghosts: usize,\n    pub rate: f64,\n}\n";
+
+#[test]
+fn drift_metrics_flags_counters_never_referenced_in_report() {
+    let report = "pub fn line(m: &Metrics) -> String { m.served.to_string() }\n";
+    let found = lint_files(
+        &[("coordinator/metrics.rs", METRICS_FIXTURE), ("report/mod.rs", report)],
+        None,
+    );
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("Metrics.ghosts"), "{}", found[0]);
+    assert!(!found[0].contains("rate"), "non-usize fields are not counters: {}", found[0]);
+}
+
+#[test]
+fn drift_metrics_passes_when_every_counter_is_rendered_and_skips_bare_lists() {
+    let report = "pub fn line(m: &Metrics) -> String {\n    \
+                  format!(\"{} {}\", m.served, m.ghosts)\n}\n";
+    assert_clean(&lint_files(
+        &[("coordinator/metrics.rs", METRICS_FIXTURE), ("report/mod.rs", report)],
+        None,
+    ));
+    // Linting metrics.rs alone (no report files in the set) skips the
+    // rule instead of flagging everything.
+    assert_clean(&lint_files(&[("coordinator/metrics.rs", METRICS_FIXTURE)], None));
+}
+
+// ---------------------------------------------------------- drift-flags
+
+#[test]
+fn drift_flags_requires_parsed_flags_to_be_documented() {
+    let cli = "fn f(a: &Args) -> bool { a.has(\"verbose\") || a.has(\"mystery\") }\n";
+    let readme = "Usage: pass `--verbose` for more output.\n";
+    let found = lint_files(&[("main.rs", cli)], Some(readme));
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("--mystery"), "{}", found[0]);
+    // With the flag documented, the set is clean.
+    let full = "Usage: `--verbose`, `--mystery`.\n";
+    assert_clean(&lint_files(&[("main.rs", cli)], Some(full)));
+    // Without a README in reach the rule is skipped, not exploded.
+    assert_clean(&lint_files(&[("main.rs", cli)], None));
+}
+
+#[test]
+fn drift_flags_ignores_non_accessor_strings() {
+    let cli = "fn f() -> String { String::from(\"mystery\") }\n";
+    assert_clean(&lint_files(&[("main.rs", cli)], Some("no flags here\n")));
+}
+
+// ------------------------------------------------------------ self-check
+
+/// The shipped tree lints clean: every genuine violation is fixed and
+/// every intentional site is annotated, so the CI `esda lint` gate is
+/// armed at zero. If this fails, run `cargo run -- lint --fix-plan`.
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let src = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let files = collect_files(&[src]).expect("walk rust/src");
+    assert!(files.len() > 20, "walk found only {} file(s)", files.len());
+    let readme = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md"))
+        .expect("README.md at the repo root");
+    let findings = lint_sources(&files, Some(&readme));
+    let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+    assert!(rendered.is_empty(), "shipped tree has lint findings:\n{}", rendered.join("\n"));
+}
