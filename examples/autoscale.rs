@@ -84,6 +84,7 @@ impl EventSource for BurstSource {
                     events,
                     arrival,
                     tenant: DEFAULT_TENANT,
+                    model: 0,
                     stream: None,
                 }));
             }

@@ -139,6 +139,7 @@ impl EventSource for TwoStreamSource {
             events,
             arrival: Instant::now(),
             tenant: DEFAULT_TENANT,
+            model: 0,
             stream: Some(stream),
         }))
     }

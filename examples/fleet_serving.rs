@@ -1,0 +1,210 @@
+//! Multi-model fleet serving demo: two models ("alpha", "beta") with
+//! their own weights share one front door behind a weighted traffic mix.
+//! Requests carry a model tag, the router treats it as a hard filter,
+//! and each model keeps its own conservation books. Two fleet operations
+//! run live: a **shadow** mirrors half of beta's served traffic to a
+//! differently-trained candidate and counts bit-exact disagreements, and
+//! a **hot swap** flips alpha's backend to a fresh build mid-run — gated
+//! on observed progress, losing zero requests.
+//!
+//! With `--report-out path` a machine-readable JSON summary is written —
+//! CI greps it for `null` to catch NaN/inf leaking into reports.
+//!
+//! Run: `cargo run --release --example fleet_serving`
+//! (add `--smoke` for the quick CI-sized run)
+
+use esda::coordinator::{
+    run_pool_source, synthetic_source, Backend, BackendError, Classification, DropPolicy,
+    Functional, MixSource, ReplicaPool, ReplicaSpec, ServerConfig, Shared, ShadowConfig,
+    Swappable,
+};
+use esda::events::{repr::histogram2_norm, DatasetProfile};
+use esda::model::quant::{quantize_network, QuantizedNet};
+use esda::model::weights::FloatWeights;
+use esda::model::NetworkSpec;
+use esda::sparse::SparseMap;
+use esda::util::cli::Args;
+use esda::util::json::Json;
+use esda::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Paces requests (so the mid-run swap actually lands mid-run) and
+/// counts every classification across both models.
+struct Paced {
+    inner: Arc<dyn Backend>,
+    calls: Arc<AtomicUsize>,
+    delay: Duration,
+}
+
+impl Backend for Paced {
+    fn name(&self) -> &str {
+        "paced"
+    }
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        std::thread::sleep(self.delay);
+        self.inner.classify(map)
+    }
+}
+
+/// A tiny quantized network for `profile` with its own weight seed —
+/// distinct seeds give the fleet genuinely different models, so shadow
+/// disagreements are real prediction divergence, not bookkeeping noise.
+fn qnet_seeded(profile: &DatasetProfile, weight_seed: u64) -> QuantizedNet {
+    let spec = NetworkSpec::tiny(profile.w, profile.h, profile.n_classes);
+    let weights = FloatWeights::random(&spec, weight_seed);
+    let mut rng = Rng::new(11);
+    let calib: Vec<_> = (0..4)
+        .map(|i| {
+            let es = profile.sample(i % profile.n_classes, &mut rng);
+            histogram2_norm(&es, profile.w, profile.h, 8.0)
+        })
+        .collect();
+    quantize_network(&spec, &weights, &calib)
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["smoke"]).unwrap();
+    let smoke = args.has("smoke");
+    let profile = DatasetProfile::n_mnist();
+    let n_offered = if smoke { 48 } else { 192 };
+
+    // Alpha serves behind a Swappable handle (every replica delegates to
+    // the same flip point); beta is a plain build with a shadow watching.
+    let alpha = Arc::new(Swappable::new(
+        "alpha",
+        Arc::new(Functional::new(qnet_seeded(&profile, 5))) as Arc<dyn Backend>,
+    ));
+    let calls = Arc::new(AtomicUsize::new(0));
+    let (ah, ac) = (Arc::clone(&alpha), Arc::clone(&calls));
+    let beta_qnet = qnet_seeded(&profile, 6);
+    let (bq, bc) = (beta_qnet.clone(), Arc::clone(&calls));
+    let pool = ReplicaPool::build(vec![
+        ReplicaSpec::new("alpha-c", 2, 2, move |_| {
+            Ok(Box::new(Paced {
+                inner: Arc::new(Shared(Arc::clone(&ah) as Arc<dyn Backend>)),
+                calls: Arc::clone(&ac),
+                delay: Duration::from_millis(1),
+            }))
+        })
+        .for_model("alpha"),
+        ReplicaSpec::new("beta-c", 1, 2, move |_| {
+            Ok(Box::new(Paced {
+                inner: Arc::new(Functional::new(bq.clone())),
+                calls: Arc::clone(&bc),
+                delay: Duration::from_millis(1),
+            }))
+        })
+        .for_model("beta"),
+    ])
+    .expect("pool build");
+
+    // Shadow: a differently-seeded candidate mirrors half of beta's
+    // served traffic; disagreements are real divergence between builds.
+    let cfg = ServerConfig {
+        n_requests: n_offered,
+        seed: 42,
+        queue_depth: 8,
+        drop_policy: DropPolicy::Block,
+        batch: 2,
+        shadows: vec![ShadowConfig {
+            model: "beta".into(),
+            candidate: Arc::new(Functional::new(qnet_seeded(&profile, 7))),
+            fraction: 0.5,
+        }],
+        ..Default::default()
+    };
+
+    // Hot swap: once a third of the stream has been classified, flip
+    // alpha to a fresh build. Progress-gated (not wall-clock), so the
+    // flip always lands with most of the stream still in flight.
+    let next_build = Functional::new(qnet_seeded(&profile, 9));
+    let swapper = {
+        let (h, c) = (Arc::clone(&alpha), Arc::clone(&calls));
+        std::thread::spawn(move || {
+            while c.load(Ordering::SeqCst) < n_offered / 3 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            h.swap(Arc::new(next_build));
+        })
+    };
+
+    // Traffic mix 2:1 — alpha gets two of every three requests.
+    let src = MixSource::new(Box::new(synthetic_source(&profile, &cfg)), &[2, 1]);
+    let r = run_pool_source(Box::new(src), &pool, &cfg).expect("fleet run");
+    swapper.join().expect("swap thread");
+    let m = &r.metrics;
+
+    println!("== two-model fleet, shadowed beta, mid-run alpha swap ==");
+    println!(
+        "  {} served / {n_offered} offered | {} queue drop(s) | {} deadline shed(s)",
+        m.total,
+        m.dropped,
+        m.deadline_drops(),
+    );
+    println!("{}", esda::report::model_table(m).render());
+    if let Some(line) = esda::report::shadow_line(m) {
+        println!("  {line}");
+    }
+
+    // The demo is also an acceptance check: the swap landed, nothing was
+    // lost, and every model's books balance on their own.
+    assert_eq!(alpha.generation(), 1, "the scheduled hot swap must have landed");
+    let conservation_ok = m.total + m.dropped + m.deadline_drops() == n_offered;
+    assert!(conservation_ok, "global books must cover the mixed stream");
+    assert_eq!(m.total, n_offered, "blocking admission is lossless across the swap");
+    assert_eq!(m.per_model.len(), 2, "one book per fleet model");
+    let (a, b) = (&m.per_model[0], &m.per_model[1]);
+    assert_eq!((a.model.as_str(), b.model.as_str()), ("alpha", "beta"));
+    // The 2:1 mix splits the offered stream exactly.
+    assert_eq!(a.offered(), 2 * n_offered / 3, "alpha books: {a:?}");
+    assert_eq!(b.offered(), n_offered / 3, "beta books: {b:?}");
+    assert!(b.shadow_mirrored >= 1, "the shadow must mirror some of beta's traffic");
+    assert!(
+        b.shadow_mirrored <= b.served,
+        "mirrors are observations of served requests, never extra service"
+    );
+    assert_eq!(a.shadow_mirrored, 0, "no shadow was configured for alpha");
+    let disagreement_rate = b.disagreement_rate().expect("mirrored > 0");
+    println!(
+        "alpha swapped after {} request(s); beta disagreement rate {:.1}% over {} mirror(s)",
+        n_offered / 3,
+        disagreement_rate * 100.0,
+        b.shadow_mirrored
+    );
+
+    // Machine-readable summary (CI greps this for `null`).
+    if let Some(out) = args.get("report-out") {
+        let per_model: Vec<Json> = m
+            .per_model
+            .iter()
+            .map(|ms| {
+                Json::obj(vec![
+                    ("model", Json::Str(ms.model.clone())),
+                    ("classes", Json::Num(ms.classes as f64)),
+                    ("served", Json::Num(ms.served as f64)),
+                    ("dropped", Json::Num(ms.dropped as f64)),
+                    ("deadline_drops", Json::Num(ms.deadline_drops() as f64)),
+                    ("offered", Json::Num(ms.offered() as f64)),
+                    ("shadow_mirrored", Json::Num(ms.shadow_mirrored as f64)),
+                    ("shadow_disagreements", Json::Num(ms.shadow_disagreements as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("offered", Json::Num(n_offered as f64)),
+            ("served", Json::Num(m.total as f64)),
+            ("queue_drops", Json::Num(m.dropped as f64)),
+            ("deadline_drops", Json::Num(m.deadline_drops() as f64)),
+            ("conservation_ok", Json::Bool(conservation_ok)),
+            ("swap_generation", Json::Num(alpha.generation() as f64)),
+            ("swap_lost_requests", Json::Num((n_offered - m.total) as f64)),
+            ("shadow_disagreement_rate", Json::Num(disagreement_rate)),
+            ("per_model", Json::Arr(per_model)),
+        ]);
+        std::fs::write(out, doc.to_string()).expect("write report");
+        println!("report written -> {out}");
+    }
+}

@@ -18,6 +18,7 @@ use crate::model::quant::QuantizedNet;
 use crate::sparse::SparseMap;
 use std::collections::HashMap;
 use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Default simulator cycle budget per inference (generous: deadlock and
@@ -265,6 +266,111 @@ impl Backend for Functional {
     }
 }
 
+/// A delegating handle to one shared backend instance: lets every
+/// replica of a pool class serve through the same underlying backend
+/// (the arrangement a [`Swappable`] fleet model uses, so one atomic
+/// flip retargets every replica at once).
+pub struct Shared(pub Arc<dyn Backend>);
+
+impl Backend for Shared {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        self.0.classify(map)
+    }
+
+    fn classify_batch(&self, maps: &[SparseMap<f32>]) -> Vec<Result<Classification, BackendError>> {
+        self.0.classify_batch(maps)
+    }
+
+    fn supports_delta(&self) -> bool {
+        self.0.supports_delta()
+    }
+
+    fn classify_batch_delta(
+        &self,
+        streams: &[Option<u64>],
+        maps: &[SparseMap<f32>],
+    ) -> Vec<Result<(Classification, DeltaStatus), BackendError>> {
+        self.0.classify_batch_delta(streams, maps)
+    }
+
+    fn evict_stream(&self, stream: u64) {
+        self.0.evict_stream(stream)
+    }
+}
+
+/// A backend whose implementation can be **atomically replaced** while
+/// workers keep classifying — the serving runtime's hot model swap.
+///
+/// Every call clones the current `Arc` under a short lock, so an
+/// in-flight batch finishes on the version it started with and the next
+/// batch sees the new one: no request is lost, none is torn across
+/// versions. The swap itself is wait-free for readers in the steady
+/// state (the lock is held only to clone or replace the pointer).
+pub struct Swappable {
+    name: String,
+    inner: Mutex<Arc<dyn Backend>>,
+    generation: AtomicUsize,
+}
+
+impl Swappable {
+    pub fn new(name: impl Into<String>, inner: Arc<dyn Backend>) -> Swappable {
+        Swappable { name: name.into(), inner: Mutex::new(inner), generation: AtomicUsize::new(0) }
+    }
+
+    /// Atomically flip to `next`, returning the retired version (callers
+    /// may keep it warm for rollback).
+    pub fn swap(&self, next: Arc<dyn Backend>) -> Arc<dyn Backend> {
+        let mut slot = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let old = std::mem::replace(&mut *slot, next);
+        self.generation.fetch_add(1, Ordering::SeqCst);
+        old
+    }
+
+    /// Number of completed swaps (0 on the version the server started
+    /// with) — lets callers confirm a scheduled swap actually landed.
+    pub fn generation(&self) -> usize {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    fn current(&self) -> Arc<dyn Backend> {
+        Arc::clone(&self.inner.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+}
+
+impl Backend for Swappable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+        self.current().classify(map)
+    }
+
+    fn classify_batch(&self, maps: &[SparseMap<f32>]) -> Vec<Result<Classification, BackendError>> {
+        self.current().classify_batch(maps)
+    }
+
+    fn supports_delta(&self) -> bool {
+        self.current().supports_delta()
+    }
+
+    fn classify_batch_delta(
+        &self,
+        streams: &[Option<u64>],
+        maps: &[SparseMap<f32>],
+    ) -> Vec<Result<(Classification, DeltaStatus), BackendError>> {
+        self.current().classify_batch_delta(streams, maps)
+    }
+
+    fn evict_stream(&self, stream: u64) {
+        self.current().evict_stream(stream)
+    }
+}
+
 /// Cycle-level ESDA simulator (reports hardware cycles too).
 pub struct Simulator {
     pub qnet: QuantizedNet,
@@ -352,12 +458,20 @@ impl Backend for Dense {
 /// controller scales into them (and kept warm for re-activation).
 pub struct ReplicaSpec {
     class: String,
+    /// The served model this class belongs to (fleet serving routes a
+    /// request only to classes tagged with its model).
+    model: String,
     count: usize,
     max: usize,
     batch: usize,
     #[allow(clippy::type_complexity)]
     factory: Box<dyn Fn(usize) -> Result<Box<dyn Backend>, BackendError> + Send + Sync>,
 }
+
+/// Model tag every class carries when the caller never names one: the
+/// single-model paths all agree on it, so legacy pools keep routing and
+/// reporting exactly as before fleets existed.
+pub const DEFAULT_MODEL: &str = "default";
 
 impl ReplicaSpec {
     /// A class built from an arbitrary factory; `factory(i)` constructs
@@ -370,11 +484,19 @@ impl ReplicaSpec {
     ) -> ReplicaSpec {
         ReplicaSpec {
             class: class.into(),
+            model: DEFAULT_MODEL.to_string(),
             count,
             max: count,
             batch: batch.max(1),
             factory: Box::new(factory),
         }
+    }
+
+    /// Tag this class as serving `model` (fleet pools; the router only
+    /// sends a request to classes tagged with its model).
+    pub fn for_model(mut self, model: impl Into<String>) -> ReplicaSpec {
+        self.model = model.into();
+        self
     }
 
     /// Functional int8 replicas (each compiles its own [`ExecPlan`]).
@@ -439,6 +561,9 @@ impl ReplicaSpec {
 pub struct PoolClass {
     /// Display name (metrics/report key).
     pub name: String,
+    /// The served model this class belongs to ([`DEFAULT_MODEL`] unless
+    /// the spec was tagged via [`ReplicaSpec::for_model`]).
+    pub model: String,
     /// Micro-batch cap this class's workers drain per accelerator visit.
     pub batch: usize,
     /// Independent backend instances for the base (minimum) replica
@@ -499,6 +624,7 @@ impl ReplicaPool {
             }
             classes.push(PoolClass {
                 name: spec.class,
+                model: spec.model,
                 batch: spec.batch,
                 replicas,
                 min: spec.count,
@@ -763,6 +889,49 @@ mod tests {
         assert!(matches!(s1, DeltaStatus::Hit { .. }), "{s1:?}");
         assert_eq!(c1.pred, b.classify(&m1).unwrap().pred);
         assert_eq!(store.lock().unwrap().len(), 1);
+    }
+
+    /// A swap retargets every `Shared` handle at once, bumps the
+    /// generation, and returns the retired version.
+    #[test]
+    fn swappable_flips_every_shared_handle_at_once() {
+        struct Fixed(usize);
+        impl Backend for Fixed {
+            fn name(&self) -> &str {
+                "fixed"
+            }
+            fn classify(&self, _: &SparseMap<f32>) -> Result<Classification, BackendError> {
+                Ok(Classification { pred: self.0, sim_cycles: None })
+            }
+        }
+        let swap = Arc::new(Swappable::new("candidate", Arc::new(Fixed(1))));
+        let a = Shared(Arc::clone(&swap) as Arc<dyn Backend>);
+        let b = Shared(Arc::clone(&swap) as Arc<dyn Backend>);
+        let map = SparseMap::empty(4, 4, 2);
+        assert_eq!(a.classify(&map).unwrap().pred, 1);
+        assert_eq!(swap.generation(), 0);
+        let old = swap.swap(Arc::new(Fixed(2)));
+        assert_eq!(old.classify(&map).unwrap().pred, 1, "retired version still usable");
+        assert_eq!(a.classify(&map).unwrap().pred, 2);
+        assert_eq!(b.classify(&map).unwrap().pred, 2, "both handles see the flip");
+        assert_eq!(swap.generation(), 1);
+        assert_eq!(a.name(), "candidate", "the swappable keeps its own display name");
+    }
+
+    /// Model tags ride `ReplicaSpec::for_model` into the built pool;
+    /// untagged specs land on the shared default.
+    #[test]
+    fn pool_classes_carry_model_tags() {
+        let profile = DatasetProfile::n_mnist();
+        let qnet = qnet_for(&profile);
+        let n_ops = qnet.spec.ops().len();
+        let pool = ReplicaPool::build(vec![
+            ReplicaSpec::functional(1, qnet.clone()).for_model("mnist-a"),
+            ReplicaSpec::simulator(1, qnet, HwConfig::uniform(n_ops, 8)),
+        ])
+        .unwrap();
+        assert_eq!(pool.classes[0].model, "mnist-a");
+        assert_eq!(pool.classes[1].model, DEFAULT_MODEL);
     }
 
     /// A stub Dense backend surfaces engine errors instead of panicking.

@@ -72,6 +72,12 @@ pub struct SourcedRequest {
     /// table; [`DEFAULT_TENANT`] for single-owner sources). Admission
     /// quotas, per-tenant SLOs, and the per-tenant report key on this.
     pub tenant: usize,
+    /// Which model this request targets (index into the server's model
+    /// table; 0 — the default model — for single-model sources). The
+    /// router restricts placement to classes serving this model, and the
+    /// per-model report keys on it. Out-of-range ids are clamped at the
+    /// admission gate, exactly like tenant ids.
+    pub model: usize,
     /// Stable identity of the event stream this window came from, when the
     /// source has one (a TCP connection, a synthetic per-stream camera).
     /// Consecutive windows of one stream overlap heavily, so the router
@@ -313,6 +319,7 @@ impl EventSource for SyntheticSource {
                 events,
                 arrival: Instant::now(),
                 tenant: DEFAULT_TENANT,
+                model: 0,
                 stream: Some(s as u64),
             }));
         }
@@ -326,6 +333,7 @@ impl EventSource for SyntheticSource {
             events,
             arrival: Instant::now(),
             tenant: DEFAULT_TENANT,
+            model: 0,
             stream: None,
         }))
     }
@@ -376,6 +384,12 @@ pub struct ReplaySource {
     started: Option<Instant>,
     /// Replayed-timeline position (µs) after the previous sample.
     offset_us: u64,
+    /// Ground-truth override from a `--labels` sidecar: one label per
+    /// sample, replacing whatever the container recorded (captures from
+    /// live cameras often carry placeholder labels; accuracy against a
+    /// post-hoc annotation needs the sidecar's truth). `None` trusts the
+    /// container.
+    labels: Option<Vec<usize>>,
     /// Latched byte-stream failure (truncation, over-claim, IO error,
     /// pacing overflow): the reader position is no longer trustworthy
     /// after one, so every subsequent call re-reports it instead of
@@ -425,6 +439,7 @@ impl ReplaySource {
             limit: None,
             started: None,
             offset_us: 0,
+            labels: None,
             failed: None,
         })
     }
@@ -446,6 +461,37 @@ impl ReplaySource {
     pub fn with_limit(mut self, limit: usize) -> ReplaySource {
         self.limit = Some(limit);
         self
+    }
+
+    /// Attach a ground-truth sidecar: a raw little-endian `u32` per
+    /// sample, in sample order, overriding the labels recorded in the
+    /// container. The sidecar must cover the dataset *exactly* — a count
+    /// mismatch means the annotation belongs to some other capture, and
+    /// silently scoring against it would corrupt every accuracy number
+    /// downstream, so it is a fatal [`IngestError`] up front.
+    pub fn with_labels(mut self, path: &Path) -> Result<ReplaySource, IngestError> {
+        let name = format!("labels:{}", path.display());
+        let bytes =
+            std::fs::read(path).map_err(|e| IngestError::fatal(format!("{name}: {e}")))?;
+        if bytes.len() % 4 != 0 {
+            return Err(IngestError::fatal(format!(
+                "{name}: {} byte(s) is not a whole number of u32 labels",
+                bytes.len()
+            )));
+        }
+        let labels: Vec<usize> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+            .collect();
+        if labels.len() != self.total {
+            return Err(IngestError::fatal(format!(
+                "{name}: {} label(s) for a dataset of {} sample(s)",
+                labels.len(),
+                self.total
+            )));
+        }
+        self.labels = Some(labels);
+        Ok(self)
     }
 
     /// Samples left to emit.
@@ -543,12 +589,69 @@ impl EventSource for ReplaySource {
             std::thread::sleep(due - now);
         }
         self.emitted += 1;
+        // The sidecar's truth wins over the container's recorded label.
+        let label = self.labels.as_ref().map_or(label, |l| l[i]);
         Ok(Some(SourcedRequest {
             label,
             events,
             arrival: due,
             tenant: DEFAULT_TENANT,
+            model: 0,
             stream: None,
+        }))
+    }
+}
+
+/// Wraps any [`EventSource`] with a deterministic model-mix schedule:
+/// emitted request `k` targets model `schedule[k mod len]`, where the
+/// schedule is the weights expanded cyclically (weights `[2, 1]` ⇒
+/// models `0, 0, 1, 0, 0, 1, …`). This is the `--model-mix` CLI flag:
+/// local sources (synthetic, replay, tail) have no model field of their
+/// own, so the mix is imposed here; socket sources carry a real model id
+/// per packet and don't need the wrapper.
+///
+/// The schedule keys on *emitted* requests — a recoverable reject does
+/// not consume a slot, so the realized mix over served traffic matches
+/// the weights exactly.
+pub struct MixSource {
+    inner: Box<dyn EventSource>,
+    schedule: Vec<usize>,
+    pos: usize,
+}
+
+impl MixSource {
+    /// Wrap `inner`, assigning model `i` a share of `weights[i]` slots
+    /// per cycle. Zero-weight models get no traffic; an empty (or
+    /// all-zero) weight list degenerates to the default model.
+    pub fn new(inner: Box<dyn EventSource>, weights: &[usize]) -> MixSource {
+        let mut schedule: Vec<usize> = Vec::new();
+        for (model, &w) in weights.iter().enumerate() {
+            for _ in 0..w {
+                schedule.push(model);
+            }
+        }
+        if schedule.is_empty() {
+            schedule.push(0);
+        }
+        MixSource { inner, schedule, pos: 0 }
+    }
+}
+
+impl EventSource for MixSource {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn geometry(&self) -> (usize, usize) {
+        self.inner.geometry()
+    }
+
+    fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+        let r = self.inner.next_request()?;
+        Ok(r.map(|mut sr| {
+            sr.model = self.schedule[self.pos];
+            self.pos = (self.pos + 1) % self.schedule.len();
+            sr
         }))
     }
 }
@@ -731,6 +834,7 @@ impl EventSource for TailSource {
                         events,
                         arrival: Instant::now(),
                         tenant: DEFAULT_TENANT,
+                        model: 0,
                         stream: None,
                     }));
                 }
@@ -1196,5 +1300,81 @@ mod tests {
         .unwrap();
         let err = src.next_request().unwrap_err();
         assert!(err.to_string().contains("corrupt"), "{err}");
+    }
+
+    /// A labels sidecar overrides the container's recorded labels, one
+    /// `u32` per sample in order.
+    #[test]
+    fn labels_sidecar_overrides_container_labels() {
+        let dir = tmp_dir("labels");
+        let path = dir.join("ds.esda");
+        let samples: Vec<Sample> = (0..4)
+            .map(|i| Sample { label: 9, events: vec![ev(10 * i, 1, 1)] })
+            .collect();
+        write_dataset(&path, 8, 8, &samples).unwrap();
+        let sidecar = dir.join("truth.labels");
+        let mut bytes = Vec::new();
+        for l in [3u32, 1, 4, 1] {
+            bytes.extend_from_slice(&l.to_le_bytes());
+        }
+        std::fs::write(&sidecar, &bytes).unwrap();
+        let mut src =
+            ReplaySource::open(&path, 1e6).unwrap().with_labels(&sidecar).unwrap();
+        let mut got = Vec::new();
+        while let Some(r) = src.next_request().unwrap() {
+            got.push(r.label);
+        }
+        assert_eq!(got, vec![3, 1, 4, 1], "sidecar truth replaces the recorded 9s");
+    }
+
+    /// Regression: a sidecar that does not cover the dataset exactly is a
+    /// fatal error up front — silently scoring against someone else's
+    /// annotation would corrupt every accuracy number downstream.
+    #[test]
+    fn labels_sidecar_count_mismatch_is_fatal() {
+        let dir = tmp_dir("labelsbad");
+        let path = dir.join("ds.esda");
+        let samples: Vec<Sample> =
+            (0..3).map(|i| Sample { label: 0, events: vec![ev(i, 1, 1)] }).collect();
+        write_dataset(&path, 8, 8, &samples).unwrap();
+        // Too few labels.
+        let short = dir.join("short.labels");
+        std::fs::write(&short, 2u32.to_le_bytes()).unwrap();
+        let err = ReplaySource::open(&path, 1e6)
+            .unwrap()
+            .with_labels(&short)
+            .err()
+            .expect("1 label for 3 samples must fail");
+        assert!(!err.is_recoverable(), "a mismatched sidecar is fatal");
+        assert!(err.to_string().contains("1 label(s)"), "{err}");
+        // Not a whole number of u32s.
+        let ragged = dir.join("ragged.labels");
+        std::fs::write(&ragged, [1u8, 2, 3]).unwrap();
+        let err = ReplaySource::open(&path, 1e6)
+            .unwrap()
+            .with_labels(&ragged)
+            .err()
+            .expect("3 ragged bytes must fail");
+        assert!(err.to_string().contains("whole number"), "{err}");
+    }
+
+    /// The model-mix wrapper stamps models cyclically by weight and
+    /// passes everything else through untouched.
+    #[test]
+    fn mix_source_stamps_models_by_weight() {
+        let profile = DatasetProfile::n_mnist();
+        let inner = SyntheticSource::new(profile, 7, 3);
+        let mut src = MixSource::new(Box::new(inner), &[2, 1]);
+        assert_eq!(src.geometry(), (34, 34));
+        let mut models = Vec::new();
+        while let Some(r) = src.next_request().unwrap() {
+            models.push(r.model);
+        }
+        assert_eq!(models, vec![0, 0, 1, 0, 0, 1, 0], "weights [2,1] cycle 0,0,1");
+        // Degenerate weights fall back to the default model.
+        let profile = DatasetProfile::n_mnist();
+        let mut src =
+            MixSource::new(Box::new(SyntheticSource::new(profile, 2, 3)), &[]);
+        assert_eq!(src.next_request().unwrap().unwrap().model, 0);
     }
 }

@@ -564,6 +564,73 @@ impl TenantStats {
     }
 }
 
+/// Per-model accounting for fleet serving: one entry per distinct model
+/// tag in the replica-class table, keyed by the model id requests carry.
+/// Each row obeys the same conservation identity as the tenant books —
+/// `served + dropped + deadline drops` reconstructs the model's offered
+/// load (see [`ModelStats::offered`]) — and additionally carries the
+/// shadow-conformance books when the model had a `--shadow` candidate.
+/// A single-model run has exactly one row restating the global books.
+#[derive(Debug, Clone, Default)]
+pub struct ModelStats {
+    /// Model display name (the class tag; `default` for untagged runs).
+    pub model: String,
+    /// Replica classes serving this model.
+    pub classes: usize,
+    /// Requests of this model that were classified (by the *primary*;
+    /// shadow mirrors are observations, not service).
+    pub served: usize,
+    /// Served requests whose prediction matched the ground-truth label.
+    pub correct: usize,
+    /// Requests shed by admission control (evictions + over-quota).
+    pub dropped: usize,
+    /// Deadline-carrying requests of this model.
+    pub deadline_offered: usize,
+    /// Already expired at the ingress.
+    pub deadline_ingress: usize,
+    /// Shed at the router or expired at a worker pop.
+    pub deadline_router: usize,
+    /// Served requests mirrored to the shadow candidate (0 without one).
+    pub shadow_mirrored: usize,
+    /// Mirrored requests where the candidate's prediction differed from
+    /// the primary's — the shadow-conformance failure count.
+    pub shadow_disagreements: usize,
+    /// Disagreements that could not be captured to the `.esda` sidecar
+    /// (cap reached, or an IO error) — counted so the capture file's
+    /// coverage is never silently partial.
+    pub shadow_capture_drops: usize,
+}
+
+impl ModelStats {
+    /// Total deadline-based sheds for this model.
+    pub fn deadline_drops(&self) -> usize {
+        self.deadline_ingress + self.deadline_router
+    }
+
+    /// Requests offered to this model: everything lands in exactly one of
+    /// served / dropped / deadline-shed.
+    pub fn offered(&self) -> usize {
+        self.served + self.dropped + self.deadline_drops()
+    }
+
+    /// Accuracy over this model's served requests (`None` when none).
+    pub fn accuracy(&self) -> Option<f64> {
+        if self.served == 0 {
+            return None;
+        }
+        Some(self.correct as f64 / self.served as f64)
+    }
+
+    /// Shadow disagreement rate over mirrored requests (`None` when the
+    /// model had no shadow traffic).
+    pub fn disagreement_rate(&self) -> Option<f64> {
+        if self.shadow_mirrored == 0 {
+            return None;
+        }
+        Some(self.shadow_disagreements as f64 / self.shadow_mirrored as f64)
+    }
+}
+
 /// Per-worker accounting for the replicated accelerator pool.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerStats {
@@ -718,6 +785,9 @@ pub struct Metrics {
     /// Per-tenant books, one entry per configured tenant (a single
     /// `default` entry when no tenants were configured).
     pub per_tenant: Vec<TenantStats>,
+    /// Per-model fleet books, one entry per distinct model tag (a single
+    /// `default` entry for untagged runs).
+    pub per_model: Vec<ModelStats>,
     /// Per-replica stats, one entry per pool worker (the single-
     /// accelerator `run_pipeline` facade has exactly one).
     pub per_worker: Vec<WorkerStats>,
@@ -757,6 +827,7 @@ impl Default for Metrics {
             deadline_missed: 0,
             ingest_rejects: 0,
             per_tenant: Vec::new(),
+            per_model: Vec::new(),
             per_worker: Vec::new(),
             per_class: Vec::new(),
             batch_sizes: Vec::new(),
@@ -913,6 +984,29 @@ impl Metrics {
 mod tests {
     use super::*;
     use crate::util::propcheck::{check, Gen};
+
+    #[test]
+    fn model_stats_books_balance() {
+        let m = ModelStats {
+            model: "alpha".into(),
+            classes: 2,
+            served: 10,
+            correct: 7,
+            dropped: 3,
+            deadline_ingress: 2,
+            deadline_router: 1,
+            shadow_mirrored: 4,
+            shadow_disagreements: 1,
+            ..Default::default()
+        };
+        assert_eq!(m.deadline_drops(), 3);
+        assert_eq!(m.offered(), 16, "served + dropped + deadline drops");
+        assert_eq!(m.accuracy(), Some(0.7));
+        assert_eq!(m.disagreement_rate(), Some(0.25));
+        let empty = ModelStats::default();
+        assert_eq!(empty.accuracy(), None, "no service ⇒ no accuracy claim");
+        assert_eq!(empty.disagreement_rate(), None, "no mirror ⇒ no rate claim");
+    }
 
     #[test]
     fn aggregates() {

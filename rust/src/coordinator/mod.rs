@@ -38,22 +38,23 @@ pub mod serve;
 
 pub use backend::{
     Backend, BackendError, Classification, DeltaStatus, DeltaStore, Dense, Functional,
-    PoolClass, ReplicaPool, ReplicaSpec, Simulator,
+    PoolClass, ReplicaPool, ReplicaSpec, Shared, Simulator, Swappable, DEFAULT_MODEL,
 };
 pub use ingest::{
-    EventSource, IngestError, ReplaySource, SourcedRequest, SyntheticSource, TailSource,
-    UnsortedPolicy, DEFAULT_TENANT,
+    EventSource, IngestError, MixSource, ReplaySource, SourcedRequest, SyntheticSource,
+    TailSource, UnsortedPolicy, DEFAULT_TENANT,
 };
 pub use metrics::{
-    ClassStats, CostModel, CostProfile, CostSnapshot, DeltaMetrics, Metrics, PercentileReport,
-    RequestTiming, ScalingEvent, SlidingWindow, TenantStats, WorkerStats,
+    ClassStats, CostModel, CostProfile, CostSnapshot, DeltaMetrics, Metrics, ModelStats,
+    PercentileReport, RequestTiming, ScalingEvent, SlidingWindow, TenantStats, WorkerStats,
 };
 pub use net::{decode_packet, encode_packet, NetConfig, NetSource, Packet};
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineResult};
 pub use queue::{AdmissionQueue, DropPolicy, TryPushError};
 pub use serve::{
-    run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig, PipelineError,
-    Prediction, ServerConfig, ServerResult, TenantConfig,
+    run_pool, run_pool_source, run_server, run_server_source, synthetic_source, AutoscaleConfig,
+    PipelineError, Prediction, ServerConfig, ServerResult, ShadowCaptureConfig, ShadowConfig,
+    TenantConfig,
 };
 
 /// Shared unit-test fixtures (integration tests under `rust/tests/` keep

@@ -15,12 +15,18 @@
 //!
 //! ```text
 //! magic   u32  = NET_MAGIC
-//! version u16  = NET_VERSION
+//! version u16  = NET_VERSION (2)
 //! tenant  u16  index into the server's tenant table
 //! label   u32  producer-asserted ground-truth class
+//! model   u32  fleet model id (version >= 2 only)
 //! n       u32  event count (<= MAX_PACKET_EVENTS)
 //! n × [ t_us u32 | x u16 | y u16 | polarity u8 | pad u8 ]
 //! ```
+//!
+//! Version 2 is a minor bump for fleet serving: it appends the `model`
+//! field (the index of the served model the packet addresses). Version 1
+//! packets — identical minus that field — still decode and land on
+//! model 0, so pre-fleet producers keep working unmodified.
 //!
 //! Over **UDP** each datagram is exactly one packet (the event cap keeps
 //! a full packet inside one 64 KiB datagram). Over **TCP** packets are
@@ -52,10 +58,14 @@ use std::time::{Duration, Instant};
 /// Packet magic ("ESNP"): distinct from the `.esda` container magic so a
 /// file accidentally piped at a socket fails loudly at the first packet.
 pub const NET_MAGIC: u32 = 0x4553_4e50;
-/// Packet format version.
-pub const NET_VERSION: u16 = 1;
-/// Fixed packet header bytes (magic + version + tenant + label + n).
-pub const PACKET_HEADER_BYTES: usize = 16;
+/// Packet format version (v2 appended the fleet `model` field; v1
+/// packets still decode — see the module docs).
+pub const NET_VERSION: u16 = 2;
+/// Fixed packet header bytes at the current version
+/// (magic + version + tenant + label + model + n).
+pub const PACKET_HEADER_BYTES: usize = 20;
+/// Header bytes of a version-1 packet (no `model` field).
+pub const PACKET_V1_HEADER_BYTES: usize = 16;
 /// Serialized bytes per event record (same layout as `.esda`).
 pub const PACKET_EVENT_BYTES: usize = 10;
 /// Per-packet event cap: the largest count whose packet still fits one
@@ -79,12 +89,22 @@ fn le_u32(b: &[u8], at: usize) -> u32 {
 pub struct Packet {
     pub tenant: u16,
     pub label: u32,
+    /// Fleet model id (0 for version-1 packets, which predate fleets).
+    pub model: u32,
     pub events: Vec<Event>,
 }
 
-/// Serialize one packet. Panics if `events` exceeds
+/// Serialize one packet addressed at the default model (id 0) — the
+/// single-model producer path. Panics if `events` exceeds
 /// [`MAX_PACKET_EVENTS`] — producers must window their streams.
 pub fn encode_packet(tenant: u16, label: u32, events: &[Event]) -> Vec<u8> {
+    encode_packet_for(tenant, label, 0, events)
+}
+
+/// Serialize one packet addressed at fleet model `model`. Panics if
+/// `events` exceeds [`MAX_PACKET_EVENTS`] — producers must window their
+/// streams.
+pub fn encode_packet_for(tenant: u16, label: u32, model: u32, events: &[Event]) -> Vec<u8> {
     assert!(
         events.len() <= MAX_PACKET_EVENTS,
         "packet holds {} events (cap {MAX_PACKET_EVENTS})",
@@ -95,6 +115,7 @@ pub fn encode_packet(tenant: u16, label: u32, events: &[Event]) -> Vec<u8> {
     out.extend_from_slice(&NET_VERSION.to_le_bytes());
     out.extend_from_slice(&tenant.to_le_bytes());
     out.extend_from_slice(&label.to_le_bytes());
+    out.extend_from_slice(&model.to_le_bytes());
     // lint:allow(panic): the assert above bounds events.len() far below u32::MAX
     let count = u32::try_from(events.len()).expect("event count fits u32");
     out.extend_from_slice(&count.to_le_bytes());
@@ -113,9 +134,9 @@ pub fn encode_packet(tenant: u16, label: u32, events: &[Event]) -> Vec<u8> {
 /// discipline as the `.esda` reader) before any allocation sized from
 /// it.
 pub fn decode_packet(buf: &[u8]) -> Result<Packet, String> {
-    if buf.len() < PACKET_HEADER_BYTES {
+    if buf.len() < PACKET_V1_HEADER_BYTES {
         return Err(format!(
-            "short packet: {} byte(s), header needs {PACKET_HEADER_BYTES}",
+            "short packet: {} byte(s), header needs {PACKET_V1_HEADER_BYTES}",
             buf.len()
         ));
     }
@@ -124,25 +145,34 @@ pub fn decode_packet(buf: &[u8]) -> Result<Packet, String> {
         return Err(format!("bad magic {magic:#010x}"));
     }
     let version = le_u16(buf, 4);
-    if version != NET_VERSION {
-        return Err(format!("unsupported packet version {version}"));
-    }
+    // v2 appended the model field; v1 packets decode with model 0.
+    let (header, model) = match version {
+        1 => (PACKET_V1_HEADER_BYTES, 0),
+        2 if buf.len() >= PACKET_HEADER_BYTES => (PACKET_HEADER_BYTES, le_u32(buf, 12)),
+        2 => {
+            return Err(format!(
+                "short v2 packet: {} byte(s), header needs {PACKET_HEADER_BYTES}",
+                buf.len()
+            ))
+        }
+        v => return Err(format!("unsupported packet version {v}")),
+    };
     let tenant = le_u16(buf, 6);
     let label = le_u32(buf, 8);
-    let ne = usize::try_from(le_u32(buf, 12)).map_err(|e| e.to_string())?;
+    let ne = usize::try_from(le_u32(buf, header - 4)).map_err(|e| e.to_string())?;
     if ne > MAX_PACKET_EVENTS {
         return Err(format!("claims {ne} event(s) (cap {MAX_PACKET_EVENTS})"));
     }
-    let need = PACKET_HEADER_BYTES + ne * PACKET_EVENT_BYTES;
+    let need = header + ne * PACKET_EVENT_BYTES;
     if buf.len() != need {
         return Err(format!(
             "claims {ne} event(s) ({need} B) but the packet is {} byte(s)",
             buf.len()
         ));
     }
-    let events = io::read_events(&mut &buf[PACKET_HEADER_BYTES..], ne)
-        .map_err(|e| format!("event records: {e}"))?;
-    Ok(Packet { tenant, label, events })
+    let events =
+        io::read_events(&mut &buf[header..], ne).map_err(|e| format!("event records: {e}"))?;
+    Ok(Packet { tenant, label, model, events })
 }
 
 /// Tuning for a socket source.
@@ -151,6 +181,10 @@ pub struct NetConfig {
     /// Tenant-table size: packets naming a tenant `>= tenants` are
     /// rejected (recoverably) at the boundary.
     pub tenants: usize,
+    /// Fleet-model-table size: packets naming a model `>= models` are
+    /// rejected (recoverably) at the boundary. 1 for single-model
+    /// servers (v1 packets always land on model 0).
+    pub models: usize,
     /// Unsorted-events policy (default: sort — live capture paths can
     /// reorder events in flight, same rationale as `TailSource`).
     pub policy: UnsortedPolicy,
@@ -171,6 +205,7 @@ impl Default for NetConfig {
     fn default() -> NetConfig {
         NetConfig {
             tenants: 1,
+            models: 1,
             policy: UnsortedPolicy::Sort,
             flush_count: 32,
             flush_timeout: Duration::from_millis(2),
@@ -247,12 +282,21 @@ fn item_from_bytes(
             cfg.tenants
         )));
     }
+    let model = usize::try_from(pkt.model)
+        .map_err(|_| IngestError::recoverable(format!("{what}: model {} > usize", pkt.model)))?;
+    if model >= cfg.models {
+        return Err(IngestError::recoverable(format!(
+            "{what}: unknown model {model} (front door has {})",
+            cfg.models
+        ))
+        .with_tenant(tenant));
+    }
     let mut events = pkt.events;
     validate_events(&mut events, w, h, cfg.policy, what).map_err(|e| e.with_tenant(tenant))?;
     let label = usize::try_from(pkt.label)
         .map_err(|_| IngestError::recoverable(format!("{what}: label {} > usize", pkt.label)))?;
     let stream = conn.map(|c| ((tenant as u64) << 32) | (c & 0xffff_ffff));
-    Ok(SourcedRequest { label, events, arrival: Instant::now(), tenant, stream })
+    Ok(SourcedRequest { label, events, arrival: Instant::now(), tenant, model, stream })
 }
 
 /// A socket-backed [`EventSource`]: background receive threads land
@@ -486,7 +530,7 @@ fn serve_connection(
         // A u32 length always fits usize on supported targets; a
         // pathological one lands on MAX and fails the cap check below.
         let len = usize::try_from(u32::from_le_bytes(len_buf)).unwrap_or(usize::MAX);
-        if len < PACKET_HEADER_BYTES || len > frame_cap {
+        if len < PACKET_V1_HEADER_BYTES || len > frame_cap {
             let _ = tx.send(vec![Err(IngestError::recoverable(format!(
                 "{what}: bad frame length {len} (connection dropped)"
             )))]);
@@ -592,7 +636,37 @@ mod tests {
         let wire = encode_packet(1, 7, &events);
         assert_eq!(wire.len(), PACKET_HEADER_BYTES + 2 * PACKET_EVENT_BYTES);
         let pkt = decode_packet(&wire).unwrap();
-        assert_eq!(pkt, Packet { tenant: 1, label: 7, events });
+        assert_eq!(pkt, Packet { tenant: 1, label: 7, model: 0, events: events.clone() });
+        // A model-addressed packet carries the model id through.
+        let wire = encode_packet_for(1, 7, 3, &events);
+        let pkt = decode_packet(&wire).unwrap();
+        assert_eq!(pkt, Packet { tenant: 1, label: 7, model: 3, events });
+    }
+
+    /// A version-1 packet (pre-fleet, 16-byte header, no model field)
+    /// still decodes and lands on model 0 — producers that never heard
+    /// of fleets keep working across the minor version bump.
+    #[test]
+    fn v1_packets_decode_as_model_zero() {
+        let events = vec![ev(1, 2, 3)];
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&NET_MAGIC.to_le_bytes());
+        wire.extend_from_slice(&1u16.to_le_bytes());
+        wire.extend_from_slice(&4u16.to_le_bytes());
+        wire.extend_from_slice(&9u32.to_le_bytes());
+        wire.extend_from_slice(&1u32.to_le_bytes());
+        for e in &events {
+            wire.extend_from_slice(&e.t_us.to_le_bytes());
+            wire.extend_from_slice(&e.x.to_le_bytes());
+            wire.extend_from_slice(&e.y.to_le_bytes());
+            wire.push(1);
+            wire.push(0);
+        }
+        assert_eq!(wire.len(), PACKET_V1_HEADER_BYTES + PACKET_EVENT_BYTES);
+        let pkt = decode_packet(&wire).unwrap();
+        assert_eq!(pkt, Packet { tenant: 4, label: 9, model: 0, events });
+        // Truncating the v1 payload is still caught by the byte budget.
+        assert!(decode_packet(&wire[..wire.len() - 1]).unwrap_err().contains("1 event(s)"));
     }
 
     /// Boundary regression for the checked wire casts: the extreme values
@@ -603,9 +677,9 @@ mod tests {
     #[test]
     fn header_field_extremes_roundtrip_unclipped() {
         let events = vec![ev(u32::MAX, u16::MAX, u16::MAX)];
-        let wire = encode_packet(u16::MAX, u32::MAX, &events);
+        let wire = encode_packet_for(u16::MAX, u32::MAX, u32::MAX, &events);
         let pkt = decode_packet(&wire).unwrap();
-        assert_eq!(pkt, Packet { tenant: u16::MAX, label: u32::MAX, events });
+        assert_eq!(pkt, Packet { tenant: u16::MAX, label: u32::MAX, model: u32::MAX, events });
 
         // A packet at exactly the event cap decodes; one past it cannot
         // even be encoded (and a forged count is rejected by decode —
@@ -631,6 +705,23 @@ mod tests {
         let req = item_from_bytes(&wire, "test", 8, 8, &cfg, Some(9)).unwrap();
         assert_eq!(req.label, u32::MAX as usize);
         assert_eq!(req.tenant, 1);
+        assert_eq!(req.model, 0, "encode_packet addresses the default model");
+
+        // A max-model packet against a single-model front door is
+        // rejected recoverably with the untruncated id, attributed to
+        // its (known) tenant.
+        let wire = encode_packet_for(1, 0, u32::MAX, &[ev(1, 1, 1)]);
+        let err = item_from_bytes(&wire, "test", 8, 8, &cfg, None).unwrap_err();
+        assert!(err.is_recoverable(), "{err}");
+        assert!(err.to_string().contains("4294967295"), "{err}");
+        assert_eq!(err.tenant(), Some(1));
+
+        // With a fleet-sized front door the same packet's model id rides
+        // through the widening intact.
+        let fleet = NetConfig { tenants: 2, models: 3, ..NetConfig::default() };
+        let wire = encode_packet_for(0, 2, 2, &[ev(1, 1, 1)]);
+        let req = item_from_bytes(&wire, "test", 8, 8, &fleet, None).unwrap();
+        assert_eq!(req.model, 2);
     }
 
     #[test]
@@ -650,8 +741,11 @@ mod tests {
         bad.push(0);
         assert!(decode_packet(&bad).unwrap_err().contains("byte(s)"));
         let mut bad = good.clone();
-        bad[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_packet(&bad).unwrap_err().contains("cap"));
+        // A v2 header truncated past the v1 length but short of the v2
+        // length is caught before any field read.
+        assert!(decode_packet(&good[..17]).unwrap_err().contains("short v2"));
     }
 
     #[test]
@@ -664,6 +758,7 @@ mod tests {
                 events: vec![],
                 arrival: Instant::now(),
                 tenant: 0,
+                model: 0,
                 stream: None,
             })
         };

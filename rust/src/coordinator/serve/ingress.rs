@@ -1,0 +1,144 @@
+//! Ingress stages: the **source pump** (stage 1 — pulls the
+//! [`EventSource`], owns pacing and arrival timestamps, skips past
+//! recoverable rejects) and the **repr builder + admission gate**
+//! (stage 2 — builds the sparse histogram representation, resolves each
+//! request's deadline, and enforces the tenant quotas and the ingress
+//! deadline expiry before the request costs anything downstream).
+
+use super::state::{IngressBooks, Routed, SharedCtx};
+use crate::coordinator::ingest::{EventSource, SourcedRequest};
+use crate::coordinator::metrics::CostModel;
+use crate::events::repr::histogram2_norm;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::time::Instant;
+
+/// Stage 1: the event source (synthetic camera, dataset replay, capture
+/// tail, or socket) — owns pacing and arrival timestamps. A recoverable
+/// [`crate::coordinator::ingest::IngestError`] is counted and skipped;
+/// a fatal one records the run's first error and ends the stream.
+pub(super) fn pump_source(
+    mut src: Box<dyn EventSource>,
+    tx: SyncSender<SourcedRequest>,
+    books: &IngressBooks,
+    sx: &SharedCtx<'_, '_>,
+) {
+    loop {
+        match src.next_request() {
+            Ok(Some(req)) => {
+                if tx.send(req).is_err() {
+                    return; // downstream hung up early
+                }
+            }
+            Ok(None) => return, // stream complete
+            Err(e) if e.is_recoverable() => {
+                // A per-sample validation reject: the reader is still
+                // aligned and the stream continues — count it and keep
+                // pulling. One bad sample must not kill the serving run.
+                books.ingest_rejects.fetch_add(1, Ordering::SeqCst);
+                // Attribute it when the source knows the tenant (socket
+                // packets) or when there is only one.
+                let t = e.tenant().or((sx.tenants.len() == 1).then_some(0));
+                if let Some(tc) = t.and_then(|t| sx.tenants.get(t)) {
+                    tc.ingest_rejects.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) => {
+                // Fatal: a latched byte-stream failure. Record it and end
+                // the stream; the stages downstream drain what was
+                // already admitted and exit cleanly.
+                sx.first_error
+                    .lock()
+                    .unwrap()
+                    .get_or_insert_with(|| format!("event source: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Stage 2: representation builder + admission control, including the
+/// ingress deadline check and the per-tenant quota gate. Requests for
+/// models in `capture_armed` keep their raw events alongside the built
+/// representation so a shadow disagreement downstream can land them in
+/// the capture file; everyone else drops the events here.
+pub(super) fn repr_stage(
+    rx: Receiver<SourcedRequest>,
+    geometry: (usize, usize),
+    clip: f32,
+    slo: Option<std::time::Duration>,
+    capture_armed: &[bool],
+    books: &IngressBooks,
+    sx: &SharedCtx<'_, '_>,
+) {
+    let (w, h) = geometry;
+    let multi_tenant = sx.tenants.len() > 1;
+    for sr in rx.iter() {
+        // Clamp out-of-range tenant ids (a socket source whose tenant
+        // table disagrees with the server's) to the last tenant rather
+        // than panicking mid-spine; model ids get the same treatment.
+        let t = sr.tenant.min(sx.tenants.len() - 1);
+        let tc = &sx.tenants[t];
+        let mi = sr.model.min(sx.models.len() - 1);
+        let mc = &sx.models[mi];
+        // The tenant's own SLO wins over the global one.
+        let deadline = tc.slo.or(slo).map(|d| sr.arrival + d);
+        if deadline.is_some() {
+            books.deadline_offered.fetch_add(1, Ordering::SeqCst);
+            tc.deadline_offered.fetch_add(1, Ordering::SeqCst);
+            mc.deadline_offered.fetch_add(1, Ordering::SeqCst);
+        }
+        // Drop already-expired requests before paying for their
+        // representation — the cheapest possible shed.
+        if deadline.is_some_and(|dl| Instant::now() >= dl) {
+            books.deadline_ingress.fetch_add(1, Ordering::SeqCst);
+            tc.deadline_ingress.fetch_add(1, Ordering::SeqCst);
+            mc.deadline_ingress.fetch_add(1, Ordering::SeqCst);
+            continue;
+        }
+        // Weighted fair admission: a tenant at its ingress quota is shed
+        // *before* the repr is built — it can saturate only its own
+        // share of the queue, never starve siblings.
+        if multi_tenant && tc.in_queue.load(Ordering::SeqCst) >= tc.quota {
+            books.quota_drops.fetch_add(1, Ordering::SeqCst);
+            tc.dropped.fetch_add(1, Ordering::SeqCst);
+            mc.dropped.fetch_add(1, Ordering::SeqCst);
+            continue;
+        }
+        let map = histogram2_norm(&sr.events, w, h, clip);
+        // Raw events survive past this point only when this model's
+        // shadow capture might need them.
+        let keep = capture_armed.get(mi).copied().unwrap_or(false);
+        let req = Routed {
+            label: sr.label,
+            tenant: t,
+            model: mi,
+            bucket: CostModel::bucket_of(map.nnz()),
+            map,
+            events: keep.then_some(sr.events),
+            arrival: sr.arrival,
+            deadline,
+            predicted_s: f64::NAN,
+            stream: sr.stream,
+            sticky: false,
+        };
+        if multi_tenant {
+            tc.in_queue.fetch_add(1, Ordering::SeqCst);
+        }
+        match sx.ingress.push_evicting(req) {
+            Ok(Some(victim)) => {
+                // Drop-oldest made room: charge the eviction to the
+                // victim's tenant and model, and free its quota slot.
+                let vt = &sx.tenants[victim.tenant];
+                vt.dropped.fetch_add(1, Ordering::SeqCst);
+                sx.models[victim.model].dropped.fetch_add(1, Ordering::SeqCst);
+                if multi_tenant {
+                    vt.in_queue.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Ok(None) => {}
+            Err(_) => break, // queue closed by an aborting worker
+        }
+    }
+    sx.ingress.close();
+}

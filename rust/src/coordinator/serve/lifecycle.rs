@@ -1,0 +1,499 @@
+//! The serving spine: build the run-wide state (tenant, model, and class
+//! tables, sticky context, shadow writer), spawn the stage threads,
+//! join them in dependency order, and roll every book into the merged
+//! [`Metrics`].
+
+use super::ingress::{pump_source, repr_stage};
+use super::router::router_stage;
+use super::scaler::run_autoscaler;
+use super::state::{
+    join_noting, BackendRef, ClassCtx, ClassSlots, IngressBooks, ModelCtx, Routed, ShadowCtx,
+    ShadowWriter, SharedCtx, StickyCtx, TenantCtx, WorkerOutput,
+};
+use super::workers::worker_loop;
+use super::{PipelineError, Prediction, ServerConfig, ServerResult};
+use crate::coordinator::ingest::{EventSource, SourcedRequest};
+use crate::coordinator::metrics::{
+    ClassStats, CostModel, CostProfile, Metrics, ModelStats, PercentileReport, ScalingEvent,
+    TenantStats, WorkerStats,
+};
+use crate::coordinator::queue::{AdmissionQueue, DropPolicy};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// The shared serving spine behind every entry point.
+pub(super) fn serve_classes(
+    source: Box<dyn EventSource>,
+    slots: Vec<ClassSlots<'_>>,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    assert!(!slots.is_empty(), "need at least one replica class");
+    assert!(
+        slots.iter().all(|c| !c.backends.is_empty()),
+        "every replica class needs at least one worker"
+    );
+    let t_start = Instant::now();
+    // With a single class there is nothing to route: workers drain the
+    // ingress directly (no router thread, no cost-model locks), which also
+    // preserves the exact drop-oldest semantics the homogeneous runtime
+    // always had — the stalest *queued* request is the one evicted.
+    let has_router = slots.len() > 1;
+    let ingress: AdmissionQueue<Routed> = AdmissionQueue::new(cfg.queue_depth, cfg.drop_policy);
+    // Tenant table: the configured tenants, or a single implicit default
+    // whose quota is the whole queue — the front door stays inert and
+    // single-tenant admission semantics are exactly the pre-tenant ones.
+    let depth = cfg.queue_depth.max(1);
+    let multi_tenant = cfg.tenants.len() > 1;
+    let total_weight: usize =
+        cfg.tenants.iter().map(|t| t.weight.max(1)).sum::<usize>().max(1);
+    let tenants: Vec<TenantCtx> = if cfg.tenants.is_empty() {
+        vec![TenantCtx::new("default".to_string(), 1, None, depth)]
+    } else {
+        cfg.tenants
+            .iter()
+            .map(|t| {
+                let weight = t.weight.max(1);
+                // Floor-share quotas keep Σ quotas ≤ depth (short of the
+                // min-1 floor with many tiny tenants), so an under-quota
+                // arrival finds a free slot instead of blocking on other
+                // tenants' traffic.
+                let quota =
+                    if multi_tenant { (depth * weight / total_weight).max(1) } else { depth };
+                TenantCtx::new(t.name.clone(), weight, t.slo, quota)
+            })
+            .collect()
+    };
+    // Model table: one entry per distinct class model tag, in order of
+    // first appearance (the fleet CLI builds one class per `--model`
+    // entry, so model id i is entry i). Single-model runs get exactly one
+    // implicit entry under the default tag, and every per-model book
+    // degenerates to the global one.
+    let mut model_names: Vec<String> = Vec::new();
+    for c in &slots {
+        if !model_names.iter().any(|n| *n == c.model) {
+            model_names.push(c.model.clone());
+        }
+    }
+    let (w, h) = source.geometry();
+    // Shadow capture: one shared writer across every shadowed model (a
+    // single `--shadow-capture` path per run), created only when some
+    // shadow exists to feed it. A writer that cannot even be created is
+    // a configuration error worth failing the run for — silently
+    // dropping every capture would defeat the point of asking for one.
+    let capture = match (&cfg.shadow_capture, cfg.shadows.is_empty()) {
+        (Some(sc), false) => match ShadowWriter::create(&sc.path, w, h, sc.max_samples) {
+            Ok(wtr) => Some(Arc::new(Mutex::new(Some(wtr)))),
+            Err(e) => {
+                return Err(PipelineError {
+                    msg: format!("shadow capture {}: {e}", sc.path.display()),
+                    completed: 0,
+                    in_flight: 0,
+                    dropped: 0,
+                })
+            }
+        },
+        _ => None,
+    };
+    let models: Vec<ModelCtx> = model_names
+        .iter()
+        .map(|name| {
+            let shadow = cfg.shadows.iter().find(|s| s.model == *name).map(|s| ShadowCtx {
+                candidate: Arc::clone(&s.candidate),
+                fraction: s.fraction.clamp(0.0, 1.0),
+                counter: AtomicUsize::new(0),
+                mirrored: AtomicUsize::new(0),
+                disagreements: AtomicUsize::new(0),
+                capture_drops: AtomicUsize::new(0),
+                capture: capture.clone(),
+            });
+            ModelCtx::new(name.clone(), shadow)
+        })
+        .collect();
+    // Raw events ride along to the worker only for models whose shadow
+    // can land them in the capture file.
+    let capture_armed: Vec<bool> = models
+        .iter()
+        .map(|m| m.shadow.as_ref().is_some_and(|s| s.capture.is_some()))
+        .collect();
+    let classes: Vec<ClassCtx<'_>> = slots
+        .into_iter()
+        .map(|c| {
+            let min = c.backends.len();
+            let cost = CostModel::new();
+            // Seed the predictor from a previous run's persisted profile:
+            // the class routes and SLO-sheds from its first request
+            // instead of burning probe traffic, and replicas the
+            // autoscaler grows later join a class that already knows its
+            // costs.
+            if let Some(profile) = &cfg.cost_profile {
+                if let Some(snap) = profile.classes.get(&c.name) {
+                    // Aged knowledge decays before it seeds: stale buckets
+                    // (and, much later, the global mean) are dropped so a
+                    // profile from last week cannot mis-route or mis-shed
+                    // today's traffic (see [`CostSnapshot::decayed`]).
+                    cost.seed(&snap.decayed(profile.age_secs()));
+                }
+            }
+            let model = model_names.iter().position(|n| *n == c.model).unwrap_or(0);
+            ClassCtx {
+                // Sub-queues always block: admission control (and its drop
+                // accounting) lives at the global ingress only. A full
+                // sub-queue back-pressures the router, which lets the ingress
+                // saturate, where the shedding decision is made and counted.
+                // (Trade-off vs the single-class path: requests already routed
+                // into a sub-queue are no longer evictable by drop-oldest —
+                // though a deadline can still expire them at the worker pop.)
+                queue: AdmissionQueue::new(cfg.queue_depth, DropPolicy::Block),
+                backlog: AtomicUsize::new(0),
+                cost,
+                deadline_drops: AtomicUsize::new(0),
+                busy_us: AtomicU64::new(0),
+                active: AtomicUsize::new(min),
+                peak: AtomicUsize::new(min),
+                retire: AtomicUsize::new(0),
+                min,
+                max: c.max.max(min),
+                grow: c.grow,
+                slots: Mutex::new(c.backends),
+                name: c.name,
+                model,
+                batch: c.batch.max(1),
+            }
+        })
+        .collect();
+    // Sticky (cache-affinity) routing exists only when a router makes
+    // placement decisions AND some class can actually reuse per-stream
+    // state. Declared before the thread scope so the router, workers,
+    // and autoscaler all borrow one context.
+    let any_delta = classes
+        .iter()
+        .any(|c| c.slots.lock().unwrap().iter().any(|b| b.get().supports_delta()));
+    let sticky_ctx = (has_router && any_delta).then(StickyCtx::new);
+    let first_error: Mutex<Option<String>> = Mutex::new(None);
+    let books = IngressBooks::new();
+    // Worker outputs land here (workers push at exit rather than being
+    // joined for a return value, because the autoscaler spawns workers
+    // the spine never held handles for).
+    let outputs_mx: Mutex<Vec<WorkerOutput>> = Mutex::new(Vec::new());
+    let scaling_events: Mutex<Vec<ScalingEvent>> = Mutex::new(Vec::new());
+    // Autoscaler shutdown latch: flag + condvar so the controller can be
+    // woken mid-sleep once the stream has fully drained.
+    let scaler_stop: (Mutex<bool>, Condvar) = (Mutex::new(false), Condvar::new());
+    let next_wid = AtomicUsize::new(classes.iter().map(|c| c.min).sum());
+    let (tx_ev, rx_ev) = sync_channel::<SourcedRequest>(cfg.queue_depth.max(1));
+    // Every stage borrows the same run-wide context.
+    let shared = SharedCtx {
+        classes: &classes,
+        tenants: &tenants,
+        models: &models,
+        ingress: &ingress,
+        sticky: sticky_ctx.as_ref(),
+        first_error: &first_error,
+    };
+
+    std::thread::scope(|s| {
+        let sx = &shared;
+        let books_ref = &books;
+        let armed_ref: &[bool] = &capture_armed;
+
+        // Stage 1: the event source.
+        let src_thread = s.spawn(move || pump_source(source, tx_ev, books_ref, sx));
+
+        // Stage 2: representation builder + admission control.
+        let (clip, slo) = (cfg.clip, cfg.slo);
+        let repr =
+            s.spawn(move || repr_stage(rx_ev, (w, h), clip, slo, armed_ref, books_ref, sx));
+
+        // Stage 3: the cost-aware router — only spawned when there is a
+        // routing decision to make.
+        let router = has_router.then(|| s.spawn(move || router_stage(sx)));
+
+        // Stage 4: per-class accelerator worker pools — the base (min)
+        // replicas; the autoscaler below may spawn more into this scope.
+        let outputs_ref = &outputs_mx;
+        let mut handles = Vec::new();
+        let mut base_wid = 0usize;
+        for (ci, class) in classes.iter().enumerate() {
+            let base: Vec<BackendRef<'_>> = class.slots.lock().unwrap().clone();
+            for backend in base {
+                let wid = base_wid;
+                base_wid += 1;
+                // Delta-capable workers under a router own a bounded side
+                // queue for requests pinned to them by stream affinity.
+                let side = sx.sticky.and_then(|sc| {
+                    backend.get().supports_delta().then(|| {
+                        let q = Arc::new(AdmissionQueue::new(depth, DropPolicy::Block));
+                        sc.enroll(wid, ci, &q);
+                        q
+                    })
+                });
+                handles.push(s.spawn(move || {
+                    let queue = if has_router { &class.queue } else { sx.ingress };
+                    let out =
+                        worker_loop(wid, ci, class, queue, has_router, backend.get(), side, sx);
+                    outputs_ref.lock().unwrap().push(out);
+                }));
+            }
+        }
+
+        // Stage 5: the autoscaler controller. Spawned only when it could
+        // ever act — autoscaling requested AND some class has headroom.
+        let stop_ref = &scaler_stop;
+        let events_ref = &scaling_events;
+        let next_wid_ref = &next_wid;
+        let scalable = classes.iter().any(|c| c.max > c.min);
+        let controller = cfg.autoscale.clone().filter(|_| scalable).map(|auto| {
+            s.spawn(move || {
+                run_autoscaler(
+                    &auto, s, sx, has_router, t_start, stop_ref, events_ref, next_wid_ref,
+                    outputs_ref, depth,
+                )
+            })
+        });
+
+        for h in handles {
+            join_noting(h.join(), "worker", &first_error);
+        }
+        if let Some(h) = router {
+            join_noting(h.join(), "router", &first_error);
+        }
+        join_noting(repr.join(), "repr", &first_error);
+        join_noting(src_thread.join(), "source", &first_error);
+        // The stream has drained: stop the controller. Workers it spawned
+        // exit on their own (queues are closed) and are joined by the
+        // scope before `outputs_mx` is read below.
+        {
+            let (lock, cv) = &scaler_stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        if let Some(h) = controller {
+            join_noting(h.join(), "autoscaler", &first_error);
+        }
+    });
+
+    // Finalize the shadow capture: rewrite the header's sample count with
+    // what was actually appended. Best-effort — a capture that cannot
+    // update its header still holds its samples, and the run result (and
+    // its disagreement books) stand either way.
+    if let Some(cap) = &capture {
+        if let Some(wtr) = cap.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            let _ = wtr.finalize();
+        }
+    }
+
+    // Poisoning is survivable here: a panicking worker was already noted
+    // in `first_error` by `join_noting`, so take whatever was recorded.
+    let mut outputs = outputs_mx.into_inner().unwrap_or_else(|e| e.into_inner());
+    outputs.sort_by_key(|o| o.wid);
+    let (submitted, dropped, _still_queued) = ingress.stats();
+    let processed: usize = outputs.iter().map(|o| o.records.len()).sum();
+    // Deadline sheds past admission (router + worker pop) — these were
+    // submitted but intentionally never classified.
+    let deadline_shed: usize =
+        classes.iter().map(|c| c.deadline_drops.load(Ordering::SeqCst)).sum();
+    let in_flight = submitted.saturating_sub(dropped + processed + deadline_shed);
+    // Admission sheds: queue evictions plus over-quota drops (the latter
+    // never occupied a slot, so they are outside the queue's own books).
+    let shed = dropped + books.quota_drops.load(Ordering::SeqCst);
+
+    if let Some(msg) = first_error.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        return Err(PipelineError { msg, completed: processed, in_flight, dropped: shed });
+    }
+    // Clean completion conserves requests: everything admitted was either
+    // served, dropped, or shed on deadline (stranded requests only exist
+    // on the Err path).
+    debug_assert_eq!(in_flight, 0, "completed run stranded {in_flight} request(s)");
+
+    let wall_s = t_start.elapsed().as_secs_f64();
+    let mut metrics = Metrics {
+        started: t_start,
+        dropped: shed,
+        wall_s,
+        deadline_offered: books.deadline_offered.load(Ordering::SeqCst),
+        deadline_ingress: books.deadline_ingress.load(Ordering::SeqCst),
+        deadline_router: deadline_shed,
+        ingest_rejects: books.ingest_rejects.load(Ordering::SeqCst),
+        scaling_events: scaling_events.into_inner().unwrap_or_else(|e| e.into_inner()),
+        // What `--cost-profile` rewrites at shutdown: every class's final
+        // EWMA state (seeded knowledge + everything learned this run).
+        cost_profile: CostProfile {
+            classes: classes.iter().map(|c| (c.name.clone(), c.cost.snapshot())).collect(),
+            // Stamped by `CostProfile::save` at write time, not here.
+            saved_unix: None,
+        },
+        ..Metrics::default()
+    };
+    // Delta/sticky books: per-worker tallies merge; the router's sticky
+    // counters come straight from the shared context.
+    for o in &outputs {
+        metrics.delta.merge(&o.delta);
+    }
+    if let Some(sc) = &sticky_ctx {
+        metrics.delta.sticky_hits = sc.hits.load(Ordering::SeqCst);
+        metrics.delta.sticky_cold = sc.miss_cold.load(Ordering::SeqCst);
+        metrics.delta.sticky_retired = sc.miss_retired.load(Ordering::SeqCst);
+        metrics.delta.sticky_capacity = sc.miss_capacity.load(Ordering::SeqCst);
+    }
+    let mut predictions = Vec::with_capacity(processed);
+    let mut t_served = vec![0usize; tenants.len()];
+    let mut t_met = vec![0usize; tenants.len()];
+    let mut t_missed = vec![0usize; tenants.len()];
+    let mut m_served = vec![0usize; models.len()];
+    let mut m_correct = vec![0usize; models.len()];
+    for o in &outputs {
+        let service: Vec<f64> = o.records.iter().map(|r| r.timing.service_s).collect();
+        let e2e: Vec<f64> = o.records.iter().map(|r| r.timing.e2e_s).collect();
+        let batches: Vec<f64> = o.batch_sizes.iter().map(|&b| b as f64).collect();
+        metrics.per_worker.push(WorkerStats {
+            worker: o.wid,
+            class: classes[o.class].name.clone(),
+            served: o.records.len(),
+            batches: o.batch_sizes.len(),
+            busy_s: o.busy_s,
+            service: PercentileReport::from_samples(&service),
+            e2e: PercentileReport::from_samples(&e2e),
+            batch: PercentileReport::from_samples(&batches),
+        });
+        metrics.batch_sizes.extend_from_slice(&o.batch_sizes);
+        for r in &o.records {
+            let correct = r.pred == r.label;
+            metrics.record(r.timing, correct);
+            t_served[r.tenant] += 1;
+            m_served[r.model] += 1;
+            if correct {
+                m_correct[r.model] += 1;
+            }
+            match r.met_deadline {
+                Some(true) => {
+                    metrics.deadline_met += 1;
+                    t_met[r.tenant] += 1;
+                }
+                Some(false) => {
+                    metrics.deadline_missed += 1;
+                    t_missed[r.tenant] += 1;
+                }
+                None => {}
+            }
+            predictions.push(Prediction { label: r.label, pred: r.pred, worker: o.wid });
+        }
+    }
+    // Per-tenant rollup: the books the stage threads kept, plus served /
+    // met / missed tallied from the records above.
+    metrics.per_tenant = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, tc)| TenantStats {
+            tenant: tc.name.clone(),
+            weight: tc.weight,
+            quota: tc.quota,
+            served: t_served[i],
+            dropped: tc.dropped.load(Ordering::SeqCst),
+            deadline_offered: tc.deadline_offered.load(Ordering::SeqCst),
+            deadline_ingress: tc.deadline_ingress.load(Ordering::SeqCst),
+            deadline_router: tc.deadline_router.load(Ordering::SeqCst),
+            deadline_met: t_met[i],
+            deadline_missed: t_missed[i],
+            ingest_rejects: tc.ingest_rejects.load(Ordering::SeqCst),
+        })
+        .collect();
+    // Per-model rollup: the fleet books. Every run gets one (a
+    // single-model run's row restates the global books); each row
+    // satisfies offered = served + dropped + deadline drops, the same
+    // conservation identity the tenant books carry. Shadow mirrors are
+    // deliberately absent from `served` — mirrored traffic is an
+    // observation, not service.
+    metrics.per_model = models
+        .iter()
+        .enumerate()
+        .map(|(i, mc)| ModelStats {
+            model: mc.name.clone(),
+            classes: classes.iter().filter(|c| c.model == i).count(),
+            served: m_served[i],
+            correct: m_correct[i],
+            dropped: mc.dropped.load(Ordering::SeqCst),
+            deadline_offered: mc.deadline_offered.load(Ordering::SeqCst),
+            deadline_ingress: mc.deadline_ingress.load(Ordering::SeqCst),
+            deadline_router: mc.deadline_router.load(Ordering::SeqCst),
+            shadow_mirrored: mc.shadow.as_ref().map_or(0, |s| s.mirrored.load(Ordering::SeqCst)),
+            shadow_disagreements: mc
+                .shadow
+                .as_ref()
+                .map_or(0, |s| s.disagreements.load(Ordering::SeqCst)),
+            shadow_capture_drops: mc
+                .shadow
+                .as_ref()
+                .map_or(0, |s| s.capture_drops.load(Ordering::SeqCst)),
+        })
+        .collect();
+    // Integrated active-replica seconds per class, reconstructed from the
+    // scaling log: the truthful utilization denominator when the
+    // autoscaler moved the count mid-run (a run that mostly served at 4
+    // replicas but ended at 1 must not divide by 1 × wall).
+    let replica_secs: Vec<f64> = classes
+        .iter()
+        .map(|class| {
+            let mut level = class.min as f64;
+            let mut t_prev = 0.0f64;
+            let mut integral = 0.0f64;
+            for e in metrics.scaling_events.iter().filter(|e| e.class == class.name) {
+                let t = e.at_s.clamp(0.0, wall_s);
+                integral += level * (t - t_prev).max(0.0);
+                t_prev = t;
+                level = e.to as f64;
+            }
+            integral + level * (wall_s - t_prev).max(0.0)
+        })
+        .collect();
+    // Per-class rollup: served/visit/busy books plus how well the routing
+    // predictor tracked observed service times.
+    for (ci, class) in classes.iter().enumerate() {
+        let mut served = 0usize;
+        let mut batches = 0usize;
+        let mut busy_s = 0.0f64;
+        let mut service: Vec<f64> = Vec::new();
+        let mut batch_f: Vec<f64> = Vec::new();
+        let mut err_sum = 0.0f64;
+        let mut err_n = 0usize;
+        let mut unseeded = 0usize;
+        for o in outputs.iter().filter(|o| o.class == ci) {
+            served += o.records.len();
+            batches += o.batch_sizes.len();
+            busy_s += o.busy_s;
+            batch_f.extend(o.batch_sizes.iter().map(|&b| b as f64));
+            for r in &o.records {
+                service.push(r.timing.service_s);
+                if r.predicted_s.is_finite() {
+                    err_sum += (r.predicted_s - r.timing.service_s).abs()
+                        / r.timing.service_s.max(1e-9);
+                    err_n += 1;
+                } else if has_router && !r.sticky {
+                    // Probe traffic: routed before this class's cost model
+                    // had an observation. (Without a router no prediction
+                    // is ever attempted, and a sticky delivery's NaN is by
+                    // design — neither counts as a probe.)
+                    unseeded += 1;
+                }
+            }
+        }
+        metrics.per_class.push(ClassStats {
+            class: class.name.clone(),
+            replicas: class.active.load(Ordering::SeqCst),
+            replicas_min: class.min,
+            replicas_max: class.max,
+            replicas_peak: class.peak.load(Ordering::SeqCst),
+            replica_s: replica_secs[ci],
+            served,
+            batches,
+            busy_s,
+            batch: PercentileReport::from_samples(&batch_f),
+            service: PercentileReport::from_samples(&service),
+            cost_err: if err_n > 0 { err_sum / err_n as f64 } else { f64::NAN },
+            unseeded,
+            deadline_drops: class.deadline_drops.load(Ordering::SeqCst),
+        });
+    }
+    Ok(ServerResult { metrics, predictions })
+}

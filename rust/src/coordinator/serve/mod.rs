@@ -1,0 +1,497 @@
+//! The sharded serving runtime with a heterogeneous, cost-aware pool and
+//! deadline-aware admission.
+//!
+//! ```text
+//!                                              ┌ class "func" ┬ worker 0 ┐
+//! event source → repr builder → ingress → router┤  sub-queue   └ worker 1 ┤→ merged
+//!  (synth /       (histogram2)   queue   (cost- │             …           │  metrics +
+//!   replay /                   (admission aware, └ class "sim" ── worker N ┘  predictions
+//!   tail)                       + deadline  SLO
+//!                               expiry)     shed)
+//! ```
+//!
+//! The runtime is composed from **stage modules**, one file per pipeline
+//! stage, glued by a lifecycle spine; stages communicate only through
+//! the shared-state structs in [`state`]:
+//!
+//! | module      | owns |
+//! |-------------|------|
+//! | `ingress`   | the source pump and the repr builder + admission gate (quotas, expiry) |
+//! | `router`    | cost/sticky/deadline routing over per-class sub-queues |
+//! | `workers`   | the accelerator worker loop: batch drain, retire tokens, shadow mirroring |
+//! | `scaler`    | the autoscale controller |
+//! | `lifecycle` | spawn/join ordering, first-error funnel, metrics finalization |
+//! | `state`     | the `pub(super)` context structs the stages share |
+//!
+//! The source is any [`EventSource`] — the synthetic camera, a paced
+//! dataset replay, or a tailed capture file — producing requests with
+//! **real arrival times**; an optional SLO turns each arrival into a
+//! deadline (`arrival + slo`). Deadlines are enforced at the three
+//! cheapest points, in order:
+//!
+//! 1. **ingress** — a request already past its deadline is dropped before
+//!    the representation is even built (`deadline_ingress`),
+//! 2. **router** — with several classes, a request is shed when even the
+//!    best class's predicted completion time (service EWMA × backlog)
+//!    cannot meet the deadline — the cheapest point to kill work that is
+//!    doomed anyway (`deadline_router`),
+//! 3. **worker pop** — a request that expired while queued is discarded
+//!    inside the queue lock without occupying a batch slot or an
+//!    accelerator visit (also `deadline_router`; in the routerless
+//!    single-class path this *is* the scheduling point).
+//!
+//! Served requests are additionally scored against their deadline for the
+//! SLO-attainment figure ([`Metrics::slo_attainment`]) — a late
+//! completion counts as served but against the SLO.
+//!
+//! With more than one replica class, admitted requests flow through a
+//! **router** that picks a class per request (with a single class,
+//! workers drain the ingress directly — no router thread, no cost-model
+//! overhead, and the original drop-oldest semantics): each class
+//! advertises a cost model (an EWMA of observed service seconds per
+//! event-count bucket, seeded from its first requests — see
+//! [`CostModel`](super::metrics::CostModel)) and a batch affinity (the
+//! micro-batch cap its workers drain; dense engines want large batches,
+//! the cycle simulator wants batch 1). The router sends each request to
+//! the class minimizing predicted completion time given current
+//! per-class backlogs, via per-class sub-queues layered on the global
+//! [`AdmissionQueue`](super::queue::AdmissionQueue).
+//!
+//! Admission control stays **global**: only the ingress queue drops
+//! (`Block` exerts backpressure, `DropOldest` sheds stale load and counts
+//! every drop); sub-queues always block, so a saturated class
+//! back-pressures the router and the shedding decision is still made — and
+//! accounted — at one place.
+//!
+//! Pool classes declared with a replica *range* (`ReplicaSpec::
+//! with_max_replicas`, CLI `class=min..max`) are **autoscaled**: a
+//! controller thread ([`AutoscaleConfig`]) samples per-class backlog and
+//! windowed deadline-drop/busy counters, growing a pressured class by
+//! building its next replica through the pool's retained factory and
+//! spawning a worker for it mid-run, and shrinking an idle class by
+//! retiring one worker (which drains its in-flight batch before its
+//! thread exits). Every decision lands in `Metrics::scaling_events`.
+//! Cost models can be **persisted** across runs ([`CostProfile`],
+//! `ServerConfig::cost_profile`): a seeded class predicts — and the SLO
+//! shed can act — from its very first request, with zero probe traffic.
+//! Persisted snapshots are **aged** at seed time ([`CostSnapshot::
+//! decayed`](super::metrics::CostSnapshot::decayed)): stale buckets (and,
+//! much later, the global mean) are dropped rather than trusted.
+//!
+//! **Incremental (delta) inference + sticky routing.** Delta-capable
+//! backends ([`Backend::supports_delta`]) cache each stream's previous
+//! window and re-execute only the sites the new window changed
+//! ([`crate::model::ExecPlan::execute_delta`] — bit-exact by
+//! construction, with a full-recompute fallback above a dirty-fraction
+//! threshold). To keep a stream's cache hot, the router first attempts a
+//! **sticky** delivery through a bounded per-worker side queue owned by
+//! the worker that served the stream last. Every miss — cold stream,
+//! retired worker, full side queue — falls back to the cost-aware route,
+//! and replicas of a class share one delta store, so a request landing
+//! elsewhere is still served correctly: stickiness buys performance,
+//! never correctness. Hits and every fallback reason are counted in
+//! [`Metrics::delta`].
+//!
+//! **Multi-tenant front door.** Every [`super::ingest::SourcedRequest`]
+//! carries a tenant id (file/synthetic sources map to the single default tenant; the
+//! socket sources in [`super::net`] take it from the packet header).
+//! Configuring more than one [`TenantConfig`] partitions the ingress
+//! queue by weighted fair share: each tenant may occupy at most
+//! `max(1, depth × weight / Σweights)` slots, and an arrival from a
+//! tenant already at its quota is dropped — so a saturating tenant
+//! exhausts only its own share and cannot starve the rest. Tenants may
+//! also carry their own SLO, overriding the global `slo` for their
+//! requests, and the merged metrics grow a per-tenant section
+//! ([`TenantStats`](super::metrics::TenantStats)). With a single tenant
+//! the quota gate is inert and admission semantics are bit-for-bit the
+//! pre-tenant ones.
+//!
+//! **Multi-model fleet serving.** Replica classes carry a *model tag*
+//! (`ReplicaSpec::for_model`; the CLI builds one class per `--model
+//! name=arch` entry) and every request carries a model id — stamped
+//! cyclically by [`MixSource`](super::ingest::MixSource) (`--model-mix`)
+//! or taken from the ESNP v2 packet header. The router treats the tag as
+//! a hard filter: a request is only ever offered to classes serving its
+//! model, and cost-aware placement happens *within* that model's
+//! classes. The merged metrics grow a per-model section
+//! ([`ModelStats`](super::metrics::ModelStats)) whose books satisfy the
+//! same conservation identity as the tenant books. Single-model runs get
+//! one implicit entry under the default tag and behave bit-for-bit as
+//! before fleets existed. Two fleet operations ride on this:
+//!
+//! - **Hot swap** — a model served through a
+//!   [`Swappable`](super::backend::Swappable) handle can have its
+//!   backend atomically replaced mid-run; in-flight requests finish on
+//!   the backend they started on and no request is lost or torn.
+//! - **Shadow conformance** — [`ShadowConfig`] mirrors a deterministic
+//!   fraction of a model's *served* traffic to a candidate backend and
+//!   compares predictions bit-exactly. Mirrored visits never count as
+//!   served traffic; disagreements (a candidate error counts — a backend
+//!   that cannot classify does not conform) are tallied per model, and
+//!   [`ShadowCaptureConfig`] appends each disagreeing sample to a
+//!   replayable `.esda` capture, capped, with overflow counted as
+//!   capture drops.
+//!
+//! **Recoverable source rejects.** A *recoverable*
+//! [`super::ingest::IngestError`] from the source (a corrupt or
+//! out-of-geometry sample the reader skipped past — see
+//! [`super::ingest`]) does not abort the run: the spine counts
+//! it under `Metrics::ingest_rejects` (global and per-tenant) and keeps
+//! pulling. Only fatal errors (latched byte-stream failures) end the
+//! stream and surface as a [`PipelineError`].
+//!
+//! Worker panics and backend errors are caught and surfaced as
+//! [`PipelineError`] — they never poison a join — and requests that were
+//! admitted but not classified when the run aborts are counted as
+//! `in_flight`.
+//!
+//! Entry points: [`run_server`] / [`run_pool`] (synthetic source built
+//! from a dataset profile) and [`run_server_source`] /
+//! [`run_pool_source`] (any [`EventSource`]).
+
+mod ingress;
+mod lifecycle;
+mod router;
+mod scaler;
+mod state;
+#[cfg(test)]
+mod tests;
+mod workers;
+
+use super::backend::{Backend, ReplicaPool, DEFAULT_MODEL};
+use super::ingest::{EventSource, SyntheticSource};
+use super::metrics::{CostProfile, Metrics};
+use super::queue::DropPolicy;
+use crate::events::DatasetProfile;
+use lifecycle::serve_classes;
+use state::{BackendRef, ClassSlots};
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serving-runtime configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Number of requests the synthetic source generates ([`run_server`] /
+    /// [`run_pool`] only — an explicit [`EventSource`] owns its stream
+    /// length).
+    pub n_requests: usize,
+    /// Source seed (fixes the request stream).
+    pub seed: u64,
+    /// Histogram clip value.
+    pub clip: f32,
+    /// Accelerator worker replicas ([`run_server`] only — a
+    /// [`ReplicaPool`] carries its own per-class counts).
+    pub workers: usize,
+    /// Ingress queue depth (also the depth of each per-class sub-queue).
+    pub queue_depth: usize,
+    /// Admission control policy when the ingress queue saturates.
+    pub drop_policy: DropPolicy,
+    /// Max requests a worker drains from its queue per wakeup
+    /// ([`run_server`] only — pool classes carry their own batch
+    /// affinity; 1 = classic one-at-a-time). Workers never wait to fill a
+    /// batch — they take what is already queued — so batching adds no
+    /// latency when the system is unloaded and amortizes per-visit
+    /// backend overhead when it is saturated.
+    pub batch: usize,
+    /// Per-request latency SLO: each request's deadline is its arrival
+    /// plus this. `None` disables every deadline mechanism (the pre-SLO
+    /// behavior, bit for bit).
+    pub slo: Option<Duration>,
+    /// Autoscaler controller configuration. `None` keeps every class at
+    /// its configured replica count; `Some` runs the controller loop,
+    /// which has an effect only on classes whose `max` exceeds their base
+    /// count (see [`crate::coordinator::ReplicaSpec::with_max_replicas`]).
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Cost-model seed: per-class snapshots from a previous run's
+    /// profile. Seeded classes predict (and SLO-shed) from their first
+    /// request instead of burning probes — and freshly scaled-up replicas
+    /// join a class that already knows its costs.
+    pub cost_profile: Option<CostProfile>,
+    /// Tenant table for the multi-tenant front door (CLI `--tenant
+    /// name=weight[,slo_ms]`). Empty = single implicit `default` tenant
+    /// with weight 1 — the quota gate stays inert and admission behaves
+    /// exactly as before tenancy existed. With several tenants, each
+    /// request's `tenant` field indexes this table, admission enforces the
+    /// weighted ingress quotas, and a tenant's own `slo` overrides the
+    /// global one for its requests.
+    pub tenants: Vec<TenantConfig>,
+    /// Synthetic-source sliding-window overlap fraction ([`run_server`] /
+    /// [`run_pool`] only — an explicit [`EventSource`] owns its own
+    /// stream shape). 0 = independent windows (the classic source); > 0
+    /// emits `streams` interleaved per-stream sliding windows, each
+    /// window after a stream's first carrying over this fraction of its
+    /// predecessor's events — the workload shape the delta/sticky path
+    /// exists for.
+    pub overlap: f64,
+    /// Interleaved synthetic streams in overlap mode (ignored when
+    /// `overlap` is 0).
+    pub streams: usize,
+    /// Shadow deployments (CLI `--shadow name=arch[@frac]`): each entry
+    /// mirrors a fraction of one fleet model's served traffic to a
+    /// candidate backend for bit-exact conformance checking. Entries
+    /// naming a model no class serves are ignored (the CLI validates
+    /// names up front). Empty = no shadowing, zero overhead.
+    pub shadows: Vec<ShadowConfig>,
+    /// Where shadow disagreements are captured (CLI `--shadow-capture
+    /// path`). `None` = count disagreements but keep no samples. One
+    /// capture file serves every shadowed model in the run.
+    pub shadow_capture: Option<ShadowCaptureConfig>,
+}
+
+/// One tenant of the multi-tenant front door: a display name, a fair-share
+/// weight (its slice of the ingress queue is `depth × weight / Σweights`,
+/// floored, min 1), and an optional per-tenant SLO overriding
+/// [`ServerConfig::slo`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantConfig {
+    pub name: String,
+    pub weight: usize,
+    pub slo: Option<Duration>,
+}
+
+impl TenantConfig {
+    pub fn new(name: impl Into<String>, weight: usize) -> TenantConfig {
+        TenantConfig { name: name.into(), weight, slo: None }
+    }
+
+    pub fn with_slo(mut self, slo: Duration) -> TenantConfig {
+        self.slo = Some(slo);
+        self
+    }
+}
+
+/// One shadow deployment: mirror `fraction` of `model`'s served traffic
+/// to `candidate` and compare predictions bit-exactly (functional
+/// backends are deterministic, so any divergence is a real conformance
+/// break, not noise). The mirror is evaluated on the serving worker
+/// *after* the primary result is recorded — shadow traffic never counts
+/// as served and never delays the reply path's books.
+#[derive(Clone)]
+pub struct ShadowConfig {
+    /// Fleet model name whose traffic is mirrored.
+    pub model: String,
+    /// Candidate backend receiving the mirrored requests.
+    pub candidate: Arc<dyn Backend>,
+    /// Fraction of the model's served requests to mirror, in (0, 1].
+    pub fraction: f64,
+}
+
+impl fmt::Debug for ShadowConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShadowConfig")
+            .field("model", &self.model)
+            .field("candidate", &self.candidate.name())
+            .field("fraction", &self.fraction)
+            .finish()
+    }
+}
+
+/// Shadow disagreement capture: every mirrored request whose candidate
+/// prediction diverges from the primary's is appended — raw events plus
+/// ground-truth label — to a replayable `.esda` file, up to
+/// `max_samples`; drops past the cap are counted per model
+/// (`shadow_capture_drops`), never silent.
+#[derive(Debug, Clone)]
+pub struct ShadowCaptureConfig {
+    /// Capture file path (overwritten at run start).
+    pub path: PathBuf,
+    /// Cap on captured samples — bounds file growth under a
+    /// badly-diverging candidate.
+    pub max_samples: usize,
+}
+
+impl Default for ShadowCaptureConfig {
+    fn default() -> Self {
+        ShadowCaptureConfig { path: PathBuf::new(), max_samples: 256 }
+    }
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            n_requests: 32,
+            seed: 1,
+            clip: 8.0,
+            workers: 1,
+            queue_depth: 4,
+            drop_policy: DropPolicy::Block,
+            batch: 1,
+            slo: None,
+            autoscale: None,
+            cost_profile: None,
+            tenants: Vec::new(),
+            overlap: 0.0,
+            streams: 1,
+            shadows: Vec::new(),
+            shadow_capture: None,
+        }
+    }
+}
+
+/// Autoscaler controller tuning. The controller samples every class each
+/// `interval`: it reads the class backlog plus two
+/// [`SlidingWindow`](super::metrics::SlidingWindow) counters (deadline
+/// drops, accelerator-busy time) over `window`, and takes at most one
+/// scaling step per class per tick:
+///
+/// - **up** (toward the class max) when deadline drops landed in the
+///   window, or the backlog per active replica exceeds `high_backlog` —
+///   both read "this class cannot keep up";
+/// - **down** (toward the class min) when the class is idle: zero
+///   backlog, no deadline drops in the window, and windowed utilization
+///   below `low_util`. A retiring replica finishes the batch it holds
+///   before its worker thread exits, and grown backends stay warm for
+///   re-activation.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Controller tick (sampling + at most one step per class).
+    pub interval: Duration,
+    /// Sliding-window span the drop/busy counters are read over.
+    pub window: Duration,
+    /// Queued-plus-in-service requests per active replica above which the
+    /// class scales up.
+    pub high_backlog: f64,
+    /// Windowed utilization below which an idle class scales down.
+    pub low_util: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            interval: Duration::from_millis(20),
+            window: Duration::from_millis(200),
+            high_backlog: 2.0,
+            low_util: 0.2,
+        }
+    }
+}
+
+/// One served request's outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Prediction {
+    /// Ground-truth class of the synthetic recording.
+    pub label: usize,
+    /// Backend's predicted class.
+    pub pred: usize,
+    /// Worker replica that served it.
+    pub worker: usize,
+}
+
+/// Outcome of a serving run.
+#[derive(Debug)]
+pub struct ServerResult {
+    pub metrics: Metrics,
+    /// Per-request outcomes, grouped by worker (use as a multiset: the
+    /// worker interleaving is scheduling-dependent).
+    pub predictions: Vec<Prediction>,
+}
+
+/// A serving run that aborted: the first backend error or worker panic,
+/// plus how much work completed and how much was stranded.
+#[derive(Debug, Clone)]
+pub struct PipelineError {
+    pub msg: String,
+    /// Requests classified before the abort.
+    pub completed: usize,
+    /// Requests admitted but never classified.
+    pub in_flight: usize,
+    /// Requests evicted by admission control before the abort.
+    pub dropped: usize,
+}
+
+impl fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "serving aborted after {} request(s) ({} in flight, {} dropped): {}",
+            self.completed, self.in_flight, self.dropped, self.msg
+        )
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+/// Run the serving pipeline to completion over `cfg.n_requests` synthetic
+/// requests with a **homogeneous** pool: `cfg.workers` replicas sharing
+/// one backend, a single class. With one class there is no routing
+/// decision, so no router thread runs — workers drain the ingress queue
+/// directly, exactly as the pre-pool runtime did (same admission and
+/// drop-oldest semantics, no cost-model overhead).
+pub fn run_server(
+    profile: &DatasetProfile,
+    backend: &dyn Backend,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    run_server_source(Box::new(synthetic_source(profile, cfg)), backend, cfg)
+}
+
+/// The synthetic source every profile-based entry point shares:
+/// independent windows classically, or interleaved per-stream sliding
+/// windows when `cfg.overlap` asks for them. Public so fleet drivers can
+/// build the same stream and wrap it (e.g. in
+/// [`MixSource`](super::ingest::MixSource)) themselves.
+pub fn synthetic_source(profile: &DatasetProfile, cfg: &ServerConfig) -> SyntheticSource {
+    let source = SyntheticSource::new(profile.clone(), cfg.n_requests, cfg.seed);
+    if cfg.overlap > 0.0 {
+        source.with_overlap(cfg.overlap, cfg.streams)
+    } else {
+        source
+    }
+}
+
+/// [`run_server`] over an arbitrary [`EventSource`] — replayed datasets,
+/// tailed capture files, or anything implementing the trait. The source
+/// owns the stream length; `cfg.n_requests` is ignored.
+pub fn run_server_source(
+    source: Box<dyn EventSource>,
+    backend: &dyn Backend,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    assert!(cfg.workers >= 1, "need at least one worker replica");
+    let slots = vec![ClassSlots {
+        name: backend.name().to_string(),
+        model: DEFAULT_MODEL.to_string(),
+        batch: cfg.batch.max(1),
+        backends: vec![BackendRef::Borrowed(backend); cfg.workers],
+        max: cfg.workers,
+        grow: None,
+    }];
+    serve_classes(source, slots, cfg)
+}
+
+/// Run the serving pipeline over a **heterogeneous** [`ReplicaPool`]: each
+/// class brings its own replica count, per-replica backend instances, and
+/// batch affinity; the router spreads admitted requests across classes by
+/// predicted completion time. `cfg.workers` and `cfg.batch` are ignored —
+/// the pool defines the shape.
+pub fn run_pool(
+    profile: &DatasetProfile,
+    pool: &ReplicaPool,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    run_pool_source(Box::new(synthetic_source(profile, cfg)), pool, cfg)
+}
+
+/// [`run_pool`] over an arbitrary [`EventSource`].
+pub fn run_pool_source(
+    source: Box<dyn EventSource>,
+    pool: &ReplicaPool,
+    cfg: &ServerConfig,
+) -> Result<ServerResult, PipelineError> {
+    assert!(!pool.classes.is_empty(), "pool needs at least one replica class");
+    let slots: Vec<ClassSlots<'_>> = pool
+        .classes
+        .iter()
+        .map(|c| ClassSlots {
+            name: c.name.clone(),
+            model: c.model.clone(),
+            batch: c.batch,
+            backends: c.replicas.iter().map(|b| BackendRef::Shared(Arc::clone(b))).collect(),
+            max: c.max,
+            grow: Some(c),
+        })
+        .collect();
+    serve_classes(source, slots, cfg)
+}

@@ -1,0 +1,134 @@
+//! Stage 3: the cost-aware router — moves admitted requests from the
+//! ingress queue to class sub-queues by predicted completion time,
+//! restricted to classes serving the request's model, shedding requests
+//! no eligible class can finish in time, and attempting the sticky
+//! (cache-affinity) fast path first for live streams.
+
+use super::state::{ClassCtx, SharedCtx};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+/// What the router decided for one request.
+pub(super) struct RouteDecision {
+    /// Chosen class index.
+    pub(super) class: usize,
+    /// Per-request service-seconds prediction the decision was based on
+    /// (NaN for a probe), recorded so the caller logs exactly what the
+    /// router saw — not a re-query that a concurrent `observe` may have
+    /// seeded in the meantime.
+    pub(super) predicted_s: f64,
+    /// Predicted *completion* seconds including queueing ahead (NaN when
+    /// unknown — a probe, or every class unseeded). The deadline shed
+    /// compares this against the request's remaining budget.
+    pub(super) completion_s: f64,
+}
+
+/// Pick the class minimizing predicted completion time for a request in
+/// `bucket`, considering only classes serving `model` — the model tag is
+/// a hard filter, not a cost input. Unseeded classes are probed eagerly
+/// (their real cost is unknown and must be learned) but only up to one
+/// outstanding request per replica while any alternative — seeded, or
+/// under its probe cap — exists. In the cold-start corner where *every*
+/// class is unseeded and probe-capped, requests spread by per-replica
+/// backlog (and each sub-queue's bounded depth caps how much can ever
+/// stack behind one slow class). Ties break toward the smaller
+/// per-replica backlog.
+///
+/// Every clamped model id has at least one serving class by construction
+/// (the model table is derived from the class tags); the `best = 0`
+/// initialization is a defensive fallback, never a routing decision.
+pub(super) fn route(classes: &[ClassCtx<'_>], bucket: usize, model: usize) -> RouteDecision {
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    let mut best_load = f64::INFINITY;
+    let mut best_pred = f64::NAN;
+    let mut found = false;
+    for (i, c) in classes.iter().enumerate() {
+        if c.model != model {
+            continue;
+        }
+        let backlog = c.backlog.load(Ordering::SeqCst);
+        // Active (not instantiated) replicas: the autoscaler moves this,
+        // and routing decisions must follow the live serving capacity.
+        let replicas = c.active.load(Ordering::SeqCst).max(1);
+        // Queued + in-service requests per replica: the tie-break key, so
+        // a 1-replica class doesn't absorb as much as a 4-replica one.
+        let load = backlog as f64 / replicas as f64;
+        let pred = c.cost.predict(bucket);
+        let cost = match pred {
+            // Predicted completion ≈ own service time scaled by how many
+            // requests already wait ahead of it per replica.
+            Some(s) => s * (load + 1.0),
+            None if backlog < replicas => f64::NEG_INFINITY,
+            None => f64::INFINITY,
+        };
+        if !found || cost < best_cost || (cost == best_cost && load < best_load) {
+            best = i;
+            best_cost = cost;
+            best_load = load;
+            best_pred = pred.unwrap_or(f64::NAN);
+            found = true;
+        }
+    }
+    RouteDecision {
+        class: best,
+        predicted_s: best_pred,
+        completion_s: if best_cost.is_finite() { best_cost } else { f64::NAN },
+    }
+}
+
+/// The router stage body: drain the ingress until it closes, placing
+/// each request sticky-first, then cost-aware within its model's
+/// classes, shedding on predicted deadline infeasibility.
+pub(super) fn router_stage(sx: &SharedCtx<'_, '_>) {
+    let multi_tenant = sx.tenants.len() > 1;
+    while let Some(mut req) = sx.ingress.pop() {
+        // Out of the ingress queue: the tenant's quota slot is free again
+        // whatever happens downstream.
+        if multi_tenant {
+            sx.tenants[req.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+        }
+        // Sticky fast path: land a live stream back on the worker
+        // holding its delta cache. Expired requests skip it (the cost
+        // path below sheds and counts them); any miss falls through to
+        // cost routing.
+        if let Some(sc) = sx.sticky {
+            if !req.expired(Instant::now()) {
+                match sc.try_route(req, sx.classes) {
+                    None => continue,
+                    Some(back) => req = back,
+                }
+            }
+        }
+        let d = route(sx.classes, req.bucket, req.model);
+        if let Some(dl) = req.deadline {
+            let now = Instant::now();
+            // Shed when the deadline has passed, or when even the *best*
+            // class's predicted completion misses it. An unknown
+            // completion (probe traffic, cold pool) is never shed
+            // predictively — the probe's value is the cost observation
+            // itself.
+            let predicted_done = d.completion_s.is_finite().then(|| {
+                // Clamp: any sane SLO is far under 1e6 s, and
+                // `from_secs_f64` must not overflow on a pathological
+                // EWMA.
+                now + Duration::from_secs_f64(d.completion_s.clamp(0.0, 1e6))
+            });
+            if now >= dl || predicted_done.is_some_and(|t| t > dl) {
+                sx.classes[d.class].deadline_drops.fetch_add(1, Ordering::SeqCst);
+                sx.tenants[req.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
+                sx.models[req.model].deadline_router.fetch_add(1, Ordering::SeqCst);
+                continue;
+            }
+        }
+        let class = &sx.classes[d.class];
+        req.predicted_s = d.predicted_s;
+        class.backlog.fetch_add(1, Ordering::SeqCst);
+        if class.queue.push(req).is_err() {
+            break; // aborted downstream
+        }
+    }
+    for c in sx.classes {
+        c.queue.close();
+    }
+}

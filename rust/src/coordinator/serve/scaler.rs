@@ -1,0 +1,198 @@
+//! Stage 5: the autoscaler controller loop — samples per-class backlog
+//! and windowed deadline-drop/busy counters every tick, growing a
+//! pressured class by building its next replica through the pool's
+//! retained factory (spawning a worker for it mid-run) and shrinking an
+//! idle class by depositing a retire token.
+
+use super::state::{BackendRef, ClassCtx, SharedCtx, WorkerOutput};
+use super::workers::worker_loop;
+use super::AutoscaleConfig;
+use crate::coordinator::metrics::{ScalingEvent, SlidingWindow};
+use crate::coordinator::queue::{AdmissionQueue, DropPolicy};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// The autoscaler controller loop: every `auto.interval` it samples each
+/// class's backlog plus sliding-window deadline-drop and busy counters,
+/// then takes at most one scaling step per class per tick.
+///
+/// - **Scale up** (pressure): deadline drops landed in the window, or the
+///   per-active-replica backlog exceeds the high watermark. The next
+///   replica slot's backend is built on demand through the pool's
+///   retained factory (and kept warm for later re-activation); a fresh
+///   worker thread is spawned into the serving scope for it.
+/// - **Scale down** (idle): zero backlog, no deadline drops in the
+///   window, and windowed utilization under the low watermark. One
+///   retire token is deposited; the first worker of the class to see it
+///   drains its in-flight batch and exits.
+///
+/// A failed scale-up (factory error) is recorded as a scaling event and
+/// does not abort serving — the class simply stays at its current size.
+/// The controller exits when the spine flips the `stop` latch after the
+/// stream has drained.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
+    auto: &AutoscaleConfig,
+    s: &'scope std::thread::Scope<'scope, '_>,
+    sx: &'scope SharedCtx<'env, 'a>,
+    has_router: bool,
+    t_start: Instant,
+    stop: &'scope (Mutex<bool>, Condvar),
+    events: &'scope Mutex<Vec<ScalingEvent>>,
+    next_wid: &'scope AtomicUsize,
+    outputs: &'scope Mutex<Vec<WorkerOutput>>,
+    depth: usize,
+) {
+    let classes = sx.classes;
+    let mut drops_w: Vec<SlidingWindow> =
+        classes.iter().map(|_| SlidingWindow::new(auto.window)).collect();
+    let mut busy_w: Vec<SlidingWindow> =
+        classes.iter().map(|_| SlidingWindow::new(auto.window)).collect();
+    let push_event = |class: &ClassCtx<'_>, from: usize, to: usize, reason: String| {
+        events.lock().unwrap().push(ScalingEvent {
+            at_s: t_start.elapsed().as_secs_f64(),
+            class: class.name.clone(),
+            from,
+            to,
+            reason,
+        });
+    };
+    loop {
+        // Sleep one tick — or wake immediately when the spine stops us.
+        {
+            let (lock, cv) = stop;
+            let mut stopped = lock.lock().unwrap();
+            if !*stopped {
+                // lint:allow(panic): condvar poisoning is the lock-poisoning
+                // idiom — holders never panic while flipping the stop flag
+                stopped = cv.wait_timeout(stopped, auto.interval).unwrap().0;
+            }
+            if *stopped {
+                return;
+            }
+        }
+        let now = Instant::now();
+        for (ci, class) in classes.iter().enumerate() {
+            let active = class.active.load(Ordering::SeqCst);
+            drops_w[ci].record(now, class.deadline_drops.load(Ordering::SeqCst) as u64);
+            busy_w[ci].record(now, class.busy_us.load(Ordering::SeqCst));
+            let drop_rate = drops_w[ci].rate();
+            let span = busy_w[ci].span_secs();
+            let util = if span > 0.0 && active > 0 {
+                (busy_w[ci].delta() as f64 / 1e6) / (span * active as f64)
+            } else {
+                0.0
+            };
+            // Backlog: the router maintains per-class counts; the
+            // routerless single-class path reads the ingress queue.
+            let backlog = if has_router {
+                class.backlog.load(Ordering::SeqCst)
+            } else {
+                sx.ingress.stats().2
+            };
+            let per_replica = backlog as f64 / active.max(1) as f64;
+            let pressured = drop_rate > 0.0 || per_replica > auto.high_backlog;
+            if pressured && active < class.max {
+                // Scale up: fetch (or lazily build) the next slot's
+                // backend, then spawn a worker for it.
+                let slot = active;
+                let backend = {
+                    let mut slots = class.slots.lock().unwrap();
+                    match slots.get(slot) {
+                        Some(b) => Some(b.clone()), // warm from an earlier grow
+                        None => match class.grow.map(|pc| pc.build_replica(slot)) {
+                            Some(Ok(b)) => {
+                                let r = BackendRef::Shared(b);
+                                slots.push(r.clone());
+                                Some(r)
+                            }
+                            Some(Err(e)) => {
+                                push_event(
+                                    class,
+                                    active,
+                                    active,
+                                    format!("scale-up failed: {e}"),
+                                );
+                                None
+                            }
+                            // Not growable (homogeneous path): max ==
+                            // base count, so this arm is unreachable —
+                            // kept total for safety.
+                            None => None,
+                        },
+                    }
+                };
+                if let Some(backend) = backend {
+                    // Publish the capacity before the worker exists so its
+                    // very first retire-token check cannot see a stale
+                    // count; the router immediately routes against it.
+                    class.active.store(active + 1, Ordering::SeqCst);
+                    class.peak.fetch_max(active + 1, Ordering::SeqCst);
+                    push_event(
+                        class,
+                        active,
+                        active + 1,
+                        if drop_rate > 0.0 {
+                            format!("deadline-drop rate {drop_rate:.1}/s in window")
+                        } else {
+                            format!(
+                                "backlog {per_replica:.1}/replica > {:.1}",
+                                auto.high_backlog
+                            )
+                        },
+                    );
+                    let wid = next_wid.fetch_add(1, Ordering::SeqCst);
+                    let queue = if has_router { &class.queue } else { sx.ingress };
+                    // A delta-capable replica joins the sticky target
+                    // list before its worker runs: streams it serves can
+                    // be pinned back to it from its very first batch.
+                    let side = sx.sticky.and_then(|sc| {
+                        backend.get().supports_delta().then(|| {
+                            let q =
+                                Arc::new(AdmissionQueue::new(depth, DropPolicy::Block));
+                            sc.enroll(wid, ci, &q);
+                            q
+                        })
+                    });
+                    s.spawn(move || {
+                        let out = worker_loop(
+                            wid,
+                            ci,
+                            class,
+                            queue,
+                            has_router,
+                            backend.get(),
+                            side,
+                            sx,
+                        );
+                        outputs.lock().unwrap().push(out);
+                    });
+                }
+            } else if !pressured
+                && active > class.min
+                && backlog == 0
+                && util < auto.low_util
+                && span >= auto.window.as_secs_f64() * 0.5
+            {
+                // Scale down: shrink the advertised capacity first so the
+                // router stops counting the leaving replica, then deposit
+                // the retire token and wake any parked worker to claim it.
+                class.active.store(active - 1, Ordering::SeqCst);
+                class.retire.fetch_add(1, Ordering::SeqCst);
+                push_event(
+                    class,
+                    active,
+                    active - 1,
+                    format!("idle: backlog 0, util {:.0}% < {:.0}%", util * 100.0,
+                        auto.low_util * 100.0),
+                );
+                if has_router {
+                    class.queue.wake_consumers();
+                } else {
+                    sx.ingress.wake_consumers();
+                }
+            }
+        }
+    }
+}

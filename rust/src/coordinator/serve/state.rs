@@ -1,0 +1,532 @@
+//! Shared runtime state the serving stages communicate through: the
+//! in-flight request shape ([`Routed`]), the per-class / per-tenant /
+//! per-model books, sticky-routing state, the shadow-capture writer,
+//! and the small helpers the spine and stages both need.
+//!
+//! Everything here is `pub(super)`: the stage modules ([`super::ingress`],
+//! [`super::router`], [`super::workers`], [`super::scaler`],
+//! [`super::lifecycle`]) are the only consumers — the public surface
+//! lives in the parent module.
+
+use crate::coordinator::backend::{Backend, PoolClass};
+use crate::coordinator::metrics::{CostModel, DeltaMetrics, RequestTiming};
+use crate::coordinator::queue::{AdmissionQueue, TryPushError};
+use crate::events::{io, Event};
+use crate::sparse::SparseMap;
+use std::collections::HashMap;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// An admitted request: built by the repr stage, (optionally) routed, then
+/// served from a queue. With a single replica class there is no router and
+/// workers drain the ingress directly; with several, the router fills in
+/// `predicted_s` and moves it to a class sub-queue.
+pub(super) struct Routed {
+    pub(super) label: usize,
+    /// Index into the run's tenant table (0 for single-tenant runs).
+    pub(super) tenant: usize,
+    /// Index into the run's model table (0 for single-model runs): the
+    /// router only offers this request to classes serving its model.
+    pub(super) model: usize,
+    pub(super) map: SparseMap<f32>,
+    /// Raw events retained for the shadow disagreement capture — `Some`
+    /// only for models whose shadow can land them in the capture file;
+    /// everything else drops them once the representation is built.
+    pub(super) events: Option<Vec<Event>>,
+    /// When the request was born at its source — end-to-end latency and
+    /// the deadline are measured from here.
+    pub(super) arrival: Instant,
+    /// `arrival + slo` when an SLO is configured; a request past this is
+    /// worthless and every stage may discard it.
+    pub(super) deadline: Option<Instant>,
+    /// Event-count bucket ([`CostModel::bucket_of`]), computed once at
+    /// admission.
+    pub(super) bucket: usize,
+    /// Service seconds the router predicted for this request (NaN when no
+    /// router ran or the class was unseeded at routing time).
+    pub(super) predicted_s: f64,
+    /// Per-stream identity for delta inference (see
+    /// [`crate::coordinator::ingest::SourcedRequest::stream`]); `None` =
+    /// no stream.
+    pub(super) stream: Option<u64>,
+    /// True when the router delivered this request over the sticky fast
+    /// path: `predicted_s` stays NaN by design, so the per-class rollup
+    /// must not count it as an unseeded probe.
+    pub(super) sticky: bool,
+}
+
+impl Routed {
+    pub(super) fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|dl| now >= dl)
+    }
+}
+
+/// A worker's handle on its backend: borrowed from the caller (the
+/// homogeneous path shares one `&dyn Backend` across replicas) or shared
+/// ownership of a pool replica (`Arc`, so the autoscaler can hand clones
+/// to worker threads it spawns mid-run).
+#[derive(Clone)]
+pub(super) enum BackendRef<'a> {
+    Borrowed(&'a dyn Backend),
+    Shared(Arc<dyn Backend>),
+}
+
+impl<'a> BackendRef<'a> {
+    pub(super) fn get(&self) -> &dyn Backend {
+        match self {
+            BackendRef::Borrowed(b) => *b,
+            BackendRef::Shared(a) => a.as_ref(),
+        }
+    }
+}
+
+/// One replica class's scheduling inputs: display name, model tag, batch
+/// affinity, one backend per base worker replica, and (for scalable pool
+/// classes) the growth bound plus factory access.
+pub(super) struct ClassSlots<'a> {
+    pub(super) name: String,
+    /// Model this class serves (`ReplicaSpec::for_model`); single-model
+    /// paths all carry the default tag.
+    pub(super) model: String,
+    pub(super) batch: usize,
+    pub(super) backends: Vec<BackendRef<'a>>,
+    /// Upper replica bound (== `backends.len()` when not scalable).
+    pub(super) max: usize,
+    /// Factory access for on-demand replicas past the base count (pool
+    /// classes only; the homogeneous path cannot grow).
+    pub(super) grow: Option<&'a PoolClass>,
+}
+
+/// A replica class's live runtime state.
+pub(super) struct ClassCtx<'a> {
+    pub(super) name: String,
+    /// Index into the run's model table — the router's model filter.
+    pub(super) model: usize,
+    pub(super) batch: usize,
+    /// Instantiated replica backends, indexed by slot. Grows monotonically
+    /// (scale-up instantiates lazily, scale-down keeps the warm backend
+    /// for re-activation); only slots `< active` serve.
+    pub(super) slots: Mutex<Vec<BackendRef<'a>>>,
+    /// Active replica count — the scheduling truth the router divides
+    /// backlogs by and workers compare their slot index against. Always
+    /// within `[min, max]`.
+    pub(super) active: AtomicUsize,
+    /// Highest `active` value seen (for the report).
+    pub(super) peak: AtomicUsize,
+    /// Lower replica bound: the controller never takes `active` below it,
+    /// and retire tokens are only minted on scale-down, so the class
+    /// always keeps at least `min` serving workers.
+    pub(super) min: usize,
+    /// Upper replica bound the autoscaler may grow to.
+    pub(super) max: usize,
+    /// Factory access for slots past the eagerly-built base replicas.
+    pub(super) grow: Option<&'a PoolClass>,
+    /// Pending retire tokens: each scale-down step deposits one, and
+    /// exactly one worker of the class claims it and exits after draining
+    /// its in-flight batch. Token-based (rather than slot-indexed)
+    /// retirement makes re-growth race-free: there is never a moment
+    /// where a re-activated slot is served twice.
+    pub(super) retire: AtomicUsize,
+    /// Per-class sub-queue (always blocking — drops are global-only).
+    pub(super) queue: AdmissionQueue<Routed>,
+    /// Requests routed here and not yet classified (queued + in service).
+    pub(super) backlog: AtomicUsize,
+    /// Observed-service-time predictor the router consults.
+    pub(super) cost: CostModel,
+    /// Deadline sheds attributed to this class: router-predicted
+    /// infeasibility plus pop-time expiries.
+    pub(super) deadline_drops: AtomicUsize,
+    /// Cumulative accelerator-busy microseconds across the class's
+    /// replicas, updated per visit — the autoscaler's windowed
+    /// utilization input.
+    pub(super) busy_us: AtomicU64,
+}
+
+/// One classified request as a worker recorded it.
+pub(super) struct ServedRecord {
+    pub(super) label: usize,
+    pub(super) tenant: usize,
+    pub(super) model: usize,
+    pub(super) pred: usize,
+    pub(super) timing: RequestTiming,
+    pub(super) predicted_s: f64,
+    /// Whether the request completed within its deadline (`None`: no
+    /// deadline was set).
+    pub(super) met_deadline: Option<bool>,
+    /// Delivered via the sticky fast path (excluded from the unseeded
+    /// probe count — its NaN prediction is by design, not ignorance).
+    pub(super) sticky: bool,
+}
+
+/// Per-request metadata a worker holds across the backend visit.
+pub(super) struct Meta {
+    pub(super) label: usize,
+    pub(super) tenant: usize,
+    pub(super) model: usize,
+    pub(super) arrival: Instant,
+    pub(super) bucket: usize,
+    pub(super) predicted_s: f64,
+    pub(super) deadline: Option<Instant>,
+    pub(super) sticky: bool,
+}
+
+/// Sticky (cache-affinity) routing state — present only when a router
+/// runs AND some class backend supports delta inference. `table`
+/// remembers which worker holds each stream's delta cache warm; `sides`
+/// holds one bounded side queue per delta-capable worker. Stickiness is a
+/// pure performance hint: every miss (cold stream, retired worker, full
+/// side queue) falls back to cost-aware routing, and replicas of a class
+/// share one delta store, so a request that lands elsewhere is still
+/// served correctly — it just pays cache traffic it could have avoided.
+pub(super) struct StickyCtx {
+    /// stream id → worker that served the stream last.
+    pub(super) table: Mutex<HashMap<u64, usize>>,
+    /// Live sticky targets: `(worker id, class index, side queue)`. A
+    /// retiring worker deregisters itself before draining its remainder.
+    pub(super) sides: Mutex<Vec<(usize, usize, Arc<AdmissionQueue<Routed>>)>>,
+    pub(super) hits: AtomicUsize,
+    pub(super) miss_cold: AtomicUsize,
+    pub(super) miss_retired: AtomicUsize,
+    pub(super) miss_capacity: AtomicUsize,
+}
+
+impl StickyCtx {
+    pub(super) fn new() -> StickyCtx {
+        StickyCtx {
+            table: Mutex::new(HashMap::new()),
+            sides: Mutex::new(Vec::new()),
+            hits: AtomicUsize::new(0),
+            miss_cold: AtomicUsize::new(0),
+            miss_retired: AtomicUsize::new(0),
+            miss_capacity: AtomicUsize::new(0),
+        }
+    }
+
+    /// Advertise worker `wid` (serving class `ci`) as a sticky target.
+    pub(super) fn enroll(&self, wid: usize, ci: usize, side: &Arc<AdmissionQueue<Routed>>) {
+        self.sides.lock().unwrap().push((wid, ci, Arc::clone(side)));
+    }
+
+    /// Remember where a stream's delta cache now lives.
+    pub(super) fn remember(&self, stream: u64, wid: usize) {
+        self.table.lock().unwrap().insert(stream, wid);
+    }
+
+    /// Withdraw a retiring worker from the target list. The worker closes
+    /// its side queue *after* this call, so a concurrently in-flight
+    /// sticky push bounces back ([`TryPushError::Closed`]) to the router,
+    /// which cost-routes the request to a live worker instead.
+    pub(super) fn deregister(&self, wid: usize) {
+        self.sides.lock().unwrap().retain(|(w, _, _)| *w != wid);
+    }
+
+    /// Try to deliver `req` to the worker holding its stream's cache.
+    /// `None`: delivered, books updated. `Some`: handed back for
+    /// cost-aware routing, with the miss reason counted.
+    pub(super) fn try_route(&self, mut req: Routed, classes: &[ClassCtx<'_>]) -> Option<Routed> {
+        let Some(stream) = req.stream else {
+            return Some(req);
+        };
+        let Some(wid) = self.table.lock().unwrap().get(&stream).copied() else {
+            self.miss_cold.fetch_add(1, Ordering::SeqCst);
+            return Some(req);
+        };
+        let entry = self
+            .sides
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|(w, _, _)| *w == wid)
+            .map(|(_, ci, q)| (*ci, Arc::clone(q)));
+        let Some((ci, side)) = entry else {
+            // The worker retired since it last served this stream.
+            self.table.lock().unwrap().remove(&stream);
+            self.miss_retired.fetch_add(1, Ordering::SeqCst);
+            return Some(req);
+        };
+        if classes[ci].model != req.model {
+            // A mixed-traffic stream hopped models: its cached window
+            // lives behind another model's backend, useless here — and
+            // the model filter is correctness, not a hint.
+            self.miss_cold.fetch_add(1, Ordering::SeqCst);
+            return Some(req);
+        }
+        // A sticky delivery is not a cost-model prediction: NaN keeps it
+        // out of the router-accuracy books, and the `sticky` flag keeps
+        // it out of the unseeded-probe count.
+        req.sticky = true;
+        req.predicted_s = f64::NAN;
+        // Backlog up *before* the push: the worker's pop decrements, and
+        // the counter must never dip below zero in between.
+        classes[ci].backlog.fetch_add(1, Ordering::SeqCst);
+        match side.try_push(req) {
+            Ok(()) => {
+                self.hits.fetch_add(1, Ordering::SeqCst);
+                // The target may be parked on an empty class queue —
+                // unpark it so its cancellation predicate sees side work.
+                classes[ci].queue.wake_consumers();
+                None
+            }
+            Err(e) => {
+                classes[ci].backlog.fetch_sub(1, Ordering::SeqCst);
+                let mut r = match e {
+                    // Bounded stickiness: a hot worker must not build an
+                    // unbounded private backlog while siblings idle.
+                    TryPushError::Full(r) => {
+                        self.miss_capacity.fetch_add(1, Ordering::SeqCst);
+                        r
+                    }
+                    TryPushError::Closed(r) => {
+                        self.table.lock().unwrap().remove(&stream);
+                        self.miss_retired.fetch_add(1, Ordering::SeqCst);
+                        r
+                    }
+                };
+                r.sticky = false;
+                Some(r)
+            }
+        }
+    }
+}
+
+/// One tenant's live admission state and books. The `in_queue` occupancy
+/// tracks this tenant's requests sitting in the *ingress* queue only —
+/// the quota is an admission concept; once the router moves a request to
+/// a class sub-queue it has been admitted and scheduled. All counters are
+/// written from the stage threads and read after the scope joins.
+pub(super) struct TenantCtx {
+    pub(super) name: String,
+    pub(super) weight: usize,
+    /// Ingress slots this tenant may occupy (weighted share of the queue
+    /// depth; the full depth when the run has a single tenant).
+    pub(super) quota: usize,
+    /// Per-tenant SLO overriding the global one.
+    pub(super) slo: Option<Duration>,
+    /// This tenant's requests currently in the ingress queue (maintained
+    /// only in multi-tenant runs — the single-tenant path never reads it).
+    pub(super) in_queue: AtomicUsize,
+    /// Admission sheds: drop-oldest evictions + over-quota arrivals.
+    pub(super) dropped: AtomicUsize,
+    pub(super) deadline_offered: AtomicUsize,
+    pub(super) deadline_ingress: AtomicUsize,
+    /// Router sheds + worker-pop expiries.
+    pub(super) deadline_router: AtomicUsize,
+    /// Recoverable source rejects attributed to this tenant.
+    pub(super) ingest_rejects: AtomicUsize,
+}
+
+impl TenantCtx {
+    pub(super) fn new(
+        name: String,
+        weight: usize,
+        slo: Option<Duration>,
+        quota: usize,
+    ) -> TenantCtx {
+        TenantCtx {
+            name,
+            weight,
+            quota,
+            slo,
+            in_queue: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+            deadline_offered: AtomicUsize::new(0),
+            deadline_ingress: AtomicUsize::new(0),
+            deadline_router: AtomicUsize::new(0),
+            ingest_rejects: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// One fleet model's live books, mirroring [`TenantCtx`]'s structure:
+/// drop counters written at the same stage points (keyed by the request's
+/// model instead of its tenant), plus the model's optional shadow state.
+/// `served`/`correct` are tallied from the worker records at
+/// finalization, so the struct holds only what the stages must write
+/// concurrently.
+pub(super) struct ModelCtx {
+    pub(super) name: String,
+    /// Admission sheds: drop-oldest evictions + over-quota arrivals.
+    pub(super) dropped: AtomicUsize,
+    pub(super) deadline_offered: AtomicUsize,
+    pub(super) deadline_ingress: AtomicUsize,
+    /// Router sheds + worker-pop expiries.
+    pub(super) deadline_router: AtomicUsize,
+    /// Shadow deployment mirrored onto this model, when configured.
+    pub(super) shadow: Option<ShadowCtx>,
+}
+
+impl ModelCtx {
+    pub(super) fn new(name: String, shadow: Option<ShadowCtx>) -> ModelCtx {
+        ModelCtx {
+            name,
+            dropped: AtomicUsize::new(0),
+            deadline_offered: AtomicUsize::new(0),
+            deadline_ingress: AtomicUsize::new(0),
+            deadline_router: AtomicUsize::new(0),
+            shadow,
+        }
+    }
+}
+
+/// One model's live shadow-deployment state: the candidate backend, the
+/// deterministic mirror schedule, and the conformance books. The
+/// `counter`-based selection (`floor((k+1)·f) > floor(k·f)`) mirrors
+/// exactly `fraction` of the model's served stream with no RNG and no
+/// burst bias — every run over the same stream mirrors the same
+/// requests.
+pub(super) struct ShadowCtx {
+    pub(super) candidate: Arc<dyn Backend>,
+    pub(super) fraction: f64,
+    /// Served requests seen so far (the mirror schedule's clock).
+    pub(super) counter: AtomicUsize,
+    pub(super) mirrored: AtomicUsize,
+    pub(super) disagreements: AtomicUsize,
+    /// Disagreeing samples that could not land in the capture (cap
+    /// reached, write error, or raw events no longer available).
+    pub(super) capture_drops: AtomicUsize,
+    /// The capture writer, shared across every shadowed model (one
+    /// `--shadow-capture` path per run); `None` when capture is off.
+    pub(super) capture: Option<Arc<Mutex<Option<ShadowWriter>>>>,
+}
+
+/// Appends shadow-disagreement samples to a replayable `.esda` capture.
+/// The header is written with a zero sample count at creation and
+/// rewritten with the real count at [`ShadowWriter::finalize`] — the
+/// same producer discipline a camera-dump pipeline uses, so the capture
+/// replays through `--source replay:` like any dataset.
+pub(super) struct ShadowWriter {
+    file: std::fs::File,
+    written: usize,
+    max: usize,
+}
+
+impl ShadowWriter {
+    pub(super) fn create(
+        path: &Path,
+        w: usize,
+        h: usize,
+        max: usize,
+    ) -> std::io::Result<ShadowWriter> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut file = std::fs::File::create(path)?;
+        io::write_header(&mut file, w, h, 0)?;
+        Ok(ShadowWriter { file, written: 0, max })
+    }
+
+    /// Append one disagreeing sample. `false` = not written (cap reached
+    /// or IO error) — the caller counts it as a capture drop.
+    pub(super) fn append(&mut self, label: u32, events: Vec<Event>) -> bool {
+        if self.written >= self.max {
+            return false;
+        }
+        let sample = io::Sample { label, events };
+        match io::append_sample(&mut self.file, &sample) {
+            Ok(()) => {
+                self.written += 1;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Samples appended so far.
+    pub(super) fn written(&self) -> usize {
+        self.written
+    }
+
+    /// Rewrite the header's sample count with what was actually appended
+    /// and flush, making the capture a well-formed dataset.
+    pub(super) fn finalize(mut self) -> std::io::Result<usize> {
+        self.file.flush()?;
+        // The count is the header's last field: magic + version + w + h
+        // precede it (see `events::io`).
+        self.file.seek(SeekFrom::Start(io::FILE_HEADER_BYTES - 4))?;
+        let n = u32::try_from(self.written).unwrap_or(u32::MAX);
+        self.file.write_all(&n.to_le_bytes())?;
+        self.file.flush()?;
+        Ok(self.written)
+    }
+}
+
+/// Run-global admission-side counters — everything the source and repr
+/// stages write outside the ingress queue's own books.
+pub(super) struct IngressBooks {
+    /// Requests that arrived with a deadline.
+    pub(super) deadline_offered: AtomicUsize,
+    /// Already-expired arrivals dropped before their repr was built.
+    pub(super) deadline_ingress: AtomicUsize,
+    /// Over-quota tenant arrivals shed before admission.
+    pub(super) quota_drops: AtomicUsize,
+    /// Recoverable source rejects (the stream skipped past them).
+    pub(super) ingest_rejects: AtomicUsize,
+}
+
+impl IngressBooks {
+    pub(super) fn new() -> IngressBooks {
+        IngressBooks {
+            deadline_offered: AtomicUsize::new(0),
+            deadline_ingress: AtomicUsize::new(0),
+            quota_drops: AtomicUsize::new(0),
+            ingest_rejects: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// Borrows of the run-wide state every stage thread needs, bundled so
+/// the stage functions keep readable signatures. Built once by the
+/// lifecycle spine before the thread scope opens; `'env` is the spine's
+/// stack frame, `'a` the caller's backend borrows.
+pub(super) struct SharedCtx<'env, 'a> {
+    pub(super) classes: &'env [ClassCtx<'a>],
+    pub(super) tenants: &'env [TenantCtx],
+    pub(super) models: &'env [ModelCtx],
+    pub(super) ingress: &'env AdmissionQueue<Routed>,
+    pub(super) sticky: Option<&'env StickyCtx>,
+    pub(super) first_error: &'env Mutex<Option<String>>,
+}
+
+/// Claim one pending retire token (false when none are pending). CAS
+/// loop so concurrent claimers never double-spend a token — each
+/// scale-down step retires exactly one worker.
+pub(super) fn take_retire_token(tokens: &AtomicUsize) -> bool {
+    let mut t = tokens.load(Ordering::SeqCst);
+    while t > 0 {
+        match tokens.compare_exchange(t, t - 1, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => return true,
+            Err(cur) => t = cur,
+        }
+    }
+    false
+}
+
+/// Per-worker raw output collected at join time.
+pub(super) struct WorkerOutput {
+    pub(super) wid: usize,
+    pub(super) class: usize,
+    pub(super) busy_s: f64,
+    pub(super) records: Vec<ServedRecord>,
+    pub(super) batch_sizes: Vec<usize>,
+    /// Delta-inference outcome tallies for requests this worker served.
+    pub(super) delta: DeltaMetrics,
+}
+
+/// Join one pipeline thread, funneling a panic into the run's
+/// first-error slot instead of tearing down the coordinator mid-shutdown.
+/// The remaining stages still get joined and their outputs collected.
+pub(super) fn join_noting<T>(
+    r: std::thread::Result<T>,
+    what: &str,
+    first_error: &Mutex<Option<String>>,
+) {
+    if r.is_err() {
+        let msg = format!("{what} thread panicked");
+        first_error.lock().unwrap_or_else(|e| e.into_inner()).get_or_insert_with(|| msg);
+    }
+}

@@ -1,0 +1,476 @@
+use super::*;
+use crate::arch::HwConfig;
+use crate::coordinator::backend::{
+    BackendError, Classification, Functional, ReplicaSpec, Simulator,
+};
+use crate::coordinator::testutil::qnet_for;
+use crate::sparse::SparseMap;
+
+#[test]
+fn pool_processes_all_requests() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let cfg = ServerConfig { n_requests: 12, seed: 4, workers: 3, ..Default::default() };
+    let r = run_server(&profile, &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 12);
+    assert_eq!(r.predictions.len(), 12);
+    assert_eq!(r.metrics.dropped, 0);
+    assert_eq!(r.metrics.per_worker.len(), 3);
+    assert_eq!(r.metrics.per_worker.iter().map(|w| w.served).sum::<usize>(), 12);
+    assert!(r.metrics.throughput() > 0.0);
+    // The homogeneous path reports a single routing class.
+    assert_eq!(r.metrics.per_class.len(), 1);
+    assert_eq!(r.metrics.per_class[0].served, 12);
+    assert_eq!(r.metrics.per_class[0].replicas, 3);
+    // No SLO: the deadline books stay empty and attainment is N/A.
+    assert_eq!(r.metrics.deadline_offered, 0);
+    assert_eq!(r.metrics.deadline_drops(), 0);
+    assert_eq!(r.metrics.slo_attainment(), None);
+    // Every run carries a per-model rollup; a single-model run's one row
+    // restates the global books under the default tag.
+    assert_eq!(r.metrics.per_model.len(), 1);
+    assert_eq!(r.metrics.per_model[0].model, DEFAULT_MODEL);
+    assert_eq!(r.metrics.per_model[0].served, 12);
+    assert_eq!(r.metrics.per_model[0].offered(), 12);
+}
+
+/// Micro-batching is a scheduling detail: every request is still served
+/// exactly once, and the batch-size books stay consistent.
+#[test]
+fn batched_pool_serves_every_request_once() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let cfg = ServerConfig {
+        n_requests: 20,
+        seed: 6,
+        workers: 2,
+        queue_depth: 8,
+        batch: 4,
+        ..Default::default()
+    };
+    let r = run_server(&profile, &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 20);
+    assert_eq!(r.predictions.len(), 20);
+    let visits: usize = r.metrics.batch_sizes.iter().sum();
+    assert_eq!(visits, 20, "batch sizes must partition the request stream");
+    assert!(r.metrics.batch_sizes.iter().all(|&b| (1..=4).contains(&b)));
+    assert!(r.metrics.mean_batch() >= 1.0);
+    let per_worker: usize = r.metrics.per_worker.iter().map(|w| w.batches).sum();
+    assert_eq!(per_worker, r.metrics.batch_sizes.len());
+}
+
+#[test]
+fn simulator_replicas_report_cycles() {
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let n_ops = qnet.spec.ops().len();
+    let backend = Simulator::new(qnet, HwConfig::uniform(n_ops, 16));
+    let cfg = ServerConfig { n_requests: 4, seed: 5, workers: 2, ..Default::default() };
+    let r = run_server(&profile, &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 4);
+    let lat = r.metrics.mean_sim_latency_ms(crate::hwopt::power::CLOCK_HZ).unwrap();
+    assert!(lat > 0.0);
+}
+
+/// A two-class heterogeneous pool serves every request exactly once,
+/// respects each class's batch affinity, and reports a per-class
+/// breakdown whose books balance.
+#[test]
+fn heterogeneous_pool_keeps_class_books_balanced() {
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let qnet2 = qnet.clone();
+    let pool = ReplicaPool::build(vec![
+        ReplicaSpec::functional(2, qnet),
+        ReplicaSpec::new("func-b", 1, 2, move |_| Ok(Box::new(Functional::new(qnet2.clone())))),
+    ])
+    .unwrap();
+    assert_eq!(pool.n_replicas(), 3);
+    let cfg = ServerConfig { n_requests: 16, seed: 9, queue_depth: 4, ..Default::default() };
+    let r = run_pool(&profile, &pool, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 16);
+    assert_eq!(r.metrics.per_worker.len(), 3);
+    assert_eq!(r.metrics.per_class.len(), 2);
+    assert_eq!(r.metrics.per_class.iter().map(|c| c.served).sum::<usize>(), 16);
+    let class_batches: usize = r.metrics.per_class.iter().map(|c| c.batches).sum();
+    assert_eq!(class_batches, r.metrics.batch_sizes.len());
+    let visits: usize = r.metrics.batch_sizes.iter().sum();
+    assert_eq!(visits, 16, "batch sizes must partition the request stream");
+    for c in &r.metrics.per_class {
+        let cap = if c.class == "func" { 4.0 } else { 2.0 };
+        assert!(
+            c.batches == 0 || c.batch.max <= cap,
+            "class {} exceeded its batch affinity: {:?}",
+            c.class,
+            c.batch
+        );
+        assert_eq!(c.deadline_drops, 0, "no SLO ⇒ no deadline sheds");
+    }
+    // Worker stats carry their class name for the report.
+    for w in &r.metrics.per_worker {
+        assert!(w.class == "func" || w.class == "func-b", "class: {}", w.class);
+    }
+    // Both classes serve the same (default) model: one fleet row.
+    assert_eq!(r.metrics.per_model.len(), 1);
+    assert_eq!(r.metrics.per_model[0].classes, 2);
+    assert_eq!(r.metrics.per_model[0].served, 16);
+}
+
+/// A zero SLO expires every request at the ingress: nothing reaches a
+/// worker, the drop is accounted as an ingress deadline drop, and
+/// attainment is 0.
+#[test]
+fn zero_slo_expires_everything_at_ingress() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let cfg = ServerConfig {
+        n_requests: 8,
+        seed: 4,
+        workers: 2,
+        slo: Some(Duration::ZERO),
+        ..Default::default()
+    };
+    let r = run_server(&profile, &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 0, "an expired request must never be served");
+    assert!(r.predictions.is_empty());
+    assert_eq!(r.metrics.deadline_offered, 8);
+    assert_eq!(r.metrics.deadline_ingress, 8);
+    assert_eq!(r.metrics.deadline_router, 0);
+    assert_eq!(r.metrics.dropped, 0, "deadline drops are not queue-full drops");
+    assert_eq!(r.metrics.offered(), 8);
+    assert_eq!(r.metrics.slo_attainment(), Some(0.0));
+    // The ingress sheds land on the model's books too.
+    assert_eq!(r.metrics.per_model[0].deadline_ingress, 8);
+    assert_eq!(r.metrics.per_model[0].offered(), 8);
+}
+
+/// A generous SLO on an unloaded pool changes nothing: everything is
+/// served, everything meets its deadline, attainment is 1.
+#[test]
+fn generous_slo_serves_everything_in_deadline() {
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let cfg = ServerConfig {
+        n_requests: 10,
+        seed: 4,
+        workers: 2,
+        slo: Some(Duration::from_secs(60)),
+        ..Default::default()
+    };
+    let r = run_server(&profile, &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 10);
+    assert_eq!(r.metrics.deadline_offered, 10);
+    assert_eq!(r.metrics.deadline_met, 10);
+    assert_eq!(r.metrics.deadline_drops(), 0);
+    assert_eq!(r.metrics.slo_attainment(), Some(1.0));
+}
+
+/// A backend that errors mid-stream aborts cleanly with in-flight
+/// accounting instead of deadlocking or poisoning joins.
+#[test]
+fn backend_error_aborts_cleanly() {
+    struct FailAfter {
+        inner: Functional,
+        calls: std::sync::atomic::AtomicUsize,
+    }
+    impl Backend for FailAfter {
+        fn name(&self) -> &str {
+            "fail-after"
+        }
+        fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+            let n = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if n >= 5 {
+                return Err(BackendError("injected fault".into()));
+            }
+            self.inner.classify(map)
+        }
+    }
+    let profile = DatasetProfile::n_mnist();
+    let backend = FailAfter {
+        inner: Functional::new(qnet_for(&profile)),
+        calls: std::sync::atomic::AtomicUsize::new(0),
+    };
+    let cfg = ServerConfig { n_requests: 16, seed: 2, workers: 2, ..Default::default() };
+    let err = run_server(&profile, &backend, &cfg).unwrap_err();
+    assert!(err.msg.contains("injected fault"), "msg: {}", err.msg);
+    assert!(err.completed < 16);
+}
+
+/// An erroring event source surfaces as a `PipelineError` naming the
+/// source, after the already-admitted prefix was served.
+#[test]
+fn source_error_surfaces_as_pipeline_error() {
+    use crate::coordinator::ingest::{IngestError, SourcedRequest};
+    struct FailingSource {
+        inner: SyntheticSource,
+        after: usize,
+        emitted: usize,
+    }
+    impl EventSource for FailingSource {
+        fn name(&self) -> &str {
+            "failing"
+        }
+        fn geometry(&self) -> (usize, usize) {
+            self.inner.geometry()
+        }
+        fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+            if self.emitted >= self.after {
+                return Err(IngestError::fatal("sensor unplugged"));
+            }
+            self.emitted += 1;
+            self.inner.next_request()
+        }
+    }
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let source =
+        FailingSource { inner: SyntheticSource::new(profile, 100, 3), after: 4, emitted: 0 };
+    let cfg = ServerConfig { workers: 2, ..Default::default() };
+    let err = run_server_source(Box::new(source), &backend, &cfg).unwrap_err();
+    assert!(err.msg.contains("sensor unplugged"), "msg: {}", err.msg);
+    assert_eq!(err.completed, 4, "the admitted prefix is served before the abort");
+    assert_eq!(err.in_flight, 0);
+}
+
+/// Regression (one bad sample must not kill the run): recoverable
+/// source rejects are skipped and counted — globally and on the
+/// default tenant — while every good sample is still served.
+#[test]
+fn recoverable_source_rejects_are_counted_not_fatal() {
+    use crate::coordinator::ingest::{IngestError, SourcedRequest};
+    struct FlakySource {
+        inner: SyntheticSource,
+        emitted: usize,
+    }
+    impl EventSource for FlakySource {
+        fn name(&self) -> &str {
+            "flaky"
+        }
+        fn geometry(&self) -> (usize, usize) {
+            self.inner.geometry()
+        }
+        fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+            self.emitted += 1;
+            // Every third pull hits a bad sample the reader skipped.
+            if self.emitted % 3 == 0 {
+                return Err(IngestError::recoverable("events not sorted"));
+            }
+            self.inner.next_request()
+        }
+    }
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let source = FlakySource { inner: SyntheticSource::new(profile, 8, 3), emitted: 0 };
+    let cfg = ServerConfig { workers: 2, ..Default::default() };
+    let r = run_server_source(Box::new(source), &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 8, "every good sample is still served");
+    assert_eq!(r.metrics.ingest_rejects, 4, "8 good pulls + terminal None ⇒ 4 rejects");
+    assert_eq!(r.metrics.per_tenant.len(), 1, "implicit default tenant");
+    let t = &r.metrics.per_tenant[0];
+    assert_eq!(t.tenant, "default");
+    assert_eq!(t.ingest_rejects, 4, "single-tenant rejects land on the default tenant");
+    assert_eq!(t.served, 8);
+    assert_eq!(t.offered(), 12, "served + rejects reconstruct the stream");
+}
+
+/// Two tenants with distinct SLOs: each request's deadline follows its
+/// tenant's override, and the per-tenant books balance independently.
+#[test]
+fn per_tenant_slo_overrides_global() {
+    use crate::coordinator::ingest::{IngestError, SourcedRequest};
+    // Tenant 0 gets an impossible (zero) SLO, tenant 1 a generous one;
+    // no global SLO at all.
+    struct TwoTenantSource {
+        inner: SyntheticSource,
+        emitted: usize,
+        n: usize,
+    }
+    impl EventSource for TwoTenantSource {
+        fn name(&self) -> &str {
+            "two-tenant"
+        }
+        fn geometry(&self) -> (usize, usize) {
+            self.inner.geometry()
+        }
+        fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+            if self.emitted >= self.n {
+                return Ok(None);
+            }
+            let tenant = self.emitted % 2;
+            self.emitted += 1;
+            Ok(self.inner.next_request()?.map(|mut sr| {
+                sr.tenant = tenant;
+                sr
+            }))
+        }
+    }
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let source =
+        TwoTenantSource { inner: SyntheticSource::new(profile, 100, 7), emitted: 0, n: 10 };
+    let cfg = ServerConfig {
+        workers: 2,
+        // Deep enough that each tenant's quota (depth/2) exceeds its 5
+        // requests — no quota drop can race the assertions below.
+        queue_depth: 16,
+        tenants: vec![
+            TenantConfig::new("strict", 1).with_slo(Duration::ZERO),
+            TenantConfig::new("lax", 1).with_slo(Duration::from_secs(60)),
+        ],
+        ..Default::default()
+    };
+    let r = run_server_source(Box::new(source), &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.per_tenant.len(), 2);
+    let strict = &r.metrics.per_tenant[0];
+    let lax = &r.metrics.per_tenant[1];
+    assert_eq!(strict.served, 0, "zero SLO expires everything at the ingress");
+    assert_eq!(strict.deadline_ingress, 5);
+    assert_eq!(strict.slo_attainment(), Some(0.0));
+    assert_eq!(lax.served, 5);
+    assert_eq!(lax.slo_attainment(), Some(1.0));
+    for t in [strict, lax] {
+        assert_eq!(t.offered(), 5, "each tenant's books reconstruct its stream");
+    }
+    // Global books are the per-tenant sums.
+    assert_eq!(r.metrics.total, 5);
+    assert_eq!(r.metrics.deadline_ingress, 5);
+    assert_eq!(r.metrics.deadline_offered, 10);
+}
+
+/// Two models behind one front door: each request lands only on a class
+/// serving its model, and each model's books independently conserve
+/// (offered = served + dropped + deadline sheds — here all served).
+#[test]
+fn fleet_serves_each_model_on_its_own_class() {
+    use crate::coordinator::ingest::{IngestError, SourcedRequest};
+    struct TwoModelSource {
+        inner: SyntheticSource,
+        emitted: usize,
+        n: usize,
+    }
+    impl EventSource for TwoModelSource {
+        fn name(&self) -> &str {
+            "two-model"
+        }
+        fn geometry(&self) -> (usize, usize) {
+            self.inner.geometry()
+        }
+        fn next_request(&mut self) -> Result<Option<SourcedRequest>, IngestError> {
+            if self.emitted >= self.n {
+                return Ok(None);
+            }
+            let model = self.emitted % 2;
+            self.emitted += 1;
+            Ok(self.inner.next_request()?.map(|mut sr| {
+                sr.model = model;
+                sr
+            }))
+        }
+    }
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let (qa, qb) = (qnet.clone(), qnet);
+    let pool = ReplicaPool::build(vec![
+        ReplicaSpec::new("alpha-c", 1, 4, move |_| Ok(Box::new(Functional::new(qa.clone()))))
+            .for_model("alpha"),
+        ReplicaSpec::new("beta-c", 1, 4, move |_| Ok(Box::new(Functional::new(qb.clone()))))
+            .for_model("beta"),
+    ])
+    .unwrap();
+    let source =
+        TwoModelSource { inner: SyntheticSource::new(profile, 100, 11), emitted: 0, n: 12 };
+    let cfg = ServerConfig { queue_depth: 16, ..Default::default() };
+    let r = run_pool_source(Box::new(source), &pool, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 12);
+    assert_eq!(r.metrics.per_model.len(), 2);
+    let alpha = &r.metrics.per_model[0];
+    let beta = &r.metrics.per_model[1];
+    assert_eq!(alpha.model, "alpha");
+    assert_eq!(beta.model, "beta");
+    for m in [alpha, beta] {
+        assert_eq!(m.classes, 1);
+        assert_eq!(m.served, 6, "the alternating stream splits evenly");
+        assert_eq!(m.offered(), 6, "per-model books conserve the stream");
+        assert_eq!(m.shadow_mirrored, 0, "no shadow configured");
+    }
+    // The model filter is hard: each class served exactly its model's half.
+    for c in &r.metrics.per_class {
+        assert_eq!(c.served, 6, "class {} must only see its own model", c.class);
+    }
+}
+
+/// A shadow candidate running the identical network agrees on every
+/// mirrored request: full mirror coverage, zero disagreements.
+#[test]
+fn shadow_of_identical_candidate_never_disagrees() {
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    let backend = Functional::new(qnet.clone());
+    let cfg = ServerConfig {
+        n_requests: 10,
+        seed: 4,
+        workers: 2,
+        shadows: vec![ShadowConfig {
+            model: DEFAULT_MODEL.to_string(),
+            candidate: Arc::new(Functional::new(qnet)),
+            fraction: 1.0,
+        }],
+        ..Default::default()
+    };
+    let r = run_server(&profile, &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 10);
+    let m = &r.metrics.per_model[0];
+    assert_eq!(m.shadow_mirrored, 10, "fraction 1.0 mirrors every served request");
+    assert_eq!(m.shadow_disagreements, 0);
+    assert_eq!(m.shadow_capture_drops, 0);
+    assert_eq!(m.disagreement_rate(), Some(0.0));
+}
+
+/// A candidate that always disagrees: every mirror is a disagreement,
+/// the capture file keeps the first `max_samples` of them (with their
+/// raw events and true labels), and the overflow is counted as drops.
+#[test]
+fn shadow_disagreements_hit_the_capture_cap() {
+    struct Fixed(usize);
+    impl Backend for Fixed {
+        fn name(&self) -> &str {
+            "fixed"
+        }
+        fn classify(&self, _map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+            Ok(Classification { pred: self.0, sim_cycles: None })
+        }
+    }
+    let dir = std::env::temp_dir().join(format!("esda-shadow-cap-{}", std::process::id()));
+    let path = dir.join("disagreements.esda");
+    let profile = DatasetProfile::n_mnist();
+    let backend = Functional::new(qnet_for(&profile));
+    let cfg = ServerConfig {
+        n_requests: 8,
+        seed: 3,
+        workers: 1,
+        shadows: vec![ShadowConfig {
+            model: DEFAULT_MODEL.to_string(),
+            // Class 99 does not exist: the primary can never agree.
+            candidate: Arc::new(Fixed(99)),
+            fraction: 1.0,
+        }],
+        shadow_capture: Some(ShadowCaptureConfig { path: path.clone(), max_samples: 2 }),
+        ..Default::default()
+    };
+    let r = run_server(&profile, &backend, &cfg).unwrap();
+    assert_eq!(r.metrics.total, 8);
+    let m = &r.metrics.per_model[0];
+    assert_eq!(m.shadow_mirrored, 8);
+    assert_eq!(m.shadow_disagreements, 8);
+    assert_eq!(m.disagreement_rate(), Some(1.0));
+    assert_eq!(m.shadow_capture_drops, 6, "everything past the cap is a counted drop");
+    // The capture is a valid .esda dataset holding the capped sample set.
+    let (w, h, samples) = crate::events::io::read_dataset(&path).unwrap();
+    assert_eq!((w, h), (profile.w, profile.h));
+    assert_eq!(samples.len(), 2);
+    for s in &samples {
+        assert!(!s.events.is_empty(), "captured samples keep their raw events");
+        assert!((s.label as usize) < profile.n_classes);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,384 @@
+//! Stage 4: the accelerator worker loop — micro-batch draining with
+//! pop-time deadline expiry, retire-token autoscaler handoff, sticky
+//! side-queue affinity work, and (for shadowed models) the shadow
+//! conformance mirror evaluated after each primary result is recorded.
+
+use super::state::{
+    take_retire_token, ClassCtx, Meta, Routed, ServedRecord, ShadowCtx, SharedCtx, WorkerOutput,
+};
+use crate::coordinator::backend::{Backend, DeltaStatus};
+use crate::coordinator::metrics::{DeltaMetrics, RequestTiming};
+use crate::coordinator::queue::AdmissionQueue;
+use crate::events::Event;
+use crate::model::FullReason;
+use crate::sparse::SparseMap;
+use crate::util::panic_message;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Mirror one served request to its model's shadow candidate when the
+/// deterministic fraction schedule selects it, comparing predictions
+/// bit-exactly. A candidate error counts as a disagreement — a backend
+/// that cannot classify certainly does not conform. Disagreeing samples
+/// are appended to the capture when one is armed; past the cap (or on a
+/// write error, or when the raw events were not retained) the drop is
+/// counted instead of silently lost.
+fn shadow_compare(
+    sh: &ShadowCtx,
+    label: usize,
+    primary_pred: usize,
+    map: &SparseMap<f32>,
+    events: Option<Vec<Event>>,
+) {
+    // floor((k+1)·f) > floor(k·f) fires on exactly a `fraction` share of
+    // the counter sequence — deterministic, RNG-free, burst-insensitive.
+    let k = sh.counter.fetch_add(1, Ordering::SeqCst);
+    let f = sh.fraction;
+    let take = ((k + 1) as f64 * f).floor() > (k as f64 * f).floor();
+    if !take {
+        return;
+    }
+    sh.mirrored.fetch_add(1, Ordering::SeqCst);
+    let agree = match sh.candidate.classify(map) {
+        Ok(c) => c.pred == primary_pred,
+        Err(_) => false,
+    };
+    if agree {
+        return;
+    }
+    sh.disagreements.fetch_add(1, Ordering::SeqCst);
+    if let Some(cap) = &sh.capture {
+        let written = match (events, cap.lock().unwrap().as_mut()) {
+            (Some(evs), Some(w)) => w.append(u32::try_from(label).unwrap_or(u32::MAX), evs),
+            _ => false,
+        };
+        if !written {
+            sh.capture_drops.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// The accelerator worker body: drain `queue` in micro-batches — expiring
+/// deadline-passed requests at the pop, without spending a batch slot on
+/// them — and classify through this replica's backend. `routed` is true
+/// when a router feeds this class (several classes): the worker then
+/// maintains the class backlog and folds observed service times back into
+/// the class cost model; in the single-class fast path (`queue` *is* the
+/// ingress) both are skipped — there is no routing decision to inform.
+///
+/// Autoscaler retirement: a scale-down step deposits a retire token at
+/// the class; the first worker to claim it finishes the batch it holds
+/// (in-flight work is always drained), stops taking new work, and exits —
+/// a parked worker is unblocked via the queue's cancellable pop and
+/// re-parks if a sibling claimed the token first.
+///
+/// Sticky routing: a delta-capable worker under a router additionally
+/// owns a bounded `side` queue of requests pinned to it because it holds
+/// their stream's delta cache. Side work is drained first (non-blocking)
+/// each lap; after a served batch the worker re-advertises the streams it
+/// refreshed via the sticky context. A retiring sticky worker first
+/// withdraws from the target list and closes its side queue (in-flight
+/// pushes bounce to the router for cost routing), then serves the
+/// remainder itself — no pinned request is ever stranded or double-served.
+///
+/// Shadow mirroring happens here, after each primary result lands in the
+/// worker's records: the serving thread pays for the candidate visit so
+/// the mirror can never reorder or delay another worker's traffic.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn worker_loop(
+    wid: usize,
+    ci: usize,
+    class: &ClassCtx<'_>,
+    queue: &AdmissionQueue<Routed>,
+    routed: bool,
+    backend: &dyn Backend,
+    side: Option<Arc<AdmissionQueue<Routed>>>,
+    sx: &SharedCtx<'_, '_>,
+) -> WorkerOutput {
+    let multi_tenant = sx.tenants.len() > 1;
+    // Record the first failure and hard-stop every stage: producers fail
+    // fast, the router and all class workers wake and exit.
+    let fail = |msg: String| {
+        sx.first_error.lock().unwrap().get_or_insert_with(|| msg);
+        sx.ingress.abort();
+        for c in sx.classes {
+            c.queue.abort();
+        }
+    };
+    let mut records: Vec<ServedRecord> = Vec::new();
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    let mut busy_s = 0.0f64;
+    let mut delta = DeltaMetrics::default();
+    let use_delta = backend.supports_delta();
+    let batch_cap = class.batch.max(1);
+    let mut batch: Vec<Routed> = Vec::with_capacity(batch_cap);
+    let mut metas: Vec<Meta> = Vec::with_capacity(batch_cap);
+    let mut maps: Vec<SparseMap<f32>> = Vec::with_capacity(batch_cap);
+    let mut streams: Vec<Option<u64>> = Vec::with_capacity(batch_cap);
+    let mut events_buf: Vec<Option<Vec<Event>>> = Vec::with_capacity(batch_cap);
+    let side_pending = || side.as_ref().is_some_and(|q| q.stats().2 > 0);
+    let mut retiring = false;
+    loop {
+        // Retired by the autoscaler: claim the pending token (the
+        // previous iteration's batch was fully served — in-flight work is
+        // never abandoned), stop being a sticky target, then serve out
+        // the side-queue remainder before exiting.
+        if !retiring && take_retire_token(&class.retire) {
+            retiring = true;
+            if let Some(sq) = &side {
+                if let Some(sc) = sx.sticky {
+                    sc.deregister(wid);
+                }
+                // Closed *after* deregistration: an in-flight sticky push
+                // bounces back to the router, which cost-routes it.
+                sq.close();
+            }
+        }
+        if retiring && side.is_none() {
+            break;
+        }
+        // Affinity work first: requests the router pinned to this worker
+        // because it holds their stream's delta cache. The always-true
+        // cancellation predicate makes this a non-blocking drain.
+        let mut side_expired = 0usize;
+        if let Some(sq) = &side {
+            side_expired = sq.pop_batch_where_cancellable(
+                batch_cap,
+                &mut batch,
+                |r| {
+                    let ex = r.expired(Instant::now());
+                    if ex {
+                        sx.tenants[r.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
+                        sx.models[r.model].deadline_router.fetch_add(1, Ordering::SeqCst);
+                    }
+                    ex
+                },
+                || true,
+            );
+            if side_expired > 0 {
+                // Side queues exist only under a router: the class books
+                // always apply.
+                class.deadline_drops.fetch_add(side_expired, Ordering::SeqCst);
+                class.backlog.fetch_sub(side_expired, Ordering::SeqCst);
+            }
+        }
+        if batch.is_empty() && retiring {
+            if side_expired > 0 {
+                continue; // expiries accounted; re-check for a remainder
+            }
+            break; // side queue drained — retirement complete
+        }
+        if batch.is_empty() {
+            // No pinned work: drain the class queue (or, routerless, the
+            // ingress) like any sibling. Deadline-passed requests are
+            // discarded inside the queue lock: they must not waste a
+            // batch slot, let alone a backend visit. The pop returns
+            // promptly on an all-reject drain so the class backlog and
+            // drop books update *before* the next routing decision — the
+            // router must not see phantom backlog. The cancellation
+            // predicate unparks workers (empty-handed) when the
+            // autoscaler deposits a retire token — or the router lands
+            // sticky work — while the queue is idle.
+            let expired = queue.pop_batch_where_cancellable(
+                batch_cap,
+                &mut batch,
+                |r| {
+                    let ex = r.expired(Instant::now());
+                    if ex {
+                        // Attribute the expiry to its tenant and model
+                        // here, where the item is still visible; in the
+                        // routerless path the queue *is* the ingress, so
+                        // the expiry also frees the tenant's quota slot.
+                        sx.tenants[r.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
+                        sx.models[r.model].deadline_router.fetch_add(1, Ordering::SeqCst);
+                        if !routed && multi_tenant {
+                            sx.tenants[r.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                    ex
+                },
+                || class.retire.load(Ordering::SeqCst) > 0 || side_pending(),
+            );
+            if expired > 0 {
+                class.deadline_drops.fetch_add(expired, Ordering::SeqCst);
+                if routed {
+                    class.backlog.fetch_sub(expired, Ordering::SeqCst);
+                }
+            }
+            if batch.is_empty() {
+                if expired > 0 {
+                    continue; // expiries accounted; look for real work again
+                }
+                if side_pending() {
+                    continue; // woken for pinned work — the top of the loop drains it
+                }
+                // Empty-handed: the stream ended, or a retire token woke
+                // the class (claimed at the top of the loop — exactly one
+                // worker gets it; the rest find it gone and park again).
+                if class.retire.load(Ordering::SeqCst) > 0 {
+                    continue;
+                }
+                if queue.is_closed() {
+                    // Closed and drained, or aborted. Anything still on
+                    // the side queue was pushed before the router exited —
+                    // serve it before leaving (re-checked after observing
+                    // the close, so no later push can be missed).
+                    if side_pending() {
+                        continue;
+                    }
+                    if let Some(sq) = &side {
+                        if let Some(sc) = sx.sticky {
+                            sc.deregister(wid);
+                        }
+                        sq.close();
+                    }
+                    break;
+                }
+                continue; // the token went to a sibling — look for work again
+            }
+        }
+        let n = batch.len();
+        metas.clear();
+        maps.clear();
+        streams.clear();
+        events_buf.clear();
+        for req in batch.drain(..) {
+            // In the routerless path this pop took the request out of the
+            // ingress queue, freeing its tenant's quota slot (the routed
+            // path freed it when the router popped the ingress).
+            if !routed && multi_tenant {
+                sx.tenants[req.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
+            }
+            metas.push(Meta {
+                label: req.label,
+                tenant: req.tenant,
+                model: req.model,
+                arrival: req.arrival,
+                bucket: req.bucket,
+                predicted_s: req.predicted_s,
+                deadline: req.deadline,
+                sticky: req.sticky,
+            });
+            streams.push(req.stream);
+            maps.push(req.map);
+            events_buf.push(req.events);
+        }
+        let t0 = Instant::now();
+        // Delta-capable backends take the stream-labelled entry point;
+        // the plain path is adapted so both arms yield one result shape.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if use_delta {
+                backend.classify_batch_delta(&streams, &maps)
+            } else {
+                backend
+                    .classify_batch(&maps)
+                    .into_iter()
+                    .map(|r| r.map(|c| (c, DeltaStatus::NotApplicable)))
+                    .collect()
+            }
+        }));
+        let visit_s = t0.elapsed().as_secs_f64();
+        let done = Instant::now();
+        if routed {
+            // The visit is over: these requests leave the class's routing
+            // backlog whatever the outcome.
+            class.backlog.fetch_sub(n, Ordering::SeqCst);
+        }
+        let results = match outcome {
+            Ok(rs) => rs,
+            Err(p) => {
+                fail(format!("worker panic: {}", panic_message(p.as_ref())));
+                break;
+            }
+        };
+        if results.len() != n {
+            // A broken Backend impl must fail loudly, not silently lose
+            // requests to zip truncation.
+            fail(format!(
+                "backend '{}' returned {} result(s) for a batch of {n}",
+                backend.name(),
+                results.len(),
+            ));
+            break;
+        }
+        busy_s += visit_s;
+        // Class-level busy books feed the autoscaler's windowed
+        // utilization (cheap: one atomic add per accelerator visit).
+        class.busy_us.fetch_add((visit_s * 1e6) as u64, Ordering::SeqCst);
+        batch_sizes.push(n);
+        // The visit is one accelerator pass; attribute its cost evenly
+        // across the requests it served, and — when a router is making
+        // decisions — teach it what this class actually costs at each
+        // request's event-count bucket.
+        let service_s = visit_s / n as f64;
+        if routed {
+            for m in &metas {
+                class.cost.observe(m.bucket, service_s);
+            }
+        }
+        let mut failed = false;
+        for (i, (m, res)) in metas.iter().zip(results).enumerate() {
+            match res {
+                Ok((c, st)) => {
+                    match st {
+                        DeltaStatus::NotApplicable => delta.not_applicable += 1,
+                        DeltaStatus::Hit { dirty_frac, recomputed_frac } => {
+                            delta.hits += 1;
+                            delta.dirty_frac_sum += dirty_frac;
+                            delta.recomputed_frac_sum += recomputed_frac;
+                        }
+                        DeltaStatus::Full(FullReason::ColdCache) => delta.full_cold += 1,
+                        DeltaStatus::Full(FullReason::Geometry) => delta.full_geometry += 1,
+                        DeltaStatus::Full(FullReason::OverThreshold) => {
+                            delta.full_over_threshold += 1;
+                        }
+                    }
+                    let timing = RequestTiming {
+                        e2e_s: done.duration_since(m.arrival).as_secs_f64(),
+                        service_s,
+                        sim_cycles: c.sim_cycles,
+                    };
+                    records.push(ServedRecord {
+                        label: m.label,
+                        tenant: m.tenant,
+                        model: m.model,
+                        pred: c.pred,
+                        timing,
+                        predicted_s: m.predicted_s,
+                        met_deadline: m.deadline.map(|dl| done <= dl),
+                        sticky: m.sticky,
+                    });
+                    // Shadow conformance: evaluated after the primary
+                    // result is in the books — a mirrored visit is never
+                    // served traffic and never delays a sibling's batch.
+                    if let Some(sh) =
+                        sx.models.get(m.model).and_then(|mc| mc.shadow.as_ref())
+                    {
+                        shadow_compare(sh, m.label, c.pred, &maps[i], events_buf[i].take());
+                    }
+                }
+                Err(e) => {
+                    fail(e.to_string());
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if failed {
+            break;
+        }
+        // The batch is served: future windows of these streams should come
+        // back here, where their freshly written caches live. A retiring
+        // worker must not re-advertise itself.
+        if use_delta && !retiring {
+            if let (Some(sc), Some(_)) = (sx.sticky, &side) {
+                for &s in streams.iter().flatten() {
+                    sc.remember(s, wid);
+                }
+            }
+        }
+    }
+    WorkerOutput { wid, class: ci, busy_s, records, batch_sizes, delta }
+}

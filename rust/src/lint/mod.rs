@@ -20,10 +20,15 @@
 //! - **cast** — no bare narrowing `as u16` / `as u32` / `as usize` in
 //!   the wire-format files (`events/io.rs`, `coordinator/net.rs`);
 //!   conversions must go through `try_from`-based checked helpers.
+//! - **module-size** — no non-test library module over
+//!   [`MODULE_SIZE_CAP`] code lines (blank, comment-only, and
+//!   `#[cfg(test)]` lines don't count). `coordinator/serve.rs` grew to
+//!   a 2,100-line monolith before it was split into `serve/` stages;
+//!   this rule keeps the next one from regrowing.
 //! - **drift-metrics** — every `usize` counter field of `Metrics` /
-//!   `TenantStats` / `ClassStats` / `DeltaMetrics` must be referenced
-//!   in `report/` (a counter nobody renders is a books-keeping bug
-//!   waiting to be re-found by hand).
+//!   `TenantStats` / `ClassStats` / `DeltaMetrics` / `ModelStats` must
+//!   be referenced in `report/` (a counter nobody renders is a
+//!   books-keeping bug waiting to be re-found by hand).
 //! - **drift-flags** — every `--flag` string parsed via the `Args`
 //!   accessors in `util/cli.rs` / `main.rs` must appear in README.md.
 //! - **print** — `println!` / `eprintln!` are forbidden in library
@@ -82,7 +87,11 @@ const ALLOC_TOKENS: [&str; 9] = [
 ];
 const NARROW_CASTS: [&str; 3] = ["u16", "u32", "usize"];
 const CAST_FILES: [&str; 2] = ["events/io.rs", "coordinator/net.rs"];
-const METRIC_STRUCTS: [&str; 4] = ["Metrics", "TenantStats", "ClassStats", "DeltaMetrics"];
+const METRIC_STRUCTS: [&str; 5] =
+    ["Metrics", "TenantStats", "ClassStats", "DeltaMetrics", "ModelStats"];
+
+/// Cap on non-test code lines per library module (see the module docs).
+pub const MODULE_SIZE_CAP: usize = 900;
 const FLAG_ACCESSORS: [&str; 6] =
     [".get(", ".get_or(", ".get_usize(", ".get_u64(", ".get_f64(", ".has("];
 const FLAG_FILES: [&str; 2] = ["util/cli.rs", "main.rs"];
@@ -99,6 +108,7 @@ pub fn lint_sources(files: &[SourceFile], readme: Option<&str>) -> Vec<Finding> 
         rule_hot_alloc(f, s, &mut out);
         rule_cast(f, s, &mut out);
         rule_print(f, s, &mut out);
+        rule_module_size(f, s, &mut out);
     }
     rule_drift_metrics(&scanned, &mut out);
     rule_drift_flags(&scanned, readme, &mut out);
@@ -411,6 +421,30 @@ fn rule_print(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
                 );
             }
         }
+    }
+}
+
+/// One module over the size cap is one refactor away from the next
+/// `serve.rs`. Counted lines are non-test lines holding actual code —
+/// docs, comments, and `#[cfg(test)]` items never push a module over.
+/// `main.rs` is the binary, not a library module, and is exempt (like
+/// the print rule).
+fn rule_module_size(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
+    if f.rel_path == "main.rs" {
+        return;
+    }
+    let code_lines = s.lines.iter().filter(|l| !l.in_test && !l.code.trim().is_empty()).count();
+    if code_lines > MODULE_SIZE_CAP {
+        emit(
+            out,
+            &f.rel_path,
+            &s.lines,
+            0,
+            "module-size",
+            format!("module holds {code_lines} non-test code lines (cap {MODULE_SIZE_CAP})"),
+            "split it into a module directory of focused stages (see coordinator/serve/)"
+                .to_string(),
+        );
     }
 }
 

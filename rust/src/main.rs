@@ -58,6 +58,22 @@
 //!   N interleaved sliding-window streams whose consecutive windows
 //!   share fraction F of their events — the workload delta inference is
 //!   for. The report adds the delta hit/fallback/sticky line.
+//!   `--model name=arch` (repeatable; arch ∈ mbv2|compact|tiny) turns
+//!   the pool into a multi-model **fleet**: one compiled network per
+//!   model, one replica class per model (`--workers` replicas each),
+//!   requests routed only to their model's classes, and a per-model
+//!   report table with its own conservation identity. `--model-mix
+//!   name=w,...` weights the synthetic/replay traffic across the fleet
+//!   (uniform without it); `--swap name=arch@secs` hot-swaps the named
+//!   model to a freshly built arch after `secs` seconds (atomic flip —
+//!   no request lost or torn); `--shadow name=arch@frac` mirrors
+//!   fraction `frac` of the named model's served traffic to a candidate
+//!   backend and bit-exactly compares predictions, reporting
+//!   disagreement counts; `--shadow-capture path` appends every
+//!   disagreeing sample to a replayable `.esda` capture. `--labels
+//!   path` pairs a `--source replay:` capture with a sidecar of one
+//!   `u32` label per sample so replayed real captures contribute to
+//!   accuracy scoring.
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
@@ -70,9 +86,10 @@
 //!   exist; `--fix-plan` adds a suggested remediation per finding.
 
 use esda::coordinator::{
-    run_pool, run_pool_source, run_server, run_server_source, Backend, Dense, DropPolicy,
-    EventSource, Functional, NetConfig, NetSource, ReplicaPool, ReplicaSpec, ReplaySource,
-    ServerConfig, Simulator, TailSource, TenantConfig,
+    run_pool, run_pool_source, run_server, run_server_source, synthetic_source, Backend, Dense,
+    DropPolicy, EventSource, Functional, MixSource, NetConfig, NetSource, ReplicaPool,
+    ReplicaSpec, ReplaySource, ServerConfig, Shared, ShadowCaptureConfig, ShadowConfig,
+    Simulator, Swappable, TailSource, TenantConfig,
 };
 use esda::events::{io::generate_dataset_files, repr::histogram2_norm, DatasetProfile};
 use esda::hwopt::{
@@ -133,12 +150,32 @@ fn profile_from(args: &Args) -> Result<DatasetProfile, String> {
     })
 }
 
-fn model_from(args: &Args, p: &DatasetProfile) -> NetworkSpec {
-    match args.get_or("model", "compact") {
+fn arch_spec(arch: &str, p: &DatasetProfile) -> NetworkSpec {
+    match arch {
         "mbv2" => NetworkSpec::mobilenet_v2_05("mbv2", p.w, p.h, p.n_classes),
         "tiny" => NetworkSpec::tiny(p.w, p.h, p.n_classes),
         _ => NetworkSpec::compact("compact", p.w, p.h, p.n_classes),
     }
+}
+
+fn model_from(args: &Args, p: &DatasetProfile) -> NetworkSpec {
+    arch_spec(args.get_or("model", "compact"), p)
+}
+
+/// Quantize one architecture for `p` (fleet serving compiles one of
+/// these per `--model name=arch` entry; all share the dataset's
+/// deterministic calibration stream).
+fn qnet_for_arch(arch: &str, p: &DatasetProfile, seed: u64) -> esda::model::quant::QuantizedNet {
+    let spec = arch_spec(arch, p);
+    let mut rng = Rng::new(seed);
+    let w = FloatWeights::random(&spec, seed);
+    let calib: Vec<_> = (0..3)
+        .map(|i| {
+            let es = p.sample(i % p.n_classes, &mut rng);
+            histogram2_norm(&es, p.w, p.h, 8.0)
+        })
+        .collect();
+    quantize_network(&spec, &w, &calib)
 }
 
 fn cmd_gen_data(args: &Args) -> Result<(), String> {
@@ -256,8 +293,41 @@ fn cmd_search(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+const FLEET_ARCHS: [&str; 3] = ["mbv2", "compact", "tiny"];
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let p = profile_from(args)?;
+    // `--model name=arch` entries (any value containing '=') switch the
+    // run into fleet mode; a bare `--model arch` keeps its original
+    // meaning as the single-model architecture selector.
+    let fleet: Vec<(String, String)> = {
+        let vals = args.get_all("model");
+        let entries: Vec<(String, String)> = vals
+            .iter()
+            .filter_map(|v| v.split_once('='))
+            .map(|(n, a)| (n.to_string(), a.to_string()))
+            .collect();
+        if !entries.is_empty() && entries.len() != vals.len() {
+            return Err(
+                "--model: cannot mix `name=arch` fleet entries with a bare architecture \
+                 selector"
+                    .into(),
+            );
+        }
+        for (name, arch) in &entries {
+            if name.is_empty() {
+                return Err("--model: fleet entries need a non-empty name".into());
+            }
+            if !FLEET_ARCHS.contains(&arch.as_str()) {
+                return Err(format!(
+                    "--model {name}={arch}: unknown arch '{arch}' (choose from: {})",
+                    FLEET_ARCHS.join(", ")
+                ));
+            }
+        }
+        entries
+    };
+    let fleet_mode = !fleet.is_empty();
     let spec = model_from(args, &p);
     let seed = args.get_u64("seed", 3)?;
     let mut rng = Rng::new(seed);
@@ -364,6 +434,78 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
              [interval, 1e7], got {scale_interval_ms} / {scale_window_ms}"
         ));
     }
+    // Shadow deployments: mirror a fraction of a fleet model's served
+    // traffic to a candidate build and compare predictions bit-exactly.
+    let mut shadows = Vec::new();
+    for raw in args.get_all("shadow") {
+        let s = esda::util::cli::parse_shadow_spec(raw).map_err(|e| format!("--shadow: {e}"))?;
+        if !fleet.iter().any(|(n, _)| *n == s.model) {
+            return Err(format!(
+                "--shadow: unknown model '{}' (declare the fleet via --model name=arch)",
+                s.model
+            ));
+        }
+        if !FLEET_ARCHS.contains(&s.arch.as_str()) {
+            return Err(format!("--shadow: unknown arch '{}'", s.arch));
+        }
+        // A distinct seed gives the candidate its own weights, so
+        // same-arch shadows still exercise the comparison honestly.
+        let candidate: std::sync::Arc<dyn Backend> =
+            std::sync::Arc::new(Functional::new(qnet_for_arch(&s.arch, &p, seed + 17)));
+        shadows.push(ShadowConfig { model: s.model, candidate, fraction: s.fraction });
+    }
+    let shadow_capture = match args.get("shadow-capture") {
+        None => None,
+        Some(path) if shadows.is_empty() => {
+            return Err(format!("--shadow-capture {path}: needs at least one --shadow"))
+        }
+        Some(path) => Some(ShadowCaptureConfig {
+            path: std::path::PathBuf::from(path),
+            ..ShadowCaptureConfig::default()
+        }),
+    };
+    // Hot swap: after `secs` seconds flip the named model's backend to a
+    // freshly built arch — every Shared replica handle sees the new build
+    // on its next classify call, with no request lost or torn.
+    let swap_spec = match args.get("swap") {
+        None => None,
+        Some(raw) => {
+            let s = esda::util::cli::parse_swap_spec(raw).map_err(|e| format!("--swap: {e}"))?;
+            if !fleet.iter().any(|(n, _)| *n == s.model) {
+                return Err(format!(
+                    "--swap: unknown model '{}' (declare the fleet via --model name=arch)",
+                    s.model
+                ));
+            }
+            if !FLEET_ARCHS.contains(&s.arch.as_str()) {
+                return Err(format!("--swap: unknown arch '{}'", s.arch));
+            }
+            Some(s)
+        }
+    };
+    // Traffic mix across the fleet: weights aligned to --model order;
+    // models absent from the spec get weight zero. Uniform without it.
+    let mix: Vec<usize> = match args.get("model-mix") {
+        None => vec![1; fleet.len().max(1)],
+        Some(_) if !fleet_mode => {
+            return Err("--model-mix: needs a fleet (declare it via --model name=arch)".into())
+        }
+        Some(raw) => {
+            let entries =
+                esda::util::cli::parse_mix_spec(raw).map_err(|e| format!("--model-mix: {e}"))?;
+            let mut weights = vec![0usize; fleet.len()];
+            for (name, w) in &entries {
+                match fleet.iter().position(|(n, _)| n == name) {
+                    Some(i) => weights[i] = *w,
+                    None => return Err(format!("--model-mix: unknown model '{name}'")),
+                }
+            }
+            if weights.iter().all(|w| *w == 0) {
+                return Err("--model-mix: all weights are zero".into());
+            }
+            weights
+        }
+    };
     let cfg = ServerConfig {
         n_requests: args.get_usize("requests", 32)?,
         seed,
@@ -383,8 +525,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         tenants,
         overlap,
         streams,
+        shadows,
+        shadow_capture,
     };
     let source_spec = esda::util::cli::parse_source_spec(args.get_or("source", "synth"))?;
+    if args.get("labels").is_some()
+        && !matches!(source_spec, esda::util::cli::SourceSpec::Replay { .. })
+    {
+        return Err("--labels pairs with --source replay:path only".into());
+    }
     // A non-synthetic source replaces the generated stream: build it now
     // and check its geometry against the dataset profile the network was
     // quantized for (a mismatched replay would build maps of the wrong
@@ -395,6 +544,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         esda::util::cli::SourceSpec::Replay { path, speed } => {
             let mut src = ReplaySource::open(std::path::Path::new(path), *speed)
                 .map_err(|e| e.to_string())?;
+            if let Some(lp) = args.get("labels") {
+                // One u32 ground-truth label per sample; a count mismatch
+                // against the capture header is fatal at build time.
+                src = src.with_labels(std::path::Path::new(lp)).map_err(|e| e.to_string())?;
+            }
             if args.get("requests").is_some() {
                 src = src.with_limit(cfg.n_requests);
             }
@@ -412,7 +566,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             // Socket front door: geometry comes from the dataset profile
             // (packets are validated against it at the boundary) and the
             // boundary's tenant table matches the server's.
-            let ncfg = NetConfig { tenants: cfg.tenants.len().max(1), ..NetConfig::default() };
+            let ncfg = NetConfig {
+                tenants: cfg.tenants.len().max(1),
+                models: fleet.len().max(1),
+                ..NetConfig::default()
+            };
             let src = match &source_spec {
                 esda::util::cli::SourceSpec::Udp { .. } => NetSource::udp(*port, p.w, p.h, ncfg),
                 _ => NetSource::tcp(*port, p.w, p.h, ncfg),
@@ -437,6 +595,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             ));
         }
     }
+    if fleet_mode {
+        for spelled in ["pool", "backend"] {
+            if args.get(spelled).is_some() {
+                return Err(format!(
+                    "--{spelled} and --model name=arch fleets are mutually exclusive: the \
+                     fleet builds one functional class per model"
+                ));
+            }
+        }
+        if delta {
+            return Err("--delta is not yet supported for --model fleets".into());
+        }
+    }
     let pooled = args.get("pool").is_some();
     if pooled && args.get("backend").is_some() {
         return Err(
@@ -459,7 +630,50 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 .into(),
         );
     }
-    let r = if let Some(pool_raw) = args.get("pool") {
+    let r = if fleet_mode {
+        // Multi-model fleet: one compiled network per --model entry, one
+        // functional replica class per model (tagged so the router only
+        // offers a request to its own model's class), every replica of a
+        // model sharing that model's swappable backend handle.
+        use std::sync::Arc;
+        let mut specs = Vec::new();
+        let mut handles: Vec<Arc<Swappable>> = Vec::new();
+        for (name, arch) in &fleet {
+            let qnet = qnet_for_arch(arch, &p, seed);
+            let handle =
+                Arc::new(Swappable::new(name.clone(), Arc::new(Functional::new(qnet))));
+            let shared = Arc::clone(&handle);
+            specs.push(
+                ReplicaSpec::new(name.clone(), workers, batch, move |_| {
+                    Ok(Box::new(Shared(Arc::clone(&shared) as Arc<dyn Backend>)))
+                })
+                .for_model(name.clone()),
+            );
+            handles.push(handle);
+        }
+        let pool = ReplicaPool::build(specs).map_err(|e| e.to_string())?;
+        if let Some(s) = &swap_spec {
+            let idx = fleet.iter().position(|(n, _)| *n == s.model).unwrap_or(0);
+            let target = Arc::clone(&handles[idx]);
+            // Built eagerly so the mid-run flip costs one Arc exchange,
+            // not a network compile.
+            let next: Arc<dyn Backend> =
+                Arc::new(Functional::new(qnet_for_arch(&s.arch, &p, seed + 1)));
+            let at = std::time::Duration::from_secs_f64(s.at_secs);
+            // Detached: the flip is atomic and idempotent, so a swap
+            // scheduled past the run's end is harmless.
+            std::thread::spawn(move || {
+                std::thread::sleep(at);
+                target.swap(next);
+            });
+        }
+        let base: Box<dyn EventSource> = match source {
+            Some(src) => src,
+            None => Box::new(synthetic_source(&p, &cfg)),
+        };
+        let src = Box::new(MixSource::new(base, &mix));
+        run_pool_source(src, &pool, &cfg).map_err(|e| e.to_string())?
+    } else if let Some(pool_raw) = args.get("pool") {
         // Heterogeneous pool: per-replica backend instances grouped into
         // classes, cost-aware routing between them. The pool spec defines
         // the worker count and per-class batch affinity (explicit
@@ -569,8 +783,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if m.per_tenant.len() > 1 {
         println!("{}", esda::report::tenant_table(m).render());
     }
-    if pooled {
+    if pooled || fleet_mode {
         println!("{}", esda::report::pool_table(m).render());
+    }
+    if m.per_model.len() > 1 || m.per_model.iter().any(|ms| ms.shadow_mirrored > 0) {
+        println!("{}", esda::report::model_table(m).render());
+    }
+    if let Some(line) = esda::report::shadow_line(m) {
+        println!("{line}");
     }
     if m.per_worker.len() > 1 || args.has("verbose") {
         println!("{}", esda::report::serving_table(m).render());

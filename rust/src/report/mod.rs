@@ -218,6 +218,67 @@ pub fn tenant_table(m: &crate::coordinator::Metrics) -> Table {
     t
 }
 
+/// Render the fleet's per-model breakdown: classes serving each model,
+/// served volume with accuracy (rate plus raw correct count), admission
+/// drops, the deadline-shed split, and the conservation total
+/// ([`ModelStats::offered`] — each model's books must reconstruct its
+/// offered load independently). Used by `esda serve --model` and the
+/// fleet-serving example; single-model runs render one `default` row
+/// restating the global books.
+///
+/// [`ModelStats::offered`]: crate::coordinator::ModelStats::offered
+pub fn model_table(m: &crate::coordinator::Metrics) -> Table {
+    let mut t = Table::new(
+        "serving — per-model fleet",
+        &[
+            "model", "classes", "served", "accuracy", "dropped", "ddl offered", "ddl in/rt",
+            "offered",
+        ],
+    );
+    for ms in &m.per_model {
+        t.row(vec![
+            ms.model.clone(),
+            ms.classes.to_string(),
+            ms.served.to_string(),
+            // A model that served nothing makes no accuracy claim.
+            ms.accuracy()
+                .map(|a| format!("{:.1}% ({}/{})", a * 100.0, ms.correct, ms.served))
+                .unwrap_or_else(|| "-".into()),
+            ms.dropped.to_string(),
+            ms.deadline_offered.to_string(),
+            format!("{} + {}", ms.deadline_ingress, ms.deadline_router),
+            ms.offered().to_string(),
+        ]);
+    }
+    t
+}
+
+/// One-line shadow-conformance summary — per shadowed model: mirrored
+/// volume, disagreement count and rate, and how many disagreements the
+/// capture file could not hold. `None` when no model mirrored anything
+/// (no `--shadow`, or the shadowed model saw no traffic).
+pub fn shadow_line(m: &crate::coordinator::Metrics) -> Option<String> {
+    let parts: Vec<String> = m
+        .per_model
+        .iter()
+        .filter(|ms| ms.shadow_mirrored > 0)
+        .map(|ms| {
+            let rate = ms
+                .disagreement_rate()
+                .map(|r| format!("{:.1}%", r * 100.0))
+                .unwrap_or_else(|| "-".into());
+            format!(
+                "{}: {} mirrored, {} disagreement(s) ({rate}), {} capture drop(s)",
+                ms.model, ms.shadow_mirrored, ms.shadow_disagreements, ms.shadow_capture_drops,
+            )
+        })
+        .collect();
+    if parts.is_empty() {
+        return None;
+    }
+    Some(format!("shadow conformance: {}", parts.join(" | ")))
+}
+
 /// The serving headline: volumes, accuracy (rate plus the raw correct
 /// count — the rate alone hides how thin the sample is), end-to-end and
 /// service latency percentiles, throughput, and worker count.
@@ -435,6 +496,56 @@ mod tests {
         assert!(s.contains("97.5%"), "attainment 39/40: {s}");
         assert!(s.contains("43"), "offered = 40 + 2 + 0 + 1: {s}");
         assert!(!s.contains("NaN"), "no-deadline tenant renders a dash: {s}");
+    }
+
+    /// The model table renders one row per model with its conservation
+    /// total, and a dash (never NaN) for a model that served nothing.
+    #[test]
+    fn model_table_renders_per_model_rows() {
+        use crate::coordinator::{Metrics, ModelStats};
+        let mut m = Metrics::default();
+        m.per_model.push(ModelStats {
+            model: "alpha".into(),
+            classes: 2,
+            served: 8,
+            correct: 6,
+            dropped: 1,
+            deadline_offered: 8,
+            deadline_ingress: 1,
+            deadline_router: 2,
+            ..Default::default()
+        });
+        m.per_model.push(ModelStats { model: "beta".into(), classes: 1, ..Default::default() });
+        let s = model_table(&m).render();
+        assert!(s.contains("alpha"), "{s}");
+        assert!(s.contains("75.0% (6/8)"), "accuracy rate + raw count: {s}");
+        assert!(s.contains("12"), "offered = 8 + 1 + 3: {s}");
+        assert!(s.contains("1 + 2"), "deadline split: {s}");
+        assert!(!s.contains("NaN"), "zero-traffic model renders a dash: {s}");
+    }
+
+    /// The shadow line is absent without mirrored traffic and renders
+    /// the per-model disagreement books when there is.
+    #[test]
+    fn shadow_line_renders_disagreement_books() {
+        use crate::coordinator::{Metrics, ModelStats};
+        let mut m = Metrics::default();
+        assert_eq!(shadow_line(&m), None, "no per-model books ⇒ no line");
+        m.per_model.push(ModelStats { model: "alpha".into(), served: 10, ..Default::default() });
+        assert_eq!(shadow_line(&m), None, "no mirrored traffic ⇒ no line");
+        m.per_model.push(ModelStats {
+            model: "beta".into(),
+            served: 10,
+            shadow_mirrored: 8,
+            shadow_disagreements: 2,
+            shadow_capture_drops: 1,
+            ..Default::default()
+        });
+        let line = shadow_line(&m).unwrap();
+        assert!(line.contains("beta: 8 mirrored"), "{line}");
+        assert!(line.contains("2 disagreement(s) (25.0%)"), "{line}");
+        assert!(line.contains("1 capture drop(s)"), "{line}");
+        assert!(!line.contains("alpha"), "unshadowed models stay off the line: {line}");
     }
 
     /// The scaling log renders one line per autoscaler decision.

@@ -1,3 +1,4 @@
+// lint:allow(module-size): one kernel family over one arena discipline; split tracked
 //! Functional (non-cycle-level) reference implementations of the paper's
 //! layer algebra, in both f32 (training-parity) and int8 (hardware-exact)
 //! arithmetic:

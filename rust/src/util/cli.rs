@@ -1,14 +1,20 @@
 //! Tiny CLI flag parser (clap is not vendored).
 //!
-//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
-//! arguments, with typed accessors and a generated usage string.
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! flags (`--model a=x --model b=y`, read via [`Args::get_all`]), and
+//! positional arguments, with typed accessors and a generated usage
+//! string.
 
 use std::collections::BTreeMap;
 
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
-    flags: BTreeMap<String, String>,
+    /// Every occurrence of each value-carrying flag, in order. The
+    /// single-value accessors read the *last* occurrence, so a repeated
+    /// scalar flag keeps the familiar "later overrides earlier" shell
+    /// semantics while list flags see everything.
+    flags: BTreeMap<String, Vec<String>>,
     bools: Vec<String>,
     positional: Vec<String>,
 }
@@ -26,7 +32,9 @@ impl Args {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some(eq) = stripped.find('=') {
                     out.flags
-                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                        .entry(stripped[..eq].to_string())
+                        .or_default()
+                        .push(stripped[eq + 1..].to_string());
                 } else if bool_flags.contains(&stripped) {
                     out.bools.push(stripped.to_string());
                 } else {
@@ -41,7 +49,7 @@ impl Args {
                     if v.starts_with("--") {
                         return Err(format!("flag --{stripped} expects a value, got flag '{v}'"));
                     }
-                    out.flags.insert(stripped.to_string(), v);
+                    out.flags.entry(stripped.to_string()).or_default().push(v);
                 }
             } else {
                 out.positional.push(a);
@@ -50,8 +58,16 @@ impl Args {
         Ok(out)
     }
 
+    /// Last occurrence of a value flag (repeats override, shell-style).
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a value flag, in command-line order (empty
+    /// when the flag was never passed) — for repeatable list flags like
+    /// `--model name=arch`.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.flags.get(name).map_or(&[], |v| v.as_slice())
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -307,6 +323,102 @@ pub fn parse_tenant_spec(s: &str) -> Result<Vec<TenantSpec>, String> {
     Ok(out)
 }
 
+/// A parsed `--shadow` spec: mirror a fraction of `model`'s served
+/// traffic to a freshly built `arch` candidate and compare predictions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShadowSpec {
+    pub model: String,
+    pub arch: String,
+    /// Fraction of served requests to mirror, in (0, 1].
+    pub fraction: f64,
+}
+
+/// Parse a `--shadow` spec: `model=arch[@fraction]`, e.g.
+/// `det=mbv2@0.25` mirrors a quarter of model `det`'s served traffic to
+/// a candidate `mbv2` build. The fraction defaults to 1.0 (mirror
+/// everything) and must be in (0, 1] — a zero mirror is a misspelled
+/// no-op, not a configuration.
+pub fn parse_shadow_spec(s: &str) -> Result<ShadowSpec, String> {
+    let (model, rest) = s
+        .split_once('=')
+        .ok_or_else(|| format!("shadow entry '{s}': expected model=arch[@fraction]"))?;
+    let (arch, fraction) = match rest.split_once('@') {
+        Some((a, f)) => {
+            let f: f64 =
+                f.parse().map_err(|_| format!("shadow entry '{s}': bad fraction '{f}'"))?;
+            if !(f > 0.0 && f <= 1.0) {
+                return Err(format!(
+                    "shadow entry '{s}': fraction must be in (0, 1], got {f}"
+                ));
+            }
+            (a, f)
+        }
+        None => (rest, 1.0),
+    };
+    if model.is_empty() || arch.is_empty() {
+        return Err(format!("shadow entry '{s}': empty model or arch name"));
+    }
+    Ok(ShadowSpec { model: model.to_string(), arch: arch.to_string(), fraction })
+}
+
+/// A parsed `--swap` spec: hot-swap `model`'s serving backend to a
+/// fresh `arch` build after `at_secs` seconds of serving.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwapSpec {
+    pub model: String,
+    pub arch: String,
+    /// Seconds into the run at which to flip.
+    pub at_secs: f64,
+}
+
+/// Parse a `--swap` spec: `model=arch@secs`, e.g. `det=mbv2@1.5` swaps
+/// model `det` to a fresh `mbv2` build 1.5 s into the run. The delay
+/// must be finite, >= 0, and sane (<= 1e6 s).
+pub fn parse_swap_spec(s: &str) -> Result<SwapSpec, String> {
+    let err = || format!("swap entry '{s}': expected model=arch@secs");
+    let (model, rest) = s.split_once('=').ok_or_else(err)?;
+    let (arch, secs) = rest.split_once('@').ok_or_else(err)?;
+    if model.is_empty() || arch.is_empty() {
+        return Err(format!("swap entry '{s}': empty model or arch name"));
+    }
+    let at_secs: f64 =
+        secs.parse().map_err(|_| format!("swap entry '{s}': bad delay '{secs}'"))?;
+    // `contains` also rejects NaN and infinities.
+    if !(0.0..=1e6).contains(&at_secs) {
+        return Err(format!(
+            "swap entry '{s}': delay must be finite, >= 0 and <= 1e6 s, got {at_secs}"
+        ));
+    }
+    Ok(SwapSpec { model: model.to_string(), arch: arch.to_string(), at_secs })
+}
+
+/// Parse a `--model-mix` spec: a comma-separated list of `name=weight`
+/// entries, e.g. `det=3,cls=1` sends model `det` three requests for
+/// every one of `cls`. Weights are relative shares; a model absent from
+/// the spec gets no synthetic traffic.
+pub fn parse_mix_spec(s: &str) -> Result<Vec<(String, usize)>, String> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        let (name, w) = part
+            .split_once('=')
+            .ok_or_else(|| format!("mix entry '{part}': expected name=weight"))?;
+        if name.is_empty() {
+            return Err(format!("mix entry '{part}': empty model name"));
+        }
+        if out.iter().any(|(n, _)| n == name) {
+            return Err(format!("mix entry '{part}': duplicate model '{name}'"));
+        }
+        let w: usize =
+            w.parse().map_err(|_| format!("mix entry '{part}': bad weight '{w}'"))?;
+        out.push((name.to_string(), w));
+    }
+    if out.is_empty() {
+        return Err("mix spec: expected name=weight entries".into());
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -363,6 +475,63 @@ mod tests {
         let a = parse(&["--steps", "abc"], &[]);
         let e = a.get_usize("steps", 0).unwrap_err();
         assert!(e.contains("steps"));
+    }
+
+    /// Repeated flags accumulate for `get_all` while the scalar
+    /// accessors keep shell semantics (last occurrence wins).
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = parse(
+            &["--model", "det=mbv2", "--model=cls=lenet", "--seed", "1", "--seed", "2"],
+            &[],
+        );
+        assert_eq!(a.get_all("model"), &["det=mbv2".to_string(), "cls=lenet".to_string()]);
+        assert_eq!(a.get("seed"), Some("2"), "last occurrence wins");
+        assert_eq!(a.get_usize("seed", 0).unwrap(), 2);
+        assert!(a.get_all("nope").is_empty());
+    }
+
+    #[test]
+    fn shadow_spec_parses_fraction_default_and_override() {
+        assert_eq!(
+            parse_shadow_spec("det=mbv2").unwrap(),
+            ShadowSpec { model: "det".into(), arch: "mbv2".into(), fraction: 1.0 }
+        );
+        assert_eq!(
+            parse_shadow_spec("det=mbv2@0.25").unwrap(),
+            ShadowSpec { model: "det".into(), arch: "mbv2".into(), fraction: 0.25 }
+        );
+        for bad in ["", "det", "det=", "=mbv2", "det=mbv2@0", "det=mbv2@1.5", "det=mbv2@-1",
+            "det=mbv2@x", "det=mbv2@nan"]
+        {
+            assert!(parse_shadow_spec(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn swap_spec_parses_delay() {
+        assert_eq!(
+            parse_swap_spec("det=mbv2@1.5").unwrap(),
+            SwapSpec { model: "det".into(), arch: "mbv2".into(), at_secs: 1.5 }
+        );
+        assert_eq!(parse_swap_spec("det=lenet@0").unwrap().at_secs, 0.0);
+        for bad in ["", "det", "det=mbv2", "det=@1", "=mbv2@1", "det=mbv2@-1", "det=mbv2@x",
+            "det=mbv2@inf", "det=mbv2@nan", "det=mbv2@1e7"]
+        {
+            assert!(parse_swap_spec(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn mix_spec_parses_weights() {
+        assert_eq!(
+            parse_mix_spec("det=3,cls=1").unwrap(),
+            vec![("det".to_string(), 3), ("cls".to_string(), 1)]
+        );
+        assert_eq!(parse_mix_spec("a=0").unwrap(), vec![("a".to_string(), 0)]);
+        for bad in ["", "det", "det=", "=3", "det=x", "det=1,det=2", "det=1,,cls=2"] {
+            assert!(parse_mix_spec(bad).is_err(), "accepted '{bad}'");
+        }
     }
 
     #[test]

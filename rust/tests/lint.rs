@@ -219,6 +219,47 @@ fn drift_flags_ignores_non_accessor_strings() {
     assert_clean(&lint_files(&[("main.rs", cli)], Some("no flags here\n")));
 }
 
+// ----------------------------------------------------------- module-size
+
+/// A fixture module with `n` counted code lines (plus optional padding
+/// the rule must ignore).
+fn module_of(n: usize, padding: &str) -> String {
+    format!("fn f() {{\n{}}}\n{padding}", "    let _x = 1;\n".repeat(n.saturating_sub(2)))
+}
+
+#[test]
+fn module_size_flags_oversized_library_modules_at_line_one() {
+    let found = lint_one("coordinator/fixture.rs", &module_of(901, ""));
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].starts_with("coordinator/fixture.rs:1: module-size:"), "{}", found[0]);
+    assert!(found[0].contains("901"), "{}", found[0]);
+    assert!(found[0].contains("900"), "{}", found[0]);
+}
+
+#[test]
+fn module_size_passes_at_the_cap_and_ignores_blank_comment_and_test_lines() {
+    assert_clean(&lint_one("coordinator/fixture.rs", &module_of(900, "")));
+    // Blank lines and comments are not code: 900 code lines plus a sea
+    // of padding still pass.
+    let padding = "\n// commentary\n".repeat(300);
+    assert_clean(&lint_one("coordinator/fixture.rs", &module_of(900, &padding)));
+    // #[cfg(test)] items don't count toward the cap either.
+    let tests =
+        format!("#[cfg(test)]\nmod tests {{\n{}}}\n", "    fn t() {}\n".repeat(600));
+    assert_clean(&lint_one("coordinator/fixture.rs", &module_of(890, &tests)));
+    // main.rs is the binary, not a library module.
+    assert_clean(&lint_one("main.rs", &module_of(1200, "")));
+}
+
+#[test]
+fn module_size_respects_a_reasoned_allow_on_line_one() {
+    let text = format!(
+        "// lint:allow(module-size): split scheduled for the next PR\n{}",
+        module_of(950, "")
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &text));
+}
+
 // ------------------------------------------------------------ self-check
 
 /// The shipped tree lints clean: every genuine violation is fixed and

@@ -4,10 +4,11 @@
 
 use esda::arch::HwConfig;
 use esda::coordinator::{
-    encode_packet, run_pool, run_pool_source, run_server, run_server_source, AutoscaleConfig,
-    Backend, BackendError, Classification, DeltaStatus, DeltaStore, DropPolicy, EventSource,
-    Functional, IngestError, NetConfig, NetSource, ReplaySource, ReplicaPool, ReplicaSpec,
-    ServerConfig, ServerResult, Simulator, SourcedRequest, TenantConfig, DEFAULT_TENANT,
+    encode_packet, run_pool, run_pool_source, run_server, run_server_source, synthetic_source,
+    AutoscaleConfig, Backend, BackendError, Classification, DeltaStatus, DeltaStore, DropPolicy,
+    EventSource, Functional, IngestError, MixSource, NetConfig, NetSource, ReplaySource,
+    ReplicaPool, ReplicaSpec, ServerConfig, ServerResult, Simulator, SourcedRequest, Swappable,
+    TenantConfig, DEFAULT_TENANT,
 };
 use esda::events::{repr::histogram2_norm, DatasetProfile};
 use esda::model::quant::{quantize_network, QuantizedNet};
@@ -814,6 +815,7 @@ fn autoscaler_scales_up_under_pressure_and_down_when_idle() {
                         events,
                         arrival: Instant::now(),
                         tenant: DEFAULT_TENANT,
+                        model: 0,
                         stream: None,
                     }));
                 }
@@ -1176,6 +1178,7 @@ fn multi_tenant_serving_conserves_requests_property() {
                         events,
                         arrival: Instant::now(),
                         tenant,
+                        model: 0,
                         stream: None,
                     }))
                 }
@@ -1351,4 +1354,187 @@ fn loopback_saturating_tenant_cannot_starve_the_quiet_one() {
         (n_flood + n_quiet) as usize,
         "global books must cover the full loopback stream"
     );
+}
+
+/// Fleet conservation under randomized configs: a weighted model mix
+/// through a pool with one class per model, random queue shapes, drop
+/// policies, and an occasional tight SLO — the global books balance, and
+/// every model's books independently cover exactly the share of the
+/// stream the mix schedule assigned to it, whichever shed point each
+/// request left through.
+#[test]
+fn multi_model_serving_conserves_requests_property() {
+    use esda::util::propcheck::{check, Gen};
+
+    let profile = DatasetProfile::n_mnist();
+    let qnet = qnet_for(&profile);
+    check("per-model books balance", 10, |g: &mut Gen| {
+        let n_models = g.usize(1, 3);
+        let n_requests = g.usize(6, 20);
+        // Random per-model weights; at least one slot in the mix cycle.
+        let mut weights: Vec<usize> = (0..n_models).map(|_| g.usize(0, 3)).collect();
+        if weights.iter().all(|w| *w == 0) {
+            weights[0] = 1;
+        }
+        let specs: Vec<ReplicaSpec> = (0..n_models)
+            .map(|i| {
+                let q = qnet.clone();
+                ReplicaSpec::new(format!("m{i}-c"), g.usize(1, 2), g.usize(1, 3), move |_| {
+                    Ok(Box::new(Functional::new(q.clone())))
+                })
+                .for_model(format!("m{i}"))
+            })
+            .collect();
+        let pool = ReplicaPool::build(specs).expect("pool build");
+        let cfg = ServerConfig {
+            n_requests,
+            seed: g.u64(0..=1 << 40),
+            queue_depth: g.usize(1, 4),
+            drop_policy: if g.bool() { DropPolicy::Block } else { DropPolicy::DropOldest },
+            batch: g.usize(1, 3),
+            slo: if g.chance(0.3) {
+                Some(Duration::from_micros(g.u64(1..=50_000)))
+            } else {
+                None
+            },
+            ..Default::default()
+        };
+        // The mix schedule is deterministic, so each model's offered load
+        // is known exactly up front — before any drop or shed happens.
+        let mut schedule: Vec<usize> = Vec::new();
+        for (model, &w) in weights.iter().enumerate() {
+            for _ in 0..w {
+                schedule.push(model);
+            }
+        }
+        let expected: Vec<usize> = (0..n_models)
+            .map(|m| (0..n_requests).filter(|k| schedule[k % schedule.len()] == m).count())
+            .collect();
+        let src = MixSource::new(Box::new(synthetic_source(&profile, &cfg)), &weights);
+        let r = run_pool_source(Box::new(src), &pool, &cfg).expect("fleet run");
+        let m = &r.metrics;
+        assert_eq!(
+            m.total + m.dropped + m.deadline_drops(),
+            n_requests,
+            "global books must cover the mixed stream"
+        );
+        assert_eq!(m.per_model.len(), n_models);
+        for (i, ms) in m.per_model.iter().enumerate() {
+            assert_eq!(ms.model, format!("m{i}"));
+            assert_eq!(
+                ms.offered(),
+                expected[i],
+                "model m{i} books must cover exactly its share of the mix: {ms:?}"
+            );
+            assert!(ms.correct <= ms.served, "accuracy books inside the served count");
+        }
+        let served: usize = m.per_model.iter().map(|x| x.served).sum();
+        assert_eq!(served, m.total, "per-model served must sum to the total");
+        let dropped: usize = m.per_model.iter().map(|x| x.dropped).sum();
+        assert_eq!(dropped, m.dropped, "per-model drops must sum to the global count");
+        let shed: usize = m.per_model.iter().map(|x| x.deadline_drops()).sum();
+        assert_eq!(shed, m.deadline_drops(), "per-model deadline sheds must sum up");
+    });
+}
+
+/// The hot-swap acceptance test: flipping a [`Swappable`] model to a new
+/// build mid-run loses not a single request. The swap is gated on
+/// observed progress (a third of the stream served), blocking admission
+/// stays lossless across the flip, the books balance, and both builds
+/// actually served traffic.
+#[test]
+fn hot_swap_loses_no_requests() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Paces requests (so the swap lands mid-run) and counts them all.
+    struct Paced {
+        inner: Arc<dyn Backend>,
+        calls: Arc<AtomicUsize>,
+        delay: Duration,
+    }
+    impl Backend for Paced {
+        fn name(&self) -> &str {
+            "paced-swappable"
+        }
+        fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(self.delay);
+            self.inner.classify(map)
+        }
+    }
+    /// Counts the requests the post-swap build serves.
+    struct Counted {
+        inner: Functional,
+        calls: Arc<AtomicUsize>,
+    }
+    impl Backend for Counted {
+        fn name(&self) -> &str {
+            "candidate"
+        }
+        fn classify(&self, map: &SparseMap<f32>) -> Result<Classification, BackendError> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            self.inner.classify(map)
+        }
+    }
+
+    let profile = DatasetProfile::n_mnist();
+    let n_requests = 48;
+    let handle = Arc::new(Swappable::new(
+        "prod",
+        Arc::new(Functional::new(qnet_for(&profile))) as Arc<dyn Backend>,
+    ));
+    let total_calls = Arc::new(AtomicUsize::new(0));
+    let new_calls = Arc::new(AtomicUsize::new(0));
+    let (h, tc) = (Arc::clone(&handle), Arc::clone(&total_calls));
+    let pool = ReplicaPool::build(vec![ReplicaSpec::new("prod-c", 2, 2, move |_| {
+        Ok(Box::new(Paced {
+            inner: Arc::clone(&h) as Arc<dyn Backend>,
+            calls: Arc::clone(&tc),
+            delay: Duration::from_millis(1),
+        }))
+    })])
+    .expect("pool build");
+    let swapper = {
+        let h = Arc::clone(&handle);
+        let tc = Arc::clone(&total_calls);
+        let nc = Arc::clone(&new_calls);
+        let next = Functional::new(qnet_for(&profile));
+        std::thread::spawn(move || {
+            while tc.load(Ordering::SeqCst) < n_requests / 3 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            h.swap(Arc::new(Counted { inner: next, calls: nc }));
+        })
+    };
+    let cfg = ServerConfig {
+        n_requests,
+        seed: 42,
+        queue_depth: 8,
+        drop_policy: DropPolicy::Block,
+        batch: 2,
+        ..Default::default()
+    };
+    let r = run_pool(&profile, &pool, &cfg).expect("swapped run");
+    swapper.join().expect("swap thread");
+    let m = &r.metrics;
+    assert_eq!(handle.generation(), 1, "the scheduled swap must have landed");
+    assert_eq!(m.total, n_requests, "blocking admission stays lossless across the flip");
+    assert_eq!(m.dropped, 0);
+    assert_eq!(m.deadline_drops(), 0);
+    assert_eq!(r.predictions.len(), n_requests);
+    assert_eq!(
+        total_calls.load(Ordering::SeqCst),
+        n_requests,
+        "every request was classified exactly once"
+    );
+    let post = new_calls.load(Ordering::SeqCst);
+    assert!(post >= 1, "the post-swap build must serve the tail of the stream");
+    assert!(
+        n_requests - post >= 10,
+        "the pre-swap build must have served the head: only {} of {n_requests} pre-swap",
+        n_requests - post
+    );
+    assert_eq!(m.per_model.len(), 1);
+    assert_eq!(m.per_model[0].offered(), n_requests, "the model books must balance");
 }
