@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Autoscaling + cost-profile demo: the serving pool grows under
 //! deadline pressure, shrinks when idle, and a persisted cost profile
 //! eliminates the cold-start probe phase on the next run.

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! End-to-end driver (the EXPERIMENTS.md §E2E run): load the
 //! python-trained artifact, classify the full synthetic test set through
 //! all three execution paths, and report accuracy + latency — proving the

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Incremental (delta) inference + sticky routing demo: two event
 //! streams share a serving pool — a near-static camera whose successive
 //! windows overlap ~95% (a fixed background plus a small drifting

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Multi-model fleet serving demo: two models ("alpha", "beta") with
 //! their own weights share one front door behind a weighted traffic mix.
 //! Requests carry a model tag, the router treats it as a hard filter,

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Multi-tenant network front door demo: two producers push event
 //! packets over loopback TCP — one floods the door, one trickles — and
 //! the serving runtime's weighted admission quotas keep the quiet tenant
@@ -55,7 +56,8 @@ impl Backend for Throttled {
 
 /// One length-prefixed TCP frame around an encoded packet.
 fn frame(pkt: &[u8]) -> Vec<u8> {
-    let mut f = (pkt.len() as u32).to_le_bytes().to_vec();
+    let len = u32::try_from(pkt.len()).expect("packet fits a u32 frame header");
+    let mut f = len.to_le_bytes().to_vec();
     f.extend_from_slice(pkt);
     f
 }
@@ -86,7 +88,8 @@ fn main() {
                 let label = i % profile.n_classes;
                 let mut events = profile.sample(label, rng);
                 events.truncate(MAX_PACKET_EVENTS);
-                frame(&encode_packet(tenant, label as u32, &events))
+                let wire_label = u32::try_from(label).expect("class label fits u32");
+                frame(&encode_packet(tenant, wire_label, &events))
             })
             .collect()
     };

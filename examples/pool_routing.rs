@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Heterogeneous-pool routing demo: differently-shaped replica classes
 //! coexist behind one serving runtime (the paper's composability story,
 //! Ev-Edge-style), and the cost-aware router learns where requests

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Quickstart: build a tiny submanifold network, co-optimize it for the
 //! ZCU102 with the Eqn. 5/6 flow, and cycle-simulate one event-camera
 //! inference — the whole ESDA stack in ~60 lines.

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Model/hardware co-optimization demo (paper §3.4.2): run the two-step
 //! greedy NAS for a dataset and print the candidate table — architectures
 //! sampled, hardware-optimized with Eqn. 6, top-k scored by the linear

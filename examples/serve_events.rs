@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Serving demo: the sharded serving runtime (event source →
 //! representation builder → admission-controlled ingress queue → a pool of
 //! accelerator worker replicas) under sustained load.

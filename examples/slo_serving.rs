@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast example binary — unwrap/expect on setup is the idiom
 //! Deadline-aware serving demo: a recorded dataset replayed as a live
 //! stream, with a per-request latency SLO driving admission.
 //!

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast bench harness — unwrap/expect on setup is the idiom
 //! Ablations for the design choices DESIGN.md calls out:
 //!
 //! A. **Dense-input overhead** (§4.3's caveat): at ≥70% NZ some blocks are

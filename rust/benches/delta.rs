@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast bench harness — unwrap/expect on setup is the idiom
 //! Incremental (delta) inference speedup vs. window overlap: full
 //! recompute (`ExecPlan::classify`) against the dirty-frontier delta path
 //! (`ExecPlan::classify_delta`) over sliding-window streams at overlap

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast bench harness — unwrap/expect on setup is the idiom
 //! Exec-engine throughput: the allocating per-op oracle (`classify_i8`)
 //! vs. the compiled arena plan (`ExecPlan` + `ExecCtx`), and micro-batched
 //! serving throughput at batch caps {1, 4, 16} — plus allocs-per-inference

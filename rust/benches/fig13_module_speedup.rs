@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast bench harness — unwrap/expect on setup is the idiom
 //! Figure 13: per-MBConv-block speedup of the sparse dataflow modules over
 //! the dense sliding-window baseline, across input NZ ratios 10%–90%.
 //!

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast bench harness — unwrap/expect on setup is the idiom
 //! Figure 14: ESDA vs platform baselines on N-Caltech101, DvsGesture,
 //! ASL-DVS — latency, throughput, energy.
 //!

@@ -1,3 +1,4 @@
+// lint:allow-file(panic): fail-fast bench harness — unwrap/expect on setup is the idiom
 //! Table 1: end-to-end system performance — accuracy, latency, throughput,
 //! power, energy efficiency, and resources for every dataset, our measured
 //! ESDA rows next to the paper's published rows and the quoted comparator

@@ -129,6 +129,7 @@ pub struct Functional {
     plan: ExecPlan,
     /// Warm execution contexts, one per concurrently-classifying thread
     /// (grown on demand; the lock is held only to pop/push).
+    // lint: lock-rank(75): backend-ctxs
     ctxs: Mutex<Vec<ExecCtx>>,
     /// Incremental-execution engine ([`Functional::with_delta`]).
     delta: Option<DeltaEngine>,
@@ -142,10 +143,12 @@ pub struct Functional {
 /// worst a non-sticky hop diffs against an older window and recomputes
 /// more. Stickiness is purely a performance property, never a correctness
 /// one, which is what makes replica retirement trivially safe.
+// lint: lock-rank(76): delta-store
 pub type DeltaStore = Arc<Mutex<HashMap<u64, DeltaCache>>>;
 
 struct DeltaEngine {
     max_frac: f64,
+    // lint: lock-rank(76): delta-store
     caches: DeltaStore,
 }
 
@@ -312,7 +315,9 @@ impl Backend for Shared {
 /// state (the lock is held only to clone or replace the pointer).
 pub struct Swappable {
     name: String,
+    // lint: lock-rank(70): swap-inner
     inner: Mutex<Arc<dyn Backend>>,
+    // lint: atomic(seqcst): readers must agree on which swap generation is live
     generation: AtomicUsize,
 }
 
@@ -401,6 +406,7 @@ impl Backend for Simulator {
 /// worker replicas queue on it. A truly parallel dense pool needs one
 /// engine per replica (future work: per-worker backend factories).
 pub struct Dense {
+    // lint: lock-rank(77): dense-engine
     pub engine: std::sync::Mutex<crate::runtime::Engine>,
 }
 

@@ -83,7 +83,10 @@ impl PercentileReport {
 /// the router probes it instead of trusting a made-up number.
 #[derive(Debug, Default)]
 pub struct CostModel {
-    state: Mutex<CostState>,
+    /// Leaf lock: `predict`/`observe` touch nothing else while holding
+    /// it, so every other lock may already be held when it is taken.
+    // lint: lock-rank(80): cost-state
+    cost_state: Mutex<CostState>,
 }
 
 #[derive(Debug, Default)]
@@ -115,7 +118,7 @@ impl CostModel {
     /// when seeded, else the class-wide EWMA, else `None` (class never
     /// observed — the router must probe, not trust).
     pub fn predict(&self, bucket: usize) -> Option<f64> {
-        let st = self.state.lock().unwrap();
+        let st = self.cost_state.lock().unwrap();
         st.buckets.get(bucket).copied().flatten().or(st.global)
     }
 
@@ -124,7 +127,7 @@ impl CostModel {
         if !service_s.is_finite() || service_s < 0.0 {
             return;
         }
-        let mut guard = self.state.lock().unwrap();
+        let mut guard = self.cost_state.lock().unwrap();
         let st = &mut *guard;
         if st.buckets.len() <= bucket {
             st.buckets.resize(bucket + 1, None);
@@ -139,7 +142,7 @@ impl CostModel {
 
     /// Snapshot the EWMA state for persistence ([`CostProfile`]).
     pub fn snapshot(&self) -> CostSnapshot {
-        let st = self.state.lock().unwrap();
+        let st = self.cost_state.lock().unwrap();
         CostSnapshot { global: st.global, buckets: st.buckets.clone() }
     }
 
@@ -150,7 +153,7 @@ impl CostModel {
     /// hand-edited profile must not poison the router).
     pub fn seed(&self, snap: &CostSnapshot) {
         let ok = |v: Option<f64>| v.filter(|x| x.is_finite() && *x >= 0.0);
-        let mut guard = self.state.lock().unwrap();
+        let mut guard = self.cost_state.lock().unwrap();
         let st = &mut *guard;
         if st.global.is_none() {
             st.global = ok(snap.global);

@@ -36,6 +36,50 @@ pub mod pipeline;
 pub mod queue;
 pub mod serve;
 
+/// The coordinator-wide lock order. Every `Mutex`/`Condvar` in this module
+/// tree declares one of these ranks via a `lock-rank(N): <name>` lint
+/// directive; the static `lock-order` lint proves all nested acquisitions
+/// are strictly rank-increasing (a partial-order proof of deadlock
+/// freedom), and [`crate::util::lockcheck`] asserts the same invariant
+/// dynamically in debug builds. Gaps between values are deliberate room
+/// for future locks.
+pub mod lock_ranks {
+    /// `serve`'s run-wide first-error slot. Rank 0x0a: a worker that is
+    /// failing must be able to record the error no matter what else it
+    /// holds — so nothing may be held when it is taken, and it is ranked
+    /// below every other lock.
+    pub const FIRST_ERROR: u32 = 10;
+    /// Admission-queue interior state ([`crate::coordinator::queue`]).
+    /// Shared by the ingress, class, and side queues; queue operations
+    /// never nest, so one rank covers every instance.
+    pub const QUEUE_STATE: u32 = 20;
+    /// Sticky router stream table (stream id -> worker).
+    pub const STICKY_TABLE: u32 = 30;
+    /// Sticky router side-queue directory, probed after the table.
+    pub const STICKY_SIDES: u32 = 31;
+    /// Per-class replica slot list; the scaler holds it while appending a
+    /// scale-up event, so it ranks below [`SCALING_EVENTS`].
+    pub const CLASS_SLOTS: u32 = 40;
+    /// The run's scaling-event log.
+    pub const SCALING_EVENTS: u32 = 41;
+    /// Collected worker outputs, pushed at thread exit.
+    pub const WORKER_OUTPUTS: u32 = 45;
+    /// Autoscaler shutdown flag + condvar.
+    pub const SCALER_STOP: u32 = 50;
+    /// Shadow-capture writer shared by the workers.
+    pub const SHADOW_CAPTURE: u32 = 60;
+    /// `Swappable` backend's current-inner slot.
+    pub const SWAP_INNER: u32 = 70;
+    /// Functional backend's per-replica `ExecCtx` arena pool.
+    pub const BACKEND_CTXS: u32 = 75;
+    /// Shared delta-cache store (keyed by stream id).
+    pub const DELTA_STORE: u32 = 76;
+    /// Dense (PJRT) backend's engine handle.
+    pub const DENSE_ENGINE: u32 = 77;
+    /// Cost-model EWMA state; leaf rank — nothing is acquired under it.
+    pub const COST_STATE: u32 = 80;
+}
+
 pub use backend::{
     Backend, BackendError, Classification, DeltaStatus, DeltaStore, Dense, Functional,
     PoolClass, ReplicaPool, ReplicaSpec, Shared, Simulator, Swappable, DEFAULT_MODEL,

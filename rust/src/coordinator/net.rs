@@ -312,6 +312,8 @@ pub struct NetSource {
     limit: Option<usize>,
     emitted: usize,
     local_port: u16,
+    // lint: atomic(relaxed): shutdown latch, only ever flipped false->true;
+    // polling receive threads may observe it a poll interval late
     stop: Arc<AtomicBool>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
@@ -332,9 +334,12 @@ impl NetSource {
             .map_err(|e| IngestError::fatal(format!("udp:{port}: {e}")))?;
         let (tx, rx) = std::sync::mpsc::channel::<Vec<Item>>();
         let stop = Arc::new(AtomicBool::new(false));
+        // lint: atomic(relaxed): shutdown latch (see `NetSource::stop`)
         let stop2 = Arc::clone(&stop);
         let idle_timeout = cfg.idle_timeout;
         let handle = std::thread::spawn(move || {
+            // Lock-free thread: see the note in `serve_connection`.
+            crate::util::lockcheck::debug_assert_no_locks_held("net udp receive");
             let mut dma = DmaBuffer::new(cfg.flush_count, cfg.flush_timeout);
             let mut buf = vec![0u8; 65536];
             loop {
@@ -397,6 +402,7 @@ impl NetSource {
             .map_err(|e| IngestError::fatal(format!("tcp:{port}: {e}")))?;
         let (tx, rx) = std::sync::mpsc::channel::<Vec<Item>>();
         let stop = Arc::new(AtomicBool::new(false));
+        // lint: atomic(relaxed): shutdown latch (see `NetSource::stop`)
         let stop2 = Arc::clone(&stop);
         let idle_timeout = cfg.idle_timeout;
         let poll = cfg.poll;
@@ -503,13 +509,19 @@ fn serve_connection(
     h: usize,
     cfg: NetConfig,
     tx: Sender<Vec<Item>>,
+    // lint: atomic(relaxed): shutdown latch (see `NetSource::stop`)
     stop: Arc<AtomicBool>,
 ) {
+    // Receive threads never take coordinator locks: they speak to the
+    // runtime only through the flush channel, so a stuck worker can
+    // never wedge socket draining (asserted in debug builds).
+    crate::util::lockcheck::debug_assert_no_locks_held("net serve_connection");
     if stream.set_read_timeout(Some(cfg.poll)).is_err() {
         return;
     }
     // Process-unique connection id: the low half of this connection's
     // packets' stream identity (see `item_from_bytes`).
+    // lint: atomic(relaxed): fetch_add uniqueness needs no cross-id ordering
     static NEXT_CONN: AtomicU64 = AtomicU64::new(1);
     let conn = NEXT_CONN.fetch_add(1, Ordering::Relaxed);
     let frame_cap = PACKET_HEADER_BYTES + MAX_PACKET_EVENTS * PACKET_EVENT_BYTES;
@@ -582,6 +594,7 @@ enum ReadOutcome {
 fn read_full(
     stream: &mut TcpStream,
     buf: &mut [u8],
+    // lint: atomic(relaxed): shutdown latch (see `NetSource::stop`)
     stop: &AtomicBool,
     tick: &mut dyn FnMut() -> bool,
 ) -> ReadOutcome {

@@ -8,8 +8,9 @@
 //! ([`DropPolicy::DropOldest`], the ESST-style smart-tracker policy —
 //! fresh events supersede stale ones for a live vision stream).
 
+use crate::coordinator::lock_ranks;
+use crate::util::lockcheck::{RankedCondvar, RankedMutex};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 
 /// What to do when a request arrives and the ingress queue is full.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -57,10 +58,17 @@ pub enum TryPushError<T> {
 }
 
 /// Bounded MPMC queue with a saturation policy and drop accounting.
+///
+/// Queue operations never nest (no method acquires another queue's
+/// state), so every instance — ingress, class, and side queues — shares
+/// one rank.
 pub struct AdmissionQueue<T> {
-    state: Mutex<State<T>>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    // lint: lock-rank(20): queue-state
+    state: RankedMutex<State<T>>,
+    // lint: lock-rank(20): queue-state — waits release the state guard
+    not_empty: RankedCondvar,
+    // lint: lock-rank(20): queue-state — waits release the state guard
+    not_full: RankedCondvar,
     cap: usize,
     policy: DropPolicy,
 }
@@ -68,15 +76,19 @@ pub struct AdmissionQueue<T> {
 impl<T> AdmissionQueue<T> {
     pub fn new(cap: usize, policy: DropPolicy) -> AdmissionQueue<T> {
         AdmissionQueue {
-            state: Mutex::new(State {
-                items: VecDeque::new(),
-                closed: false,
-                aborted: false,
-                submitted: 0,
-                dropped: 0,
-            }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
+            state: RankedMutex::new(
+                lock_ranks::QUEUE_STATE,
+                "queue-state",
+                State {
+                    items: VecDeque::new(),
+                    closed: false,
+                    aborted: false,
+                    submitted: 0,
+                    dropped: 0,
+                },
+            ),
+            not_empty: RankedCondvar::new(),
+            not_full: RankedCondvar::new(),
             cap: cap.max(1),
             policy,
         }

@@ -35,12 +35,12 @@ pub(super) fn pump_source(
                 // A per-sample validation reject: the reader is still
                 // aligned and the stream continues — count it and keep
                 // pulling. One bad sample must not kill the serving run.
-                books.ingest_rejects.fetch_add(1, Ordering::SeqCst);
+                books.ingest_rejects.fetch_add(1, Ordering::Relaxed);
                 // Attribute it when the source knows the tenant (socket
                 // packets) or when there is only one.
                 let t = e.tenant().or((sx.tenants.len() == 1).then_some(0));
                 if let Some(tc) = t.and_then(|t| sx.tenants.get(t)) {
-                    tc.ingest_rejects.fetch_add(1, Ordering::SeqCst);
+                    tc.ingest_rejects.fetch_add(1, Ordering::Relaxed);
                 }
             }
             Err(e) => {
@@ -84,25 +84,25 @@ pub(super) fn repr_stage(
         // The tenant's own SLO wins over the global one.
         let deadline = tc.slo.or(slo).map(|d| sr.arrival + d);
         if deadline.is_some() {
-            books.deadline_offered.fetch_add(1, Ordering::SeqCst);
-            tc.deadline_offered.fetch_add(1, Ordering::SeqCst);
-            mc.deadline_offered.fetch_add(1, Ordering::SeqCst);
+            books.deadline_offered.fetch_add(1, Ordering::Relaxed);
+            tc.deadline_offered.fetch_add(1, Ordering::Relaxed);
+            mc.deadline_offered.fetch_add(1, Ordering::Relaxed);
         }
         // Drop already-expired requests before paying for their
         // representation — the cheapest possible shed.
         if deadline.is_some_and(|dl| Instant::now() >= dl) {
-            books.deadline_ingress.fetch_add(1, Ordering::SeqCst);
-            tc.deadline_ingress.fetch_add(1, Ordering::SeqCst);
-            mc.deadline_ingress.fetch_add(1, Ordering::SeqCst);
+            books.deadline_ingress.fetch_add(1, Ordering::Relaxed);
+            tc.deadline_ingress.fetch_add(1, Ordering::Relaxed);
+            mc.deadline_ingress.fetch_add(1, Ordering::Relaxed);
             continue;
         }
         // Weighted fair admission: a tenant at its ingress quota is shed
         // *before* the repr is built — it can saturate only its own
         // share of the queue, never starve siblings.
         if multi_tenant && tc.in_queue.load(Ordering::SeqCst) >= tc.quota {
-            books.quota_drops.fetch_add(1, Ordering::SeqCst);
-            tc.dropped.fetch_add(1, Ordering::SeqCst);
-            mc.dropped.fetch_add(1, Ordering::SeqCst);
+            books.quota_drops.fetch_add(1, Ordering::Relaxed);
+            tc.dropped.fetch_add(1, Ordering::Relaxed);
+            mc.dropped.fetch_add(1, Ordering::Relaxed);
             continue;
         }
         let map = histogram2_norm(&sr.events, w, h, clip);
@@ -130,8 +130,8 @@ pub(super) fn repr_stage(
                 // Drop-oldest made room: charge the eviction to the
                 // victim's tenant and model, and free its quota slot.
                 let vt = &sx.tenants[victim.tenant];
-                vt.dropped.fetch_add(1, Ordering::SeqCst);
-                sx.models[victim.model].dropped.fetch_add(1, Ordering::SeqCst);
+                vt.dropped.fetch_add(1, Ordering::Relaxed);
+                sx.models[victim.model].dropped.fetch_add(1, Ordering::Relaxed);
                 if multi_tenant {
                     vt.in_queue.fetch_sub(1, Ordering::SeqCst);
                 }

@@ -17,10 +17,12 @@ use crate::coordinator::metrics::{
     ClassStats, CostModel, CostProfile, Metrics, ModelStats, PercentileReport, ScalingEvent,
     TenantStats, WorkerStats,
 };
+use crate::coordinator::lock_ranks;
 use crate::coordinator::queue::{AdmissionQueue, DropPolicy};
+use crate::util::lockcheck::{RankedCondvar, RankedMutex};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The shared serving spine behind every entry point.
@@ -84,7 +86,11 @@ pub(super) fn serve_classes(
     // dropping every capture would defeat the point of asking for one.
     let capture = match (&cfg.shadow_capture, cfg.shadows.is_empty()) {
         (Some(sc), false) => match ShadowWriter::create(&sc.path, w, h, sc.max_samples) {
-            Ok(wtr) => Some(Arc::new(Mutex::new(Some(wtr)))),
+            Ok(wtr) => {
+                let mx =
+                    RankedMutex::new(lock_ranks::SHADOW_CAPTURE, "shadow-capture", Some(wtr));
+                Some(Arc::new(mx))
+            }
             Err(e) => {
                 return Err(PipelineError {
                     msg: format!("shadow capture {}: {e}", sc.path.display()),
@@ -156,7 +162,7 @@ pub(super) fn serve_classes(
                 min,
                 max: c.max.max(min),
                 grow: c.grow,
-                slots: Mutex::new(c.backends),
+                slots: RankedMutex::new(lock_ranks::CLASS_SLOTS, "class-slots", c.backends),
                 name: c.name,
                 model,
                 batch: c.batch.max(1),
@@ -171,16 +177,26 @@ pub(super) fn serve_classes(
         .iter()
         .any(|c| c.slots.lock().unwrap().iter().any(|b| b.get().supports_delta()));
     let sticky_ctx = (has_router && any_delta).then(StickyCtx::new);
-    let first_error: Mutex<Option<String>> = Mutex::new(None);
+    // lint: lock-rank(10): first-error
+    let first_error = RankedMutex::new(lock_ranks::FIRST_ERROR, "first-error", None);
     let books = IngressBooks::new();
     // Worker outputs land here (workers push at exit rather than being
     // joined for a return value, because the autoscaler spawns workers
     // the spine never held handles for).
-    let outputs_mx: Mutex<Vec<WorkerOutput>> = Mutex::new(Vec::new());
-    let scaling_events: Mutex<Vec<ScalingEvent>> = Mutex::new(Vec::new());
+    // lint: lock-rank(45): worker-outputs
+    let outputs_mx =
+        RankedMutex::new(lock_ranks::WORKER_OUTPUTS, "worker-outputs", Vec::new());
+    // lint: lock-rank(41): scaling-events
+    let scaling_events =
+        RankedMutex::new(lock_ranks::SCALING_EVENTS, "scaling-events", Vec::new());
     // Autoscaler shutdown latch: flag + condvar so the controller can be
     // woken mid-sleep once the stream has fully drained.
-    let scaler_stop: (Mutex<bool>, Condvar) = (Mutex::new(false), Condvar::new());
+    // lint: lock-rank(50): scaler-stop
+    let scaler_stop = (
+        RankedMutex::new(lock_ranks::SCALER_STOP, "scaler-stop", false),
+        RankedCondvar::new(),
+    );
+    // lint: atomic(relaxed): fetch_add id mint — uniqueness needs no order
     let next_wid = AtomicUsize::new(classes.iter().map(|c| c.min).sum());
     let (tx_ev, rx_ev) = sync_channel::<SourcedRequest>(cfg.queue_depth.max(1));
     // Every stage borrows the same run-wide context.
@@ -212,7 +228,7 @@ pub(super) fn serve_classes(
 
         // Stage 4: per-class accelerator worker pools — the base (min)
         // replicas; the autoscaler below may spawn more into this scope.
-        let outputs_ref = &outputs_mx;
+        let outputs_mx = &outputs_mx;
         let mut handles = Vec::new();
         let mut base_wid = 0usize;
         for (ci, class) in classes.iter().enumerate() {
@@ -233,7 +249,7 @@ pub(super) fn serve_classes(
                     let queue = if has_router { &class.queue } else { sx.ingress };
                     let out =
                         worker_loop(wid, ci, class, queue, has_router, backend.get(), side, sx);
-                    outputs_ref.lock().unwrap().push(out);
+                    outputs_mx.lock().unwrap().push(out);
                 }));
             }
         }
@@ -248,7 +264,7 @@ pub(super) fn serve_classes(
             s.spawn(move || {
                 run_autoscaler(
                     &auto, s, sx, has_router, t_start, stop_ref, events_ref, next_wid_ref,
-                    outputs_ref, depth,
+                    outputs_mx, depth,
                 )
             })
         });
@@ -265,9 +281,10 @@ pub(super) fn serve_classes(
         // exit on their own (queues are closed) and are joined by the
         // scope before `outputs_mx` is read below.
         {
-            let (lock, cv) = &scaler_stop;
-            *lock.lock().unwrap() = true;
-            cv.notify_all();
+            // lint: lock-rank(50): scaler-stop
+            let (stop_mx, stop_cv) = &scaler_stop;
+            *stop_mx.lock().unwrap() = true;
+            stop_cv.notify_all();
         }
         if let Some(h) = controller {
             join_noting(h.join(), "autoscaler", &first_error);
@@ -278,8 +295,8 @@ pub(super) fn serve_classes(
     // what was actually appended. Best-effort — a capture that cannot
     // update its header still holds its samples, and the run result (and
     // its disagreement books) stand either way.
-    if let Some(cap) = &capture {
-        if let Some(wtr) = cap.lock().unwrap_or_else(|e| e.into_inner()).take() {
+    if let Some(capture) = &capture {
+        if let Some(wtr) = capture.lock().unwrap_or_else(|e| e.into_inner()).take() {
             let _ = wtr.finalize();
         }
     }
@@ -292,12 +309,14 @@ pub(super) fn serve_classes(
     let processed: usize = outputs.iter().map(|o| o.records.len()).sum();
     // Deadline sheds past admission (router + worker pop) — these were
     // submitted but intentionally never classified.
+    // Relaxed loads throughout finalization: the thread scope has joined,
+    // so every stage write happens-before these reads regardless of order.
     let deadline_shed: usize =
-        classes.iter().map(|c| c.deadline_drops.load(Ordering::SeqCst)).sum();
+        classes.iter().map(|c| c.deadline_drops.load(Ordering::Relaxed)).sum();
     let in_flight = submitted.saturating_sub(dropped + processed + deadline_shed);
     // Admission sheds: queue evictions plus over-quota drops (the latter
     // never occupied a slot, so they are outside the queue's own books).
-    let shed = dropped + books.quota_drops.load(Ordering::SeqCst);
+    let shed = dropped + books.quota_drops.load(Ordering::Relaxed);
 
     if let Some(msg) = first_error.into_inner().unwrap_or_else(|e| e.into_inner()) {
         return Err(PipelineError { msg, completed: processed, in_flight, dropped: shed });
@@ -312,10 +331,10 @@ pub(super) fn serve_classes(
         started: t_start,
         dropped: shed,
         wall_s,
-        deadline_offered: books.deadline_offered.load(Ordering::SeqCst),
-        deadline_ingress: books.deadline_ingress.load(Ordering::SeqCst),
+        deadline_offered: books.deadline_offered.load(Ordering::Relaxed),
+        deadline_ingress: books.deadline_ingress.load(Ordering::Relaxed),
         deadline_router: deadline_shed,
-        ingest_rejects: books.ingest_rejects.load(Ordering::SeqCst),
+        ingest_rejects: books.ingest_rejects.load(Ordering::Relaxed),
         scaling_events: scaling_events.into_inner().unwrap_or_else(|e| e.into_inner()),
         // What `--cost-profile` rewrites at shutdown: every class's final
         // EWMA state (seeded knowledge + everything learned this run).
@@ -332,10 +351,10 @@ pub(super) fn serve_classes(
         metrics.delta.merge(&o.delta);
     }
     if let Some(sc) = &sticky_ctx {
-        metrics.delta.sticky_hits = sc.hits.load(Ordering::SeqCst);
-        metrics.delta.sticky_cold = sc.miss_cold.load(Ordering::SeqCst);
-        metrics.delta.sticky_retired = sc.miss_retired.load(Ordering::SeqCst);
-        metrics.delta.sticky_capacity = sc.miss_capacity.load(Ordering::SeqCst);
+        metrics.delta.sticky_hits = sc.hits.load(Ordering::Relaxed);
+        metrics.delta.sticky_cold = sc.miss_cold.load(Ordering::Relaxed);
+        metrics.delta.sticky_retired = sc.miss_retired.load(Ordering::Relaxed);
+        metrics.delta.sticky_capacity = sc.miss_capacity.load(Ordering::Relaxed);
     }
     let mut predictions = Vec::with_capacity(processed);
     let mut t_served = vec![0usize; tenants.len()];
@@ -390,13 +409,13 @@ pub(super) fn serve_classes(
             weight: tc.weight,
             quota: tc.quota,
             served: t_served[i],
-            dropped: tc.dropped.load(Ordering::SeqCst),
-            deadline_offered: tc.deadline_offered.load(Ordering::SeqCst),
-            deadline_ingress: tc.deadline_ingress.load(Ordering::SeqCst),
-            deadline_router: tc.deadline_router.load(Ordering::SeqCst),
+            dropped: tc.dropped.load(Ordering::Relaxed),
+            deadline_offered: tc.deadline_offered.load(Ordering::Relaxed),
+            deadline_ingress: tc.deadline_ingress.load(Ordering::Relaxed),
+            deadline_router: tc.deadline_router.load(Ordering::Relaxed),
             deadline_met: t_met[i],
             deadline_missed: t_missed[i],
-            ingest_rejects: tc.ingest_rejects.load(Ordering::SeqCst),
+            ingest_rejects: tc.ingest_rejects.load(Ordering::Relaxed),
         })
         .collect();
     // Per-model rollup: the fleet books. Every run gets one (a
@@ -413,19 +432,19 @@ pub(super) fn serve_classes(
             classes: classes.iter().filter(|c| c.model == i).count(),
             served: m_served[i],
             correct: m_correct[i],
-            dropped: mc.dropped.load(Ordering::SeqCst),
-            deadline_offered: mc.deadline_offered.load(Ordering::SeqCst),
-            deadline_ingress: mc.deadline_ingress.load(Ordering::SeqCst),
-            deadline_router: mc.deadline_router.load(Ordering::SeqCst),
-            shadow_mirrored: mc.shadow.as_ref().map_or(0, |s| s.mirrored.load(Ordering::SeqCst)),
+            dropped: mc.dropped.load(Ordering::Relaxed),
+            deadline_offered: mc.deadline_offered.load(Ordering::Relaxed),
+            deadline_ingress: mc.deadline_ingress.load(Ordering::Relaxed),
+            deadline_router: mc.deadline_router.load(Ordering::Relaxed),
+            shadow_mirrored: mc.shadow.as_ref().map_or(0, |s| s.mirrored.load(Ordering::Relaxed)),
             shadow_disagreements: mc
                 .shadow
                 .as_ref()
-                .map_or(0, |s| s.disagreements.load(Ordering::SeqCst)),
+                .map_or(0, |s| s.disagreements.load(Ordering::Relaxed)),
             shadow_capture_drops: mc
                 .shadow
                 .as_ref()
-                .map_or(0, |s| s.capture_drops.load(Ordering::SeqCst)),
+                .map_or(0, |s| s.capture_drops.load(Ordering::Relaxed)),
         })
         .collect();
     // Integrated active-replica seconds per class, reconstructed from the
@@ -483,7 +502,7 @@ pub(super) fn serve_classes(
             replicas: class.active.load(Ordering::SeqCst),
             replicas_min: class.min,
             replicas_max: class.max,
-            replicas_peak: class.peak.load(Ordering::SeqCst),
+            replicas_peak: class.peak.load(Ordering::Relaxed),
             replica_s: replica_secs[ci],
             served,
             batches,
@@ -492,7 +511,7 @@ pub(super) fn serve_classes(
             service: PercentileReport::from_samples(&service),
             cost_err: if err_n > 0 { err_sum / err_n as f64 } else { f64::NAN },
             unseeded,
-            deadline_drops: class.deadline_drops.load(Ordering::SeqCst),
+            deadline_drops: class.deadline_drops.load(Ordering::Relaxed),
         });
     }
     Ok(ServerResult { metrics, predictions })

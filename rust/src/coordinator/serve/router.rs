@@ -115,9 +115,9 @@ pub(super) fn router_stage(sx: &SharedCtx<'_, '_>) {
                 now + Duration::from_secs_f64(d.completion_s.clamp(0.0, 1e6))
             });
             if now >= dl || predicted_done.is_some_and(|t| t > dl) {
-                sx.classes[d.class].deadline_drops.fetch_add(1, Ordering::SeqCst);
-                sx.tenants[req.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
-                sx.models[req.model].deadline_router.fetch_add(1, Ordering::SeqCst);
+                sx.classes[d.class].deadline_drops.fetch_add(1, Ordering::Relaxed);
+                sx.tenants[req.tenant].deadline_router.fetch_add(1, Ordering::Relaxed);
+                sx.models[req.model].deadline_router.fetch_add(1, Ordering::Relaxed);
                 continue;
             }
         }

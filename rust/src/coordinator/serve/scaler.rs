@@ -9,8 +9,9 @@ use super::workers::worker_loop;
 use super::AutoscaleConfig;
 use crate::coordinator::metrics::{ScalingEvent, SlidingWindow};
 use crate::coordinator::queue::{AdmissionQueue, DropPolicy};
+use crate::util::lockcheck::{RankedCondvar, RankedMutex};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The autoscaler controller loop: every `auto.interval` it samples each
@@ -38,10 +39,14 @@ pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
     sx: &'scope SharedCtx<'env, 'a>,
     has_router: bool,
     t_start: Instant,
-    stop: &'scope (Mutex<bool>, Condvar),
-    events: &'scope Mutex<Vec<ScalingEvent>>,
+    // lint: lock-rank(50): scaler-stop
+    stop: &'scope (RankedMutex<bool>, RankedCondvar),
+    // lint: lock-rank(41): scaling-events
+    scaling_events: &'scope RankedMutex<Vec<ScalingEvent>>,
+    // lint: atomic(relaxed): fetch_add id mint — uniqueness needs no order
     next_wid: &'scope AtomicUsize,
-    outputs: &'scope Mutex<Vec<WorkerOutput>>,
+    // lint: lock-rank(45): worker-outputs
+    outputs_mx: &'scope RankedMutex<Vec<WorkerOutput>>,
     depth: usize,
 ) {
     let classes = sx.classes;
@@ -50,7 +55,7 @@ pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
     let mut busy_w: Vec<SlidingWindow> =
         classes.iter().map(|_| SlidingWindow::new(auto.window)).collect();
     let push_event = |class: &ClassCtx<'_>, from: usize, to: usize, reason: String| {
-        events.lock().unwrap().push(ScalingEvent {
+        scaling_events.lock().unwrap().push(ScalingEvent {
             at_s: t_start.elapsed().as_secs_f64(),
             class: class.name.clone(),
             from,
@@ -61,12 +66,15 @@ pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
     loop {
         // Sleep one tick — or wake immediately when the spine stops us.
         {
-            let (lock, cv) = stop;
-            let mut stopped = lock.lock().unwrap();
+            // lint: lock-rank(50): scaler-stop
+            let (stop_mx, stop_cv) = stop;
+            let mut stopped = stop_mx.lock().unwrap();
             if !*stopped {
                 // lint:allow(panic): condvar poisoning is the lock-poisoning
                 // idiom — holders never panic while flipping the stop flag
-                stopped = cv.wait_timeout(stopped, auto.interval).unwrap().0;
+                // lint:allow(lock-span): a condvar wait releases the guard
+                // while parked — holding it across the wait is the idiom
+                stopped = stop_cv.wait_timeout(stopped, auto.interval).unwrap().0;
             }
             if *stopped {
                 return;
@@ -75,8 +83,8 @@ pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
         let now = Instant::now();
         for (ci, class) in classes.iter().enumerate() {
             let active = class.active.load(Ordering::SeqCst);
-            drops_w[ci].record(now, class.deadline_drops.load(Ordering::SeqCst) as u64);
-            busy_w[ci].record(now, class.busy_us.load(Ordering::SeqCst));
+            drops_w[ci].record(now, class.deadline_drops.load(Ordering::Relaxed) as u64);
+            busy_w[ci].record(now, class.busy_us.load(Ordering::Relaxed));
             let drop_rate = drops_w[ci].rate();
             let span = busy_w[ci].span_secs();
             let util = if span > 0.0 && active > 0 {
@@ -126,13 +134,15 @@ pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
                 if let Some(backend) = backend {
                     // Publish the capacity before the worker exists so its
                     // very first retire-token check cannot see a stale
-                    // count; the router immediately routes against it.
-                    class.active.store(active + 1, Ordering::SeqCst);
-                    class.peak.fetch_max(active + 1, Ordering::SeqCst);
+                    // count; the router immediately routes against it. An
+                    // RMW (not load+store) so a concurrent count change can
+                    // never be silently overwritten.
+                    let grown = class.active.fetch_add(1, Ordering::SeqCst) + 1;
+                    class.peak.fetch_max(grown, Ordering::Relaxed);
                     push_event(
                         class,
-                        active,
-                        active + 1,
+                        grown - 1,
+                        grown,
                         if drop_rate > 0.0 {
                             format!("deadline-drop rate {drop_rate:.1}/s in window")
                         } else {
@@ -142,7 +152,7 @@ pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
                             )
                         },
                     );
-                    let wid = next_wid.fetch_add(1, Ordering::SeqCst);
+                    let wid = next_wid.fetch_add(1, Ordering::Relaxed);
                     let queue = if has_router { &class.queue } else { sx.ingress };
                     // A delta-capable replica joins the sticky target
                     // list before its worker runs: streams it serves can
@@ -166,7 +176,7 @@ pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
                             side,
                             sx,
                         );
-                        outputs.lock().unwrap().push(out);
+                        outputs_mx.lock().unwrap().push(out);
                     });
                 }
             } else if !pressured
@@ -178,12 +188,13 @@ pub(super) fn run_autoscaler<'scope, 'env: 'scope, 'a: 'scope>(
                 // Scale down: shrink the advertised capacity first so the
                 // router stops counting the leaving replica, then deposit
                 // the retire token and wake any parked worker to claim it.
-                class.active.store(active - 1, Ordering::SeqCst);
+                // RMW for the same reason as scale-up: no lost-update window.
+                let shrunk = class.active.fetch_sub(1, Ordering::SeqCst) - 1;
                 class.retire.fetch_add(1, Ordering::SeqCst);
                 push_event(
                     class,
-                    active,
-                    active - 1,
+                    shrunk + 1,
+                    shrunk,
                     format!("idle: backlog 0, util {:.0}% < {:.0}%", util * 100.0,
                         auto.low_util * 100.0),
                 );

@@ -9,15 +9,17 @@
 //! lives in the parent module.
 
 use crate::coordinator::backend::{Backend, PoolClass};
+use crate::coordinator::lock_ranks;
 use crate::coordinator::metrics::{CostModel, DeltaMetrics, RequestTiming};
 use crate::coordinator::queue::{AdmissionQueue, TryPushError};
 use crate::events::{io, Event};
 use crate::sparse::SparseMap;
+use crate::util::lockcheck::RankedMutex;
 use std::collections::HashMap;
 use std::io::{Seek, SeekFrom, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// An admitted request: built by the repr stage, (optionally) routed, then
@@ -109,12 +111,16 @@ pub(super) struct ClassCtx<'a> {
     /// Instantiated replica backends, indexed by slot. Grows monotonically
     /// (scale-up instantiates lazily, scale-down keeps the warm backend
     /// for re-activation); only slots `< active` serve.
-    pub(super) slots: Mutex<Vec<BackendRef<'a>>>,
+    // lint: lock-rank(40): class-slots
+    pub(super) slots: RankedMutex<Vec<BackendRef<'a>>>,
     /// Active replica count — the scheduling truth the router divides
     /// backlogs by and workers compare their slot index against. Always
     /// within `[min, max]`.
+    // lint: atomic(seqcst): scheduling truth; scaler, router, and workers
+    // must agree on the count at every step boundary
     pub(super) active: AtomicUsize,
     /// Highest `active` value seen (for the report).
+    // lint: atomic(relaxed): report-only high-water mark
     pub(super) peak: AtomicUsize,
     /// Lower replica bound: the controller never takes `active` below it,
     /// and retire tokens are only minted on scale-down, so the class
@@ -129,19 +135,24 @@ pub(super) struct ClassCtx<'a> {
     /// its in-flight batch. Token-based (rather than slot-indexed)
     /// retirement makes re-growth race-free: there is never a moment
     /// where a re-activated slot is served twice.
+    // lint: atomic(seqcst): CAS-claimed token protocol (`take_retire_token`)
     pub(super) retire: AtomicUsize,
     /// Per-class sub-queue (always blocking — drops are global-only).
     pub(super) queue: AdmissionQueue<Routed>,
     /// Requests routed here and not yet classified (queued + in service).
+    // lint: atomic(seqcst): conservation counter — router feasibility and
+    // drain decisions must see pop decrements in order
     pub(super) backlog: AtomicUsize,
     /// Observed-service-time predictor the router consults.
     pub(super) cost: CostModel,
     /// Deadline sheds attributed to this class: router-predicted
     /// infeasibility plus pop-time expiries.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_drops: AtomicUsize,
     /// Cumulative accelerator-busy microseconds across the class's
     /// replicas, updated per visit — the autoscaler's windowed
     /// utilization input.
+    // lint: atomic(relaxed): sampling input; the scaler tolerates lag
     pub(super) busy_us: AtomicU64,
 }
 
@@ -183,21 +194,27 @@ pub(super) struct Meta {
 /// served correctly — it just pays cache traffic it could have avoided.
 pub(super) struct StickyCtx {
     /// stream id → worker that served the stream last.
-    pub(super) table: Mutex<HashMap<u64, usize>>,
+    // lint: lock-rank(30): sticky-table
+    pub(super) table: RankedMutex<HashMap<u64, usize>>,
     /// Live sticky targets: `(worker id, class index, side queue)`. A
     /// retiring worker deregisters itself before draining its remainder.
-    pub(super) sides: Mutex<Vec<(usize, usize, Arc<AdmissionQueue<Routed>>)>>,
+    // lint: lock-rank(31): sticky-sides
+    pub(super) sides: RankedMutex<Vec<(usize, usize, Arc<AdmissionQueue<Routed>>)>>,
+    // lint: atomic(relaxed): hit/miss tallies, read after the scope joins
     pub(super) hits: AtomicUsize,
+    // lint: atomic(relaxed): hit/miss tallies, read after the scope joins
     pub(super) miss_cold: AtomicUsize,
+    // lint: atomic(relaxed): hit/miss tallies, read after the scope joins
     pub(super) miss_retired: AtomicUsize,
+    // lint: atomic(relaxed): hit/miss tallies, read after the scope joins
     pub(super) miss_capacity: AtomicUsize,
 }
 
 impl StickyCtx {
     pub(super) fn new() -> StickyCtx {
         StickyCtx {
-            table: Mutex::new(HashMap::new()),
-            sides: Mutex::new(Vec::new()),
+            table: RankedMutex::new(lock_ranks::STICKY_TABLE, "sticky-table", HashMap::new()),
+            sides: RankedMutex::new(lock_ranks::STICKY_SIDES, "sticky-sides", Vec::new()),
             hits: AtomicUsize::new(0),
             miss_cold: AtomicUsize::new(0),
             miss_retired: AtomicUsize::new(0),
@@ -231,7 +248,7 @@ impl StickyCtx {
             return Some(req);
         };
         let Some(wid) = self.table.lock().unwrap().get(&stream).copied() else {
-            self.miss_cold.fetch_add(1, Ordering::SeqCst);
+            self.miss_cold.fetch_add(1, Ordering::Relaxed);
             return Some(req);
         };
         let entry = self
@@ -244,14 +261,14 @@ impl StickyCtx {
         let Some((ci, side)) = entry else {
             // The worker retired since it last served this stream.
             self.table.lock().unwrap().remove(&stream);
-            self.miss_retired.fetch_add(1, Ordering::SeqCst);
+            self.miss_retired.fetch_add(1, Ordering::Relaxed);
             return Some(req);
         };
         if classes[ci].model != req.model {
             // A mixed-traffic stream hopped models: its cached window
             // lives behind another model's backend, useless here — and
             // the model filter is correctness, not a hint.
-            self.miss_cold.fetch_add(1, Ordering::SeqCst);
+            self.miss_cold.fetch_add(1, Ordering::Relaxed);
             return Some(req);
         }
         // A sticky delivery is not a cost-model prediction: NaN keeps it
@@ -264,7 +281,7 @@ impl StickyCtx {
         classes[ci].backlog.fetch_add(1, Ordering::SeqCst);
         match side.try_push(req) {
             Ok(()) => {
-                self.hits.fetch_add(1, Ordering::SeqCst);
+                self.hits.fetch_add(1, Ordering::Relaxed);
                 // The target may be parked on an empty class queue —
                 // unpark it so its cancellation predicate sees side work.
                 classes[ci].queue.wake_consumers();
@@ -276,12 +293,12 @@ impl StickyCtx {
                     // Bounded stickiness: a hot worker must not build an
                     // unbounded private backlog while siblings idle.
                     TryPushError::Full(r) => {
-                        self.miss_capacity.fetch_add(1, Ordering::SeqCst);
+                        self.miss_capacity.fetch_add(1, Ordering::Relaxed);
                         r
                     }
                     TryPushError::Closed(r) => {
                         self.table.lock().unwrap().remove(&stream);
-                        self.miss_retired.fetch_add(1, Ordering::SeqCst);
+                        self.miss_retired.fetch_add(1, Ordering::Relaxed);
                         r
                     }
                 };
@@ -307,14 +324,21 @@ pub(super) struct TenantCtx {
     pub(super) slo: Option<Duration>,
     /// This tenant's requests currently in the ingress queue (maintained
     /// only in multi-tenant runs — the single-tenant path never reads it).
+    // lint: atomic(seqcst): conservation counter — quota admission must see
+    // router decrements in order or occupancy drifts negative
     pub(super) in_queue: AtomicUsize,
     /// Admission sheds: drop-oldest evictions + over-quota arrivals.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) dropped: AtomicUsize,
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_offered: AtomicUsize,
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_ingress: AtomicUsize,
     /// Router sheds + worker-pop expiries.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_router: AtomicUsize,
     /// Recoverable source rejects attributed to this tenant.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) ingest_rejects: AtomicUsize,
 }
 
@@ -349,10 +373,14 @@ impl TenantCtx {
 pub(super) struct ModelCtx {
     pub(super) name: String,
     /// Admission sheds: drop-oldest evictions + over-quota arrivals.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) dropped: AtomicUsize,
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_offered: AtomicUsize,
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_ingress: AtomicUsize,
     /// Router sheds + worker-pop expiries.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_router: AtomicUsize,
     /// Shadow deployment mirrored onto this model, when configured.
     pub(super) shadow: Option<ShadowCtx>,
@@ -381,15 +409,21 @@ pub(super) struct ShadowCtx {
     pub(super) candidate: Arc<dyn Backend>,
     pub(super) fraction: f64,
     /// Served requests seen so far (the mirror schedule's clock).
+    // lint: atomic(relaxed): fetch_add schedule clock — per-tick atomicity
+    // is what matters, not cross-thread order
     pub(super) counter: AtomicUsize,
+    // lint: atomic(relaxed): conformance tally, read after the scope joins
     pub(super) mirrored: AtomicUsize,
+    // lint: atomic(relaxed): conformance tally, read after the scope joins
     pub(super) disagreements: AtomicUsize,
     /// Disagreeing samples that could not land in the capture (cap
     /// reached, write error, or raw events no longer available).
+    // lint: atomic(relaxed): conformance tally, read after the scope joins
     pub(super) capture_drops: AtomicUsize,
     /// The capture writer, shared across every shadowed model (one
     /// `--shadow-capture` path per run); `None` when capture is off.
-    pub(super) capture: Option<Arc<Mutex<Option<ShadowWriter>>>>,
+    // lint: lock-rank(60): shadow-capture
+    pub(super) capture: Option<Arc<RankedMutex<Option<ShadowWriter>>>>,
 }
 
 /// Appends shadow-disagreement samples to a replayable `.esda` capture.
@@ -459,12 +493,16 @@ impl ShadowWriter {
 /// stages write outside the ingress queue's own books.
 pub(super) struct IngressBooks {
     /// Requests that arrived with a deadline.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_offered: AtomicUsize,
     /// Already-expired arrivals dropped before their repr was built.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) deadline_ingress: AtomicUsize,
     /// Over-quota tenant arrivals shed before admission.
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) quota_drops: AtomicUsize,
     /// Recoverable source rejects (the stream skipped past them).
+    // lint: atomic(relaxed): shed tally, read after the scope joins
     pub(super) ingest_rejects: AtomicUsize,
 }
 
@@ -489,16 +527,18 @@ pub(super) struct SharedCtx<'env, 'a> {
     pub(super) models: &'env [ModelCtx],
     pub(super) ingress: &'env AdmissionQueue<Routed>,
     pub(super) sticky: Option<&'env StickyCtx>,
-    pub(super) first_error: &'env Mutex<Option<String>>,
+    // lint: lock-rank(10): first-error
+    pub(super) first_error: &'env RankedMutex<Option<String>>,
 }
 
 /// Claim one pending retire token (false when none are pending). CAS
 /// loop so concurrent claimers never double-spend a token — each
 /// scale-down step retires exactly one worker.
-pub(super) fn take_retire_token(tokens: &AtomicUsize) -> bool {
-    let mut t = tokens.load(Ordering::SeqCst);
+// lint: atomic(seqcst): CAS-claimed token protocol (`ClassCtx::retire`)
+pub(super) fn take_retire_token(retire: &AtomicUsize) -> bool {
+    let mut t = retire.load(Ordering::SeqCst);
     while t > 0 {
-        match tokens.compare_exchange(t, t - 1, Ordering::SeqCst, Ordering::SeqCst) {
+        match retire.compare_exchange(t, t - 1, Ordering::SeqCst, Ordering::SeqCst) {
             Ok(_) => return true,
             Err(cur) => t = cur,
         }
@@ -523,7 +563,8 @@ pub(super) struct WorkerOutput {
 pub(super) fn join_noting<T>(
     r: std::thread::Result<T>,
     what: &str,
-    first_error: &Mutex<Option<String>>,
+    // lint: lock-rank(10): first-error
+    first_error: &RankedMutex<Option<String>>,
 ) {
     if r.is_err() {
         let msg = format!("{what} thread panicked");

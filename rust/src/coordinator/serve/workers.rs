@@ -34,13 +34,13 @@ fn shadow_compare(
 ) {
     // floor((k+1)·f) > floor(k·f) fires on exactly a `fraction` share of
     // the counter sequence — deterministic, RNG-free, burst-insensitive.
-    let k = sh.counter.fetch_add(1, Ordering::SeqCst);
+    let k = sh.counter.fetch_add(1, Ordering::Relaxed);
     let f = sh.fraction;
     let take = ((k + 1) as f64 * f).floor() > (k as f64 * f).floor();
     if !take {
         return;
     }
-    sh.mirrored.fetch_add(1, Ordering::SeqCst);
+    sh.mirrored.fetch_add(1, Ordering::Relaxed);
     let agree = match sh.candidate.classify(map) {
         Ok(c) => c.pred == primary_pred,
         Err(_) => false,
@@ -48,14 +48,14 @@ fn shadow_compare(
     if agree {
         return;
     }
-    sh.disagreements.fetch_add(1, Ordering::SeqCst);
-    if let Some(cap) = &sh.capture {
-        let written = match (events, cap.lock().unwrap().as_mut()) {
+    sh.disagreements.fetch_add(1, Ordering::Relaxed);
+    if let Some(capture) = &sh.capture {
+        let written = match (events, capture.lock().unwrap().as_mut()) {
             (Some(evs), Some(w)) => w.append(u32::try_from(label).unwrap_or(u32::MAX), evs),
             _ => false,
         };
         if !written {
-            sh.capture_drops.fetch_add(1, Ordering::SeqCst);
+            sh.capture_drops.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -150,8 +150,8 @@ pub(super) fn worker_loop(
                 |r| {
                     let ex = r.expired(Instant::now());
                     if ex {
-                        sx.tenants[r.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
-                        sx.models[r.model].deadline_router.fetch_add(1, Ordering::SeqCst);
+                        sx.tenants[r.tenant].deadline_router.fetch_add(1, Ordering::Relaxed);
+                        sx.models[r.model].deadline_router.fetch_add(1, Ordering::Relaxed);
                     }
                     ex
                 },
@@ -160,7 +160,7 @@ pub(super) fn worker_loop(
             if side_expired > 0 {
                 // Side queues exist only under a router: the class books
                 // always apply.
-                class.deadline_drops.fetch_add(side_expired, Ordering::SeqCst);
+                class.deadline_drops.fetch_add(side_expired, Ordering::Relaxed);
                 class.backlog.fetch_sub(side_expired, Ordering::SeqCst);
             }
         }
@@ -191,8 +191,8 @@ pub(super) fn worker_loop(
                         // here, where the item is still visible; in the
                         // routerless path the queue *is* the ingress, so
                         // the expiry also frees the tenant's quota slot.
-                        sx.tenants[r.tenant].deadline_router.fetch_add(1, Ordering::SeqCst);
-                        sx.models[r.model].deadline_router.fetch_add(1, Ordering::SeqCst);
+                        sx.tenants[r.tenant].deadline_router.fetch_add(1, Ordering::Relaxed);
+                        sx.models[r.model].deadline_router.fetch_add(1, Ordering::Relaxed);
                         if !routed && multi_tenant {
                             sx.tenants[r.tenant].in_queue.fetch_sub(1, Ordering::SeqCst);
                         }
@@ -202,7 +202,7 @@ pub(super) fn worker_loop(
                 || class.retire.load(Ordering::SeqCst) > 0 || side_pending(),
             );
             if expired > 0 {
-                class.deadline_drops.fetch_add(expired, Ordering::SeqCst);
+                class.deadline_drops.fetch_add(expired, Ordering::Relaxed);
                 if routed {
                     class.backlog.fetch_sub(expired, Ordering::SeqCst);
                 }
@@ -306,7 +306,7 @@ pub(super) fn worker_loop(
         busy_s += visit_s;
         // Class-level busy books feed the autoscaler's windowed
         // utilization (cheap: one atomic add per accelerator visit).
-        class.busy_us.fetch_add((visit_s * 1e6) as u64, Ordering::SeqCst);
+        class.busy_us.fetch_add((visit_s * 1e6) as u64, Ordering::Relaxed);
         batch_sizes.push(n);
         // The visit is one accelerator pass; attribute its cost evenly
         // across the requests it served, and — when a router is making

@@ -1,0 +1,724 @@
+//! Concurrency-discipline rules for `coordinator/`: **lock-order**,
+//! **lock-span**, **atomic-rmw**, and **atomic-ordering**.
+//!
+//! The serving runtime is 5+ thread roles (ingress pump, router, workers,
+//! scaler, net receive threads) sharing mutexes, condvars, and atomics
+//! across the coordinator tree — exactly the regime where a lock-order
+//! inversion or a misordered atomic silently corrupts the conservation
+//! identities. These rules make the synchronization contracts textual and
+//! machine-checked:
+//!
+//! - **lock-order** — every `Mutex`/`Condvar`/`RwLock` declaration in
+//!   `coordinator/` carries a `// lint: lock-rank(N): <name>` directive
+//!   (ranks live in `coordinator::lock_ranks`). The scanner then tracks
+//!   nested `.lock()` acquisitions per function body by brace depth and
+//!   flags any acquisition whose rank is not strictly above every rank
+//!   already held — a static partial-order proof of deadlock freedom.
+//!   `util::lockcheck::RankedMutex` asserts the same invariant
+//!   dynamically in debug builds.
+//! - **lock-span** — flags a bound guard lexically alive across a
+//!   blocking call (`recv`, `join`, `sleep`, `wait_timeout`,
+//!   `pop_batch*`, `classify*`). The condvar sleep idiom is legitimate
+//!   (waiting *is* the point of releasing the lock) and is annotated
+//!   `// lint:allow(lock-span): <reason>` at its one site.
+//! - **atomic-rmw** — flags `.load(..)` followed by `.store(..)` on the
+//!   same declared atomic field within one function: a lost-update
+//!   window that must be a `fetch_*`/`compare_exchange` (like the
+//!   retire-token CAS).
+//! - **atomic-ordering** — every atomic field declares its contract via
+//!   `// lint: atomic(relaxed|seqcst): <reason>`; any use of the field
+//!   with a different `Ordering` is a finding, so a field's memory-order
+//!   story lives in exactly one place.
+//!
+//! The declaration registry is ident-keyed and cross-file (a field
+//! declared in `serve/state.rs` is recognized at its `serve/workers.rs`
+//! use sites), which in turn requires every registered ident to mean one
+//! lock tree-wide — the rules flag conflicting re-declarations.
+
+use super::scan::{Scanned, ScannedLine};
+use super::{emit, is_ident, token_positions, word_in, Finding, SourceFile};
+use std::collections::HashMap;
+
+/// Tokens that make a line a lock *declaration* (field, local, static,
+/// or parameter). `Mutex<` needs the `<` so constructor calls
+/// (`Mutex::new`) and doc prose don't trigger; the condvar types are
+/// filtered against a following `::` instead.
+const LOCK_DECL_TOKENS: [&str; 5] =
+    ["RankedMutex<", "Mutex<", "RwLock<", "RankedCondvar", "Condvar"];
+
+/// Calls that can block for unbounded time: holding a lock across one
+/// stalls every sibling contender (`.wait(` is deliberately absent —
+/// a condvar wait *releases* the guard it is handed).
+const BLOCKING_TOKENS: [&str; 6] =
+    [".recv(", ".join(", "sleep(", ".wait_timeout(", ".pop_batch", ".classify"];
+
+/// Atomic integer/bool types whose declarations need an ordering
+/// contract.
+const ATOMIC_TYPES: [&str; 6] =
+    ["AtomicBool", "AtomicUsize", "AtomicU64", "AtomicU32", "AtomicI64", "AtomicIsize"];
+
+/// Method tokens that read or write an atomic.
+const ATOMIC_OPS: [&str; 11] = [
+    ".load(",
+    ".store(",
+    ".fetch_add(",
+    ".fetch_sub(",
+    ".fetch_max(",
+    ".fetch_min(",
+    ".fetch_or(",
+    ".fetch_and(",
+    ".compare_exchange(",
+    ".compare_exchange_weak(",
+    ".swap(",
+];
+
+const ORDERING_WORDS: [&str; 5] = ["SeqCst", "Relaxed", "Acquire", "Release", "AcqRel"];
+
+/// A lock ident's declared place in the global order.
+struct LockDecl {
+    rank: u32,
+    file: String,
+    /// 1-based declaration line.
+    line: usize,
+}
+
+/// An atomic ident's declared ordering contract.
+struct AtomicDecl {
+    seqcst: bool,
+    file: String,
+    line: usize,
+}
+
+#[derive(Default)]
+struct Registry {
+    locks: HashMap<String, LockDecl>,
+    atomics: HashMap<String, AtomicDecl>,
+}
+
+/// Do these rules apply to `rel` at all?
+fn scoped(rel: &str) -> bool {
+    rel.starts_with("coordinator/")
+}
+
+/// Entry point, called by `lint_sources` with every scanned file.
+pub(super) fn rules(scanned: &[(&SourceFile, Scanned)], out: &mut Vec<Finding>) {
+    let mut reg = Registry::default();
+    for (f, s) in scanned {
+        if scoped(&f.rel_path) {
+            register_and_check_decls(f, s, &mut reg, out);
+        }
+    }
+    for (f, s) in scanned {
+        if scoped(&f.rel_path) {
+            walk_file(f, s, &reg, out);
+        }
+    }
+}
+
+/// The comment sites a directive for line `idx` may live on: the line's
+/// own trailing comment, or the run of pure-comment lines immediately
+/// above (mirrors the allow-directive reach).
+fn directive_sites(lines: &[ScannedLine], idx: usize) -> Vec<usize> {
+    let mut sites = vec![idx];
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if l.code.trim().is_empty() && !l.comment.trim().is_empty() {
+            sites.push(j);
+        } else {
+            break;
+        }
+    }
+    sites
+}
+
+/// Parse a `lint: lock-rank(N): <name>` directive out of comment text.
+/// `None`: no directive present. `Some(Err)`: present but malformed.
+fn lock_rank_marker(comment: &str) -> Option<Result<u32, String>> {
+    let pos = comment.find("lint: lock-rank(")?;
+    let rest = &comment[pos + "lint: lock-rank(".len()..];
+    let Some(close) = rest.find(')') else {
+        return Some(Err("unclosed `lint: lock-rank(`".to_string()));
+    };
+    let Ok(rank) = rest[..close].trim().parse::<u32>() else {
+        return Some(Err(format!("unparsable rank `{}`", rest[..close].trim())));
+    };
+    let after = rest[close + 1..].trim_start();
+    let name = after.strip_prefix(':').map(str::trim).unwrap_or("");
+    if name.is_empty() {
+        return Some(Err("missing the `: <name>` tail".to_string()));
+    }
+    Some(Ok(rank))
+}
+
+/// Parse a `lint: atomic(relaxed|seqcst): <reason>` directive.
+fn atomic_marker(comment: &str) -> Option<Result<bool, String>> {
+    let pos = comment.find("lint: atomic(")?;
+    let rest = &comment[pos + "lint: atomic(".len()..];
+    let Some(close) = rest.find(')') else {
+        return Some(Err("unclosed `lint: atomic(`".to_string()));
+    };
+    let mode = rest[..close].trim();
+    let seqcst = match mode {
+        "seqcst" => true,
+        "relaxed" => false,
+        other => return Some(Err(format!("mode must be relaxed|seqcst, not `{other}`"))),
+    };
+    let after = rest[close + 1..].trim_start();
+    if after.strip_prefix(':').map(str::trim).unwrap_or("").is_empty() {
+        return Some(Err("missing the `: <reason>` tail".to_string()));
+    }
+    Some(Ok(seqcst))
+}
+
+/// The identifiers a declaration line binds. `let` lines yield the
+/// pattern idents (tuple destructures included); field/param/static
+/// lines yield the first ident directly followed by a `:`.
+fn binding_idents(code: &str) -> Vec<String> {
+    let t = code.trim();
+    if word_in(t, "let") {
+        let Some(pos) = t.find("let") else {
+            return Vec::new();
+        };
+        let after = &t[pos + 3..];
+        let end = after.find(['=', ':']).unwrap_or(after.len());
+        return idents_in(&after[..end])
+            .into_iter()
+            .filter(|w| w != "mut" && w != "ref")
+            .filter(|w| !w.starts_with(char::is_uppercase))
+            .collect();
+    }
+    let b = t.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if is_ident(b[i] as char) && (i == 0 || !is_ident(b[i - 1] as char)) {
+            let start = i;
+            while i < b.len() && is_ident(b[i] as char) {
+                i += 1;
+            }
+            let mut j = i;
+            while j < b.len() && (b[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b':' && b.get(j + 1) != Some(&b':') {
+                return vec![t[start..i].to_string()];
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Vec::new()
+}
+
+fn idents_in(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in s.chars() {
+        if is_ident(c) {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Does this code line declare a lock? Returns the matched type token.
+fn lock_decl_trigger(code: &str) -> Option<&'static str> {
+    for tok in LOCK_DECL_TOKENS {
+        for at in token_positions(code, tok) {
+            let after = &code[at + tok.len()..];
+            if (tok == "Condvar" || tok == "RankedCondvar") && after.starts_with("::") {
+                continue;
+            }
+            return Some(tok);
+        }
+    }
+    None
+}
+
+/// Does this code line declare an atomic? Returns the matched type.
+fn atomic_decl_trigger(code: &str) -> Option<&'static str> {
+    for tok in ATOMIC_TYPES {
+        for at in token_positions(code, tok) {
+            if code[at + tok.len()..].starts_with("::") {
+                continue;
+            }
+            return Some(tok);
+        }
+    }
+    None
+}
+
+/// Pass 1 over a file: every lock/atomic declaration must carry its
+/// directive, every directive registers its line's binding idents in the
+/// cross-file registry, and conflicting re-declarations are findings.
+fn register_and_check_decls(
+    f: &SourceFile,
+    s: &Scanned,
+    reg: &mut Registry,
+    out: &mut Vec<Finding>,
+) {
+    for (i, line) in s.lines.iter().enumerate() {
+        if line.in_test || line.code.trim().is_empty() {
+            continue;
+        }
+        let t = line.code.trim_start();
+        if t.starts_with("use ") || t.starts_with("pub use ") {
+            continue;
+        }
+        let mut rank: Option<u32> = None;
+        let mut mode: Option<bool> = None;
+        for &k in &directive_sites(&s.lines, i) {
+            let comment = &s.lines[k].comment;
+            match lock_rank_marker(comment) {
+                Some(Ok(r)) => rank = rank.or(Some(r)),
+                Some(Err(why)) => out.push(Finding {
+                    file: f.rel_path.clone(),
+                    line: k + 1,
+                    rule: "lock-order",
+                    message: format!("malformed lock-rank directive: {why}"),
+                    fix: "spell it `// lint: lock-rank(N): <name>`".to_string(),
+                }),
+                None => {}
+            }
+            match atomic_marker(comment) {
+                Some(Ok(m)) => mode = mode.or(Some(m)),
+                Some(Err(why)) => out.push(Finding {
+                    file: f.rel_path.clone(),
+                    line: k + 1,
+                    rule: "atomic-ordering",
+                    message: format!("malformed atomic directive: {why}"),
+                    fix: "spell it `// lint: atomic(relaxed|seqcst): <reason>`".to_string(),
+                }),
+                None => {}
+            }
+        }
+        if let Some(rank) = rank {
+            for ident in binding_idents(&line.code) {
+                register_lock(f, i, ident, rank, reg, out);
+            }
+        }
+        if let Some(seqcst) = mode {
+            for ident in binding_idents(&line.code) {
+                register_atomic(f, i, ident, seqcst, reg, out);
+            }
+        }
+        if rank.is_none() {
+            if let Some(tok) = lock_decl_trigger(&line.code) {
+                emit(
+                    out,
+                    &f.rel_path,
+                    &s.lines,
+                    i,
+                    "lock-order",
+                    format!("`{tok}` declared without a lock rank"),
+                    "add `// lint: lock-rank(N): <name>` (ranks: coordinator::lock_ranks)"
+                        .to_string(),
+                );
+            }
+        }
+        if mode.is_none() {
+            if let Some(tok) = atomic_decl_trigger(&line.code) {
+                emit(
+                    out,
+                    &f.rel_path,
+                    &s.lines,
+                    i,
+                    "atomic-ordering",
+                    format!("`{tok}` declared without an ordering contract"),
+                    "add `// lint: atomic(relaxed|seqcst): <reason>`".to_string(),
+                );
+            }
+        }
+    }
+}
+
+fn register_lock(
+    f: &SourceFile,
+    i: usize,
+    ident: String,
+    rank: u32,
+    reg: &mut Registry,
+    out: &mut Vec<Finding>,
+) {
+    if let Some(prev) = reg.locks.get(&ident) {
+        if prev.rank != rank {
+            out.push(Finding {
+                file: f.rel_path.clone(),
+                line: i + 1,
+                rule: "lock-order",
+                message: format!(
+                    "lock `{ident}` re-declared at rank {rank} (rank {} at {}:{})",
+                    prev.rank, prev.file, prev.line
+                ),
+                fix: "one registry ident means one lock: rename one of them".to_string(),
+            });
+        }
+        return;
+    }
+    reg.locks.insert(ident, LockDecl { rank, file: f.rel_path.clone(), line: i + 1 });
+}
+
+fn register_atomic(
+    f: &SourceFile,
+    i: usize,
+    ident: String,
+    seqcst: bool,
+    reg: &mut Registry,
+    out: &mut Vec<Finding>,
+) {
+    if let Some(prev) = reg.atomics.get(&ident) {
+        if prev.seqcst != seqcst {
+            out.push(Finding {
+                file: f.rel_path.clone(),
+                line: i + 1,
+                rule: "atomic-ordering",
+                message: format!(
+                    "atomic `{ident}` re-declared {} ({} at {}:{})",
+                    mode_name(seqcst),
+                    mode_name(prev.seqcst),
+                    prev.file,
+                    prev.line
+                ),
+                fix: "one registry ident means one contract: rename one of them".to_string(),
+            });
+        }
+        return;
+    }
+    reg.atomics.insert(ident, AtomicDecl { seqcst, file: f.rel_path.clone(), line: i + 1 });
+}
+
+fn mode_name(seqcst: bool) -> &'static str {
+    if seqcst {
+        "seqcst"
+    } else {
+        "relaxed"
+    }
+}
+
+/// A lexically-live bound guard.
+struct Guard {
+    rank: u32,
+    /// Registry ident of the lock (for messages).
+    lock: String,
+    /// The bound variable (for `drop(x)` matching).
+    var: String,
+    /// Brace depth the binding lives at; popped when the enclosing
+    /// block closes.
+    depth: i64,
+}
+
+/// Pass 2 over a file: track `.lock()` acquisitions against the
+/// registry by brace depth (lock-order, lock-span) and atomic op sites
+/// against the contracts (atomic-ordering, atomic-rmw).
+fn walk_file(f: &SourceFile, s: &Scanned, reg: &Registry, out: &mut Vec<Finding>) {
+    let mut depth: i64 = 0;
+    let mut stack: Vec<Guard> = Vec::new();
+    // Atomic ident -> 0-based line of its last `.load(` in the current fn.
+    let mut loads: HashMap<String, usize> = HashMap::new();
+    for (i, line) in s.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        if word_in(code, "fn") {
+            loads.clear();
+        }
+        let mut evs: Vec<(usize, Ev)> = Vec::new();
+        for (b, c) in code.char_indices() {
+            match c {
+                '{' => evs.push((b, Ev::Open)),
+                '}' => evs.push((b, Ev::Close)),
+                _ => {}
+            }
+        }
+        for at in token_positions(code, ".lock()") {
+            evs.push((at, Ev::Lock));
+        }
+        for tok in BLOCKING_TOKENS {
+            for at in token_positions(code, tok) {
+                evs.push((at, Ev::Block(tok)));
+            }
+        }
+        for at in token_positions(code, "drop(") {
+            let ident: String =
+                code[at + "drop(".len()..].chars().take_while(|&c| is_ident(c)).collect();
+            evs.push((at, Ev::Drop(ident)));
+        }
+        evs.sort_by_key(|e| e.0);
+        for (at, ev) in evs {
+            match ev {
+                Ev::Open => depth += 1,
+                Ev::Close => {
+                    depth -= 1;
+                    while stack.last().is_some_and(|g| g.depth > depth) {
+                        stack.pop();
+                    }
+                }
+                Ev::Lock => on_lock(f, s, reg, i, at, depth, &mut stack, out),
+                Ev::Block(tok) => {
+                    if let Some(top) = stack.last() {
+                        emit(
+                            out,
+                            &f.rel_path,
+                            &s.lines,
+                            i,
+                            "lock-span",
+                            format!(
+                                "guard of `{}` (rank {}) held across blocking `{tok}..)`",
+                                top.lock, top.rank
+                            ),
+                            "drop the guard first, or annotate \
+                             `// lint:allow(lock-span): <why>`"
+                                .to_string(),
+                        );
+                    }
+                }
+                Ev::Drop(ident) => {
+                    if let Some(pos) = stack.iter().rposition(|g| g.var == ident) {
+                        stack.remove(pos);
+                    }
+                }
+            }
+        }
+        atomic_ops(f, s, reg, i, &mut loads, out);
+    }
+}
+
+enum Ev {
+    Open,
+    Close,
+    Lock,
+    Block(&'static str),
+    Drop(String),
+}
+
+/// Handle one `.lock()` at byte `at` of line `i`.
+#[allow(clippy::too_many_arguments)]
+fn on_lock(
+    f: &SourceFile,
+    s: &Scanned,
+    reg: &Registry,
+    i: usize,
+    at: usize,
+    depth: i64,
+    stack: &mut Vec<Guard>,
+    out: &mut Vec<Finding>,
+) {
+    let recv = receiver_ident(&s.lines, i, at);
+    let Some(decl) = reg.locks.get(&recv) else {
+        let what = if recv.is_empty() { "<expr>".to_string() } else { format!("`{recv}`") };
+        emit(
+            out,
+            &f.rel_path,
+            &s.lines,
+            i,
+            "lock-order",
+            format!(".lock() on {what}, which has no declared rank"),
+            "declare it with `// lint: lock-rank(N): <name>` at the declaration".to_string(),
+        );
+        return;
+    };
+    if let Some(top) = stack.last() {
+        if decl.rank <= top.rank {
+            emit(
+                out,
+                &f.rel_path,
+                &s.lines,
+                i,
+                "lock-order",
+                format!(
+                    "acquiring `{recv}` (rank {}) while holding `{}` (rank {}) inverts \
+                     the lock order",
+                    decl.rank, top.lock, top.rank
+                ),
+                format!("drop the `{}` guard first, or re-rank the locks", top.lock),
+            );
+        }
+    }
+    if stmt_has_let(&s.lines, i) && bound_guard_tail(&s.lines, i, at + ".lock()".len()) {
+        let var = stmt_binding(&s.lines, i).unwrap_or_else(|| "_".to_string());
+        stack.push(Guard { rank: decl.rank, lock: recv, var, depth });
+    }
+}
+
+/// The receiver identifier of a method token at byte `at` of line `i`:
+/// the trailing ident of the join of up to two preceding lines and the
+/// current line up to `at` (rustfmt may split a chain across lines).
+/// Only *trailing* whitespace is trimmed — stripping interior whitespace
+/// would weld a keyword onto the ident (`if stop` -> `ifstop`) and make
+/// the receiver unresolvable against the registry.
+fn receiver_ident(lines: &[ScannedLine], i: usize, at: usize) -> String {
+    let mut ctx = String::new();
+    for l in &lines[i.saturating_sub(2)..i] {
+        ctx.push_str(&l.code);
+    }
+    ctx.push_str(&lines[i].code[..at]);
+    let t = ctx.trim_end();
+    let b = t.as_bytes();
+    let mut start = b.len();
+    while start > 0 && is_ident(b[start - 1] as char) {
+        start -= 1;
+    }
+    t[start..].to_string()
+}
+
+/// 0-based line where the statement containing line `i` starts: walk
+/// back (bounded) until the previous line plausibly ends a statement.
+fn stmt_start(lines: &[ScannedLine], i: usize) -> usize {
+    let mut j = i;
+    for _ in 0..6 {
+        if j == 0 {
+            break;
+        }
+        let prev = lines[j - 1].code.trim();
+        if prev.is_empty()
+            || prev.ends_with(';')
+            || prev.ends_with('{')
+            || prev.ends_with('}')
+            || prev.ends_with(',')
+        {
+            break;
+        }
+        j -= 1;
+    }
+    j
+}
+
+fn stmt_has_let(lines: &[ScannedLine], i: usize) -> bool {
+    let j = stmt_start(lines, i);
+    lines[j..=i].iter().any(|l| word_in(&l.code, "let"))
+}
+
+fn stmt_binding(lines: &[ScannedLine], i: usize) -> Option<String> {
+    let j = stmt_start(lines, i);
+    binding_idents(&lines[j].code).into_iter().next()
+}
+
+/// Is the expression after `.lock()` exactly the guard-binding tail —
+/// `.unwrap()` or the poison-tolerant `.unwrap_or_else(|x| x.into_inner())`
+/// — with nothing chained after? Anything longer is a temporary whose
+/// guard dies at the end of the statement.
+fn bound_guard_tail(lines: &[ScannedLine], i: usize, from: usize) -> bool {
+    let mut t = lines[i].code[from..].to_string();
+    let mut j = i + 1;
+    while !t.contains(';') && j < lines.len() && j <= i + 6 {
+        t.push_str(&lines[j].code);
+        j += 1;
+    }
+    t.retain(|c| !c.is_whitespace());
+    let t = t.split(';').next().unwrap_or("");
+    if t == ".unwrap()" {
+        return true;
+    }
+    let Some(rest) = t.strip_prefix(".unwrap_or_else(|") else {
+        return false;
+    };
+    let Some(bar) = rest.find('|') else {
+        return false;
+    };
+    let var = &rest[..bar];
+    !var.is_empty() && rest[bar + 1..] == format!("{var}.into_inner())")
+}
+
+/// The argument text of a call whose `(` sits at byte `open` of line
+/// `i`, joined across up to six lines and cut at the matching `)`.
+fn call_args(lines: &[ScannedLine], i: usize, open: usize) -> String {
+    let mut t = lines[i].code[open..].to_string();
+    for l in lines.iter().skip(i + 1).take(6) {
+        t.push_str(&l.code);
+    }
+    t.retain(|c| !c.is_whitespace());
+    let mut depth = 0i64;
+    for (p, c) in t.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return t[..p].to_string();
+                }
+            }
+            _ => {}
+        }
+    }
+    t
+}
+
+/// Check every atomic op on line `i` against the declared contracts
+/// (atomic-ordering) and the per-function load/store pairing
+/// (atomic-rmw).
+fn atomic_ops(
+    f: &SourceFile,
+    s: &Scanned,
+    reg: &Registry,
+    i: usize,
+    loads: &mut HashMap<String, usize>,
+    out: &mut Vec<Finding>,
+) {
+    for tok in ATOMIC_OPS {
+        for at in token_positions(&s.lines[i].code, tok) {
+            let recv = receiver_ident(&s.lines, i, at);
+            let args = call_args(&s.lines, i, at + tok.len() - 1);
+            let used: Vec<&str> =
+                ORDERING_WORDS.iter().copied().filter(|w| word_in(&args, w)).collect();
+            let Some(decl) = reg.atomics.get(&recv) else {
+                if !used.is_empty() {
+                    emit(
+                        out,
+                        &f.rel_path,
+                        &s.lines,
+                        i,
+                        "atomic-ordering",
+                        format!("atomic op on `{recv}`, which has no declared contract"),
+                        "declare the field with `// lint: atomic(relaxed|seqcst): <why>`"
+                            .to_string(),
+                    );
+                }
+                continue;
+            };
+            let want = if decl.seqcst { "SeqCst" } else { "Relaxed" };
+            for w in used {
+                if w != want {
+                    emit(
+                        out,
+                        &f.rel_path,
+                        &s.lines,
+                        i,
+                        "atomic-ordering",
+                        format!(
+                            "`{recv}` is declared {} but used with `{w}`",
+                            mode_name(decl.seqcst)
+                        ),
+                        format!("use Ordering::{want}, or change the declared contract"),
+                    );
+                }
+            }
+            if tok == ".load(" {
+                loads.insert(recv, i);
+            } else if tok == ".store(" {
+                if let Some(&l0) = loads.get(&recv) {
+                    emit(
+                        out,
+                        &f.rel_path,
+                        &s.lines,
+                        i,
+                        "atomic-rmw",
+                        format!(
+                            "`{recv}` is loaded (line {}) then stored back in the same \
+                             function — a lost-update window",
+                            l0 + 1
+                        ),
+                        "make it one atomic RMW: fetch_add/fetch_sub/compare_exchange"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}

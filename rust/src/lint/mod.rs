@@ -33,14 +33,26 @@
 //!   accessors in `util/cli.rs` / `main.rs` must appear in README.md.
 //! - **print** — `println!` / `eprintln!` are forbidden in library
 //!   modules outside `report/` and `main.rs` (libraries return data;
-//!   the binary renders it).
+//!   the binary renders it). `examples/` and `benches/` are binaries
+//!   like `main.rs` and share its exemption (printing is their job).
+//! - **lock-order** / **lock-span** / **atomic-rmw** /
+//!   **atomic-ordering** — the concurrency-discipline rules over
+//!   `coordinator/`; see [`concurrency`].
+//!
+//! The walk covers `rust/src`, `examples/`, and `rust/benches/` (the
+//! binaries get the panic/print/cast treatment; the library-shape rules
+//! exempt them like `main.rs`).
 //!
 //! Any rule can be suppressed site-by-site with
 //! `// lint:allow(<rule>): <reason>` on the same or preceding line —
 //! the reason is mandatory, an annotation without one is itself a
-//! finding. Test items (`#[cfg(test)]` / `#[test]`) are exempt from
+//! finding — or file-wide with `// lint:allow-file(<rule>): <reason>`
+//! in the file's first [`FILE_ALLOW_WINDOW`] lines (for binaries whose
+//! whole idiom a rule would fight, e.g. fail-fast `.unwrap()` in an
+//! example). Test items (`#[cfg(test)]` / `#[test]`) are exempt from
 //! every rule.
 
+pub mod concurrency;
 pub mod scan;
 
 use scan::ScannedLine;
@@ -86,7 +98,7 @@ const ALLOC_TOKENS: [&str; 9] = [
     "String::from",
 ];
 const NARROW_CASTS: [&str; 3] = ["u16", "u32", "usize"];
-const CAST_FILES: [&str; 2] = ["events/io.rs", "coordinator/net.rs"];
+const CAST_FILES: [&str; 3] = ["events/io.rs", "coordinator/net.rs", "examples/net_serving.rs"];
 const METRIC_STRUCTS: [&str; 5] =
     ["Metrics", "TenantStats", "ClassStats", "DeltaMetrics", "ModelStats"];
 
@@ -112,7 +124,15 @@ pub fn lint_sources(files: &[SourceFile], readme: Option<&str>) -> Vec<Finding> 
     }
     rule_drift_metrics(&scanned, &mut out);
     rule_drift_flags(&scanned, readme, &mut out);
-    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    concurrency::rules(&scanned, &mut out);
+    out.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    // Several sites suppressed by one reasonless (file-)directive all
+    // report the same directive line; keep one copy.
+    out.dedup_by(|a, b| {
+        a.file == b.file && a.line == b.line && a.rule == b.rule && a.message == b.message
+    });
     out
 }
 
@@ -151,13 +171,20 @@ fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
     Ok(())
 }
 
+/// Rel path for rule scoping: components after the last `src`, or from
+/// the last `examples`/`benches` component inclusive (so an example
+/// lands at `examples/foo.rs` wherever the walk was rooted), or the
+/// whole path when neither anchor appears.
 fn rel_of(p: &Path) -> String {
     let comps: Vec<String> =
         p.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
-    match comps.iter().rposition(|c| c == "src") {
-        Some(pos) => comps[pos + 1..].join("/"),
-        None => comps.join("/"),
+    if let Some(pos) = comps.iter().rposition(|c| c == "src") {
+        return comps[pos + 1..].join("/");
     }
+    if let Some(pos) = comps.iter().rposition(|c| c == "examples" || c == "benches") {
+        return comps[pos..].join("/");
+    }
+    comps.join("/")
 }
 
 fn is_ident(c: char) -> bool {
@@ -244,6 +271,33 @@ fn allow_state(lines: &[ScannedLine], idx: usize, rule: &str) -> Allow {
     Allow::No
 }
 
+/// Masthead directives must sit in the file's first lines — a suppression
+/// buried mid-file is invisible to a reviewer skimming the header.
+pub const FILE_ALLOW_WINDOW: usize = 30;
+
+/// Look for a `lint:allow-file(<rule>): <reason>` masthead directive in
+/// the first [`FILE_ALLOW_WINDOW`] lines.
+fn allow_file_state(lines: &[ScannedLine], rule: &str) -> Allow {
+    for (k, l) in lines.iter().take(FILE_ALLOW_WINDOW).enumerate() {
+        let Some(pos) = l.comment.find("lint:allow-file(") else {
+            continue;
+        };
+        let rest = &l.comment[pos + "lint:allow-file(".len()..];
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        if rest[..close].trim() != rule {
+            continue;
+        }
+        let after = rest[close + 1..].trim_start();
+        if after.strip_prefix(':').unwrap_or("").trim().is_empty() {
+            return Allow::MissingReason(k);
+        }
+        return Allow::Yes;
+    }
+    Allow::No
+}
+
 /// Push a finding unless an allow directive suppresses it; a
 /// reasonless directive becomes its own finding.
 fn emit(
@@ -256,13 +310,27 @@ fn emit(
     fix: String,
 ) {
     match allow_state(lines, idx, rule) {
+        Allow::Yes => return,
+        Allow::MissingReason(k) => {
+            out.push(Finding {
+                file: file.to_string(),
+                line: k + 1,
+                rule,
+                message: format!("lint:allow({rule}) without a reason"),
+                fix: format!("spell it `// lint:allow({rule}): <why this site is safe>`"),
+            });
+            return;
+        }
+        Allow::No => {}
+    }
+    match allow_file_state(lines, rule) {
         Allow::Yes => {}
         Allow::MissingReason(k) => out.push(Finding {
             file: file.to_string(),
             line: k + 1,
             rule,
-            message: format!("lint:allow({rule}) without a reason"),
-            fix: format!("spell it `// lint:allow({rule}): <why this site is safe>`"),
+            message: format!("lint:allow-file({rule}) without a reason"),
+            fix: format!("spell it `// lint:allow-file({rule}): <why this file is exempt>`"),
         }),
         Allow::No => out.push(Finding {
             file: file.to_string(),
@@ -276,7 +344,15 @@ fn emit(
 
 fn panic_scoped(rel: &str) -> bool {
     rel == "model/plan.rs"
-        || ["coordinator/", "sparse/", "events/"].iter().any(|d| rel.starts_with(d))
+        || ["coordinator/", "sparse/", "events/", "examples/", "benches/"]
+            .iter()
+            .any(|d| rel.starts_with(d))
+}
+
+/// `examples/` and `benches/` are binaries, exempt (like `main.rs`)
+/// from the library-shape rules: print and module-size.
+fn is_binary_tree(rel: &str) -> bool {
+    rel == "main.rs" || rel.starts_with("examples/") || rel.starts_with("benches/")
 }
 
 fn rule_panic(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
@@ -401,7 +477,7 @@ fn rule_cast(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
 }
 
 fn rule_print(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
-    if f.rel_path == "main.rs" || f.rel_path.starts_with("report/") {
+    if is_binary_tree(&f.rel_path) || f.rel_path.starts_with("report/") {
         return;
     }
     for (i, line) in s.lines.iter().enumerate() {
@@ -430,7 +506,7 @@ fn rule_print(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
 /// `main.rs` is the binary, not a library module, and is exempt (like
 /// the print rule).
 fn rule_module_size(f: &SourceFile, s: &scan::Scanned, out: &mut Vec<Finding>) {
-    if f.rel_path == "main.rs" {
+    if is_binary_tree(&f.rel_path) {
         return;
     }
     let code_lines = s.lines.iter().filter(|l| !l.in_test && !l.code.trim().is_empty()).count();

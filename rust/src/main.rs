@@ -77,13 +77,16 @@
 //! - `infer      --hlo artifacts/<stem>.hlo.txt`
 //!   load an AOT artifact and run a smoke inference via PJRT (needs the
 //!   `pjrt` feature).
-//! - `lint       [--fix-plan] [paths…]`
+//! - `lint       [--fix-plan] [--json] [paths…]`
 //!   run the in-tree static-analysis pass (see `lint`) over `rust/src`
-//!   (or the given files/directories): panic-freedom on the serving
-//!   path, zero-alloc hot-path regions, checked wire casts, and
-//!   metrics/report/CLI drift. Findings print as
-//!   `file:line: rule: message` and the exit code is non-zero when any
-//!   exist; `--fix-plan` adds a suggested remediation per finding.
+//!   plus `examples/` and `rust/benches/` (or the given
+//!   files/directories): panic-freedom on the serving path, zero-alloc
+//!   hot-path regions, checked wire casts, metrics/report/CLI drift,
+//!   and the concurrency-discipline rules (lock ranks, guard spans,
+//!   atomic contracts). Findings print as `file:line: rule: message`
+//!   and the exit code is non-zero when any exist; `--fix-plan` adds a
+//!   suggested remediation per finding; `--json` emits one
+//!   machine-readable document on stdout instead (for CI artifacts).
 
 use esda::coordinator::{
     run_pool, run_pool_source, run_server, run_server_source, synthetic_source, Backend, Dense,
@@ -105,7 +108,7 @@ use esda::util::Rng;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["verbose", "delta", "fix-plan"]) {
+    let args = match Args::parse(raw, &["verbose", "delta", "fix-plan", "json"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -828,31 +831,69 @@ fn cmd_infer(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// `esda lint [--fix-plan] [paths…]` — run the in-tree static-analysis
-/// pass (panic-freedom, hot-path allocations, wire casts, drift; see
-/// the `lint` module docs) and exit non-zero on any finding.
+/// `esda lint [--fix-plan] [--json] [paths…]` — run the in-tree
+/// static-analysis pass (panic-freedom, hot-path allocations, wire
+/// casts, drift, concurrency discipline; see the `lint` module docs)
+/// and exit non-zero on any finding.
 fn cmd_lint(args: &Args) -> Result<(), String> {
     use std::path::PathBuf;
     let mut roots: Vec<PathBuf> = args.positional()[1..].iter().map(PathBuf::from).collect();
     if roots.is_empty() {
         let root = ["rust/src", "src"].iter().map(PathBuf::from).find(|p| p.is_dir());
         roots.push(root.ok_or("no rust/src (or src) here — pass explicit paths to lint")?);
+        // The binaries ride along by default: panic/print/cast apply to
+        // them too (each root is taken only where it exists, so the
+        // walk works from the repo root and from `rust/`).
+        for extra in ["examples", "rust/benches", "benches"] {
+            let p = PathBuf::from(extra);
+            if p.is_dir() {
+                roots.push(p);
+            }
+        }
     }
     let readme =
         ["README.md", "../README.md"].iter().find_map(|p| std::fs::read_to_string(p).ok());
     let files = esda::lint::collect_files(&roots)?;
     let findings = esda::lint::lint_sources(&files, readme.as_deref());
-    let fix_plan = args.has("fix-plan");
-    for f in &findings {
-        println!("{}", f.render());
-        if fix_plan {
-            println!("    fix: {}", f.fix);
+    if args.has("json") {
+        println!("{}", lint_json(&findings, files.len()));
+    } else {
+        let fix_plan = args.has("fix-plan");
+        for f in &findings {
+            println!("{}", f.render());
+            if fix_plan {
+                println!("    fix: {}", f.fix);
+            }
         }
+        println!("lint: {} finding(s) across {} file(s)", findings.len(), files.len());
     }
-    println!("lint: {} finding(s) across {} file(s)", findings.len(), files.len());
     if findings.is_empty() {
         Ok(())
     } else {
         Err(format!("{} lint finding(s)", findings.len()))
     }
+}
+
+/// The `esda lint --json` document: the counts CI trends plus one
+/// object per finding (empty array on a clean tree).
+fn lint_json(findings: &[esda::lint::Finding], n_files: usize) -> String {
+    use esda::util::json::Json;
+    let arr = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("rule", Json::Str(f.rule.to_string())),
+                ("message", Json::Str(f.message.clone())),
+                ("fix", Json::Str(f.fix.clone())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("files_scanned", Json::Num(n_files as f64)),
+        ("findings", Json::Arr(arr)),
+        ("count", Json::Num(findings.len() as f64)),
+    ])
+    .to_string()
 }

@@ -1,0 +1,241 @@
+//! Debug-build lock-rank witness: [`RankedMutex`] / [`RankedCondvar`].
+//!
+//! The static `lock-order` lint proves a partial order over declared lock
+//! ranks lexically; this module enforces the same order dynamically. Every
+//! ranked lock carries a `u32` rank (see `coordinator::lock_ranks`) and a
+//! stable name. Under `cfg(debug_assertions)` a thread-local witness stack
+//! records the ranks a thread currently holds and asserts strict
+//! monotonicity at every acquisition — so the randomized serving property
+//! tests double as a lock-order fuzzer. In release builds the wrappers
+//! compile down to plain `std::sync` calls with zero extra cost.
+//!
+//! Poisoning behaves exactly like `std`: `lock()` returns a `LockResult`
+//! whose `Err` carries a usable guard via `PoisonError::into_inner`, so the
+//! repo's poison-tolerant `unwrap_or_else(|e| e.into_inner())` idiom works
+//! unchanged.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, LockResult, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+#[cfg(debug_assertions)]
+use std::cell::RefCell;
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks (and names) of the ranked locks this thread currently holds,
+    /// in acquisition order. Only exists in debug builds.
+    static HELD: RefCell<Vec<(u32, &'static str)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Assert that acquiring `rank` would keep this thread's held ranks
+/// strictly increasing. Called *before* blocking on the inner mutex so an
+/// inversion panics instead of deadlocking.
+#[cfg(debug_assertions)]
+fn witness_check(rank: u32, name: &'static str) {
+    HELD.with(|held| {
+        if let Some(&(top, top_name)) = held.borrow().last() {
+            assert!(
+                rank > top,
+                "lock-rank inversion: acquiring `{name}` (rank {rank}) while holding \
+                 `{top_name}` (rank {top})"
+            );
+        }
+    });
+}
+
+#[cfg(debug_assertions)]
+fn witness_push(rank: u32, name: &'static str) {
+    HELD.with(|held| held.borrow_mut().push((rank, name)));
+}
+
+/// Remove the most recent entry for (`rank`, `name`). Guards may be dropped
+/// out of acquisition order, so this is positional, not a strict pop.
+#[cfg(debug_assertions)]
+fn witness_release(rank: u32, name: &'static str) {
+    HELD.with(|held| {
+        let mut held = held.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|&(r, n)| r == rank && n == name) {
+            held.remove(pos);
+        }
+    });
+}
+
+/// Assert this thread holds no ranked locks. Call at blocking points that
+/// must never run under a lock (e.g. the top of a net accept loop). Free in
+/// release builds.
+pub fn debug_assert_no_locks_held(context: &str) {
+    #[cfg(debug_assertions)]
+    HELD.with(|held| {
+        let held = held.borrow();
+        assert!(
+            held.is_empty(),
+            "{context}: thread still holds {} ranked lock(s); most recent is `{}`",
+            held.len(),
+            held.last().map(|&(_, n)| n).unwrap_or("?"),
+        );
+    });
+    #[cfg(not(debug_assertions))]
+    let _ = context;
+}
+
+/// A `Mutex<T>` that declares its place in the global lock order.
+pub struct RankedMutex<T> {
+    rank: u32,
+    name: &'static str,
+    inner: Mutex<T>,
+}
+
+impl<T> RankedMutex<T> {
+    /// Wrap `value` in a mutex ranked `rank` in the global order. `name` is
+    /// used in witness panic messages; use the same name for every instance
+    /// sharing a rank (e.g. all admission-queue states).
+    pub fn new(rank: u32, name: &'static str, value: T) -> Self {
+        RankedMutex { rank, name, inner: Mutex::new(value) }
+    }
+
+    /// Acquire the lock, asserting (debug builds only) that this thread's
+    /// held ranks stay strictly increasing.
+    pub fn lock(&self) -> LockResult<RankedGuard<'_, T>> {
+        #[cfg(debug_assertions)]
+        witness_check(self.rank, self.name);
+        let res = self.inner.lock();
+        #[cfg(debug_assertions)]
+        witness_push(self.rank, self.name);
+        match res {
+            Ok(g) => Ok(self.wrap(g)),
+            Err(p) => Err(PoisonError::new(self.wrap(p.into_inner()))),
+        }
+    }
+
+    fn wrap<'a>(&self, g: MutexGuard<'a, T>) -> RankedGuard<'a, T> {
+        RankedGuard { guard: Some(g), rank: self.rank, name: self.name }
+    }
+
+    /// Consume the mutex, returning the inner value (mirrors
+    /// `Mutex::into_inner`, including poison reporting).
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    /// This lock's declared rank.
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// This lock's witness name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for RankedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RankedMutex")
+            .field("rank", &self.rank)
+            .field("name", &self.name)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// Guard returned by [`RankedMutex::lock`]. Dropping it releases the inner
+/// mutex and retires the witness entry.
+pub struct RankedGuard<'a, T> {
+    /// `None` only transiently while a condvar wait owns the inner guard.
+    guard: Option<MutexGuard<'a, T>>,
+    rank: u32,
+    name: &'static str,
+}
+
+impl<T> Deref for RankedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.guard.as_deref().expect("ranked guard used during condvar handoff")
+    }
+}
+
+impl<T> DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_deref_mut().expect("ranked guard used during condvar handoff")
+    }
+}
+
+impl<T> Drop for RankedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        if self.guard.is_some() {
+            witness_release(self.rank, self.name);
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for RankedGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RankedGuard")
+            .field("rank", &self.rank)
+            .field("name", &self.name)
+            .field("guard", &self.guard)
+            .finish()
+    }
+}
+
+/// A `Condvar` that waits on [`RankedGuard`]s.
+///
+/// While a thread is parked in `wait`/`wait_timeout` the witness entry for
+/// the handed-off guard is deliberately retained: the parked thread cannot
+/// acquire anything else, and it holds the lock again the instant the wait
+/// returns, so the entry stays accurate at every observable point.
+#[derive(Debug, Default)]
+pub struct RankedCondvar {
+    inner: Condvar,
+}
+
+impl RankedCondvar {
+    pub fn new() -> Self {
+        RankedCondvar { inner: Condvar::new() }
+    }
+
+    /// Block until notified, releasing and re-acquiring the guard's mutex
+    /// exactly like `Condvar::wait`.
+    pub fn wait<'a, T>(&self, mut guard: RankedGuard<'a, T>) -> LockResult<RankedGuard<'a, T>> {
+        let (rank, name) = (guard.rank, guard.name);
+        let inner = guard.guard.take().expect("condvar wait on a handed-off guard");
+        drop(guard); // guard slot is empty: shell drop skips the witness pop
+        match self.inner.wait(inner) {
+            Ok(g) => Ok(RankedGuard { guard: Some(g), rank, name }),
+            Err(p) => {
+                Err(PoisonError::new(RankedGuard { guard: Some(p.into_inner()), rank, name }))
+            }
+        }
+    }
+
+    /// Block until notified or `dur` elapses; mirrors
+    /// `Condvar::wait_timeout`.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: RankedGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(RankedGuard<'a, T>, WaitTimeoutResult)> {
+        let (rank, name) = (guard.rank, guard.name);
+        let inner = guard.guard.take().expect("condvar wait on a handed-off guard");
+        drop(guard); // guard slot is empty: shell drop skips the witness pop
+        match self.inner.wait_timeout(inner, dur) {
+            Ok((g, timed)) => Ok((RankedGuard { guard: Some(g), rank, name }, timed)),
+            Err(p) => {
+                let (g, timed) = p.into_inner();
+                Err(PoisonError::new((RankedGuard { guard: Some(g), rank, name }, timed)))
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}

@@ -16,12 +16,16 @@
 //! - [`stats`]: summary statistics and timing helpers shared by the benches.
 //! - [`alloc`]: a counting global-allocator wrapper that proves the
 //!   zero-allocation steady state of the arena execution engine.
+//! - [`lockcheck`]: debug-build ranked mutex/condvar wrappers asserting
+//!   per-thread lock-rank monotonicity (the dynamic half of the static
+//!   `lock-order` lint).
 pub mod rng;
 pub mod propcheck;
 pub mod json;
 pub mod cli;
 pub mod stats;
 pub mod alloc;
+pub mod lockcheck;
 
 pub use rng::Rng;
 

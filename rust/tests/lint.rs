@@ -56,11 +56,13 @@ fn panic_rule_skips_unscoped_files_clean_files_and_test_code() {
 
 #[test]
 fn panic_rule_allows_the_lock_poisoning_idiom_by_pattern() {
-    assert_clean(&lint_one("coordinator/fixture.rs", "fn f(m: &M) { m.lock().unwrap(); }\n"));
+    // events/ is panic-scoped but outside the coordinator/ lock-order
+    // scope, so the idiom can be tested without declaring lock ranks.
+    assert_clean(&lint_one("events/fixture.rs", "fn f(m: &M) { m.lock().unwrap(); }\n"));
     // ... including rustfmt-split chains.
     let split =
         "fn f(s: &S) {\n    s.inner\n        .lock()\n        .unwrap()\n        .push(1);\n}\n";
-    assert_clean(&lint_one("coordinator/fixture.rs", split));
+    assert_clean(&lint_one("events/fixture.rs", split));
     // But not arbitrary unwraps that merely mention lock elsewhere.
     let found = lint_one("coordinator/fixture.rs", "fn f(x: Option<u8>) { x.unwrap(); }\n");
     assert_eq!(found.len(), 1, "{found:?}");
@@ -260,16 +262,285 @@ fn module_size_respects_a_reasoned_allow_on_line_one() {
     assert_clean(&lint_one("coordinator/fixture.rs", &text));
 }
 
+// ----------------------------------------------------------- allow-file
+
+#[test]
+fn allow_file_masthead_suppresses_a_rule_file_wide() {
+    let text = "// lint:allow-file(panic): fail-fast demo binary\n\
+                fn main() {\n    let x: Option<u8> = None;\n    x.unwrap();\n    \
+                Some(1).expect(\"present\");\n}\n";
+    assert_clean(&lint_one("examples/fixture.rs", text));
+    assert_clean(&lint_one("benches/fixture.rs", text));
+}
+
+#[test]
+fn allow_file_is_per_rule_and_reasonless_masthead_is_a_finding() {
+    // A panic masthead does not blanket other rules.
+    let text = "// lint:allow-file(panic): fail-fast demo binary\n\
+                fn f(v: u64) -> u32 { v.try_into().unwrap() }\n";
+    assert_clean(&lint_one("examples/net_serving.rs", text));
+    let cast = "// lint:allow-file(panic): fail-fast demo binary\n\
+                fn f(v: u64) -> u32 { v as u32 }\n";
+    let found = lint_one("examples/net_serving.rs", cast);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("cast:"), "{}", found[0]);
+    // Reasonless masthead: flagged at the directive, not silently obeyed.
+    let bare = "// lint:allow-file(panic)\nfn main() { Some(1).unwrap(); }\n";
+    let found = lint_one("examples/fixture.rs", bare);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains(":1: panic:"), "{}", found[0]);
+    assert!(found[0].contains("without a reason"), "{}", found[0]);
+}
+
+#[test]
+fn allow_file_must_sit_in_the_masthead_window() {
+    // The directive lands on line 31 — one past the window — so it is
+    // invisible and the violation still reports.
+    let pad = "fn a() {}\n".repeat(30);
+    let text =
+        format!("{pad}// lint:allow-file(panic): buried too deep\nfn b() {{ Some(1).unwrap(); }}\n");
+    let found = lint_one("examples/fixture.rs", &text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("panic"), "{}", found[0]);
+}
+
+#[test]
+fn binaries_share_the_print_and_module_size_exemptions() {
+    let text = "fn main() {\n    println!(\"hi\");\n}\n";
+    assert_clean(&lint_one("examples/fixture.rs", text));
+    assert_clean(&lint_one("benches/fixture.rs", text));
+}
+
+// ------------------------------------------------------------ lock-order
+
+#[test]
+fn lock_order_requires_a_rank_on_every_coordinator_lock_declaration() {
+    for decl in ["q: Mutex<Vec<u8>>,", "q: RankedMutex<Vec<u8>>,", "cv: Condvar,"] {
+        let text = format!("struct S {{\n    {decl}\n}}\n");
+        let found = lint_one("coordinator/fixture.rs", &text);
+        assert_eq!(found.len(), 1, "{decl}: {found:?}");
+        assert!(found[0].contains(":2: lock-order:"), "{}", found[0]);
+        assert!(found[0].contains("without a lock rank"), "{}", found[0]);
+        // The same declaration outside coordinator/ is out of scope.
+        assert_clean(&lint_one("util/fixture.rs", &text));
+    }
+    // `Condvar::` paths and `use` lines are not declarations.
+    let uses = "use std::sync::{Condvar, Mutex};\nfn f() -> bool { Condvar::new; true }\n";
+    assert_clean(&lint_one("coordinator/fixture.rs", uses));
+}
+
+/// Shared fixture: two ranked locks and a well-ordered taker.
+const RANKED_PAIR: &str = "struct S {\n    // lint: lock-rank(10): alpha\n    \
+                           alpha: Mutex<u8>,\n    // lint: lock-rank(20): beta\n    \
+                           beta: Mutex<u8>,\n}\n";
+
+#[test]
+fn lock_order_accepts_rank_ascending_nesting() {
+    let text = format!(
+        "{RANKED_PAIR}fn f(s: &S) {{\n    let alpha = s.alpha.lock().unwrap();\n    \
+         let beta = s.beta.lock().unwrap();\n    drop(beta);\n    drop(alpha);\n}}\n"
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &text));
+}
+
+#[test]
+fn lock_order_flags_a_rank_inversion_at_the_acquisition_site() {
+    let text = format!(
+        "{RANKED_PAIR}fn g(s: &S) {{\n    let beta = s.beta.lock().unwrap();\n    \
+         let alpha = s.alpha.lock().unwrap();\n}}\n"
+    );
+    let found = lint_one("coordinator/fixture.rs", &text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains(":9: lock-order:"), "{}", found[0]);
+    assert!(found[0].contains("inverts the lock order"), "{}", found[0]);
+    assert!(found[0].contains("`alpha` (rank 10)"), "{}", found[0]);
+    assert!(found[0].contains("`beta` (rank 20)"), "{}", found[0]);
+}
+
+#[test]
+fn lock_order_tracks_drops_so_reacquisition_is_not_an_inversion() {
+    let text = format!(
+        "{RANKED_PAIR}fn f(s: &S) {{\n    let beta = s.beta.lock().unwrap();\n    \
+         drop(beta);\n    let alpha = s.alpha.lock().unwrap();\n    drop(alpha);\n}}\n"
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &text));
+}
+
+#[test]
+fn lock_order_flags_an_unranked_receiver_and_conflicting_redeclarations() {
+    let text = "fn f(s: &S) {\n    let g = s.mystery.lock().unwrap();\n    drop(g);\n}\n";
+    let found = lint_one("coordinator/fixture.rs", text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("`mystery`, which has no declared rank"), "{}", found[0]);
+    // One ident, two ranks: the registry is tree-wide, so this is a lie.
+    let redecl = "struct A {\n    // lint: lock-rank(10): q\n    q: Mutex<u8>,\n}\n\
+                  struct B {\n    // lint: lock-rank(20): q\n    q: Mutex<u8>,\n}\n";
+    let found = lint_one("coordinator/fixture.rs", redecl);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("re-declared at rank 20"), "{}", found[0]);
+}
+
+#[test]
+fn lock_order_flags_a_malformed_directive_and_still_demands_a_rank() {
+    let text = "struct S {\n    // lint: lock-rank(ten): q\n    q: Mutex<u8>,\n}\n";
+    let found = lint_one("coordinator/fixture.rs", text);
+    assert_eq!(found.len(), 2, "{found:?}");
+    assert!(found[0].contains("malformed lock-rank directive"), "{}", found[0]);
+    assert!(found[1].contains("without a lock rank"), "{}", found[1]);
+}
+
+// ------------------------------------------------------------- lock-span
+
+#[test]
+fn lock_span_flags_a_bound_guard_held_across_a_blocking_call() {
+    let text = format!(
+        "{RANKED_PAIR}fn f(s: &S, rx: &R) {{\n    let alpha = s.alpha.lock().unwrap();\n    \
+         let x = rx.recv();\n    drop(alpha);\n    drop(x);\n}}\n"
+    );
+    let found = lint_one("coordinator/fixture.rs", &text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains(":9: lock-span:"), "{}", found[0]);
+    assert!(found[0].contains("held across blocking `.recv(..)`"), "{}", found[0]);
+}
+
+#[test]
+fn lock_span_passes_when_the_guard_is_dropped_or_merely_a_temporary() {
+    // Dropped before the blocking call.
+    let dropped = format!(
+        "{RANKED_PAIR}fn f(s: &S, rx: &R) {{\n    let alpha = s.alpha.lock().unwrap();\n    \
+         drop(alpha);\n    let x = rx.recv();\n    drop(x);\n}}\n"
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &dropped));
+    // A statement-temporary guard dies at its `;` — not a held span.
+    let temp = format!(
+        "{RANKED_PAIR}fn f(s: &S, rx: &R) {{\n    *s.alpha.lock().unwrap() += 1;\n    \
+         let x = rx.recv();\n    drop(x);\n}}\n"
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &temp));
+}
+
+#[test]
+fn lock_span_respects_a_reasoned_allow_at_the_blocking_site() {
+    let text = format!(
+        "{RANKED_PAIR}fn f(s: &S, cv: &C) {{\n    let alpha = s.alpha.lock().unwrap();\n    \
+         // lint:allow(lock-span): the wait releases the guard while parked\n    \
+         let alpha = cv.wait_timeout(alpha, D).0;\n    drop(alpha);\n}}\n"
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &text));
+}
+
+#[test]
+fn lock_span_guard_dies_with_its_enclosing_block() {
+    let text = format!(
+        "{RANKED_PAIR}fn f(s: &S, rx: &R) {{\n    {{\n        \
+         let alpha = s.alpha.lock().unwrap();\n    }}\n    let x = rx.recv();\n    \
+         drop(x);\n}}\n"
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &text));
+}
+
+// ------------------------------------------------------------ atomic-rmw
+
+/// Shared fixture: one seqcst-contracted atomic counter field.
+const ATOMIC_FIELD: &str = "struct S {\n    // lint: atomic(seqcst): scheduling truth\n    \
+                            n: AtomicUsize,\n}\n";
+
+#[test]
+fn atomic_rmw_flags_load_then_store_in_one_function() {
+    let text = format!(
+        "{ATOMIC_FIELD}fn f(s: &S) {{\n    let v = s.n.load(Ordering::SeqCst);\n    \
+         s.n.store(v + 1, Ordering::SeqCst);\n}}\n"
+    );
+    let found = lint_one("coordinator/fixture.rs", &text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains(":7: atomic-rmw:"), "{}", found[0]);
+    assert!(found[0].contains("loaded (line 6)"), "{}", found[0]);
+    assert!(found[0].contains("lost-update window"), "{}", found[0]);
+}
+
+#[test]
+fn atomic_rmw_passes_fetch_ops_and_cross_function_load_store() {
+    let rmw =
+        format!("{ATOMIC_FIELD}fn f(s: &S) {{\n    s.n.fetch_add(1, Ordering::SeqCst);\n}}\n");
+    assert_clean(&lint_one("coordinator/fixture.rs", &rmw));
+    // A load in one function and a store in another is not a window.
+    let split = format!(
+        "{ATOMIC_FIELD}fn observe(s: &S) -> usize {{\n    s.n.load(Ordering::SeqCst)\n}}\n\
+         fn reset(s: &S) {{\n    s.n.store(0, Ordering::SeqCst);\n}}\n"
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &split));
+}
+
+// ------------------------------------------------------- atomic-ordering
+
+#[test]
+fn atomic_ordering_requires_a_contract_on_every_declaration() {
+    let found = lint_one("coordinator/fixture.rs", "struct S {\n    n: AtomicUsize,\n}\n");
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains(":2: atomic-ordering:"), "{}", found[0]);
+    assert!(found[0].contains("without an ordering contract"), "{}", found[0]);
+    // `AtomicUsize::` paths don't declare anything.
+    assert_clean(&lint_one(
+        "coordinator/fixture.rs",
+        "fn f() -> bool {\n    AtomicUsize::new(0);\n    true\n}\n",
+    ));
+}
+
+#[test]
+fn atomic_ordering_checks_every_use_against_the_contract() {
+    let ok = format!(
+        "{ATOMIC_FIELD}fn f(\n    s: &S,\n    // lint: atomic(relaxed): shutdown latch\n    \
+         stop: &AtomicBool,\n) {{\n    s.n.fetch_add(1, Ordering::SeqCst);\n    \
+         stop.load(Ordering::Relaxed);\n}}\n"
+    );
+    assert_clean(&lint_one("coordinator/fixture.rs", &ok));
+    let drifted = format!(
+        "{ATOMIC_FIELD}fn f(s: &S) {{\n    s.n.fetch_add(1, Ordering::Relaxed);\n}}\n"
+    );
+    let found = lint_one("coordinator/fixture.rs", &drifted);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("declared seqcst but used with `Relaxed`"), "{}", found[0]);
+}
+
+#[test]
+fn atomic_ordering_flags_contractless_receivers_and_conflicting_modes() {
+    let text = "fn f(x: &X) {\n    x.flag.load(Ordering::SeqCst);\n}\n";
+    let found = lint_one("coordinator/fixture.rs", text);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("`flag`, which has no declared contract"), "{}", found[0]);
+    let redecl = "struct A {\n    // lint: atomic(seqcst): truth\n    n: AtomicUsize,\n}\n\
+                  struct B {\n    // lint: atomic(relaxed): tally\n    n: AtomicUsize,\n}\n";
+    let found = lint_one("coordinator/fixture.rs", redecl);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert!(found[0].contains("re-declared relaxed"), "{}", found[0]);
+}
+
+#[test]
+fn concurrency_tokens_inside_strings_and_comments_are_inert() {
+    let text = "fn f() -> &'static str {\n    // prose: Mutex<u8>, AtomicUsize, .lock()\n    \
+                \"Mutex<AtomicUsize> .lock() .recv( Ordering::SeqCst\"\n}\n";
+    assert_clean(&lint_one("coordinator/fixture.rs", text));
+}
+
 // ------------------------------------------------------------ self-check
 
 /// The shipped tree lints clean: every genuine violation is fixed and
 /// every intentional site is annotated, so the CI `esda lint` gate is
 /// armed at zero. If this fails, run `cargo run -- lint --fix-plan`.
+/// The walk matches the CI invocation: the library tree plus the
+/// example and bench binaries.
 #[test]
 fn shipped_tree_is_lint_clean() {
-    let src = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
-    let files = collect_files(&[src]).expect("walk rust/src");
-    assert!(files.len() > 20, "walk found only {} file(s)", files.len());
+    let roots = vec![
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src")),
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../examples")),
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/benches")),
+    ];
+    for r in &roots {
+        assert!(r.is_dir(), "missing lint root {}", r.display());
+    }
+    let files = collect_files(&roots).expect("walk the shipped tree");
+    assert!(files.len() > 35, "walk found only {} file(s)", files.len());
     let readme = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md"))
         .expect("README.md at the repo root");
     let findings = lint_sources(&files, Some(&readme));

@@ -1,0 +1,179 @@
+//! Tests for the debug-build lock-rank witness
+//! (`esda::util::lockcheck`): ordered acquisition passes, an inversion
+//! panics (debug builds), guards may retire out of order, the condvar
+//! handoff keeps the witness accurate, and poisoning behaves exactly
+//! like `std`. A randomized driver replays thousands of rank-ascending
+//! schedules to prove the witness never false-positives on legal order.
+
+use esda::util::lockcheck::{debug_assert_no_locks_held, RankedCondvar, RankedMutex};
+use esda::util::Rng;
+use std::time::Duration;
+
+#[test]
+fn ordered_acquisition_passes_and_retires_cleanly() {
+    let a = RankedMutex::new(10, "a", 1u32);
+    let b = RankedMutex::new(20, "b", 2u32);
+    let c = RankedMutex::new(30, "c", 3u32);
+    {
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap();
+        let gc = c.lock().unwrap();
+        assert_eq!(*ga + *gb + *gc, 6);
+    }
+    debug_assert_no_locks_held("after ordered acquisition");
+}
+
+#[test]
+fn guards_may_be_dropped_out_of_acquisition_order() {
+    let a = RankedMutex::new(10, "a", ());
+    let b = RankedMutex::new(20, "b", ());
+    let ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    // Retire the *lower* rank first: the witness release is positional,
+    // not a strict stack pop.
+    drop(ga);
+    // With only rank 20 held, rank 30 is still legal.
+    let c = RankedMutex::new(30, "c", ());
+    let gc = c.lock().unwrap();
+    drop(gc);
+    drop(gb);
+    debug_assert_no_locks_held("after out-of-order retirement");
+}
+
+/// The whole point of the witness: an inversion panics in debug builds
+/// (instead of deadlocking in production). Release builds compile the
+/// witness away, so the test only exists under `debug_assertions`.
+#[cfg(debug_assertions)]
+#[test]
+fn inverted_acquisition_panics_in_debug_builds() {
+    let lo = RankedMutex::new(10, "lo", ());
+    let hi = RankedMutex::new(20, "hi", ());
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _g_hi = hi.lock().unwrap();
+        let _g_lo = lo.lock().unwrap(); // 10 while holding 20: inversion
+    }))
+    .expect_err("acquiring rank 10 under rank 20 must panic");
+    let msg = esda::util::panic_message(&*err);
+    assert!(msg.contains("lock-rank inversion"), "unexpected panic: {msg}");
+    assert!(msg.contains("`lo` (rank 10)"), "unexpected panic: {msg}");
+    assert!(msg.contains("`hi` (rank 20)"), "unexpected panic: {msg}");
+    // The unwind dropped both guards; the witness stack must be empty.
+    debug_assert_no_locks_held("after the caught inversion");
+}
+
+/// Equal ranks invert too: the order must be *strictly* increasing, so
+/// two locks sharing a rank can never nest (in either order).
+#[cfg(debug_assertions)]
+#[test]
+fn equal_rank_nesting_panics_in_debug_builds() {
+    let x = RankedMutex::new(20, "x", ());
+    let y = RankedMutex::new(20, "y", ());
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _gx = x.lock().unwrap();
+        let _gy = y.lock().unwrap();
+    }))
+    .expect_err("nesting two rank-20 locks must panic");
+    let msg = esda::util::panic_message(&*err);
+    assert!(msg.contains("lock-rank inversion"), "unexpected panic: {msg}");
+    debug_assert_no_locks_held("after the caught equal-rank nesting");
+}
+
+#[test]
+fn condvar_wait_timeout_hands_the_guard_back() {
+    let mx = RankedMutex::new(50, "stop", false);
+    let cv = RankedCondvar::new();
+    let g = mx.lock().unwrap();
+    let (g, timed) = cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+    assert!(timed.timed_out(), "nobody notified: the wait must time out");
+    // The guard is live again after the wait — and still witnessed, so a
+    // lower-rank acquisition under it still trips the checker.
+    assert!(!*g);
+    drop(g);
+    debug_assert_no_locks_held("after the condvar roundtrip");
+}
+
+#[test]
+fn condvar_notify_crosses_threads() {
+    let pair = std::sync::Arc::new((RankedMutex::new(50, "stop", false), RankedCondvar::new()));
+    let waker = std::sync::Arc::clone(&pair);
+    let t = std::thread::spawn(move || {
+        let (mx, cv) = &*waker;
+        *mx.lock().unwrap() = true;
+        cv.notify_all();
+    });
+    let (mx, cv) = &*pair;
+    let mut g = mx.lock().unwrap();
+    while !*g {
+        g = cv.wait_timeout(g, Duration::from_millis(50)).unwrap().0;
+    }
+    drop(g);
+    t.join().unwrap();
+    debug_assert_no_locks_held("after the cross-thread notify");
+}
+
+#[test]
+fn poisoning_behaves_like_std() {
+    let mx = std::sync::Arc::new(RankedMutex::new(10, "poisoned", 7u32));
+    let holder = std::sync::Arc::clone(&mx);
+    let t = std::thread::spawn(move || {
+        let _g = holder.lock().unwrap();
+        panic!("poison the lock");
+    });
+    assert!(t.join().is_err());
+    // The repo's poison-tolerant idiom recovers a usable guard.
+    let mut g = mx.lock().unwrap_or_else(|e| e.into_inner());
+    *g += 1;
+    assert_eq!(*g, 8);
+    drop(g);
+    debug_assert_no_locks_held("after poison recovery");
+}
+
+#[test]
+fn into_inner_returns_the_value() {
+    let mx = RankedMutex::new(10, "owned", vec![1, 2, 3]);
+    assert_eq!(mx.rank(), 10);
+    assert_eq!(mx.name(), "owned");
+    assert_eq!(mx.into_inner().unwrap(), vec![1, 2, 3]);
+}
+
+/// Randomized legal-schedule driver: replay thousands of rank-ascending
+/// acquire/release interleavings (random subsets, random early drops)
+/// and require the witness to stay silent throughout. Any panic here is
+/// a witness false positive.
+#[test]
+fn witness_never_fires_on_rank_ascending_schedules() {
+    let locks: Vec<RankedMutex<u32>> =
+        (0..8u32).map(|i| RankedMutex::new((i + 1) * 10, "fuzz", i)).collect();
+    let mut rng = Rng::new(0xC0FFEE);
+    for _ in 0..2_000 {
+        let mut held = Vec::new();
+        for lk in &locks {
+            if rng.chance(0.5) {
+                held.push(lk.lock().unwrap());
+            }
+            // Randomly retire a random already-held guard mid-schedule:
+            // out-of-order drops are legal and must stay silent too.
+            if !held.is_empty() && rng.chance(0.3) {
+                held.remove(rng.index(held.len()));
+            }
+        }
+        drop(held);
+        debug_assert_no_locks_held("after a randomized legal schedule");
+    }
+}
+
+/// CI runs this suite once under `--release` (the default everywhere
+/// else in the pipeline) and once in the debug profile with
+/// `ESDA_EXPECT_DEBUG=1`, which asserts the witness is actually
+/// compiled in — otherwise a workflow edit could silently demote the
+/// whole lockcheck gate to the no-op release wrappers.
+#[test]
+fn ci_debug_profile_is_live() {
+    if std::env::var("ESDA_EXPECT_DEBUG").is_err() {
+        return; // not the pinned-profile CI step
+    }
+    assert!(
+        cfg!(debug_assertions),
+        "ESDA_EXPECT_DEBUG=1 but debug_assertions are off — the lock witness is compiled out"
+    );
+}
